@@ -1,0 +1,66 @@
+//! End-to-end training driver (the EXPERIMENTS.md validation run): train
+//! the WRN-mini CNN on the synthetic CIFAR-100-like dataset for several
+//! hundred steps under FP32 and HBFP, logging the full loss curve and
+//! periodic validation error, and writing the series to results/e2e_*.csv.
+//!
+//!     cargo run --release --example train_cifar [-- --steps 400]
+//!
+//! This is the paper's core experiment (Figure 3 left / Table 2) at one
+//! workload: HBFP with 8-bit dot-product mantissas + 16-bit weight storage
+//! should track the FP32 loss curve and land within ~1pp validation error.
+
+use std::sync::Arc;
+
+use anyhow::Result;
+use hbfp::coordinator::{LrSchedule, RunConfig, Trainer};
+use hbfp::runtime::Manifest;
+use hbfp::util::cli::Args;
+
+fn main() -> Result<()> {
+    let args = Args::parse(std::env::args().skip(1));
+    let steps = args.opt_usize("steps", 400)?;
+    let manifest = Arc::new(Manifest::load(std::path::Path::new("artifacts"))?);
+    let trainer = Trainer::new(manifest)?;
+    std::fs::create_dir_all("results")?;
+
+    println!("== end-to-end: wrn_mini on cifar100like, {steps} steps ==");
+    let mut rows = Vec::new();
+    for combo in [
+        "wrn_mini-cifar100like-fp32",
+        "wrn_mini-cifar100like-hbfp8_16_t24",
+        "wrn_mini-cifar100like-hbfp12_16_t24",
+    ] {
+        let cfg = RunConfig::new(combo, steps)
+            .with_lr(LrSchedule::default_for(steps, 0.05))
+            .with_eval_every((steps / 8).max(1));
+        let t0 = std::time::Instant::now();
+        let r = trainer.run(&cfg)?;
+        let path = format!("results/e2e_{combo}.csv");
+        r.history.write_csv(std::path::Path::new(&path))?;
+        println!(
+            "\n{combo}: {} train records, curve -> {path}",
+            r.history.steps.len()
+        );
+        for ev in &r.history.evals {
+            println!("  eval @ step {:>4}: loss {:.4}  err {:.2}%", ev.step, ev.loss, ev.error * 100.0);
+        }
+        println!(
+            "  wall {:.1}s  ({:.1} steps/s, compile {:.1}s)",
+            t0.elapsed().as_secs_f64(),
+            r.history.throughput().unwrap_or(0.0),
+            r.compile_secs
+        );
+        rows.push((combo, r.final_error, r.final_loss));
+    }
+
+    println!("\nsummary (val error):");
+    let base = rows[0].1;
+    for (combo, err, loss) in &rows {
+        println!(
+            "  {combo:<44} err {:>6.2}%  loss {loss:.4}  gap {:+.2}pp",
+            err * 100.0,
+            (err - base) * 100.0
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,46 @@
+//! Extension experiment: HBFP on attention. Trains the decoder-only
+//! transformer LM under fp32 / hbfp8_16 / hbfp12_16 (weight matmuls
+//! quantized — "HBFP-W", see python/compile/models/transformer.py) and
+//! reports validation perplexity, answering the paper's natural follow-up:
+//! does the hybrid scheme survive attention blocks?
+//!
+//!     cargo run --release --example transformer_lm [-- --steps 300]
+
+use std::sync::Arc;
+
+use anyhow::Result;
+use hbfp::coordinator::{LrSchedule, RunConfig, Trainer};
+use hbfp::runtime::Manifest;
+use hbfp::util::cli::Args;
+
+fn main() -> Result<()> {
+    let args = Args::parse(std::env::args().skip(1));
+    let steps = args.opt_usize("steps", 300)?;
+    let manifest = Arc::new(Manifest::load(std::path::Path::new("artifacts"))?);
+    let trainer = Trainer::new(manifest)?;
+
+    println!("== extension: HBFP-W transformer LM on ptblike, {steps} steps ==");
+    let mut rows = Vec::new();
+    for combo in [
+        "transformer_mini-ptblike-fp32",
+        "transformer_mini-ptblike-hbfp8_16_t24",
+        "transformer_mini-ptblike-hbfp12_16_t24",
+    ] {
+        let cfg = RunConfig::new(combo, steps)
+            .with_lr(LrSchedule::Cosine { base: 0.3, floor: 0.003, total: steps })
+            .with_eval_every((steps / 6).max(1));
+        let r = trainer.run(&cfg)?;
+        println!("\n{combo}:");
+        for ev in &r.history.evals {
+            println!("  step {:>4}: val ppl {:.3}", ev.step, ev.loss.exp());
+        }
+        rows.push((combo, r.final_loss.exp(), r.diverged));
+    }
+    println!("\nsummary (validation perplexity):");
+    let base = rows[0].1;
+    for (combo, ppl, div) in &rows {
+        let tag = if *div { " DIVERGED" } else { "" };
+        println!("  {combo:<50} ppl {ppl:.3} ({:+.2}% vs fp32){tag}", (ppl / base - 1.0) * 100.0);
+    }
+    Ok(())
+}

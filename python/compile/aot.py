@@ -1,0 +1,215 @@
+"""AOT compiler: lower every (model x dataset x numeric-config) combo to
+HLO text + a manifest the rust runtime consumes.
+
+Interchange is HLO *text*, not serialized protos — jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids that xla_extension 0.5.1 (the
+version behind the published ``xla`` crate) rejects; the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Each combo produces three artifacts:
+
+- ``<combo>__init.hlo.txt``   seed:i32 -> state leaves
+- ``<combo>__train.hlo.txt``  state..., x, y, lr -> state'..., loss, acc
+- ``<combo>__eval.hlo.txt``   state..., x, y -> loss_sum, correct_sum
+
+``manifest.json`` records, per artifact: the file, role, flat input/output
+specs (name/shape/dtype), the state leaf count, and the dataset dims the
+rust data pipeline needs. Re-running skips artifacts whose files already
+exist unless --force; combos can be filtered with --only <substring>.
+
+Usage: python -m compile.aot [--out-dir ../artifacts] [--only lstm] [--force]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .models import MODELS
+from .numerics import parse_config
+from .train import StepBuilder
+
+BATCH = 32
+
+# ---------------------------------------------------------------- datasets
+
+DATASETS = {
+    # scaled-down stand-ins; see DESIGN.md §5 (substitutions)
+    "cifar10like": dict(kind="image", hw=16, channels=3, classes=10),
+    "cifar100like": dict(kind="image", hw=16, channels=3, classes=20),
+    "svhnlike": dict(kind="image", hw=16, channels=3, classes=10),
+    "imagenetlike": dict(kind="image", hw=24, channels=3, classes=30),
+    "ptblike": dict(kind="text", vocab=32, seq=48),
+}
+
+# ------------------------------------------------------------ experiment set
+# Every (model, dataset, config) combo any repro harness needs. Kept in one
+# place so `make artifacts` builds the closure of all experiments.
+
+_T2_CFGS = ["fp32", "hbfp8_16_t24", "hbfp12_16_t24"]
+
+COMBOS: list[tuple[str, str, str]] = []
+# quickstart / pallas-bearing path
+COMBOS += [("mlp", "cifar10like", c) for c in ["fp32", "hbfpp8_16_t24"]]
+# Table 1: narrow-FP sweep (fp32 doubles as the m=24,e=8 cell)
+COMBOS += [
+    ("resnet_mini", "cifar10like", c)
+    for c in ["fp32", "fp_m2_e8", "fp_m4_e8", "fp_m8_e8", "fp_m24_e6", "fp_m24_e2"]
+]
+# Table 2: image classification grid
+COMBOS += [
+    (m, d, c)
+    for m in ["resnet_mini", "wrn_mini", "densenet_mini"]
+    for d in ["cifar100like", "svhnlike"]
+    for c in _T2_CFGS
+]
+COMBOS += [("resnet_mini", "imagenetlike", c) for c in _T2_CFGS]
+# Table 3 / Figure 3: language model
+COMBOS += [("lstm", "ptblike", c) for c in _T2_CFGS]
+# Design space: mantissa width sweep (plus narrow-storage counterparts)
+COMBOS += [
+    ("wrn_mini", "cifar100like", c)
+    for c in ["hbfp4_4_t24", "hbfp4_16_t24", "hbfp8_8_t24", "hbfp12_12_t24", "hbfp16_16_t24"]
+]
+# Design space: tile size sweep
+COMBOS += [
+    ("wrn_mini", "cifar100like", c)
+    for c in ["hbfp8_16_tnone", "hbfp8_16_t8", "hbfp8_16_t64"]
+]
+# Extension: HBFP on attention (weight-matmul quantization; DESIGN.md)
+COMBOS += [("transformer_mini", "ptblike", c) for c in _T2_CFGS]
+
+
+def combo_name(model: str, dataset: str, cfg: str) -> str:
+    return f"{model}-{dataset}-{cfg}"
+
+
+# ---------------------------------------------------------------- lowering
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (ids reassigned, 32-bit safe)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=False
+    )
+    return comp.as_hlo_text()
+
+
+def _dtype_str(dt) -> str:
+    return {"float32": "f32", "int32": "i32", "uint32": "u32"}[jnp.dtype(dt).name]
+
+
+def _specs(avals, names):
+    return [
+        {"name": n, "shape": [int(d) for d in a.shape], "dtype": _dtype_str(a.dtype)}
+        for n, a in zip(names, avals)
+    ]
+
+
+def build_combo(model: str, dataset: str, cfg_name: str, out_dir: str, force: bool):
+    """Lower init/train/eval for one combo. Returns manifest entries."""
+    ds = DATASETS[dataset]
+    spec = MODELS[model]
+    if spec.kind != ds["kind"]:
+        raise ValueError(f"{model} ({spec.kind}) incompatible with {dataset} ({ds['kind']})")
+    cfg = parse_config(cfg_name)
+    dims = {k: v for k, v in ds.items() if k != "kind"}
+    sb = StepBuilder(spec, cfg, batch=BATCH, **dims)
+
+    name = combo_name(model, dataset, cfg_name)
+    x_aval, y_aval = sb.batch_avals()
+    lr_aval = jax.ShapeDtypeStruct((), jnp.float32)
+    seed_aval = jax.ShapeDtypeStruct((), jnp.int32)
+    state_names = [f"state/{p}" for p in sb.state_paths]
+
+    entries = {}
+    jobs = [
+        ("init", sb.init_fn(), [seed_aval], ["seed"], state_names),
+        (
+            "train",
+            sb.train_fn(),
+            sb.state_avals + [x_aval, y_aval, lr_aval],
+            state_names + ["x", "y", "lr"],
+            state_names + ["loss", "acc"],
+        ),
+        (
+            "eval",
+            sb.eval_fn(),
+            sb.state_avals + [x_aval, y_aval],
+            state_names + ["x", "y"],
+            ["loss_sum", "correct_sum"],
+        ),
+    ]
+    for role, fn, in_avals, in_names, out_names in jobs:
+        fname = f"{name}__{role}.hlo.txt"
+        path = os.path.join(out_dir, fname)
+        t0 = time.time()
+        if force or not os.path.exists(path):
+            # keep_unused: eval ignores the momentum leaves, but the HLO
+            # signature must keep them so rust can pass one uniform state
+            # list to both train and eval.
+            lowered = jax.jit(fn, keep_unused=True).lower(*in_avals)
+            text = to_hlo_text(lowered)
+            tmp = path + ".tmp"
+            with open(tmp, "w") as f:
+                f.write(text)
+            os.replace(tmp, path)
+            status = f"lowered in {time.time() - t0:.1f}s ({len(text) / 1e6:.1f} MB)"
+        else:
+            status = "cached"
+        out_avals = jax.eval_shape(fn, *in_avals)
+        entries[f"{name}__{role}"] = {
+            "file": fname,
+            "role": role,
+            "model": model,
+            "dataset": dataset,
+            "config": cfg_name,
+            "state_len": len(sb.state_avals),
+            "batch": BATCH,
+            "inputs": _specs(in_avals, in_names),
+            "outputs": _specs(out_avals, out_names),
+        }
+        print(f"  {fname}: {status}", flush=True)
+    return entries
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default=os.path.join(os.path.dirname(__file__), "../../artifacts"))
+    ap.add_argument("--only", default=None, help="substring filter on combo names")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    out_dir = os.path.abspath(args.out_dir)
+    os.makedirs(out_dir, exist_ok=True)
+    manifest_path = os.path.join(out_dir, "manifest.json")
+    manifest = {"version": 1, "datasets": DATASETS, "artifacts": {}}
+    if os.path.exists(manifest_path):
+        with open(manifest_path) as f:
+            old = json.load(f)
+            manifest["artifacts"] = old.get("artifacts", {})
+
+    t0 = time.time()
+    n = 0
+    for model, dataset, cfg in COMBOS:
+        name = combo_name(model, dataset, cfg)
+        if args.only and args.only not in name:
+            continue
+        print(f"[{n}] {name}", flush=True)
+        manifest["artifacts"].update(build_combo(model, dataset, cfg, out_dir, args.force))
+        n += 1
+        # checkpoint the manifest as we go so partial runs are usable
+        with open(manifest_path, "w") as f:
+            json.dump(manifest, f, indent=1, sort_keys=True)
+    print(f"built {n} combos in {time.time() - t0:.0f}s -> {out_dir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+"""L1: Pallas kernels for HBFP's compute hot-spot + the pure-jnp oracle."""
+
+from . import ref  # noqa: F401
+from .bfp_matmul import bfp_matmul  # noqa: F401
+from .bfp_quantize import bfp_quantize_tiled, bfp_quantize_whole  # noqa: F401

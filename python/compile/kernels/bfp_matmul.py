@@ -1,0 +1,100 @@
+"""Pallas kernel: tiled HBFP matmul — the paper's MatMul unit (Figure 2).
+
+The hot-spot of HBFP training: C = Q_m(A) @ Q_m(B) where Q_m quantizes each
+(t x t) tile onto a shared-exponent BFP grid, the tile-products are exact
+fixed-point arithmetic (m-bit mantissas multiply exactly inside f32 for
+m <= 12), and tile-partials accumulate in FP32 — "tile multiplications are
+performed in fixed point, and their results are accumulated in floating
+point" (§4).
+
+TPU mapping (DESIGN.md §6):
+- BlockSpec (bm, bk) x (bk, bn) VMEM blocks == the shared-exponent tiles;
+  the numeric format's granularity IS the memory schedule's granularity.
+- grid = (M/bm, N/bn, K/bk) with K innermost so the f32 accumulator block
+  stays resident in VMEM across the K sweep (revisiting semantics).
+- the max-reduce + round before the MAC is the FP→BFP converter; the final
+  write-out is the BFP→FP unit.
+
+interpret=True: CPU PJRT cannot run Mosaic custom-calls; the interpreter
+lowers to plain HLO (grid while-loop), which the rust runtime executes.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+
+def _quant_tile(x, mantissa_bits: int):
+    """FP→BFP on one VMEM-resident tile (shared exponent, RNE, saturate)."""
+    amax = jnp.max(jnp.abs(x))
+    _, ex = jnp.frexp(amax)
+    e = jnp.where(amax > 0, jnp.clip(ex, ref.E_MIN, ref.E_MAX), ref.E_MIN).astype(jnp.int32)
+    m = mantissa_bits
+    step = jnp.ldexp(jnp.float32(1.0), e - (m - 1))  # exact (exp2 is not, on CPU)
+    lo = -(2.0 ** (m - 1))
+    hi = 2.0 ** (m - 1) - 1.0
+    q = jnp.clip(jnp.round(x / step), lo, hi)
+    return (q * step).astype(jnp.float32)
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref, *, mantissa_bits: int, k_steps: int):
+    """Grid step (i, j, k): o[i,j] += Q(a[i,k]) @ Q(b[k,j]).
+
+    The accumulator lives in the output block, which Pallas keeps resident
+    across the innermost k dimension (same (i, j) index map), mirroring the
+    wide accumulators inside the paper's MatMul unit.
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    qa = _quant_tile(a_ref[...], mantissa_bits)
+    qb = _quant_tile(b_ref[...], mantissa_bits)
+    # Fixed-point MAC: qa/qb are exact multiples of their tile steps, so this
+    # f32 dot is bit-identical to an integer mantissa dot scaled by 2^(ea+eb)
+    # for mantissa widths <= 12.
+    o_ref[...] += jnp.dot(qa, qb, preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("mantissa_bits", "tile"))
+def bfp_matmul(a: jnp.ndarray, b: jnp.ndarray, mantissa_bits: int, tile: int) -> jnp.ndarray:
+    """Tiled HBFP matmul, one shared exponent per (tile x tile) tile.
+
+    a: (M, K) f32, b: (K, N) f32 -> (M, N) f32.
+
+    Padding note: operands are zero-padded up to tile multiples before the
+    kernel (Pallas interpret mode fills out-of-bounds lanes with NaN, so
+    block padding cannot be relied on); zeros never change a tile's max-abs
+    nor contribute to the dot, so results match ref.bfp_matmul with ragged
+    tiles exactly (property-tested in test_kernels.py).
+    """
+    if a.ndim != 2 or b.ndim != 2:
+        raise ValueError(f"expected 2-D operands, got {a.shape} @ {b.shape}")
+    m_dim, k_dim = a.shape
+    k2, n_dim = b.shape
+    if k_dim != k2:
+        raise ValueError(f"contraction mismatch: {a.shape} @ {b.shape}")
+    ap = jnp.pad(a, ((0, (-m_dim) % tile), (0, (-k_dim) % tile)))
+    bp = jnp.pad(b, ((0, (-k_dim) % tile), (0, (-n_dim) % tile)))
+    k_steps = ap.shape[1] // tile
+    grid = (ap.shape[0] // tile, bp.shape[1] // tile, k_steps)
+    out = pl.pallas_call(
+        functools.partial(_matmul_kernel, mantissa_bits=mantissa_bits, k_steps=k_steps),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile, tile), lambda i, j, k: (i, k)),
+            pl.BlockSpec((tile, tile), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((tile, tile), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((ap.shape[0], bp.shape[1]), jnp.float32),
+        interpret=True,
+    )(ap, bp)
+    return out[:m_dim, :n_dim]

@@ -1,0 +1,80 @@
+"""Pallas kernel: tile-granular BFP quantization (the paper's FP→BFP unit).
+
+Maps the accelerator's FP-to-BFP converter (Figure 2 of the paper) onto a
+TPU-style Pallas grid: each grid step owns one (tile x tile) VMEM block,
+computes the block's shared exponent with a max-reduce, and rounds every
+element onto the BFP grid. ``interpret=True`` everywhere — the CPU PJRT
+backend cannot execute Mosaic custom-calls (see DESIGN.md §2).
+
+Semantics are defined by :mod:`ref` and asserted identical in
+``python/tests/test_kernels.py``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+
+def _quantize_kernel(x_ref, o_ref, *, mantissa_bits: int):
+    """One grid step = one exponent block.
+
+    The FP→BFP unit in hardware: max-abs reduce over the block (exponent
+    detect), then normalize+round every mantissa. Zero blocks fall through
+    via the same E_MIN path as ref.block_exponent.
+    """
+    x = x_ref[...]
+    amax = jnp.max(jnp.abs(x))
+    # frexp exponent = floor(log2(amax)) + 1 (exact); E_MIN for zero blocks.
+    _, ex = jnp.frexp(amax)
+    e = jnp.where(amax > 0, jnp.clip(ex, ref.E_MIN, ref.E_MAX), ref.E_MIN).astype(jnp.int32)
+    m = mantissa_bits
+    step = jnp.ldexp(jnp.float32(1.0), e - (m - 1))  # exact (exp2 is not, on CPU)
+    lo = -(2.0 ** (m - 1))
+    hi = 2.0 ** (m - 1) - 1.0
+    q = jnp.clip(jnp.round(x / step), lo, hi)
+    o_ref[...] = (q * step).astype(jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("mantissa_bits", "tile"))
+def bfp_quantize_tiled(x: jnp.ndarray, mantissa_bits: int, tile: int) -> jnp.ndarray:
+    """Quantize a 2-D array with one shared exponent per (tile x tile) tile.
+
+    Ragged edges are zero-padded up to a tile multiple before the kernel
+    (Pallas interpret mode fills out-of-bounds lanes with NaN, so we must
+    not rely on block padding): zeros never perturb a block's max-abs, so
+    ragged and padded tilings agree exactly (property-tested).
+    """
+    if x.ndim != 2:
+        raise ValueError(f"expected 2-D input, got shape {x.shape}")
+    rows, cols = x.shape
+    pr, pc = (-rows) % tile, (-cols) % tile
+    xp = jnp.pad(x, ((0, pr), (0, pc)))
+    grid = (xp.shape[0] // tile, xp.shape[1] // tile)
+    out = pl.pallas_call(
+        functools.partial(_quantize_kernel, mantissa_bits=mantissa_bits),
+        grid=grid,
+        in_specs=[pl.BlockSpec((tile, tile), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((tile, tile), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct(xp.shape, jnp.float32),
+        interpret=True,
+    )(xp)
+    return out[:rows, :cols]
+
+
+@functools.partial(jax.jit, static_argnames=("mantissa_bits",))
+def bfp_quantize_whole(x: jnp.ndarray, mantissa_bits: int) -> jnp.ndarray:
+    """Whole-tensor shared exponent (the paper's untiled configuration)."""
+    shape = x.shape
+    x2 = x.reshape(1, -1)
+    out = pl.pallas_call(
+        functools.partial(_quantize_kernel, mantissa_bits=mantissa_bits),
+        out_shape=jax.ShapeDtypeStruct(x2.shape, jnp.float32),
+        interpret=True,
+    )(x2)
+    return out.reshape(shape)

@@ -1,0 +1,216 @@
+"""Pure-jnp reference semantics for BFP quantization and BFP matmul.
+
+This module is the *numeric oracle* for the whole stack:
+
+- the Pallas kernels in :mod:`bfp_quantize` / :mod:`bfp_matmul` must agree
+  with it bit-for-bit (asserted in ``python/tests/``),
+- the L2 HBFP layers (:mod:`compile.hbfp`) call these functions directly for
+  the large CNN/LSTM artifacts (see DESIGN.md §2), and
+- the rust BFP library (``rust/src/bfp``) implements the same semantics and
+  is cross-checked against HLO artifacts built from these functions.
+
+Numeric contract (DESIGN.md §3)
+-------------------------------
+A BFP block with mantissa width ``m`` and shared exponent ``e`` represents
+
+    x_i = q_i * 2^(e - (m - 1)),   q_i integer in [-2^(m-1), 2^(m-1) - 1]
+
+``e = floor(log2(max|x|)) + 1`` over the block (the frexp exponent), so the
+max element's mantissa lands in [2^(m-2), 2^(m-1)) and never saturates on
+rounding except the half-ulp round-up to exactly 2^(m-1). All-zero blocks
+use ``E_MIN``. Rounding is round-to-nearest-even; out-of-range rounded
+mantissas saturate (clamp), mirroring the paper's hardware converter, which
+"normalizes and truncates" into a fixed-width register.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# Exponent assigned to all-zero blocks, and the clamp floor for real blocks
+# (prevents 2^(e-m+1) from flushing to zero in f32 for any m <= 24). Matches
+# rust/src/bfp/quant.rs::E_MIN.
+E_MIN = -100
+# Clamp ceiling: with e = 128 (max|x| near f32-max) the most negative
+# mantissa -2^(m-1) would dequantize to -2^128 = -inf; clamping to 127
+# saturates such blocks instead (hardware converters do the same).
+E_MAX = 127
+
+
+def block_exponent(x: jnp.ndarray, axis, keepdims: bool = True) -> jnp.ndarray:
+    """Shared exponent of a block: floor(log2(max|x|)) + 1 (frexp exponent),
+    clamped to [E_MIN, E_MAX]; E_MIN for all-zero blocks.
+
+    ``axis`` follows jnp.max semantics; with ``keepdims`` the result
+    broadcasts back over the block.
+    """
+    amax = jnp.max(jnp.abs(x), axis=axis, keepdims=keepdims)
+    # frexp returns f in [0.5, 1) and e with x = f * 2^e; e is exactly
+    # floor(log2(x)) + 1 for x > 0.
+    _, exp = jnp.frexp(amax)
+    e = jnp.clip(exp, E_MIN, E_MAX)
+    return jnp.where(amax > 0, e, E_MIN).astype(jnp.int32)
+
+
+def quantize_block(x: jnp.ndarray, e: jnp.ndarray, mantissa_bits: int) -> jnp.ndarray:
+    """Round ``x`` onto the BFP grid defined by shared exponent ``e``.
+
+    Returns the *dequantized* f32 values (exact multiples of the step); the
+    integer mantissas are ``result / step``. Round-to-nearest-even with
+    saturation to the two's-complement mantissa range.
+    """
+    m = mantissa_bits
+    step = jnp.ldexp(jnp.float32(1.0), e - (m - 1))  # exact (exp2 is not, on CPU)
+    lo = -(2.0 ** (m - 1))
+    hi = 2.0 ** (m - 1) - 1.0
+    q = jnp.clip(jnp.round(x / step), lo, hi)  # jnp.round is RNE
+    return (q * step).astype(jnp.float32)
+
+
+def bfp_quantize(x: jnp.ndarray, mantissa_bits: int, axis=None) -> jnp.ndarray:
+    """Quantize ``x`` to BFP with one exponent per slice along ``axis``.
+
+    ``axis=None`` shares a single exponent across the whole tensor.
+    """
+    if axis is None:
+        axis = tuple(range(x.ndim))
+    e = block_exponent(x, axis=axis, keepdims=True)
+    return quantize_block(x, e, mantissa_bits)
+
+
+def _tile_quantize_2d(x: jnp.ndarray, mantissa_bits: int, tile: int) -> jnp.ndarray:
+    """Quantize a 2-D tensor with one exponent per (tile x tile) tile.
+
+    Ragged edges get their own (smaller) tiles, matching the rust library
+    and the Pallas kernel's padded-block behaviour (padding with zeros never
+    changes a tile's max-abs, so padded and ragged tilings agree).
+    """
+    rows, cols = x.shape
+    pr = (-rows) % tile
+    pc = (-cols) % tile
+    xp = jnp.pad(x, ((0, pr), (0, pc)))
+    nr, nc = xp.shape[0] // tile, xp.shape[1] // tile
+    xt = xp.reshape(nr, tile, nc, tile).transpose(0, 2, 1, 3)  # nr,nc,t,t
+    e = block_exponent(xt, axis=(2, 3), keepdims=True)
+    qt = quantize_block(xt, e, mantissa_bits)
+    q = qt.transpose(0, 2, 1, 3).reshape(nr * tile, nc * tile)
+    return q[:rows, :cols]
+
+
+def bfp_quantize_tiled(x: jnp.ndarray, mantissa_bits: int, tile) -> jnp.ndarray:
+    """Tile-granular BFP quantization over the last two dims of ``x``.
+
+    ``tile=None`` shares one exponent over the last two dims (the paper's
+    "no tiles" configuration); otherwise exponents are shared per
+    (tile x tile) tile. Leading dims are batch dims, one exponent set each.
+    """
+    if x.ndim < 2:
+        return bfp_quantize(x, mantissa_bits)
+    lead = x.shape[:-2]
+    x2 = x.reshape((-1,) + x.shape[-2:])
+    if tile is None:
+        e = block_exponent(x2, axis=(1, 2), keepdims=True)
+        q = quantize_block(x2, e, mantissa_bits)
+    else:
+        import jax
+
+        q = jax.vmap(lambda t: _tile_quantize_2d(t, mantissa_bits, tile))(x2)
+    return q.reshape(lead + x.shape[-2:])
+
+
+def bfp_matmul(a: jnp.ndarray, b: jnp.ndarray, mantissa_bits: int, tile=None) -> jnp.ndarray:
+    """Reference BFP matmul: quantize A row-blocks / B col-blocks, FP32 accum.
+
+    With ``tile=t``: A is quantized with one exponent per (t x t) tile, B the
+    same; products of mantissas are exact in f32 for m <= 12 (2m-1 <= 24
+    significand bits), and tile-partials are accumulated in f32 — exactly the
+    paper's "tile multiplications in fixed point, accumulated in floating
+    point".
+
+    a: (..., M, K), b: (K, N) or (..., K, N).
+
+    Accumulation order: with tiles, partial products are summed *per k-tile*
+    in FP32, in increasing k order — the paper's "tile multiplications in
+    fixed point, accumulated in floating point", and bit-identical to the
+    Pallas kernel's k-innermost grid accumulation.
+    """
+    qa = bfp_quantize_tiled(a, mantissa_bits, tile)
+    qb = bfp_quantize_tiled(b, mantissa_bits, tile)
+    if tile is None:
+        return jnp.matmul(qa, qb)
+    k_dim = qa.shape[-1]
+    pk = (-k_dim) % tile
+    qa = jnp.pad(qa, [(0, 0)] * (qa.ndim - 1) + [(0, pk)])
+    qb = jnp.pad(qb, [(0, 0)] * (qb.ndim - 2) + [(0, pk), (0, 0)])
+    acc = None
+    for k0 in range(0, k_dim + pk, tile):
+        part = jnp.matmul(qa[..., :, k0 : k0 + tile], qb[..., k0 : k0 + tile, :])
+        acc = part if acc is None else acc + part
+    return acc
+
+
+def bfp_matmul_grid(a: jnp.ndarray, b: jnp.ndarray, mantissa_bits: int, tile: int) -> jnp.ndarray:
+    """Grid-exact emulation of the Pallas kernel, for the test oracle.
+
+    Replays the kernel's exact structure — zero-pad to tile multiples, then
+    (t x t) @ (t x t) dots accumulated in increasing-k order per output tile
+    — so the result is bit-identical to ``bfp_matmul.bfp_matmul`` on every
+    shape and mantissa width (same dot shapes => same XLA reduction order).
+    Quadratic trace size; use only on test-sized inputs. ``bfp_matmul``
+    (slab accumulation) is the semantics used in L2 models; it agrees with
+    this to f32 summation-order tolerance, exactly for m <= 8 where tile
+    dots are exact.
+    """
+    m_dim, k_dim = a.shape
+    _, n_dim = b.shape
+    t = tile
+    ap = jnp.pad(a, ((0, (-m_dim) % t), (0, (-k_dim) % t)))
+    bp = jnp.pad(b, ((0, (-k_dim) % t), (0, (-n_dim) % t)))
+    mt, kt, nt = ap.shape[0] // t, ap.shape[1] // t, bp.shape[1] // t
+    rows = []
+    for i in range(mt):
+        row = []
+        for j in range(nt):
+            acc = jnp.zeros((t, t), jnp.float32)
+            for k in range(kt):
+                qa = bfp_quantize(ap[i * t : (i + 1) * t, k * t : (k + 1) * t], mantissa_bits)
+                qb = bfp_quantize(bp[k * t : (k + 1) * t, j * t : (j + 1) * t], mantissa_bits)
+                acc = acc + jnp.dot(qa, qb, preferred_element_type=jnp.float32)
+            row.append(acc)
+        rows.append(jnp.concatenate(row, axis=1))
+    return jnp.concatenate(rows, axis=0)[:m_dim, :n_dim]
+
+
+# --- Table-1 mode: custom narrow floating point ---------------------------
+
+
+def fp_custom_quantize(x: jnp.ndarray, mantissa_bits: int, exponent_bits: int) -> jnp.ndarray:
+    """Simulate a narrow FP format with ``mantissa_bits`` total significand
+    bits (including the implicit leading 1, FP32-style counting: FP32 has 24)
+    and ``exponent_bits`` of exponent, bias 2^(e-1)-1.
+
+    Per-element exponents (this is FP, not BFP). Overflow saturates to the
+    max finite value; underflow flushes to zero (no denormals) — the simplest
+    hardware-honest choice and the one that makes 2-bit exponents diverge the
+    way Table 1 reports.
+    """
+    m = mantissa_bits
+    eb = exponent_bits
+    bias = 2 ** (eb - 1) - 1
+    e_max = 2**eb - 2 - bias  # all-ones exponent reserved (inf/nan)
+    e_min = 1 - bias
+    zero = x == 0
+    _, ex = jnp.frexp(jnp.where(zero, 1.0, x))
+    e = ex - 1  # floor(log2|x|)
+    e_clamped = jnp.clip(e, e_min, e_max)
+    step = jnp.ldexp(jnp.float32(1.0), e_clamped - (m - 1))
+    q = jnp.round(x / step)
+    # Rounding may cross a binade (|q| == 2^m): that value is exact in the
+    # next binade, so keep it unless already at e_max — then clamp to the
+    # max finite value.
+    max_finite = (2.0 - 2.0 ** (1 - m)) * jnp.ldexp(jnp.float32(1.0), e_max)
+    y = jnp.clip(q * step, -max_finite, max_finite)
+    # flush-to-zero below half the smallest normal
+    tiny = jnp.ldexp(jnp.float32(1.0), e_min)
+    y = jnp.where(jnp.abs(x) < tiny * 0.5, 0.0, y)
+    return jnp.where(zero, 0.0, y).astype(jnp.float32)

@@ -1,0 +1,171 @@
+"""Functional NN layers routed through the HBFP quantized matmul.
+
+Every dot-product-shaped op (dense, conv2d, LSTM gate matmuls) is expressed
+as a 2-D ``qmatmul`` so the paper's BFP conversion happens exactly at dot
+product boundaries; everything else (bias adds, BN, activations) is FP32.
+
+Convolutions are lowered to im2col + matmul: the patch extraction / scatter
+(pure data movement) stays FP32 while the three contraction passes (fwd,
+dgrad, wgrad) inherit qmatmul's custom VJP — matching §5.1's simulation and
+the paper's accelerator, whose MatMul unit serves convs via the same
+dataflow.
+
+Parameters are plain dicts of jnp arrays; layer functions are pure.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .numerics import NumericConfig, q_act
+
+
+def dense_init(key, in_dim: int, out_dim: int, scale: float | None = None):
+    """He-normal weight + zero bias."""
+    wkey, _ = jax.random.split(key)
+    s = scale if scale is not None else (2.0 / in_dim) ** 0.5
+    return {
+        "w": jax.random.normal(wkey, (in_dim, out_dim), jnp.float32) * s,
+        "b": jnp.zeros((out_dim,), jnp.float32),
+    }
+
+
+def dense_apply(qmm, p, x):
+    """x: (B, in) -> (B, out). The matmul is quantized, the bias add FP32."""
+    return qmm(x, p["w"]) + p["b"]
+
+
+def conv_init(key, kh: int, kw: int, cin: int, cout: int):
+    """He-normal conv kernel stored as (kh, kw, cin, cout)."""
+    fan_in = kh * kw * cin
+    w = jax.random.normal(key, (kh, kw, cin, cout), jnp.float32) * (2.0 / fan_in) ** 0.5
+    return {"w": w}
+
+
+def conv_apply(qmm, p, x, stride: int = 1, padding: str = "SAME"):
+    """2-D conv, NHWC, via im2col + quantized matmul.
+
+    x: (B, H, W, Cin) -> (B, H', W', Cout).
+
+    ``conv_general_dilated_patches`` returns patch channels ordered as
+    (cin, kh, kw) — verified in test_layers.py — so the kernel is permuted
+    to match before flattening.
+    """
+    w = p["w"]
+    kh, kw, cin, cout = w.shape
+    patches = lax.conv_general_dilated_patches(
+        x,
+        filter_shape=(kh, kw),
+        window_strides=(stride, stride),
+        padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )  # (B, H', W', cin*kh*kw)
+    b, ho, wo, _ = patches.shape
+    cols = patches.reshape(b * ho * wo, cin * kh * kw)
+    wmat = w.transpose(2, 0, 1, 3).reshape(cin * kh * kw, cout)
+    out = qmm(cols, wmat)
+    return out.reshape(b, ho, wo, cout)
+
+
+# ----------------------------------------------------------- batch norm
+
+
+def bn_init(ch: int):
+    """Returns (params, state): learnable scale/shift + running stats."""
+    params = {"gamma": jnp.ones((ch,), jnp.float32), "beta": jnp.zeros((ch,), jnp.float32)}
+    state = {"mean": jnp.zeros((ch,), jnp.float32), "var": jnp.ones((ch,), jnp.float32)}
+    return params, state
+
+
+def bn_apply(p, s, x, train: bool, momentum: float = 0.9, eps: float = 1e-5):
+    """BN over all but the channel (last) axis. FP32 throughout (§4.1:
+    "facilitates ... batch normalization without the restrictions imposed
+    by BFP"). Returns (y, new_state)."""
+    axes = tuple(range(x.ndim - 1))
+    if train:
+        mean = jnp.mean(x, axis=axes)
+        var = jnp.var(x, axis=axes)
+        new_s = {
+            "mean": momentum * s["mean"] + (1 - momentum) * mean,
+            "var": momentum * s["var"] + (1 - momentum) * var,
+        }
+    else:
+        mean, var = s["mean"], s["var"]
+        new_s = s
+    y = (x - mean) * lax.rsqrt(var + eps) * p["gamma"] + p["beta"]
+    return y, new_s
+
+
+def relu(x, cfg: NumericConfig):
+    """ReLU with a (Table-1 mode only) narrow-FP activation edge."""
+    return q_act(jax.nn.relu(x), cfg)
+
+
+# ----------------------------------------------------------------- LSTM
+
+
+def lstm_init(key, in_dim: int, hidden: int):
+    """Standard LSTM cell parameters; gate order (i, f, g, o)."""
+    k1, k2 = jax.random.split(key)
+    s_in = (1.0 / in_dim) ** 0.5
+    s_h = (1.0 / hidden) ** 0.5
+    return {
+        "wx": jax.random.normal(k1, (in_dim, 4 * hidden), jnp.float32) * s_in,
+        "wh": jax.random.normal(k2, (hidden, 4 * hidden), jnp.float32) * s_h,
+        # forget-gate bias 1.0: standard trick, used by the AWD-LSTM line
+        "b": jnp.concatenate(
+            [
+                jnp.zeros((hidden,), jnp.float32),
+                jnp.ones((hidden,), jnp.float32),
+                jnp.zeros((2 * hidden,), jnp.float32),
+            ]
+        ),
+    }
+
+
+def lstm_step(qmm, p, carry, x_t, cfg: NumericConfig):
+    """One LSTM step. The two gate matmuls are quantized; the elementwise
+    gate math is FP32 (activations stay FP in HBFP)."""
+    h, c = carry
+    hidden = h.shape[-1]
+    gates = qmm(x_t, p["wx"]) + qmm(h, p["wh"]) + p["b"]
+    i, f, g, o = jnp.split(gates, 4, axis=-1)
+    i, f, o = jax.nn.sigmoid(i), jax.nn.sigmoid(f), jax.nn.sigmoid(o)
+    g = jnp.tanh(g)
+    c2 = q_act(f * c + i * g, cfg)
+    h2 = q_act(o * jnp.tanh(c2), cfg)
+    del hidden
+    return (h2, c2), h2
+
+
+def lstm_apply(qmm, p, x, cfg: NumericConfig):
+    """x: (B, T, in) -> outputs (B, T, hidden), scanning over time."""
+    hidden = p["wh"].shape[0]
+    b = x.shape[0]
+    carry0 = (
+        jnp.zeros((b, hidden), jnp.float32),
+        jnp.zeros((b, hidden), jnp.float32),
+    )
+    xs = jnp.swapaxes(x, 0, 1)  # (T, B, in)
+
+    def step(carry, x_t):
+        return lstm_step(qmm, p, carry, x_t, cfg)
+
+    _, ys = jax.lax.scan(step, carry0, xs)
+    return jnp.swapaxes(ys, 0, 1)
+
+
+# ------------------------------------------------------------- pooling
+
+
+def global_avg_pool(x):
+    """(B, H, W, C) -> (B, C). FP32 (a reduction, not a dot product —
+    the paper folds it into the activation unit)."""
+    return jnp.mean(x, axis=(1, 2))
+
+
+def avg_pool2(x):
+    """2x2 average pooling, stride 2."""
+    return lax.reduce_window(x, 0.0, lax.add, (1, 2, 2, 1), (1, 2, 2, 1), "VALID") / 4.0

@@ -1,0 +1,10 @@
+"""L2 entry point (structure contract): re-exports the model zoo and the
+step builders. The real definitions live in :mod:`compile.models`,
+:mod:`compile.train`, :mod:`compile.numerics` and :mod:`compile.layers`;
+this module exists so the documented layout (``python/compile/model.py``)
+has a stable import path.
+"""
+
+from .models import MODELS, ModelSpec  # noqa: F401
+from .numerics import FP32, NumericConfig, parse_config  # noqa: F401
+from .train import StepBuilder, accuracy, cross_entropy  # noqa: F401

@@ -1,0 +1,41 @@
+"""Model registry: name -> (init, apply, kind, hyperparams).
+
+``init(key, ...)`` returns ``(params, bn_state)`` pytrees;
+``apply(qmm, cfg, params, bn_state, x, train)`` returns
+``(logits, new_bn_state)``. Image models take ``(num_classes, hw,
+channels)``; text models take ``(vocab, seq)``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+from . import densenet, lstm_lm, mlp, resnet, transformer
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelSpec:
+    name: str
+    kind: str  # "image" | "text"
+    init: Callable
+    apply: Callable
+    weight_decay: float
+    momentum: float = 0.9
+
+
+def _spec(name, kind, make_fn, wd, **kw):
+    init, apply = make_fn(**kw)
+    return ModelSpec(name=name, kind=kind, init=init, apply=apply, weight_decay=wd)
+
+
+MODELS = {
+    "mlp": _spec("mlp", "image", mlp.make, 1e-4),
+    "resnet_mini": _spec("resnet_mini", "image", resnet.make, 5e-4, width=8, blocks=(1, 1, 1)),
+    "wrn_mini": _spec("wrn_mini", "image", resnet.make, 5e-4, width=16, blocks=(1, 1, 1)),
+    "densenet_mini": _spec("densenet_mini", "image", densenet.make, 5e-4),
+    "lstm": _spec("lstm", "text", lstm_lm.make, 0.0),
+    # extension: HBFP on attention (weight matmuls quantized — see
+    # models/transformer.py docstring and DESIGN.md §Extension)
+    "transformer_mini": _spec("transformer_mini", "text", transformer.make, 1e-4),
+}

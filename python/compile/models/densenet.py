@@ -1,0 +1,73 @@
+"""DenseNet-mini: densely connected CNN (scaled-down DenseNet-40).
+
+BN→ReLU→conv3x3 layers whose outputs concatenate onto the running feature
+stack; a 1x1 transition conv + 2x2 average pool between blocks. Convs and
+the classifier run through the quantized matmul, concatenation and pooling
+are pure data movement / FP32 reductions.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .. import layers as L
+
+
+def make(growth: int = 8, layers_per_block: int = 3, num_blocks: int = 2, stem: int = 16):
+    def init(key, num_classes: int, hw: int, channels: int):
+        del hw
+        n_layers = num_blocks * layers_per_block + (num_blocks - 1) + 2
+        keys = jax.random.split(key, n_layers + 1)
+        ki = 0
+        p = {"stem": L.conv_init(keys[ki], 3, 3, channels, stem)}
+        ki += 1
+        s = {}
+        ch = stem
+        for b in range(num_blocks):
+            for l in range(layers_per_block):
+                name = f"b{b}l{l}"
+                bnp, bns = L.bn_init(ch)
+                p[name] = {"bn": bnp, "conv": L.conv_init(keys[ki], 3, 3, ch, growth)}
+                s[name] = bns
+                ch += growth
+                ki += 1
+            if b != num_blocks - 1:
+                name = f"t{b}"
+                bnp, bns = L.bn_init(ch)
+                out_ch = ch // 2
+                p[name] = {"bn": bnp, "conv": L.conv_init(keys[ki], 1, 1, ch, out_ch)}
+                s[name] = bns
+                ch = out_ch
+                ki += 1
+        bnp, bns = L.bn_init(ch)
+        p["bn_final"] = bnp
+        s["bn_final"] = bns
+        p["fc"] = L.dense_init(keys[ki], ch, num_classes, scale=(1.0 / ch) ** 0.5)
+        return p, s
+
+    def apply(qmm, cfg, p, s, x, train: bool):
+        y = L.conv_apply(qmm, p["stem"], x)
+        new_s = {}
+        for b in range(num_blocks):
+            for l in range(layers_per_block):
+                name = f"b{b}l{l}"
+                h, bs = L.bn_apply(p[name]["bn"], s[name], y, train)
+                h = L.relu(h, cfg)
+                h = L.conv_apply(qmm, p[name]["conv"], h)
+                y = jnp.concatenate([y, h], axis=-1)
+                new_s[name] = bs
+            if b != num_blocks - 1:
+                name = f"t{b}"
+                h, bs = L.bn_apply(p[name]["bn"], s[name], y, train)
+                h = L.relu(h, cfg)
+                y = L.conv_apply(qmm, p[name]["conv"], h)
+                y = L.avg_pool2(y)
+                new_s[name] = bs
+        y, bs = L.bn_apply(p["bn_final"], s["bn_final"], y, train)
+        new_s["bn_final"] = bs
+        y = L.relu(y, cfg)
+        y = L.global_avg_pool(y)
+        return L.dense_apply(qmm, p["fc"], y), new_s
+
+    return init, apply

@@ -1,0 +1,39 @@
+"""LSTM character language model (scaled-down Merity-style LSTM on PTB).
+
+Embedding lookup is a gather (FP32 — not a dot product); the LSTM gate
+matmuls and the output projection run through the quantized matmul, so the
+recurrence exercises the paper's BFP path at every timestep in both the
+forward scan and BPTT.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .. import layers as L
+
+
+def make(embed: int = 32, hidden: int = 64):
+    def init(key, vocab: int, seq: int):
+        del seq
+        k1, k2, k3 = jax.random.split(key, 3)
+        return (
+            {
+                "embed": jax.random.normal(k1, (vocab, embed), jnp.float32) * 0.1,
+                "lstm": L.lstm_init(k2, embed, hidden),
+                "fc": L.dense_init(k3, hidden, vocab, scale=(1.0 / hidden) ** 0.5),
+            },
+            {},  # no BN state
+        )
+
+    def apply(qmm, cfg, p, s, tokens, train: bool):
+        """tokens: (B, T) int32 -> logits (B, T, vocab)."""
+        del train
+        x = jnp.take(p["embed"], tokens, axis=0)  # (B, T, E), FP32 gather
+        h = L.lstm_apply(qmm, p["lstm"], x, cfg)  # (B, T, H)
+        b, t, hd = h.shape
+        logits = L.dense_apply(qmm, p["fc"], h.reshape(b * t, hd))
+        return logits.reshape(b, t, -1), s
+
+    return init, apply

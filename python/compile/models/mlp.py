@@ -1,0 +1,34 @@
+"""MLP classifier — the quickstart model and the Pallas-kernel-bearing path.
+
+Three dense layers over flattened images. With ``use_pallas`` configs the
+matmuls lower through the L1 Pallas kernel, so the artifacts built from this
+model prove L1 -> L2 -> L3 composition end-to-end (examples/quickstart.rs).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .. import layers as L
+
+
+def make(hidden: tuple[int, ...] = (128, 64)):
+    def init(key, num_classes: int, hw: int, channels: int):
+        in_dim = hw * hw * channels
+        dims = (in_dim,) + hidden + (num_classes,)
+        keys = jax.random.split(key, len(dims) - 1)
+        p = {f"fc{i}": L.dense_init(keys[i], dims[i], dims[i + 1]) for i in range(len(dims) - 1)}
+        return p, {}
+
+    def apply(qmm, cfg, p, s, x, train: bool):
+        del train
+        y = x.reshape(x.shape[0], -1)
+        n = len(p)
+        for i in range(n):
+            y = L.dense_apply(qmm, p[f"fc{i}"], y)
+            if i != n - 1:
+                y = L.relu(y, cfg)
+        return y, s
+
+    return init, apply

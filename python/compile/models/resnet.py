@@ -1,0 +1,85 @@
+"""ResNet-mini / WideResNet-mini: post-activation residual CNNs.
+
+Scaled-down counterparts of the paper's ResNet-50 / WideResNet-28-10
+(DESIGN.md §5 substitutions): same op mix — 3x3 convs, BN, ReLU, identity
+and 1x1-projection shortcuts, global average pool, dense classifier — with
+widths/depths sized for CPU training. Every conv and the classifier run
+through the quantized matmul; BN and activations are FP32 (hybrid).
+
+``make(width, blocks)`` builds the family; the registry exposes
+``resnet_mini`` (w=8, 1 block/stage) and ``wrn_mini`` (w=16, 2 blocks/stage).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .. import layers as L
+
+
+def _block_init(key, cin, cout, stride):
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {
+        "conv1": L.conv_init(k1, 3, 3, cin, cout),
+        "conv2": L.conv_init(k2, 3, 3, cout, cout),
+    }
+    bn1p, bn1s = L.bn_init(cout)
+    bn2p, bn2s = L.bn_init(cout)
+    p["bn1"], p["bn2"] = bn1p, bn2p
+    s = {"bn1": bn1s, "bn2": bn2s}
+    if stride != 1 or cin != cout:
+        p["proj"] = L.conv_init(k3, 1, 1, cin, cout)
+    return p, s
+
+
+def _block_apply(qmm, cfg, p, s, x, stride, train):
+    y = L.conv_apply(qmm, p["conv1"], x, stride=stride)
+    y, s1 = L.bn_apply(p["bn1"], s["bn1"], y, train)
+    y = L.relu(y, cfg)
+    y = L.conv_apply(qmm, p["conv2"], y)
+    y, s2 = L.bn_apply(p["bn2"], s["bn2"], y, train)
+    sc = L.conv_apply(qmm, p["proj"], x, stride=stride) if "proj" in p else x
+    out = L.relu(y + sc, cfg)
+    return out, {"bn1": s1, "bn2": s2}
+
+
+def make(width: int, blocks: tuple[int, int, int]):
+    """Residual CNN with stage widths (w, 2w, 4w) and the given block counts."""
+
+    def init(key, num_classes: int, hw: int, channels: int):
+        del hw
+        keys = jax.random.split(key, 2 + sum(blocks))
+        p = {"stem": L.conv_init(keys[0], 3, 3, channels, width)}
+        bnp, bns = L.bn_init(width)
+        p["bn0"] = bnp
+        s = {"bn0": bns}
+        cin = width
+        ki = 1
+        for si, nb in enumerate(blocks):
+            cout = width * (2**si)
+            for bi in range(nb):
+                stride = 2 if (si > 0 and bi == 0) else 1
+                bp, bs = _block_init(keys[ki], cin, cout, stride)
+                p[f"s{si}b{bi}"] = bp
+                s[f"s{si}b{bi}"] = bs
+                cin = cout
+                ki += 1
+        p["fc"] = L.dense_init(keys[ki], cin, num_classes, scale=(1.0 / cin) ** 0.5)
+        return p, s
+
+    def apply(qmm, cfg, p, s, x, train: bool):
+        y = L.conv_apply(qmm, p["stem"], x)
+        y, s0 = L.bn_apply(p["bn0"], s["bn0"], y, train)
+        y = L.relu(y, cfg)
+        new_s = {"bn0": s0}
+        for si, nb in enumerate(blocks):
+            for bi in range(nb):
+                stride = 2 if (si > 0 and bi == 0) else 1
+                y, bs = _block_apply(qmm, cfg, p[f"s{si}b{bi}"], s[f"s{si}b{bi}"], y, stride, train)
+                new_s[f"s{si}b{bi}"] = bs
+        y = L.global_avg_pool(y)
+        logits = L.dense_apply(qmm, p["fc"], y)
+        return logits, new_s
+
+    return init, apply

@@ -1,0 +1,93 @@
+"""Decoder-only transformer LM — the repo's *extension* experiment.
+
+The paper (2018) evaluates CNNs and LSTMs; the obvious follow-up question
+is whether HBFP survives attention. This model quantizes every *weight*
+matmul (QKV projection, output projection, both MLP matmuls, the LM head)
+through the same qmatmul custom-VJP path as the paper's ops. The two
+activation-activation matmuls (Q·Kᵀ and A·V) stay FP32: they are batched
+per-head contractions with no long-lived operand, i.e. exactly the
+"other operations" bucket of the hybrid scheme (documented as HBFP-W in
+DESIGN.md; the ablation harness compares it against fp32).
+
+Pre-LN blocks, learned positional embeddings, causal mask.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .. import layers as L
+from ..numerics import q_act
+
+
+def layer_norm(x, p, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * p["g"] + p["b"]
+
+
+def ln_init(d):
+    return {"g": jnp.ones((d,), jnp.float32), "b": jnp.zeros((d,), jnp.float32)}
+
+
+def make(d_model: int = 64, n_heads: int = 2, n_layers: int = 2, d_ff: int = 128):
+    head = d_model // n_heads
+
+    def init(key, vocab: int, seq: int):
+        keys = jax.random.split(key, 3 + 4 * n_layers)
+        p = {
+            "embed": jax.random.normal(keys[0], (vocab, d_model), jnp.float32) * 0.08,
+            "pos": jax.random.normal(keys[1], (seq, d_model), jnp.float32) * 0.02,
+            "ln_f": ln_init(d_model),
+            "head": L.dense_init(keys[2], d_model, vocab, scale=(1.0 / d_model) ** 0.5),
+        }
+        for i in range(n_layers):
+            k = keys[3 + 4 * i : 7 + 4 * i]
+            p[f"blk{i}"] = {
+                "ln1": ln_init(d_model),
+                "ln2": ln_init(d_model),
+                "qkv": L.dense_init(k[0], d_model, 3 * d_model, scale=(1.0 / d_model) ** 0.5),
+                "proj": L.dense_init(k[1], d_model, d_model, scale=(1.0 / d_model) ** 0.5),
+                "ff1": L.dense_init(k[2], d_model, d_ff),
+                "ff2": L.dense_init(k[3], d_ff, d_model, scale=(1.0 / d_ff) ** 0.5),
+            }
+        return p, {}
+
+    def attention(qmm, cfg, bp, x):
+        """x: (B, T, D). Weight matmuls quantized; score/AV matmuls FP32."""
+        b, t, d = x.shape
+        qkv = L.dense_apply(qmm, bp["qkv"], x.reshape(b * t, d)).reshape(b, t, 3, n_heads, head)
+        q, k, v = qkv[:, :, 0], qkv[:, :, 1], qkv[:, :, 2]  # (B, T, H, h)
+        q = q.transpose(0, 2, 1, 3)  # (B, H, T, h)
+        k = k.transpose(0, 2, 3, 1)  # (B, H, h, T)
+        v = v.transpose(0, 2, 1, 3)
+        scores = jnp.matmul(q, k) / (head**0.5)  # FP32 activation matmul
+        mask = jnp.tril(jnp.ones((t, t), jnp.bool_))
+        scores = jnp.where(mask, scores, -1e9)
+        attn = jax.nn.softmax(scores, axis=-1)
+        ctx = jnp.matmul(attn, v)  # (B, H, T, h), FP32
+        ctx = ctx.transpose(0, 2, 1, 3).reshape(b * t, d)
+        out = L.dense_apply(qmm, bp["proj"], ctx)
+        return q_act(out.reshape(b, t, d), cfg)
+
+    def mlp(qmm, cfg, bp, x):
+        b, t, d = x.shape
+        h = L.dense_apply(qmm, bp["ff1"], x.reshape(b * t, d))
+        h = q_act(jax.nn.gelu(h), cfg)
+        out = L.dense_apply(qmm, bp["ff2"], h)
+        return q_act(out.reshape(b, t, d), cfg)
+
+    def apply(qmm, cfg, p, s, tokens, train: bool):
+        del train
+        b, t = tokens.shape
+        x = jnp.take(p["embed"], tokens, axis=0) + p["pos"][:t]
+        for i in range(n_layers):
+            bp = p[f"blk{i}"]
+            x = x + attention(qmm, cfg, bp, layer_norm(x, bp["ln1"]))
+            x = x + mlp(qmm, cfg, bp, layer_norm(x, bp["ln2"]))
+        x = layer_norm(x, p["ln_f"])
+        logits = L.dense_apply(qmm, p["head"], x.reshape(b * t, -1))
+        return logits.reshape(b, t, -1), s
+
+    return init, apply

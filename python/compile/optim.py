@@ -1,0 +1,60 @@
+"""SGD with momentum + the paper's wide weight storage (§4.2, §5.1).
+
+The paper's "shell optimizer": the update itself runs in FP32, then the
+weights are written back in *two* BFP views — a wide-mantissa one
+(``cfg.storage`` bits) that future updates read, and the narrow view
+(``cfg.mantissa`` bits) that forward/backward passes consume. Here the wide
+view is materialized by quantizing the updated master weights with
+``q_storage``; the narrow view is produced on the fly inside ``qmatmul``
+(quantizing its weight operand), so no separate narrow copy is stored.
+
+Only dot-product weight tensors (keys ``w``/``wx``/``wh``/``embed``) are
+BFP-stored; biases and BN parameters stay FP32 (they never feed the MatMul
+unit). Weight decay likewise applies only to dot-product weights — the
+standard no-decay-on-BN/bias convention the original papers use.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .numerics import NumericConfig, q_storage
+
+# Parameter leaf names that are dot-product operands (stored in BFP).
+DOT_WEIGHT_KEYS = ("w", "wx", "wh", "embed")
+
+
+def _leaf_name(path) -> str:
+    last = path[-1]
+    return getattr(last, "key", getattr(last, "idx", ""))
+
+
+def is_dot_weight(path) -> bool:
+    return _leaf_name(path) in DOT_WEIGHT_KEYS
+
+
+def momentum_init(params):
+    """Momentum buffers: FP32 zeros shaped like params."""
+    return jax.tree_util.tree_map(jnp.zeros_like, params)
+
+
+def sgd_update(params, moms, grads, lr, cfg: NumericConfig, momentum: float, weight_decay: float):
+    """One SGD+momentum step with wide-BFP weight write-back.
+
+    v' = mu * v + (g + wd * w);  w_fp32 = w - lr * v';  w' = Q_storage(w_fp32)
+    """
+
+    def upd(path, w, v, g):
+        dot = is_dot_weight(path)
+        g_eff = g + weight_decay * w if (dot and weight_decay > 0.0) else g
+        v2 = momentum * v + g_eff
+        w2 = w - lr * v2
+        if dot:
+            w2 = q_storage(w2, cfg)
+        return w2, v2
+
+    flat = jax.tree_util.tree_map_with_path(upd, params, moms, grads)
+    new_params = jax.tree_util.tree_map(lambda t: t[0], flat, is_leaf=lambda t: isinstance(t, tuple))
+    new_moms = jax.tree_util.tree_map(lambda t: t[1], flat, is_leaf=lambda t: isinstance(t, tuple))
+    return new_params, new_moms

@@ -1,0 +1,127 @@
+"""Build the train/eval/init step functions lowered by aot.py.
+
+All three functions take and return *flat lists* of arrays so the HLO
+parameter order is pinned and recorded in the manifest:
+
+- ``init(seed)``                         -> state leaves
+- ``train(state..., x, y, lr)``          -> state' leaves ++ [loss, acc]
+- ``eval(state..., x, y)``               -> [loss_sum, correct_sum]
+
+"state" is the concatenation of param leaves, momentum leaves and BN-state
+leaves, in ``jax.tree_util`` flattening order. eval receives the full state
+(momentum included) so the rust trainer keeps ONE device-resident buffer
+list for both steps; XLA dead-code-eliminates the unused momentum inputs.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import optim
+from .models import ModelSpec
+from .numerics import NumericConfig, make_qmatmul
+
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    """Mean cross entropy. logits (..., C), labels (...) int32."""
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    ll = jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    return -jnp.mean(ll)
+
+
+def accuracy(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    return jnp.mean((jnp.argmax(logits, axis=-1) == labels).astype(jnp.float32))
+
+
+class StepBuilder:
+    """Holds the (model, numeric config, dataset dims) triple and builds the
+    three flat-signature functions plus their example arguments."""
+
+    def __init__(self, spec: ModelSpec, cfg: NumericConfig, *, batch: int, **dims):
+        self.spec = spec
+        self.cfg = cfg
+        self.batch = batch
+        self.dims = dims  # image: classes/hw/channels; text: vocab/seq
+        self.qmm = make_qmatmul(cfg)
+        # A throwaway init defines the state treedef and leaf metadata.
+        if spec.kind == "image":
+            p, s = spec.init(jax.random.PRNGKey(0), dims["classes"], dims["hw"], dims["channels"])
+        else:
+            p, s = spec.init(jax.random.PRNGKey(0), dims["vocab"], dims["seq"])
+        m = optim.momentum_init(p)
+        self.state_tree = (p, m, s)
+        leaves, self.treedef = jax.tree_util.tree_flatten(self.state_tree)
+        self.state_avals = [jax.ShapeDtypeStruct(l.shape, l.dtype) for l in leaves]
+        self.state_paths = [
+            "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+            for path, _ in jax.tree_util.tree_flatten_with_path(self.state_tree)[0]
+        ]
+
+    # ------------------------------------------------------------ shapes
+
+    def batch_avals(self):
+        if self.spec.kind == "image":
+            x = jax.ShapeDtypeStruct(
+                (self.batch, self.dims["hw"], self.dims["hw"], self.dims["channels"]), jnp.float32
+            )
+            y = jax.ShapeDtypeStruct((self.batch,), jnp.int32)
+        else:
+            x = jax.ShapeDtypeStruct((self.batch, self.dims["seq"]), jnp.int32)
+            y = jax.ShapeDtypeStruct((self.batch, self.dims["seq"]), jnp.int32)
+        return x, y
+
+    # --------------------------------------------------------- functions
+
+    def init_fn(self):
+        spec, dims = self.spec, self.dims
+
+        def init(seed):
+            key = jax.random.PRNGKey(seed)
+            if spec.kind == "image":
+                p, s = spec.init(key, dims["classes"], dims["hw"], dims["channels"])
+            else:
+                p, s = spec.init(key, dims["vocab"], dims["seq"])
+            m = optim.momentum_init(p)
+            return jax.tree_util.tree_leaves((p, m, s))
+
+        return init
+
+    def _loss(self, p, s, x, y, train: bool):
+        logits, new_s = self.spec.apply(self.qmm, self.cfg, p, s, x, train)
+        return cross_entropy(logits, y), (new_s, accuracy(logits, y))
+
+    def train_fn(self):
+        treedef = self.treedef
+
+        def train(*args):
+            n = len(self.state_avals)
+            state_leaves, (x, y, lr) = list(args[:n]), args[n:]
+            p, m, s = jax.tree_util.tree_unflatten(treedef, state_leaves)
+            (loss, (new_s, acc)), grads = jax.value_and_grad(
+                lambda pp: self._loss(pp, s, x, y, True), has_aux=True
+            )(p)
+            new_p, new_m = optim.sgd_update(
+                p, m, grads, lr, self.cfg, self.spec.momentum, self.spec.weight_decay
+            )
+            return jax.tree_util.tree_leaves((new_p, new_m, new_s)) + [loss, acc]
+
+        return train
+
+    def eval_fn(self):
+        treedef = self.treedef
+
+        def evaluate(*args):
+            n = len(self.state_avals)
+            state_leaves, (x, y) = list(args[:n]), args[n:]
+            p, _, s = jax.tree_util.tree_unflatten(treedef, state_leaves)
+            logits, _ = self.spec.apply(self.qmm, self.cfg, p, s, x, False)
+            logp = jax.nn.log_softmax(logits, axis=-1)
+            ll = jnp.take_along_axis(logp, y[..., None], axis=-1)[..., 0]
+            loss_sum = -jnp.sum(ll) / (1 if self.spec.kind == "image" else y.shape[-1])
+            correct = jnp.sum((jnp.argmax(logits, axis=-1) == y).astype(jnp.float32)) / (
+                1 if self.spec.kind == "image" else y.shape[-1]
+            )
+            return [loss_sum, correct]
+
+        return evaluate

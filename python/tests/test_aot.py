@@ -1,0 +1,81 @@
+"""AOT compiler: lowering produces parseable HLO text with the right
+parameter arity; the manifest (if built) is consistent with COMBOS."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import aot
+from compile.models import MODELS
+from compile.numerics import parse_config
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "../../artifacts")
+
+
+def test_combo_list_is_wellformed():
+    assert len(aot.COMBOS) >= 40
+    seen = set()
+    for model, dataset, cfg in aot.COMBOS:
+        assert model in MODELS, model
+        assert dataset in aot.DATASETS, dataset
+        parse_config(cfg)  # must parse
+        key = aot.combo_name(model, dataset, cfg)
+        assert key not in seen, f"duplicate combo {key}"
+        seen.add(key)
+        # kind compatibility
+        assert MODELS[model].kind == aot.DATASETS[dataset]["kind"]
+
+
+def test_to_hlo_text_basic():
+    def fn(x, y):
+        return [x @ y, jnp.sum(x)]
+
+    spec = jax.ShapeDtypeStruct((4, 4), jnp.float32)
+    lowered = jax.jit(fn).lower(spec, spec)
+    text = aot.to_hlo_text(lowered)
+    assert "HloModule" in text
+    assert "parameter(0)" in text and "parameter(1)" in text
+    # tuple root with two leaves
+    assert "tuple(" in text or "ROOT" in text
+
+
+def test_dtype_str_mapping():
+    assert aot._dtype_str(jnp.float32) == "f32"
+    assert aot._dtype_str(jnp.int32) == "i32"
+    with pytest.raises(KeyError):
+        aot._dtype_str(jnp.float64)
+
+
+@pytest.mark.skipif(not os.path.exists(os.path.join(ART_DIR, "manifest.json")), reason="run `make artifacts` first")
+def test_manifest_consistent_with_combos():
+    with open(os.path.join(ART_DIR, "manifest.json")) as f:
+        manifest = json.load(f)
+    arts = manifest["artifacts"]
+    for model, dataset, cfg in aot.COMBOS:
+        name = aot.combo_name(model, dataset, cfg)
+        for role in ("init", "train", "eval"):
+            key = f"{name}__{role}"
+            assert key in arts, f"missing {key}"
+            entry = arts[key]
+            assert os.path.exists(os.path.join(ART_DIR, entry["file"])), entry["file"]
+            # train I/O contract: state' + [loss, acc]; inputs state + x,y,lr
+            if role == "train":
+                assert len(entry["outputs"]) == entry["state_len"] + 2
+                assert len(entry["inputs"]) == entry["state_len"] + 3
+                assert entry["outputs"][-2]["name"] == "loss"
+            if role == "eval":
+                assert [o["name"] for o in entry["outputs"]] == ["loss_sum", "correct_sum"]
+
+
+@pytest.mark.skipif(not os.path.exists(os.path.join(ART_DIR, "manifest.json")), reason="run `make artifacts` first")
+def test_state_names_stable_across_roles():
+    with open(os.path.join(ART_DIR, "manifest.json")) as f:
+        arts = json.load(f)["artifacts"]
+    name = aot.combo_name(*aot.COMBOS[0])
+    tr = arts[f"{name}__train"]
+    ev = arts[f"{name}__eval"]
+    n = tr["state_len"]
+    assert [i["name"] for i in tr["inputs"][:n]] == [i["name"] for i in ev["inputs"][:n]]

@@ -1,0 +1,217 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle (ref.py).
+
+The CORE correctness signal of the stack: hypothesis sweeps shapes, scales,
+mantissa widths and tile sizes, asserting the Pallas kernels agree with the
+grid-exact oracle bit-for-bit and with the slab reference to f32
+summation-order tolerance.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.bfp_matmul import bfp_matmul
+from compile.kernels.bfp_quantize import bfp_quantize_tiled, bfp_quantize_whole
+
+
+def rand(shape, seed, scale=1.0):
+    rng = np.random.default_rng(seed)
+    return (rng.normal(size=shape) * scale).astype(np.float32)
+
+
+# ---------------------------------------------------------------- quantize
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    rows=st.integers(1, 70),
+    cols=st.integers(1, 70),
+    m=st.sampled_from([2, 4, 8, 12, 16]),
+    tile=st.sampled_from([8, 16, 24, 32]),
+    scale=st.sampled_from([1e-4, 1.0, 1e4]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_quantize_kernel_matches_ref(rows, cols, m, tile, scale, seed):
+    x = rand((rows, cols), seed, scale)
+    got = np.asarray(bfp_quantize_tiled(jnp.array(x), m, tile))
+    want = np.asarray(ref.bfp_quantize_tiled(jnp.array(x), m, tile))
+    np.testing.assert_array_equal(got, want)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    n=st.integers(1, 300),
+    m=st.sampled_from([4, 8, 12]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_quantize_whole_matches_ref(n, m, seed):
+    x = rand((n,), seed)
+    got = np.asarray(bfp_quantize_whole(jnp.array(x), m))
+    want = np.asarray(ref.bfp_quantize(jnp.array(x), m))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_quantize_zero_block():
+    x = jnp.zeros((16, 16), jnp.float32)
+    got = np.asarray(bfp_quantize_tiled(x, 8, 8))
+    assert np.all(got == 0.0)
+
+
+def test_quantize_idempotent():
+    x = rand((48, 48), 3)
+    q1 = np.asarray(bfp_quantize_tiled(jnp.array(x), 8, 24))
+    q2 = np.asarray(bfp_quantize_tiled(jnp.array(q1), 8, 24))
+    np.testing.assert_array_equal(q1, q2)
+
+
+@pytest.mark.parametrize("m", [2, 4, 8, 12])
+def test_quantize_error_bound(m):
+    """RNE error <= step/2 for unsaturated lanes, <= step at the positive
+    clamp (two's complement: hi = 2^(m-1)-1 while rounding can hit 2^(m-1))."""
+    x = rand((64, 64), 7, scale=3.0)
+    q = np.asarray(ref.bfp_quantize_tiled(jnp.array(x), m, 16))
+    for i in range(0, 64, 16):
+        for j in range(0, 64, 16):
+            tx, tq = x[i : i + 16, j : j + 16], q[i : i + 16, j : j + 16]
+            e = np.floor(np.log2(np.abs(tx).max())) + 1  # frexp exponent
+            step = 2.0 ** (e - (m - 1))
+            saturated = tq >= (2 ** (m - 1) - 1) * step - 1e-9
+            err = np.abs(tx - tq)
+            assert err[~saturated].max(initial=0.0) <= step * (0.5 + 1e-6)
+            assert err.max() <= step * (1.0 + 1e-6)
+
+
+def test_quantize_preserves_sign_and_monotone():
+    x = rand((32, 32), 11)
+    q = np.asarray(ref.bfp_quantize_tiled(jnp.array(x), 8, 16))
+    assert np.all(np.sign(q) * np.sign(x) >= 0)  # never flips sign
+
+
+def test_quantize_high_precision_near_exact():
+    """m=24 quantization of values already on a coarse grid is exact."""
+    x = (np.round(rand((24, 24), 5) * 16) / 16).astype(np.float32)
+    q = np.asarray(ref.bfp_quantize_tiled(jnp.array(x), 24, 24))
+    np.testing.assert_array_equal(q, x)
+
+
+# ---------------------------------------------------------------- matmul
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    m_dim=st.integers(1, 48),
+    k_dim=st.integers(1, 64),
+    n_dim=st.integers(1, 48),
+    m=st.sampled_from([4, 8, 12, 16]),
+    tile=st.sampled_from([8, 16, 24]),
+    scale=st.sampled_from([1e-3, 1.0, 1e3]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_kernel_bitexact_vs_grid_oracle(m_dim, k_dim, n_dim, m, tile, scale, seed):
+    a = rand((m_dim, k_dim), seed, scale)
+    b = rand((k_dim, n_dim), seed + 1)
+    got = np.asarray(bfp_matmul(jnp.array(a), jnp.array(b), m, tile))
+    want = np.asarray(ref.bfp_matmul_grid(jnp.array(a), jnp.array(b), m, tile))
+    np.testing.assert_array_equal(got, want)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    m_dim=st.integers(1, 48),
+    k_dim=st.integers(1, 80),
+    n_dim=st.integers(1, 48),
+    m=st.sampled_from([8, 12]),
+    tile=st.sampled_from([16, 24]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_kernel_close_to_slab_ref(m_dim, k_dim, n_dim, m, tile, seed):
+    """The L2-facing slab reference agrees to f32 summation-order tolerance."""
+    a = rand((m_dim, k_dim), seed)
+    b = rand((k_dim, n_dim), seed + 1)
+    got = np.asarray(bfp_matmul(jnp.array(a), jnp.array(b), m, tile))
+    want = np.asarray(ref.bfp_matmul(jnp.array(a), jnp.array(b), m, tile))
+    tol = 1e-5 * max(1.0, np.abs(want).max())
+    assert np.abs(got - want).max() <= tol
+
+
+@pytest.mark.parametrize("m,rel", [(4, 0.25), (8, 0.02), (12, 2e-3), (16, 2e-4)])
+def test_matmul_error_decays_with_mantissa(m, rel):
+    """BFP matmul converges to the FP32 product as mantissa width grows."""
+    a = rand((64, 96), 1)
+    b = rand((96, 64), 2)
+    exact = a @ b
+    got = np.asarray(bfp_matmul(jnp.array(a), jnp.array(b), m, 16))
+    err = np.abs(got - exact).max() / np.abs(exact).max()
+    assert err < rel, f"m={m}: rel err {err}"
+
+
+def test_matmul_tiling_reduces_error_on_mixed_scales():
+    """A matrix with per-block scale spread: tiled BFP beats whole-tensor."""
+    rng = np.random.default_rng(0)
+    a = rng.normal(size=(64, 64)).astype(np.float32)
+    a[:32] *= 1e-3  # two very different exponent regimes in one tensor
+    b = rng.normal(size=(64, 64)).astype(np.float32)
+    exact = a @ b
+    tiled = np.asarray(ref.bfp_matmul(jnp.array(a), jnp.array(b), 8, 16))
+    whole = np.asarray(ref.bfp_matmul(jnp.array(a), jnp.array(b), 8, None))
+    err_t = np.abs(tiled - exact).mean()
+    err_w = np.abs(whole - exact).mean()
+    assert err_t < err_w
+
+
+def test_matmul_zero_inputs():
+    a = jnp.zeros((24, 24), jnp.float32)
+    b = jnp.zeros((24, 24), jnp.float32)
+    got = np.asarray(bfp_matmul(a, b, 8, 8))
+    assert np.all(got == 0)
+
+
+def test_matmul_identity_power_of_two():
+    """Powers of two quantize exactly; identity matmul is then exact."""
+    a = np.diag(np.full(24, 2.0)).astype(np.float32)
+    b = rand((24, 24), 9)
+    qb = np.asarray(ref.bfp_quantize_tiled(jnp.array(b), 8, 24))
+    got = np.asarray(bfp_matmul(jnp.array(a), jnp.array(b), 8, 24))
+    np.testing.assert_allclose(got, 2 * qb, rtol=0, atol=0)
+
+
+# ------------------------------------------------------------- fp_custom
+
+
+def test_fp_custom_fp32_is_identity():
+    x = rand((128,), 21, 10.0)
+    y = np.asarray(ref.fp_custom_quantize(jnp.array(x), 24, 8))
+    np.testing.assert_array_equal(x, y)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    m=st.sampled_from([2, 4, 8, 11, 24]),
+    eb=st.sampled_from([2, 5, 6, 8]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_fp_custom_relative_error_bound(m, eb, seed):
+    """Within representable range, rel. error <= 2^-m (half-ulp of m-bit)."""
+    x = rand((256,), seed)
+    y = np.asarray(ref.fp_custom_quantize(jnp.array(x), m, eb))
+    bias = 2 ** (eb - 1) - 1
+    e_max, e_min = 2**eb - 2 - bias, 1 - bias
+    in_range = (np.abs(x) < 2.0 ** (e_max + 1) * (1 - 2.0 ** (-m))) & (np.abs(x) >= 2.0**e_min)
+    rel = np.abs(y[in_range] - x[in_range]) / np.abs(x[in_range])
+    assert rel.max(initial=0.0) <= 2.0**-m + 1e-9
+
+
+def test_fp_custom_flush_to_zero():
+    # 2-bit exponent: bias 1, e_min = 0 -> anything below 0.5 flushes
+    x = jnp.array([0.2, -0.3, 0.9], jnp.float32)
+    y = np.asarray(ref.fp_custom_quantize(x, 8, 2))
+    assert y[0] == 0.0 and y[1] == 0.0 and y[2] != 0.0
+
+
+def test_fp_custom_saturates():
+    x = jnp.array([1e30, -1e30], jnp.float32)
+    y = np.asarray(ref.fp_custom_quantize(x, 8, 5))
+    # FP16-like: max finite ~ 2^15 * (2 - 2^-7)
+    assert np.isfinite(y).all() and y[0] > 0 and y[1] < 0 and abs(y[0]) < 1e5

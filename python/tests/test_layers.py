@@ -1,0 +1,126 @@
+"""L2 layers: conv-as-im2col correctness vs lax.conv, BN semantics, LSTM
+shape/grad sanity — with both fp32 and hbfp qmatmuls."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax import lax
+
+from compile import layers as L
+from compile.numerics import make_qmatmul, parse_config
+
+FP32 = parse_config("fp32")
+HBFP = parse_config("hbfp8_16_t24")
+
+
+def rand(shape, seed, scale=1.0):
+    rng = np.random.default_rng(seed)
+    return jnp.array((rng.normal(size=shape) * scale).astype(np.float32))
+
+
+# ----------------------------------------------------------------- conv
+
+
+@pytest.mark.parametrize("stride", [1, 2])
+@pytest.mark.parametrize("kh,kw", [(3, 3), (1, 1)])
+def test_conv_im2col_matches_lax_conv(stride, kh, kw):
+    qmm = make_qmatmul(FP32)
+    x = rand((2, 8, 8, 3), 0)
+    p = {"w": rand((kh, kw, 3, 5), 1)}
+    got = L.conv_apply(qmm, p, x, stride=stride)
+    want = lax.conv_general_dilated(
+        x, p["w"], (stride, stride), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC")
+    )
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-5)
+
+
+def test_conv_grad_flows_through_qmatmul():
+    qmm = make_qmatmul(HBFP)
+    x = rand((2, 8, 8, 3), 2)
+    p = {"w": rand((3, 3, 3, 4), 3)}
+
+    def loss(p):
+        return jnp.sum(L.conv_apply(qmm, p, x) ** 2)
+
+    g = jax.grad(loss)(p)
+    assert g["w"].shape == p["w"].shape
+    assert float(jnp.abs(g["w"]).max()) > 0
+    assert np.isfinite(np.asarray(g["w"])).all()
+
+
+# ------------------------------------------------------------------- bn
+
+
+def test_bn_train_normalizes_batch():
+    p, s = L.bn_init(4)
+    x = rand((16, 6, 6, 4), 4, scale=3.0) + 2.0
+    y, s2 = L.bn_apply(p, s, x, train=True)
+    got_mean = np.asarray(jnp.mean(y, axis=(0, 1, 2)))
+    got_var = np.asarray(jnp.var(y, axis=(0, 1, 2)))
+    np.testing.assert_allclose(got_mean, 0.0, atol=1e-4)
+    np.testing.assert_allclose(got_var, 1.0, atol=1e-2)
+    # running stats moved toward batch stats
+    assert float(jnp.abs(s2["mean"]).max()) > 0
+
+
+def test_bn_eval_uses_running_stats():
+    p, s = L.bn_init(2)
+    s = {"mean": jnp.array([1.0, -1.0]), "var": jnp.array([4.0, 0.25])}
+    x = jnp.ones((3, 2, 2, 2), jnp.float32)
+    y, s2 = L.bn_apply(p, s, x, train=False)
+    assert s2 is s  # eval must not touch state
+    want0 = (1.0 - 1.0) / np.sqrt(4.0 + 1e-5)
+    want1 = (1.0 + 1.0) / np.sqrt(0.25 + 1e-5)
+    np.testing.assert_allclose(np.asarray(y[0, 0, 0]), [want0, want1], rtol=1e-4)
+
+
+# ----------------------------------------------------------------- lstm
+
+
+def test_lstm_shapes_and_state_evolution():
+    qmm = make_qmatmul(FP32)
+    p = L.lstm_init(jax.random.PRNGKey(0), 6, 10)
+    x = rand((4, 7, 6), 5)
+    y = L.lstm_apply(qmm, p, x, FP32)
+    assert y.shape == (4, 7, 10)
+    # outputs at different timesteps must differ (state actually carried)
+    assert float(jnp.abs(y[:, 0] - y[:, -1]).max()) > 1e-4
+
+
+def test_lstm_grad_through_scan_and_qmatmul():
+    qmm = make_qmatmul(HBFP)
+    p = L.lstm_init(jax.random.PRNGKey(1), 4, 8)
+    x = rand((2, 5, 4), 6)
+
+    def loss(p):
+        return jnp.sum(L.lstm_apply(qmm, p, x, HBFP) ** 2)
+
+    g = jax.grad(loss)(p)
+    for k in ("wx", "wh", "b"):
+        assert np.isfinite(np.asarray(g[k])).all(), k
+        assert float(jnp.abs(g[k]).max()) > 0, k
+
+
+def test_lstm_forget_bias_initialized_to_one():
+    p = L.lstm_init(jax.random.PRNGKey(2), 3, 5)
+    b = np.asarray(p["b"])
+    assert (b[5:10] == 1.0).all()  # forget gate block
+    assert (b[:5] == 0.0).all()
+
+
+# -------------------------------------------------------------- pooling
+
+
+def test_global_avg_pool():
+    x = rand((2, 4, 4, 3), 7)
+    got = np.asarray(L.global_avg_pool(x))
+    want = np.asarray(jnp.mean(x, axis=(1, 2)))
+    np.testing.assert_allclose(got, want, rtol=1e-6)
+
+
+def test_avg_pool2_halves_spatial():
+    x = jnp.arange(16, dtype=jnp.float32).reshape(1, 4, 4, 1)
+    y = L.avg_pool2(x)
+    assert y.shape == (1, 2, 2, 1)
+    np.testing.assert_allclose(np.asarray(y[0, 0, 0, 0]), (0 + 1 + 4 + 5) / 4.0)

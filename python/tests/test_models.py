@@ -1,0 +1,98 @@
+"""L2 models: init/apply shape contracts, BN-state plumbing, parameter
+counts, and a single-batch overfit smoke for each model family."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.models import MODELS
+from compile.numerics import make_qmatmul, parse_config
+
+FP32 = parse_config("fp32")
+
+
+def n_params(tree):
+    return sum(x.size for x in jax.tree_util.tree_leaves(tree))
+
+
+@pytest.mark.parametrize("name", ["mlp", "resnet_mini", "wrn_mini", "densenet_mini"])
+def test_image_model_contract(name):
+    spec = MODELS[name]
+    p, s = spec.init(jax.random.PRNGKey(0), 10, 16, 3)
+    qmm = make_qmatmul(FP32)
+    x = jnp.ones((4, 16, 16, 3), jnp.float32)
+    logits, s2 = spec.apply(qmm, FP32, p, s, x, True)
+    assert logits.shape == (4, 10)
+    assert jax.tree_util.tree_structure(s) == jax.tree_util.tree_structure(s2)
+    assert np.isfinite(np.asarray(logits)).all()
+    # eval mode must not mutate state
+    _, s3 = spec.apply(qmm, FP32, p, s, x, False)
+    for a, b in zip(jax.tree_util.tree_leaves(s), jax.tree_util.tree_leaves(s3)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_model_sizes_ordered():
+    sizes = {}
+    for name in ["mlp", "resnet_mini", "wrn_mini", "densenet_mini"]:
+        p, _ = MODELS[name].init(jax.random.PRNGKey(0), 10, 16, 3)
+        sizes[name] = n_params(p)
+    assert sizes["wrn_mini"] > sizes["resnet_mini"], sizes
+    assert all(1_000 < v < 5_000_000 for v in sizes.values()), sizes
+
+
+def test_lstm_contract():
+    spec = MODELS["lstm"]
+    p, s = spec.init(jax.random.PRNGKey(0), 32, 48)
+    qmm = make_qmatmul(FP32)
+    tokens = jnp.zeros((4, 48), jnp.int32)
+    logits, _ = spec.apply(qmm, FP32, p, s, tokens, True)
+    assert logits.shape == (4, 48, 32)
+
+
+@pytest.mark.parametrize("name", ["resnet_mini", "densenet_mini"])
+def test_overfit_single_batch(name):
+    """Each CNN must be able to drive training loss down on one batch."""
+    from compile.train import StepBuilder
+
+    sb = StepBuilder(MODELS[name], FP32, batch=8, classes=4, hw=8, channels=3)
+    init = jax.jit(sb.init_fn())
+    train = jax.jit(sb.train_fn())
+    state = init(jnp.int32(0))
+    rng = np.random.default_rng(0)
+    x = jnp.array(rng.normal(size=(8, 8, 8, 3)).astype(np.float32))
+    y = jnp.array((np.arange(8) % 4).astype(np.int32))
+    losses = []
+    for _ in range(25):
+        out = train(*state, x, y, jnp.float32(0.1))
+        state, loss = out[:-2], float(out[-2])
+        losses.append(loss)
+    assert losses[-1] < losses[0] * 0.5, f"{name}: {losses[0]} -> {losses[-1]}"
+
+
+def test_transformer_contract_and_causality():
+    spec = MODELS["transformer_mini"]
+    p, s = spec.init(jax.random.PRNGKey(0), 32, 48)
+    qmm = make_qmatmul(FP32)
+    t1 = jnp.zeros((2, 48), jnp.int32)
+    l1, _ = spec.apply(qmm, FP32, p, s, t1, True)
+    assert l1.shape == (2, 48, 32)
+    # causality: changing token t must not affect logits before t
+    t2 = t1.at[:, 30].set(5)
+    l2, _ = spec.apply(qmm, FP32, p, s, t2, True)
+    np.testing.assert_array_equal(np.asarray(l1[:, :30]), np.asarray(l2[:, :30]))
+    assert float(jnp.abs(l1[:, 30:] - l2[:, 30:]).max()) > 0
+
+
+def test_transformer_hbfp_grads_finite():
+    from compile.train import StepBuilder
+    from compile.numerics import parse_config
+
+    sb = StepBuilder(MODELS["transformer_mini"], parse_config("hbfp8_16_t24"), batch=4, vocab=16, seq=12)
+    leaves = sb.init_fn()(jnp.int32(0))
+    x = jnp.zeros((4, 12), jnp.int32)
+    y = jnp.ones((4, 12), jnp.int32)
+    out = sb.train_fn()(*leaves, x, y, jnp.float32(0.1))
+    assert np.isfinite(float(out[-2]))
+    for leaf in out[:-2]:
+        assert np.isfinite(np.asarray(leaf)).all()

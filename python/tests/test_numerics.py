@@ -1,0 +1,170 @@
+"""L2 numerics: NumericConfig parsing, qmatmul forward/backward semantics,
+weight-storage quantization, fp_custom mode."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import numerics
+from compile.kernels import ref
+from compile.numerics import NumericConfig, make_qmatmul, parse_config, q_storage
+
+
+def rand(shape, seed, scale=1.0):
+    rng = np.random.default_rng(seed)
+    return jnp.array((rng.normal(size=shape) * scale).astype(np.float32))
+
+
+# ------------------------------------------------------------- parsing
+
+
+@pytest.mark.parametrize(
+    "name",
+    ["fp32", "hbfp8_16_t24", "hbfp12_16_t24", "hbfp4_4_t8", "hbfp8_16_tnone", "hbfpp8_16_t24", "fp_m4_e8", "fp_m24_e2"],
+)
+def test_parse_roundtrip(name):
+    cfg = parse_config(name)
+    assert cfg.name == name
+
+
+def test_parse_rejects_garbage():
+    with pytest.raises(ValueError):
+        parse_config("hbfp_banana")
+    with pytest.raises(ValueError):
+        parse_config("nope")
+
+
+def test_validate_rejects_bad_configs():
+    with pytest.raises(ValueError):
+        NumericConfig(kind="hbfp", mantissa=1).validate()
+    with pytest.raises(ValueError):
+        NumericConfig(kind="hbfp", mantissa=12, storage=8).validate()
+    with pytest.raises(ValueError):
+        NumericConfig(kind="hbfp", use_pallas=True, tile=None).validate()
+    with pytest.raises(ValueError):
+        NumericConfig(kind="wat").validate()
+
+
+# ------------------------------------------------------------- forward
+
+
+def test_fp32_qmatmul_is_plain_matmul():
+    qmm = make_qmatmul(parse_config("fp32"))
+    a, b = rand((8, 16), 0), rand((16, 4), 1)
+    np.testing.assert_array_equal(np.asarray(qmm(a, b)), np.asarray(a @ b))
+
+
+def test_hbfp_forward_matches_ref_semantics():
+    cfg = parse_config("hbfp8_16_t24")
+    qmm = make_qmatmul(cfg)
+    a, b = rand((30, 50), 2), rand((50, 20), 3)
+    got = np.asarray(qmm(a, b))
+    want = np.asarray(
+        jnp.matmul(ref.bfp_quantize_tiled(a, 8, 24), ref.bfp_quantize_tiled(b, 8, 24))
+    )
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+
+
+def test_pallas_and_jnp_paths_agree():
+    a, b = rand((20, 30), 4), rand((30, 10), 5)
+    jp = make_qmatmul(parse_config("hbfp8_16_t24"))(a, b)
+    pal = make_qmatmul(parse_config("hbfpp8_16_t24"))(a, b)
+    scale = float(jnp.abs(jp).max())
+    np.testing.assert_allclose(np.asarray(jp), np.asarray(pal), atol=2e-6 * max(scale, 1.0))
+
+
+# ------------------------------------------------------------ backward
+
+
+def test_hbfp_vjp_quantizes_all_three_passes():
+    """dx must equal Q(g) @ Q(w)^T and dw must equal Q(x)^T @ Q(g)."""
+    cfg = parse_config("hbfp8_16_t24")
+    qmm = make_qmatmul(cfg)
+    x, w = rand((12, 25), 6), rand((25, 7), 7)
+
+    y, vjp = jax.vjp(qmm, x, w)
+    g = rand(y.shape, 8)
+    dx, dw = vjp(g)
+
+    qg = ref.bfp_quantize_tiled(g, 8, 24)
+    want_dx = jnp.matmul(qg, ref.bfp_quantize_tiled(w, 8, 24).T)
+    want_dw = jnp.matmul(ref.bfp_quantize_tiled(x, 8, 24).T, qg)
+    np.testing.assert_allclose(np.asarray(dx), np.asarray(want_dx), rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(dw), np.asarray(want_dw), rtol=1e-5, atol=1e-6)
+
+
+def test_fp32_grads_differ_from_hbfp4():
+    """Sanity: aggressive quantization visibly perturbs gradients."""
+    x, w = rand((16, 24), 9), rand((24, 8), 10)
+    g = rand((16, 8), 11)
+
+    def grads(cfg_name):
+        qmm = make_qmatmul(parse_config(cfg_name))
+        _, vjp = jax.vjp(qmm, x, w)
+        return vjp(g)
+
+    dx32, _ = grads("fp32")
+    dx4, _ = grads("hbfp4_4_t24")
+    assert float(jnp.abs(dx32 - dx4).max()) > 1e-3
+
+
+def test_gradcheck_hbfp_close_to_fp32_at_high_mantissa():
+    """hbfp16 gradients approach FP32 gradients (quantization -> 0)."""
+    x, w = rand((10, 20), 12), rand((20, 5), 13)
+    g = rand((10, 5), 14)
+    _, vjp32 = jax.vjp(make_qmatmul(parse_config("fp32")), x, w)
+    _, vjp16 = jax.vjp(make_qmatmul(parse_config("hbfp16_16_t24")), x, w)
+    dx32, dw32 = vjp32(g)
+    dx16, dw16 = vjp16(g)
+    np.testing.assert_allclose(np.asarray(dx32), np.asarray(dx16), rtol=2e-3, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(dw32), np.asarray(dw16), rtol=2e-3, atol=2e-4)
+
+
+# -------------------------------------------------------- weight storage
+
+
+def test_q_storage_hbfp_uses_wide_mantissa():
+    cfg = parse_config("hbfp8_16_t24")
+    w = rand((26, 26), 15)
+    stored = q_storage(w, cfg)
+    # 16-bit storage: much closer to w than the 8-bit working precision
+    err16 = float(jnp.abs(stored - w).max())
+    err8 = float(jnp.abs(ref.bfp_quantize_tiled(w, 8, 24) - w).max())
+    assert err16 < err8 / 16
+    # and idempotent
+    np.testing.assert_array_equal(np.asarray(q_storage(stored, cfg)), np.asarray(stored))
+
+
+def test_q_storage_fp32_identity():
+    w = rand((5, 5), 16)
+    np.testing.assert_array_equal(np.asarray(q_storage(w, parse_config("fp32"))), np.asarray(w))
+
+
+def test_q_storage_handles_1d():
+    cfg = parse_config("hbfp8_16_t24")
+    w = rand((17,), 17)
+    out = q_storage(w, cfg)
+    assert out.shape == w.shape
+
+
+# ------------------------------------------------------------ fp_custom
+
+
+def test_fp_custom_qmatmul_quantizes_operands():
+    cfg = parse_config("fp_m4_e8")
+    qmm = make_qmatmul(cfg)
+    a, b = rand((6, 6), 18), rand((6, 6), 19)
+    got = np.asarray(qmm(a, b))
+    want = np.asarray(
+        jnp.matmul(ref.fp_custom_quantize(a, 4, 8), ref.fp_custom_quantize(b, 4, 8))
+    )
+    np.testing.assert_allclose(got, want, rtol=1e-6)
+
+
+def test_q_act_only_active_for_fp_custom():
+    x = rand((4, 4), 20)
+    assert numerics.q_act(x, parse_config("fp32")) is x
+    assert numerics.q_act(x, parse_config("hbfp8_16_t24")) is x
+    y = numerics.q_act(x, parse_config("fp_m4_e8"))
+    assert float(jnp.abs(y - x).max()) > 0  # actually quantized

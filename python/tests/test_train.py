@@ -1,0 +1,168 @@
+"""L2 training step: StepBuilder contracts (flat I/O order, state treedef),
+optimizer semantics (momentum, weight decay, wide storage), eval metrics."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import optim
+from compile.models import MODELS
+from compile.numerics import parse_config
+from compile.train import StepBuilder, accuracy, cross_entropy
+
+FP32 = parse_config("fp32")
+HBFP = parse_config("hbfp8_16_t24")
+
+
+def sb(model="mlp", cfg=FP32, **kw):
+    dims = dict(classes=4, hw=8, channels=3)
+    dims.update(kw)
+    return StepBuilder(MODELS[model], cfg, batch=8, **dims)
+
+
+# ------------------------------------------------------------ loss/metric
+
+
+def test_cross_entropy_uniform():
+    logits = jnp.zeros((5, 4))
+    labels = jnp.array([0, 1, 2, 3, 0])
+    assert abs(float(cross_entropy(logits, labels)) - np.log(4)) < 1e-5
+
+
+def test_accuracy():
+    logits = jnp.array([[3.0, 0, 0], [0, 3.0, 0], [0, 3.0, 0]])
+    labels = jnp.array([0, 1, 2])
+    assert abs(float(accuracy(logits, labels)) - 2 / 3) < 1e-6
+
+
+# ---------------------------------------------------------------- builder
+
+
+def test_flat_io_contract():
+    b = sb()
+    init = b.init_fn()
+    leaves = init(jnp.int32(0))
+    assert len(leaves) == len(b.state_avals) == len(b.state_paths)
+    for leaf, aval in zip(leaves, b.state_avals):
+        assert leaf.shape == aval.shape and leaf.dtype == aval.dtype
+    train = b.train_fn()
+    x = jnp.zeros((8, 8, 8, 3), jnp.float32)
+    y = jnp.zeros((8,), jnp.int32)
+    out = train(*leaves, x, y, jnp.float32(0.1))
+    assert len(out) == len(leaves) + 2
+    ev = b.eval_fn()(*leaves, x, y)
+    assert len(ev) == 2
+
+
+def test_state_paths_are_descriptive():
+    b = sb()
+    assert any("fc0" in p and p.endswith("w") for p in b.state_paths), b.state_paths
+
+
+def test_train_step_changes_params_not_shapes():
+    b = sb()
+    leaves = b.init_fn()(jnp.int32(1))
+    rng = np.random.default_rng(0)
+    x = jnp.array(rng.normal(size=(8, 8, 8, 3)).astype(np.float32))
+    y = jnp.array((np.arange(8) % 4).astype(np.int32))
+    out = b.train_fn()(*leaves, x, y, jnp.float32(0.1))
+    new_leaves = out[:-2]
+    changed = sum(
+        float(jnp.abs(a - b2).max()) > 0 for a, b2 in zip(leaves, new_leaves)
+    )
+    assert changed >= len(leaves) // 3  # params + momenta moved
+    for a, b2 in zip(leaves, new_leaves):
+        assert a.shape == b2.shape
+
+
+def test_zero_lr_freezes_params_but_not_momentum():
+    b = sb()
+    leaves = b.init_fn()(jnp.int32(1))
+    rng = np.random.default_rng(1)
+    x = jnp.array(rng.normal(size=(8, 8, 8, 3)).astype(np.float32))
+    y = jnp.zeros((8,), jnp.int32)
+    out = b.train_fn()(*leaves, x, y, jnp.float32(0.0))
+    n_params = len(jax.tree_util.tree_leaves(b.state_tree[0]))
+    for i in range(n_params):
+        np.testing.assert_array_equal(np.asarray(out[i]), np.asarray(leaves[i]))
+    mom = out[n_params : 2 * n_params]
+    assert any(float(jnp.abs(m).max()) > 0 for m in mom)
+
+
+# --------------------------------------------------------------- optimizer
+
+
+def test_momentum_accumulates():
+    p = {"w": jnp.ones((4, 4))}
+    m = optim.momentum_init(p)
+    g = {"w": jnp.full((4, 4), 0.5)}
+    p1, m1 = optim.sgd_update(p, m, g, 0.1, FP32, momentum=0.9, weight_decay=0.0)
+    p2, m2 = optim.sgd_update(p1, m1, g, 0.1, FP32, momentum=0.9, weight_decay=0.0)
+    # v1 = 0.5; v2 = 0.9*0.5 + 0.5 = 0.95
+    np.testing.assert_allclose(np.asarray(m1["w"]), 0.5)
+    np.testing.assert_allclose(np.asarray(m2["w"]), 0.95, rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(p2["w"]), 1.0 - 0.05 - 0.095, rtol=1e-5)
+
+
+def test_weight_decay_only_on_dot_weights():
+    p = {"w": jnp.ones((2, 2)), "b": jnp.ones((2,)), "gamma": jnp.ones((2,))}
+    m = optim.momentum_init(p)
+    g = jax.tree_util.tree_map(jnp.zeros_like, p)
+    p1, _ = optim.sgd_update(p, m, g, 1.0, FP32, momentum=0.0, weight_decay=0.1)
+    assert float(p1["w"][0, 0]) < 1.0  # decayed
+    assert float(p1["b"][0]) == 1.0  # untouched
+    assert float(p1["gamma"][0]) == 1.0
+
+
+def test_wide_storage_quantizes_weights_after_update():
+    cfg = HBFP  # storage = 16
+    p = {"w": jnp.array(np.random.default_rng(2).normal(size=(30, 30)).astype(np.float32))}
+    m = optim.momentum_init(p)
+    g = jax.tree_util.tree_map(jnp.zeros_like, p)
+    p1, _ = optim.sgd_update(p, m, g, 0.0, cfg, momentum=0.9, weight_decay=0.0)
+    from compile.kernels import ref
+
+    want = ref.bfp_quantize_tiled(p["w"], 16, 24)
+    np.testing.assert_array_equal(np.asarray(p1["w"]), np.asarray(want))
+
+
+# ------------------------------------------------------------------ eval
+
+
+def test_eval_counts_scale_with_batch():
+    b = sb()
+    leaves = b.init_fn()(jnp.int32(0))
+    x = jnp.zeros((8, 8, 8, 3), jnp.float32)
+    y = jnp.zeros((8,), jnp.int32)
+    loss_sum, correct = b.eval_fn()(*leaves, x, y)
+    assert 0.0 <= float(correct) <= 8.0
+    # untrained: per-example loss near ln(4)
+    assert abs(float(loss_sum) / 8 - np.log(4)) < 1.0
+
+
+def test_lstm_eval_normalizes_by_seq():
+    b = StepBuilder(MODELS["lstm"], FP32, batch=4, vocab=8, seq=6)
+    leaves = b.init_fn()(jnp.int32(0))
+    x = jnp.zeros((4, 6), jnp.int32)
+    y = jnp.zeros((4, 6), jnp.int32)
+    loss_sum, correct = b.eval_fn()(*leaves, x, y)
+    # per-sequence mean-over-T: loss_sum ~ 4 * ln(8)
+    assert abs(float(loss_sum) / 4 - np.log(8)) < 1.0
+    assert 0.0 <= float(correct) <= 4.0
+
+
+@pytest.mark.parametrize("cfgname", ["fp32", "hbfp8_16_t24"])
+def test_full_loop_loss_decreases(cfgname):
+    b = sb(cfg=parse_config(cfgname))
+    train = jax.jit(b.train_fn())
+    leaves = jax.jit(b.init_fn())(jnp.int32(0))
+    rng = np.random.default_rng(3)
+    x = jnp.array(rng.normal(size=(8, 8, 8, 3)).astype(np.float32))
+    y = jnp.array((np.arange(8) % 4).astype(np.int32))
+    first = None
+    for _ in range(30):
+        out = train(*leaves, x, y, jnp.float32(0.1))
+        leaves, loss = out[:-2], float(out[-2])
+        first = first if first is not None else loss
+    assert loss < first * 0.5, f"{first} -> {loss}"

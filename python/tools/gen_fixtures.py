@@ -1,0 +1,86 @@
+"""Generate cross-language BFP fixtures: inputs + expected quantized outputs
+from the python oracle (ref.py), consumed by the rust test
+``tests/bfp_cross.rs`` to pin the two implementations to identical
+semantics (same exponent convention, same RNE rounding, same saturation).
+
+Usage: python tools/gen_fixtures.py ../artifacts/fixtures/bfp_cases.json
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+import jax.numpy as jnp
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+from compile.kernels import ref  # noqa: E402
+
+
+def main() -> None:
+    out_path = sys.argv[1] if len(sys.argv) > 1 else "../artifacts/fixtures/bfp_cases.json"
+    rng = np.random.default_rng(0xB0F)
+    cases = []
+    # quantization cases across widths/tiles/scales, incl. edge cases
+    for m in (2, 4, 8, 12, 16, 24):
+        for tile in (4, 8, 24):
+            for scale in (1e-6, 1.0, 1e6):
+                rows, cols = int(rng.integers(1, 30)), int(rng.integers(1, 30))
+                x = (rng.normal(size=(rows, cols)) * scale).astype(np.float32)
+                q = np.asarray(ref.bfp_quantize_tiled(jnp.array(x), m, tile))
+                cases.append(
+                    {
+                        "kind": "quantize",
+                        "mantissa": m,
+                        "tile": tile,
+                        "rows": rows,
+                        "cols": cols,
+                        "x": x.flatten().tolist(),
+                        "q": q.flatten().tolist(),
+                    }
+                )
+    # explicit edge cases
+    for x in ([0.0, 0.0, 0.0, 0.0], [1.0, -1.0, 0.5, -0.5], [3.4e38, -3.4e38, 1e-30, 0.0]):
+        arr = np.array(x, np.float32).reshape(2, 2)
+        q = np.asarray(ref.bfp_quantize_tiled(jnp.array(arr), 8, 24))
+        cases.append(
+            {
+                "kind": "quantize",
+                "mantissa": 8,
+                "tile": 24,
+                "rows": 2,
+                "cols": 2,
+                "x": arr.flatten().tolist(),
+                "q": q.flatten().tolist(),
+            }
+        )
+    # matmul cases (grid semantics == rust tile loops)
+    for m in (4, 8, 12):
+        for tile in (4, 8):
+            M, K, N = (int(v) for v in rng.integers(1, 20, size=3))
+            a = rng.normal(size=(M, K)).astype(np.float32)
+            b = rng.normal(size=(K, N)).astype(np.float32)
+            c = np.asarray(ref.bfp_matmul_grid(jnp.array(a), jnp.array(b), m, tile))
+            cases.append(
+                {
+                    "kind": "matmul",
+                    "mantissa": m,
+                    "tile": tile,
+                    "m": M,
+                    "k": K,
+                    "n": N,
+                    "a": a.flatten().tolist(),
+                    "b": b.flatten().tolist(),
+                    "c": c.flatten().tolist(),
+                }
+            )
+    os.makedirs(os.path.dirname(out_path), exist_ok=True)
+    with open(out_path, "w") as f:
+        json.dump({"cases": cases}, f)
+    print(f"wrote {len(cases)} fixture cases to {out_path}")
+
+
+if __name__ == "__main__":
+    main()

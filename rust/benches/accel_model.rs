@@ -1,0 +1,46 @@
+//! Bench + table: the §6 hardware evaluation. Prints the area/throughput
+//! table for every MAC format (the 8.5x BFP8-vs-FP16 row, the <10% / <1%
+//! area fractions) and times the cycle-level simulator itself.
+
+mod common;
+
+use common::{bench, header, BenchOpts};
+use hbfp::accel::{size_design, throughput_ratio, AccelConfig, Accelerator, MacFormat};
+use hbfp::util::rng::SplitMix64;
+
+fn main() {
+    let opts = BenchOpts::from_env();
+
+    // The paper table (regenerated, not timed).
+    hbfp::coordinator::repro::throughput();
+    let ratio = throughput_ratio(MacFormat::Bfp { mantissa_bits: 8 }, MacFormat::Fp { m: 11, e: 5 });
+    assert!(ratio > 5.0, "throughput ratio collapsed: {ratio}");
+
+    header("accelerator model micro-benchmarks");
+    bench(&opts, "size_design (all 5 formats)", 5.0, || {
+        for f in [
+            MacFormat::Bfp { mantissa_bits: 8 },
+            MacFormat::Bfp { mantissa_bits: 12 },
+            MacFormat::Bfp { mantissa_bits: 16 },
+            MacFormat::Fp { m: 11, e: 5 },
+            MacFormat::Fp32,
+        ] {
+            std::hint::black_box(size_design(&AccelConfig::stratix_v_like(f)));
+        }
+    });
+
+    let mut rng = SplitMix64::new(0);
+    let (m, k, n) = (128usize, 256usize, 128usize);
+    let a: Vec<f32> = (0..m * k).map(|_| rng.normal()).collect();
+    let b: Vec<f32> = (0..k * n).map(|_| rng.normal()).collect();
+    let mut acc =
+        Accelerator::new(AccelConfig::stratix_v_like(MacFormat::Bfp { mantissa_bits: 8 }));
+    bench(
+        &opts,
+        &format!("cycle-sim gemm {m}x{k}x{n} (bfp8)"),
+        (2 * m * k * n) as f64,
+        || {
+            std::hint::black_box(acc.gemm(&a, &b, m, k, n, 8).unwrap());
+        },
+    );
+}

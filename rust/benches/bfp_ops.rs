@@ -1,0 +1,102 @@
+//! Bench: software BFP library hot paths — quantization (the FP→BFP
+//! converter) and the integer-MAC matmul vs the FP32 baseline. These are
+//! the §Perf targets for the rust BFP substrate (EXPERIMENTS.md §Perf L3).
+
+mod common;
+
+use common::{bench, header, BenchOpts};
+use hbfp::bfp::{bfp_matmul, fp32_matmul, BfpTensor, Rounding, TileSize};
+use hbfp::util::rng::{SplitMix64, Xorshift32};
+
+fn randv(n: usize, seed: u64) -> Vec<f32> {
+    let mut rng = SplitMix64::new(seed);
+    (0..n).map(|_| rng.normal()).collect()
+}
+
+fn main() {
+    let opts = BenchOpts::from_env();
+
+    header("BFP quantization (FP->BFP converter)");
+    for &(n, m, tile) in &[
+        (256 * 256usize, 8u32, 24usize),
+        (256 * 256, 12, 24),
+        (256 * 256, 8, 64),
+        (1024 * 1024, 8, 24),
+    ] {
+        let rows = (n as f64).sqrt() as usize;
+        let data = randv(rows * rows, 1);
+        bench(
+            &opts,
+            &format!("quantize {rows}x{rows} m={m} t={tile}"),
+            (rows * rows) as f64,
+            || {
+                let t = BfpTensor::from_f32(
+                    &data,
+                    rows,
+                    rows,
+                    m,
+                    TileSize::Edge(tile),
+                    &mut Rounding::NearestEven,
+                )
+                .unwrap();
+                std::hint::black_box(&t);
+            },
+        );
+    }
+
+    header("BFP quantization, stochastic rounding (hardware converter)");
+    let data = randv(256 * 256, 2);
+    let mut rng = Xorshift32::new(7);
+    bench(&opts, "quantize 256x256 m=8 t=24 stochastic", (256 * 256) as f64, || {
+        let t = BfpTensor::from_f32(
+            &data,
+            256,
+            256,
+            8,
+            TileSize::Edge(24),
+            &mut Rounding::Stochastic(&mut rng),
+        )
+        .unwrap();
+        std::hint::black_box(&t);
+    });
+
+    header("matmul: integer-MAC BFP vs FP32 baseline (256x256x256)");
+    let (m, k, n) = (256usize, 256usize, 256usize);
+    let a = randv(m * k, 3);
+    let b = randv(k * n, 4);
+    let flops = (2 * m * k * n) as f64;
+    bench(&opts, "fp32_matmul", flops, || {
+        std::hint::black_box(fp32_matmul(&a, &b, m, k, n));
+    });
+    for &(bits, tile) in &[(8u32, 24usize), (8, 64), (12, 24), (16, 24)] {
+        let qa =
+            BfpTensor::from_f32(&a, m, k, bits, TileSize::Edge(tile), &mut Rounding::NearestEven)
+                .unwrap();
+        let qb =
+            BfpTensor::from_f32(&b, k, n, bits, TileSize::Edge(tile), &mut Rounding::NearestEven)
+                .unwrap();
+        bench(&opts, &format!("bfp_matmul m={bits} t={tile} (blocked int MAC)"), flops, || {
+            std::hint::black_box(bfp_matmul(&qa, &qb).unwrap());
+        });
+        if bits == 8 {
+            // §Perf before/after: the pre-optimization j-innermost kernel
+            bench(&opts, &format!("bfp_matmul m={bits} t={tile} (naive, before)"), flops, || {
+                std::hint::black_box(hbfp::bfp::bfp_matmul_naive(&qa, &qb).unwrap());
+            });
+        }
+    }
+
+    header("wide weight storage: narrow_view (16 -> 8 bits)");
+    let w = BfpTensor::from_f32(
+        &randv(512 * 512, 5),
+        512,
+        512,
+        16,
+        TileSize::Edge(24),
+        &mut Rounding::NearestEven,
+    )
+    .unwrap();
+    bench(&opts, "narrow_view 512x512 16->8", (512 * 512) as f64, || {
+        std::hint::black_box(w.narrow_view(8, &mut Rounding::NearestEven).unwrap());
+    });
+}

@@ -1,0 +1,86 @@
+//! Shared mini bench harness (criterion is not in the vendored crate set):
+//! warmup + timed reps, median/p10/p90 reporting, ops/sec helpers.
+
+use std::time::Instant;
+
+pub struct BenchOpts {
+    pub reps: usize,
+    pub warmup: usize,
+}
+
+impl BenchOpts {
+    pub fn from_env() -> BenchOpts {
+        // `cargo bench -- --quick` (or HBFP_BENCH_QUICK=1) for smoke runs
+        let quick = std::env::args().any(|a| a == "--quick")
+            || std::env::var("HBFP_BENCH_QUICK").is_ok();
+        if quick {
+            BenchOpts { reps: 3, warmup: 1 }
+        } else {
+            BenchOpts { reps: 15, warmup: 3 }
+        }
+    }
+}
+
+pub struct BenchResult {
+    pub name: String,
+    pub median_secs: f64,
+    pub p10_secs: f64,
+    pub p90_secs: f64,
+}
+
+/// Run `f` under the harness and print one table row. Returns the median.
+pub fn bench<F: FnMut()>(opts: &BenchOpts, name: &str, work_items: f64, mut f: F) -> BenchResult {
+    for _ in 0..opts.warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(opts.reps);
+    for _ in 0..opts.reps {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let q = |p: f64| samples[((samples.len() - 1) as f64 * p).round() as usize];
+    let median = q(0.5);
+    let throughput = if work_items > 0.0 {
+        format!("{:>14}", human_rate(work_items / median))
+    } else {
+        " ".repeat(14)
+    };
+    println!(
+        "{name:<44} {:>10} {:>10} {:>10} {throughput}",
+        human_time(q(0.5)),
+        human_time(q(0.1)),
+        human_time(q(0.9)),
+    );
+    BenchResult { name: name.to_string(), median_secs: median, p10_secs: q(0.1), p90_secs: q(0.9) }
+}
+
+pub fn header(title: &str) {
+    println!("\n== {title} ==");
+    println!("{:<44} {:>10} {:>10} {:>10} {:>14}", "benchmark", "median", "p10", "p90", "rate");
+}
+
+pub fn human_time(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1}ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.1}us", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2}ms", s * 1e3)
+    } else {
+        format!("{s:.2}s")
+    }
+}
+
+pub fn human_rate(r: f64) -> String {
+    if r > 1e9 {
+        format!("{:.2}G/s", r / 1e9)
+    } else if r > 1e6 {
+        format!("{:.2}M/s", r / 1e6)
+    } else if r > 1e3 {
+        format!("{:.2}K/s", r / 1e3)
+    } else {
+        format!("{r:.1}/s")
+    }
+}

@@ -1,0 +1,41 @@
+//! Bench: data pipeline — dataset generation and batch assembly rates.
+//! Batch assembly must comfortably outrun the training step (~100ms) or
+//! the prefetcher becomes the bottleneck.
+
+mod common;
+
+use common::{bench, header, BenchOpts};
+use hbfp::data::{ImageDataset, ImageGenConfig, TextDataset};
+use hbfp::util::rng::SplitMix64;
+
+fn main() {
+    let opts = BenchOpts::from_env();
+
+    header("dataset generation (once per run; amortized)");
+    bench(&opts, "ImageDataset 4096+1024 x 16x16x3", 5120.0, || {
+        std::hint::black_box(ImageDataset::generate(
+            16,
+            3,
+            20,
+            1,
+            ImageGenConfig::default(),
+        ));
+    });
+    bench(&opts, "TextDataset 60k+12k chars (order-2 markov)", 72_000.0, || {
+        std::hint::black_box(TextDataset::generate(32, 48, 1, 60_000, 12_000));
+    });
+
+    header("batch assembly (per training step)");
+    let img = ImageDataset::generate(16, 3, 20, 1, ImageGenConfig::default());
+    let mut rng = SplitMix64::new(2);
+    bench(&opts, "image train_batch(32) + flip aug", 32.0, || {
+        std::hint::black_box(img.train_batch(32, &mut rng));
+    });
+    let txt = TextDataset::generate(32, 48, 1, 60_000, 12_000);
+    bench(&opts, "text train_batch(32) windows", 32.0, || {
+        std::hint::black_box(txt.train_batch(32, &mut rng));
+    });
+    bench(&opts, "image val_batches(32) full epoch", 1024.0, || {
+        std::hint::black_box(img.val_batches(32));
+    });
+}

@@ -1,0 +1,80 @@
+//! Bench: the L3 hot path — train-step latency per numeric config through
+//! the full PJRT runtime (compile once, then timed steps), plus the
+//! literal<->host state round-trip overhead the tuple-root workaround
+//! costs (see runtime/engine.rs module docs).
+//!
+//! Requires `make artifacts`; skips cleanly otherwise.
+
+mod common;
+
+use std::path::Path;
+use std::sync::Arc;
+
+use common::{bench, header, BenchOpts};
+use hbfp::runtime::{Engine, HostTensor, Manifest, Role};
+
+fn main() {
+    let opts = BenchOpts::from_env();
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let manifest = match Manifest::load(&dir) {
+        Ok(m) => Arc::new(m),
+        Err(e) => {
+            eprintln!("SKIP runtime_step bench: {e:#} — run `make artifacts`");
+            return;
+        }
+    };
+    let engine = Engine::new().unwrap();
+
+    header("train-step latency by numeric config (batch 32)");
+    for combo in [
+        "mlp-cifar10like-fp32",
+        "mlp-cifar10like-hbfpp8_16_t24",
+        "resnet_mini-cifar100like-fp32",
+        "resnet_mini-cifar100like-hbfp8_16_t24",
+        "lstm-ptblike-fp32",
+        "lstm-ptblike-hbfp8_16_t24",
+    ] {
+        let (Ok(train_art), Ok(init_art)) =
+            (manifest.artifact(combo, Role::Train), manifest.artifact(combo, Role::Init))
+        else {
+            eprintln!("  (skipping {combo}: not in manifest)");
+            continue;
+        };
+        let train = engine.load(train_art).unwrap();
+        let init = engine.load(init_art).unwrap();
+        let mut state = init.run_host(&[HostTensor::scalar_i32(0)]).unwrap();
+        let xspec = &train_art.inputs[train_art.state_len];
+        let yspec = &train_art.inputs[train_art.state_len + 1];
+        let xe: usize = xspec.shape.iter().product();
+        let ye: usize = yspec.shape.iter().product();
+        let x = match xspec.dtype {
+            hbfp::runtime::DType::F32 => HostTensor::F32(vec![0.3; xe], xspec.shape.clone()),
+            _ => HostTensor::I32(vec![1; xe], xspec.shape.clone()),
+        };
+        let y = HostTensor::I32(vec![1; ye], yspec.shape.clone());
+        let xb = x.to_literal().unwrap();
+        let yb = y.to_literal().unwrap();
+        let lrb = HostTensor::scalar_f32(0.01).to_literal().unwrap();
+        bench(&opts, combo, 32.0, || {
+            let mut args: Vec<&xla::Literal> = state.iter().collect();
+            args.push(&xb);
+            args.push(&yb);
+            args.push(&lrb);
+            let mut out = train.run(&args).unwrap();
+            out.pop();
+            out.pop();
+            state = out;
+        });
+    }
+
+    header("state round-trip overhead (tuple-root workaround)");
+    let art = manifest.artifact("resnet_mini-cifar100like-fp32", Role::Init).unwrap();
+    let init = engine.load(art).unwrap();
+    let state = init.run_host(&[HostTensor::scalar_i32(0)]).unwrap();
+    let total_elems: usize = art.outputs.iter().map(|s| s.elems()).sum();
+    bench(&opts, "fetch full state to host (f32)", total_elems as f64, || {
+        for lit in &state {
+            std::hint::black_box(lit.to_vec::<f32>().unwrap());
+        }
+    });
+}

@@ -1,0 +1,233 @@
+//! Accelerator area/throughput estimator — the §5.3/§6 hardware evaluation.
+//!
+//! Models the Figure-2 accelerator: a square systolic MatMul array of MAC
+//! lanes in the chosen dot-product format, an activation/loss unit in
+//! narrow FP (the paper uses 8-bit mantissa + 8-bit exponent floats), and
+//! the FP→BFP / BFP→FP converter units. Given a silicon budget, it sizes
+//! the array to fill the budget and reports throughput + area fractions —
+//! reproducing the paper's numbers: 1 TOp/s at 8-bit on a Stratix-V-class
+//! budget @ 200MHz, activation unit < 10%, converters < 1%, and BFP8
+//! ~8.5x the throughput of the FP16 variant.
+
+use crate::hw::{self, UnitCost};
+
+/// Dot-product arithmetic of the MatMul array.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum MacFormat {
+    /// BFP: int multipliers at the mantissa width + fixed accumulators.
+    Bfp { mantissa_bits: u32 },
+    /// FP MACs (e.g. FP16 mult + FP16 add) — the paper's comparison point.
+    Fp { m: u32, e: u32 },
+    /// FP32 — the software baseline's hardware equivalent.
+    Fp32,
+}
+
+impl MacFormat {
+    /// Cost of one MAC lane.
+    pub fn mac_cost(&self, acc_bits: u32) -> UnitCost {
+        match *self {
+            MacFormat::Bfp { mantissa_bits } => hw::bfp_mac(mantissa_bits, acc_bits),
+            MacFormat::Fp { m, e } => hw::fp_mac(m, e, m, e),
+            MacFormat::Fp32 => hw::fp_mac(24, 8, 24, 8),
+        }
+    }
+
+    pub fn name(&self) -> String {
+        match *self {
+            MacFormat::Bfp { mantissa_bits } => format!("bfp{mantissa_bits}"),
+            MacFormat::Fp { m, e } => format!("fp{}(m{m}e{e})", m + e),
+            MacFormat::Fp32 => "fp32".to_string(),
+        }
+    }
+}
+
+/// Design parameters of the Figure-2 accelerator.
+#[derive(Debug, Clone, Copy)]
+pub struct AccelConfig {
+    pub format: MacFormat,
+    /// Silicon budget in um^2 (45nm equivalents). The default budget is
+    /// calibrated so a BFP8 design hits the paper's 1 TOp/s at 200MHz.
+    pub budget_um2: f64,
+    pub clock_hz: f64,
+    /// Accumulator width for BFP arrays (2m + log2 of max dot length).
+    pub acc_bits: u32,
+    /// Activation-unit throughput match: one activation lane per MatMul
+    /// output column (the paper sizes them to avoid backpressure).
+    pub act_mantissa: u32,
+    pub act_exponent: u32,
+}
+
+impl AccelConfig {
+    /// Budget calibrated to the paper's prototype scale: BFP8 @ 200 MHz
+    /// => ~1 TOp/s (2500 MACs -> 50x50 array).
+    pub fn stratix_v_like(format: MacFormat) -> AccelConfig {
+        AccelConfig {
+            format,
+            budget_um2: 1.25e6,
+            clock_hz: 200e6,
+            acc_bits: 24,
+            act_mantissa: 8,
+            act_exponent: 8,
+        }
+    }
+}
+
+/// Sized design + its reported metrics.
+#[derive(Debug, Clone)]
+pub struct AreaReport {
+    pub config_name: String,
+    /// Systolic array edge (array is edge x edge MAC lanes).
+    pub array_edge: usize,
+    pub n_macs: usize,
+    pub mac_area_um2: f64,
+    pub act_area_um2: f64,
+    pub conv_area_um2: f64,
+    pub total_area_um2: f64,
+    /// Fraction of total area per component.
+    pub mac_frac: f64,
+    pub act_frac: f64,
+    pub conv_frac: f64,
+    /// Peak throughput in ops/s (1 MAC = 2 ops, the convention the paper's
+    /// "1 TOp/s" uses).
+    pub peak_ops: f64,
+    pub energy_per_mac_pj: f64,
+}
+
+/// Size the array for the budget and report area/throughput.
+///
+/// Component model (Figure 2):
+/// - MatMul unit: edge^2 MAC lanes.
+/// - Activation/loss unit: `edge` lanes of narrow-FP mult+add (sized to the
+///   MatMul output width so there is no backpressure) plus weight-update
+///   datapath, also in FP.
+/// - Converters: FP→BFP needs a comparator tree + shifter per input lane
+///   (2*edge lanes), BFP→FP a normalizer per output lane; both are priced
+///   as an int adder + small shifter per lane — they amortize over the
+///   whole array, which is why they land under 1%.
+pub fn size_design(cfg: &AccelConfig) -> AreaReport {
+    let mac = cfg.format.mac_cost(cfg.acc_bits);
+    // activation lane: narrow-FP multiply + add + nonlinearity LUT (~priced
+    // as one more add)
+    let act_lane = {
+        let m = hw::fp_mult(cfg.act_mantissa, cfg.act_exponent);
+        let a = hw::fp_add(cfg.act_mantissa, cfg.act_exponent);
+        UnitCost { area_um2: m.area_um2 + 2.0 * a.area_um2, energy_pj: m.energy_pj + 2.0 * a.energy_pj }
+    };
+    // converter lane: an 8-bit max-exponent comparator + an 8-bit barrel
+    // shifter's worth of logic (priced as two 8-bit adders) — the mantissa
+    // realignment hardware Eq. 2 amortizes over the reduction
+    let conv_lane = {
+        let b = hw::int_add(8);
+        UnitCost { area_um2: 2.0 * b.area_um2, energy_pj: 2.0 * b.energy_pj }
+    };
+
+    // Output-stationary arrays drain edge^2 results every ~K cycles, so the
+    // activation unit needs ~edge/2 lanes to match the MatMul output width
+    // (the paper sizes them "to avoid backpressure"); the converters need
+    // 2*edge input lanes + edge/2 output lanes ~= 3*edge lanes.
+    // Solve for the largest edge fitting the budget:
+    //   edge^2 * mac + (edge/2) * act + 3*edge * conv <= budget
+    let mut edge = 1usize;
+    loop {
+        let e = (edge + 1) as f64;
+        let total =
+            e * e * mac.area_um2 + e / 2.0 * act_lane.area_um2 + 3.0 * e * conv_lane.area_um2;
+        if total > cfg.budget_um2 {
+            break;
+        }
+        edge += 1;
+    }
+    let e = edge as f64;
+    let mac_area = e * e * mac.area_um2;
+    let act_area = e / 2.0 * act_lane.area_um2;
+    let conv_area = 3.0 * e * conv_lane.area_um2;
+    let total = mac_area + act_area + conv_area;
+    AreaReport {
+        config_name: cfg.format.name(),
+        array_edge: edge,
+        n_macs: edge * edge,
+        mac_area_um2: mac_area,
+        act_area_um2: act_area,
+        conv_area_um2: conv_area,
+        total_area_um2: total,
+        mac_frac: mac_area / total,
+        act_frac: act_area / total,
+        conv_frac: conv_area / total,
+        peak_ops: 2.0 * (edge * edge) as f64 * cfg.clock_hz,
+        energy_per_mac_pj: mac.energy_pj,
+    }
+}
+
+/// The paper's headline hardware comparison: throughput of `a` relative to
+/// `b` on the same budget.
+pub fn throughput_ratio(a: MacFormat, b: MacFormat) -> f64 {
+    let ra = size_design(&AccelConfig::stratix_v_like(a));
+    let rb = size_design(&AccelConfig::stratix_v_like(b));
+    ra.peak_ops / rb.peak_ops
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bfp8_hits_paper_scale() {
+        // ~1 TOp/s at 200MHz on the calibrated budget (§6: "maximum
+        // throughput of 1 TOp/s using 8-bit ... at 200 MHz").
+        let r = size_design(&AccelConfig::stratix_v_like(MacFormat::Bfp { mantissa_bits: 8 }));
+        assert!(
+            r.peak_ops > 0.8e12 && r.peak_ops < 1.3e12,
+            "peak {:.2} TOp/s",
+            r.peak_ops / 1e12
+        );
+    }
+
+    #[test]
+    fn activation_unit_under_10_percent() {
+        let r = size_design(&AccelConfig::stratix_v_like(MacFormat::Bfp { mantissa_bits: 8 }));
+        assert!(r.act_frac < 0.10, "act frac {}", r.act_frac);
+        assert!(r.act_frac > 0.001);
+    }
+
+    #[test]
+    fn converters_under_1_percent() {
+        let r = size_design(&AccelConfig::stratix_v_like(MacFormat::Bfp { mantissa_bits: 8 }));
+        assert!(r.conv_frac < 0.01, "conv frac {}", r.conv_frac);
+    }
+
+    #[test]
+    fn bfp8_vs_fp16_throughput_ratio_near_8_5() {
+        let ratio =
+            throughput_ratio(MacFormat::Bfp { mantissa_bits: 8 }, MacFormat::Fp { m: 11, e: 5 });
+        assert!(
+            (6.5..11.0).contains(&ratio),
+            "throughput ratio {ratio} out of the paper's ballpark (8.5x)"
+        );
+    }
+
+    #[test]
+    fn wider_mantissas_cost_throughput() {
+        let t8 = size_design(&AccelConfig::stratix_v_like(MacFormat::Bfp { mantissa_bits: 8 }))
+            .peak_ops;
+        let t12 = size_design(&AccelConfig::stratix_v_like(MacFormat::Bfp { mantissa_bits: 12 }))
+            .peak_ops;
+        let t16 = size_design(&AccelConfig::stratix_v_like(MacFormat::Bfp { mantissa_bits: 16 }))
+            .peak_ops;
+        assert!(t8 > t12 && t12 > t16);
+    }
+
+    #[test]
+    fn fp32_is_the_slowest() {
+        let t_fp32 = size_design(&AccelConfig::stratix_v_like(MacFormat::Fp32)).peak_ops;
+        let t_fp16 =
+            size_design(&AccelConfig::stratix_v_like(MacFormat::Fp { m: 11, e: 5 })).peak_ops;
+        assert!(t_fp16 > 2.0 * t_fp32);
+    }
+
+    #[test]
+    fn area_fractions_sum_to_one() {
+        let r = size_design(&AccelConfig::stratix_v_like(MacFormat::Bfp { mantissa_bits: 8 }));
+        assert!((r.mac_frac + r.act_frac + r.conv_frac - 1.0).abs() < 1e-9);
+        assert!(r.total_area_um2 <= 1.25e6 * 1.001);
+    }
+}

@@ -1,0 +1,15 @@
+//! Accelerator model (the paper's §5.3 FPGA prototype, Figure 2):
+//! area/throughput estimation (`area`) + a cycle-level functional
+//! simulator (`sim`) built on the software BFP library.
+//!
+//! Reproduces the hardware numbers the paper reports: 1 TOp/s for BFP8 at
+//! 200 MHz on a Stratix-V-class budget, activation units < 10% of area,
+//! converters < 1%, and ~8.5x the throughput of the FP16 variant.
+
+pub mod area;
+pub mod sim;
+pub mod traffic;
+
+pub use area::{size_design, throughput_ratio, AccelConfig, AreaReport, MacFormat};
+pub use sim::{Accelerator, GemmStats};
+pub use traffic::{bandwidth_ratio, step_traffic, FormatBits, LayerShape, TrafficReport};

@@ -1,0 +1,324 @@
+//! BFP matrix multiplication with integer MACs + FP32 tile accumulation —
+//! the software model of the paper's MatMul unit (Figure 2).
+//!
+//! Per (t x t) tile pair: the mantissa dot products run entirely in integer
+//! arithmetic (`i64` accumulators — the "wide accumulators present in the
+//! MatMul unit"); each tile-partial is scaled by `2^(e_a + e_b)` once and
+//! added to the FP32 output accumulator. That is exactly Equation (2) plus
+//! the §4.2 tiling rule: "tile multiplications are performed in fixed
+//! point, and their results are accumulated in floating point arithmetic".
+
+use anyhow::{anyhow, Result};
+
+use super::quant::exp2i;
+use super::tensor::{BfpTensor, TileSize};
+
+/// C = A · B over BFP tensors; returns row-major f32 (the BFP→FP unit
+/// output). Requires matching tile configurations so tile boundaries align
+/// on the contraction dimension.
+pub fn bfp_matmul(a: &BfpTensor, b: &BfpTensor) -> Result<Vec<f32>> {
+    if a.cols != b.rows {
+        return Err(anyhow!("contraction mismatch: {}x{} · {}x{}", a.rows, a.cols, b.rows, b.cols));
+    }
+    if a.tile != b.tile {
+        return Err(anyhow!("tile mismatch: {:?} vs {:?}", a.tile, b.tile));
+    }
+    let (m, k, n) = (a.rows, a.cols, b.cols);
+    let ma = a.mantissa_bits as i32;
+    let mb = b.mantissa_bits as i32;
+    let t = match a.tile {
+        TileSize::Whole => k.max(1),
+        TileSize::Edge(t) => t,
+    };
+    let mut out = vec![0.0f32; m * n];
+    // Tile loops: (i-tile, j-tile, k-tile); integer MAC inside. The inner
+    // kernel accumulates a row of i64 partials while walking B row-major
+    // (contiguous loads) — §Perf L3: ~4x over the naive j-innermost walk
+    // (see `cargo bench bfp_ops` naive-vs-blocked rows).
+    let mut scratch = vec![0i64; t.min(n) * t.min(m).max(1)];
+    let mut i0 = 0;
+    while i0 < m {
+        let i1 = (i0 + t).min(m);
+        let mut j0 = 0;
+        while j0 < n {
+            let j1 = (j0 + t).min(n);
+            let tj = j1 - j0;
+            let mut k0 = 0;
+            while k0 < k {
+                let k1 = (k0 + t).min(k);
+                // Shared exponents are constant across the tile pair.
+                let ea = a.exponent_at(i0, k0);
+                let eb = b.exponent_at(k0, j0);
+                // scale = 2^(ea - (ma-1)) * 2^(eb - (mb-1)), applied once
+                // per tile-partial (the FP realignment the paper amortizes
+                // over 2N fixed-point ops).
+                let scale = exp2i(ea - (ma - 1)) * exp2i(eb - (mb - 1));
+                let ti = i1 - i0;
+                let acc = &mut scratch[..ti * tj];
+                acc.fill(0);
+                for i in i0..i1 {
+                    let arow = &a.mantissas[i * k + k0..i * k + k1];
+                    let accrow = &mut acc[(i - i0) * tj..(i - i0 + 1) * tj];
+                    for (dk, &qa) in arow.iter().enumerate() {
+                        if qa == 0 {
+                            continue;
+                        }
+                        let qa64 = qa as i64;
+                        let brow = &b.mantissas[(k0 + dk) * n + j0..(k0 + dk) * n + j1];
+                        for (aj, &qb) in accrow.iter_mut().zip(brow) {
+                            *aj += qa64 * qb as i64;
+                        }
+                    }
+                }
+                for i in i0..i1 {
+                    let accrow = &acc[(i - i0) * tj..(i - i0 + 1) * tj];
+                    let orow = &mut out[i * n + j0..i * n + j1];
+                    for (o, &v) in orow.iter_mut().zip(accrow) {
+                        *o += v as f32 * scale;
+                    }
+                }
+                k0 = k1;
+            }
+            j0 = j1;
+        }
+        i0 = i1;
+    }
+    Ok(out)
+}
+
+/// The pre-optimization j-innermost kernel, kept for the §Perf
+/// before/after bench and as a differential-testing partner (must agree
+/// with `bfp_matmul` bit-for-bit — both sum the same i64 partials).
+pub fn bfp_matmul_naive(a: &BfpTensor, b: &BfpTensor) -> Result<Vec<f32>> {
+    if a.cols != b.rows {
+        return Err(anyhow!("contraction mismatch: {}x{} · {}x{}", a.rows, a.cols, b.rows, b.cols));
+    }
+    if a.tile != b.tile {
+        return Err(anyhow!("tile mismatch: {:?} vs {:?}", a.tile, b.tile));
+    }
+    let (m, k, n) = (a.rows, a.cols, b.cols);
+    let ma = a.mantissa_bits as i32;
+    let mb = b.mantissa_bits as i32;
+    let t = match a.tile {
+        TileSize::Whole => k.max(1),
+        TileSize::Edge(t) => t,
+    };
+    let mut out = vec![0.0f32; m * n];
+    let mut i0 = 0;
+    while i0 < m {
+        let i1 = (i0 + t).min(m);
+        let mut j0 = 0;
+        while j0 < n {
+            let j1 = (j0 + t).min(n);
+            let mut k0 = 0;
+            while k0 < k {
+                let k1 = (k0 + t).min(k);
+                let ea = a.exponent_at(i0, k0);
+                let eb = b.exponent_at(k0, j0);
+                let scale = exp2i(ea - (ma - 1)) * exp2i(eb - (mb - 1));
+                for i in i0..i1 {
+                    let arow = &a.mantissas[i * k + k0..i * k + k1];
+                    for j in j0..j1 {
+                        let mut acc: i64 = 0;
+                        for (dk, &qa) in arow.iter().enumerate() {
+                            let qb = b.mantissas[(k0 + dk) * n + j];
+                            acc += qa as i64 * qb as i64;
+                        }
+                        out[i * n + j] += acc as f32 * scale;
+                    }
+                }
+                k0 = k1;
+            }
+            j0 = j1;
+        }
+        i0 = i1;
+    }
+    Ok(out)
+}
+
+/// Reference FP32 matmul (the baseline the harnesses compare against).
+pub fn fp32_matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; m * n];
+    for i in 0..m {
+        for kk in 0..k {
+            let av = a[i * k + kk];
+            if av == 0.0 {
+                continue;
+            }
+            let brow = &b[kk * n..kk * n + n];
+            let orow = &mut out[i * n..i * n + n];
+            for j in 0..n {
+                orow[j] += av * brow[j];
+            }
+        }
+    }
+    out
+}
+
+/// Convenience: quantize f32 operands and multiply in BFP.
+pub fn hbfp_matmul_f32(
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    mantissa_bits: u32,
+    tile: TileSize,
+) -> Result<Vec<f32>> {
+    use super::quant::Rounding;
+    let qa = BfpTensor::from_f32(a, m, k, mantissa_bits, tile, &mut Rounding::NearestEven)?;
+    let qb = BfpTensor::from_f32(b, k, n, mantissa_bits, tile, &mut Rounding::NearestEven)?;
+    bfp_matmul(&qa, &qb)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::prop::{check, Gen};
+    use crate::util::rng::SplitMix64;
+
+    fn rand_mat(rng: &mut SplitMix64, len: usize, scale: f32) -> Vec<f32> {
+        (0..len).map(|_| rng.normal() * scale).collect()
+    }
+
+    #[test]
+    fn integer_mac_equals_dequantized_fp_product() {
+        // The integer-MAC path must equal multiplying the dequantized
+        // tensors in f64 then rounding — i.e. the mantissa math is exact.
+        check("mac exactness", 60, |g: &mut Gen| {
+            let (m, k, n) = (g.int(1, 20), g.int(1, 24), g.int(1, 20));
+            let a = g.vec_f32(m * k, 2);
+            let b = g.vec_f32(k * n, 2);
+            let tile = *g.pick(&[TileSize::Whole, TileSize::Edge(8)]);
+            let mb = *g.pick(&[4u32, 8]);
+            use super::super::quant::Rounding;
+            let qa = BfpTensor::from_f32(&a, m, k, mb, tile, &mut Rounding::NearestEven).unwrap();
+            let qb = BfpTensor::from_f32(&b, k, n, mb, tile, &mut Rounding::NearestEven).unwrap();
+            let got = bfp_matmul(&qa, &qb).unwrap();
+            let da = qa.to_f32();
+            let db = qb.to_f32();
+            // f64 product of dequantized values (exact for these widths)
+            for i in 0..m {
+                for j in 0..n {
+                    let mut acc = 0.0f64;
+                    for kk in 0..k {
+                        acc += da[i * k + kk] as f64 * db[kk * n + j] as f64;
+                    }
+                    let gotv = got[i * n + j] as f64;
+                    let tol = acc.abs().max(1.0) * 1e-5;
+                    prop_assert!((gotv - acc).abs() <= tol, "({i},{j}): {gotv} vs {acc}");
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn error_decays_with_mantissa_width() {
+        let mut rng = SplitMix64::new(7);
+        let (m, k, n) = (32, 48, 32);
+        let a = rand_mat(&mut rng, m * k, 1.0);
+        let b = rand_mat(&mut rng, k * n, 1.0);
+        let exact = fp32_matmul(&a, &b, m, k, n);
+        let amax = exact.iter().fold(0.0f32, |s, &x| s.max(x.abs()));
+        let mut last = f32::INFINITY;
+        for &bits in &[4u32, 8, 12, 16] {
+            let got = hbfp_matmul_f32(&a, &b, m, k, n, bits, TileSize::Edge(16)).unwrap();
+            let err = got
+                .iter()
+                .zip(&exact)
+                .map(|(x, y)| (x - y).abs())
+                .fold(0.0f32, f32::max)
+                / amax;
+            assert!(err < last, "error should decay: {err} !< {last} at m={bits}");
+            last = err;
+        }
+        assert!(last < 1e-3, "16-bit error too large: {last}");
+    }
+
+    #[test]
+    fn tiling_beats_whole_tensor_on_mixed_scales() {
+        let mut rng = SplitMix64::new(3);
+        let (m, k, n) = (32, 32, 32);
+        let mut a = rand_mat(&mut rng, m * k, 1.0);
+        for r in 0..16 {
+            for c in 0..k {
+                a[r * k + c] *= 1e-3; // two exponent regimes
+            }
+        }
+        let b = rand_mat(&mut rng, k * n, 1.0);
+        let exact = fp32_matmul(&a, &b, m, k, n);
+        let err = |got: &[f32]| {
+            got.iter().zip(&exact).map(|(x, y)| (x - y).abs()).sum::<f32>() / exact.len() as f32
+        };
+        let tiled = hbfp_matmul_f32(&a, &b, m, k, n, 8, TileSize::Edge(16)).unwrap();
+        let whole = hbfp_matmul_f32(&a, &b, m, k, n, 8, TileSize::Whole).unwrap();
+        assert!(err(&tiled) < err(&whole), "{} !< {}", err(&tiled), err(&whole));
+    }
+
+    #[test]
+    fn mismatched_shapes_rejected() {
+        use super::super::quant::Rounding;
+        let a = BfpTensor::from_f32(&[1.0; 6], 2, 3, 8, TileSize::Whole, &mut Rounding::NearestEven)
+            .unwrap();
+        let b = BfpTensor::from_f32(&[1.0; 8], 2, 4, 8, TileSize::Whole, &mut Rounding::NearestEven)
+            .unwrap();
+        assert!(bfp_matmul(&a, &b).is_err());
+    }
+
+    #[test]
+    fn mismatched_tiles_rejected() {
+        use super::super::quant::Rounding;
+        let a = BfpTensor::from_f32(&[1.0; 4], 2, 2, 8, TileSize::Whole, &mut Rounding::NearestEven)
+            .unwrap();
+        let b =
+            BfpTensor::from_f32(&[1.0; 4], 2, 2, 8, TileSize::Edge(2), &mut Rounding::NearestEven)
+                .unwrap();
+        assert!(bfp_matmul(&a, &b).is_err());
+    }
+
+    #[test]
+    fn blocked_equals_naive_bitwise() {
+        // Both kernels sum identical i64 partials in identical k order, so
+        // results must be bit-for-bit equal.
+        check("blocked == naive", 60, |g: &mut Gen| {
+            let (m, k, n) = (g.int(1, 40), g.int(1, 40), g.int(1, 40));
+            let a = g.vec_f32(m * k, 3);
+            let b = g.vec_f32(k * n, 3);
+            let tile = *g.pick(&[TileSize::Whole, TileSize::Edge(8), TileSize::Edge(24)]);
+            use super::super::quant::Rounding;
+            let qa = BfpTensor::from_f32(&a, m, k, 8, tile, &mut Rounding::NearestEven).unwrap();
+            let qb = BfpTensor::from_f32(&b, k, n, 8, tile, &mut Rounding::NearestEven).unwrap();
+            let fast = bfp_matmul(&qa, &qb).unwrap();
+            let slow = bfp_matmul_naive(&qa, &qb).unwrap();
+            prop_assert!(fast == slow, "blocked and naive kernels disagree");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn zero_matrices() {
+        let z = hbfp_matmul_f32(&[0.0; 16], &[0.0; 16], 4, 4, 4, 8, TileSize::Edge(2)).unwrap();
+        assert!(z.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn identity_with_powers_of_two_exact() {
+        // diag(2) quantizes exactly; product must equal 2*Q(b) exactly.
+        use super::super::quant::Rounding;
+        let n = 8;
+        let mut a = vec![0.0f32; n * n];
+        for i in 0..n {
+            a[i * n + i] = 2.0;
+        }
+        let mut rng = SplitMix64::new(11);
+        let b = rand_mat(&mut rng, n * n, 1.0);
+        let qb =
+            BfpTensor::from_f32(&b, n, n, 8, TileSize::Edge(4), &mut Rounding::NearestEven).unwrap();
+        let got = hbfp_matmul_f32(&a, &b, n, n, n, 8, TileSize::Edge(4)).unwrap();
+        for (g, q) in got.iter().zip(qb.to_f32().iter()) {
+            assert_eq!(*g, 2.0 * q);
+        }
+    }
+}

@@ -1,0 +1,19 @@
+//! Software BFP arithmetic library — the rust-side implementation of the
+//! paper's numeric format (§4), used by the accelerator model, the
+//! benchmark harnesses, and as the cross-language contract with the
+//! python oracle (fixtures in `tests/bfp_cross.rs`).
+//!
+//! - [`quant`]: shared-exponent selection, RNE + stochastic rounding
+//!   (Xorshift32, §5.3), value-level quantize/dequantize.
+//! - [`tensor`]: tiled BFP tensor storage, wide weight storage (§4.2).
+//! - [`matmul`]: integer-MAC matmul with FP32 tile accumulation (Eq. 2).
+
+pub mod matmul;
+pub mod quant;
+pub mod stats;
+pub mod tensor;
+
+pub use matmul::{bfp_matmul, bfp_matmul_naive, fp32_matmul, hbfp_matmul_f32};
+pub use quant::{block_exponent, dequantize_value, exp2i, quantize_value, Rounding, E_MAX, E_MIN};
+pub use stats::{quant_report, tile_spans, ExponentStats, QuantReport};
+pub use tensor::{BfpTensor, TileSize};

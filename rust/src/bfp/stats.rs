@@ -1,0 +1,213 @@
+//! Quantization analysis tooling — the §4/§4.2 motivation numbers.
+//!
+//! The paper's argument for tiling and for the hybrid split rests on value
+//! distributions: tensors whose values span more binades than the mantissa
+//! can absorb lose their small values ("if the tensors' value
+//! distributions are too wide to be captured by its mantissa bits").
+//! This module quantifies that: per-block exponent spread, quantization
+//! SNR, and the fraction of values flushed to zero — the evidence behind
+//! `examples/quantization_study.rs`.
+
+use super::quant::{block_exponent, frexp_exp};
+use super::tensor::{BfpTensor, TileSize};
+use super::Rounding;
+
+/// Distribution statistics of one tensor's element exponents.
+#[derive(Debug, Clone)]
+pub struct ExponentStats {
+    /// Histogram over element frexp exponents (key = exponent).
+    pub histogram: Vec<(i32, usize)>,
+    pub min: i32,
+    pub max: i32,
+    /// Fraction of exact zeros (excluded from the histogram).
+    pub zero_frac: f64,
+}
+
+impl ExponentStats {
+    pub fn of(xs: &[f32]) -> ExponentStats {
+        let mut map = std::collections::BTreeMap::new();
+        let mut zeros = 0usize;
+        for &x in xs {
+            if x == 0.0 {
+                zeros += 1;
+            } else {
+                *map.entry(frexp_exp(x.abs())).or_insert(0usize) += 1;
+            }
+        }
+        let (min, max) = match (map.keys().next(), map.keys().next_back()) {
+            (Some(&a), Some(&b)) => (a, b),
+            _ => (0, 0),
+        };
+        ExponentStats {
+            histogram: map.into_iter().collect(),
+            min,
+            max,
+            zero_frac: zeros as f64 / xs.len().max(1) as f64,
+        }
+    }
+
+    /// Binade span: how many mantissa bits a single shared exponent would
+    /// need to represent every nonzero value at full precision.
+    pub fn span(&self) -> i32 {
+        self.max - self.min
+    }
+}
+
+/// Quantization quality of a BFP configuration on given data.
+#[derive(Debug, Clone, Copy)]
+pub struct QuantReport {
+    /// Signal-to-noise ratio in dB: 10 log10(E[x^2] / E[(x - Q(x))^2]).
+    pub snr_db: f64,
+    /// Fraction of nonzero inputs that quantized to exactly zero (the
+    /// "small values are lost" failure mode).
+    pub underflow_frac: f64,
+    /// Max |x - Q(x)| over max |x| (worst-case relative distortion).
+    pub max_rel_err: f64,
+}
+
+/// Quantize `data` (rows x cols) at the given mantissa width / tiling and
+/// measure the damage.
+pub fn quant_report(
+    data: &[f32],
+    rows: usize,
+    cols: usize,
+    mantissa_bits: u32,
+    tile: TileSize,
+) -> anyhow::Result<QuantReport> {
+    let t = BfpTensor::from_f32(data, rows, cols, mantissa_bits, tile, &mut Rounding::NearestEven)?;
+    let q = t.to_f32();
+    let mut sig = 0.0f64;
+    let mut noise = 0.0f64;
+    let mut lost = 0usize;
+    let mut nonzero = 0usize;
+    let mut max_err = 0.0f64;
+    let mut max_abs = 0.0f64;
+    for (&x, &y) in data.iter().zip(&q) {
+        sig += (x as f64) * (x as f64);
+        let e = (x - y) as f64;
+        noise += e * e;
+        max_err = max_err.max(e.abs());
+        max_abs = max_abs.max(x.abs() as f64);
+        if x != 0.0 {
+            nonzero += 1;
+            if y == 0.0 {
+                lost += 1;
+            }
+        }
+    }
+    Ok(QuantReport {
+        snr_db: if noise > 0.0 { 10.0 * (sig / noise).log10() } else { f64::INFINITY },
+        underflow_frac: lost as f64 / nonzero.max(1) as f64,
+        max_rel_err: if max_abs > 0.0 { max_err / max_abs } else { 0.0 },
+    })
+}
+
+/// Per-tile exponent spread of a 2-D tensor: for each tile, the span of
+/// element exponents that one shared exponent must cover. Tiling helps
+/// exactly when whole-tensor span >> per-tile spans.
+pub fn tile_spans(data: &[f32], rows: usize, cols: usize, tile: usize) -> Vec<i32> {
+    let mut spans = Vec::new();
+    let mut block = Vec::new();
+    let mut r0 = 0;
+    while r0 < rows {
+        let r1 = (r0 + tile).min(rows);
+        let mut c0 = 0;
+        while c0 < cols {
+            let c1 = (c0 + tile).min(cols);
+            block.clear();
+            for r in r0..r1 {
+                block.extend_from_slice(&data[r * cols + c0..r * cols + c1]);
+            }
+            let nonzero: Vec<f32> = block.iter().copied().filter(|&x| x != 0.0).collect();
+            if nonzero.is_empty() {
+                spans.push(0);
+            } else {
+                let e = block_exponent(&nonzero);
+                let emin =
+                    nonzero.iter().map(|&x| frexp_exp(x.abs())).min().unwrap_or(e);
+                spans.push(e - emin);
+            }
+            c0 = c1;
+        }
+        r0 = r1;
+    }
+    spans
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::SplitMix64;
+
+    fn mixed_scale_matrix(rows: usize, cols: usize) -> Vec<f32> {
+        // top half ~1e-4, bottom half ~1: a >13-binade whole-tensor span
+        let mut rng = SplitMix64::new(1);
+        let mut v = vec![0.0f32; rows * cols];
+        for r in 0..rows {
+            for c in 0..cols {
+                let s = if r < rows / 2 { 1e-4 } else { 1.0 };
+                v[r * cols + c] = rng.normal() * s;
+            }
+        }
+        v
+    }
+
+    #[test]
+    fn exponent_stats_basics() {
+        let st = ExponentStats::of(&[0.0, 1.0, 2.0, 0.25]);
+        assert_eq!(st.zero_frac, 0.25);
+        assert_eq!(st.min, -1); // 0.25 -> frexp exp -1
+        assert_eq!(st.max, 2); // 2.0 -> frexp exp 2
+        assert_eq!(st.span(), 3);
+    }
+
+    #[test]
+    fn snr_improves_with_mantissa_width() {
+        let data = mixed_scale_matrix(32, 32);
+        let mut last = -1.0;
+        for m in [4u32, 8, 12, 16] {
+            let r = quant_report(&data, 32, 32, m, TileSize::Edge(8)).unwrap();
+            assert!(r.snr_db > last, "m={m}: {} !> {last}", r.snr_db);
+            last = r.snr_db;
+        }
+        // ~6 dB per mantissa bit is the theoretical slope; 16-bit on
+        // narrow-span tiles should be extremely clean
+        assert!(last > 60.0, "16-bit SNR {last}");
+    }
+
+    #[test]
+    fn tiling_rescues_mixed_scales() {
+        let data = mixed_scale_matrix(32, 32);
+        let whole = quant_report(&data, 32, 32, 8, TileSize::Whole).unwrap();
+        let tiled = quant_report(&data, 32, 32, 8, TileSize::Edge(16)).unwrap();
+        // whole-tensor exponent flushes the 1e-4 half to zero
+        assert!(whole.underflow_frac > 0.3, "whole underflow {}", whole.underflow_frac);
+        // within-tile gaussian tails still flush a little; the failure mode
+        // under test is the order-of-magnitude difference
+        assert!(tiled.underflow_frac < 0.05, "tiled underflow {}", tiled.underflow_frac);
+        // global SNR is energy-weighted (dominated by the large half), so
+        // it barely moves — the flushed-values fraction above is the
+        // discriminating statistic, SNR just must not regress.
+        assert!(tiled.snr_db >= whole.snr_db - 0.1);
+    }
+
+    #[test]
+    fn tile_spans_reflect_structure() {
+        let data = mixed_scale_matrix(32, 32);
+        let spans16 = tile_spans(&data, 32, 32, 16);
+        let spans_whole = tile_spans(&data, 32, 32, 32);
+        let max16 = *spans16.iter().max().unwrap();
+        let max_whole = *spans_whole.iter().max().unwrap();
+        assert!(max_whole > max16, "{max_whole} !> {max16}");
+        assert!(max_whole >= 12, "mixed scales should span >= 12 binades");
+    }
+
+    #[test]
+    fn uniform_tensor_has_tiny_span() {
+        let v = vec![1.5f32; 64];
+        let st = ExponentStats::of(&v);
+        assert_eq!(st.span(), 0);
+        let r = quant_report(&v, 8, 8, 8, TileSize::Whole).unwrap();
+        assert!(r.underflow_frac == 0.0 && r.max_rel_err < 0.01);
+    }
+}

@@ -1,0 +1,200 @@
+//! Checkpointing: serialize the flat device state (param + momentum + BN
+//! leaves) to a single binary file with a JSON header, restore it into a
+//! fresh run. Format:
+//!
+//! ```text
+//! [u32 magic "HBFC"] [u32 header_len] [header JSON bytes] [raw f32/i32 data...]
+//! ```
+//!
+//! The header pins combo, step, and per-leaf (name, dtype, shape) so a
+//! checkpoint cannot be silently restored into a mismatched artifact.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::runtime::{DType, HostTensor, TensorSpec};
+use crate::util::json::Json;
+
+const MAGIC: u32 = 0x4842_4643; // "HBFC"
+
+pub struct Checkpoint {
+    pub combo: String,
+    pub step: usize,
+    pub leaves: Vec<HostTensor>,
+}
+
+impl Checkpoint {
+    pub fn save(&self, path: &Path, specs: &[TensorSpec]) -> Result<()> {
+        if specs.len() != self.leaves.len() {
+            return Err(anyhow!("{} specs vs {} leaves", specs.len(), self.leaves.len()));
+        }
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let header = Json::obj(vec![
+            ("combo", Json::str(self.combo.clone())),
+            ("step", Json::num(self.step as f64)),
+            (
+                "leaves",
+                Json::Arr(
+                    specs
+                        .iter()
+                        .map(|s| {
+                            Json::obj(vec![
+                                ("name", Json::str(s.name.clone())),
+                                (
+                                    "dtype",
+                                    Json::str(match s.dtype {
+                                        DType::F32 => "f32",
+                                        DType::I32 => "i32",
+                                        DType::U32 => "u32",
+                                    }),
+                                ),
+                                (
+                                    "shape",
+                                    Json::Arr(s.shape.iter().map(|&d| Json::num(d as f64)).collect()),
+                                ),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+        .to_string();
+        let mut f = std::fs::File::create(path).with_context(|| format!("creating {path:?}"))?;
+        f.write_all(&MAGIC.to_le_bytes())?;
+        f.write_all(&(header.len() as u32).to_le_bytes())?;
+        f.write_all(header.as_bytes())?;
+        for leaf in &self.leaves {
+            match leaf {
+                HostTensor::F32(v, _) => {
+                    for x in v {
+                        f.write_all(&x.to_le_bytes())?;
+                    }
+                }
+                HostTensor::I32(v, _) => {
+                    for x in v {
+                        f.write_all(&x.to_le_bytes())?;
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<Checkpoint> {
+        let mut f = std::fs::File::open(path).with_context(|| format!("opening {path:?}"))?;
+        let mut u32buf = [0u8; 4];
+        f.read_exact(&mut u32buf)?;
+        if u32::from_le_bytes(u32buf) != MAGIC {
+            return Err(anyhow!("{path:?} is not an HBFP checkpoint"));
+        }
+        f.read_exact(&mut u32buf)?;
+        let hlen = u32::from_le_bytes(u32buf) as usize;
+        let mut hbuf = vec![0u8; hlen];
+        f.read_exact(&mut hbuf)?;
+        let header = Json::parse(std::str::from_utf8(&hbuf)?)
+            .map_err(|e| anyhow!("checkpoint header: {e}"))?;
+        let combo = header.req("combo")?.as_str().context("combo")?.to_string();
+        let step = header.req("step")?.as_usize().context("step")?;
+        let mut leaves = Vec::new();
+        for l in header.req("leaves")?.as_arr().context("leaves")? {
+            let shape: Vec<usize> = l
+                .req("shape")?
+                .as_arr()
+                .context("shape")?
+                .iter()
+                .map(|d| d.as_usize().unwrap())
+                .collect();
+            let n: usize = shape.iter().product();
+            let mut raw = vec![0u8; n * 4];
+            f.read_exact(&mut raw)?;
+            let dtype = l.req("dtype")?.as_str().context("dtype")?;
+            let leaf = match dtype {
+                "f32" => HostTensor::F32(
+                    raw.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect(),
+                    shape,
+                ),
+                "i32" => HostTensor::I32(
+                    raw.chunks_exact(4).map(|c| i32::from_le_bytes(c.try_into().unwrap())).collect(),
+                    shape,
+                ),
+                _ => return Err(anyhow!("unsupported checkpoint dtype {dtype}")),
+            };
+            leaves.push(leaf);
+        }
+        Ok(Checkpoint { combo, step, leaves })
+    }
+
+    /// Validate against the artifact's state specs before restoring.
+    pub fn check_against(&self, combo: &str, specs: &[TensorSpec]) -> Result<()> {
+        if self.combo != combo {
+            return Err(anyhow!("checkpoint is for {:?}, not {combo:?}", self.combo));
+        }
+        if self.leaves.len() != specs.len() {
+            return Err(anyhow!(
+                "checkpoint has {} leaves, artifact expects {}",
+                self.leaves.len(),
+                specs.len()
+            ));
+        }
+        for (leaf, spec) in self.leaves.iter().zip(specs) {
+            leaf.check(spec)?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn specs() -> Vec<TensorSpec> {
+        vec![
+            TensorSpec { name: "state/w".into(), shape: vec![2, 3], dtype: DType::F32 },
+            TensorSpec { name: "state/y".into(), shape: vec![2], dtype: DType::I32 },
+        ]
+    }
+
+    fn ckpt() -> Checkpoint {
+        Checkpoint {
+            combo: "m-d-fp32".into(),
+            step: 42,
+            leaves: vec![
+                HostTensor::F32(vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.5], vec![2, 3]),
+                HostTensor::I32(vec![-1, 7], vec![2]),
+            ],
+        }
+    }
+
+    #[test]
+    fn roundtrip() {
+        let p = std::env::temp_dir().join("hbfp_ckpt_test.bin");
+        ckpt().save(&p, &specs()).unwrap();
+        let back = Checkpoint::load(&p).unwrap();
+        assert_eq!(back.combo, "m-d-fp32");
+        assert_eq!(back.step, 42);
+        assert_eq!(back.leaves, ckpt().leaves);
+        back.check_against("m-d-fp32", &specs()).unwrap();
+    }
+
+    #[test]
+    fn mismatch_detected() {
+        let p = std::env::temp_dir().join("hbfp_ckpt_test2.bin");
+        ckpt().save(&p, &specs()).unwrap();
+        let back = Checkpoint::load(&p).unwrap();
+        assert!(back.check_against("other", &specs()).is_err());
+        let mut wrong = specs();
+        wrong[0].shape = vec![3, 2];
+        assert!(back.check_against("m-d-fp32", &wrong).is_err());
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let p = std::env::temp_dir().join("hbfp_ckpt_garbage.bin");
+        std::fs::write(&p, b"not a checkpoint").unwrap();
+        assert!(Checkpoint::load(&p).is_err());
+    }
+}

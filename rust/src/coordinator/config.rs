@@ -1,0 +1,190 @@
+//! Experiment configuration: what to train, for how long, with which
+//! learning-rate schedule. Parsed from CLI options and/or JSON files, and
+//! embedded in every result file so runs are self-describing.
+
+use anyhow::{anyhow, Result};
+
+use crate::util::json::Json;
+
+/// Learning-rate schedule. The paper trains with the original papers'
+/// hyperparameters (step decay for the CNNs, constant-ish for the LSTM);
+/// cosine is provided for the ablation harnesses.
+#[derive(Debug, Clone, PartialEq)]
+pub enum LrSchedule {
+    Constant { lr: f32 },
+    /// lr = base * gamma^(number of milestones passed)
+    StepDecay { base: f32, gamma: f32, milestones: Vec<usize> },
+    /// half-cosine from base to floor over total steps
+    Cosine { base: f32, floor: f32, total: usize },
+}
+
+impl LrSchedule {
+    pub fn at(&self, step: usize) -> f32 {
+        match self {
+            LrSchedule::Constant { lr } => *lr,
+            LrSchedule::StepDecay { base, gamma, milestones } => {
+                let k = milestones.iter().filter(|&&m| step >= m).count() as i32;
+                base * gamma.powi(k)
+            }
+            LrSchedule::Cosine { base, floor, total } => {
+                let t = (step as f32 / (*total).max(1) as f32).min(1.0);
+                floor + 0.5 * (base - floor) * (1.0 + (std::f32::consts::PI * t).cos())
+            }
+        }
+    }
+
+    /// Default schedule for a run of `steps`: step decay at 50% and 75%,
+    /// the standard ResNet recipe scaled to the run length.
+    pub fn default_for(steps: usize, base: f32) -> LrSchedule {
+        LrSchedule::StepDecay { base, gamma: 0.1, milestones: vec![steps / 2, steps * 3 / 4] }
+    }
+
+    pub fn to_json(&self) -> Json {
+        match self {
+            LrSchedule::Constant { lr } => {
+                Json::obj(vec![("kind", Json::str("constant")), ("lr", Json::num(*lr))])
+            }
+            LrSchedule::StepDecay { base, gamma, milestones } => Json::obj(vec![
+                ("kind", Json::str("step")),
+                ("base", Json::num(*base)),
+                ("gamma", Json::num(*gamma)),
+                (
+                    "milestones",
+                    Json::Arr(milestones.iter().map(|&m| Json::num(m as f64)).collect()),
+                ),
+            ]),
+            LrSchedule::Cosine { base, floor, total } => Json::obj(vec![
+                ("kind", Json::str("cosine")),
+                ("base", Json::num(*base)),
+                ("floor", Json::num(*floor)),
+                ("total", Json::num(*total as f64)),
+            ]),
+        }
+    }
+}
+
+/// One training run of one combo.
+#[derive(Debug, Clone)]
+pub struct RunConfig {
+    /// `"{model}-{dataset}-{config}"`, must exist in the manifest.
+    pub combo: String,
+    pub steps: usize,
+    pub seed: u64,
+    pub lr: LrSchedule,
+    /// Evaluate every N steps (and always at the end). 0 = only at end.
+    pub eval_every: usize,
+    /// Log train metrics every N steps.
+    pub log_every: usize,
+    /// Optional checkpoint directory.
+    pub checkpoint_dir: Option<std::path::PathBuf>,
+}
+
+impl RunConfig {
+    pub fn new(combo: &str, steps: usize) -> RunConfig {
+        RunConfig {
+            combo: combo.to_string(),
+            steps,
+            seed: 0,
+            lr: LrSchedule::default_for(steps, 0.05),
+            eval_every: 0,
+            log_every: 10,
+            checkpoint_dir: None,
+        }
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    pub fn with_lr(mut self, lr: LrSchedule) -> Self {
+        self.lr = lr;
+        self
+    }
+
+    pub fn with_eval_every(mut self, n: usize) -> Self {
+        self.eval_every = n;
+        self
+    }
+
+    /// Parse the model name back out of the combo.
+    pub fn model(&self) -> &str {
+        self.combo.split('-').next().unwrap_or("")
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("combo", Json::str(self.combo.clone())),
+            ("steps", Json::num(self.steps as f64)),
+            ("seed", Json::num(self.seed as f64)),
+            ("lr", self.lr.to_json()),
+            ("eval_every", Json::num(self.eval_every as f64)),
+        ])
+    }
+}
+
+/// Base learning rate per model family — the "original hyperparameters"
+/// rule (§5.2) scaled to the mini models (tuned on fp32 only, then reused
+/// verbatim for every numeric config, exactly like the paper).
+pub fn default_base_lr(model: &str) -> f32 {
+    match model {
+        "lstm" => 0.5,
+        "mlp" => 0.1,
+        _ => 0.05, // conv nets
+    }
+}
+
+pub fn parse_schedule(s: &str, steps: usize) -> Result<LrSchedule> {
+    // forms: "0.05" | "step:0.05" | "const:0.1" | "cosine:0.05"
+    if let Ok(lr) = s.parse::<f32>() {
+        return Ok(LrSchedule::default_for(steps, lr));
+    }
+    let (kind, val) = s.split_once(':').ok_or_else(|| anyhow!("bad schedule {s:?}"))?;
+    let base: f32 = val.parse().map_err(|_| anyhow!("bad lr in {s:?}"))?;
+    match kind {
+        "const" => Ok(LrSchedule::Constant { lr: base }),
+        "step" => Ok(LrSchedule::default_for(steps, base)),
+        "cosine" => Ok(LrSchedule::Cosine { base, floor: base * 0.01, total: steps }),
+        _ => Err(anyhow!("unknown schedule kind {kind:?}")),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn step_decay() {
+        let s = LrSchedule::StepDecay { base: 0.1, gamma: 0.1, milestones: vec![100, 200] };
+        assert_eq!(s.at(0), 0.1);
+        assert_eq!(s.at(99), 0.1);
+        assert!((s.at(100) - 0.01).abs() < 1e-9);
+        assert!((s.at(250) - 0.001).abs() < 1e-9);
+    }
+
+    #[test]
+    fn cosine_endpoints() {
+        let s = LrSchedule::Cosine { base: 1.0, floor: 0.0, total: 100 };
+        assert!((s.at(0) - 1.0).abs() < 1e-6);
+        assert!(s.at(100) < 1e-6);
+        assert!((s.at(50) - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn parse_forms() {
+        assert!(matches!(parse_schedule("0.05", 100).unwrap(), LrSchedule::StepDecay { .. }));
+        assert!(matches!(parse_schedule("const:0.1", 100).unwrap(), LrSchedule::Constant { .. }));
+        assert!(matches!(parse_schedule("cosine:0.1", 100).unwrap(), LrSchedule::Cosine { .. }));
+        assert!(parse_schedule("bogus", 100).is_err());
+        assert!(parse_schedule("step:x", 100).is_err());
+    }
+
+    #[test]
+    fn config_json_roundtrippable() {
+        let c = RunConfig::new("m-d-fp32", 200).with_seed(7);
+        let j = c.to_json().to_string();
+        let parsed = Json::parse(&j).unwrap();
+        assert_eq!(parsed.get("combo").unwrap().as_str(), Some("m-d-fp32"));
+        assert_eq!(parsed.get("steps").unwrap().as_usize(), Some(200));
+    }
+}

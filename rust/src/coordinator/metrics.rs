@@ -1,0 +1,186 @@
+//! Training metric collection: per-step records, eval records, CSV export,
+//! and the summary statistics the repro harnesses report.
+
+use std::io::Write;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+// (Path used in write_csv signature)
+
+use crate::util::json::Json;
+
+#[derive(Debug, Clone, Copy)]
+pub struct StepRecord {
+    pub step: usize,
+    pub loss: f32,
+    pub acc: f32,
+    pub lr: f32,
+    pub step_secs: f64,
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct EvalRecord {
+    pub step: usize,
+    /// Mean per-example loss over the validation set.
+    pub loss: f32,
+    /// Top-1 error in [0, 1] (images) / per-char error (text).
+    pub error: f32,
+}
+
+impl EvalRecord {
+    /// Perplexity view for LM runs: exp(mean loss).
+    pub fn perplexity(&self) -> f32 {
+        self.loss.exp()
+    }
+}
+
+/// Full history of one run.
+#[derive(Debug, Default, Clone)]
+pub struct History {
+    pub steps: Vec<StepRecord>,
+    pub evals: Vec<EvalRecord>,
+}
+
+impl History {
+    pub fn final_eval(&self) -> Option<&EvalRecord> {
+        self.evals.last()
+    }
+
+    pub fn best_error(&self) -> Option<f32> {
+        self.evals.iter().map(|e| e.error).min_by(|a, b| a.partial_cmp(b).unwrap())
+    }
+
+    /// Mean training loss over the last `n` recorded steps (convergence
+    /// signal robust to per-batch noise).
+    pub fn tail_loss(&self, n: usize) -> Option<f32> {
+        if self.steps.is_empty() {
+            return None;
+        }
+        let k = self.steps.len().saturating_sub(n);
+        let tail = &self.steps[k..];
+        Some(tail.iter().map(|s| s.loss).sum::<f32>() / tail.len() as f32)
+    }
+
+    /// Steps/second over the whole run (excludes eval time by construction:
+    /// step_secs measures only the train step).
+    pub fn throughput(&self) -> Option<f64> {
+        if self.steps.is_empty() {
+            return None;
+        }
+        let total: f64 = self.steps.iter().map(|s| s.step_secs).sum();
+        Some(self.steps.len() as f64 / total)
+    }
+
+    /// Did the run diverge (NaN/inf loss or loss explosion)?
+    pub fn diverged(&self) -> bool {
+        self.steps
+            .iter()
+            .any(|s| !s.loss.is_finite() || s.loss > 50.0)
+    }
+
+    pub fn write_csv(&self, path: &Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut f = std::fs::File::create(path).with_context(|| format!("creating {path:?}"))?;
+        writeln!(f, "kind,step,loss,metric,lr,secs")?;
+        for s in &self.steps {
+            writeln!(f, "train,{},{},{},{},{:.6}", s.step, s.loss, s.acc, s.lr, s.step_secs)?;
+        }
+        for e in &self.evals {
+            writeln!(f, "eval,{},{},{},,", e.step, e.loss, e.error)?;
+        }
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            (
+                "train",
+                Json::Arr(
+                    self.steps
+                        .iter()
+                        .map(|s| {
+                            Json::obj(vec![
+                                ("step", Json::num(s.step as f64)),
+                                ("loss", Json::num(s.loss)),
+                                ("acc", Json::num(s.acc)),
+                                ("lr", Json::num(s.lr)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "eval",
+                Json::Arr(
+                    self.evals
+                        .iter()
+                        .map(|e| {
+                            Json::obj(vec![
+                                ("step", Json::num(e.step as f64)),
+                                ("loss", Json::num(e.loss)),
+                                ("error", Json::num(e.error)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn hist() -> History {
+        History {
+            steps: (0..10)
+                .map(|i| StepRecord {
+                    step: i,
+                    loss: 2.0 - i as f32 * 0.1,
+                    acc: i as f32 * 0.05,
+                    lr: 0.1,
+                    step_secs: 0.01,
+                })
+                .collect(),
+            evals: vec![
+                EvalRecord { step: 5, loss: 1.0, error: 0.4 },
+                EvalRecord { step: 10, loss: 0.8, error: 0.3 },
+            ],
+        }
+    }
+
+    #[test]
+    fn summaries() {
+        let h = hist();
+        assert_eq!(h.final_eval().unwrap().error, 0.3);
+        assert_eq!(h.best_error().unwrap(), 0.3);
+        assert!((h.throughput().unwrap() - 100.0).abs() < 1.0);
+        assert!(!h.diverged());
+        assert!(h.tail_loss(3).unwrap() < 1.3);
+    }
+
+    #[test]
+    fn divergence_detection() {
+        let mut h = hist();
+        h.steps.push(StepRecord { step: 11, loss: f32::NAN, acc: 0.0, lr: 0.1, step_secs: 0.01 });
+        assert!(h.diverged());
+    }
+
+    #[test]
+    fn perplexity() {
+        let e = EvalRecord { step: 0, loss: 2.0, error: 0.5 };
+        assert!((e.perplexity() - 2.0f32.exp()).abs() < 1e-4);
+    }
+
+    #[test]
+    fn csv_writes() {
+        let p = std::env::temp_dir().join("hbfp_metrics_test.csv");
+        hist().write_csv(&p).unwrap();
+        let s = std::fs::read_to_string(&p).unwrap();
+        assert!(s.lines().count() == 1 + 10 + 2);
+        assert!(s.starts_with("kind,step"));
+    }
+}

@@ -1,0 +1,17 @@
+//! L3 coordinator: experiment configuration, the training loop, metric
+//! collection, checkpointing, sweep scheduling, and the per-table/figure
+//! reproduction harnesses (`repro`).
+
+pub mod checkpoint;
+pub mod config;
+pub mod metrics;
+pub mod report;
+pub mod repro;
+pub mod sweep;
+pub mod trainer;
+
+pub use checkpoint::Checkpoint;
+pub use config::{default_base_lr, parse_schedule, LrSchedule, RunConfig};
+pub use metrics::{EvalRecord, History, StepRecord};
+pub use sweep::{Sweep, SweepRow};
+pub use trainer::{RunResult, Trainer};

@@ -1,0 +1,251 @@
+//! Report generator: assemble the recorded `results/*.json` files into the
+//! markdown tables EXPERIMENTS.md records — the single source of truth for
+//! "paper vs measured". Run via `hbfp report [--results DIR]`.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+/// One recorded run, loaded back from its summary JSON.
+#[derive(Debug, Clone)]
+pub struct Recorded {
+    pub combo: String,
+    pub steps: usize,
+    pub seed: u64,
+    pub eval_every: usize,
+    pub final_error: f32,
+    pub final_loss: f32,
+    pub diverged: bool,
+    pub steps_per_sec: f64,
+}
+
+impl Recorded {
+    pub fn perplexity(&self) -> f32 {
+        self.final_loss.exp()
+    }
+
+    pub fn error_pct(&self) -> String {
+        if self.diverged {
+            "diverged".into()
+        } else {
+            format!("{:.2}%", self.final_error * 100.0)
+        }
+    }
+}
+
+/// Load every `*_s*_n*.json` result in a directory, newest per combo key.
+pub fn load_results(dir: &Path) -> Result<Vec<Recorded>> {
+    let mut out = Vec::new();
+    let entries = std::fs::read_dir(dir).with_context(|| format!("reading {dir:?}"))?;
+    for entry in entries {
+        let path = entry?.path();
+        let Some(name) = path.file_name().and_then(|n| n.to_str()) else { continue };
+        if !name.ends_with(".json") || !name.contains("_s") || !name.contains("_n") {
+            continue;
+        }
+        let text = std::fs::read_to_string(&path)?;
+        let Ok(j) = Json::parse(&text) else { continue };
+        let Some(cfg) = j.get("config") else { continue };
+        let (Some(combo), Some(steps), Some(seed)) = (
+            cfg.get("combo").and_then(|v| v.as_str()),
+            cfg.get("steps").and_then(|v| v.as_usize()),
+            cfg.get("seed").and_then(|v| v.as_i64()),
+        ) else {
+            continue;
+        };
+        out.push(Recorded {
+            combo: combo.to_string(),
+            steps,
+            seed: seed as u64,
+            eval_every: cfg.get("eval_every").and_then(|v| v.as_usize()).unwrap_or(0),
+            final_error: j.get("final_error").and_then(|v| v.as_f64()).unwrap_or(f64::NAN) as f32,
+            final_loss: j.get("final_loss").and_then(|v| v.as_f64()).unwrap_or(f64::NAN) as f32,
+            diverged: j.get("diverged").and_then(|v| v.as_bool()).unwrap_or(false),
+            steps_per_sec: j.get("steps_per_sec").and_then(|v| v.as_f64()).unwrap_or(0.0),
+        });
+    }
+    out.sort_by(|a, b| a.combo.cmp(&b.combo).then(a.steps.cmp(&b.steps)));
+    Ok(out)
+}
+
+fn index(rows: &[Recorded]) -> BTreeMap<String, &Recorded> {
+    // last write wins: prefer the longest run per combo
+    let mut m: BTreeMap<String, &Recorded> = BTreeMap::new();
+    for r in rows {
+        let e = m.entry(r.combo.clone()).or_insert(r);
+        if r.steps >= e.steps {
+            *e = r;
+        }
+    }
+    m
+}
+
+/// Render the full markdown report. Sections mirror EXPERIMENTS.md.
+pub fn render_markdown(rows: &[Recorded]) -> String {
+    let ix = index(rows);
+    let get = |combo: &str| ix.get(combo).copied();
+    let cell = |combo: &str| get(combo).map(|r| r.error_pct()).unwrap_or_else(|| "—".into());
+    let mut out = String::new();
+    let push = |out: &mut String, s: &str| {
+        out.push_str(s);
+        out.push('\n');
+    };
+
+    push(&mut out, "## Table 1 — narrow-FP formats (resnet_mini / cifar10like)\n");
+    push(&mut out, "| format | paper (ResNet-20/CIFAR-10) | ours |");
+    push(&mut out, "|---|---|---|");
+    for (cfg, label, paper) in [
+        ("fp_m2_e8", "m=2, e=8", "N/A (diverges)"),
+        ("fp_m4_e8", "m=4, e=8", "9.77%"),
+        ("fp_m8_e8", "m=8, e=8", "8.05%"),
+        ("fp32", "m=24, e=8 (fp32)", "8.42%"),
+        ("fp_m24_e6", "m=24, e=6", "14.67%"),
+        ("fp_m24_e2", "m=24, e=2", "N/A (diverges)"),
+    ] {
+        push(
+            &mut out,
+            &format!("| {label} | {paper} | {} |", cell(&format!("resnet_mini-cifar10like-{cfg}"))),
+        );
+    }
+
+    push(&mut out, "\n## Table 2 — image classification (val error; gap = max |hbfp - fp32|)\n");
+    push(&mut out, "| model-dataset | fp32 | hbfp8_16 | hbfp12_16 | max gap |");
+    push(&mut out, "|---|---|---|---|---|");
+    for (m, d) in [
+        ("resnet_mini", "cifar100like"),
+        ("wrn_mini", "cifar100like"),
+        ("densenet_mini", "cifar100like"),
+        ("resnet_mini", "svhnlike"),
+        ("wrn_mini", "svhnlike"),
+        ("densenet_mini", "svhnlike"),
+        ("resnet_mini", "imagenetlike"),
+    ] {
+        let e = |c: &str| get(&format!("{m}-{d}-{c}")).map(|r| r.final_error);
+        let gap = match (e("fp32"), e("hbfp8_16_t24"), e("hbfp12_16_t24")) {
+            (Some(f), Some(h8), Some(h12)) => {
+                format!("{:+.2}pp", ((h8 - f).abs().max((h12 - f).abs())) * 100.0)
+            }
+            _ => "—".into(),
+        };
+        push(
+            &mut out,
+            &format!(
+                "| {m}-{d} | {} | {} | {} | {gap} |",
+                cell(&format!("{m}-{d}-fp32")),
+                cell(&format!("{m}-{d}-hbfp8_16_t24")),
+                cell(&format!("{m}-{d}-hbfp12_16_t24")),
+            ),
+        );
+    }
+
+    push(&mut out, "\n## Table 3 — LSTM LM perplexity\n");
+    push(&mut out, "| config | paper (PTB) | ours (markov corpus) |");
+    push(&mut out, "|---|---|---|");
+    for (cfg, paper) in [("fp32", "61.31"), ("hbfp8_16_t24", "61.86"), ("hbfp12_16_t24", "61.35")] {
+        let ours = get(&format!("lstm-ptblike-{cfg}"))
+            .map(|r| format!("{:.3}", r.perplexity()))
+            .unwrap_or("—".into());
+        push(&mut out, &format!("| {cfg} | {paper} | {ours} |"));
+    }
+
+    push(&mut out, "\n## §6 mantissa sweep (wrn_mini / cifar100like; gap vs fp32)\n");
+    push(&mut out, "| config | val error | gap |");
+    push(&mut out, "|---|---|---|");
+    let base = get("wrn_mini-cifar100like-fp32").map(|r| r.final_error);
+    for cfg in [
+        "fp32",
+        "hbfp4_4_t24",
+        "hbfp4_16_t24",
+        "hbfp8_8_t24",
+        "hbfp8_16_t24",
+        "hbfp12_12_t24",
+        "hbfp12_16_t24",
+        "hbfp16_16_t24",
+    ] {
+        let combo = format!("wrn_mini-cifar100like-{cfg}");
+        let gap = match (base, get(&combo)) {
+            (Some(b), Some(r)) if !r.diverged => format!("{:+.2}pp", (r.final_error - b) * 100.0),
+            _ => "—".into(),
+        };
+        push(&mut out, &format!("| {cfg} | {} | {gap} |", cell(&combo)));
+    }
+
+    push(&mut out, "\n## §6 tile sweep (wrn_mini / cifar100like, hbfp8_16)\n");
+    push(&mut out, "| tile | val error | gap |");
+    push(&mut out, "|---|---|---|");
+    for (cfg, label) in [
+        ("fp32", "fp32"),
+        ("hbfp8_16_tnone", "whole tensor"),
+        ("hbfp8_16_t8", "8x8"),
+        ("hbfp8_16_t24", "24x24"),
+        ("hbfp8_16_t64", "64x64"),
+    ] {
+        let combo = format!("wrn_mini-cifar100like-{cfg}");
+        let gap = match (base, get(&combo)) {
+            (Some(b), Some(r)) if !r.diverged => format!("{:+.2}pp", (r.final_error - b) * 100.0),
+            _ => "—".into(),
+        };
+        push(&mut out, &format!("| {label} | {} | {gap} |", cell(&combo)));
+    }
+
+    push(&mut out, "\n## Throughput of recorded runs (steps/sec, PJRT CPU)\n");
+    push(&mut out, "| combo | steps/s |");
+    push(&mut out, "|---|---|");
+    for r in index(rows).values() {
+        push(&mut out, &format!("| {} | {:.1} |", r.combo, r.steps_per_sec));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_result(dir: &Path, combo: &str, err: f64, loss: f64) {
+        let j = format!(
+            r#"{{"config": {{"combo": "{combo}", "steps": 300, "seed": 0, "eval_every": 0}},
+                "final_error": {err}, "final_loss": {loss}, "diverged": false,
+                "steps_per_sec": 5.0}}"#
+        );
+        std::fs::write(dir.join(format!("{combo}_s0_n300.json")), j).unwrap();
+    }
+
+    #[test]
+    fn load_and_render() {
+        let dir = std::env::temp_dir().join("hbfp_report_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        write_result(&dir, "resnet_mini-cifar100like-fp32", 0.45, 1.5);
+        write_result(&dir, "resnet_mini-cifar100like-hbfp8_16_t24", 0.46, 1.52);
+        write_result(&dir, "lstm-ptblike-fp32", 0.6, 1.9);
+        std::fs::write(dir.join("garbage.json"), "not json").unwrap();
+        let rows = load_results(&dir).unwrap();
+        assert_eq!(rows.len(), 3);
+        let md = render_markdown(&rows);
+        assert!(md.contains("| resnet_mini-cifar100like | 45.00% | 46.00% | — |"), "{md}");
+        assert!(md.contains("6.686") || md.contains("6.68"), "lstm ppl exp(1.9): {md}");
+    }
+
+    #[test]
+    fn prefers_longest_run() {
+        let dir = std::env::temp_dir().join("hbfp_report_test2");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("m-d-fp32_s0_n100.json"),
+            r#"{"config": {"combo": "m-d-fp32", "steps": 100, "seed": 0}, "final_error": 0.5, "final_loss": 1.0, "diverged": false, "steps_per_sec": 1.0}"#,
+        )
+        .unwrap();
+        std::fs::write(
+            dir.join("m-d-fp32_s0_n300.json"),
+            r#"{"config": {"combo": "m-d-fp32", "steps": 300, "seed": 0}, "final_error": 0.3, "final_loss": 0.8, "diverged": false, "steps_per_sec": 1.0}"#,
+        )
+        .unwrap();
+        let rows = load_results(&dir).unwrap();
+        let ix = index(&rows);
+        assert_eq!(ix["m-d-fp32"].final_error, 0.3);
+    }
+}

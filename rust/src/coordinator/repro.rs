@@ -1,0 +1,297 @@
+//! Reproduction harnesses — one per table/figure in the paper's evaluation
+//! (DESIGN.md §4 maps each to its modules). Every harness prints the same
+//! rows the paper reports, side by side with the paper's numbers where the
+//! comparison is meaningful, and returns the measured rows for tests /
+//! EXPERIMENTS.md.
+//!
+//! Absolute errors differ from the paper (our substrates are scaled-down —
+//! DESIGN.md §5); the *shape* is what must hold: which configs match fp32,
+//! which degrade, which diverge, and the hardware ratios.
+
+use std::collections::BTreeMap;
+
+use anyhow::Result;
+
+use super::config::{default_base_lr, LrSchedule, RunConfig};
+use super::sweep::{Sweep, SweepRow};
+use crate::accel::{size_design, AccelConfig, MacFormat};
+
+fn run_cfg(combo: &str, steps: usize, seed: u64) -> RunConfig {
+    let model = combo.split('-').next().unwrap_or("");
+    let base = default_base_lr(model);
+    RunConfig::new(combo, steps).with_seed(seed).with_lr(LrSchedule::default_for(steps, base))
+}
+
+fn pct(x: f32) -> String {
+    format!("{:.2}%", x * 100.0)
+}
+
+fn by_combo(rows: &[SweepRow]) -> BTreeMap<String, &SweepRow> {
+    rows.iter().map(|r| (r.combo.clone(), r)).collect()
+}
+
+/// Table 1: ResNet on CIFAR-10-like with narrow *floating point* formats.
+/// Paper row: mantissa {2: N/A, 4: 9.77%, 8: 8.05%, 24: 8.42%},
+/// exponent {2: N/A, 6: 14.67%, 8: 8.42%}.
+pub fn table1(sweep: &Sweep, steps: usize, seed: u64) -> Result<Vec<SweepRow>> {
+    let combos = [
+        ("fp_m2_e8", "m=2  e=8", "N/A (diverges)"),
+        ("fp_m4_e8", "m=4  e=8", "9.77%"),
+        ("fp_m8_e8", "m=8  e=8", "8.05%"),
+        ("fp32", "m=24 e=8", "8.42% (fp32)"),
+        ("fp_m24_e6", "m=24 e=6", "14.67%"),
+        ("fp_m24_e2", "m=24 e=2", "N/A (diverges)"),
+    ];
+    let cfgs: Vec<RunConfig> = combos
+        .iter()
+        .map(|(c, _, _)| run_cfg(&format!("resnet_mini-cifar10like-{c}"), steps, seed))
+        .collect();
+    let rows = sweep.run_all(&cfgs)?;
+    println!("\nTable 1 — validation error vs narrow-FP format (ResNet / CIFAR-10-like)");
+    println!("{:<12} {:>14} {:>14}  {}", "format", "paper", "ours", "note");
+    for ((_, label, paper), row) in combos.iter().zip(&rows) {
+        let ours = if row.diverged { "diverged".to_string() } else { pct(row.final_error) };
+        println!("{label:<12} {paper:>14} {ours:>14}");
+    }
+    Ok(rows)
+}
+
+/// Table 2: image-classification test error, fp32 vs hbfp8_16 vs hbfp12_16.
+pub fn table2(sweep: &Sweep, steps: usize, seed: u64) -> Result<Vec<SweepRow>> {
+    let grid: Vec<(&str, &str)> = vec![
+        ("resnet_mini", "cifar100like"),
+        ("wrn_mini", "cifar100like"),
+        ("densenet_mini", "cifar100like"),
+        ("resnet_mini", "svhnlike"),
+        ("wrn_mini", "svhnlike"),
+        ("densenet_mini", "svhnlike"),
+        ("resnet_mini", "imagenetlike"),
+    ];
+    let cfgs: Vec<RunConfig> = grid
+        .iter()
+        .flat_map(|(m, d)| {
+            ["fp32", "hbfp8_16_t24", "hbfp12_16_t24"]
+                .iter()
+                .map(|c| run_cfg(&format!("{m}-{d}-{c}"), steps, seed))
+                .collect::<Vec<_>>()
+        })
+        .collect();
+    let rows = sweep.run_all(&cfgs)?;
+    let map = by_combo(&rows);
+    println!("\nTable 2 — test error (paper: hbfp8_16 / hbfp12_16 within ~1% of fp32)");
+    println!(
+        "{:<30} {:>10} {:>12} {:>12}  {}",
+        "model-dataset", "fp32", "hbfp8_16", "hbfp12_16", "max gap"
+    );
+    for (m, d) in &grid {
+        let get = |c: &str| map.get(&format!("{m}-{d}-{c}")).map(|r| r.final_error);
+        let (f, h8, h12) = (
+            get("fp32").unwrap_or(f32::NAN),
+            get("hbfp8_16_t24").unwrap_or(f32::NAN),
+            get("hbfp12_16_t24").unwrap_or(f32::NAN),
+        );
+        let gap = (h8 - f).abs().max((h12 - f).abs());
+        println!(
+            "{:<30} {:>10} {:>12} {:>12}  {:+.2}pp",
+            format!("{m}-{d}"),
+            pct(f),
+            pct(h8),
+            pct(h12),
+            gap * 100.0
+        );
+    }
+    Ok(rows)
+}
+
+/// Table 3: LSTM LM perplexity, fp32 vs hbfp8_16 vs hbfp12_16.
+/// Paper: 61.31 / 61.86 / 61.35 on PTB.
+pub fn table3(sweep: &Sweep, steps: usize, seed: u64) -> Result<Vec<SweepRow>> {
+    let cfgs: Vec<RunConfig> = ["fp32", "hbfp8_16_t24", "hbfp12_16_t24"]
+        .iter()
+        .map(|c| run_cfg(&format!("lstm-ptblike-{c}"), steps, seed))
+        .collect();
+    let rows = sweep.run_all(&cfgs)?;
+    println!("\nTable 3 — LM validation perplexity (paper: 61.31 / 61.86 / 61.35 on PTB)");
+    println!("{:<16} {:>12} {:>12}", "config", "perplexity", "vs fp32");
+    let base = rows[0].perplexity;
+    for (c, row) in ["fp32", "hbfp8_16", "hbfp12_16"].iter().zip(&rows) {
+        println!("{c:<16} {:>12.3} {:>11.2}%", row.perplexity, (row.perplexity / base - 1.0) * 100.0);
+    }
+    Ok(rows)
+}
+
+/// Figure 3: training curves, HBFP vs FP32, three workloads. Writes the
+/// per-step/eval CSVs under `results/` (the figure's data series) and
+/// prints a convergence summary.
+pub fn fig3(sweep: &Sweep, steps: usize, seed: u64) -> Result<Vec<SweepRow>> {
+    let workloads =
+        ["wrn_mini-cifar100like", "resnet_mini-imagenetlike", "lstm-ptblike"];
+    let cfgs: Vec<RunConfig> = workloads
+        .iter()
+        .flat_map(|w| {
+            ["fp32", "hbfp8_16_t24", "hbfp12_16_t24"].iter().map(|c| {
+                run_cfg(&format!("{w}-{c}"), steps, seed)
+                    .with_eval_every((steps / 8).max(1))
+            }).collect::<Vec<_>>()
+        })
+        .collect();
+    let rows = sweep.run_all(&cfgs)?;
+    println!("\nFigure 3 — convergence curves written to results/*.csv");
+    println!("{:<44} {:>10} {:>12}", "run", "final err", "final loss");
+    for r in &rows {
+        println!("{:<44} {:>10} {:>12.4}", r.combo, pct(r.final_error), r.final_loss);
+    }
+    Ok(rows)
+}
+
+/// §6 design space: mantissa width sweep on WRN/CIFAR-100-like, including
+/// the wide-vs-narrow weight-storage comparison. Paper: >= 8-bit mantissas
+/// within 1% of fp32; 4-bit has a ~4.1% gap; 16-bit storage buys ~0.2-0.4%.
+pub fn mantissa_sweep(sweep: &Sweep, steps: usize, seed: u64) -> Result<Vec<SweepRow>> {
+    let configs = [
+        "fp32",
+        "hbfp4_4_t24",
+        "hbfp4_16_t24",
+        "hbfp8_8_t24",
+        "hbfp8_16_t24",
+        "hbfp12_12_t24",
+        "hbfp12_16_t24",
+        "hbfp16_16_t24",
+    ];
+    let cfgs: Vec<RunConfig> = configs
+        .iter()
+        .map(|c| run_cfg(&format!("wrn_mini-cifar100like-{c}"), steps, seed))
+        .collect();
+    let rows = sweep.run_all(&cfgs)?;
+    println!("\nDesign space — mantissa width (WRN / CIFAR-100-like)");
+    println!("{:<16} {:>10} {:>12}", "config", "val err", "gap vs fp32");
+    let base = rows[0].final_error;
+    for (c, r) in configs.iter().zip(&rows) {
+        println!("{c:<16} {:>10} {:>+11.2}pp", pct(r.final_error), (r.final_error - base) * 100.0);
+    }
+    Ok(rows)
+}
+
+/// §6 design space: tile size sweep. Paper: t=24 and t=64 within 0.5% of
+/// fp32; no tiling costs ~0.8%.
+pub fn tile_sweep(sweep: &Sweep, steps: usize, seed: u64) -> Result<Vec<SweepRow>> {
+    let configs =
+        ["fp32", "hbfp8_16_tnone", "hbfp8_16_t8", "hbfp8_16_t24", "hbfp8_16_t64"];
+    let cfgs: Vec<RunConfig> = configs
+        .iter()
+        .map(|c| run_cfg(&format!("wrn_mini-cifar100like-{c}"), steps, seed))
+        .collect();
+    let rows = sweep.run_all(&cfgs)?;
+    println!("\nDesign space — exponent-sharing tile size (WRN / CIFAR-100-like, hbfp8_16)");
+    println!("{:<16} {:>10} {:>12}", "tile", "val err", "gap vs fp32");
+    let base = rows[0].final_error;
+    let labels = ["fp32", "whole tensor", "8x8", "24x24", "64x64"];
+    for (l, r) in labels.iter().zip(&rows) {
+        println!("{l:<16} {:>10} {:>+11.2}pp", pct(r.final_error), (r.final_error - base) * 100.0);
+    }
+    Ok(rows)
+}
+
+/// Extension: HBFP-W on attention (not in the paper — its natural
+/// follow-up). Weight matmuls quantized, activation-activation score/AV
+/// matmuls FP32; claim under test: perplexity tracks fp32 like the LSTM's.
+pub fn attention(sweep: &Sweep, steps: usize, seed: u64) -> Result<Vec<SweepRow>> {
+    let cfgs: Vec<RunConfig> = ["fp32", "hbfp8_16_t24", "hbfp12_16_t24"]
+        .iter()
+        .map(|c| {
+            let mut r = run_cfg(&format!("transformer_mini-ptblike-{c}"), steps, seed);
+            r.lr = LrSchedule::Cosine { base: 0.3, floor: 0.003, total: steps };
+            r
+        })
+        .collect();
+    let rows = sweep.run_all(&cfgs)?;
+    println!("\nExtension — HBFP-W transformer LM (weight matmuls in BFP)");
+    println!("{:<16} {:>12} {:>12}", "config", "perplexity", "vs fp32");
+    let base = rows[0].perplexity;
+    for (c, row) in ["fp32", "hbfp8_16", "hbfp12_16"].iter().zip(&rows) {
+        println!("{c:<16} {:>12.3} {:>11.2}%", row.perplexity, (row.perplexity / base - 1.0) * 100.0);
+    }
+    Ok(rows)
+}
+
+/// §6 hardware: the area/throughput table. No training involved — this is
+/// the accelerator model (DESIGN.md §4 row HW / T1-FP).
+pub fn throughput() -> Vec<(String, f64, f64, f64, f64)> {
+    println!("\n§6 hardware — accelerator area/throughput model (Stratix-V-class budget, 200 MHz)");
+    println!(
+        "{:<14} {:>8} {:>12} {:>10} {:>10} {:>10}",
+        "format", "array", "peak TOp/s", "mac %", "act %", "conv %"
+    );
+    let formats = [
+        MacFormat::Bfp { mantissa_bits: 8 },
+        MacFormat::Bfp { mantissa_bits: 12 },
+        MacFormat::Bfp { mantissa_bits: 16 },
+        MacFormat::Fp { m: 11, e: 5 },
+        MacFormat::Fp32,
+    ];
+    let mut out = Vec::new();
+    for f in formats {
+        let r = size_design(&AccelConfig::stratix_v_like(f));
+        println!(
+            "{:<14} {:>5}x{:<3} {:>11.3} {:>9.1}% {:>9.2}% {:>9.3}%",
+            r.config_name,
+            r.array_edge,
+            r.array_edge,
+            r.peak_ops / 1e12,
+            r.mac_frac * 100.0,
+            r.act_frac * 100.0,
+            r.conv_frac * 100.0
+        );
+        out.push((r.config_name.clone(), r.peak_ops, r.mac_frac, r.act_frac, r.conv_frac));
+    }
+    let ratio = crate::accel::throughput_ratio(
+        MacFormat::Bfp { mantissa_bits: 8 },
+        MacFormat::Fp { m: 11, e: 5 },
+    );
+    println!("\nbfp8 vs fp16 throughput ratio: {ratio:.2}x   (paper: 8.5x)");
+    let r_mult = crate::hw::anchors::FP16_MULT.area_um2 / crate::hw::anchors::INT8_MULT.area_um2;
+    println!("fp16/int8 multiplier area ratio: {r_mult:.1}x (paper: 5.8x)");
+
+    // §6 bandwidth discussion: per-layer traffic under fp32 vs hbfp.
+    use crate::accel::{bandwidth_ratio, step_traffic, FormatBits, LayerShape};
+    println!("\n§6 memory traffic — per training step (fwd+dgrad+wgrad+update)");
+    println!(
+        "{:<26} {:>12} {:>12} {:>12} {:>10}",
+        "layer", "fp32 Mbit", "hbfp8_16", "reduction", "MACs/bit"
+    );
+    let layers = [
+        ("FC 4096x4096 (b=32)", LayerShape::Dense { batch: 32, d_in: 4096, d_out: 4096 }),
+        ("conv 3x3x128->128", LayerShape::Conv { batch: 32, h_out: 16, w_out: 16, k: 3, cin: 128, cout: 128 }),
+        ("conv 3x3x16->16", LayerShape::Conv { batch: 32, h_out: 16, w_out: 16, k: 3, cin: 16, cout: 16 }),
+    ];
+    let fmt = FormatBits::hbfp(8, 16, 24);
+    for (name, shape) in layers {
+        let base = step_traffic(&shape, &FormatBits::fp32());
+        let ours = step_traffic(&shape, &fmt);
+        println!(
+            "{name:<26} {:>12.1} {:>12.1} {:>11.2}x {:>10.1}",
+            base.total_bits as f64 / 1e6,
+            ours.total_bits as f64 / 1e6,
+            bandwidth_ratio(&shape, &fmt),
+            ours.macs_per_bit
+        );
+    }
+    println!("(paper: up to 4x fwd/bwd bandwidth reduction; FC traffic weight-dominated;\n conv layers compute-bound so activation traffic immaterial)");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn throughput_table_shape() {
+        let rows = throughput();
+        assert_eq!(rows.len(), 5);
+        // bfp8 fastest, fp32 slowest
+        assert!(rows[0].1 > rows[3].1, "bfp8 should beat fp16");
+        assert!(rows[3].1 > rows[4].1, "fp16 should beat fp32");
+        // area fractions sane for the bfp8 design
+        assert!(rows[0].3 < 0.10 && rows[0].4 < 0.01);
+    }
+}

@@ -1,0 +1,117 @@
+//! Experiment sweep runner: execute a list of RunConfigs, persist each
+//! result (JSON summary + CSV curve) under `results/`, and collect the
+//! summary rows the repro harnesses print.
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use super::config::RunConfig;
+use super::trainer::{RunResult, Trainer};
+use crate::runtime::Manifest;
+use crate::util::json::Json;
+
+/// One sweep entry result, kept lightweight for table assembly.
+#[derive(Debug, Clone)]
+pub struct SweepRow {
+    pub combo: String,
+    pub final_error: f32,
+    pub final_loss: f32,
+    pub perplexity: f32,
+    pub diverged: bool,
+    pub steps_per_sec: f64,
+}
+
+impl SweepRow {
+    fn from(r: &RunResult) -> SweepRow {
+        SweepRow {
+            combo: r.config.combo.clone(),
+            final_error: r.final_error,
+            final_loss: r.final_loss,
+            perplexity: r.final_loss.exp(),
+            diverged: r.diverged,
+            steps_per_sec: r.history.throughput().unwrap_or(0.0),
+        }
+    }
+}
+
+pub struct Sweep {
+    pub trainer: Trainer,
+    pub results_dir: PathBuf,
+}
+
+impl Sweep {
+    pub fn new(manifest: Arc<Manifest>, results_dir: &Path) -> Result<Sweep> {
+        std::fs::create_dir_all(results_dir)
+            .with_context(|| format!("creating {results_dir:?}"))?;
+        Ok(Sweep { trainer: Trainer::new(manifest)?, results_dir: results_dir.to_path_buf() })
+    }
+
+    /// Run every config sequentially (XLA's CPU backend already uses all
+    /// cores intra-op; running combos in parallel would just contend),
+    /// persisting as we go so partial sweeps are usable.
+    pub fn run_all(&self, configs: &[RunConfig]) -> Result<Vec<SweepRow>> {
+        let mut rows = Vec::with_capacity(configs.len());
+        for (i, cfg) in configs.iter().enumerate() {
+            // Reuse cached result if present (idempotent sweeps: delete
+            // results/ to force a rerun).
+            let tag = if cfg.eval_every > 0 {
+                format!("{}_s{}_n{}_e{}", cfg.combo, cfg.seed, cfg.steps, cfg.eval_every)
+            } else {
+                format!("{}_s{}_n{}", cfg.combo, cfg.seed, cfg.steps)
+            };
+            let json_path = self.results_dir.join(format!("{tag}.json"));
+            if let Some(row) = load_cached(&json_path, cfg) {
+                log::info!("[{}/{}] {tag}: cached", i + 1, configs.len());
+                rows.push(row);
+                continue;
+            }
+            log::info!("[{}/{}] {tag}: training {} steps", i + 1, configs.len(), cfg.steps);
+            let result = self.trainer.run(cfg)?;
+            result
+                .history
+                .write_csv(&self.results_dir.join(format!("{tag}.csv")))?;
+            std::fs::write(&json_path, result.summary_json().to_string())
+                .with_context(|| format!("writing {json_path:?}"))?;
+            rows.push(SweepRow::from(&result));
+        }
+        Ok(rows)
+    }
+}
+
+fn load_cached(path: &Path, cfg: &RunConfig) -> Option<SweepRow> {
+    let text = std::fs::read_to_string(path).ok()?;
+    let j = Json::parse(&text).ok()?;
+    let loss = j.get("final_loss")?.as_f64()? as f32;
+    Some(SweepRow {
+        combo: cfg.combo.clone(),
+        final_error: j.get("final_error")?.as_f64()? as f32,
+        final_loss: loss,
+        perplexity: loss.exp(),
+        diverged: j.get("diverged")?.as_bool()?,
+        steps_per_sec: j.get("steps_per_sec")?.as_f64()?,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cached_row_roundtrip() {
+        let dir = std::env::temp_dir().join("hbfp_sweep_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("x.json");
+        std::fs::write(
+            &p,
+            r#"{"final_error": 0.25, "final_loss": 1.5, "diverged": false, "steps_per_sec": 3.2}"#,
+        )
+        .unwrap();
+        let cfg = RunConfig::new("m-d-fp32", 10);
+        let row = load_cached(&p, &cfg).unwrap();
+        assert_eq!(row.final_error, 0.25);
+        assert!(!row.diverged);
+        assert!(load_cached(&dir.join("missing.json"), &cfg).is_none());
+    }
+}

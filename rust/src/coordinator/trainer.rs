@@ -1,0 +1,213 @@
+//! The training loop: device-resident state, prefetched batches, periodic
+//! validation — the L3 hot path.
+//!
+//! Per step: upload (x, y) (assembled off-thread by the prefetcher), call
+//! the compiled train artifact with `[state..., x, y, lr]` buffers, swap
+//! the returned state buffers in place of the old ones, fetch the scalar
+//! loss/acc. State tensors never touch the host except for checkpoints
+//! and the final summary.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use super::checkpoint::Checkpoint;
+use super::config::RunConfig;
+use super::metrics::{EvalRecord, History, StepRecord};
+use crate::data::{prefetch::Prefetcher, Dataset};
+use crate::runtime::{fetch_f32, fetch_scalar_f32, Engine, HostTensor, Manifest, Role};
+use crate::util::rng::SplitMix64;
+
+/// Outcome of one run.
+pub struct RunResult {
+    pub config: RunConfig,
+    pub history: History,
+    pub final_error: f32,
+    pub final_loss: f32,
+    pub diverged: bool,
+    pub train_secs: f64,
+    pub compile_secs: f64,
+}
+
+impl RunResult {
+    pub fn summary_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        Json::obj(vec![
+            ("config", self.config.to_json()),
+            ("final_error", Json::num(self.final_error)),
+            ("final_loss", Json::num(self.final_loss)),
+            ("diverged", Json::Bool(self.diverged)),
+            ("train_secs", Json::num(self.train_secs)),
+            ("steps_per_sec", Json::num(self.history.throughput().unwrap_or(0.0))),
+            ("history", self.history.to_json()),
+        ])
+    }
+}
+
+pub struct Trainer {
+    pub engine: Engine,
+    pub manifest: Arc<Manifest>,
+}
+
+impl Trainer {
+    pub fn new(manifest: Arc<Manifest>) -> Result<Trainer> {
+        Ok(Trainer { engine: Engine::new()?, manifest })
+    }
+
+    /// Train one combo per the run config. Evaluation runs on the same
+    /// device-resident state buffers.
+    pub fn run(&self, cfg: &RunConfig) -> Result<RunResult> {
+        let t_all = Instant::now();
+        let train_art = self.manifest.artifact(&cfg.combo, Role::Train)?;
+        let eval_art = self.manifest.artifact(&cfg.combo, Role::Eval)?;
+        let init_art = self.manifest.artifact(&cfg.combo, Role::Init)?;
+        let dataset_spec = self.manifest.dataset(&train_art.dataset)?;
+        let batch = train_art.batch;
+        let state_len = train_art.state_len;
+
+        // Compile all three programs up front.
+        let train_prog = self.engine.load(train_art)?;
+        let eval_prog = self.engine.load(eval_art)?;
+        let init_prog = self.engine.load(init_art)?;
+        let compile_secs =
+            train_prog.compile_secs + eval_prog.compile_secs + init_prog.compile_secs;
+
+        // Initialize state from the seed.
+        let mut state = init_prog
+            .run_host(&[HostTensor::scalar_i32(cfg.seed as i32)])
+            .context("running init")?;
+        debug_assert_eq!(state.len(), state_len);
+
+        // Dataset + prefetching batch producer.
+        let dataset = Arc::new(Dataset::from_spec(dataset_spec, cfg.seed ^ 0xda7a)?);
+        let prefetch = {
+            let ds = dataset.clone();
+            let mut rng = SplitMix64::new(cfg.seed.wrapping_mul(0x9e37).wrapping_add(1));
+            Prefetcher::spawn(2, move || ds.train_batch(batch, &mut rng))
+        };
+        let val_batches: Vec<(HostTensor, HostTensor)> = dataset.val_batches(batch);
+
+        let mut history = History::default();
+        let t_train = Instant::now();
+        for step in 0..cfg.steps {
+            let lr = cfg.lr.at(step);
+            let t0 = Instant::now();
+            let (x, y) = prefetch.next();
+            let xb = x.to_literal()?;
+            let yb = y.to_literal()?;
+            let lrb = HostTensor::scalar_f32(lr).to_literal()?;
+
+            // args = state ++ [x, y, lr]
+            let mut args: Vec<&xla::Literal> = state.iter().collect();
+            args.push(&xb);
+            args.push(&yb);
+            args.push(&lrb);
+            let mut out = train_prog.run(&args)?;
+
+            // swap in new state; trailing outputs are loss, acc
+            let acc_buf = out.pop().context("missing acc output")?;
+            let loss_buf = out.pop().context("missing loss output")?;
+            state = out;
+
+            let record = step % cfg.log_every.max(1) == 0 || step + 1 == cfg.steps;
+            if record {
+                let loss = fetch_scalar_f32(&loss_buf)?;
+                let acc = fetch_scalar_f32(&acc_buf)?;
+                history.steps.push(StepRecord {
+                    step,
+                    loss,
+                    acc,
+                    lr,
+                    step_secs: t0.elapsed().as_secs_f64(),
+                });
+                if !loss.is_finite() {
+                    log::warn!("{}: diverged at step {step} (loss {loss})", cfg.combo);
+                    break;
+                }
+            }
+
+            let do_eval = cfg.eval_every > 0 && (step + 1) % cfg.eval_every == 0;
+            if do_eval && step + 1 != cfg.steps {
+                let ev = self.evaluate(&eval_prog, &state, &val_batches, step + 1)?;
+                log::info!(
+                    "{} step {}: val loss {:.4} err {:.2}%",
+                    cfg.combo,
+                    step + 1,
+                    ev.loss,
+                    ev.error * 100.0
+                );
+                history.evals.push(ev);
+            }
+        }
+        // Final evaluation always.
+        let final_ev = self.evaluate(&eval_prog, &state, &val_batches, cfg.steps)?;
+        history.evals.push(final_ev);
+        let train_secs = t_train.elapsed().as_secs_f64();
+
+        // Optional checkpoint of the final state.
+        if let Some(dir) = &cfg.checkpoint_dir {
+            let leaves = state
+                .iter()
+                .zip(&train_art.inputs[..state_len])
+                .map(|(buf, spec)| {
+                    // all state leaves are f32 today (params/momentum/BN)
+                    let v = fetch_f32(buf)
+                        .with_context(|| format!("fetching state leaf {:?}", spec.name))?;
+                    Ok(HostTensor::F32(v, spec.shape.clone()))
+                })
+                .collect::<Result<Vec<_>>>()?;
+            let ck = Checkpoint { combo: cfg.combo.clone(), step: cfg.steps, leaves };
+            let path = dir.join(format!("{}.ckpt", cfg.combo));
+            ck.save(&path, &train_art.inputs[..state_len])?;
+            log::info!("checkpoint written to {path:?}");
+        }
+
+        log::info!(
+            "{}: done in {:.1}s (+{:.1}s compile), final err {:.2}%",
+            cfg.combo,
+            train_secs,
+            compile_secs,
+            final_ev.error * 100.0
+        );
+        let _ = t_all;
+        let diverged = history.diverged();
+        Ok(RunResult {
+            config: cfg.clone(),
+            final_error: final_ev.error,
+            final_loss: final_ev.loss,
+            diverged,
+            history,
+            train_secs,
+            compile_secs,
+        })
+    }
+
+    fn evaluate(
+        &self,
+        eval_prog: &crate::runtime::Program,
+        state: &[xla::Literal],
+        val_batches: &[(HostTensor, HostTensor)],
+        step: usize,
+    ) -> Result<EvalRecord> {
+        let mut loss_sum = 0.0f64;
+        let mut correct = 0.0f64;
+        let mut total = 0.0f64;
+        for (x, y) in val_batches {
+            let xb = x.to_literal()?;
+            let yb = y.to_literal()?;
+            let mut args: Vec<&xla::Literal> = state.iter().collect();
+            args.push(&xb);
+            args.push(&yb);
+            let out = eval_prog.run(&args)?;
+            loss_sum += fetch_scalar_f32(&out[0])? as f64;
+            correct += fetch_scalar_f32(&out[1])? as f64;
+            total += x.shape()[0] as f64;
+        }
+        Ok(EvalRecord {
+            step,
+            loss: (loss_sum / total.max(1.0)) as f32,
+            error: (1.0 - correct / total.max(1.0)) as f32,
+        })
+    }
+}

@@ -1,0 +1,80 @@
+//! Data pipeline: deterministic synthetic dataset generators + batchers.
+//!
+//! The paper evaluates on CIFAR-100/SVHN/ImageNet/PTB; this repo has no
+//! network access or dataset files, so `images` and `text` generate
+//! deterministic stand-ins sized to the manifest's dataset dims
+//! (DESIGN.md §5 explains why the substitution preserves the claims under
+//! test). `prefetch` overlaps batch assembly with device execution.
+
+pub mod images;
+pub mod prefetch;
+pub mod text;
+
+use anyhow::Result;
+
+use crate::runtime::{DatasetSpec, HostTensor};
+use crate::util::rng::SplitMix64;
+
+pub use images::{ImageDataset, ImageGenConfig};
+pub use text::TextDataset;
+
+/// Unified handle over the two dataset kinds.
+pub enum Dataset {
+    Image(ImageDataset),
+    Text(TextDataset),
+}
+
+impl Dataset {
+    /// Instantiate the generator matching a manifest dataset spec.
+    pub fn from_spec(spec: &DatasetSpec, seed: u64) -> Result<Dataset> {
+        Ok(match spec {
+            DatasetSpec::Image { hw, channels, classes } => Dataset::Image(ImageDataset::generate(
+                *hw,
+                *channels,
+                *classes,
+                seed,
+                ImageGenConfig::default(),
+            )),
+            DatasetSpec::Text { vocab, seq } => {
+                Dataset::Text(TextDataset::generate(*vocab, *seq, seed, 60_000, 12_000))
+            }
+        })
+    }
+
+    pub fn train_batch(&self, batch: usize, rng: &mut SplitMix64) -> (HostTensor, HostTensor) {
+        match self {
+            Dataset::Image(d) => d.train_batch(batch, rng),
+            Dataset::Text(d) => d.train_batch(batch, rng),
+        }
+    }
+
+    pub fn val_batches(&self, batch: usize) -> Vec<(HostTensor, HostTensor)> {
+        match self {
+            Dataset::Image(d) => d.val_batches(batch),
+            Dataset::Text(d) => d.val_batches(batch),
+        }
+    }
+
+    /// Number of examples one eval batch contributes to metric denominators
+    /// (images: batch; text: batch sequences, each already averaged over T).
+    pub fn eval_denominator(&self, batch: usize) -> f64 {
+        batch as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn from_spec_dispatch() {
+        let d = Dataset::from_spec(
+            &DatasetSpec::Image { hw: 8, channels: 3, classes: 4 },
+            1,
+        )
+        .unwrap();
+        assert!(matches!(d, Dataset::Image(_)));
+        let (x, _) = d.train_batch(4, &mut SplitMix64::new(0));
+        assert_eq!(x.shape(), &[4, 8, 8, 3]);
+    }
+}

@@ -1,0 +1,98 @@
+//! Background batch prefetcher: overlaps host-side batch assembly (template
+//! sampling, augmentation, RNG) with device execution of the previous step.
+//!
+//! std threads + sync_channel (tokio is not in the vendored set; a bounded
+//! channel of depth N is exactly the backpressure semantics we want anyway:
+//! the producer runs at most N batches ahead and blocks when the trainer
+//! stalls).
+
+use std::sync::mpsc::{sync_channel, Receiver};
+use std::thread::JoinHandle;
+
+use crate::runtime::HostTensor;
+
+pub struct Prefetcher {
+    rx: Receiver<(HostTensor, HostTensor)>,
+    /// Kept so the producer thread has an owner; dropping the Prefetcher
+    /// drops `rx`, the producer's next `send` errors, and the (detached)
+    /// thread exits.
+    _handle: JoinHandle<()>,
+}
+
+impl Prefetcher {
+    /// Spawn a producer thread calling `make_batch` repeatedly, keeping at
+    /// most `depth` batches in flight.
+    pub fn spawn<F>(depth: usize, mut make_batch: F) -> Prefetcher
+    where
+        F: FnMut() -> (HostTensor, HostTensor) + Send + 'static,
+    {
+        let (tx, rx) = sync_channel(depth);
+        let handle = std::thread::Builder::new()
+            .name("hbfp-prefetch".into())
+            .spawn(move || {
+                // Stop when the receiver hangs up.
+                while tx.send(make_batch()).is_ok() {}
+            })
+            .expect("spawning prefetch thread");
+        Prefetcher { rx, _handle: handle }
+    }
+
+    /// Next batch (blocks if the producer is behind — that only happens if
+    /// batch generation is slower than a training step).
+    pub fn next(&self) -> (HostTensor, HostTensor) {
+        self.rx.recv().expect("prefetch thread died")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::SplitMix64;
+
+    fn batch(i: i32) -> (HostTensor, HostTensor) {
+        (HostTensor::scalar_i32(i), HostTensor::scalar_i32(i))
+    }
+
+    #[test]
+    fn produces_in_order() {
+        let mut i = 0;
+        let p = Prefetcher::spawn(2, move || {
+            i += 1;
+            batch(i)
+        });
+        for want in 1..=10 {
+            let (x, _) = p.next();
+            assert_eq!(x, HostTensor::scalar_i32(want));
+        }
+    }
+
+    #[test]
+    fn drop_terminates_producer() {
+        let p = Prefetcher::spawn(1, move || {
+            std::thread::sleep(std::time::Duration::from_millis(1));
+            batch(0)
+        });
+        let _ = p.next();
+        drop(p); // must not hang
+    }
+
+    #[test]
+    fn works_with_real_generator() {
+        let d = crate::data::ImageDataset::generate(
+            8,
+            1,
+            2,
+            1,
+            crate::data::ImageGenConfig { n_train: 32, n_val: 8, ..Default::default() },
+        );
+        let p = {
+            let mut rng = SplitMix64::new(0);
+            Prefetcher::spawn(2, move || d.train_batch(4, &mut rng))
+        };
+        for _ in 0..5 {
+            let (x, y) = p.next();
+            assert_eq!(x.shape(), &[4, 8, 8, 1]);
+            assert_eq!(y.shape(), &[4]);
+        }
+    }
+}

@@ -1,0 +1,168 @@
+//! Arithmetic-unit cost tables and scaling models.
+//!
+//! The paper's density argument rests on published unit costs (its ref [3],
+//! Dally's NIPS'15 tutorial, 45nm): an 8-bit fixed-point multiplier is
+//! 5.8x smaller and 5.5x less energy than FP16; FP32 is 4.7x larger than
+//! FP16. This module encodes those exact numbers plus standard asymptotic
+//! scaling (multiplier area/energy quadratic in width, adder linear) so the
+//! accelerator model can price arbitrary mantissa widths.
+//!
+//! All areas in um^2 (45nm), energies in pJ.
+
+/// Cost of one arithmetic unit.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct UnitCost {
+    pub area_um2: f64,
+    pub energy_pj: f64,
+}
+
+/// Anchor points from Dally NIPS'15 (45nm). These reproduce the ratios the
+/// paper quotes: fp16_mult/int8_mult area = 5.8x, energy = 5.5x;
+/// fp32_mult/fp16_mult area = 4.7x.
+pub mod anchors {
+    use super::UnitCost;
+
+    pub const INT8_ADD: UnitCost = UnitCost { area_um2: 36.0, energy_pj: 0.03 };
+    pub const INT16_ADD: UnitCost = UnitCost { area_um2: 67.0, energy_pj: 0.05 };
+    pub const INT32_ADD: UnitCost = UnitCost { area_um2: 137.0, energy_pj: 0.1 };
+    pub const FP16_ADD: UnitCost = UnitCost { area_um2: 1360.0, energy_pj: 0.4 };
+    pub const FP32_ADD: UnitCost = UnitCost { area_um2: 4184.0, energy_pj: 0.9 };
+
+    pub const INT8_MULT: UnitCost = UnitCost { area_um2: 282.0, energy_pj: 0.2 };
+    pub const INT32_MULT: UnitCost = UnitCost { area_um2: 3495.0, energy_pj: 3.1 };
+    pub const FP16_MULT: UnitCost = UnitCost { area_um2: 1640.0, energy_pj: 1.1 };
+    pub const FP32_MULT: UnitCost = UnitCost { area_um2: 7700.0, energy_pj: 3.7 };
+}
+
+/// Fixed-point multiplier cost at arbitrary width: quadratic scaling
+/// anchored at the published 8-bit point (array multipliers are O(m^2) in
+/// both area and switched capacitance).
+pub fn int_mult(bits: u32) -> UnitCost {
+    let s = (bits as f64 / 8.0).powi(2);
+    UnitCost {
+        area_um2: anchors::INT8_MULT.area_um2 * s,
+        energy_pj: anchors::INT8_MULT.energy_pj * s,
+    }
+}
+
+/// Fixed-point adder cost: linear scaling anchored at the 32-bit point.
+pub fn int_add(bits: u32) -> UnitCost {
+    let s = bits as f64 / 32.0;
+    UnitCost {
+        area_um2: anchors::INT32_ADD.area_um2 * s,
+        energy_pj: anchors::INT32_ADD.energy_pj * s,
+    }
+}
+
+/// Floating-point multiplier with `m` significand bits (incl. implicit bit)
+/// and `e` exponent bits: significand multiplier (quadratic) + exponent
+/// adder (linear) + normalization overhead, calibrated so (11,5) = FP16 and
+/// (24,8) = FP32 anchors hold to within a few percent.
+pub fn fp_mult(m: u32, e: u32) -> UnitCost {
+    // FP16 mult = 1640 at (11,5): significand part ~ int11 mult =
+    // 282*(11/8)^2 = 533, leaving 1107 of normalization/rounding/exponent
+    // logic at w = m+e = 16; fitting the FP32 anchor (7700 at w = 32) gives
+    // that overhead a w^2.22 growth (shifters + rounding are superlinear).
+    let w = (m + e) as f64;
+    let sig = anchors::INT8_MULT.area_um2 * (m as f64 / 8.0).powi(2);
+    let norm = 1107.0 * (w / 16.0).powf(2.22);
+    let area = sig + norm;
+    // energy: same decomposition, anchored at fp16 = 1.1 pJ, fp32 = 3.7 pJ
+    let sig_e = anchors::INT8_MULT.energy_pj * (m as f64 / 8.0).powi(2);
+    let norm_e = 0.722 * (w / 16.0).powf(1.4);
+    UnitCost { area_um2: area, energy_pj: sig_e + norm_e }
+}
+
+/// Floating-point adder: dominated by alignment/normalization shifters,
+/// ~linear in significand width; calibrated at the FP16/FP32 anchors.
+pub fn fp_add(m: u32, e: u32) -> UnitCost {
+    let w = (m + e) as f64;
+    // fp16: w=16 -> 1360, fp32: w=32 -> 4184. Fit a*w^1.62.
+    let area = 1360.0 * (w / 16.0).powf(1.62);
+    let energy = 0.4 * (w / 16.0).powf(1.17);
+    UnitCost { area_um2: area, energy_pj: energy }
+}
+
+/// One BFP MAC lane: int multiplier at the mantissa width + a fixed-point
+/// accumulator wide enough for 2m + log2(N) bits of dot-product growth.
+pub fn bfp_mac(mantissa_bits: u32, acc_bits: u32) -> UnitCost {
+    let m = int_mult(mantissa_bits);
+    let a = int_add(acc_bits);
+    UnitCost { area_um2: m.area_um2 + a.area_um2, energy_pj: m.energy_pj + a.energy_pj }
+}
+
+/// One FP MAC lane (the paper's FP16 comparison point accumulates in FP16
+/// on the FPGA variant; pass (11,5) twice for that, or an FP32 adder for a
+/// mixed-precision tensor-core-style unit).
+pub fn fp_mac(mult_m: u32, mult_e: u32, add_m: u32, add_e: u32) -> UnitCost {
+    let m = fp_mult(mult_m, mult_e);
+    let a = fp_add(add_m, add_e);
+    UnitCost { area_um2: m.area_um2 + a.area_um2, energy_pj: m.energy_pj + a.energy_pj }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_ratio_fp16_over_int8_mult() {
+        // "8-bit fixed-point multipliers occupy 5.8x less area and consume
+        // 5.5x less energy than their FP16 counterpart"
+        let area_ratio = anchors::FP16_MULT.area_um2 / anchors::INT8_MULT.area_um2;
+        let energy_ratio = anchors::FP16_MULT.energy_pj / anchors::INT8_MULT.energy_pj;
+        assert!((area_ratio - 5.8).abs() < 0.05, "area ratio {area_ratio}");
+        assert!((energy_ratio - 5.5).abs() < 0.05, "energy ratio {energy_ratio}");
+    }
+
+    #[test]
+    fn paper_ratio_fp32_over_fp16_mult() {
+        // "the area of an FP16 multiplier is 4.7x smaller than ... FP32"
+        let r = anchors::FP32_MULT.area_um2 / anchors::FP16_MULT.area_um2;
+        assert!((r - 4.7).abs() < 0.05, "ratio {r}");
+    }
+
+    #[test]
+    fn fp_mult_model_hits_anchors() {
+        let fp16 = fp_mult(11, 5);
+        let fp32 = fp_mult(24, 8);
+        assert!(
+            (fp16.area_um2 - anchors::FP16_MULT.area_um2).abs() / anchors::FP16_MULT.area_um2 < 0.05,
+            "fp16 model {} vs anchor {}",
+            fp16.area_um2,
+            anchors::FP16_MULT.area_um2
+        );
+        assert!(
+            (fp32.area_um2 - anchors::FP32_MULT.area_um2).abs() / anchors::FP32_MULT.area_um2 < 0.1,
+            "fp32 model {} vs anchor {}",
+            fp32.area_um2,
+            anchors::FP32_MULT.area_um2
+        );
+    }
+
+    #[test]
+    fn fp_add_model_hits_anchors() {
+        let fp16 = fp_add(11, 5);
+        let fp32 = fp_add(24, 8);
+        assert!((fp16.area_um2 - 1360.0).abs() < 1.0);
+        assert!((fp32.area_um2 - 4184.0).abs() / 4184.0 < 0.02, "{}", fp32.area_um2);
+    }
+
+    #[test]
+    fn int_scaling_monotone() {
+        assert!(int_mult(12).area_um2 > int_mult(8).area_um2);
+        assert!(int_mult(16).area_um2 > int_mult(12).area_um2);
+        assert!(int_add(24).area_um2 > int_add(16).area_um2);
+        // quadratic: 16-bit mult = 4x the 8-bit one
+        assert!((int_mult(16).area_um2 / int_mult(8).area_um2 - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn bfp_mac_vs_fp16_mac_density() {
+        // The core density claim: a BFP8 MAC (int8 mult + 24-bit acc) is
+        // several times smaller than an FP16 MAC.
+        let bfp = bfp_mac(8, 24);
+        let fp16 = fp_mac(11, 5, 11, 5);
+        let ratio = fp16.area_um2 / bfp.area_um2;
+        assert!(ratio > 5.0, "ratio {ratio} too small");
+    }
+}

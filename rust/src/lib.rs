@@ -1,0 +1,26 @@
+//! # HBFP — Training DNNs with Hybrid Block Floating Point
+//!
+//! Full-stack reproduction of Drumond et al., NIPS 2018: all dot products
+//! in block floating point (shared-exponent fixed-point mantissas), all
+//! other ops in FP32.
+//!
+//! Three layers (DESIGN.md):
+//!
+//! - **L1** (`python/compile/kernels/`): Pallas BFP matmul/quantize kernels.
+//! - **L2** (`python/compile/`): JAX models + HBFP training step, AOT-lowered
+//!   to HLO text under `artifacts/`.
+//! - **L3** (this crate): the training framework — data pipeline, trainer,
+//!   experiment harnesses — plus the paper's substrates: a software BFP
+//!   arithmetic library (`bfp`), the Figure-2 accelerator area/throughput
+//!   model (`accel`, `hw`), and the PJRT runtime (`runtime`).
+//!
+//! Python never runs at training time; the `hbfp` binary is self-contained
+//! once `make artifacts` has produced the HLO modules.
+
+pub mod accel;
+pub mod bfp;
+pub mod coordinator;
+pub mod data;
+pub mod hw;
+pub mod runtime;
+pub mod util;

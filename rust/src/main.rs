@@ -1,0 +1,154 @@
+//! `hbfp` — the launcher.
+//!
+//! ```text
+//! hbfp list                               # combos available in artifacts/
+//! hbfp train <combo> [--steps N] [--lr S] [--seed K] [--eval-every N]
+//! hbfp repro <table1|table2|table3|fig3|mantissa|tiles|attention|throughput|all>
+//!            [--steps N] [--seed K]
+//! hbfp accel-report                       # area/throughput model table
+//! ```
+//!
+//! Artifacts are read from `--artifacts DIR` (default `artifacts/`),
+//! results written under `--results DIR` (default `results/`).
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use anyhow::{anyhow, Context, Result};
+
+use hbfp::coordinator::{parse_schedule, repro, RunConfig, Sweep, Trainer};
+use hbfp::runtime::Manifest;
+use hbfp::util::cli::Args;
+
+fn init_logging(verbose: bool) {
+    struct Logger {
+        verbose: bool,
+    }
+    impl log::Log for Logger {
+        fn enabled(&self, metadata: &log::Metadata) -> bool {
+            metadata.level() <= if self.verbose { log::Level::Debug } else { log::Level::Info }
+        }
+        fn log(&self, record: &log::Record) {
+            if self.enabled(record.metadata()) {
+                eprintln!("[{}] {}", record.level().as_str().to_lowercase(), record.args());
+            }
+        }
+        fn flush(&self) {}
+    }
+    let logger = Box::leak(Box::new(Logger { verbose }));
+    let _ = log::set_logger(logger);
+    log::set_max_level(if verbose { log::LevelFilter::Debug } else { log::LevelFilter::Info });
+}
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    init_logging(args.has_flag("verbose"));
+    let artifacts = PathBuf::from(args.opt_or("artifacts", "artifacts"));
+    let results = PathBuf::from(args.opt_or("results", "results"));
+
+    match args.command.as_deref() {
+        Some("list") => {
+            let manifest = Manifest::load(&artifacts)?;
+            for combo in manifest.combos() {
+                println!("{combo}");
+            }
+            Ok(())
+        }
+        Some("train") => {
+            let combo = args
+                .positional
+                .first()
+                .ok_or_else(|| anyhow!("usage: hbfp train <combo> [--steps N]"))?;
+            let steps = args.opt_usize("steps", 200)?;
+            let manifest = Arc::new(Manifest::load(&artifacts)?);
+            let mut cfg = RunConfig::new(combo, steps)
+                .with_seed(args.opt_u64("seed", 0)?)
+                .with_eval_every(args.opt_usize("eval-every", 0)?);
+            let model = cfg.model().to_string();
+            let base = hbfp::coordinator::default_base_lr(&model);
+            cfg = cfg.with_lr(parse_schedule(
+                &args.opt_or("lr", &format!("{base}")),
+                steps,
+            )?);
+            if args.has_flag("checkpoint") {
+                cfg.checkpoint_dir = Some(results.join("checkpoints"));
+            }
+            let trainer = Trainer::new(manifest)?;
+            let r = trainer.run(&cfg)?;
+            std::fs::create_dir_all(&results)?;
+            let out = results.join(format!("{combo}_train.json"));
+            std::fs::write(&out, r.summary_json().to_string())
+                .with_context(|| format!("writing {out:?}"))?;
+            println!(
+                "{combo}: final val err {:.2}%  loss {:.4}  ({:.1} steps/s, result -> {out:?})",
+                r.final_error * 100.0,
+                r.final_loss,
+                r.history.throughput().unwrap_or(0.0)
+            );
+            Ok(())
+        }
+        Some("repro") => {
+            let what = args.positional.first().map(|s| s.as_str()).unwrap_or("all");
+            if what == "throughput" {
+                repro::throughput();
+                return Ok(());
+            }
+            let steps = args.opt_usize("steps", 300)?;
+            let seed = args.opt_u64("seed", 0)?;
+            let manifest = Arc::new(Manifest::load(&artifacts)?);
+            let sweep = Sweep::new(manifest, &results)?;
+            match what {
+                "table1" => {
+                    repro::table1(&sweep, steps, seed)?;
+                }
+                "table2" => {
+                    repro::table2(&sweep, steps, seed)?;
+                }
+                "table3" => {
+                    repro::table3(&sweep, steps, seed)?;
+                }
+                "fig3" => {
+                    repro::fig3(&sweep, steps, seed)?;
+                }
+                "mantissa" => {
+                    repro::mantissa_sweep(&sweep, steps, seed)?;
+                }
+                "tiles" => {
+                    repro::tile_sweep(&sweep, steps, seed)?;
+                }
+                "attention" => {
+                    repro::attention(&sweep, steps, seed)?;
+                }
+                "all" => {
+                    repro::table1(&sweep, steps, seed)?;
+                    repro::table2(&sweep, steps, seed)?;
+                    repro::table3(&sweep, steps, seed)?;
+                    repro::fig3(&sweep, steps, seed)?;
+                    repro::mantissa_sweep(&sweep, steps, seed)?;
+                    repro::tile_sweep(&sweep, steps, seed)?;
+                    repro::attention(&sweep, steps, seed)?;
+                    repro::throughput();
+                }
+                other => return Err(anyhow!("unknown repro target {other:?}")),
+            }
+            Ok(())
+        }
+        Some("report") => {
+            let rows = hbfp::coordinator::report::load_results(&results)?;
+            println!("{}", hbfp::coordinator::report::render_markdown(&rows));
+            Ok(())
+        }
+        Some("accel-report") => {
+            repro::throughput();
+            Ok(())
+        }
+        other => {
+            eprintln!(
+                "hbfp — HBFP training framework (NIPS'18 reproduction)\n\
+                 commands: list | train <combo> | repro <target> | report | accel-report\n\
+                 (got {other:?})"
+            );
+            Err(anyhow!("unknown command"))
+        }
+    }
+}

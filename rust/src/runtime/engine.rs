@@ -1,0 +1,181 @@
+//! PJRT execution engine: load AOT HLO-text artifacts and run them from
+//! the rust hot path.
+//!
+//! Python never runs here — `make artifacts` produced the HLO text once;
+//! this module parses it with XLA's text parser (which reassigns the 64-bit
+//! instruction ids jax >= 0.5 emits — see DESIGN.md §2), compiles on the
+//! PJRT CPU client, and executes.
+//!
+//! ## Tuple note (affects the hot path)
+//!
+//! jax lowers multi-output functions to a tuple-rooted HLO module, and the
+//! `xla` crate's execute does NOT set `untuple_result`, so every call
+//! returns ONE tuple buffer. We therefore keep training state as host
+//! `Literal`s: fetch the tuple literal, split it with `Literal::to_tuple`,
+//! and feed the pieces back as parameters next step. On the CPU platform
+//! PJRT buffers live in host memory, so this costs one memcpy per tensor
+//! per step (measured in the §Perf pass; negligible against step compute).
+
+use std::time::Instant;
+
+use anyhow::{anyhow, Context, Result};
+
+use super::manifest::{Artifact, DType, TensorSpec};
+
+/// Host-side tensor (row-major), the boundary type between the data
+/// pipeline / metrics and the device.
+#[derive(Debug, Clone, PartialEq)]
+pub enum HostTensor {
+    F32(Vec<f32>, Vec<usize>),
+    I32(Vec<i32>, Vec<usize>),
+}
+
+impl HostTensor {
+    pub fn scalar_f32(v: f32) -> HostTensor {
+        HostTensor::F32(vec![v], vec![])
+    }
+
+    pub fn scalar_i32(v: i32) -> HostTensor {
+        HostTensor::I32(vec![v], vec![])
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            HostTensor::F32(_, s) | HostTensor::I32(_, s) => s,
+        }
+    }
+
+    pub fn dtype(&self) -> DType {
+        match self {
+            HostTensor::F32(..) => DType::F32,
+            HostTensor::I32(..) => DType::I32,
+        }
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            HostTensor::F32(v, _) => Ok(v),
+            _ => Err(anyhow!("tensor is not f32")),
+        }
+    }
+
+    /// Check against a manifest spec (shape + dtype), with a useful message.
+    pub fn check(&self, spec: &TensorSpec) -> Result<()> {
+        if self.shape() != spec.shape.as_slice() || self.dtype() != spec.dtype {
+            return Err(anyhow!(
+                "tensor {:?}: expected {:?} {:?}, got {:?} {:?}",
+                spec.name,
+                spec.dtype,
+                spec.shape,
+                self.dtype(),
+                self.shape()
+            ));
+        }
+        Ok(())
+    }
+
+    /// Convert to an XLA literal (one memcpy).
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> = self.shape().iter().map(|&d| d as i64).collect();
+        let lit = match self {
+            HostTensor::F32(v, _) => xla::Literal::vec1(v),
+            HostTensor::I32(v, _) => xla::Literal::vec1(v),
+        };
+        lit.reshape(&dims).context("reshaping literal")
+    }
+}
+
+/// The PJRT client wrapper.
+pub struct Engine {
+    client: xla::PjRtClient,
+}
+
+impl Engine {
+    pub fn new() -> Result<Engine> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Engine { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile one artifact. Compilation happens once per program;
+    /// the executable is reusable across the whole training run.
+    pub fn load(&self, art: &Artifact) -> Result<Program> {
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            art.file.to_str().context("artifact path not utf-8")?,
+        )
+        .with_context(|| format!("parsing HLO text {:?}", art.file))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).with_context(|| format!("compiling {}", art.name))?;
+        let compile_secs = t0.elapsed().as_secs_f64();
+        log::debug!("compiled {} in {compile_secs:.2}s", art.name);
+        Ok(Program { exe, art: art.clone(), compile_secs })
+    }
+}
+
+/// A compiled artifact ready to execute.
+pub struct Program {
+    exe: xla::PjRtLoadedExecutable,
+    pub art: Artifact,
+    pub compile_secs: f64,
+}
+
+impl Program {
+    /// Execute with literal arguments; returns one literal per manifest
+    /// output (splitting the tuple root — see module docs).
+    pub fn run<L: std::borrow::Borrow<xla::Literal>>(&self, args: &[L]) -> Result<Vec<xla::Literal>> {
+        if args.len() != self.art.inputs.len() {
+            return Err(anyhow!(
+                "{}: expected {} inputs, got {}",
+                self.art.name,
+                self.art.inputs.len(),
+                args.len()
+            ));
+        }
+        let mut out =
+            self.exe.execute::<L>(args).with_context(|| format!("executing {}", self.art.name))?;
+        let replica0 = out.drain(..).next().ok_or_else(|| anyhow!("no replica outputs"))?;
+        let buf = replica0
+            .into_iter()
+            .next()
+            .ok_or_else(|| anyhow!("{}: empty output list", self.art.name))?;
+        let lit = buf.to_literal_sync().context("fetching result")?;
+        let parts = if self.art.outputs.len() == 1 {
+            vec![lit]
+        } else {
+            lit.to_tuple().with_context(|| format!("untupling {} outputs", self.art.name))?
+        };
+        if parts.len() != self.art.outputs.len() {
+            return Err(anyhow!(
+                "{}: manifest promises {} outputs, runtime returned {}",
+                self.art.name,
+                self.art.outputs.len(),
+                parts.len()
+            ));
+        }
+        Ok(parts)
+    }
+
+    /// Execute with host tensors (validated against the manifest specs);
+    /// convenience for init and tests.
+    pub fn run_host(&self, args: &[HostTensor]) -> Result<Vec<xla::Literal>> {
+        for (t, spec) in args.iter().zip(&self.art.inputs) {
+            t.check(spec)?;
+        }
+        let lits = args.iter().map(|t| t.to_literal()).collect::<Result<Vec<_>>>()?;
+        self.run(&lits)
+    }
+}
+
+/// Fetch a literal as f32 data.
+pub fn fetch_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
+    lit.to_vec::<f32>().context("literal not f32")
+}
+
+/// Fetch a scalar f32 output (loss, accuracy, ...).
+pub fn fetch_scalar_f32(lit: &xla::Literal) -> Result<f32> {
+    lit.get_first_element::<f32>().context("reading scalar literal")
+}

@@ -1,0 +1,258 @@
+//! Typed view of `artifacts/manifest.json` (written by `python -m compile.aot`).
+//!
+//! The manifest is the L2→L3 contract: for every artifact it pins the HLO
+//! file, the flat input/output order (state leaves first), tensor shapes
+//! and dtypes, and the dataset dimensions the data pipeline must generate.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::Json;
+
+/// Element type of a tensor edge. Mirrors aot.py's `_dtype_str`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+    U32,
+}
+
+impl DType {
+    pub fn parse(s: &str) -> Result<DType> {
+        match s {
+            "f32" => Ok(DType::F32),
+            "i32" => Ok(DType::I32),
+            "u32" => Ok(DType::U32),
+            _ => Err(anyhow!("unknown dtype {s:?}")),
+        }
+    }
+
+    pub fn size_bytes(self) -> usize {
+        4
+    }
+}
+
+/// Shape + dtype + logical name of one tensor edge.
+#[derive(Debug, Clone)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl TensorSpec {
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn parse(j: &Json) -> Result<TensorSpec> {
+        Ok(TensorSpec {
+            name: j.req("name")?.as_str().context("name not a string")?.to_string(),
+            shape: j
+                .req("shape")?
+                .as_arr()
+                .context("shape not an array")?
+                .iter()
+                .map(|d| d.as_usize().context("shape dim not a number"))
+                .collect::<Result<_>>()?,
+            dtype: DType::parse(j.req("dtype")?.as_str().context("dtype not a string")?)?,
+        })
+    }
+}
+
+/// The role of an artifact within a combo.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Role {
+    Init,
+    Train,
+    Eval,
+}
+
+impl Role {
+    pub fn parse(s: &str) -> Result<Role> {
+        match s {
+            "init" => Ok(Role::Init),
+            "train" => Ok(Role::Train),
+            "eval" => Ok(Role::Eval),
+            _ => Err(anyhow!("unknown role {s:?}")),
+        }
+    }
+
+    pub fn suffix(self) -> &'static str {
+        match self {
+            Role::Init => "init",
+            Role::Train => "train",
+            Role::Eval => "eval",
+        }
+    }
+}
+
+/// One AOT-compiled HLO module and its I/O contract.
+#[derive(Debug, Clone)]
+pub struct Artifact {
+    pub name: String,
+    pub file: PathBuf,
+    pub role: Role,
+    pub model: String,
+    pub dataset: String,
+    pub config: String,
+    /// Number of leading inputs (and outputs, for train) that are training
+    /// state fed back step-over-step.
+    pub state_len: usize,
+    pub batch: usize,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// Dataset dimensions (the rust generators consume these).
+#[derive(Debug, Clone)]
+pub enum DatasetSpec {
+    Image { hw: usize, channels: usize, classes: usize },
+    Text { vocab: usize, seq: usize },
+}
+
+/// The whole manifest.
+#[derive(Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub datasets: BTreeMap<String, DatasetSpec>,
+    pub artifacts: BTreeMap<String, Artifact>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?}; run `make artifacts` first"))?;
+        let j = Json::parse(&text).with_context(|| format!("parsing {path:?}"))?;
+
+        let mut datasets = BTreeMap::new();
+        for (name, d) in j.req("datasets")?.as_obj().context("datasets not an object")? {
+            let kind = d.req("kind")?.as_str().context("kind")?;
+            let spec = match kind {
+                "image" => DatasetSpec::Image {
+                    hw: d.req("hw")?.as_usize().context("hw")?,
+                    channels: d.req("channels")?.as_usize().context("channels")?,
+                    classes: d.req("classes")?.as_usize().context("classes")?,
+                },
+                "text" => DatasetSpec::Text {
+                    vocab: d.req("vocab")?.as_usize().context("vocab")?,
+                    seq: d.req("seq")?.as_usize().context("seq")?,
+                },
+                _ => return Err(anyhow!("unknown dataset kind {kind:?}")),
+            };
+            datasets.insert(name.clone(), spec);
+        }
+
+        let mut artifacts = BTreeMap::new();
+        for (name, a) in j.req("artifacts")?.as_obj().context("artifacts not an object")? {
+            let parse_specs = |key: &str| -> Result<Vec<TensorSpec>> {
+                a.req(key)?
+                    .as_arr()
+                    .with_context(|| format!("{key} not an array"))?
+                    .iter()
+                    .map(TensorSpec::parse)
+                    .collect()
+            };
+            let art = Artifact {
+                name: name.clone(),
+                file: dir.join(a.req("file")?.as_str().context("file")?),
+                role: Role::parse(a.req("role")?.as_str().context("role")?)?,
+                model: a.req("model")?.as_str().context("model")?.to_string(),
+                dataset: a.req("dataset")?.as_str().context("dataset")?.to_string(),
+                config: a.req("config")?.as_str().context("config")?.to_string(),
+                state_len: a.req("state_len")?.as_usize().context("state_len")?,
+                batch: a.req("batch")?.as_usize().context("batch")?,
+                inputs: parse_specs("inputs")?,
+                outputs: parse_specs("outputs")?,
+            };
+            artifacts.insert(name.clone(), art);
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), datasets, artifacts })
+    }
+
+    /// Artifact for `"{model}-{dataset}-{config}"` and a role.
+    pub fn artifact(&self, combo: &str, role: Role) -> Result<&Artifact> {
+        let key = format!("{combo}__{}", role.suffix());
+        self.artifacts
+            .get(&key)
+            .ok_or_else(|| anyhow!("artifact {key:?} not in manifest (available combos: run `hbfp list`)"))
+    }
+
+    pub fn dataset(&self, name: &str) -> Result<&DatasetSpec> {
+        self.datasets.get(name).ok_or_else(|| anyhow!("unknown dataset {name:?}"))
+    }
+
+    /// All combo names (deduped from artifact keys).
+    pub fn combos(&self) -> Vec<String> {
+        let mut v: Vec<String> = self
+            .artifacts
+            .keys()
+            .filter_map(|k| k.split_once("__").map(|(c, _)| c.to_string()))
+            .collect();
+        v.dedup();
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_manifest() -> &'static str {
+        r#"{
+          "version": 1,
+          "datasets": {
+            "d1": {"kind": "image", "hw": 16, "channels": 3, "classes": 10},
+            "t1": {"kind": "text", "vocab": 32, "seq": 48}
+          },
+          "artifacts": {
+            "m-d1-fp32__train": {
+              "file": "m-d1-fp32__train.hlo.txt", "role": "train",
+              "model": "m", "dataset": "d1", "config": "fp32",
+              "state_len": 2, "batch": 32,
+              "inputs": [
+                {"name": "state/p/w", "shape": [4, 4], "dtype": "f32"},
+                {"name": "state/m/w", "shape": [4, 4], "dtype": "f32"},
+                {"name": "x", "shape": [32, 16, 16, 3], "dtype": "f32"},
+                {"name": "y", "shape": [32], "dtype": "i32"},
+                {"name": "lr", "shape": [], "dtype": "f32"}
+              ],
+              "outputs": [
+                {"name": "state/p/w", "shape": [4, 4], "dtype": "f32"},
+                {"name": "state/m/w", "shape": [4, 4], "dtype": "f32"},
+                {"name": "loss", "shape": [], "dtype": "f32"},
+                {"name": "acc", "shape": [], "dtype": "f32"}
+              ]
+            }
+          }
+        }"#
+    }
+
+    #[test]
+    fn parses_sample() {
+        let dir = std::env::temp_dir().join("hbfp_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), sample_manifest()).unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.combos(), vec!["m-d1-fp32"]);
+        let a = m.artifact("m-d1-fp32", Role::Train).unwrap();
+        assert_eq!(a.state_len, 2);
+        assert_eq!(a.inputs.len(), 5);
+        assert_eq!(a.inputs[2].shape, vec![32, 16, 16, 3]);
+        assert_eq!(a.inputs[3].dtype, DType::I32);
+        assert!(matches!(m.dataset("t1").unwrap(), DatasetSpec::Text { vocab: 32, seq: 48 }));
+        assert!(m.artifact("m-d1-fp32", Role::Eval).is_err());
+    }
+
+    #[test]
+    fn missing_key_is_actionable() {
+        let dir = std::env::temp_dir().join("hbfp_manifest_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), r#"{"datasets": {}}"#).unwrap();
+        let err = Manifest::load(&dir).unwrap_err().to_string();
+        assert!(err.contains("artifacts"), "{err}");
+    }
+}

@@ -1,0 +1,12 @@
+//! Runtime layer: manifest parsing + PJRT engine.
+//!
+//! `Manifest` (what artifacts exist, their I/O contracts) + `Engine`
+//! (compile & execute them with device-resident state). Everything above
+//! this layer — the trainer, harnesses, examples — is backend-agnostic
+//! rust; everything below is XLA.
+
+pub mod engine;
+pub mod manifest;
+
+pub use engine::{fetch_f32, fetch_scalar_f32, Engine, HostTensor, Program};
+pub use manifest::{Artifact, DType, DatasetSpec, Manifest, Role, TensorSpec};

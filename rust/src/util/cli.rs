@@ -1,0 +1,115 @@
+//! Tiny argument parser for the launcher (no `clap` in the vendored set).
+//!
+//! Grammar: `hbfp <command> [positional...] [--flag] [--key value]...`.
+//! Flags may also be written `--key=value`.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub command: Option<String>,
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of argument strings (exclusive of argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(it: I) -> Args {
+        let mut args = Args::default();
+        let mut iter = it.into_iter().peekable();
+        while let Some(a) = iter.next() {
+            if let Some(key) = a.strip_prefix("--") {
+                if let Some((k, v)) = key.split_once('=') {
+                    args.options.insert(k.to_string(), v.to_string());
+                } else if iter.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = iter.next().unwrap();
+                    args.options.insert(key.to_string(), v);
+                } else {
+                    args.flags.push(key.to_string());
+                }
+            } else if args.command.is_none() {
+                args.command = Some(a);
+            } else {
+                args.positional.push(a);
+            }
+        }
+        args
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn opt(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn opt_or(&self, key: &str, default: &str) -> String {
+        self.opt(key).unwrap_or(default).to_string()
+    }
+
+    pub fn opt_usize(&self, key: &str, default: usize) -> anyhow::Result<usize> {
+        match self.opt(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow::anyhow!("--{key} expects an integer, got {v:?}")),
+        }
+    }
+
+    pub fn opt_f32(&self, key: &str, default: f32) -> anyhow::Result<f32> {
+        match self.opt(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow::anyhow!("--{key} expects a float, got {v:?}")),
+        }
+    }
+
+    pub fn opt_u64(&self, key: &str, default: u64) -> anyhow::Result<u64> {
+        match self.opt(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow::anyhow!("--{key} expects an integer, got {v:?}")),
+        }
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn basic() {
+        let a = parse("train combo1 --steps 200 --lr 0.1 --verbose");
+        assert_eq!(a.command.as_deref(), Some("train"));
+        assert_eq!(a.positional, vec!["combo1"]);
+        assert_eq!(a.opt("steps"), Some("200"));
+        assert_eq!(a.opt_f32("lr", 0.0).unwrap(), 0.1);
+        assert!(a.has_flag("verbose"));
+    }
+
+    #[test]
+    fn eq_form_and_defaults() {
+        let a = parse("bench --steps=5");
+        assert_eq!(a.opt_usize("steps", 0).unwrap(), 5);
+        assert_eq!(a.opt_usize("missing", 7).unwrap(), 7);
+    }
+
+    #[test]
+    fn bad_numeric() {
+        let a = parse("x --steps nope");
+        assert!(a.opt_usize("steps", 0).is_err());
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let a = parse("repro table1 --force");
+        assert!(a.has_flag("force"));
+        assert_eq!(a.positional, vec!["table1"]);
+    }
+}

@@ -1,0 +1,61 @@
+//! Shared substrates: JSON, CLI parsing, RNGs, property-test runner,
+//! timing helpers. These exist in-repo because the offline vendored crate
+//! set lacks serde/clap/rand/proptest/criterion (DESIGN.md §7).
+
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+
+use std::time::Instant;
+
+/// Measure wall time of `f`, returning (result, seconds).
+pub fn timed<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t0 = Instant::now();
+    let r = f();
+    (r, t0.elapsed().as_secs_f64())
+}
+
+/// Simple stats over a sample of seconds (used by the bench harnesses).
+#[derive(Debug, Clone, Copy)]
+pub struct Stats {
+    pub n: usize,
+    pub mean: f64,
+    pub median: f64,
+    pub p10: f64,
+    pub p90: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+impl Stats {
+    pub fn from(mut xs: Vec<f64>) -> Stats {
+        assert!(!xs.is_empty());
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let q = |p: f64| xs[((xs.len() - 1) as f64 * p).round() as usize];
+        Stats {
+            n: xs.len(),
+            mean: xs.iter().sum::<f64>() / xs.len() as f64,
+            median: q(0.5),
+            p10: q(0.1),
+            p90: q(0.9),
+            min: xs[0],
+            max: xs[xs.len() - 1],
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_quantiles() {
+        let s = Stats::from((1..=100).map(|i| i as f64).collect());
+        assert_eq!(s.n, 100);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 100.0);
+        assert!((s.median - 50.0).abs() <= 1.0);
+        assert!((s.p90 - 90.0).abs() <= 1.0);
+    }
+}

@@ -1,0 +1,128 @@
+//! Mini property-testing runner (proptest is not in the vendored crate set).
+//!
+//! A `Gen` wraps a seeded `SplitMix64`; properties are closures over a
+//! `&mut Gen` returning `Result<(), String>`. `check` runs N seeded cases
+//! and, on failure, retries the failing case with progressively "smaller"
+//! size hints to report a reduced example. Deterministic: failures print
+//! the seed, and `HBFP_PROP_SEED` reruns a single case.
+
+use super::rng::SplitMix64;
+
+pub struct Gen {
+    pub rng: SplitMix64,
+    /// Size hint in [0, 1]; generators scale their output magnitude by it,
+    /// which is what makes the shrink pass produce smaller counterexamples.
+    pub size: f64,
+}
+
+impl Gen {
+    pub fn new(seed: u64) -> Self {
+        Self { rng: SplitMix64::new(seed), size: 1.0 }
+    }
+
+    /// Integer in [lo, hi], scaled toward lo when shrinking.
+    pub fn int(&mut self, lo: usize, hi: usize) -> usize {
+        let span = ((hi - lo) as f64 * self.size).max(0.0) as usize;
+        lo + if span == 0 { 0 } else { self.rng.below(span + 1) }
+    }
+
+    /// f32 in [-scale, scale], scale shrunk by the size hint.
+    pub fn f32_sym(&mut self, scale: f32) -> f32 {
+        let s = scale * self.size as f32;
+        self.rng.range_f32(-s, s)
+    }
+
+    /// Standard-normal-ish value with a random scale spanning `decades`
+    /// orders of magnitude — exercises the exponent-selection paths.
+    pub fn f32_wide(&mut self, decades: i32) -> f32 {
+        let d = (self.rng.next_f32() * 2.0 - 1.0) * decades as f32 * self.size as f32;
+        self.rng.normal() * 10f32.powf(d)
+    }
+
+    pub fn vec_f32(&mut self, len: usize, decades: i32) -> Vec<f32> {
+        (0..len).map(|_| self.f32_wide(decades)).collect()
+    }
+
+    pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.below(xs.len())]
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 1
+    }
+}
+
+/// Run `cases` seeded cases of `prop`. Panics with seed + message on the
+/// first failure, after attempting a smaller repro via the size hint.
+pub fn check<F>(name: &str, cases: u64, mut prop: F)
+where
+    F: FnMut(&mut Gen) -> Result<(), String>,
+{
+    let forced: Option<u64> = std::env::var("HBFP_PROP_SEED").ok().and_then(|s| s.parse().ok());
+    let seeds: Vec<u64> = match forced {
+        Some(s) => vec![s],
+        None => (0..cases).map(|i| 0x5eed_0000 + i).collect(),
+    };
+    for seed in seeds {
+        let mut g = Gen::new(seed);
+        if let Err(msg) = prop(&mut g) {
+            // Shrink pass: same seed, smaller size hints.
+            let mut best = (1.0f64, msg.clone());
+            for &size in &[0.5, 0.25, 0.1, 0.05] {
+                let mut g2 = Gen::new(seed);
+                g2.size = size;
+                if let Err(m2) = prop(&mut g2) {
+                    best = (size, m2);
+                }
+            }
+            panic!(
+                "property {name:?} failed (seed {seed}, rerun with HBFP_PROP_SEED={seed}):\n  \
+                 at size {:.2}: {}",
+                best.0, best.1
+            );
+        }
+    }
+}
+
+/// Assert helper for properties.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !$cond {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        check("sym range", 50, |g| {
+            let x = g.f32_sym(10.0);
+            if x.abs() <= 10.0 {
+                Ok(())
+            } else {
+                Err(format!("|{x}| > 10"))
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property \"always fails\"")]
+    fn reports_failures() {
+        check("always fails", 3, |g| {
+            let v = g.vec_f32(4, 1);
+            Err(format!("len {}", v.len()))
+        });
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let mut a = Gen::new(9);
+        let mut b = Gen::new(9);
+        assert_eq!(a.vec_f32(8, 3), b.vec_f32(8, 3));
+    }
+}

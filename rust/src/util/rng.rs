@@ -1,0 +1,175 @@
+//! Deterministic RNGs for data generation, stochastic rounding, and tests.
+//!
+//! `Xorshift32` is the generator the paper's FPGA prototype uses for
+//! stochastic rounding (§5.3, citing Marsaglia'03): three shifts + three
+//! xors, small enough to instantiate per converter lane in hardware. The
+//! rust BFP library and the accelerator model use it so software results
+//! are reproducible against a hardware implementation bit-for-bit.
+//!
+//! `SplitMix64` seeds streams and powers the data pipeline, where 32-bit
+//! state would correlate across shards.
+
+/// Marsaglia xorshift32 — the paper's stochastic-rounding RNG.
+#[derive(Debug, Clone)]
+pub struct Xorshift32 {
+    state: u32,
+}
+
+impl Xorshift32 {
+    /// Seed must be non-zero (xorshift has an all-zero fixed point); zero
+    /// seeds are remapped to a fixed constant.
+    pub fn new(seed: u32) -> Self {
+        Self { state: if seed == 0 { 0x9e37_79b9 } else { seed } }
+    }
+
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        // The (13, 17, 5) triple from Marsaglia's paper — the same one the
+        // prototype synthesizes.
+        let mut x = self.state;
+        x ^= x << 13;
+        x ^= x >> 17;
+        x ^= x << 5;
+        self.state = x;
+        x
+    }
+
+    /// Uniform in [0, 1) with 24 bits of resolution (matches the mantissa
+    /// resolution relevant for stochastic rounding decisions).
+    #[inline]
+    pub fn next_f32(&mut self) -> f32 {
+        (self.next_u32() >> 8) as f32 * (1.0 / (1u32 << 24) as f32)
+    }
+}
+
+/// SplitMix64: fast, well-distributed 64-bit generator for seeding and data.
+#[derive(Debug, Clone)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9e37_79b9_7f4a_7c15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+        z ^ (z >> 31)
+    }
+
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        (self.next_u64() >> 32) as u32
+    }
+
+    /// Uniform in [0, 1).
+    #[inline]
+    pub fn next_f32(&mut self) -> f32 {
+        (self.next_u32() >> 8) as f32 * (1.0 / (1u32 << 24) as f32)
+    }
+
+    /// Uniform in [lo, hi).
+    #[inline]
+    pub fn range_f32(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + (hi - lo) * self.next_f32()
+    }
+
+    /// Uniform integer in [0, n).
+    #[inline]
+    pub fn below(&mut self, n: usize) -> usize {
+        (self.next_u64() % n as u64) as usize
+    }
+
+    /// Standard normal via Box–Muller (pairs cached would complicate state;
+    /// we just spend two uniforms per call — data generation is not hot).
+    pub fn normal(&mut self) -> f32 {
+        loop {
+            let u1 = self.next_f32();
+            if u1 > 1e-9 {
+                let u2 = self.next_f32();
+                let r = (-2.0 * u1.ln()).sqrt();
+                return r * (2.0 * std::f32::consts::PI * u2).cos();
+            }
+        }
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, v: &mut [T]) {
+        for i in (1..v.len()).rev() {
+            let j = self.below(i + 1);
+            v.swap(i, j);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn xorshift_nonzero_and_periodic_start() {
+        let mut a = Xorshift32::new(1);
+        let mut b = Xorshift32::new(1);
+        let seq_a: Vec<u32> = (0..8).map(|_| a.next_u32()).collect();
+        let seq_b: Vec<u32> = (0..8).map(|_| b.next_u32()).collect();
+        assert_eq!(seq_a, seq_b);
+        assert!(seq_a.iter().all(|&x| x != 0));
+    }
+
+    #[test]
+    fn xorshift_zero_seed_remapped() {
+        let mut r = Xorshift32::new(0);
+        assert_ne!(r.next_u32(), 0);
+    }
+
+    #[test]
+    fn uniform_in_range() {
+        let mut r = SplitMix64::new(42);
+        for _ in 0..1000 {
+            let f = r.next_f32();
+            assert!((0.0..1.0).contains(&f));
+        }
+        let mut x = Xorshift32::new(7);
+        for _ in 0..1000 {
+            let f = x.next_f32();
+            assert!((0.0..1.0).contains(&f));
+        }
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = SplitMix64::new(3);
+        let n = 20000;
+        let xs: Vec<f32> = (0..n).map(|_| r.normal()).collect();
+        let mean = xs.iter().sum::<f32>() / n as f32;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f32>() / n as f32;
+        assert!(mean.abs() < 0.05, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.1, "var {var}");
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = SplitMix64::new(5);
+        let mut v: Vec<usize> = (0..100).collect();
+        r.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(v, (0..100).collect::<Vec<_>>()); // astronomically unlikely
+    }
+
+    #[test]
+    fn splitmix_streams_diverge() {
+        let mut a = SplitMix64::new(1);
+        let mut b = SplitMix64::new(2);
+        assert_ne!(
+            (0..4).map(|_| a.next_u64()).collect::<Vec<_>>(),
+            (0..4).map(|_| b.next_u64()).collect::<Vec<_>>()
+        );
+    }
+}

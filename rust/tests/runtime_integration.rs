@@ -1,0 +1,165 @@
+//! Runtime integration: load real AOT artifacts, verify the manifest
+//! contract holds at the PJRT boundary — input arity, *untupled* output
+//! arity (the assumption the whole state-feedback design rests on),
+//! init determinism, and numeric sanity of a train step.
+//!
+//! Requires `make artifacts` (skips loudly otherwise).
+
+use std::path::Path;
+use std::sync::Arc;
+
+use hbfp::runtime::{fetch_f32, fetch_scalar_f32, Engine, HostTensor, Manifest, Role};
+
+fn manifest() -> Option<Arc<Manifest>> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    match Manifest::load(&dir) {
+        Ok(m) => Some(Arc::new(m)),
+        Err(e) => {
+            eprintln!("SKIP runtime_integration: {e:#} — run `make artifacts`");
+            None
+        }
+    }
+}
+
+const COMBO: &str = "mlp-cifar10like-fp32";
+
+#[test]
+fn init_outputs_match_manifest_and_are_deterministic() {
+    let Some(m) = manifest() else { return };
+    let engine = Engine::new().unwrap();
+    let art = m.artifact(COMBO, Role::Init).unwrap();
+    let prog = engine.load(art).unwrap();
+
+    let out1 = prog.run_host(&[HostTensor::scalar_i32(7)]).unwrap();
+    // The untupling contract: one PJRT buffer per manifest output.
+    assert_eq!(out1.len(), art.outputs.len());
+    assert_eq!(out1.len(), art.state_len);
+
+    let out2 = prog.run_host(&[HostTensor::scalar_i32(7)]).unwrap();
+    let out3 = prog.run_host(&[HostTensor::scalar_i32(8)]).unwrap();
+    // Compare the concatenation of all leaves (individual leaves may be
+    // legitimately zero — biases, momentum).
+    let cat = |outs: &[xla::Literal]| -> Vec<f32> {
+        outs.iter().flat_map(|l| fetch_f32(l).unwrap()).collect()
+    };
+    let (v1, v2, v3) = (cat(&out1), cat(&out2), cat(&out3));
+    assert_eq!(v1, v2, "same seed must give identical init");
+    assert_ne!(v1, v3, "different seeds must differ");
+    // He-normal init: finite, non-degenerate
+    assert!(v1.iter().all(|x| x.is_finite()));
+    assert!(v1.iter().any(|&x| x != 0.0));
+}
+
+#[test]
+fn train_step_roundtrip_decreases_loss() {
+    let Some(m) = manifest() else { return };
+    let engine = Engine::new().unwrap();
+    let init = engine.load(m.artifact(COMBO, Role::Init).unwrap()).unwrap();
+    let train_art = m.artifact(COMBO, Role::Train).unwrap();
+    let train = engine.load(train_art).unwrap();
+
+    let mut state = init.run_host(&[HostTensor::scalar_i32(0)]).unwrap();
+    // fixed batch: one distinct image per class-ish (random but fixed)
+    let n = train_art.batch;
+    let spec = &train_art.inputs[train_art.state_len];
+    let elems: usize = spec.shape.iter().product();
+    let x: Vec<f32> = (0..elems).map(|i| ((i * 2654435761) % 1000) as f32 / 500.0 - 1.0).collect();
+    let y: Vec<i32> = (0..n as i32).map(|i| i % 10).collect();
+    let xb = HostTensor::F32(x, spec.shape.clone()).to_literal().unwrap();
+    let yb = HostTensor::I32(y, vec![n]).to_literal().unwrap();
+    let lr = HostTensor::scalar_f32(0.1).to_literal().unwrap();
+
+    let mut first_loss = None;
+    let mut last_loss = 0.0;
+    for _ in 0..30 {
+        let mut args: Vec<&xla::Literal> = state.iter().collect();
+        args.push(&xb);
+        args.push(&yb);
+        args.push(&lr);
+        let mut out = train.run(&args).unwrap();
+        assert_eq!(out.len(), train_art.outputs.len(), "untupling contract (train)");
+        let acc = out.pop().unwrap();
+        let loss = fetch_scalar_f32(&out.pop().unwrap()).unwrap();
+        let _ = fetch_scalar_f32(&acc).unwrap();
+        state = out;
+        first_loss.get_or_insert(loss);
+        last_loss = loss;
+        assert!(loss.is_finite(), "loss must stay finite");
+    }
+    let first = first_loss.unwrap();
+    assert!(
+        last_loss < first * 0.5,
+        "overfitting one batch must collapse the loss: {first} -> {last_loss}"
+    );
+}
+
+#[test]
+fn eval_step_returns_metrics() {
+    let Some(m) = manifest() else { return };
+    let engine = Engine::new().unwrap();
+    let init = engine.load(m.artifact(COMBO, Role::Init).unwrap()).unwrap();
+    let eval_art = m.artifact(COMBO, Role::Eval).unwrap();
+    let eval = engine.load(eval_art).unwrap();
+
+    let state = init.run_host(&[HostTensor::scalar_i32(0)]).unwrap();
+    let n = eval_art.batch;
+    let spec = &eval_art.inputs[eval_art.state_len];
+    let elems: usize = spec.shape.iter().product();
+    let xb = HostTensor::F32(vec![0.1; elems], spec.shape.clone()).to_literal().unwrap();
+    let yb = HostTensor::I32(vec![0; n], vec![n]).to_literal().unwrap();
+    let mut args: Vec<&xla::Literal> = state.iter().collect();
+    args.push(&xb);
+    args.push(&yb);
+    let out = eval.run(&args).unwrap();
+    assert_eq!(out.len(), 2);
+    let loss_sum = fetch_scalar_f32(&out[0]).unwrap();
+    let correct = fetch_scalar_f32(&out[1]).unwrap();
+    // untrained model on 10 classes: loss near ln(10) per example
+    assert!(loss_sum > 0.0 && loss_sum.is_finite());
+    assert!((0.0..=n as f32).contains(&correct));
+}
+
+#[test]
+fn pallas_artifact_loads_and_runs() {
+    // The L1-bearing path: hbfpp8 artifacts contain the lowered Pallas
+    // kernel (grid while-loop). Compiling + stepping it proves the full
+    // L1 -> L2 -> L3 composition.
+    let Some(m) = manifest() else { return };
+    let engine = Engine::new().unwrap();
+    let combo = "mlp-cifar10like-hbfpp8_16_t24";
+    let init = engine.load(m.artifact(combo, Role::Init).unwrap()).unwrap();
+    let train_art = m.artifact(combo, Role::Train).unwrap();
+    let train = engine.load(train_art).unwrap();
+    let state = init.run_host(&[HostTensor::scalar_i32(1)]).unwrap();
+    let n = train_art.batch;
+    let spec = &train_art.inputs[train_art.state_len];
+    let elems: usize = spec.shape.iter().product();
+    let xb = HostTensor::F32(vec![0.5; elems], spec.shape.clone()).to_literal().unwrap();
+    let yb = HostTensor::I32(vec![1; n], vec![n]).to_literal().unwrap();
+    let lr = HostTensor::scalar_f32(0.05).to_literal().unwrap();
+    let mut args: Vec<&xla::Literal> = state.iter().collect();
+    args.push(&xb);
+    args.push(&yb);
+    args.push(&lr);
+    let out = train.run(&args).unwrap();
+    let loss = fetch_scalar_f32(&out[out.len() - 2]).unwrap();
+    assert!(loss.is_finite() && loss > 0.0, "pallas-path loss {loss}");
+}
+
+#[test]
+fn manifest_covers_all_experiment_combos() {
+    let Some(m) = manifest() else { return };
+    let combos = m.combos();
+    assert!(combos.len() >= 40, "expected >= 40 combos, got {}", combos.len());
+    for needed in [
+        "resnet_mini-cifar10like-fp_m2_e8",
+        "wrn_mini-cifar100like-hbfp8_16_tnone",
+        "lstm-ptblike-hbfp12_16_t24",
+        "resnet_mini-imagenetlike-hbfp8_16_t24",
+    ] {
+        assert!(
+            combos.iter().any(|c| c == needed),
+            "missing combo {needed} (run `make artifacts`)"
+        );
+    }
+}

@@ -1,0 +1,103 @@
+//! End-to-end trainer test: full Trainer::run over real artifacts with the
+//! synthetic data pipeline — short runs, but exercising init, prefetching,
+//! stepping, LR schedule, evaluation, history, checkpointing, and the
+//! hbfp-vs-fp32 comparison the whole repo exists to make.
+
+use std::path::Path;
+use std::sync::Arc;
+
+use hbfp::coordinator::{Checkpoint, LrSchedule, RunConfig, Trainer};
+use hbfp::runtime::{Manifest, Role};
+
+fn manifest() -> Option<Arc<Manifest>> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    match Manifest::load(&dir) {
+        Ok(m) => Some(Arc::new(m)),
+        Err(e) => {
+            eprintln!("SKIP trainer_e2e: {e:#} — run `make artifacts`");
+            None
+        }
+    }
+}
+
+#[test]
+fn mlp_fp32_short_run_learns() {
+    let Some(m) = manifest() else { return };
+    let trainer = Trainer::new(m).unwrap();
+    let cfg = RunConfig::new("mlp-cifar10like-fp32", 40)
+        .with_lr(LrSchedule::Constant { lr: 0.1 })
+        .with_eval_every(20);
+    let r = trainer.run(&cfg).unwrap();
+    assert!(!r.diverged);
+    assert!(r.history.evals.len() >= 2, "periodic + final evals");
+    let first = r.history.steps.first().unwrap().loss;
+    let last = r.history.tail_loss(5).unwrap();
+    assert!(last < first, "loss should decrease: {first} -> {last}");
+    // 10-class task: must beat chance by a margin after 40 steps
+    assert!(r.final_error < 0.85, "final error {}", r.final_error);
+}
+
+#[test]
+fn hbfp_tracks_fp32_on_mlp() {
+    let Some(m) = manifest() else { return };
+    let trainer = Trainer::new(m).unwrap();
+    let run = |combo: &str| {
+        let cfg = RunConfig::new(combo, 60).with_lr(LrSchedule::Constant { lr: 0.1 });
+        trainer.run(&cfg).unwrap()
+    };
+    let fp32 = run("mlp-cifar10like-fp32");
+    let hbfp = run("mlp-cifar10like-hbfpp8_16_t24");
+    assert!(!fp32.diverged && !hbfp.diverged);
+    // the paper's claim, scaled down: hbfp8_16 stays close to fp32
+    let gap = (hbfp.final_error - fp32.final_error).abs();
+    assert!(gap < 0.15, "hbfp-vs-fp32 gap {gap} too large (fp32 {}, hbfp {})",
+        fp32.final_error, hbfp.final_error);
+}
+
+#[test]
+fn deterministic_given_seed() {
+    let Some(m) = manifest() else { return };
+    let trainer = Trainer::new(m).unwrap();
+    let mk = || {
+        RunConfig::new("mlp-cifar10like-fp32", 10)
+            .with_seed(3)
+            .with_lr(LrSchedule::Constant { lr: 0.1 })
+    };
+    let a = trainer.run(&mk()).unwrap();
+    let b = trainer.run(&mk()).unwrap();
+    assert_eq!(a.final_loss, b.final_loss, "same seed => same run");
+    let steps_a: Vec<f32> = a.history.steps.iter().map(|s| s.loss).collect();
+    let steps_b: Vec<f32> = b.history.steps.iter().map(|s| s.loss).collect();
+    assert_eq!(steps_a, steps_b);
+}
+
+#[test]
+fn checkpoint_written_and_reloadable() {
+    let Some(m) = manifest() else { return };
+    let dir = std::env::temp_dir().join("hbfp_e2e_ckpt");
+    let _ = std::fs::remove_dir_all(&dir);
+    let trainer = Trainer::new(m.clone()).unwrap();
+    let mut cfg = RunConfig::new("mlp-cifar10like-fp32", 5)
+        .with_lr(LrSchedule::Constant { lr: 0.1 });
+    cfg.checkpoint_dir = Some(dir.clone());
+    trainer.run(&cfg).unwrap();
+    let path = dir.join("mlp-cifar10like-fp32.ckpt");
+    let ck = Checkpoint::load(&path).unwrap();
+    assert_eq!(ck.step, 5);
+    let art = m.artifact("mlp-cifar10like-fp32", Role::Train).unwrap();
+    ck.check_against("mlp-cifar10like-fp32", &art.inputs[..art.state_len]).unwrap();
+}
+
+#[test]
+fn lr_schedule_is_applied() {
+    let Some(m) = manifest() else { return };
+    let trainer = Trainer::new(m).unwrap();
+    let cfg = RunConfig::new("mlp-cifar10like-fp32", 20)
+        .with_lr(LrSchedule::StepDecay { base: 0.1, gamma: 0.1, milestones: vec![10] });
+    let mut c = cfg.clone();
+    c.log_every = 1;
+    let r = trainer.run(&c).unwrap();
+    let lr_at = |step: usize| r.history.steps.iter().find(|s| s.step == step).unwrap().lr;
+    assert_eq!(lr_at(5), 0.1);
+    assert!((lr_at(15) - 0.01).abs() < 1e-6);
+}
