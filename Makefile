@@ -1,0 +1,19 @@
+# Tooling entry points. `make check` is the PR gate: format, release
+# build, full test suite. `make perf` regenerates BENCH_bfp_ops.json at
+# the repo root (see PERF.md).
+
+.PHONY: check fmt build test perf
+
+check: fmt build test
+
+fmt:
+	cargo fmt --check
+
+build:
+	cargo build --release
+
+test:
+	cargo test -q
+
+perf:
+	cargo bench --bench bfp_ops -- --json

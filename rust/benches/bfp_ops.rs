@@ -1,12 +1,23 @@
 //! Bench: software BFP library hot paths — quantization (the FP→BFP
-//! converter) and the integer-MAC matmul vs the FP32 baseline. These are
-//! the §Perf targets for the rust BFP substrate (EXPERIMENTS.md §Perf L3).
+//! converter) and the packed integer-MAC matmul vs the FP32 baseline.
+//! These are the §Perf targets for the rust BFP substrate (see PERF.md).
+//!
+//! The matmul section prints the full before/after ladder on the same
+//! operands: `naive` (j-innermost, the original kernel), `blocked 1T`
+//! (cache-blocked, single thread — the pre-packing seed kernel shape),
+//! `packed NT` (width-packed storage + row-band threading, the default
+//! path), and `fused` (convert+matmul in one pass). Run with `--json` to
+//! write `BENCH_bfp_ops.json` at the repo root.
 
 mod common;
 
-use common::{bench, header, BenchOpts};
-use hbfp::bfp::{bfp_matmul, fp32_matmul, BfpTensor, Rounding, TileSize};
+use common::{bench, header, BenchOpts, JsonSink};
+use hbfp::bfp::{
+    bfp_matmul_naive, bfp_matmul_with_threads, fp32_matmul, quantize_matmul, BfpTensor, Rounding,
+    TileSize,
+};
 use hbfp::util::rng::{SplitMix64, Xorshift32};
+use hbfp::util::worker_threads;
 
 fn randv(n: usize, seed: u64) -> Vec<f32> {
     let mut rng = SplitMix64::new(seed);
@@ -15,8 +26,10 @@ fn randv(n: usize, seed: u64) -> Vec<f32> {
 
 fn main() {
     let opts = BenchOpts::from_env();
+    let mut sink = JsonSink::new("bfp_ops");
+    let nt = worker_threads();
 
-    header("BFP quantization (FP->BFP converter)");
+    header(&format!("BFP quantization (FP->BFP converter), {nt} threads"));
     for &(n, m, tile) in &[
         (256 * 256usize, 8u32, 24usize),
         (256 * 256, 12, 24),
@@ -25,7 +38,7 @@ fn main() {
     ] {
         let rows = (n as f64).sqrt() as usize;
         let data = randv(rows * rows, 1);
-        bench(
+        let r = bench(
             &opts,
             &format!("quantize {rows}x{rows} m={m} t={tile}"),
             (rows * rows) as f64,
@@ -42,12 +55,31 @@ fn main() {
                 std::hint::black_box(&t);
             },
         );
+        sink.push(&r, (rows * rows) as f64);
+    }
+    // single-thread reference for the parallel-speedup row
+    {
+        let data = randv(1024 * 1024, 1);
+        let r = bench(&opts, "quantize 1024x1024 m=8 t=24 (1 thread)", (1024 * 1024) as f64, || {
+            let t = BfpTensor::from_f32_with_threads(
+                &data,
+                1024,
+                1024,
+                8,
+                TileSize::Edge(24),
+                &mut Rounding::NearestEven,
+                1,
+            )
+            .unwrap();
+            std::hint::black_box(&t);
+        });
+        sink.push(&r, (1024 * 1024) as f64);
     }
 
     header("BFP quantization, stochastic rounding (hardware converter)");
     let data = randv(256 * 256, 2);
     let mut rng = Xorshift32::new(7);
-    bench(&opts, "quantize 256x256 m=8 t=24 stochastic", (256 * 256) as f64, || {
+    let r = bench(&opts, "quantize 256x256 m=8 t=24 stochastic", (256 * 256) as f64, || {
         let t = BfpTensor::from_f32(
             &data,
             256,
@@ -59,15 +91,17 @@ fn main() {
         .unwrap();
         std::hint::black_box(&t);
     });
+    sink.push(&r, (256 * 256) as f64);
 
-    header("matmul: integer-MAC BFP vs FP32 baseline (256x256x256)");
+    header(&format!("matmul 256x256x256: packed int MAC ladder, {nt} threads"));
     let (m, k, n) = (256usize, 256usize, 256usize);
     let a = randv(m * k, 3);
     let b = randv(k * n, 4);
     let flops = (2 * m * k * n) as f64;
-    bench(&opts, "fp32_matmul", flops, || {
+    let r = bench(&opts, "fp32_matmul", flops, || {
         std::hint::black_box(fp32_matmul(&a, &b, m, k, n));
     });
+    sink.push(&r, flops);
     for &(bits, tile) in &[(8u32, 24usize), (8, 64), (12, 24), (16, 24)] {
         let qa =
             BfpTensor::from_f32(&a, m, k, bits, TileSize::Edge(tile), &mut Rounding::NearestEven)
@@ -75,18 +109,37 @@ fn main() {
         let qb =
             BfpTensor::from_f32(&b, k, n, bits, TileSize::Edge(tile), &mut Rounding::NearestEven)
                 .unwrap();
-        bench(&opts, &format!("bfp_matmul m={bits} t={tile} (blocked int MAC)"), flops, || {
-            std::hint::black_box(bfp_matmul(&qa, &qb).unwrap());
-        });
-        if bits == 8 {
-            // §Perf before/after: the pre-optimization j-innermost kernel
-            bench(&opts, &format!("bfp_matmul m={bits} t={tile} (naive, before)"), flops, || {
-                std::hint::black_box(hbfp::bfp::bfp_matmul_naive(&qa, &qb).unwrap());
+        if bits == 8 && tile == 24 {
+            // §Perf before/after ladder at the paper's hbfp8 config
+            let r = bench(&opts, "bfp_matmul m=8 t=24 (naive, before)", flops, || {
+                std::hint::black_box(bfp_matmul_naive(&qa, &qb).unwrap());
             });
+            sink.push(&r, flops);
+            let r = bench(&opts, "bfp_matmul m=8 t=24 (blocked, 1 thread)", flops, || {
+                std::hint::black_box(bfp_matmul_with_threads(&qa, &qb, 1).unwrap());
+            });
+            sink.push(&r, flops);
+        }
+        let r = bench(
+            &opts,
+            &format!("bfp_matmul m={bits} t={tile} (packed-parallel)"),
+            flops,
+            || {
+                std::hint::black_box(bfp_matmul_with_threads(&qa, &qb, nt).unwrap());
+            },
+        );
+        sink.push(&r, flops);
+        if bits == 8 && tile == 24 {
+            let r = bench(&opts, "quantize_matmul m=8 t=24 (fused A-convert)", flops, || {
+                std::hint::black_box(
+                    quantize_matmul(&a, m, 8, &mut Rounding::NearestEven, &qb).unwrap(),
+                );
+            });
+            sink.push(&r, flops);
         }
     }
 
-    header("wide weight storage: narrow_view (16 -> 8 bits)");
+    header("wide weight storage: narrow_view (16 -> 8 bits, repacking)");
     let w = BfpTensor::from_f32(
         &randv(512 * 512, 5),
         512,
@@ -96,7 +149,10 @@ fn main() {
         &mut Rounding::NearestEven,
     )
     .unwrap();
-    bench(&opts, "narrow_view 512x512 16->8", (512 * 512) as f64, || {
+    let r = bench(&opts, "narrow_view 512x512 16->8", (512 * 512) as f64, || {
         std::hint::black_box(w.narrow_view(8, &mut Rounding::NearestEven).unwrap());
     });
+    sink.push(&r, (512 * 512) as f64);
+
+    sink.finish();
 }

@@ -1,5 +1,8 @@
 //! Shared mini bench harness (criterion is not in the vendored crate set):
-//! warmup + timed reps, median/p10/p90 reporting, ops/sec helpers.
+//! warmup + timed reps, median/p10/p90 reporting, ops/sec helpers, and an
+//! opt-in JSON sink (`--json` / `HBFP_BENCH_JSON=1`) that records
+//! elements-per-second per kernel at the repo root so PRs leave a perf
+//! trajectory (`BENCH_<name>.json`).
 
 use std::time::Instant;
 
@@ -70,6 +73,60 @@ pub fn human_time(s: f64) -> String {
         format!("{:.2}ms", s * 1e3)
     } else {
         format!("{s:.2}s")
+    }
+}
+
+/// Opt-in JSON result sink. Construct once per bench binary, `push` every
+/// result worth tracking, `finish` at the end: with `--json` on the
+/// command line (or `HBFP_BENCH_JSON` set) it writes
+/// `BENCH_<bench>.json` at the repo root; otherwise it is a no-op.
+pub struct JsonSink {
+    bench: String,
+    rows: Vec<(String, f64, f64, f64)>, // (name, median_secs, p10_secs, rate/s)
+    enabled: bool,
+}
+
+impl JsonSink {
+    pub fn new(bench: &str) -> JsonSink {
+        let enabled =
+            std::env::args().any(|a| a == "--json") || std::env::var("HBFP_BENCH_JSON").is_ok();
+        JsonSink { bench: bench.to_string(), rows: Vec::new(), enabled }
+    }
+
+    /// Record one result; `work_items / median` becomes the tracked rate.
+    pub fn push(&mut self, r: &BenchResult, work_items: f64) {
+        let rate = if r.median_secs > 0.0 { work_items / r.median_secs } else { 0.0 };
+        self.rows.push((r.name.clone(), r.median_secs, r.p10_secs, rate));
+    }
+
+    pub fn finish(&self) {
+        if !self.enabled {
+            return;
+        }
+        use hbfp::util::json::Json;
+        let rows = self
+            .rows
+            .iter()
+            .map(|(name, med, p10, rate)| {
+                Json::obj(vec![
+                    ("name", Json::str(name.clone())),
+                    ("median_secs", Json::num(*med)),
+                    ("p10_secs", Json::num(*p10)),
+                    ("rate_per_sec", Json::num(*rate)),
+                ])
+            })
+            .collect();
+        let doc = Json::obj(vec![
+            ("bench", Json::str(self.bench.clone())),
+            ("results", Json::Arr(rows)),
+        ]);
+        let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+            .join("..")
+            .join(format!("BENCH_{}.json", self.bench));
+        match std::fs::write(&path, doc.to_string()) {
+            Ok(()) => println!("\nwrote {}", path.display()),
+            Err(e) => eprintln!("failed to write {}: {e}", path.display()),
+        }
     }
 }
 

@@ -49,10 +49,14 @@ impl Accelerator {
 
     /// Execute C = A (MxK) · B (KxN) through the modeled datapath.
     ///
-    /// Numeric path: quantize per (edge x edge) tile with stochastic
-    /// rounding (the hardware converter), integer-MAC matmul, FP32 output.
-    /// Schedule: output-stationary; each (edge x edge) output tile streams
-    /// K values through the array with a fill+drain of 2*edge cycles.
+    /// Numeric path: B (the resident operand) is quantized per
+    /// (edge x edge) tile with stochastic rounding into packed BFP; A
+    /// streams through the fused converter + integer-MAC path
+    /// (`quantize_matmul`), exactly like activations crossing the array
+    /// boundary in Figure 2 — no intermediate quantized-A tensor is ever
+    /// materialized. Schedule: output-stationary; each (edge x edge)
+    /// output tile streams K values through the array with a fill+drain
+    /// of 2*edge cycles.
     pub fn gemm(
         &mut self,
         a: &[f32],
@@ -63,9 +67,17 @@ impl Accelerator {
         mantissa_bits: u32,
     ) -> Result<(Vec<f32>, GemmStats)> {
         let tile = TileSize::Edge(self.edge);
-        let qa = BfpTensor::from_f32(a, m, k, mantissa_bits, tile, &mut Rounding::Stochastic(&mut self.rng))?;
-        let qb = BfpTensor::from_f32(b, k, n, mantissa_bits, tile, &mut Rounding::Stochastic(&mut self.rng))?;
-        let out = crate::bfp::bfp_matmul(&qa, &qb)?;
+        let qb = {
+            let rounding = &mut Rounding::Stochastic(&mut self.rng);
+            BfpTensor::from_f32(b, k, n, mantissa_bits, tile, rounding)?
+        };
+        let out = crate::bfp::quantize_matmul(
+            a,
+            m,
+            mantissa_bits,
+            &mut Rounding::Stochastic(&mut self.rng),
+            &qb,
+        )?;
 
         let e = self.edge as u64;
         let tiles_m = m.div_ceil(self.edge) as u64;

@@ -1,109 +1,357 @@
 //! BFP matrix multiplication with integer MACs + FP32 tile accumulation —
 //! the software model of the paper's MatMul unit (Figure 2).
 //!
-//! Per (t x t) tile pair: the mantissa dot products run entirely in integer
-//! arithmetic (`i64` accumulators — the "wide accumulators present in the
-//! MatMul unit"); each tile-partial is scaled by `2^(e_a + e_b)` once and
-//! added to the FP32 output accumulator. That is exactly Equation (2) plus
-//! the §4.2 tiling rule: "tile multiplications are performed in fixed
+//! Per (t x t) tile pair: the mantissa dot products run entirely in
+//! integer arithmetic; each tile-partial is scaled by `2^(e_a + e_b)` once
+//! and added to the FP32 output accumulator. That is exactly Equation (2)
+//! plus the §4.2 tiling rule: "tile multiplications are performed in fixed
 //! point, and their results are accumulated in floating point arithmetic".
+//!
+//! ## Packed, parallel kernels
+//!
+//! The kernels are generic over the packed storage ([`MantissaElem`]:
+//! `i8`/`i16`/`i32`), so hbfp8 streams 1-byte mantissas and the inner
+//! loops autovectorize as widening integer MACs. The accumulator width is
+//! chosen per tile shape by a proven bound (see [`acc_fits_i32`]): a
+//! k-tile partial of `tile_k` products each at most `2^(ma-1) * 2^(mb-1)`
+//! in magnitude sums to at most `tile_k * 2^(ma+mb-2)`; when that fits
+//! `i32` the kernel accumulates in `i32` (the dense fixed-point logic the
+//! paper maps onto), otherwise it falls back to `i64`. Both paths produce
+//! identical partials, so results are bit-for-bit equal to the
+//! [`bfp_matmul_naive`] reference.
+//!
+//! Output row-bands are distributed over `std::thread::scope` workers;
+//! every output element accumulates its k-tiles in the same order on
+//! exactly one thread, so results are bit-identical for any thread count.
 
 use anyhow::{anyhow, Result};
 
-use super::quant::exp2i;
-use super::tensor::{BfpTensor, TileSize};
+use super::quant::{self, exp2i, Rounding, TileRounding};
+use super::tensor::{BfpTensor, MantissaElem, Mantissas, TileSize};
+use crate::util::{for_each_job, worker_threads};
 
-/// C = A · B over BFP tensors; returns row-major f32 (the BFP→FP unit
-/// output). Requires matching tile configurations so tile boundaries align
-/// on the contraction dimension.
-pub fn bfp_matmul(a: &BfpTensor, b: &BfpTensor) -> Result<Vec<f32>> {
+/// Below this many MACs (m*k*n) the matmuls stay single-threaded.
+const PAR_MIN_MACS: usize = 1 << 17;
+
+/// Largest possible |sum| of `tile_k` mantissa products at widths
+/// `(ma, mb)`: every product is at most `2^(ma-1) * 2^(mb-1)` in
+/// magnitude (attained only at the two most-negative mantissas).
+pub fn max_tile_partial(tile_k: usize, ma: u32, mb: u32) -> u128 {
+    (tile_k as u128) << (ma + mb).saturating_sub(2)
+}
+
+/// True iff a k-tile partial provably fits an `i32` accumulator, i.e.
+/// `tile_k * 2^(ma-1) * 2^(mb-1) <= i32::MAX`. Every intermediate partial
+/// sum is bounded by the final bound (magnitudes only accumulate), so no
+/// intermediate overflow is possible either.
+pub fn acc_fits_i32(tile_k: usize, ma: u32, mb: u32) -> bool {
+    max_tile_partial(tile_k.max(1), ma, mb) <= i32::MAX as u128
+}
+
+/// Integer accumulator for the tile MAC loops: `i32` when the overflow
+/// bound allows, `i64` otherwise. Both sum identical integer values.
+trait Accum: Copy + Default + Send + 'static {
+    fn mac<EA: MantissaElem, EB: MantissaElem>(&mut self, qa: EA, qb: EB);
+    fn to_f32(self) -> f32;
+    fn to_i64(self) -> i64;
+}
+
+impl Accum for i32 {
+    #[inline(always)]
+    fn mac<EA: MantissaElem, EB: MantissaElem>(&mut self, qa: EA, qb: EB) {
+        *self += qa.to_i32() * qb.to_i32();
+    }
+
+    #[inline(always)]
+    fn to_f32(self) -> f32 {
+        self as f32
+    }
+
+    #[inline(always)]
+    fn to_i64(self) -> i64 {
+        self as i64
+    }
+}
+
+impl Accum for i64 {
+    #[inline(always)]
+    fn mac<EA: MantissaElem, EB: MantissaElem>(&mut self, qa: EA, qb: EB) {
+        *self += qa.to_i32() as i64 * qb.to_i32() as i64;
+    }
+
+    #[inline(always)]
+    fn to_f32(self) -> f32 {
+        self as f32
+    }
+
+    #[inline(always)]
+    fn to_i64(self) -> i64 {
+        self
+    }
+}
+
+fn check_shapes(a: &BfpTensor, b: &BfpTensor) -> Result<()> {
     if a.cols != b.rows {
         return Err(anyhow!("contraction mismatch: {}x{} · {}x{}", a.rows, a.cols, b.rows, b.cols));
     }
     if a.tile != b.tile {
         return Err(anyhow!("tile mismatch: {:?} vs {:?}", a.tile, b.tile));
     }
-    let (m, k, n) = (a.rows, a.cols, b.cols);
-    let ma = a.mantissa_bits as i32;
-    let mb = b.mantissa_bits as i32;
-    let t = match a.tile {
+    Ok(())
+}
+
+fn matmul_tile_edge(tile: TileSize, k: usize) -> usize {
+    match tile {
         TileSize::Whole => k.max(1),
         TileSize::Edge(t) => t,
-    };
+    }
+}
+
+/// C = A · B over BFP tensors; returns row-major f32 (the BFP→FP unit
+/// output). Requires matching tile configurations so tile boundaries
+/// align on the contraction dimension. Parallel over output row-bands
+/// with the default worker-thread budget.
+pub fn bfp_matmul(a: &BfpTensor, b: &BfpTensor) -> Result<Vec<f32>> {
+    bfp_matmul_with_threads(a, b, worker_threads())
+}
+
+/// [`bfp_matmul`] with an explicit thread cap. Bit-identical results for
+/// any `max_threads`.
+pub fn bfp_matmul_with_threads(
+    a: &BfpTensor,
+    b: &BfpTensor,
+    max_threads: usize,
+) -> Result<Vec<f32>> {
+    check_shapes(a, b)?;
+    let (m, k, n) = (a.rows, a.cols, b.cols);
     let mut out = vec![0.0f32; m * n];
-    // Tile loops: (i-tile, j-tile, k-tile); integer MAC inside. The inner
-    // kernel accumulates a row of i64 partials while walking B row-major
-    // (contiguous loads) — §Perf L3: ~4x over the naive j-innermost walk
-    // (see `cargo bench bfp_ops` naive-vs-blocked rows).
-    let mut scratch = vec![0i64; t.min(n) * t.min(m).max(1)];
-    let mut i0 = 0;
-    while i0 < m {
-        let i1 = (i0 + t).min(m);
-        let mut j0 = 0;
-        while j0 < n {
-            let j1 = (j0 + t).min(n);
-            let tj = j1 - j0;
-            let mut k0 = 0;
-            while k0 < k {
-                let k1 = (k0 + t).min(k);
-                // Shared exponents are constant across the tile pair.
-                let ea = a.exponent_at(i0, k0);
-                let eb = b.exponent_at(k0, j0);
-                // scale = 2^(ea - (ma-1)) * 2^(eb - (mb-1)), applied once
-                // per tile-partial (the FP realignment the paper amortizes
-                // over 2N fixed-point ops).
-                let scale = exp2i(ea - (ma - 1)) * exp2i(eb - (mb - 1));
-                let ti = i1 - i0;
-                let acc = &mut scratch[..ti * tj];
-                acc.fill(0);
-                for i in i0..i1 {
-                    let arow = &a.mantissas[i * k + k0..i * k + k1];
-                    let accrow = &mut acc[(i - i0) * tj..(i - i0 + 1) * tj];
-                    for (dk, &qa) in arow.iter().enumerate() {
-                        if qa == 0 {
-                            continue;
-                        }
-                        let qa64 = qa as i64;
-                        let brow = &b.mantissas[(k0 + dk) * n + j0..(k0 + dk) * n + j1];
-                        for (aj, &qb) in accrow.iter_mut().zip(brow) {
-                            *aj += qa64 * qb as i64;
-                        }
-                    }
-                }
-                for i in i0..i1 {
-                    let accrow = &acc[(i - i0) * tj..(i - i0 + 1) * tj];
-                    let orow = &mut out[i * n + j0..i * n + j1];
-                    for (o, &v) in orow.iter_mut().zip(accrow) {
-                        *o += v as f32 * scale;
-                    }
-                }
-                k0 = k1;
-            }
-            j0 = j1;
-        }
-        i0 = i1;
+    if m == 0 || k == 0 || n == 0 {
+        return Ok(out);
+    }
+    let t = matmul_tile_edge(a.tile, k);
+    let bands = m.div_ceil(t);
+    let threads = if m * k * n < PAR_MIN_MACS { 1 } else { max_threads.min(bands).max(1) };
+    match &a.mantissas {
+        Mantissas::I8(av) => matmul_dispatch_b::<i8>(av, a, b, &mut out, t, threads),
+        Mantissas::I16(av) => matmul_dispatch_b::<i16>(av, a, b, &mut out, t, threads),
+        Mantissas::I32(av) => matmul_dispatch_b::<i32>(av, a, b, &mut out, t, threads),
     }
     Ok(out)
 }
 
+fn matmul_dispatch_b<EA: MantissaElem>(
+    av: &[EA],
+    a: &BfpTensor,
+    b: &BfpTensor,
+    out: &mut [f32],
+    t: usize,
+    threads: usize,
+) {
+    match &b.mantissas {
+        Mantissas::I8(bv) => matmul_bands(av, bv, a, b, out, t, threads),
+        Mantissas::I16(bv) => matmul_bands(av, bv, a, b, out, t, threads),
+        Mantissas::I32(bv) => matmul_bands(av, bv, a, b, out, t, threads),
+    }
+}
+
+fn matmul_bands<EA: MantissaElem, EB: MantissaElem>(
+    av: &[EA],
+    bv: &[EB],
+    a: &BfpTensor,
+    b: &BfpTensor,
+    out: &mut [f32],
+    t: usize,
+    threads: usize,
+) {
+    let n = b.cols;
+    let jobs: Vec<(usize, &mut [f32])> = out.chunks_mut(t * n).enumerate().collect();
+    for_each_job(jobs, threads, |band, band_out| {
+        let i0 = band * t;
+        let i1 = (i0 + t).min(a.rows);
+        let a_exp = |r: usize, c: usize| a.exponent_at(r, c);
+        band_matmul(av, 0, &a_exp, a.mantissa_bits, bv, b, band_out, i0, i1, t);
+    });
+}
+
+/// Compute output rows `i0..i1` into `band_out` (local row 0 = global row
+/// `i0`, row stride `n`). `av` holds A's mantissas starting at global row
+/// `a_row0` (0 for a full tensor, `i0` for a fused per-band scratch);
+/// `a_exp(r, c)` is A's shared exponent at a global coordinate.
+#[allow(clippy::too_many_arguments)]
+fn band_matmul<EA: MantissaElem, EB: MantissaElem, FA: Fn(usize, usize) -> i32>(
+    av: &[EA],
+    a_row0: usize,
+    a_exp: &FA,
+    ma_bits: u32,
+    bv: &[EB],
+    b: &BfpTensor,
+    band_out: &mut [f32],
+    i0: usize,
+    i1: usize,
+    t: usize,
+) {
+    let k = b.rows;
+    let n = b.cols;
+    let ma = ma_bits as i32;
+    let mb = b.mantissa_bits as i32;
+    let ti = i1 - i0;
+    if ti == 0 {
+        return;
+    }
+    let tj_cap = t.min(n);
+    let tile_k = t.min(k).max(1);
+    let use_i32 = acc_fits_i32(tile_k, ma_bits, b.mantissa_bits);
+    let mut acc32 = vec![0i32; if use_i32 { ti * tj_cap } else { 0 }];
+    let mut acc64 = vec![0i64; if use_i32 { 0 } else { ti * tj_cap }];
+    let arow0 = i0 - a_row0;
+    let mut j0 = 0;
+    while j0 < n {
+        let j1 = (j0 + t).min(n);
+        let tj = j1 - j0;
+        let mut k0 = 0;
+        while k0 < k {
+            let k1 = (k0 + t).min(k);
+            // Shared exponents are constant across the tile pair; the
+            // scale 2^(ea-(ma-1)) * 2^(eb-(mb-1)) is applied once per
+            // tile-partial (the FP realignment the paper amortizes over
+            // 2N fixed-point ops).
+            let ea = a_exp(i0, k0);
+            let eb = b.exponent_at(k0, j0);
+            let scale = exp2i(ea - (ma - 1)) * exp2i(eb - (mb - 1));
+            if use_i32 {
+                let acc = &mut acc32[..ti * tj];
+                acc.fill(0);
+                tile_mac(av, bv, acc, arow0, ti, j0, j1, k0, k1, k, n);
+                debug_assert_tile_bound(acc, tile_k, ma_bits, b.mantissa_bits);
+                flush_tile(acc, band_out, scale, n, j0, tj, ti);
+            } else {
+                let acc = &mut acc64[..ti * tj];
+                acc.fill(0);
+                tile_mac(av, bv, acc, arow0, ti, j0, j1, k0, k1, k, n);
+                flush_tile(acc, band_out, scale, n, j0, tj, ti);
+            }
+            k0 = k1;
+        }
+        j0 = j1;
+    }
+}
+
+/// Integer MAC over one tile pair: walks B row-major (contiguous loads)
+/// accumulating a row of partials — §Perf L3: ~4x over the naive
+/// j-innermost walk, and the loop the narrow storage classes vectorize.
+#[allow(clippy::too_many_arguments)]
+#[inline]
+fn tile_mac<EA: MantissaElem, EB: MantissaElem, A: Accum>(
+    av: &[EA],
+    bv: &[EB],
+    acc: &mut [A],
+    arow0: usize,
+    ti: usize,
+    j0: usize,
+    j1: usize,
+    k0: usize,
+    k1: usize,
+    k: usize,
+    n: usize,
+) {
+    let tj = j1 - j0;
+    for li in 0..ti {
+        let ar = arow0 + li;
+        let arow = &av[ar * k + k0..ar * k + k1];
+        let accrow = &mut acc[li * tj..(li + 1) * tj];
+        for (dk, &qa) in arow.iter().enumerate() {
+            if qa.to_i32() == 0 {
+                continue;
+            }
+            let brow = &bv[(k0 + dk) * n + j0..(k0 + dk) * n + j1];
+            for (aj, &qb) in accrow.iter_mut().zip(brow) {
+                aj.mac(qa, qb);
+            }
+        }
+    }
+}
+
+/// Scale a tile's integer partials into the f32 band accumulator.
+#[inline]
+fn flush_tile<A: Accum>(
+    acc: &[A],
+    band_out: &mut [f32],
+    scale: f32,
+    n: usize,
+    j0: usize,
+    tj: usize,
+    ti: usize,
+) {
+    for li in 0..ti {
+        let accrow = &acc[li * tj..(li + 1) * tj];
+        let orow = &mut band_out[li * n + j0..li * n + j0 + tj];
+        for (o, &v) in orow.iter_mut().zip(accrow) {
+            *o += v.to_f32() * scale;
+        }
+    }
+}
+
+/// Debug-build check of the overflow proof's premise: no tile partial may
+/// exceed `tile_k * 2^(ma+mb-2)` (possible only if a tensor carries
+/// mantissas wider than its declared width).
+fn debug_assert_tile_bound<A: Accum>(acc: &[A], tile_k: usize, ma: u32, mb: u32) {
+    if cfg!(debug_assertions) {
+        let bound = max_tile_partial(tile_k, ma, mb);
+        for v in acc {
+            debug_assert!(
+                (v.to_i64().unsigned_abs() as u128) <= bound,
+                "tile partial {} exceeds proven bound {bound} (tile_k={tile_k}, ma={ma}, mb={mb})",
+                v.to_i64()
+            );
+        }
+    }
+}
+
 /// The pre-optimization j-innermost kernel, kept for the §Perf
 /// before/after bench and as a differential-testing partner (must agree
-/// with `bfp_matmul` bit-for-bit — both sum the same i64 partials).
+/// with `bfp_matmul` bit-for-bit — both sum the same integer partials,
+/// always in `i64` here).
 pub fn bfp_matmul_naive(a: &BfpTensor, b: &BfpTensor) -> Result<Vec<f32>> {
-    if a.cols != b.rows {
-        return Err(anyhow!("contraction mismatch: {}x{} · {}x{}", a.rows, a.cols, b.rows, b.cols));
+    check_shapes(a, b)?;
+    let (m, k, n) = (a.rows, a.cols, b.cols);
+    let mut out = vec![0.0f32; m * n];
+    if m == 0 || k == 0 || n == 0 {
+        return Ok(out);
     }
-    if a.tile != b.tile {
-        return Err(anyhow!("tile mismatch: {:?} vs {:?}", a.tile, b.tile));
+    let t = matmul_tile_edge(a.tile, k);
+    match &a.mantissas {
+        Mantissas::I8(av) => naive_dispatch_b::<i8>(av, a, b, &mut out, t),
+        Mantissas::I16(av) => naive_dispatch_b::<i16>(av, a, b, &mut out, t),
+        Mantissas::I32(av) => naive_dispatch_b::<i32>(av, a, b, &mut out, t),
     }
+    Ok(out)
+}
+
+fn naive_dispatch_b<EA: MantissaElem>(
+    av: &[EA],
+    a: &BfpTensor,
+    b: &BfpTensor,
+    out: &mut [f32],
+    t: usize,
+) {
+    match &b.mantissas {
+        Mantissas::I8(bv) => naive_kernel(av, bv, a, b, out, t),
+        Mantissas::I16(bv) => naive_kernel(av, bv, a, b, out, t),
+        Mantissas::I32(bv) => naive_kernel(av, bv, a, b, out, t),
+    }
+}
+
+fn naive_kernel<EA: MantissaElem, EB: MantissaElem>(
+    av: &[EA],
+    bv: &[EB],
+    a: &BfpTensor,
+    b: &BfpTensor,
+    out: &mut [f32],
+    t: usize,
+) {
     let (m, k, n) = (a.rows, a.cols, b.cols);
     let ma = a.mantissa_bits as i32;
     let mb = b.mantissa_bits as i32;
-    let t = match a.tile {
-        TileSize::Whole => k.max(1),
-        TileSize::Edge(t) => t,
-    };
-    let mut out = vec![0.0f32; m * n];
     let mut i0 = 0;
     while i0 < m {
         let i1 = (i0 + t).min(m);
@@ -117,12 +365,12 @@ pub fn bfp_matmul_naive(a: &BfpTensor, b: &BfpTensor) -> Result<Vec<f32>> {
                 let eb = b.exponent_at(k0, j0);
                 let scale = exp2i(ea - (ma - 1)) * exp2i(eb - (mb - 1));
                 for i in i0..i1 {
-                    let arow = &a.mantissas[i * k + k0..i * k + k1];
+                    let arow = &av[i * k + k0..i * k + k1];
                     for j in j0..j1 {
                         let mut acc: i64 = 0;
                         for (dk, &qa) in arow.iter().enumerate() {
-                            let qb = b.mantissas[(k0 + dk) * n + j];
-                            acc += qa as i64 * qb as i64;
+                            let qb = bv[(k0 + dk) * n + j];
+                            acc += qa.to_i32() as i64 * qb.to_i32() as i64;
                         }
                         out[i * n + j] += acc as f32 * scale;
                     }
@@ -133,7 +381,6 @@ pub fn bfp_matmul_naive(a: &BfpTensor, b: &BfpTensor) -> Result<Vec<f32>> {
         }
         i0 = i1;
     }
-    Ok(out)
 }
 
 /// Reference FP32 matmul (the baseline the harnesses compare against).
@@ -155,7 +402,129 @@ pub fn fp32_matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f3
     out
 }
 
-/// Convenience: quantize f32 operands and multiply in BFP.
+/// Fused FP→BFP convert + matmul: quantizes row-band tiles of `a` on the
+/// fly (per-band scratch, never a full materialized tensor) and MACs them
+/// against the already-quantized, resident `b` — the paper's datapath,
+/// where activations stream through the converter into the array while
+/// weights sit in BFP. Bit-for-bit identical to
+/// `BfpTensor::from_f32(a, ..., b.tile, ...)` followed by [`bfp_matmul`],
+/// including stochastic rounding (same per-tile substreams).
+pub fn quantize_matmul(
+    a: &[f32],
+    a_rows: usize,
+    a_bits: u32,
+    rounding: &mut Rounding,
+    b: &BfpTensor,
+) -> Result<Vec<f32>> {
+    quantize_matmul_with_threads(a, a_rows, a_bits, rounding, b, worker_threads())
+}
+
+/// [`quantize_matmul`] with an explicit thread cap.
+pub fn quantize_matmul_with_threads(
+    a: &[f32],
+    a_rows: usize,
+    a_bits: u32,
+    rounding: &mut Rounding,
+    b: &BfpTensor,
+    max_threads: usize,
+) -> Result<Vec<f32>> {
+    let (m, k, n) = (a_rows, b.rows, b.cols);
+    if a.len() != m * k {
+        return Err(anyhow!("a len {} != {m}x{k}", a.len()));
+    }
+    super::tensor::check_width(a_bits)?;
+    let mut out = vec![0.0f32; m * n];
+    if m * k == 0 {
+        return Ok(out);
+    }
+    let mode = TileRounding::capture(rounding);
+    if n == 0 {
+        return Ok(out);
+    }
+    let (th, _) = b.tile.edge_or(m, k);
+    let bands = m.div_ceil(th).max(1);
+    let threads = if m * k * n < PAR_MIN_MACS { 1 } else { max_threads.min(bands).max(1) };
+    match Mantissas::for_width(a_bits, 0) {
+        Mantissas::I8(_) => fused_dispatch_b::<i8>(a, b, &mut out, m, a_bits, mode, threads),
+        Mantissas::I16(_) => fused_dispatch_b::<i16>(a, b, &mut out, m, a_bits, mode, threads),
+        Mantissas::I32(_) => fused_dispatch_b::<i32>(a, b, &mut out, m, a_bits, mode, threads),
+    }
+    Ok(out)
+}
+
+fn fused_dispatch_b<EA: MantissaElem>(
+    a: &[f32],
+    b: &BfpTensor,
+    out: &mut [f32],
+    m: usize,
+    a_bits: u32,
+    mode: TileRounding,
+    threads: usize,
+) {
+    match &b.mantissas {
+        Mantissas::I8(bv) => fused_bands::<EA, i8>(a, bv, b, out, m, a_bits, mode, threads),
+        Mantissas::I16(bv) => fused_bands::<EA, i16>(a, bv, b, out, m, a_bits, mode, threads),
+        Mantissas::I32(bv) => fused_bands::<EA, i32>(a, bv, b, out, m, a_bits, mode, threads),
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn fused_bands<EA: MantissaElem, EB: MantissaElem>(
+    a: &[f32],
+    bv: &[EB],
+    b: &BfpTensor,
+    out: &mut [f32],
+    m: usize,
+    a_bits: u32,
+    mode: TileRounding,
+    threads: usize,
+) {
+    let k = b.rows;
+    let n = b.cols;
+    let (th, tw) = b.tile.edge_or(m, k);
+    let tiles_c = k.div_ceil(tw).max(1);
+    let t_mm = matmul_tile_edge(b.tile, k);
+    let jobs: Vec<(usize, &mut [f32])> = out.chunks_mut(th * n).enumerate().collect();
+    for_each_job(jobs, threads, |band, band_out| {
+        let i0 = band * th;
+        let i1 = (i0 + th).min(m);
+        let band_rows = i1 - i0;
+        // Per-band converter: quantize this band's A tiles into packed
+        // scratch (the only A-mantissa storage that ever exists).
+        let mut scratch: Vec<EA> = vec![EA::from_i32(0); band_rows * k];
+        let mut band_exps = vec![0i32; tiles_c];
+        for tc in 0..tiles_c {
+            let c0 = tc * tw;
+            let c1 = (c0 + tw).min(k);
+            let e = quant::block_exponent_strided(a, k, i0, i1, c0, c1);
+            band_exps[tc] = e;
+            let mut owned = mode.for_tile((band * tiles_c + tc) as u64);
+            let mut rounding = owned.as_rounding();
+            for r in i0..i1 {
+                let src = &a[r * k + c0..r * k + c1];
+                let dst = &mut scratch[(r - i0) * k + c0..(r - i0) * k + c1];
+                for (d, &x) in dst.iter_mut().zip(src) {
+                    *d = EA::from_i32(quant::quantize_value(x, e, a_bits, &mut rounding));
+                }
+            }
+        }
+        band_matmul(
+            &scratch,
+            i0,
+            &|_r, c| band_exps[c / tw],
+            a_bits,
+            bv,
+            b,
+            band_out,
+            i0,
+            i1,
+            t_mm,
+        );
+    });
+}
+
+/// Convenience: quantize f32 operands and multiply in BFP. Uses the fused
+/// path for the A operand (B is quantized once, as resident weights).
 pub fn hbfp_matmul_f32(
     a: &[f32],
     b: &[f32],
@@ -165,10 +534,8 @@ pub fn hbfp_matmul_f32(
     mantissa_bits: u32,
     tile: TileSize,
 ) -> Result<Vec<f32>> {
-    use super::quant::Rounding;
-    let qa = BfpTensor::from_f32(a, m, k, mantissa_bits, tile, &mut Rounding::NearestEven)?;
     let qb = BfpTensor::from_f32(b, k, n, mantissa_bits, tile, &mut Rounding::NearestEven)?;
-    bfp_matmul(&qa, &qb)
+    quantize_matmul(a, m, mantissa_bits, &mut Rounding::NearestEven, &qb)
 }
 
 #[cfg(test)]
@@ -176,7 +543,7 @@ mod tests {
     use super::*;
     use crate::prop_assert;
     use crate::util::prop::{check, Gen};
-    use crate::util::rng::SplitMix64;
+    use crate::util::rng::{SplitMix64, Xorshift32};
 
     fn rand_mat(rng: &mut SplitMix64, len: usize, scale: f32) -> Vec<f32> {
         (0..len).map(|_| rng.normal() * scale).collect()
@@ -192,7 +559,6 @@ mod tests {
             let b = g.vec_f32(k * n, 2);
             let tile = *g.pick(&[TileSize::Whole, TileSize::Edge(8)]);
             let mb = *g.pick(&[4u32, 8]);
-            use super::super::quant::Rounding;
             let qa = BfpTensor::from_f32(&a, m, k, mb, tile, &mut Rounding::NearestEven).unwrap();
             let qb = BfpTensor::from_f32(&b, k, n, mb, tile, &mut Rounding::NearestEven).unwrap();
             let got = bfp_matmul(&qa, &qb).unwrap();
@@ -259,7 +625,6 @@ mod tests {
 
     #[test]
     fn mismatched_shapes_rejected() {
-        use super::super::quant::Rounding;
         let a = BfpTensor::from_f32(&[1.0; 6], 2, 3, 8, TileSize::Whole, &mut Rounding::NearestEven)
             .unwrap();
         let b = BfpTensor::from_f32(&[1.0; 8], 2, 4, 8, TileSize::Whole, &mut Rounding::NearestEven)
@@ -269,7 +634,6 @@ mod tests {
 
     #[test]
     fn mismatched_tiles_rejected() {
-        use super::super::quant::Rounding;
         let a = BfpTensor::from_f32(&[1.0; 4], 2, 2, 8, TileSize::Whole, &mut Rounding::NearestEven)
             .unwrap();
         let b =
@@ -280,21 +644,93 @@ mod tests {
 
     #[test]
     fn blocked_equals_naive_bitwise() {
-        // Both kernels sum identical i64 partials in identical k order, so
-        // results must be bit-for-bit equal.
+        // Both kernels sum identical integer partials in identical k
+        // order, so results must be bit-for-bit equal — across storage
+        // classes (i8/i16/i32) and mixed-width operand pairs.
         check("blocked == naive", 60, |g: &mut Gen| {
             let (m, k, n) = (g.int(1, 40), g.int(1, 40), g.int(1, 40));
             let a = g.vec_f32(m * k, 3);
             let b = g.vec_f32(k * n, 3);
             let tile = *g.pick(&[TileSize::Whole, TileSize::Edge(8), TileSize::Edge(24)]);
-            use super::super::quant::Rounding;
-            let qa = BfpTensor::from_f32(&a, m, k, 8, tile, &mut Rounding::NearestEven).unwrap();
-            let qb = BfpTensor::from_f32(&b, k, n, 8, tile, &mut Rounding::NearestEven).unwrap();
+            let ma = *g.pick(&[4u32, 8, 12, 16, 20, 24]);
+            let mb = *g.pick(&[4u32, 8, 12, 16, 20, 24]);
+            let qa = BfpTensor::from_f32(&a, m, k, ma, tile, &mut Rounding::NearestEven).unwrap();
+            let qb = BfpTensor::from_f32(&b, k, n, mb, tile, &mut Rounding::NearestEven).unwrap();
             let fast = bfp_matmul(&qa, &qb).unwrap();
             let slow = bfp_matmul_naive(&qa, &qb).unwrap();
-            prop_assert!(fast == slow, "blocked and naive kernels disagree");
+            prop_assert!(fast == slow, "blocked and naive kernels disagree (ma={ma}, mb={mb})");
             Ok(())
         });
+    }
+
+    #[test]
+    fn thread_count_invariant() {
+        let mut rng = SplitMix64::new(21);
+        let (m, k, n) = (96, 80, 72); // above the parallel floor
+        let a = rand_mat(&mut rng, m * k, 1.0);
+        let b = rand_mat(&mut rng, k * n, 1.0);
+        let qa = BfpTensor::from_f32(&a, m, k, 8, TileSize::Edge(16), &mut Rounding::NearestEven)
+            .unwrap();
+        let qb = BfpTensor::from_f32(&b, k, n, 8, TileSize::Edge(16), &mut Rounding::NearestEven)
+            .unwrap();
+        let one = bfp_matmul_with_threads(&qa, &qb, 1).unwrap();
+        let many = bfp_matmul_with_threads(&qa, &qb, 8).unwrap();
+        assert!(one == many, "thread count must not change results");
+    }
+
+    #[test]
+    fn fused_equals_materialized_bitwise() {
+        check("fused == materialized", 40, |g: &mut Gen| {
+            let (m, k, n) = (g.int(1, 30), g.int(1, 30), g.int(1, 30));
+            let a = g.vec_f32(m * k, 3);
+            let b = g.vec_f32(k * n, 3);
+            let tile = *g.pick(&[TileSize::Whole, TileSize::Edge(8), TileSize::Edge(24)]);
+            let bits = *g.pick(&[4u32, 8, 12]);
+            let qb = BfpTensor::from_f32(&b, k, n, bits, tile, &mut Rounding::NearestEven).unwrap();
+
+            // nearest-even
+            let qa = BfpTensor::from_f32(&a, m, k, bits, tile, &mut Rounding::NearestEven).unwrap();
+            let want = bfp_matmul(&qa, &qb).unwrap();
+            let got = quantize_matmul(&a, m, bits, &mut Rounding::NearestEven, &qb).unwrap();
+            prop_assert!(got == want, "fused != materialized (rne, bits={bits})");
+
+            // stochastic: same seed => same per-tile substreams
+            let seed = g.rng.next_u32();
+            let mut r1 = Xorshift32::new(seed);
+            let mut r2 = Xorshift32::new(seed);
+            let qa_s =
+                BfpTensor::from_f32(&a, m, k, bits, tile, &mut Rounding::Stochastic(&mut r1))
+                    .unwrap();
+            let want_s = bfp_matmul(&qa_s, &qb).unwrap();
+            let got_s =
+                quantize_matmul(&a, m, bits, &mut Rounding::Stochastic(&mut r2), &qb).unwrap();
+            prop_assert!(got_s == want_s, "fused != materialized (stochastic, bits={bits})");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn fused_rejects_bad_len() {
+        let qb = BfpTensor::from_f32(&[1.0; 4], 2, 2, 8, TileSize::Whole, &mut Rounding::NearestEven)
+            .unwrap();
+        assert!(quantize_matmul(&[1.0; 5], 2, 8, &mut Rounding::NearestEven, &qb).is_err());
+        assert!(quantize_matmul(&[1.0; 4], 2, 1, &mut Rounding::NearestEven, &qb).is_err());
+    }
+
+    #[test]
+    fn acc_bound_arithmetic() {
+        // m=8 x m=8: 2^14 per product; i32 holds 2^17 - 1 of them.
+        assert!(acc_fits_i32((1 << 17) - 1, 8, 8));
+        assert!(!acc_fits_i32(1 << 17, 8, 8));
+        // m=12 x m=12: 2^22 per product; 512 products hit 2^31 exactly — too big.
+        assert!(acc_fits_i32(511, 12, 12));
+        assert!(!acc_fits_i32(512, 12, 12));
+        // m=16 x m=16: 2^30 per product; only one fits.
+        assert!(acc_fits_i32(1, 16, 16));
+        assert!(!acc_fits_i32(2, 16, 16));
+        // widest supported: must fall back to i64 for any real tile
+        assert!(!acc_fits_i32(24, 24, 24));
+        assert_eq!(max_tile_partial(3, 8, 8), 3 << 14);
     }
 
     #[test]
@@ -306,7 +742,6 @@ mod tests {
     #[test]
     fn identity_with_powers_of_two_exact() {
         // diag(2) quantizes exactly; product must equal 2*Q(b) exactly.
-        use super::super::quant::Rounding;
         let n = 8;
         let mut a = vec![0.0f32; n * n];
         for i in 0..n {

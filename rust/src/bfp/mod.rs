@@ -4,16 +4,25 @@
 //! python oracle (fixtures in `tests/bfp_cross.rs`).
 //!
 //! - [`quant`]: shared-exponent selection, RNE + stochastic rounding
-//!   (Xorshift32, §5.3), value-level quantize/dequantize.
-//! - [`tensor`]: tiled BFP tensor storage, wide weight storage (§4.2).
-//! - [`matmul`]: integer-MAC matmul with FP32 tile accumulation (Eq. 2).
+//!   (Xorshift32, §5.3), value-level quantize/dequantize, per-tile
+//!   substream derivation for the parallel converters.
+//! - [`tensor`]: tiled BFP tensor storage with width-packed mantissas
+//!   (`i8`/`i16`/`i32` by mantissa class), wide weight storage (§4.2).
+//! - [`matmul`]: packed, multi-threaded integer-MAC matmul with FP32 tile
+//!   accumulation (Eq. 2), accumulator width chosen by a proven overflow
+//!   bound, plus the fused FP→BFP-convert + matmul hot path.
 
 pub mod matmul;
 pub mod quant;
 pub mod stats;
 pub mod tensor;
 
-pub use matmul::{bfp_matmul, bfp_matmul_naive, fp32_matmul, hbfp_matmul_f32};
-pub use quant::{block_exponent, dequantize_value, exp2i, quantize_value, Rounding, E_MAX, E_MIN};
+pub use matmul::{
+    acc_fits_i32, bfp_matmul, bfp_matmul_naive, bfp_matmul_with_threads, fp32_matmul,
+    hbfp_matmul_f32, max_tile_partial, quantize_matmul, quantize_matmul_with_threads,
+};
+pub use quant::{
+    block_exponent, dequantize_value, exp2i, quantize_value, Rounding, TileRounding, E_MAX, E_MIN,
+};
 pub use stats::{quant_report, tile_spans, ExponentStats, QuantReport};
-pub use tensor::{BfpTensor, TileSize};
+pub use tensor::{quantize_inplace_2d, BfpTensor, MantissaElem, Mantissas, TileSize};

@@ -2,13 +2,22 @@
 //! exponent per (tile x tile) tile — the paper's storage format, including
 //! the §4.2 optimizations (tiling, wide weight storage).
 //!
-//! Mantissas are stored as `i32` regardless of width (hardware would pack
-//! them; the *numerics* only depend on the width, and the area model in
-//! `crate::hw` accounts for the true packed cost).
+//! Mantissas are stored **packed at their true width class**: `i8` for
+//! widths <= 8, `i16` for <= 16, `i32` above ([`Mantissas`]). That is the
+//! representation the hardware streams, and in software it buys 2–4x less
+//! memory traffic plus narrow integer inner loops for the MAC kernels
+//! (`super::matmul`). Quantization is parallelized over tile rows with
+//! per-tile RNG substreams, so stochastic rounding is reproducible for any
+//! thread count.
 
 use anyhow::{anyhow, Result};
 
-use super::quant::{self, Rounding};
+use super::quant::{self, Rounding, TileRounding};
+use crate::util::{for_each_job, worker_threads};
+
+/// Below this many elements the quantizers stay single-threaded (thread
+/// spawn costs more than the work).
+const PAR_MIN_ELEMS: usize = 1 << 14;
 
 /// Tile granularity for exponent sharing: a whole-tensor exponent or
 /// square tiles of the given edge length.
@@ -27,15 +36,139 @@ impl TileSize {
     }
 }
 
-/// A 2-D BFP tensor: row-major mantissas + per-tile exponents.
+/// One element of packed mantissa storage. The three implementations
+/// (`i8`, `i16`, `i32`) are what [`Mantissas`] can hold; the matmul
+/// kernels are generic over this trait so each width class gets its own
+/// monomorphized (autovectorizable) inner loop.
+pub trait MantissaElem: Copy + Send + Sync + 'static {
+    /// Widest two's-complement mantissa (in bits) this element type holds.
+    const MAX_BITS: u32;
+
+    fn from_i32(v: i32) -> Self;
+    fn to_i32(self) -> i32;
+}
+
+impl MantissaElem for i8 {
+    const MAX_BITS: u32 = 8;
+
+    #[inline(always)]
+    fn from_i32(v: i32) -> i8 {
+        debug_assert!(i8::try_from(v).is_ok(), "mantissa {v} does not fit i8");
+        v as i8
+    }
+
+    #[inline(always)]
+    fn to_i32(self) -> i32 {
+        self as i32
+    }
+}
+
+impl MantissaElem for i16 {
+    const MAX_BITS: u32 = 16;
+
+    #[inline(always)]
+    fn from_i32(v: i32) -> i16 {
+        debug_assert!(i16::try_from(v).is_ok(), "mantissa {v} does not fit i16");
+        v as i16
+    }
+
+    #[inline(always)]
+    fn to_i32(self) -> i32 {
+        self as i32
+    }
+}
+
+impl MantissaElem for i32 {
+    const MAX_BITS: u32 = 32;
+
+    #[inline(always)]
+    fn from_i32(v: i32) -> i32 {
+        v
+    }
+
+    #[inline(always)]
+    fn to_i32(self) -> i32 {
+        self
+    }
+}
+
+/// Width-classed packed mantissa storage: the narrowest integer vector
+/// that holds the tensor's mantissa width.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Mantissas {
+    I8(Vec<i8>),
+    I16(Vec<i16>),
+    I32(Vec<i32>),
+}
+
+impl Mantissas {
+    /// Zero-filled storage of the right width class for `mantissa_bits`.
+    pub fn for_width(mantissa_bits: u32, len: usize) -> Mantissas {
+        if mantissa_bits <= 8 {
+            Mantissas::I8(vec![0; len])
+        } else if mantissa_bits <= 16 {
+            Mantissas::I16(vec![0; len])
+        } else {
+            Mantissas::I32(vec![0; len])
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            Mantissas::I8(v) => v.len(),
+            Mantissas::I16(v) => v.len(),
+            Mantissas::I32(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Element at `i`, sign-extended.
+    #[inline]
+    pub fn get(&self, i: usize) -> i32 {
+        match self {
+            Mantissas::I8(v) => v[i] as i32,
+            Mantissas::I16(v) => v[i] as i32,
+            Mantissas::I32(v) => v[i],
+        }
+    }
+
+    /// Store `q` at `i` (must fit the storage class; debug-asserted).
+    #[inline]
+    pub fn set(&mut self, i: usize, q: i32) {
+        match self {
+            Mantissas::I8(v) => v[i] = <i8 as MantissaElem>::from_i32(q),
+            Mantissas::I16(v) => v[i] = <i16 as MantissaElem>::from_i32(q),
+            Mantissas::I32(v) => v[i] = q,
+        }
+    }
+
+    /// Bits per stored element (8 / 16 / 32).
+    pub fn elem_bits(&self) -> usize {
+        match self {
+            Mantissas::I8(_) => 8,
+            Mantissas::I16(_) => 16,
+            Mantissas::I32(_) => 32,
+        }
+    }
+
+    /// Actual heap bytes of the packed buffer.
+    pub fn heap_bytes(&self) -> usize {
+        self.len() * self.elem_bits() / 8
+    }
+}
+
+/// A 2-D BFP tensor: row-major packed mantissas + per-tile exponents.
 #[derive(Debug, Clone)]
 pub struct BfpTensor {
     pub rows: usize,
     pub cols: usize,
     pub mantissa_bits: u32,
     pub tile: TileSize,
-    /// Row-major mantissas, `rows * cols`.
-    pub mantissas: Vec<i32>,
+    /// Row-major mantissas, `rows * cols`, packed at the width class.
+    pub mantissas: Mantissas,
     /// Exponents, one per tile, row-major over the tile grid.
     pub exponents: Vec<i32>,
     tiles_per_row: usize,
@@ -43,8 +176,41 @@ pub struct BfpTensor {
     tile_cols: usize,
 }
 
+/// Validated tile geometry shared by the constructors.
+struct TileGrid {
+    rows: usize,
+    cols: usize,
+    th: usize,
+    tw: usize,
+    tiles_r: usize,
+    tiles_c: usize,
+}
+
+fn tile_grid(rows: usize, cols: usize, tile: TileSize) -> Result<TileGrid> {
+    if let TileSize::Edge(0) = tile {
+        return Err(anyhow!("tile edge must be nonzero"));
+    }
+    let (th, tw) = tile.edge_or(rows, cols);
+    Ok(TileGrid {
+        rows,
+        cols,
+        th,
+        tw,
+        tiles_r: rows.div_ceil(th).max(1),
+        tiles_c: cols.div_ceil(tw).max(1),
+    })
+}
+
+pub(crate) fn check_width(mantissa_bits: u32) -> Result<()> {
+    if !(2..=24).contains(&mantissa_bits) {
+        return Err(anyhow!("mantissa width {mantissa_bits} unsupported"));
+    }
+    Ok(())
+}
+
 impl BfpTensor {
-    /// Quantize an f32 tensor into BFP storage.
+    /// Quantize an f32 tensor into packed BFP storage, using the default
+    /// worker-thread budget.
     pub fn from_f32(
         data: &[f32],
         rows: usize,
@@ -53,36 +219,42 @@ impl BfpTensor {
         tile: TileSize,
         rounding: &mut Rounding,
     ) -> Result<BfpTensor> {
+        let threads = worker_threads();
+        Self::from_f32_with_threads(data, rows, cols, mantissa_bits, tile, rounding, threads)
+    }
+
+    /// Quantize with an explicit thread cap. Results are bit-identical for
+    /// any `max_threads` (stochastic rounding uses per-tile substreams).
+    pub fn from_f32_with_threads(
+        data: &[f32],
+        rows: usize,
+        cols: usize,
+        mantissa_bits: u32,
+        tile: TileSize,
+        rounding: &mut Rounding,
+        max_threads: usize,
+    ) -> Result<BfpTensor> {
         if data.len() != rows * cols {
             return Err(anyhow!("data len {} != {rows}x{cols}", data.len()));
         }
-        if !(2..=24).contains(&mantissa_bits) {
-            return Err(anyhow!("mantissa width {mantissa_bits} unsupported"));
-        }
-        let (th, tw) = tile.edge_or(rows, cols);
-        let tiles_r = rows.div_ceil(th).max(1);
-        let tiles_c = cols.div_ceil(tw).max(1);
-        let mut mantissas = vec![0i32; rows * cols];
-        let mut exponents = Vec::with_capacity(tiles_r * tiles_c);
-        let mut block = Vec::with_capacity(th * tw);
-        for tr in 0..tiles_r {
-            for tc in 0..tiles_c {
-                let r0 = tr * th;
-                let c0 = tc * tw;
-                let r1 = (r0 + th).min(rows);
-                let c1 = (c0 + tw).min(cols);
-                block.clear();
-                for r in r0..r1 {
-                    block.extend_from_slice(&data[r * cols + c0..r * cols + c1]);
+        check_width(mantissa_bits)?;
+        let g = tile_grid(rows, cols, tile)?;
+        let mut mantissas = Mantissas::for_width(mantissa_bits, rows * cols);
+        let mut exponents = vec![quant::E_MIN; g.tiles_r * g.tiles_c];
+        if rows * cols > 0 {
+            let mode = TileRounding::capture(rounding);
+            let threads =
+                if rows * cols >= PAR_MIN_ELEMS { max_threads.min(g.tiles_r) } else { 1 };
+            match &mut mantissas {
+                Mantissas::I8(v) => {
+                    quantize_bands::<i8>(data, v, &mut exponents, &g, mantissa_bits, mode, threads)
                 }
-                let e = quant::block_exponent(&block);
-                for r in r0..r1 {
-                    for c in c0..c1 {
-                        mantissas[r * cols + c] =
-                            quant::quantize_value(data[r * cols + c], e, mantissa_bits, rounding);
-                    }
+                Mantissas::I16(v) => {
+                    quantize_bands::<i16>(data, v, &mut exponents, &g, mantissa_bits, mode, threads)
                 }
-                exponents.push(e);
+                Mantissas::I32(v) => {
+                    quantize_bands::<i32>(data, v, &mut exponents, &g, mantissa_bits, mode, threads)
+                }
             }
         }
         Ok(BfpTensor {
@@ -92,9 +264,60 @@ impl BfpTensor {
             tile,
             mantissas,
             exponents,
-            tiles_per_row: tiles_c,
-            tile_rows: th,
-            tile_cols: tw,
+            tiles_per_row: g.tiles_c,
+            tile_rows: g.th,
+            tile_cols: g.tw,
+        })
+    }
+
+    /// Assemble a tensor from raw parts (deserialization, adversarial
+    /// tests). Validates lengths, exponent range, and that every mantissa
+    /// is representable in `mantissa_bits` two's complement — the
+    /// invariant the matmul overflow bound relies on.
+    pub fn from_parts(
+        rows: usize,
+        cols: usize,
+        mantissa_bits: u32,
+        tile: TileSize,
+        mantissas: Mantissas,
+        exponents: Vec<i32>,
+    ) -> Result<BfpTensor> {
+        check_width(mantissa_bits)?;
+        let g = tile_grid(rows, cols, tile)?;
+        if mantissas.len() != rows * cols {
+            return Err(anyhow!("mantissa len {} != {rows}x{cols}", mantissas.len()));
+        }
+        if exponents.len() != g.tiles_r * g.tiles_c {
+            return Err(anyhow!(
+                "exponent len {} != {}x{} tiles",
+                exponents.len(),
+                g.tiles_r,
+                g.tiles_c
+            ));
+        }
+        let lo = -(1i32 << (mantissa_bits - 1));
+        let hi = (1i32 << (mantissa_bits - 1)) - 1;
+        for i in 0..mantissas.len() {
+            let q = mantissas.get(i);
+            if q < lo || q > hi {
+                return Err(anyhow!("mantissa {q} at {i} outside {mantissa_bits}-bit range"));
+            }
+        }
+        for &e in &exponents {
+            if !(quant::E_MIN..=quant::E_MAX).contains(&e) {
+                return Err(anyhow!("exponent {e} outside [{}, {}]", quant::E_MIN, quant::E_MAX));
+            }
+        }
+        Ok(BfpTensor {
+            rows,
+            cols,
+            mantissa_bits,
+            tile,
+            mantissas,
+            exponents,
+            tiles_per_row: g.tiles_c,
+            tile_rows: g.th,
+            tile_cols: g.tw,
         })
     }
 
@@ -108,16 +331,24 @@ impl BfpTensor {
 
     #[inline]
     pub fn mantissa_at(&self, r: usize, c: usize) -> i32 {
-        self.mantissas[r * self.cols + c]
+        self.mantissas.get(r * self.cols + c)
     }
 
     /// Dequantize back to f32 (the BFP→FP unit).
     pub fn to_f32(&self) -> Vec<f32> {
+        match &self.mantissas {
+            Mantissas::I8(v) => self.dequantize_slice(v),
+            Mantissas::I16(v) => self.dequantize_slice(v),
+            Mantissas::I32(v) => self.dequantize_slice(v),
+        }
+    }
+
+    fn dequantize_slice<E: MantissaElem>(&self, q: &[E]) -> Vec<f32> {
         let mut out = vec![0.0f32; self.rows * self.cols];
         for r in 0..self.rows {
             for c in 0..self.cols {
                 out[r * self.cols + c] = quant::dequantize_value(
-                    self.mantissa_at(r, c),
+                    q[r * self.cols + c].to_i32(),
                     self.exponent_at(r, c),
                     self.mantissa_bits,
                 );
@@ -129,7 +360,9 @@ impl BfpTensor {
     /// Re-quantize to a narrower mantissa width *in place of* re-reading
     /// f32 data: this is the §4.2 wide-weight-storage read path, where the
     /// fwd/bwd passes consume only the `narrow` most significant bits of
-    /// the stored wide mantissas.
+    /// the stored wide mantissas. The result is repacked into the narrow
+    /// width class (a 16-bit master narrowed to 8 bits really is half the
+    /// bytes).
     pub fn narrow_view(&self, narrow_bits: u32, rounding: &mut Rounding) -> Result<BfpTensor> {
         if narrow_bits > self.mantissa_bits {
             return Err(anyhow!(
@@ -138,22 +371,35 @@ impl BfpTensor {
             ));
         }
         let shift = self.mantissa_bits - narrow_bits;
-        let mut out = self.clone();
-        out.mantissa_bits = narrow_bits;
+        let mut out = Mantissas::for_width(narrow_bits, self.mantissas.len());
         if shift == 0 {
-            return Ok(out);
+            for i in 0..self.mantissas.len() {
+                out.set(i, self.mantissas.get(i));
+            }
+        } else {
+            let hi = (1i32 << (narrow_bits - 1)) - 1;
+            let lo = -(1i32 << (narrow_bits - 1));
+            let down = (1i64 << shift) as f32;
+            for i in 0..self.mantissas.len() {
+                let v = self.mantissas.get(i) as f32 / down;
+                let r = match rounding {
+                    Rounding::NearestEven => v.round_ties_even(),
+                    Rounding::Stochastic(rng) => (v + rng.next_f32()).floor(),
+                };
+                out.set(i, (r as i32).clamp(lo, hi));
+            }
         }
-        let hi = (1i32 << (narrow_bits - 1)) - 1;
-        let lo = -(1i32 << (narrow_bits - 1));
-        for q in out.mantissas.iter_mut() {
-            let v = *q as f32 / (1i64 << shift) as f32;
-            let r = match rounding {
-                Rounding::NearestEven => v.round_ties_even(),
-                Rounding::Stochastic(rng) => (v + rng.next_f32()).floor(),
-            };
-            *q = (r as i32).clamp(lo, hi);
-        }
-        Ok(out)
+        Ok(BfpTensor {
+            rows: self.rows,
+            cols: self.cols,
+            mantissa_bits: narrow_bits,
+            tile: self.tile,
+            mantissas: out,
+            exponents: self.exponents.clone(),
+            tiles_per_row: self.tiles_per_row,
+            tile_rows: self.tile_rows,
+            tile_cols: self.tile_cols,
+        })
     }
 
     /// Memory footprint in bits of the BFP representation (mantissas packed
@@ -163,6 +409,95 @@ impl BfpTensor {
     pub fn storage_bits(&self) -> usize {
         self.mantissas.len() * self.mantissa_bits as usize + self.exponents.len() * 8
     }
+
+    /// Actual heap bytes of the software representation (packed mantissa
+    /// vector + i32 exponents).
+    pub fn heap_bytes(&self) -> usize {
+        self.mantissas.heap_bytes() + self.exponents.len() * std::mem::size_of::<i32>()
+    }
+}
+
+/// Quantize all tiles, band-parallel: band = one tile row (`th` data
+/// rows), whose mantissa and exponent slices are disjoint across bands.
+fn quantize_bands<E: MantissaElem>(
+    data: &[f32],
+    out: &mut [E],
+    exponents: &mut [i32],
+    g: &TileGrid,
+    mantissa_bits: u32,
+    mode: TileRounding,
+    threads: usize,
+) {
+    debug_assert!(mantissa_bits <= E::MAX_BITS);
+    let band_elems = g.th * g.cols;
+    let jobs: Vec<(usize, (&mut [E], &mut [i32]))> = out
+        .chunks_mut(band_elems)
+        .zip(exponents.chunks_mut(g.tiles_c))
+        .enumerate()
+        .collect();
+    for_each_job(jobs, threads, |band, (band_out, band_exp)| {
+        let r0 = band * g.th;
+        let r1 = (r0 + g.th).min(g.rows);
+        for tc in 0..g.tiles_c {
+            let c0 = tc * g.tw;
+            let c1 = (c0 + g.tw).min(g.cols);
+            let e = quant::block_exponent_strided(data, g.cols, r0, r1, c0, c1);
+            band_exp[tc] = e;
+            let mut owned = mode.for_tile((band * g.tiles_c + tc) as u64);
+            let mut rounding = owned.as_rounding();
+            for r in r0..r1 {
+                let src = &data[r * g.cols + c0..r * g.cols + c1];
+                let dst = &mut band_out[(r - r0) * g.cols + c0..(r - r0) * g.cols + c1];
+                for (d, &x) in dst.iter_mut().zip(src) {
+                    *d = E::from_i32(quant::quantize_value(x, e, mantissa_bits, &mut rounding));
+                }
+            }
+        }
+    });
+}
+
+/// In-place BFP round-trip (quantize + dequantize) of a row-major matrix —
+/// the host-side FP→BFP→FP converter boundary, used by the trainer to
+/// model input conversion without materializing mantissa storage.
+/// Band-parallel with per-tile substreams (thread-count invariant).
+pub fn quantize_inplace_2d(
+    data: &mut [f32],
+    rows: usize,
+    cols: usize,
+    mantissa_bits: u32,
+    tile: TileSize,
+    rounding: &mut Rounding,
+) -> Result<()> {
+    if data.len() != rows * cols {
+        return Err(anyhow!("data len {} != {rows}x{cols}", data.len()));
+    }
+    check_width(mantissa_bits)?;
+    let g = tile_grid(rows, cols, tile)?;
+    if rows * cols == 0 {
+        return Ok(());
+    }
+    let mode = TileRounding::capture(rounding);
+    let threads =
+        if rows * cols >= PAR_MIN_ELEMS { worker_threads().min(g.tiles_r) } else { 1 };
+    let jobs: Vec<(usize, &mut [f32])> = data.chunks_mut(g.th * g.cols).enumerate().collect();
+    for_each_job(jobs, threads, |band, chunk| {
+        let r0 = band * g.th;
+        let r1 = (r0 + g.th).min(g.rows);
+        for tc in 0..g.tiles_c {
+            let c0 = tc * g.tw;
+            let c1 = (c0 + g.tw).min(g.cols);
+            let e = quant::block_exponent_strided(chunk, g.cols, 0, r1 - r0, c0, c1);
+            let mut owned = mode.for_tile((band * g.tiles_c + tc) as u64);
+            let mut r = owned.as_rounding();
+            for lr in 0..r1 - r0 {
+                for x in &mut chunk[lr * g.cols + c0..lr * g.cols + c1] {
+                    let q = quant::quantize_value(*x, e, mantissa_bits, &mut r);
+                    *x = quant::dequantize_value(q, e, mantissa_bits);
+                }
+            }
+        }
+    });
+    Ok(())
 }
 
 #[cfg(test)]
@@ -170,6 +505,7 @@ mod tests {
     use super::*;
     use crate::prop_assert;
     use crate::util::prop::{check, Gen};
+    use crate::util::rng::Xorshift32;
 
     fn roundtrip(data: &[f32], rows: usize, cols: usize, m: u32, tile: TileSize) -> Vec<f32> {
         BfpTensor::from_f32(data, rows, cols, m, tile, &mut Rounding::NearestEven)
@@ -197,6 +533,23 @@ mod tests {
         let t = BfpTensor::from_f32(&data, 50, 70, 8, TileSize::Edge(24), &mut Rounding::NearestEven)
             .unwrap();
         assert_eq!(t.exponents.len(), 3 * 3); // ceil(50/24) x ceil(70/24)
+    }
+
+    #[test]
+    fn storage_width_matches_mantissa_class() {
+        let data = vec![0.5f32; 16];
+        let mk = |m: u32| {
+            BfpTensor::from_f32(&data, 4, 4, m, TileSize::Edge(2), &mut Rounding::NearestEven)
+                .unwrap()
+        };
+        assert!(matches!(mk(4).mantissas, Mantissas::I8(_)));
+        assert!(matches!(mk(8).mantissas, Mantissas::I8(_)));
+        assert!(matches!(mk(12).mantissas, Mantissas::I16(_)));
+        assert!(matches!(mk(16).mantissas, Mantissas::I16(_)));
+        assert!(matches!(mk(20).mantissas, Mantissas::I32(_)));
+        // packed heap cost: 1 byte/elem at m=8 vs 4 at m=20 (+ exponents)
+        assert_eq!(mk(8).heap_bytes(), 16 + 4 * 4);
+        assert_eq!(mk(20).heap_bytes(), 64 + 4 * 4);
     }
 
     #[test]
@@ -258,6 +611,18 @@ mod tests {
     }
 
     #[test]
+    fn narrow_view_repacks_storage() {
+        let data: Vec<f32> = (0..64).map(|i| (i as f32 - 31.5) / 7.0).collect();
+        let wide =
+            BfpTensor::from_f32(&data, 8, 8, 16, TileSize::Edge(4), &mut Rounding::NearestEven)
+                .unwrap();
+        assert!(matches!(wide.mantissas, Mantissas::I16(_)));
+        let narrow = wide.narrow_view(8, &mut Rounding::NearestEven).unwrap();
+        assert!(matches!(narrow.mantissas, Mantissas::I8(_)));
+        assert_eq!(narrow.heap_bytes(), wide.heap_bytes() / 2 + wide.exponents.len() * 2);
+    }
+
+    #[test]
     fn narrow_view_rejects_widening() {
         let t = BfpTensor::from_f32(&[1.0], 1, 1, 8, TileSize::Whole, &mut Rounding::NearestEven)
             .unwrap();
@@ -280,6 +645,116 @@ mod tests {
     fn shape_mismatch_rejected() {
         assert!(BfpTensor::from_f32(&[1.0; 5], 2, 2, 8, TileSize::Whole, &mut Rounding::NearestEven)
             .is_err());
+        let zero_edge =
+            BfpTensor::from_f32(&[1.0; 4], 2, 2, 8, TileSize::Edge(0), &mut Rounding::NearestEven);
+        assert!(zero_edge.is_err());
+    }
+
+    #[test]
+    fn from_parts_validates() {
+        let ok = BfpTensor::from_parts(
+            2,
+            2,
+            8,
+            TileSize::Whole,
+            Mantissas::I8(vec![-128, 127, 0, 1]),
+            vec![3],
+        );
+        assert!(ok.is_ok());
+        assert_eq!(ok.unwrap().mantissa_at(0, 1), 127);
+        // mantissa outside the declared width
+        assert!(BfpTensor::from_parts(
+            2,
+            2,
+            4,
+            TileSize::Whole,
+            Mantissas::I8(vec![-128, 0, 0, 0]),
+            vec![3],
+        )
+        .is_err());
+        // wrong exponent count
+        assert!(BfpTensor::from_parts(
+            2,
+            2,
+            8,
+            TileSize::Edge(1),
+            Mantissas::I8(vec![0; 4]),
+            vec![0; 3],
+        )
+        .is_err());
+        // wrong mantissa count
+        assert!(BfpTensor::from_parts(2, 2, 8, TileSize::Whole, Mantissas::I8(vec![0; 3]), vec![0])
+            .is_err());
+    }
+
+    #[test]
+    fn quantization_thread_count_invariant() {
+        // Both rounding modes must give bit-identical tensors for 1 vs N
+        // threads. Use a tensor big enough to clear the parallel floor.
+        let rows = 160;
+        let cols = 120;
+        let mut g = Gen::new(0xBF9);
+        let data = g.vec_f32(rows * cols, 4);
+        for m in [8u32, 12] {
+            let a = BfpTensor::from_f32_with_threads(
+                &data,
+                rows,
+                cols,
+                m,
+                TileSize::Edge(24),
+                &mut Rounding::NearestEven,
+                1,
+            )
+            .unwrap();
+            let b = BfpTensor::from_f32_with_threads(
+                &data,
+                rows,
+                cols,
+                m,
+                TileSize::Edge(24),
+                &mut Rounding::NearestEven,
+                8,
+            )
+            .unwrap();
+            assert!(a.mantissas == b.mantissas && a.exponents == b.exponents, "rne m={m}");
+
+            let mut r1 = Xorshift32::new(77);
+            let mut r8 = Xorshift32::new(77);
+            let sa = BfpTensor::from_f32_with_threads(
+                &data,
+                rows,
+                cols,
+                m,
+                TileSize::Edge(24),
+                &mut Rounding::Stochastic(&mut r1),
+                1,
+            )
+            .unwrap();
+            let sb = BfpTensor::from_f32_with_threads(
+                &data,
+                rows,
+                cols,
+                m,
+                TileSize::Edge(24),
+                &mut Rounding::Stochastic(&mut r8),
+                8,
+            )
+            .unwrap();
+            assert!(sa.mantissas == sb.mantissas && sa.exponents == sb.exponents, "sr m={m}");
+        }
+    }
+
+    #[test]
+    fn quantize_inplace_matches_tensor_roundtrip() {
+        let mut g = Gen::new(0x1A5);
+        let rows = 48;
+        let cols = 36;
+        let data = g.vec_f32(rows * cols, 3);
+        let want = roundtrip(&data, rows, cols, 8, TileSize::Edge(16));
+        let mut got = data.clone();
+        quantize_inplace_2d(&mut got, rows, cols, 8, TileSize::Edge(16), &mut Rounding::NearestEven)
+            .unwrap();
+        assert_eq!(got, want, "in-place converter must match the tensor path");
     }
 
     #[test]

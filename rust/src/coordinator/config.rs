@@ -77,6 +77,11 @@ pub struct RunConfig {
     pub log_every: usize,
     /// Optional checkpoint directory.
     pub checkpoint_dir: Option<std::path::PathBuf>,
+    /// Host-side input conversion: quantize each incoming batch through a
+    /// BFP round-trip before upload — the paper's FP→BFP converter at the
+    /// accelerator boundary, modeled on the host with the parallel
+    /// quantizer. `(mantissa_bits, tile_edge)`; `None` = fp32 inputs.
+    pub input_bfp: Option<(u32, usize)>,
 }
 
 impl RunConfig {
@@ -89,6 +94,7 @@ impl RunConfig {
             eval_every: 0,
             log_every: 10,
             checkpoint_dir: None,
+            input_bfp: None,
         }
     }
 
@@ -107,6 +113,11 @@ impl RunConfig {
         self
     }
 
+    pub fn with_input_bfp(mut self, mantissa_bits: u32, tile_edge: usize) -> Self {
+        self.input_bfp = Some((mantissa_bits, tile_edge));
+        self
+    }
+
     /// Parse the model name back out of the combo.
     pub fn model(&self) -> &str {
         self.combo.split('-').next().unwrap_or("")
@@ -119,6 +130,13 @@ impl RunConfig {
             ("seed", Json::num(self.seed as f64)),
             ("lr", self.lr.to_json()),
             ("eval_every", Json::num(self.eval_every as f64)),
+            (
+                "input_bfp",
+                match self.input_bfp {
+                    Some((m, t)) => Json::str(format!("m{m}_t{t}")),
+                    None => Json::Null,
+                },
+            ),
         ])
     }
 }
@@ -186,5 +204,14 @@ mod tests {
         let parsed = Json::parse(&j).unwrap();
         assert_eq!(parsed.get("combo").unwrap().as_str(), Some("m-d-fp32"));
         assert_eq!(parsed.get("steps").unwrap().as_usize(), Some(200));
+        assert_eq!(parsed.get("input_bfp"), Some(&Json::Null));
+    }
+
+    #[test]
+    fn input_bfp_builder_and_json() {
+        let c = RunConfig::new("m-d-hbfp8_16_t24", 10).with_input_bfp(8, 24);
+        assert_eq!(c.input_bfp, Some((8, 24)));
+        let parsed = Json::parse(&c.to_json().to_string()).unwrap();
+        assert_eq!(parsed.get("input_bfp").unwrap().as_str(), Some("m8_t24"));
     }
 }

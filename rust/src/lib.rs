@@ -16,6 +16,13 @@
 //!
 //! Python never runs at training time; the `hbfp` binary is self-contained
 //! once `make artifacts` has produced the HLO modules.
+//!
+//! The workspace builds offline: `rust/vendor/xla` is an API-compatible
+//! stand-in for the PJRT binding (artifact execution reports itself
+//! unavailable until the real binding is swapped in via Cargo.toml), and
+//! the BFP substrate (`bfp`) — packed mantissa storage, parallel
+//! converters, the fused integer-MAC matmul — is pure rust with no
+//! external runtime (see PERF.md).
 
 pub mod accel;
 pub mod bfp;

@@ -3,6 +3,7 @@
 //! ```text
 //! hbfp list                               # combos available in artifacts/
 //! hbfp train <combo> [--steps N] [--lr S] [--seed K] [--eval-every N]
+//!            [--input-bfp MxT]   # host-side BFP input converter, e.g. 8x24
 //! hbfp repro <table1|table2|table3|fig3|mantissa|tiles|attention|throughput|all>
 //!            [--steps N] [--seed K]
 //! hbfp accel-report                       # area/throughput model table
@@ -40,6 +41,14 @@ fn init_logging(verbose: bool) {
     log::set_max_level(if verbose { log::LevelFilter::Debug } else { log::LevelFilter::Info });
 }
 
+/// Parse `--input-bfp 8x24` into (mantissa_bits, tile_edge).
+fn parse_input_bfp(spec: &str) -> Result<(u32, usize)> {
+    let parsed = spec
+        .split_once('x')
+        .and_then(|(m, t)| Some((m.parse::<u32>().ok()?, t.parse::<usize>().ok()?)));
+    parsed.ok_or_else(|| anyhow!("--input-bfp expects <mantissa>x<tile>, e.g. 8x24; got {spec:?}"))
+}
+
 fn main() -> Result<()> {
     let args = Args::from_env();
     init_logging(args.has_flag("verbose"));
@@ -58,12 +67,16 @@ fn main() -> Result<()> {
             let combo = args
                 .positional
                 .first()
-                .ok_or_else(|| anyhow!("usage: hbfp train <combo> [--steps N]"))?;
+                .ok_or_else(|| anyhow!("usage: hbfp train <combo> [--steps N] [--input-bfp MxT]"))?;
             let steps = args.opt_usize("steps", 200)?;
             let manifest = Arc::new(Manifest::load(&artifacts)?);
             let mut cfg = RunConfig::new(combo, steps)
                 .with_seed(args.opt_u64("seed", 0)?)
                 .with_eval_every(args.opt_usize("eval-every", 0)?);
+            if let Some(spec) = args.opt("input-bfp") {
+                let (m, t) = parse_input_bfp(spec)?;
+                cfg = cfg.with_input_bfp(m, t);
+            }
             let model = cfg.model().to_string();
             let base = hbfp::coordinator::default_base_lr(&model);
             cfg = cfg.with_lr(parse_schedule(

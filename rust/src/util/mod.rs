@@ -9,6 +9,55 @@ pub mod rng;
 
 use std::time::Instant;
 
+/// Worker-thread budget for the parallel BFP kernels: the `HBFP_THREADS`
+/// env var overrides, otherwise the machine's available parallelism.
+pub fn worker_threads() -> usize {
+    if let Ok(v) = std::env::var("HBFP_THREADS") {
+        if let Ok(n) = v.parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Run `(index, payload)` jobs across up to `max_threads` scoped threads.
+///
+/// Jobs are split into contiguous chunks, one chunk per thread, so callers
+/// that hand out disjoint `&mut` slices (row bands of an output matrix)
+/// parallelize without any locking. With `max_threads <= 1` everything
+/// runs inline on the caller's thread — the work function must therefore
+/// not depend on which thread it runs on (the BFP kernels guarantee this:
+/// results are bit-identical for any thread count).
+pub fn for_each_job<T, F>(mut jobs: Vec<(usize, T)>, max_threads: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, T) + Sync,
+{
+    if jobs.is_empty() {
+        return;
+    }
+    let threads = max_threads.max(1).min(jobs.len());
+    if threads == 1 {
+        for (i, job) in jobs {
+            f(i, job);
+        }
+        return;
+    }
+    let per = jobs.len().div_ceil(threads);
+    std::thread::scope(|scope| {
+        while !jobs.is_empty() {
+            let take = per.min(jobs.len());
+            let chunk: Vec<(usize, T)> = jobs.drain(..take).collect();
+            let f = &f;
+            scope.spawn(move || {
+                for (i, job) in chunk {
+                    f(i, job);
+                }
+            });
+        }
+    });
+}
+
 /// Measure wall time of `f`, returning (result, seconds).
 pub fn timed<T>(f: impl FnOnce() -> T) -> (T, f64) {
     let t0 = Instant::now();
@@ -48,6 +97,33 @@ impl Stats {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn for_each_job_covers_all_disjoint_slices() {
+        let mut data = vec![0u32; 103];
+        for threads in [1, 2, 7] {
+            data.fill(0);
+            let jobs: Vec<(usize, &mut [u32])> = data.chunks_mut(10).enumerate().collect();
+            for_each_job(jobs, threads, |i, chunk| {
+                for (j, x) in chunk.iter_mut().enumerate() {
+                    *x = (i * 10 + j) as u32;
+                }
+            });
+            for (i, &x) in data.iter().enumerate() {
+                assert_eq!(x, i as u32, "threads={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn for_each_job_empty_is_noop() {
+        for_each_job(Vec::<(usize, ())>::new(), 4, |_, _| panic!("no jobs"));
+    }
+
+    #[test]
+    fn worker_threads_at_least_one() {
+        assert!(worker_threads() >= 1);
+    }
 
     #[test]
     fn stats_quantiles() {

@@ -1,0 +1,259 @@
+//! Packed-kernel contract tests: the width-packed, multi-threaded,
+//! accumulator-width-selecting BFP matmul must be bit-for-bit equal to the
+//! retained `bfp_matmul_naive` reference (j-innermost, always-i64) across
+//! storage classes, tile sizes, mixed operand widths, adversarial
+//! worst-case mantissas at the i32-overflow boundary, and any thread
+//! count — and the fused convert+matmul must equal materialize-then-
+//! multiply exactly, stochastic rounding included.
+
+use hbfp::bfp::{
+    acc_fits_i32, bfp_matmul, bfp_matmul_naive, bfp_matmul_with_threads, quantize_matmul,
+    quantize_matmul_with_threads, BfpTensor, Mantissas, Rounding, TileSize,
+};
+use hbfp::util::rng::{SplitMix64, Xorshift32};
+
+fn rand_mat(rng: &mut SplitMix64, len: usize, scale: f32) -> Vec<f32> {
+    (0..len).map(|_| rng.normal() * scale).collect()
+}
+
+/// Random mantissas spanning the full two's-complement range of `bits`.
+fn rand_mantissas(rng: &mut SplitMix64, len: usize, bits: u32) -> Vec<i32> {
+    let lo = -(1i64 << (bits - 1));
+    let hi = (1i64 << (bits - 1)) - 1;
+    (0..len).map(|_| (lo + (rng.next_u64() % (hi - lo + 1) as u64) as i64) as i32).collect()
+}
+
+fn pack(bits: u32, q: &[i32]) -> Mantissas {
+    let mut m = Mantissas::for_width(bits, q.len());
+    for (i, &v) in q.iter().enumerate() {
+        m.set(i, v);
+    }
+    m
+}
+
+#[test]
+fn packed_matches_naive_across_widths_and_tiles() {
+    let mut rng = SplitMix64::new(0xD1FF);
+    for &(m, k, n) in &[(17usize, 23usize, 19usize), (48, 48, 48), (40, 64, 24)] {
+        let a = rand_mat(&mut rng, m * k, 2.0);
+        let b = rand_mat(&mut rng, k * n, 0.5);
+        for &tile in &[TileSize::Whole, TileSize::Edge(4), TileSize::Edge(24), TileSize::Edge(64)]
+        {
+            let width_pairs =
+                [(4u32, 4u32), (8, 8), (12, 12), (16, 16), (24, 24), (8, 16), (16, 8), (4, 24)];
+            for &(ma, mb) in &width_pairs {
+                let qa =
+                    BfpTensor::from_f32(&a, m, k, ma, tile, &mut Rounding::NearestEven).unwrap();
+                let qb =
+                    BfpTensor::from_f32(&b, k, n, mb, tile, &mut Rounding::NearestEven).unwrap();
+                let fast = bfp_matmul(&qa, &qb).unwrap();
+                let slow = bfp_matmul_naive(&qa, &qb).unwrap();
+                assert!(
+                    fast == slow,
+                    "packed kernel != naive at ma={ma} mb={mb} tile={tile:?} ({m}x{k}x{n})"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn wide_storage_of_narrow_mantissas_is_equivalent() {
+    // The same logical 8-bit mantissas stored packed (i8) and wide (i32)
+    // must multiply to bit-identical results: the kernels are generic
+    // over storage, the numerics depend only on the values.
+    let mut rng = SplitMix64::new(0xAB);
+    let (m, k, n) = (24, 36, 20);
+    let qa = rand_mantissas(&mut rng, m * k, 8);
+    let qb = rand_mantissas(&mut rng, k * n, 8);
+    let ea: Vec<i32> = (0..((m + 7) / 8) * ((k + 7) / 8)).map(|i| (i % 5) as i32 - 2).collect();
+    let eb: Vec<i32> = (0..((k + 7) / 8) * ((n + 7) / 8)).map(|i| (i % 3) as i32).collect();
+    let tile = TileSize::Edge(8);
+    let a8 = BfpTensor::from_parts(m, k, 8, tile, pack(8, &qa), ea.clone()).unwrap();
+    let b8 = BfpTensor::from_parts(k, n, 8, tile, pack(8, &qb), eb.clone()).unwrap();
+    let a32 = BfpTensor::from_parts(m, k, 8, tile, Mantissas::I32(qa), ea).unwrap();
+    let b32 = BfpTensor::from_parts(k, n, 8, tile, Mantissas::I32(qb), eb).unwrap();
+    assert!(matches!(a8.mantissas, Mantissas::I8(_)));
+    let packed = bfp_matmul(&a8, &b8).unwrap();
+    let wide = bfp_matmul(&a32, &b32).unwrap();
+    let naive = bfp_matmul_naive(&a8, &b8).unwrap();
+    assert!(packed == wide && packed == naive, "storage class changed the numerics");
+}
+
+/// Worst-case tensors: every mantissa at the most negative value, so each
+/// product attains the maximum magnitude `2^(ma+mb-2)` and tile partials
+/// sit exactly at the proven bound `tile_k * 2^(ma+mb-2)`.
+fn extreme_pair(
+    m: usize,
+    k: usize,
+    n: usize,
+    ma: u32,
+    mb: u32,
+    tile: TileSize,
+) -> (BfpTensor, BfpTensor) {
+    let qa = vec![-(1i32 << (ma - 1)); m * k];
+    let qb = vec![-(1i32 << (mb - 1)); k * n];
+    let (th, tw) = tile.edge_or(m, k);
+    let ea = vec![0i32; m.div_ceil(th).max(1) * k.div_ceil(tw).max(1)];
+    let (th2, tw2) = tile.edge_or(k, n);
+    let eb = vec![0i32; k.div_ceil(th2).max(1) * n.div_ceil(tw2).max(1)];
+    let a = BfpTensor::from_parts(m, k, ma, tile, pack(ma, &qa), ea).unwrap();
+    let b = BfpTensor::from_parts(k, n, mb, tile, pack(mb, &qb), eb).unwrap();
+    (a, b)
+}
+
+#[test]
+fn overflow_boundary_worst_case_exact() {
+    // Combos straddling the i32 accumulator boundary. For each, the
+    // blocked kernel (which picks i32 or i64 by the bound) must equal the
+    // always-i64 naive kernel on all-extremal mantissas — if the bound
+    // were wrong by even one product, the i32 path would wrap and diverge.
+    for &(ma, mb, t, k) in &[
+        (12u32, 12u32, 24usize, 48usize), // comfortably inside i32
+        (13, 13, 127, 127),               // partial = 127 * 2^24, just under i32::MAX
+        (13, 13, 128, 128),               // 2^31 — must fall back to i64
+        (16, 16, 1, 7),                   // single-product tiles fit i32
+        (16, 16, 2, 8),                   // two products overflow -> i64
+        (24, 24, 24, 48),                 // widest supported, always i64
+    ] {
+        let (m, n) = (9usize, 11usize);
+        let tile = TileSize::Edge(t);
+        let (a, b) = extreme_pair(m, k, n, ma, mb, tile);
+        let fast = bfp_matmul(&a, &b).unwrap();
+        let slow = bfp_matmul_naive(&a, &b).unwrap();
+        assert!(
+            fast == slow,
+            "boundary case ma={ma} mb={mb} t={t} k={k} diverged (i32 fits: {})",
+            acc_fits_i32(t.min(k), ma, mb)
+        );
+    }
+}
+
+#[test]
+fn overflow_boundary_property_random_extremes() {
+    // Random mantissas over the full range at boundary widths/tiles: the
+    // packed kernel must match naive bit-for-bit everywhere.
+    let mut rng = SplitMix64::new(0x0F10);
+    for case in 0..40 {
+        let ma = [12u32, 13, 14, 16, 20, 24][(rng.next_u64() % 6) as usize];
+        let mb = [12u32, 13, 14, 16, 20, 24][(rng.next_u64() % 6) as usize];
+        let t = [1usize, 2, 8, 24, 96][(rng.next_u64() % 5) as usize];
+        let (m, k, n) = (
+            1 + (rng.next_u64() % 12) as usize,
+            1 + (rng.next_u64() % 100) as usize,
+            1 + (rng.next_u64() % 12) as usize,
+        );
+        let tile = TileSize::Edge(t);
+        let (th, tw) = tile.edge_or(m, k);
+        let ea: Vec<i32> = (0..m.div_ceil(th).max(1) * k.div_ceil(tw).max(1))
+            .map(|_| (rng.next_u64() % 7) as i32 - 3)
+            .collect();
+        let (th2, tw2) = tile.edge_or(k, n);
+        let eb: Vec<i32> = (0..k.div_ceil(th2).max(1) * n.div_ceil(tw2).max(1))
+            .map(|_| (rng.next_u64() % 7) as i32 - 3)
+            .collect();
+        let qa = rand_mantissas(&mut rng, m * k, ma);
+        let qb = rand_mantissas(&mut rng, k * n, mb);
+        let a = BfpTensor::from_parts(m, k, ma, tile, pack(ma, &qa), ea).unwrap();
+        let b = BfpTensor::from_parts(k, n, mb, tile, pack(mb, &qb), eb).unwrap();
+        let fast = bfp_matmul(&a, &b).unwrap();
+        let slow = bfp_matmul_naive(&a, &b).unwrap();
+        assert!(fast == slow, "case {case}: ma={ma} mb={mb} t={t} ({m}x{k}x{n})");
+    }
+}
+
+#[test]
+fn stochastic_quantization_thread_invariant() {
+    // The per-tile substream design: 1-thread and N-thread stochastic
+    // quantization produce identical tensors, hence identical products.
+    let mut rng = SplitMix64::new(0x5EED);
+    let (rows, cols) = (200, 160); // above the parallel floor
+    let data = rand_mat(&mut rng, rows * cols, 1.5);
+    for m in [8u32, 12] {
+        let mut r1 = Xorshift32::new(0xC0FE);
+        let mut r2 = Xorshift32::new(0xC0FE);
+        let t1 = BfpTensor::from_f32_with_threads(
+            &data,
+            rows,
+            cols,
+            m,
+            TileSize::Edge(24),
+            &mut Rounding::Stochastic(&mut r1),
+            1,
+        )
+        .unwrap();
+        let t8 = BfpTensor::from_f32_with_threads(
+            &data,
+            rows,
+            cols,
+            m,
+            TileSize::Edge(24),
+            &mut Rounding::Stochastic(&mut r2),
+            8,
+        )
+        .unwrap();
+        assert!(t1.mantissas == t8.mantissas && t1.exponents == t8.exponents, "m={m}");
+        // and the caller RNGs advanced identically (exactly one draw)
+        assert_eq!(r1.next_u32(), r2.next_u32());
+    }
+}
+
+#[test]
+fn matmul_and_fused_thread_invariant() {
+    let mut rng = SplitMix64::new(0x7AB);
+    let (m, k, n) = (128, 96, 80); // above the parallel floor
+    let a = rand_mat(&mut rng, m * k, 1.0);
+    let b = rand_mat(&mut rng, k * n, 1.0);
+    let qb =
+        BfpTensor::from_f32(&b, k, n, 8, TileSize::Edge(24), &mut Rounding::NearestEven).unwrap();
+    let qa =
+        BfpTensor::from_f32(&a, m, k, 8, TileSize::Edge(24), &mut Rounding::NearestEven).unwrap();
+    let mm1 = bfp_matmul_with_threads(&qa, &qb, 1).unwrap();
+    let mm8 = bfp_matmul_with_threads(&qa, &qb, 8).unwrap();
+    assert!(mm1 == mm8, "blocked matmul must be thread-count invariant");
+
+    let mut r1 = Xorshift32::new(3);
+    let mut r8 = Xorshift32::new(3);
+    let f1 =
+        quantize_matmul_with_threads(&a, m, 8, &mut Rounding::Stochastic(&mut r1), &qb, 1).unwrap();
+    let f8 =
+        quantize_matmul_with_threads(&a, m, 8, &mut Rounding::Stochastic(&mut r8), &qb, 8).unwrap();
+    assert!(f1 == f8, "fused path must be thread-count invariant");
+}
+
+#[test]
+fn fused_equals_materialized_at_parallel_sizes() {
+    // The unit tests cover small shapes; here the parallel code paths
+    // (band scratch quantization) are actually engaged.
+    let mut rng = SplitMix64::new(0xFA5);
+    let (m, k, n) = (96, 120, 64);
+    let a = rand_mat(&mut rng, m * k, 2.0);
+    let b = rand_mat(&mut rng, k * n, 1.0);
+    for &tile in &[TileSize::Edge(24), TileSize::Edge(32), TileSize::Whole] {
+        let qb = BfpTensor::from_f32(&b, k, n, 8, tile, &mut Rounding::NearestEven).unwrap();
+        let mut ra = Xorshift32::new(0x11);
+        let mut rb = Xorshift32::new(0x11);
+        let qa =
+            BfpTensor::from_f32(&a, m, k, 8, tile, &mut Rounding::Stochastic(&mut ra)).unwrap();
+        let want = bfp_matmul(&qa, &qb).unwrap();
+        let got = quantize_matmul(&a, m, 8, &mut Rounding::Stochastic(&mut rb), &qb).unwrap();
+        assert!(got == want, "fused != materialized at tile {tile:?}");
+    }
+}
+
+#[test]
+fn packed_storage_is_actually_smaller() {
+    let data: Vec<f32> = (0..256 * 256).map(|i| ((i % 97) as f32 - 48.0) / 9.0).collect();
+    let t8 =
+        BfpTensor::from_f32(&data, 256, 256, 8, TileSize::Edge(24), &mut Rounding::NearestEven)
+            .unwrap();
+    let t12 =
+        BfpTensor::from_f32(&data, 256, 256, 12, TileSize::Edge(24), &mut Rounding::NearestEven)
+            .unwrap();
+    let t20 =
+        BfpTensor::from_f32(&data, 256, 256, 20, TileSize::Edge(24), &mut Rounding::NearestEven)
+            .unwrap();
+    // i8 storage: 1 byte/elem; i16: 2; i32: 4 (plus identical exponent cost)
+    assert_eq!(t12.heap_bytes() - t8.heap_bytes(), 256 * 256);
+    assert_eq!(t20.heap_bytes() - t12.heap_bytes(), 2 * 256 * 256);
+}

@@ -1,0 +1,238 @@
+//! Offline stand-in for the XLA/PJRT binding (`xla` crate) that
+//! `hbfp::runtime` compiles against.
+//!
+//! The real binding links the XLA C++ runtime, which is not part of the
+//! offline toolchain. This crate mirrors the exact API surface the runtime
+//! layer uses — `Literal` construction/reshape/fetch, `PjRtClient`,
+//! `HloModuleProto`, `XlaComputation`, `PjRtLoadedExecutable` — so the
+//! whole workspace builds and tests standalone. `Literal` is fully
+//! functional host-side (it is just typed data + dims); the compile/execute
+//! entry points return descriptive errors, which the callers already treat
+//! as "artifacts unavailable" and skip (see `rust/tests/*_integration.rs`).
+//! Swapping in the real binding is a Cargo.toml-only change.
+
+use std::borrow::Borrow;
+use std::fmt;
+
+/// Error type mirroring the binding's: displayable, `std::error::Error`,
+/// `Send + Sync` so `anyhow::Context` applies.
+#[derive(Debug)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable(what: &str) -> Error {
+    Error(format!("XLA stub: {what} requires the real `xla` binding (see rust/vendor/xla)"))
+}
+
+/// Typed storage of a literal. Public only so `NativeType` can name it;
+/// treat as private.
+#[doc(hidden)]
+#[derive(Debug, Clone, PartialEq)]
+pub enum Data {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    Tuple(Vec<Literal>),
+}
+
+/// Element types a `Literal` can hold (subset: f32, i32).
+pub trait NativeType: Copy {
+    #[doc(hidden)]
+    fn wrap(v: Vec<Self>) -> Data;
+    #[doc(hidden)]
+    fn unwrap(d: &Data) -> Option<&[Self]>;
+}
+
+impl NativeType for f32 {
+    fn wrap(v: Vec<Self>) -> Data {
+        Data::F32(v)
+    }
+    fn unwrap(d: &Data) -> Option<&[Self]> {
+        match d {
+            Data::F32(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+impl NativeType for i32 {
+    fn wrap(v: Vec<Self>) -> Data {
+        Data::I32(v)
+    }
+    fn unwrap(d: &Data) -> Option<&[Self]> {
+        match d {
+            Data::I32(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+/// Host-side literal: row-major typed data plus dimensions. Fully
+/// functional in the stub (no device involved).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Literal {
+    data: Data,
+    dims: Vec<i64>,
+}
+
+impl Literal {
+    /// Rank-1 literal from a slice.
+    pub fn vec1<T: NativeType>(v: &[T]) -> Literal {
+        Literal { dims: vec![v.len() as i64], data: T::wrap(v.to_vec()) }
+    }
+
+    /// Tuple literal (what a multi-output computation returns).
+    pub fn tuple(elements: Vec<Literal>) -> Literal {
+        Literal { dims: Vec::new(), data: Data::Tuple(elements) }
+    }
+
+    fn element_count(&self) -> usize {
+        match &self.data {
+            Data::F32(v) => v.len(),
+            Data::I32(v) => v.len(),
+            Data::Tuple(_) => 0,
+        }
+    }
+
+    /// Same data, new dims (must preserve the element count).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let n: i64 = dims.iter().product();
+        if matches!(self.data, Data::Tuple(_)) {
+            return Err(Error("cannot reshape a tuple literal".to_string()));
+        }
+        if n as usize != self.element_count() {
+            return Err(Error(format!(
+                "reshape to {dims:?} ({n} elements) from {} elements",
+                self.element_count()
+            )));
+        }
+        Ok(Literal { data: self.data.clone(), dims: dims.to_vec() })
+    }
+
+    pub fn shape_dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    /// Split a tuple literal into its parts.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        match self.data {
+            Data::Tuple(v) => Ok(v),
+            _ => Err(Error("literal is not a tuple".to_string())),
+        }
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::unwrap(&self.data)
+            .map(|s| s.to_vec())
+            .ok_or_else(|| Error("literal element type mismatch".to_string()))
+    }
+
+    pub fn get_first_element<T: NativeType>(&self) -> Result<T> {
+        T::unwrap(&self.data)
+            .and_then(|s| s.first().copied())
+            .ok_or_else(|| Error("empty literal or element type mismatch".to_string()))
+    }
+}
+
+/// PJRT client handle. Construction succeeds (so engine plumbing is
+/// testable); compilation reports the stub honestly.
+pub struct PjRtClient {}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Ok(PjRtClient {})
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub-cpu".to_string()
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable("compiling a computation"))
+    }
+}
+
+/// Parsed HLO module (opaque).
+pub struct HloModuleProto {}
+
+impl HloModuleProto {
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto> {
+        Err(unavailable(&format!("parsing HLO text {path:?}")))
+    }
+}
+
+/// A computation ready to compile (opaque).
+pub struct XlaComputation {}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation {}
+    }
+}
+
+/// A compiled executable (never constructible through the stub's public
+/// API today, but the type and methods must exist for callers).
+pub struct PjRtLoadedExecutable {}
+
+impl PjRtLoadedExecutable {
+    /// Returns per-replica output buffers.
+    pub fn execute<L: Borrow<Literal>>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable("executing"))
+    }
+}
+
+/// A device buffer handle.
+pub struct PjRtBuffer {}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable("fetching a buffer"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_and_reshape() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]);
+        let r = l.reshape(&[2, 2]).unwrap();
+        assert_eq!(r.shape_dims(), &[2, 2]);
+        assert_eq!(r.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(l.reshape(&[3, 2]).is_err());
+        assert!(r.to_vec::<i32>().is_err());
+        assert_eq!(r.get_first_element::<f32>().unwrap(), 1.0);
+    }
+
+    #[test]
+    fn scalar_reshape() {
+        let l = Literal::vec1(&[7i32]).reshape(&[]).unwrap();
+        assert_eq!(l.get_first_element::<i32>().unwrap(), 7);
+    }
+
+    #[test]
+    fn tuple_split() {
+        let t = Literal::tuple(vec![Literal::vec1(&[1.0f32]), Literal::vec1(&[2i32])]);
+        let parts = t.to_tuple().unwrap();
+        assert_eq!(parts.len(), 2);
+        assert!(Literal::vec1(&[1.0f32]).to_tuple().is_err());
+    }
+
+    #[test]
+    fn unavailable_paths_error() {
+        let client = PjRtClient::cpu().unwrap();
+        assert_eq!(client.platform_name(), "stub-cpu");
+        assert!(HloModuleProto::from_text_file("x.hlo").is_err());
+        let c = XlaComputation::from_proto(&HloModuleProto {});
+        assert!(client.compile(&c).is_err());
+    }
+}
