@@ -1,8 +1,9 @@
 # Tooling entry points. `make check` is the PR gate: format, release
 # build, full test suite. `make perf` regenerates BENCH_bfp_ops.json at
-# the repo root (see PERF.md).
+# the repo root (see PERF.md); `make bench-quick` is the 3-rep smoke run
+# of the same ladder (also writes the JSON).
 
-.PHONY: check fmt build test perf
+.PHONY: check fmt build test perf bench-quick
 
 check: fmt build test
 
@@ -17,3 +18,6 @@ test:
 
 perf:
 	cargo bench --bench bfp_ops -- --json
+
+bench-quick:
+	cargo bench --bench bfp_ops -- --quick --json

@@ -3,19 +3,25 @@
 //! These are the §Perf targets for the rust BFP substrate (see PERF.md).
 //!
 //! The matmul section prints the full before/after ladder on the same
-//! operands: `naive` (j-innermost, the original kernel), `blocked 1T`
+//! operands: `naive` (j-innermost, the original kernel), `row-major 1T`
 //! (cache-blocked, single thread — the pre-packing seed kernel shape),
-//! `packed NT` (width-packed storage + row-band threading, the default
-//! path), and `fused` (convert+matmul in one pass). Run with `--json` to
-//! write `BENCH_bfp_ops.json` at the repo root.
+//! `row-major packed-parallel` (width-packed storage + row-band
+//! threading), `packed-panel` warm/cold (the k-tile-major B relayout,
+//! cached vs repacked per call — the default path), and `fused`
+//! (convert+matmul in one pass). A dispatch section compares the
+//! persistent pool against per-call scoped spawns at 128^3, and a skinny
+//! m=8 section measures the resident-weight case (small activation batch
+//! against big cached weights) where panel reuse pays every step. Run
+//! with `--json` to write `BENCH_bfp_ops.json` at the repo root.
 
 mod common;
 
 use common::{bench, header, BenchOpts, JsonSink};
 use hbfp::bfp::{
-    bfp_matmul_naive, bfp_matmul_with_threads, fp32_matmul, quantize_matmul, BfpTensor, Rounding,
-    TileSize,
+    bfp_matmul_naive, bfp_matmul_rowmajor_with_threads, bfp_matmul_with_backend,
+    bfp_matmul_with_threads, fp32_matmul, quantize_matmul, BfpTensor, Rounding, TileSize,
 };
+use hbfp::util::pool::ParBackend;
 use hbfp::util::rng::{SplitMix64, Xorshift32};
 use hbfp::util::worker_threads;
 
@@ -115,14 +121,20 @@ fn main() {
                 std::hint::black_box(bfp_matmul_naive(&qa, &qb).unwrap());
             });
             sink.push(&r, flops);
-            let r = bench(&opts, "bfp_matmul m=8 t=24 (blocked, 1 thread)", flops, || {
-                std::hint::black_box(bfp_matmul_with_threads(&qa, &qb, 1).unwrap());
+            let r = bench(&opts, "bfp_matmul m=8 t=24 (row-major, 1 thread)", flops, || {
+                std::hint::black_box(bfp_matmul_rowmajor_with_threads(&qa, &qb, 1).unwrap());
             });
             sink.push(&r, flops);
+            let r =
+                bench(&opts, "bfp_matmul m=8 t=24 (row-major packed-parallel)", flops, || {
+                    std::hint::black_box(bfp_matmul_rowmajor_with_threads(&qa, &qb, nt).unwrap());
+                });
+            sink.push(&r, flops);
         }
+        qb.packed_panels(); // warm the panel cache outside the timed region
         let r = bench(
             &opts,
-            &format!("bfp_matmul m={bits} t={tile} (packed-parallel)"),
+            &format!("bfp_matmul m={bits} t={tile} (packed-panel, warm)"),
             flops,
             || {
                 std::hint::black_box(bfp_matmul_with_threads(&qa, &qb, nt).unwrap());
@@ -130,6 +142,12 @@ fn main() {
         );
         sink.push(&r, flops);
         if bits == 8 && tile == 24 {
+            let r = bench(&opts, "bfp_matmul m=8 t=24 (packed-panel, cold-pack)", flops, || {
+                qb.clear_panel_cache();
+                std::hint::black_box(bfp_matmul_with_threads(&qa, &qb, nt).unwrap());
+            });
+            sink.push(&r, flops);
+            qb.packed_panels();
             let r = bench(&opts, "quantize_matmul m=8 t=24 (fused A-convert)", flops, || {
                 std::hint::black_box(
                     quantize_matmul(&a, m, 8, &mut Rounding::NearestEven, &qb).unwrap(),
@@ -137,6 +155,61 @@ fn main() {
             });
             sink.push(&r, flops);
         }
+    }
+
+    header(&format!("matmul dispatch: pooled vs per-call scoped spawns, {nt} threads"));
+    {
+        let (m, k, n) = (128usize, 128usize, 128usize);
+        let a = randv(m * k, 6);
+        let b = randv(k * n, 7);
+        let flops = (2 * m * k * n) as f64;
+        let qa =
+            BfpTensor::from_f32(&a, m, k, 8, TileSize::Edge(24), &mut Rounding::NearestEven)
+                .unwrap();
+        let qb =
+            BfpTensor::from_f32(&b, k, n, 8, TileSize::Edge(24), &mut Rounding::NearestEven)
+                .unwrap();
+        qb.packed_panels(); // both rungs warm: isolate dispatch cost
+        let r = bench(&opts, "bfp_matmul 128^3 m=8 t=24 (scoped-spawn)", flops, || {
+            std::hint::black_box(
+                bfp_matmul_with_backend(&qa, &qb, nt, ParBackend::Scoped).unwrap(),
+            );
+        });
+        sink.push(&r, flops);
+        let r = bench(&opts, "bfp_matmul 128^3 m=8 t=24 (pooled)", flops, || {
+            std::hint::black_box(
+                bfp_matmul_with_backend(&qa, &qb, nt, ParBackend::Pooled).unwrap(),
+            );
+        });
+        sink.push(&r, flops);
+    }
+
+    header("resident weights: skinny activation GEMM (8x256x256), panel reuse per step");
+    {
+        let (m, k, n) = (8usize, 256usize, 256usize);
+        let a = randv(m * k, 8);
+        let b = randv(k * n, 9);
+        let flops = (2 * m * k * n) as f64;
+        let qa =
+            BfpTensor::from_f32(&a, m, k, 8, TileSize::Edge(24), &mut Rounding::NearestEven)
+                .unwrap();
+        let qb =
+            BfpTensor::from_f32(&b, k, n, 8, TileSize::Edge(24), &mut Rounding::NearestEven)
+                .unwrap();
+        let r = bench(&opts, "bfp_matmul 8x256x256 (row-major)", flops, || {
+            std::hint::black_box(bfp_matmul_rowmajor_with_threads(&qa, &qb, nt).unwrap());
+        });
+        sink.push(&r, flops);
+        qb.packed_panels();
+        let r = bench(&opts, "bfp_matmul 8x256x256 (packed-panel, warm)", flops, || {
+            std::hint::black_box(bfp_matmul_with_threads(&qa, &qb, nt).unwrap());
+        });
+        sink.push(&r, flops);
+        let r = bench(&opts, "bfp_matmul 8x256x256 (packed-panel, cold-pack)", flops, || {
+            qb.clear_panel_cache();
+            std::hint::black_box(bfp_matmul_with_threads(&qa, &qb, nt).unwrap());
+        });
+        sink.push(&r, flops);
     }
 
     header("wide weight storage: narrow_view (16 -> 8 bits, repacking)");

@@ -8,7 +8,7 @@
 //! `crate::bfp`) and the *performance* (cycles, utilization, effective
 //! throughput), so the repro harness can report TOp/s per format.
 
-use anyhow::Result;
+use anyhow::{anyhow, Result};
 
 use crate::bfp::{BfpTensor, Rounding, TileSize};
 use crate::util::rng::Xorshift32;
@@ -34,17 +34,26 @@ pub struct GemmStats {
     pub conv_cycles: u64,
 }
 
+/// Weights quantized once and held next to the array (packed-panel
+/// layout cached on the tensor) — the paper's resident operand, reused
+/// by every training-step GEMM without reconversion or relayout.
+struct ResidentWeights {
+    qb: BfpTensor,
+    mantissa_bits: u32,
+}
+
 /// The simulated accelerator.
 pub struct Accelerator {
     pub cfg: AccelConfig,
     pub edge: usize,
     rng: Xorshift32,
+    resident: Option<ResidentWeights>,
 }
 
 impl Accelerator {
     pub fn new(cfg: AccelConfig) -> Accelerator {
         let report = size_design(&cfg);
-        Accelerator { cfg, edge: report.array_edge, rng: Xorshift32::new(0xACCE1) }
+        Accelerator { cfg, edge: report.array_edge, rng: Xorshift32::new(0xACCE1), resident: None }
     }
 
     /// Execute C = A (MxK) · B (KxN) through the modeled datapath.
@@ -66,47 +75,57 @@ impl Accelerator {
         n: usize,
         mantissa_bits: u32,
     ) -> Result<(Vec<f32>, GemmStats)> {
+        // one-shot path: quantize into a local operand (never clobbers
+        // weights loaded via `load_weights`); its converter cycles count
+        // toward this GEMM
+        let rw = self.quantize_weights(b, k, n, mantissa_bits)?;
+        let Accelerator { cfg, edge, rng, .. } = self;
+        gemm_against(cfg, *edge, rng, &rw, a, m, true)
+    }
+
+    /// Quantize + panel-pack `b` once as the array's resident operand.
+    /// Subsequent [`Accelerator::gemm_resident`] calls stream activations
+    /// against it without touching the weights again — the amortization a
+    /// training run gets from weights staying on the array across steps.
+    pub fn load_weights(
+        &mut self,
+        b: &[f32],
+        k: usize,
+        n: usize,
+        mantissa_bits: u32,
+    ) -> Result<()> {
+        let rw = self.quantize_weights(b, k, n, mantissa_bits)?;
+        self.resident = Some(rw);
+        Ok(())
+    }
+
+    fn quantize_weights(
+        &mut self,
+        b: &[f32],
+        k: usize,
+        n: usize,
+        mantissa_bits: u32,
+    ) -> Result<ResidentWeights> {
         let tile = TileSize::Edge(self.edge);
         let qb = {
             let rounding = &mut Rounding::Stochastic(&mut self.rng);
             BfpTensor::from_f32(b, k, n, mantissa_bits, tile, rounding)?
         };
-        let out = crate::bfp::quantize_matmul(
-            a,
-            m,
-            mantissa_bits,
-            &mut Rounding::Stochastic(&mut self.rng),
-            &qb,
-        )?;
+        if k > 0 && n > 0 {
+            qb.packed_panels(); // pack now; every GEMM reuses the layout
+        }
+        Ok(ResidentWeights { qb, mantissa_bits })
+    }
 
-        let e = self.edge as u64;
-        let tiles_m = m.div_ceil(self.edge) as u64;
-        let tiles_n = n.div_ceil(self.edge) as u64;
-        // per output tile: K MAC cycles + fill/drain
-        let per_tile = k as u64 + 2 * e;
-        let cycles = tiles_m * tiles_n * per_tile;
-        let macs_used = (m as u64) * (k as u64) * (n as u64);
-        let mac_slots = cycles * e * e;
-        let utilization = macs_used as f64 / mac_slots as f64;
-        // converters process 2*edge inputs per cycle, pipelined with compute
-        let conv_inputs = (m * k + k * n) as u64;
-        let conv_cycles = conv_inputs / (2 * e).max(1);
-        let secs = cycles as f64 / self.cfg.clock_hz;
-        let effective_ops = 2.0 * macs_used as f64 / secs;
-        Ok((
-            out,
-            GemmStats {
-                m,
-                k,
-                n,
-                array_edge: self.edge,
-                cycles,
-                macs_used,
-                utilization,
-                effective_ops,
-                conv_cycles,
-            },
-        ))
+    /// GEMM of streamed activations against the resident weights (must be
+    /// loaded first). Only the A-side converter runs; weights were
+    /// converted and packed at load time.
+    pub fn gemm_resident(&mut self, a: &[f32], m: usize) -> Result<(Vec<f32>, GemmStats)> {
+        let Accelerator { cfg, edge, rng, resident } = self;
+        let rw = resident
+            .as_ref()
+            .ok_or_else(|| anyhow!("no resident weights: call load_weights first"))?;
+        gemm_against(cfg, *edge, rng, rw, a, m, false)
     }
 
     /// Activation-unit pass (ReLU in narrow FP): counted at one element per
@@ -120,6 +139,58 @@ impl Accelerator {
         }
         (x.len() as u64).div_ceil(self.edge as u64)
     }
+}
+
+/// Numeric path + cycle accounting of one GEMM against quantized,
+/// panel-packed weights. `count_weight_conv` adds the weight-side
+/// converter traffic (one-shot GEMMs convert weights in-call; resident
+/// weights were converted at load).
+fn gemm_against(
+    cfg: &AccelConfig,
+    edge: usize,
+    rng: &mut Xorshift32,
+    rw: &ResidentWeights,
+    a: &[f32],
+    m: usize,
+    count_weight_conv: bool,
+) -> Result<(Vec<f32>, GemmStats)> {
+    let (k, n) = (rw.qb.rows, rw.qb.cols);
+    let out = crate::bfp::quantize_matmul(
+        a,
+        m,
+        rw.mantissa_bits,
+        &mut Rounding::Stochastic(rng),
+        &rw.qb,
+    )?;
+
+    let e = edge as u64;
+    let tiles_m = m.div_ceil(edge) as u64;
+    let tiles_n = n.div_ceil(edge) as u64;
+    // per output tile: K MAC cycles + fill/drain
+    let per_tile = k as u64 + 2 * e;
+    let cycles = tiles_m * tiles_n * per_tile;
+    let macs_used = (m as u64) * (k as u64) * (n as u64);
+    let mac_slots = cycles * e * e;
+    let utilization = macs_used as f64 / mac_slots as f64;
+    // converters process 2*edge inputs per cycle, pipelined with compute
+    let conv_inputs = (m * k + if count_weight_conv { k * n } else { 0 }) as u64;
+    let conv_cycles = conv_inputs / (2 * e).max(1);
+    let secs = cycles as f64 / cfg.clock_hz;
+    let effective_ops = 2.0 * macs_used as f64 / secs;
+    Ok((
+        out,
+        GemmStats {
+            m,
+            k,
+            n,
+            array_edge: edge,
+            cycles,
+            macs_used,
+            utilization,
+            effective_ops,
+            conv_cycles,
+        },
+    ))
 }
 
 #[cfg(test)]
@@ -175,6 +246,61 @@ mod tests {
         let (_, stats) = acc.gemm(&a, &b, m, k, n, 8).unwrap();
         // pipelined conversion stays under the compute cycle count
         assert!(stats.conv_cycles < stats.cycles, "{} vs {}", stats.conv_cycles, stats.cycles);
+    }
+
+    #[test]
+    fn resident_weights_reused_across_steps() {
+        // Two accelerators with identical seeds: one loads weights once
+        // and streams two batches; the other must match it by doing the
+        // same draws — the resident path changes cost accounting, never
+        // numerics.
+        let mut rng = SplitMix64::new(9);
+        let e = accel().edge;
+        let (m, k, n) = (2 * e, 4 * e, 2 * e); // edge-relative: conv counts stay nonzero
+        let b: Vec<f32> = (0..k * n).map(|_| rng.normal()).collect();
+        let a1: Vec<f32> = (0..m * k).map(|_| rng.normal()).collect();
+        let a2: Vec<f32> = (0..m * k).map(|_| rng.normal()).collect();
+
+        let mut acc = accel();
+        acc.load_weights(&b, k, n, 8).unwrap();
+        let (o1, s1) = acc.gemm_resident(&a1, m).unwrap();
+        let (o2, s2) = acc.gemm_resident(&a2, m).unwrap();
+        assert_ne!(o1, o2);
+        assert_eq!(s1.cycles, s2.cycles);
+        // resident steps convert only activations; a one-shot gemm also
+        // converts the weights
+        let mut one_shot = accel();
+        let (_, s3) = one_shot.gemm(&a1, &b, m, k, n, 8).unwrap();
+        assert!(s1.conv_cycles < s3.conv_cycles, "{} !< {}", s1.conv_cycles, s3.conv_cycles);
+        // and the one-shot path equals load+resident with the same RNG
+        let mut split = accel();
+        split.load_weights(&b, k, n, 8).unwrap();
+        let (o3, _) = split.gemm_resident(&a1, m).unwrap();
+        let mut fused = accel();
+        let (o4, _) = fused.gemm(&a1, &b, m, k, n, 8).unwrap();
+        assert_eq!(o3, o4, "gemm must equal load_weights + gemm_resident");
+    }
+
+    #[test]
+    fn gemm_resident_requires_loaded_weights() {
+        let mut acc = accel();
+        assert!(acc.gemm_resident(&[1.0; 8], 1).is_err());
+    }
+
+    #[test]
+    fn one_shot_gemm_does_not_clobber_resident_weights() {
+        let mut rng = SplitMix64::new(4);
+        let mut acc = accel();
+        let e = acc.edge;
+        let (m, k, n) = (e, 2 * e, e);
+        let w: Vec<f32> = (0..k * n).map(|_| rng.normal()).collect();
+        let a: Vec<f32> = (0..m * k).map(|_| rng.normal()).collect();
+        acc.load_weights(&w, k, n, 8).unwrap();
+        // an unrelated one-shot multiply must not replace the loaded weights
+        let other: Vec<f32> = (0..16).map(|_| rng.normal()).collect();
+        let _ = acc.gemm(&[1.0; 16], &other, 4, 4, 4, 8).unwrap();
+        let (_, stats) = acc.gemm_resident(&a, m).unwrap();
+        assert_eq!((stats.k, stats.n), (k, n), "resident dims must survive one-shot gemm");
     }
 
     #[test]

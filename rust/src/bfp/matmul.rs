@@ -20,15 +20,30 @@
 //! identical partials, so results are bit-for-bit equal to the
 //! [`bfp_matmul_naive`] reference.
 //!
-//! Output row-bands are distributed over `std::thread::scope` workers;
-//! every output element accumulates its k-tiles in the same order on
-//! exactly one thread, so results are bit-identical for any thread count.
+//! Output row-bands are distributed over the persistent worker pool
+//! (`util::pool`); every output element accumulates its k-tiles in the
+//! same order on exactly one lane, so results are bit-identical for any
+//! thread count and either dispatch backend.
+//!
+//! ## Packed-panel default path
+//!
+//! The default kernels stream the B operand from its [`PackedPanels`]
+//! layout (reordered once per tensor, cached on the `BfpTensor`): per
+//! k-tile, mantissas sit k-major in [`PANEL_NR`]-wide panels, so the
+//! microkernel keeps one `[acc; PANEL_NR]` register block per output row
+//! and reads B strictly contiguously. The pre-panel row-major walk is
+//! retained as [`bfp_matmul_rowmajor`] (bench rung + differential-test
+//! partner), and [`bfp_matmul_with_backend`] exposes the scoped-spawn
+//! dispatch baseline for the pooled-vs-scoped rung. All paths are
+//! bit-for-bit equal to [`bfp_matmul_naive`].
 
 use anyhow::{anyhow, Result};
 
+use super::panels::{matmul_tile_edge, PackedPanels, PANEL_NR};
 use super::quant::{self, exp2i, Rounding, TileRounding};
 use super::tensor::{BfpTensor, MantissaElem, Mantissas, TileSize};
-use crate::util::{for_each_job, worker_threads};
+use crate::util::pool::{self, ParBackend};
+use crate::util::worker_threads;
 
 /// Below this many MACs (m*k*n) the matmuls stay single-threaded.
 const PAR_MIN_MACS: usize = 1 << 17;
@@ -100,17 +115,11 @@ fn check_shapes(a: &BfpTensor, b: &BfpTensor) -> Result<()> {
     Ok(())
 }
 
-fn matmul_tile_edge(tile: TileSize, k: usize) -> usize {
-    match tile {
-        TileSize::Whole => k.max(1),
-        TileSize::Edge(t) => t,
-    }
-}
-
 /// C = A · B over BFP tensors; returns row-major f32 (the BFP→FP unit
 /// output). Requires matching tile configurations so tile boundaries
-/// align on the contraction dimension. Parallel over output row-bands
-/// with the default worker-thread budget.
+/// align on the contraction dimension. Streams B from its cached packed
+/// panels, parallel over output row-bands on the persistent pool with
+/// the default worker-thread budget.
 pub fn bfp_matmul(a: &BfpTensor, b: &BfpTensor) -> Result<Vec<f32>> {
     bfp_matmul_with_threads(a, b, worker_threads())
 }
@@ -118,6 +127,94 @@ pub fn bfp_matmul(a: &BfpTensor, b: &BfpTensor) -> Result<Vec<f32>> {
 /// [`bfp_matmul`] with an explicit thread cap. Bit-identical results for
 /// any `max_threads`.
 pub fn bfp_matmul_with_threads(
+    a: &BfpTensor,
+    b: &BfpTensor,
+    max_threads: usize,
+) -> Result<Vec<f32>> {
+    bfp_matmul_with_backend(a, b, max_threads, ParBackend::Pooled)
+}
+
+/// [`bfp_matmul`] with an explicit dispatch backend (pooled vs per-call
+/// scoped spawns) — the packed-panel kernel either way, bit-identical
+/// across backends; `Scoped` exists for the bench ladder's
+/// spawn-amortization rung.
+pub fn bfp_matmul_with_backend(
+    a: &BfpTensor,
+    b: &BfpTensor,
+    max_threads: usize,
+    backend: ParBackend,
+) -> Result<Vec<f32>> {
+    check_shapes(a, b)?;
+    let (m, k, n) = (a.rows, a.cols, b.cols);
+    let mut out = vec![0.0f32; m * n];
+    if m == 0 || k == 0 || n == 0 {
+        return Ok(out);
+    }
+    let t = matmul_tile_edge(a.tile, k);
+    let bands = m.div_ceil(t);
+    let threads = pool::par_threads(m * k * n, PAR_MIN_MACS, max_threads, bands);
+    let pp = b.packed_panels();
+    match &a.mantissas {
+        Mantissas::I8(av) => packed_dispatch_b::<i8>(av, a, b, &pp, &mut out, t, threads, backend),
+        Mantissas::I16(av) => {
+            packed_dispatch_b::<i16>(av, a, b, &pp, &mut out, t, threads, backend)
+        }
+        Mantissas::I32(av) => {
+            packed_dispatch_b::<i32>(av, a, b, &pp, &mut out, t, threads, backend)
+        }
+    }
+    Ok(out)
+}
+
+#[allow(clippy::too_many_arguments)]
+fn packed_dispatch_b<EA: MantissaElem>(
+    av: &[EA],
+    a: &BfpTensor,
+    b: &BfpTensor,
+    pp: &PackedPanels,
+    out: &mut [f32],
+    t: usize,
+    threads: usize,
+    backend: ParBackend,
+) {
+    match &pp.data {
+        Mantissas::I8(pv) => packed_bands(av, pv, a, b, pp, out, t, threads, backend),
+        Mantissas::I16(pv) => packed_bands(av, pv, a, b, pp, out, t, threads, backend),
+        Mantissas::I32(pv) => packed_bands(av, pv, a, b, pp, out, t, threads, backend),
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn packed_bands<EA: MantissaElem, EB: MantissaElem>(
+    av: &[EA],
+    pv: &[EB],
+    a: &BfpTensor,
+    b: &BfpTensor,
+    pp: &PackedPanels,
+    out: &mut [f32],
+    t: usize,
+    threads: usize,
+    backend: ParBackend,
+) {
+    let n = b.cols;
+    let jobs: Vec<(usize, &mut [f32])> = out.chunks_mut(t * n).enumerate().collect();
+    pool::run_backend(backend, jobs, threads, |band, band_out| {
+        let i0 = band * t;
+        let i1 = (i0 + t).min(a.rows);
+        let a_exp = |r: usize, c: usize| a.exponent_at(r, c);
+        band_matmul_packed(av, 0, &a_exp, a.mantissa_bits, pv, pp, b, band_out, i0, i1, t);
+    });
+}
+
+/// The pre-panel row-major B walk, kept as the packed-panel rung's bench
+/// partner and differential-test reference. Pooled dispatch, default
+/// thread budget.
+pub fn bfp_matmul_rowmajor(a: &BfpTensor, b: &BfpTensor) -> Result<Vec<f32>> {
+    bfp_matmul_rowmajor_with_threads(a, b, worker_threads())
+}
+
+/// [`bfp_matmul_rowmajor`] with an explicit thread cap.
+pub fn bfp_matmul_rowmajor_with_threads(
     a: &BfpTensor,
     b: &BfpTensor,
     max_threads: usize,
@@ -130,16 +227,16 @@ pub fn bfp_matmul_with_threads(
     }
     let t = matmul_tile_edge(a.tile, k);
     let bands = m.div_ceil(t);
-    let threads = if m * k * n < PAR_MIN_MACS { 1 } else { max_threads.min(bands).max(1) };
+    let threads = pool::par_threads(m * k * n, PAR_MIN_MACS, max_threads, bands);
     match &a.mantissas {
-        Mantissas::I8(av) => matmul_dispatch_b::<i8>(av, a, b, &mut out, t, threads),
-        Mantissas::I16(av) => matmul_dispatch_b::<i16>(av, a, b, &mut out, t, threads),
-        Mantissas::I32(av) => matmul_dispatch_b::<i32>(av, a, b, &mut out, t, threads),
+        Mantissas::I8(av) => rowmajor_dispatch_b::<i8>(av, a, b, &mut out, t, threads),
+        Mantissas::I16(av) => rowmajor_dispatch_b::<i16>(av, a, b, &mut out, t, threads),
+        Mantissas::I32(av) => rowmajor_dispatch_b::<i32>(av, a, b, &mut out, t, threads),
     }
     Ok(out)
 }
 
-fn matmul_dispatch_b<EA: MantissaElem>(
+fn rowmajor_dispatch_b<EA: MantissaElem>(
     av: &[EA],
     a: &BfpTensor,
     b: &BfpTensor,
@@ -148,13 +245,13 @@ fn matmul_dispatch_b<EA: MantissaElem>(
     threads: usize,
 ) {
     match &b.mantissas {
-        Mantissas::I8(bv) => matmul_bands(av, bv, a, b, out, t, threads),
-        Mantissas::I16(bv) => matmul_bands(av, bv, a, b, out, t, threads),
-        Mantissas::I32(bv) => matmul_bands(av, bv, a, b, out, t, threads),
+        Mantissas::I8(bv) => rowmajor_bands(av, bv, a, b, out, t, threads),
+        Mantissas::I16(bv) => rowmajor_bands(av, bv, a, b, out, t, threads),
+        Mantissas::I32(bv) => rowmajor_bands(av, bv, a, b, out, t, threads),
     }
 }
 
-fn matmul_bands<EA: MantissaElem, EB: MantissaElem>(
+fn rowmajor_bands<EA: MantissaElem, EB: MantissaElem>(
     av: &[EA],
     bv: &[EB],
     a: &BfpTensor,
@@ -165,7 +262,7 @@ fn matmul_bands<EA: MantissaElem, EB: MantissaElem>(
 ) {
     let n = b.cols;
     let jobs: Vec<(usize, &mut [f32])> = out.chunks_mut(t * n).enumerate().collect();
-    for_each_job(jobs, threads, |band, band_out| {
+    pool::dispatch_jobs(jobs, threads, |band, band_out| {
         let i0 = band * t;
         let i1 = (i0 + t).min(a.rows);
         let a_exp = |r: usize, c: usize| a.exponent_at(r, c);
@@ -307,6 +404,118 @@ fn debug_assert_tile_bound<A: Accum>(acc: &[A], tile_k: usize, ma: u32, mb: u32)
     }
 }
 
+/// Compute output rows `i0..i1` against the packed B panels. Same
+/// contract as [`band_matmul`] (same k order, same per-tile flush order,
+/// hence bit-identical results), but B streams contiguously panel by
+/// panel and each output row keeps a `[acc; PANEL_NR]` register block.
+#[allow(clippy::too_many_arguments)]
+fn band_matmul_packed<EA: MantissaElem, EB: MantissaElem, FA: Fn(usize, usize) -> i32>(
+    av: &[EA],
+    a_row0: usize,
+    a_exp: &FA,
+    ma_bits: u32,
+    pv: &[EB],
+    pp: &PackedPanels,
+    b: &BfpTensor,
+    band_out: &mut [f32],
+    i0: usize,
+    i1: usize,
+    t: usize,
+) {
+    debug_assert_eq!(pp.t, t, "panel layout built for a different tile edge");
+    debug_assert_eq!(pp.data.len(), pv.len());
+    let k = b.rows;
+    let n = b.cols;
+    let ma = ma_bits as i32;
+    let mb = b.mantissa_bits as i32;
+    let ti = i1 - i0;
+    if ti == 0 {
+        return;
+    }
+    let tile_k = t.min(k).max(1);
+    let use_i32 = acc_fits_i32(tile_k, ma_bits, b.mantissa_bits);
+    let arow0 = i0 - a_row0;
+    let panel_elems = pp.tk * PANEL_NR;
+    for jt in 0..pp.tiles_j {
+        let j0 = jt * t;
+        let j1 = (j0 + t).min(n);
+        for kt in 0..pp.tiles_k {
+            let k0 = kt * t;
+            let k1 = (k0 + t).min(k);
+            let ea = a_exp(i0, k0);
+            let eb = b.exponent_at(k0, j0);
+            let scale = exp2i(ea - (ma - 1)) * exp2i(eb - (mb - 1));
+            let tile_base = pp.tile_base(jt, kt);
+            let mut p = 0;
+            let mut c0 = j0;
+            while c0 < j1 {
+                let c1 = (c0 + PANEL_NR).min(j1);
+                let panel = &pv[tile_base + p * panel_elems..tile_base + (p + 1) * panel_elems];
+                if use_i32 {
+                    panel_mac_rows::<EA, EB, i32>(
+                        av, panel, arow0, ti, k, k0, k1, band_out, n, c0, c1, scale, tile_k,
+                        ma_bits, b.mantissa_bits,
+                    );
+                } else {
+                    panel_mac_rows::<EA, EB, i64>(
+                        av, panel, arow0, ti, k, k0, k1, band_out, n, c0, c1, scale, tile_k,
+                        ma_bits, b.mantissa_bits,
+                    );
+                }
+                c0 = c1;
+                p += 1;
+            }
+        }
+    }
+}
+
+/// Register-blocked microkernel: for each of `ti` output rows, stream one
+/// packed panel (k-major, [`PANEL_NR`] wide) through a `[acc; PANEL_NR]`
+/// block, then scale the block into the f32 band accumulator. Padding
+/// columns hold zero mantissas (every product 0), so only the `c0..c1`
+/// lanes are flushed and the integer partials equal the row-major walk's
+/// exactly.
+#[allow(clippy::too_many_arguments)]
+#[inline]
+fn panel_mac_rows<EA: MantissaElem, EB: MantissaElem, A: Accum>(
+    av: &[EA],
+    panel: &[EB],
+    arow0: usize,
+    ti: usize,
+    k: usize,
+    k0: usize,
+    k1: usize,
+    band_out: &mut [f32],
+    n: usize,
+    c0: usize,
+    c1: usize,
+    scale: f32,
+    tile_k: usize,
+    ma_bits: u32,
+    mb_bits: u32,
+) {
+    let tj = c1 - c0;
+    for li in 0..ti {
+        let ar = arow0 + li;
+        let arow = &av[ar * k + k0..ar * k + k1];
+        let mut acc = [A::default(); PANEL_NR];
+        for (dk, &qa) in arow.iter().enumerate() {
+            if qa.to_i32() == 0 {
+                continue;
+            }
+            let prow = &panel[dk * PANEL_NR..(dk + 1) * PANEL_NR];
+            for (aj, &qb) in acc.iter_mut().zip(prow) {
+                aj.mac(qa, qb);
+            }
+        }
+        debug_assert_tile_bound(&acc[..tj], tile_k, ma_bits, mb_bits);
+        let orow = &mut band_out[li * n + c0..li * n + c1];
+        for (o, aj) in orow.iter_mut().zip(&acc[..tj]) {
+            *o += aj.to_f32() * scale;
+        }
+    }
+}
+
 /// The pre-optimization j-innermost kernel, kept for the §Perf
 /// before/after bench and as a differential-testing partner (must agree
 /// with `bfp_matmul` bit-for-bit — both sum the same integer partials,
@@ -443,35 +652,39 @@ pub fn quantize_matmul_with_threads(
     }
     let (th, _) = b.tile.edge_or(m, k);
     let bands = m.div_ceil(th).max(1);
-    let threads = if m * k * n < PAR_MIN_MACS { 1 } else { max_threads.min(bands).max(1) };
+    let threads = pool::par_threads(m * k * n, PAR_MIN_MACS, max_threads, bands);
+    let pp = b.packed_panels();
     match Mantissas::for_width(a_bits, 0) {
-        Mantissas::I8(_) => fused_dispatch_b::<i8>(a, b, &mut out, m, a_bits, mode, threads),
-        Mantissas::I16(_) => fused_dispatch_b::<i16>(a, b, &mut out, m, a_bits, mode, threads),
-        Mantissas::I32(_) => fused_dispatch_b::<i32>(a, b, &mut out, m, a_bits, mode, threads),
+        Mantissas::I8(_) => fused_dispatch_b::<i8>(a, b, &pp, &mut out, m, a_bits, mode, threads),
+        Mantissas::I16(_) => fused_dispatch_b::<i16>(a, b, &pp, &mut out, m, a_bits, mode, threads),
+        Mantissas::I32(_) => fused_dispatch_b::<i32>(a, b, &pp, &mut out, m, a_bits, mode, threads),
     }
     Ok(out)
 }
 
+#[allow(clippy::too_many_arguments)]
 fn fused_dispatch_b<EA: MantissaElem>(
     a: &[f32],
     b: &BfpTensor,
+    pp: &PackedPanels,
     out: &mut [f32],
     m: usize,
     a_bits: u32,
     mode: TileRounding,
     threads: usize,
 ) {
-    match &b.mantissas {
-        Mantissas::I8(bv) => fused_bands::<EA, i8>(a, bv, b, out, m, a_bits, mode, threads),
-        Mantissas::I16(bv) => fused_bands::<EA, i16>(a, bv, b, out, m, a_bits, mode, threads),
-        Mantissas::I32(bv) => fused_bands::<EA, i32>(a, bv, b, out, m, a_bits, mode, threads),
+    match &pp.data {
+        Mantissas::I8(pv) => fused_bands::<EA, i8>(a, pv, pp, b, out, m, a_bits, mode, threads),
+        Mantissas::I16(pv) => fused_bands::<EA, i16>(a, pv, pp, b, out, m, a_bits, mode, threads),
+        Mantissas::I32(pv) => fused_bands::<EA, i32>(a, pv, pp, b, out, m, a_bits, mode, threads),
     }
 }
 
 #[allow(clippy::too_many_arguments)]
 fn fused_bands<EA: MantissaElem, EB: MantissaElem>(
     a: &[f32],
-    bv: &[EB],
+    pv: &[EB],
+    pp: &PackedPanels,
     b: &BfpTensor,
     out: &mut [f32],
     m: usize,
@@ -485,7 +698,7 @@ fn fused_bands<EA: MantissaElem, EB: MantissaElem>(
     let tiles_c = k.div_ceil(tw).max(1);
     let t_mm = matmul_tile_edge(b.tile, k);
     let jobs: Vec<(usize, &mut [f32])> = out.chunks_mut(th * n).enumerate().collect();
-    for_each_job(jobs, threads, |band, band_out| {
+    pool::dispatch_jobs(jobs, threads, |band, band_out| {
         let i0 = band * th;
         let i1 = (i0 + th).min(m);
         let band_rows = i1 - i0;
@@ -508,12 +721,13 @@ fn fused_bands<EA: MantissaElem, EB: MantissaElem>(
                 }
             }
         }
-        band_matmul(
+        band_matmul_packed(
             &scratch,
             i0,
             &|_r, c| band_exps[c / tw],
             a_bits,
-            bv,
+            pv,
+            pp,
             b,
             band_out,
             i0,

@@ -1,0 +1,240 @@
+//! Packed B-operand panels: the once-per-tensor weight relayout the MAC
+//! kernels stream.
+//!
+//! The row-major layout makes the matmul's inner loop read the B operand
+//! in `n`-strided row segments of each (t x t) tile — every k step jumps
+//! a full matrix row, and the tile walk re-derives slice bounds per
+//! access. The hardware analogue keeps weights resident next to the MAC
+//! array in exactly the order the array consumes them; this module is the
+//! software equivalent: reorder B's mantissas **once** into k-tile-major,
+//! register-block-width panels, then let every training step's GEMM
+//! stream them contiguously.
+//!
+//! Layout (matching the matmul loop order `jt` outer, `kt` inner):
+//!
+//! ```text
+//! for each j-tile jt, k-tile kt:              # one shared exponent pair
+//!   for each panel p (PANEL_NR columns wide): # one accumulator block
+//!     for dk in 0..tk:                        # contraction, contiguous
+//!       NR mantissas of row k0+dk, cols c0..c0+NR   (zero-padded)
+//! ```
+//!
+//! Tiles and panels are padded to uniform size (`tk` x `panels_per_tile *
+//! PANEL_NR`) so offsets are pure arithmetic; padding is zero mantissas,
+//! which contribute nothing to any integer partial, so the packed kernel
+//! is bit-identical to the row-major walk. The width class of the source
+//! storage (`i8`/`i16`/`i32`) is preserved — packing never widens the
+//! bytes the MAC loop streams.
+
+use super::tensor::{BfpTensor, MantissaElem, Mantissas, TileSize};
+
+/// Panel register width: columns per microkernel accumulator block. The
+/// matmul keeps one `[acc; PANEL_NR]` block in registers per output row
+/// while streaming a panel.
+pub const PANEL_NR: usize = 8;
+
+/// Tile edge the matmul's band/tile loops use when this tensor is the B
+/// operand (`TileSize::Whole` ⇒ one tile spanning the contraction dim).
+pub fn matmul_tile_edge(tile: TileSize, k: usize) -> usize {
+    match tile {
+        TileSize::Whole => k.max(1),
+        TileSize::Edge(t) => t,
+    }
+}
+
+/// B mantissas reordered into k-tile-major, `PANEL_NR`-wide panels.
+/// Built once per tensor (cached on [`BfpTensor`]) and reused by every
+/// matmul that streams the tensor as its resident operand.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PackedPanels {
+    /// Matmul tile edge the layout was built for.
+    pub t: usize,
+    /// Columns per panel (always [`PANEL_NR`]).
+    pub nr: usize,
+    /// Padded k-extent of every k-tile (`min(t, k)`).
+    pub tk: usize,
+    /// Panels per j-tile (`ceil(min(t, n) / nr)`, uniform via padding).
+    pub panels_per_tile: usize,
+    /// K-tiles (`ceil(k / t)`).
+    pub tiles_k: usize,
+    /// J-tiles (`ceil(n / t)`).
+    pub tiles_j: usize,
+    /// Source dims (B is k x n).
+    pub k: usize,
+    pub n: usize,
+    /// Reordered mantissas, same width class as the source tensor.
+    pub data: Mantissas,
+}
+
+impl PackedPanels {
+    /// Elements spanned by one (jt, kt) tile in `data`.
+    #[inline]
+    pub fn tile_stride(&self) -> usize {
+        self.tk * self.panels_per_tile * self.nr
+    }
+
+    /// Start of tile (jt, kt) in `data`.
+    #[inline]
+    pub fn tile_base(&self, jt: usize, kt: usize) -> usize {
+        (jt * self.tiles_k + kt) * self.tile_stride()
+    }
+
+    /// Actual heap bytes of the packed buffer (padding included).
+    pub fn heap_bytes(&self) -> usize {
+        self.data.heap_bytes()
+    }
+}
+
+/// Reorder `b`'s mantissas for matmul tile edge `t`. Requires a non-empty
+/// tensor (the matmuls early-return before packing empty operands).
+pub fn pack_panels(b: &BfpTensor, t: usize) -> PackedPanels {
+    let (k, n) = (b.rows, b.cols);
+    debug_assert!(k > 0 && n > 0 && t > 0, "pack_panels on degenerate operand {k}x{n} t={t}");
+    let nr = PANEL_NR;
+    let tk = t.min(k).max(1);
+    let panels_per_tile = t.min(n).max(1).div_ceil(nr);
+    let tiles_k = k.div_ceil(t).max(1);
+    let tiles_j = n.div_ceil(t).max(1);
+    let total = tiles_j * tiles_k * tk * panels_per_tile * nr;
+    let mut data = match &b.mantissas {
+        Mantissas::I8(_) => Mantissas::I8(vec![0; total]),
+        Mantissas::I16(_) => Mantissas::I16(vec![0; total]),
+        Mantissas::I32(_) => Mantissas::I32(vec![0; total]),
+    };
+    let geom = Geom { t, nr, tk, panels_per_tile, tiles_k, tiles_j, k, n };
+    match (&b.mantissas, &mut data) {
+        (Mantissas::I8(src), Mantissas::I8(dst)) => fill_panels(src, dst, &geom),
+        (Mantissas::I16(src), Mantissas::I16(dst)) => fill_panels(src, dst, &geom),
+        (Mantissas::I32(src), Mantissas::I32(dst)) => fill_panels(src, dst, &geom),
+        _ => unreachable!("packed storage class always matches the source class"),
+    }
+    PackedPanels { t, nr, tk, panels_per_tile, tiles_k, tiles_j, k, n, data }
+}
+
+struct Geom {
+    t: usize,
+    nr: usize,
+    tk: usize,
+    panels_per_tile: usize,
+    tiles_k: usize,
+    tiles_j: usize,
+    k: usize,
+    n: usize,
+}
+
+fn fill_panels<E: MantissaElem>(src: &[E], dst: &mut [E], g: &Geom) {
+    let tile_stride = g.tk * g.panels_per_tile * g.nr;
+    for jt in 0..g.tiles_j {
+        let j0 = jt * g.t;
+        let j1 = (j0 + g.t).min(g.n);
+        for kt in 0..g.tiles_k {
+            let k0 = kt * g.t;
+            let k1 = (k0 + g.t).min(g.k);
+            let tile_base = (jt * g.tiles_k + kt) * tile_stride;
+            for p in 0..g.panels_per_tile {
+                let c0 = j0 + p * g.nr;
+                if c0 >= j1 {
+                    break; // trailing padded panels of a ragged j-tile stay zero
+                }
+                let c1 = (c0 + g.nr).min(j1);
+                let panel_base = tile_base + p * g.tk * g.nr;
+                for dk in 0..k1 - k0 {
+                    let srow = &src[(k0 + dk) * g.n + c0..(k0 + dk) * g.n + c1];
+                    let drow = &mut dst[panel_base + dk * g.nr..panel_base + dk * g.nr + (c1 - c0)];
+                    drow.copy_from_slice(srow);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Tensor whose mantissa at (r, c) is `r * cols + c` (mod the 8-bit
+    /// range), so packed positions are checkable by value.
+    fn indexed_tensor(rows: usize, cols: usize, tile: TileSize) -> BfpTensor {
+        let mut m = Mantissas::for_width(8, rows * cols);
+        for i in 0..rows * cols {
+            m.set(i, (i % 127) as i32);
+        }
+        let (th, tw) = tile.edge_or(rows, cols);
+        let exps = vec![0i32; rows.div_ceil(th).max(1) * cols.div_ceil(tw).max(1)];
+        BfpTensor::from_parts(rows, cols, 8, tile, m, exps).unwrap()
+    }
+
+    #[test]
+    fn every_element_lands_at_its_panel_slot() {
+        for &(k, n, t) in &[(10usize, 13usize, 4usize), (24, 24, 8), (7, 30, 24), (16, 5, 8)] {
+            let b = indexed_tensor(k, n, TileSize::Edge(t));
+            let pp = pack_panels(&b, matmul_tile_edge(b.tile, k));
+            assert_eq!(pp.nr, PANEL_NR);
+            for kk in 0..k {
+                for j in 0..n {
+                    let jt = j / t;
+                    let kt = kk / t;
+                    let jin = j - jt * t; // column within the j-tile
+                    let p = jin / PANEL_NR;
+                    let c = jin % PANEL_NR;
+                    let dk = kk - kt * t;
+                    let idx = pp.tile_base(jt, kt) + p * pp.tk * PANEL_NR + dk * PANEL_NR + c;
+                    assert_eq!(
+                        pp.data.get(idx),
+                        b.mantissa_at(kk, j),
+                        "({kk},{j}) misplaced at k={k} n={n} t={t}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn padding_is_zero() {
+        // ragged j-tile: n=13, t=8 -> second j-tile is 5 wide, its first
+        // panel has 3 padded columns and its second panel is all padding
+        let b = indexed_tensor(8, 13, TileSize::Edge(8));
+        let pp = pack_panels(&b, 8);
+        assert_eq!(pp.panels_per_tile, 1); // min(t, n) = 8 -> 1 panel per tile
+        let b2 = indexed_tensor(8, 13, TileSize::Edge(16));
+        let pp2 = pack_panels(&b2, 16);
+        assert_eq!(pp2.panels_per_tile, 2);
+        // columns 13..16 of the single j-tile are padding
+        let base = pp2.tile_base(0, 0) + pp2.tk * PANEL_NR; // second panel (cols 8..16)
+        for dk in 0..8 {
+            for c in 5..8 {
+                assert_eq!(pp2.data.get(base + dk * PANEL_NR + c), 0, "padding at ({dk},{c})");
+            }
+        }
+    }
+
+    #[test]
+    fn width_class_preserved() {
+        for bits in [8u32, 12, 20] {
+            let data: Vec<f32> = (0..64).map(|i| (i as f32 - 31.5) / 4.0).collect();
+            let b = BfpTensor::from_f32(
+                &data,
+                8,
+                8,
+                bits,
+                TileSize::Edge(4),
+                &mut super::super::quant::Rounding::NearestEven,
+            )
+            .unwrap();
+            let pp = pack_panels(&b, 4);
+            assert_eq!(
+                pp.data.elem_bits(),
+                b.mantissas.elem_bits(),
+                "packing must not change the streamed width class (bits={bits})"
+            );
+        }
+    }
+
+    #[test]
+    fn whole_tile_single_tile_geometry() {
+        let b = indexed_tensor(6, 20, TileSize::Whole);
+        let pp = pack_panels(&b, matmul_tile_edge(b.tile, 6));
+        assert_eq!((pp.tiles_k, pp.tiles_j), (1, 4)); // t = k = 6; ceil(20/6) = 4
+        assert_eq!(pp.tk, 6);
+    }
+}

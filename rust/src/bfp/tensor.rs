@@ -10,10 +10,13 @@
 //! per-tile RNG substreams, so stochastic rounding is reproducible for any
 //! thread count.
 
+use std::sync::{Arc, Mutex};
+
 use anyhow::{anyhow, Result};
 
+use super::panels::{self, matmul_tile_edge, PackedPanels};
 use super::quant::{self, Rounding, TileRounding};
-use crate::util::{for_each_job, worker_threads};
+use crate::util::{pool, worker_threads};
 
 /// Below this many elements the quantizers stay single-threaded (thread
 /// spawn costs more than the work).
@@ -161,7 +164,7 @@ impl Mantissas {
 }
 
 /// A 2-D BFP tensor: row-major packed mantissas + per-tile exponents.
-#[derive(Debug, Clone)]
+#[derive(Debug)]
 pub struct BfpTensor {
     pub rows: usize,
     pub cols: usize,
@@ -174,6 +177,30 @@ pub struct BfpTensor {
     tiles_per_row: usize,
     tile_rows: usize,
     tile_cols: usize,
+    /// Lazily-built packed B-panel layout (see [`PackedPanels`]): packed
+    /// once on first use as a matmul B operand, then reused by every
+    /// subsequent GEMM — the resident-weight amortization. Cleared by
+    /// [`BfpTensor::clear_panel_cache`]; constructors start empty, so
+    /// derived tensors (`narrow_view`) never inherit stale panels.
+    panels: Mutex<Option<Arc<PackedPanels>>>,
+}
+
+impl Clone for BfpTensor {
+    fn clone(&self) -> BfpTensor {
+        BfpTensor {
+            rows: self.rows,
+            cols: self.cols,
+            mantissa_bits: self.mantissa_bits,
+            tile: self.tile,
+            mantissas: self.mantissas.clone(),
+            exponents: self.exponents.clone(),
+            tiles_per_row: self.tiles_per_row,
+            tile_rows: self.tile_rows,
+            tile_cols: self.tile_cols,
+            // panels describe the same mantissas, so the clone may share them
+            panels: Mutex::new(self.panels.lock().unwrap().clone()),
+        }
+    }
 }
 
 /// Validated tile geometry shared by the constructors.
@@ -243,8 +270,7 @@ impl BfpTensor {
         let mut exponents = vec![quant::E_MIN; g.tiles_r * g.tiles_c];
         if rows * cols > 0 {
             let mode = TileRounding::capture(rounding);
-            let threads =
-                if rows * cols >= PAR_MIN_ELEMS { max_threads.min(g.tiles_r) } else { 1 };
+            let threads = pool::par_threads(rows * cols, PAR_MIN_ELEMS, max_threads, g.tiles_r);
             match &mut mantissas {
                 Mantissas::I8(v) => {
                     quantize_bands::<i8>(data, v, &mut exponents, &g, mantissa_bits, mode, threads)
@@ -267,6 +293,7 @@ impl BfpTensor {
             tiles_per_row: g.tiles_c,
             tile_rows: g.th,
             tile_cols: g.tw,
+            panels: Mutex::new(None),
         })
     }
 
@@ -318,7 +345,39 @@ impl BfpTensor {
             tiles_per_row: g.tiles_c,
             tile_rows: g.th,
             tile_cols: g.tw,
+            panels: Mutex::new(None),
         })
+    }
+
+    /// Packed B-panel layout for this tensor as a matmul B operand
+    /// (see [`PackedPanels`]): built on first call, cached, and shared
+    /// by every subsequent GEMM — the software analogue of weights held
+    /// resident next to the MAC array. Callers that mutate `mantissas`
+    /// or `exponents` through the public fields must call
+    /// [`BfpTensor::clear_panel_cache`] afterwards.
+    pub fn packed_panels(&self) -> Arc<PackedPanels> {
+        let t = matmul_tile_edge(self.tile, self.rows);
+        let mut guard = self.panels.lock().unwrap();
+        if let Some(p) = guard.as_ref() {
+            if p.t == t {
+                return Arc::clone(p);
+            }
+        }
+        let p = Arc::new(panels::pack_panels(self, t));
+        *guard = Some(Arc::clone(&p));
+        p
+    }
+
+    /// Drop the cached panel layout (next matmul repacks). Needed only
+    /// after in-place mantissa/exponent mutation, and by the cold-pack
+    /// bench rung.
+    pub fn clear_panel_cache(&self) {
+        *self.panels.lock().unwrap() = None;
+    }
+
+    /// Whether a packed panel layout is currently cached (test hook).
+    pub fn has_packed_panels(&self) -> bool {
+        self.panels.lock().unwrap().is_some()
     }
 
     /// Exponent of the tile containing element (r, c).
@@ -399,6 +458,9 @@ impl BfpTensor {
             tiles_per_row: self.tiles_per_row,
             tile_rows: self.tile_rows,
             tile_cols: self.tile_cols,
+            // fresh cache: the narrow repack must never reuse the wide
+            // tensor's panels (different values and width class)
+            panels: Mutex::new(None),
         })
     }
 
@@ -435,7 +497,7 @@ fn quantize_bands<E: MantissaElem>(
         .zip(exponents.chunks_mut(g.tiles_c))
         .enumerate()
         .collect();
-    for_each_job(jobs, threads, |band, (band_out, band_exp)| {
+    pool::dispatch_jobs(jobs, threads, |band, (band_out, band_exp)| {
         let r0 = band * g.th;
         let r1 = (r0 + g.th).min(g.rows);
         for tc in 0..g.tiles_c {
@@ -477,10 +539,9 @@ pub fn quantize_inplace_2d(
         return Ok(());
     }
     let mode = TileRounding::capture(rounding);
-    let threads =
-        if rows * cols >= PAR_MIN_ELEMS { worker_threads().min(g.tiles_r) } else { 1 };
+    let threads = pool::par_threads(rows * cols, PAR_MIN_ELEMS, worker_threads(), g.tiles_r);
     let jobs: Vec<(usize, &mut [f32])> = data.chunks_mut(g.th * g.cols).enumerate().collect();
-    for_each_job(jobs, threads, |band, chunk| {
+    pool::dispatch_jobs(jobs, threads, |band, chunk| {
         let r0 = band * g.th;
         let r1 = (r0 + g.th).min(g.rows);
         for tc in 0..g.tiles_c {

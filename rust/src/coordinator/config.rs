@@ -82,7 +82,14 @@ pub struct RunConfig {
     /// accelerator boundary, modeled on the host with the parallel
     /// quantizer. `(mantissa_bits, tile_edge)`; `None` = fp32 inputs.
     pub input_bfp: Option<(u32, usize)>,
+    /// Batches the prefetcher keeps in flight ahead of the trainer
+    /// (`--prefetch-depth`; bounded-channel backpressure). Clamped to at
+    /// least 1.
+    pub prefetch_depth: usize,
 }
+
+/// Default prefetch depth: one batch being assembled + one ready.
+pub const DEFAULT_PREFETCH_DEPTH: usize = 2;
 
 impl RunConfig {
     pub fn new(combo: &str, steps: usize) -> RunConfig {
@@ -95,6 +102,7 @@ impl RunConfig {
             log_every: 10,
             checkpoint_dir: None,
             input_bfp: None,
+            prefetch_depth: DEFAULT_PREFETCH_DEPTH,
         }
     }
 
@@ -118,6 +126,11 @@ impl RunConfig {
         self
     }
 
+    pub fn with_prefetch_depth(mut self, depth: usize) -> Self {
+        self.prefetch_depth = depth.max(1);
+        self
+    }
+
     /// Parse the model name back out of the combo.
     pub fn model(&self) -> &str {
         self.combo.split('-').next().unwrap_or("")
@@ -137,6 +150,7 @@ impl RunConfig {
                     None => Json::Null,
                 },
             ),
+            ("prefetch_depth", Json::num(self.prefetch_depth as f64)),
         ])
     }
 }
@@ -213,5 +227,17 @@ mod tests {
         assert_eq!(c.input_bfp, Some((8, 24)));
         let parsed = Json::parse(&c.to_json().to_string()).unwrap();
         assert_eq!(parsed.get("input_bfp").unwrap().as_str(), Some("m8_t24"));
+    }
+
+    #[test]
+    fn prefetch_depth_default_builder_and_clamp() {
+        let c = RunConfig::new("m-d-fp32", 10);
+        assert_eq!(c.prefetch_depth, DEFAULT_PREFETCH_DEPTH);
+        assert_eq!(c.with_prefetch_depth(5).prefetch_depth, 5);
+        let clamped = RunConfig::new("m-d-fp32", 10).with_prefetch_depth(0);
+        assert_eq!(clamped.prefetch_depth, 1, "depth 0 (rendezvous) would defeat prefetching");
+        let parsed =
+            Json::parse(&RunConfig::new("m-d-fp32", 10).to_json().to_string()).unwrap();
+        assert_eq!(parsed.get("prefetch_depth").unwrap().as_usize(), Some(2));
     }
 }

@@ -11,7 +11,7 @@ pub mod sweep;
 pub mod trainer;
 
 pub use checkpoint::Checkpoint;
-pub use config::{default_base_lr, parse_schedule, LrSchedule, RunConfig};
+pub use config::{default_base_lr, parse_schedule, LrSchedule, RunConfig, DEFAULT_PREFETCH_DEPTH};
 pub use metrics::{EvalRecord, History, StepRecord};
 pub use sweep::{Sweep, SweepRow};
 pub use trainer::{RunResult, Trainer};

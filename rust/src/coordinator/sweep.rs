@@ -50,7 +50,10 @@ impl Sweep {
 
     /// Run every config sequentially (XLA's CPU backend already uses all
     /// cores intra-op; running combos in parallel would just contend),
-    /// persisting as we go so partial sweeps are usable.
+    /// persisting as we go so partial sweeps are usable. Datasets are
+    /// generated once per (spec, seed) and reused across combos via the
+    /// trainer's [`crate::data::DatasetCache`] — a mantissa/tile sweep
+    /// over one dataset no longer regenerates it per numeric config.
     pub fn run_all(&self, configs: &[RunConfig]) -> Result<Vec<SweepRow>> {
         let mut rows = Vec::with_capacity(configs.len());
         for (i, cfg) in configs.iter().enumerate() {
@@ -76,6 +79,11 @@ impl Sweep {
                 .with_context(|| format!("writing {json_path:?}"))?;
             rows.push(SweepRow::from(&result));
         }
+        log::debug!(
+            "sweep: {} runs shared {} generated dataset(s)",
+            configs.len(),
+            self.trainer.datasets.len()
+        );
         Ok(rows)
     }
 }

@@ -16,7 +16,7 @@ use super::checkpoint::Checkpoint;
 use super::config::RunConfig;
 use super::metrics::{EvalRecord, History, StepRecord};
 use crate::bfp::{quantize_inplace_2d, Rounding, TileSize};
-use crate::data::{prefetch::Prefetcher, Dataset};
+use crate::data::{prefetch::Prefetcher, DatasetCache};
 use crate::runtime::{fetch_f32, fetch_scalar_f32, Engine, HostTensor, Manifest, Role};
 use crate::util::rng::{SplitMix64, Xorshift32};
 
@@ -49,11 +49,15 @@ impl RunResult {
 pub struct Trainer {
     pub engine: Engine,
     pub manifest: Arc<Manifest>,
+    /// Generated datasets shared across runs: a sweep training many
+    /// numeric configs of the same combo reuses one dataset instead of
+    /// regenerating it per run.
+    pub datasets: DatasetCache,
 }
 
 impl Trainer {
     pub fn new(manifest: Arc<Manifest>) -> Result<Trainer> {
-        Ok(Trainer { engine: Engine::new()?, manifest })
+        Ok(Trainer { engine: Engine::new()?, manifest, datasets: DatasetCache::default() })
     }
 
     /// Train one combo per the run config. Evaluation runs on the same
@@ -80,22 +84,26 @@ impl Trainer {
             .context("running init")?;
         debug_assert_eq!(state.len(), state_len);
 
-        // Dataset + prefetching batch producer.
-        let dataset = Arc::new(Dataset::from_spec(dataset_spec, cfg.seed ^ 0xda7a)?);
+        // Dataset (cached across runs — sweeps reuse one generated copy
+        // per (spec, seed)) + prefetching batch producer at the
+        // configured depth.
+        let dataset = self.datasets.get_or_generate(dataset_spec, cfg.seed ^ 0xda7a)?;
         let prefetch = {
             let ds = dataset.clone();
             let mut rng = SplitMix64::new(cfg.seed.wrapping_mul(0x9e37).wrapping_add(1));
-            Prefetcher::spawn(2, move || ds.train_batch(batch, &mut rng))
+            Prefetcher::spawn(cfg.prefetch_depth.max(1), move || ds.train_batch(batch, &mut rng))
         };
         let val_batches: Vec<(HostTensor, HostTensor)> = dataset.val_batches(batch);
 
-        // Host-side FP→BFP input converter (deterministic per seed): the
-        // hardware quantizes activations at the array boundary; with
-        // `input_bfp` set we model that on the batch before upload, using
-        // the band-parallel in-place round-trip (no mantissa tensor is
-        // materialized).
-        let mut input_rng =
-            Xorshift32::new(SplitMix64::new(cfg.seed ^ 0xB0F0_C04E_7E27_ED01).next_u32());
+        // Host-side FP→BFP input converter (deterministic per seed),
+        // configured once for the whole run: the hardware quantizes
+        // activations at the array boundary; with `input_bfp` set we
+        // model that on the batch before upload, using the band-parallel
+        // in-place round-trip (no mantissa tensor is materialized).
+        let mut input_conv = cfg.input_bfp.map(|(bits, tile_edge)| {
+            let seed = SplitMix64::new(cfg.seed ^ 0xB0F0_C04E_7E27_ED01).next_u32();
+            (bits, tile_edge, Xorshift32::new(seed))
+        });
 
         let mut history = History::default();
         let t_train = Instant::now();
@@ -103,8 +111,8 @@ impl Trainer {
             let lr = cfg.lr.at(step);
             let t0 = Instant::now();
             let (mut x, y) = prefetch.next();
-            if let Some((bits, tile_edge)) = cfg.input_bfp {
-                quantize_input(&mut x, bits, tile_edge, &mut input_rng)?;
+            if let Some((bits, tile_edge, rng)) = &mut input_conv {
+                quantize_input(&mut x, *bits, *tile_edge, rng)?;
             }
             let xb = x.to_literal()?;
             let yb = y.to_literal()?;

@@ -10,6 +10,8 @@ pub mod images;
 pub mod prefetch;
 pub mod text;
 
+use std::sync::{Arc, Mutex};
+
 use anyhow::Result;
 
 use crate::runtime::{DatasetSpec, HostTensor};
@@ -62,6 +64,48 @@ impl Dataset {
     }
 }
 
+/// Generated datasets a cache holds at most: sweeps touch one or two
+/// (spec, seed) pairs at a time, and evicting the oldest bounds a
+/// long-lived trainer's memory at a handful of synthetic datasets.
+const DATASET_CACHE_CAP: usize = 4;
+
+/// Cache of generated datasets keyed by (spec, seed). Generation is
+/// deterministic in both, so a sweep running many numeric configs over
+/// the same dataset reuses one generated copy instead of regenerating
+/// (and re-allocating) it per combo. Insertion-order eviction above
+/// [`DATASET_CACHE_CAP`] keeps many-seed sweeps from accumulating every
+/// dataset they ever generated.
+#[derive(Default)]
+pub struct DatasetCache {
+    entries: Mutex<Vec<(String, Arc<Dataset>)>>,
+}
+
+impl DatasetCache {
+    /// Fetch the dataset for `(spec, seed)`, generating it on first use.
+    pub fn get_or_generate(&self, spec: &DatasetSpec, seed: u64) -> Result<Arc<Dataset>> {
+        let key = format!("{spec:?}#{seed}");
+        let mut entries = self.entries.lock().unwrap();
+        if let Some((_, d)) = entries.iter().find(|(k, _)| *k == key) {
+            return Ok(Arc::clone(d));
+        }
+        let d = Arc::new(Dataset::from_spec(spec, seed)?);
+        entries.push((key, Arc::clone(&d)));
+        if entries.len() > DATASET_CACHE_CAP {
+            entries.remove(0); // oldest first; live Arcs keep their data alive
+        }
+        Ok(d)
+    }
+
+    /// Distinct datasets currently cached.
+    pub fn len(&self) -> usize {
+        self.entries.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -76,5 +120,40 @@ mod tests {
         assert!(matches!(d, Dataset::Image(_)));
         let (x, _) = d.train_batch(4, &mut SplitMix64::new(0));
         assert_eq!(x.shape(), &[4, 8, 8, 3]);
+    }
+
+    #[test]
+    fn dataset_cache_reuses_by_spec_and_seed() {
+        let cache = DatasetCache::default();
+        let spec = DatasetSpec::Image { hw: 8, channels: 1, classes: 2 };
+        let a = cache.get_or_generate(&spec, 7).unwrap();
+        let b = cache.get_or_generate(&spec, 7).unwrap();
+        assert!(Arc::ptr_eq(&a, &b), "same (spec, seed) must share one dataset");
+        assert_eq!(cache.len(), 1);
+        // different seed or spec generates a distinct entry
+        let c = cache.get_or_generate(&spec, 8).unwrap();
+        assert!(!Arc::ptr_eq(&a, &c));
+        cache
+            .get_or_generate(&DatasetSpec::Image { hw: 8, channels: 3, classes: 2 }, 7)
+            .unwrap();
+        assert_eq!(cache.len(), 3);
+    }
+
+    #[test]
+    fn dataset_cache_evicts_oldest_beyond_cap() {
+        let cache = DatasetCache::default();
+        let spec = DatasetSpec::Image { hw: 8, channels: 1, classes: 2 };
+        let first = cache.get_or_generate(&spec, 0).unwrap();
+        for seed in 1..=DATASET_CACHE_CAP as u64 {
+            cache.get_or_generate(&spec, seed).unwrap();
+        }
+        assert_eq!(cache.len(), DATASET_CACHE_CAP, "cache must stay bounded");
+        // seed 0 was evicted: fetching it again generates a fresh Arc
+        let again = cache.get_or_generate(&spec, 0).unwrap();
+        assert!(!Arc::ptr_eq(&first, &again), "oldest entry should have been evicted");
+        // the most recent seed is still cached
+        let last = cache.get_or_generate(&spec, DATASET_CACHE_CAP as u64).unwrap();
+        let last2 = cache.get_or_generate(&spec, DATASET_CACHE_CAP as u64).unwrap();
+        assert!(Arc::ptr_eq(&last, &last2));
     }
 }

@@ -4,6 +4,7 @@
 //! hbfp list                               # combos available in artifacts/
 //! hbfp train <combo> [--steps N] [--lr S] [--seed K] [--eval-every N]
 //!            [--input-bfp MxT]   # host-side BFP input converter, e.g. 8x24
+//!            [--prefetch-depth N] # batches kept in flight (default 2)
 //! hbfp repro <table1|table2|table3|fig3|mantissa|tiles|attention|throughput|all>
 //!            [--steps N] [--seed K]
 //! hbfp accel-report                       # area/throughput model table
@@ -67,12 +68,21 @@ fn main() -> Result<()> {
             let combo = args
                 .positional
                 .first()
-                .ok_or_else(|| anyhow!("usage: hbfp train <combo> [--steps N] [--input-bfp MxT]"))?;
+                .ok_or_else(|| {
+                    anyhow!(
+                        "usage: hbfp train <combo> [--steps N] [--input-bfp MxT] \
+                         [--prefetch-depth N]"
+                    )
+                })?;
             let steps = args.opt_usize("steps", 200)?;
             let manifest = Arc::new(Manifest::load(&artifacts)?);
             let mut cfg = RunConfig::new(combo, steps)
                 .with_seed(args.opt_u64("seed", 0)?)
-                .with_eval_every(args.opt_usize("eval-every", 0)?);
+                .with_eval_every(args.opt_usize("eval-every", 0)?)
+                .with_prefetch_depth(args.opt_usize(
+                    "prefetch-depth",
+                    hbfp::coordinator::DEFAULT_PREFETCH_DEPTH,
+                )?);
             if let Some(spec) = args.opt("input-bfp") {
                 let (m, t) = parse_input_bfp(spec)?;
                 cfg = cfg.with_input_bfp(m, t);

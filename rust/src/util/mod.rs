@@ -4,6 +4,7 @@
 
 pub mod cli;
 pub mod json;
+pub mod pool;
 pub mod prop;
 pub mod rng;
 
@@ -28,6 +29,12 @@ pub fn worker_threads() -> usize {
 /// runs inline on the caller's thread — the work function must therefore
 /// not depend on which thread it runs on (the BFP kernels guarantee this:
 /// results are bit-identical for any thread count).
+///
+/// This is the per-call scoped-spawn baseline: it pays a thread spawn +
+/// join on every invocation. The hot kernels now dispatch through the
+/// persistent [`pool`] instead ([`pool::dispatch_jobs`]); this function
+/// is kept as the `ParBackend::Scoped` reference for the bench ladder
+/// and the pooled-vs-scoped differential tests.
 pub fn for_each_job<T, F>(mut jobs: Vec<(usize, T)>, max_threads: usize, f: F)
 where
     T: Send,

@@ -1,0 +1,457 @@
+//! Persistent worker pool: the spawn-amortized backend for the band-
+//! parallel BFP kernels.
+//!
+//! The seed backend (`super::for_each_job`) pays a `std::thread::scope`
+//! spawn + join for every quantize/matmul call — fine for one-shot
+//! kernels, but a training run issues thousands of matmuls per second and
+//! the OS-thread churn becomes a fixed tax on every small/medium GEMM.
+//! This module keeps one process-wide set of workers alive (lazily
+//! spawned on first dispatch, sized by `HBFP_THREADS` via
+//! [`crate::util::worker_threads`]) and hands them contiguous job chunks
+//! through a shared band queue.
+//!
+//! Design points:
+//!
+//! - **Scoped, borrow-safe API**: [`Pool::run`] blocks until every chunk
+//!   has executed, so jobs may borrow caller data (`&mut` row bands of an
+//!   output matrix) exactly like `for_each_job`. Internally the chunk
+//!   closures are lifetime-erased before entering the queue; the
+//!   completion latch restores soundness by never returning while a
+//!   borrow is still live on a worker.
+//! - **Work-stealing-lite**: one shared FIFO of chunk tasks. The caller
+//!   enqueues, then help-drains the queue itself before waiting, so a
+//!   dispatch never idles the submitting thread and concurrent callers
+//!   (two trainer threads issuing matmuls) interleave without extra
+//!   machinery.
+//! - **Determinism**: chunking is by job order only — which worker runs a
+//!   chunk never changes which jobs it contains or the per-job index the
+//!   work function sees, so kernels that are bit-identical under
+//!   `for_each_job` stay bit-identical under the pool, for any worker
+//!   count and any interleaving.
+//! - **Inline fast path**: `threads <= 1` (below the parallel floor, a
+//!   1-core budget, or a single job) runs the same loop on the caller
+//!   with zero queue traffic — callers route small problems through this
+//!   path instead of keeping a duplicate scalar kernel body.
+//!
+//! Worker panics are caught, flagged on the dispatch latch, and re-raised
+//! on the caller (a worker never dies; the pool stays usable).
+
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::thread::JoinHandle;
+
+/// A lifetime-erased chunk of submitted work.
+type Task = Box<dyn FnOnce() + Send + 'static>;
+
+struct Shared {
+    queue: Mutex<VecDeque<Task>>,
+    work_ready: Condvar,
+    /// Set by `Pool::drop`: workers finish the queue, then exit (the
+    /// global pool lives for the process and never sets it).
+    shutdown: AtomicBool,
+}
+
+/// Completion latch for one dispatch: counts outstanding chunks and
+/// remembers whether any of them panicked.
+struct Latch {
+    state: Mutex<(usize, bool)>,
+    done: Condvar,
+}
+
+impl Latch {
+    fn new(chunks: usize) -> Latch {
+        Latch { state: Mutex::new((chunks, false)), done: Condvar::new() }
+    }
+
+    fn complete_one(&self, panicked: bool) {
+        let mut st = self.state.lock().unwrap();
+        st.0 -= 1;
+        st.1 |= panicked;
+        if st.0 == 0 {
+            self.done.notify_all();
+        }
+    }
+
+    /// Non-blocking: have all chunks completed?
+    fn is_done(&self) -> bool {
+        self.state.lock().unwrap().0 == 0
+    }
+
+    /// Block until every chunk completed; returns true if any panicked.
+    fn wait(&self) -> bool {
+        let mut st = self.state.lock().unwrap();
+        while st.0 > 0 {
+            st = self.done.wait(st).unwrap();
+        }
+        st.1
+    }
+}
+
+/// A persistent pool of `workers` threads plus the calling thread.
+/// Dropping a pool signals its workers to finish the queue and exit,
+/// then joins them (the lazily-built [`global`] pool is never dropped).
+pub struct Pool {
+    shared: Arc<Shared>,
+    workers: usize,
+    handles: Vec<JoinHandle<()>>,
+}
+
+fn worker_loop(shared: Arc<Shared>) {
+    loop {
+        let task = {
+            let mut q = shared.queue.lock().unwrap();
+            loop {
+                if let Some(t) = q.pop_front() {
+                    break Some(t);
+                }
+                if shared.shutdown.load(Ordering::Acquire) {
+                    break None;
+                }
+                q = shared.work_ready.wait(q).unwrap();
+            }
+        };
+        match task {
+            Some(t) => t(),
+            None => return,
+        }
+    }
+}
+
+impl Drop for Pool {
+    fn drop(&mut self) {
+        {
+            // store under the queue lock: a worker is either inside its
+            // locked check (will see the flag or the notification) or
+            // already waiting — never between the two.
+            let _q = self.shared.queue.lock().unwrap();
+            self.shared.shutdown.store(true, Ordering::Release);
+        }
+        self.shared.work_ready.notify_all();
+        // No dispatch can be in flight (`run` borrows &self and blocks
+        // until its chunks finish), so the queue is empty: workers wake,
+        // observe shutdown, and exit promptly.
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Pool {
+    /// Spawn `workers` persistent threads (0 is valid: every dispatch then
+    /// runs inline on the caller).
+    pub fn new(workers: usize) -> Pool {
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(VecDeque::new()),
+            work_ready: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+        });
+        let handles = (0..workers)
+            .map(|i| {
+                let s = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("hbfp-pool-{i}"))
+                    .spawn(move || worker_loop(s))
+                    .expect("spawning pool worker")
+            })
+            .collect();
+        Pool { shared, workers, handles }
+    }
+
+    /// Worker threads owned by the pool (the caller adds one more lane).
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Run `(index, payload)` jobs across up to `max_threads` lanes
+    /// (pool workers + the calling thread). Chunks are contiguous job
+    /// runs, so callers handing out disjoint `&mut` slices parallelize
+    /// without locking; results must not depend on which lane executes a
+    /// chunk (the BFP kernels guarantee this). Blocks until every job has
+    /// run; re-raises any worker panic on the caller.
+    pub fn run<T, F>(&self, jobs: Vec<(usize, T)>, max_threads: usize, f: F)
+    where
+        T: Send,
+        F: Fn(usize, T) + Sync,
+    {
+        let n_jobs = jobs.len();
+        if n_jobs == 0 {
+            return;
+        }
+        let threads = max_threads.max(1).min(n_jobs).min(self.workers + 1);
+        if threads == 1 {
+            // Inline fast path: the one kernel body, no queue traffic.
+            for (i, job) in jobs {
+                f(i, job);
+            }
+            return;
+        }
+
+        // One chunk per lane (same contiguous split as `for_each_job`):
+        // at most `threads` lanes ever hold this dispatch's work, so the
+        // cap bounds actual concurrency, not just the chunk count.
+        let per = n_jobs.div_ceil(threads);
+        let mut jobs = jobs;
+        let mut chunks: Vec<Vec<(usize, T)>> = Vec::with_capacity(threads);
+        while !jobs.is_empty() {
+            let take = per.min(jobs.len());
+            chunks.push(jobs.drain(..take).collect());
+        }
+
+        let latch = Arc::new(Latch::new(chunks.len()));
+        let f_ref: &(dyn Fn(usize, T) + Sync) = &f;
+        {
+            let mut q = self.shared.queue.lock().unwrap();
+            for chunk in chunks {
+                let latch = Arc::clone(&latch);
+                let task: Box<dyn FnOnce() + Send + '_> = Box::new(move || {
+                    let result = catch_unwind(AssertUnwindSafe(|| {
+                        for (i, job) in chunk {
+                            f_ref(i, job);
+                        }
+                    }));
+                    latch.complete_one(result.is_err());
+                });
+                // SAFETY: the erased closure borrows `f` and the job
+                // payloads, which outlive this call: `run` does not
+                // return until `latch.wait()` has observed every chunk
+                // complete, and a chunk only completes after its closure
+                // (and all its borrows) are finished. The transmute only
+                // erases the lifetime bound; both types are boxed fat
+                // pointers with identical layout.
+                let task: Task = unsafe { std::mem::transmute(task) };
+                q.push_back(task);
+            }
+        }
+        self.shared.work_ready.notify_all();
+
+        // Help-drain: the caller is a full lane, and may also pick up
+        // chunks of concurrent dispatches while its own are in flight
+        // (harmless: every chunk carries its own latch). Stop as soon as
+        // this dispatch completes so a small call never burns its return
+        // latency on another caller's backlog.
+        while !latch.is_done() {
+            let task = self.shared.queue.lock().unwrap().pop_front();
+            match task {
+                Some(t) => t(),
+                None => break,
+            }
+        }
+        if latch.wait() {
+            panic!("worker task panicked during pool dispatch");
+        }
+    }
+}
+
+static GLOBAL: OnceLock<Pool> = OnceLock::new();
+
+/// The process-wide pool, lazily spawned with `worker_threads() - 1`
+/// workers (the dispatching thread is the final lane). `HBFP_THREADS` is
+/// read once, at first use.
+pub fn global() -> &'static Pool {
+    GLOBAL.get_or_init(|| Pool::new(crate::util::worker_threads().saturating_sub(1)))
+}
+
+/// Dispatch jobs on the global pool — the drop-in replacement for
+/// [`crate::util::for_each_job`] on hot paths. Single-lane dispatches
+/// run inline without ever spawning the pool, so `HBFP_THREADS=1`
+/// processes stay genuinely single-threaded.
+pub fn dispatch_jobs<T, F>(jobs: Vec<(usize, T)>, max_threads: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, T) + Sync,
+{
+    if max_threads <= 1 || jobs.len() <= 1 {
+        for (i, job) in jobs {
+            f(i, job);
+        }
+        return;
+    }
+    global().run(jobs, max_threads, f)
+}
+
+/// Lane count for a parallel section: 1 (the pool's inline path) below
+/// the work floor, otherwise `max_threads` capped by the band count.
+/// Centralizes the small-problem thresholds so every kernel routes
+/// through the same inline/dispatch decision instead of keeping a
+/// bypassing scalar copy.
+pub fn par_threads(work: usize, par_floor: usize, max_threads: usize, bands: usize) -> usize {
+    if work < par_floor {
+        1
+    } else {
+        max_threads.min(bands).max(1)
+    }
+}
+
+/// Which dispatch backend a kernel should use. The default everywhere is
+/// [`ParBackend::Pooled`]; [`ParBackend::Scoped`] keeps the per-call
+/// `std::thread::scope` baseline reachable for the bench ladder and the
+/// pooled-vs-scoped differential tests.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ParBackend {
+    /// Per-call scoped spawn + join (the pre-pool seed backend).
+    Scoped,
+    /// Persistent global worker pool.
+    Pooled,
+}
+
+/// Run jobs under the chosen backend. Both backends receive identical
+/// `(index, payload)` chunks, so results are bit-identical across
+/// backends for the kernels in this crate.
+pub fn run_backend<T, F>(backend: ParBackend, jobs: Vec<(usize, T)>, max_threads: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, T) + Sync,
+{
+    match backend {
+        ParBackend::Scoped => crate::util::for_each_job(jobs, max_threads, f),
+        ParBackend::Pooled => dispatch_jobs(jobs, max_threads, f),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn run_covers_all_disjoint_slices() {
+        let pool = Pool::new(3);
+        let mut data = vec![0u32; 103];
+        for threads in [1, 2, 7] {
+            data.fill(0);
+            let jobs: Vec<(usize, &mut [u32])> = data.chunks_mut(10).enumerate().collect();
+            pool.run(jobs, threads, |i, chunk| {
+                for (j, x) in chunk.iter_mut().enumerate() {
+                    *x = (i * 10 + j) as u32;
+                }
+            });
+            for (i, &x) in data.iter().enumerate() {
+                assert_eq!(x, i as u32, "threads={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn empty_dispatch_is_noop() {
+        let pool = Pool::new(2);
+        pool.run(Vec::<(usize, ())>::new(), 4, |_, _| panic!("no jobs"));
+    }
+
+    #[test]
+    fn zero_worker_pool_runs_inline() {
+        let pool = Pool::new(0);
+        let hits = AtomicUsize::new(0);
+        let jobs: Vec<(usize, usize)> = (0..5).map(|i| (i, i * 2)).collect();
+        pool.run(jobs, 8, |i, v| {
+            assert_eq!(v, i * 2);
+            hits.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(hits.load(Ordering::SeqCst), 5);
+    }
+
+    #[test]
+    fn pool_is_reusable_across_dispatches() {
+        let pool = Pool::new(2);
+        for round in 0..20 {
+            let mut out = vec![0usize; 37];
+            let jobs: Vec<(usize, &mut usize)> = out.iter_mut().enumerate().collect();
+            pool.run(jobs, 3, |i, slot| *slot = i + round);
+            for (i, &v) in out.iter().enumerate() {
+                assert_eq!(v, i + round);
+            }
+        }
+    }
+
+    #[test]
+    fn concurrent_callers_share_the_pool() {
+        let pool = Pool::new(2);
+        std::thread::scope(|scope| {
+            for caller in 0..3 {
+                let pool = &pool;
+                scope.spawn(move || {
+                    for _ in 0..10 {
+                        let mut out = vec![0usize; 24];
+                        let jobs: Vec<(usize, &mut usize)> =
+                            out.iter_mut().enumerate().collect();
+                        pool.run(jobs, 3, |i, slot| *slot = i * 3 + caller);
+                        for (i, &v) in out.iter().enumerate() {
+                            assert_eq!(v, i * 3 + caller);
+                        }
+                    }
+                });
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "worker task panicked")]
+    fn worker_panic_propagates_to_caller() {
+        let pool = Pool::new(2);
+        let jobs: Vec<(usize, ())> = (0..8).map(|i| (i, ())).collect();
+        pool.run(jobs, 4, |i, _| {
+            if i == 3 {
+                panic!("boom");
+            }
+        });
+    }
+
+    #[test]
+    fn pool_survives_a_panicked_dispatch() {
+        let pool = Pool::new(2);
+        let jobs: Vec<(usize, ())> = (0..8).map(|i| (i, ())).collect();
+        let r = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            pool.run(jobs, 4, |i, _| {
+                if i == 0 {
+                    panic!("boom");
+                }
+            });
+        }));
+        assert!(r.is_err());
+        // the pool must still work after a task panicked
+        let mut out = vec![0usize; 16];
+        let jobs: Vec<(usize, &mut usize)> = out.iter_mut().enumerate().collect();
+        pool.run(jobs, 4, |i, slot| *slot = i);
+        for (i, &v) in out.iter().enumerate() {
+            assert_eq!(v, i);
+        }
+    }
+
+    #[test]
+    fn drop_joins_workers_cleanly() {
+        let pool = Pool::new(2);
+        let mut out = vec![0usize; 8];
+        let jobs: Vec<(usize, &mut usize)> = out.iter_mut().enumerate().collect();
+        pool.run(jobs, 3, |i, slot| *slot = i);
+        drop(pool); // must not hang: workers observe shutdown and exit
+        for (i, &v) in out.iter().enumerate() {
+            assert_eq!(v, i);
+        }
+    }
+
+    #[test]
+    fn par_threads_threshold() {
+        assert_eq!(par_threads(100, 1000, 8, 16), 1, "below floor -> inline");
+        assert_eq!(par_threads(1000, 1000, 8, 16), 8, "at floor -> parallel");
+        assert_eq!(par_threads(5000, 1000, 8, 3), 3, "capped by bands");
+        assert_eq!(par_threads(5000, 1000, 0, 0), 1, "degenerate caps clamp to 1");
+    }
+
+    #[test]
+    fn backends_produce_identical_coverage() {
+        let mut scoped = vec![0u32; 64];
+        let mut pooled = vec![0u32; 64];
+        for (backend, data) in
+            [(ParBackend::Scoped, &mut scoped), (ParBackend::Pooled, &mut pooled)]
+        {
+            let jobs: Vec<(usize, &mut [u32])> = data.chunks_mut(7).enumerate().collect();
+            run_backend(backend, jobs, 4, |i, chunk| {
+                for (j, x) in chunk.iter_mut().enumerate() {
+                    *x = (i * 100 + j) as u32;
+                }
+            });
+        }
+        assert_eq!(scoped, pooled);
+    }
+}

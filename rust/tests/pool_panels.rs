@@ -1,0 +1,186 @@
+//! Contract tests for the persistent worker pool and the packed-panel
+//! GEMM path: pooled dispatch must be bit-identical to per-call scoped
+//! spawns, the panel microkernel must be bit-identical to the row-major
+//! walk (and the naive reference) across all three storage classes,
+//! panel caches must never leak across a `narrow_view` repack, and
+//! concurrent matmuls from multiple caller threads must stay
+//! deterministic.
+
+use std::sync::Arc;
+
+use hbfp::bfp::{
+    bfp_matmul, bfp_matmul_naive, bfp_matmul_rowmajor_with_threads, bfp_matmul_with_backend,
+    bfp_matmul_with_threads, quantize_matmul, BfpTensor, Mantissas, Rounding, TileSize,
+    PANEL_NR,
+};
+use hbfp::util::pool::ParBackend;
+use hbfp::util::rng::{SplitMix64, Xorshift32};
+
+fn rand_mat(rng: &mut SplitMix64, len: usize, scale: f32) -> Vec<f32> {
+    (0..len).map(|_| rng.normal() * scale).collect()
+}
+
+fn quantize(data: &[f32], rows: usize, cols: usize, bits: u32, tile: TileSize) -> BfpTensor {
+    BfpTensor::from_f32(data, rows, cols, bits, tile, &mut Rounding::NearestEven).unwrap()
+}
+
+#[test]
+fn pooled_equals_scoped_bitwise() {
+    // Same panel kernel under both dispatch backends, sized above the
+    // parallel floor so both actually fan out.
+    let mut rng = SplitMix64::new(0x9001);
+    let (m, k, n) = (96, 112, 88);
+    let a = rand_mat(&mut rng, m * k, 1.5);
+    let b = rand_mat(&mut rng, k * n, 0.8);
+    for &(ma, mb) in &[(8u32, 8u32), (12, 12), (8, 16), (20, 20)] {
+        let qa = quantize(&a, m, k, ma, TileSize::Edge(24));
+        let qb = quantize(&b, k, n, mb, TileSize::Edge(24));
+        let pooled = bfp_matmul_with_backend(&qa, &qb, 4, ParBackend::Pooled).unwrap();
+        let scoped = bfp_matmul_with_backend(&qa, &qb, 4, ParBackend::Scoped).unwrap();
+        let naive = bfp_matmul_naive(&qa, &qb).unwrap();
+        assert!(pooled == scoped, "backends diverged at ma={ma} mb={mb}");
+        assert!(pooled == naive, "panel kernel != naive at ma={ma} mb={mb}");
+    }
+}
+
+#[test]
+fn packed_panel_equals_rowmajor_across_width_classes() {
+    // i8 (m<=8), i16 (m<=16), i32 (m>16) storage classes, mixed pairs,
+    // ragged shapes that exercise panel padding, and TileSize::Whole.
+    let mut rng = SplitMix64::new(0xABCD);
+    for &(m, k, n) in &[(17usize, 23usize, 19usize), (48, 48, 48), (5, 64, 30), (40, 100, 3)] {
+        let a = rand_mat(&mut rng, m * k, 2.0);
+        let b = rand_mat(&mut rng, k * n, 0.5);
+        for &tile in &[TileSize::Whole, TileSize::Edge(4), TileSize::Edge(24)] {
+            for &(ma, mb) in &[(8u32, 8u32), (12, 12), (20, 20), (8, 20), (20, 8), (4, 12)] {
+                let qa = quantize(&a, m, k, ma, tile);
+                let qb = quantize(&b, k, n, mb, tile);
+                let panel = bfp_matmul(&qa, &qb).unwrap();
+                let rowmajor = bfp_matmul_rowmajor_with_threads(&qa, &qb, 4).unwrap();
+                let naive = bfp_matmul_naive(&qa, &qb).unwrap();
+                assert!(
+                    panel == rowmajor && panel == naive,
+                    "panel kernel diverged at ma={ma} mb={mb} tile={tile:?} ({m}x{k}x{n})"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn fused_uses_panels_and_matches_materialized() {
+    let mut rng = SplitMix64::new(0xFEED);
+    let (m, k, n) = (64, 96, 72);
+    let a = rand_mat(&mut rng, m * k, 1.0);
+    let b = rand_mat(&mut rng, k * n, 1.0);
+    let qb = quantize(&b, k, n, 8, TileSize::Edge(24));
+    let mut r1 = Xorshift32::new(0x51);
+    let mut r2 = Xorshift32::new(0x51);
+    let qa =
+        BfpTensor::from_f32(&a, m, k, 8, TileSize::Edge(24), &mut Rounding::Stochastic(&mut r1))
+            .unwrap();
+    let want = bfp_matmul(&qa, &qb).unwrap();
+    let got = quantize_matmul(&a, m, 8, &mut Rounding::Stochastic(&mut r2), &qb).unwrap();
+    assert!(got == want, "fused packed-panel path != materialized");
+    assert!(qb.has_packed_panels(), "fused path must build the panel cache");
+}
+
+#[test]
+fn panel_cache_invalidated_by_narrow_view_repack() {
+    let mut rng = SplitMix64::new(0x1DEA);
+    let (m, k, n) = (24, 40, 32);
+    let a = rand_mat(&mut rng, m * k, 1.0);
+    let b = rand_mat(&mut rng, k * n, 1.0);
+    let wide = quantize(&b, k, n, 16, TileSize::Edge(8));
+
+    // populate the wide tensor's cache (i16 panels)
+    let qa16 = quantize(&a, m, k, 16, TileSize::Edge(8));
+    let _ = bfp_matmul(&qa16, &wide).unwrap();
+    assert!(wide.has_packed_panels());
+    let wide_pp = wide.packed_panels();
+    assert_eq!(wide_pp.data.elem_bits(), 16);
+
+    // the narrow repack starts with an empty cache and builds i8 panels
+    let narrow = wide.narrow_view(8, &mut Rounding::NearestEven).unwrap();
+    assert!(!narrow.has_packed_panels(), "narrow_view must not inherit panels");
+    let qa8 = quantize(&a, m, k, 8, TileSize::Edge(8));
+    let fast = bfp_matmul(&qa8, &narrow).unwrap();
+    let slow = bfp_matmul_naive(&qa8, &narrow).unwrap();
+    assert!(fast == slow, "narrow tensor's rebuilt panels diverged from naive");
+    let narrow_pp = narrow.packed_panels();
+    assert_eq!(narrow_pp.data.elem_bits(), 8, "panels must repack at the narrow class");
+    assert!(matches!(narrow.mantissas, Mantissas::I8(_)));
+
+    // clearing forces a repack that still agrees
+    narrow.clear_panel_cache();
+    assert!(!narrow.has_packed_panels());
+    let again = bfp_matmul(&qa8, &narrow).unwrap();
+    assert!(again == slow);
+}
+
+#[test]
+fn clone_shares_valid_panels() {
+    let mut rng = SplitMix64::new(0xC0);
+    let b = rand_mat(&mut rng, 32 * 32, 1.0);
+    let qb = quantize(&b, 32, 32, 8, TileSize::Edge(8));
+    let pp = qb.packed_panels();
+    let cloned = qb.clone();
+    assert!(cloned.has_packed_panels(), "clone may reuse the panels of identical mantissas");
+    assert!(*cloned.packed_panels() == *pp);
+}
+
+#[test]
+fn concurrent_matmuls_from_two_callers_are_deterministic() {
+    // Two caller threads hammer the shared global pool with interleaved
+    // matmuls; every result must equal the single-threaded reference.
+    let mut rng = SplitMix64::new(0x70FF);
+    let (m, k, n) = (96, 80, 72); // above the parallel floor
+    let a = rand_mat(&mut rng, m * k, 1.0);
+    let b = rand_mat(&mut rng, k * n, 1.0);
+    let qa = Arc::new(quantize(&a, m, k, 8, TileSize::Edge(16)));
+    let qb = Arc::new(quantize(&b, k, n, 8, TileSize::Edge(16)));
+    qb.packed_panels();
+    let reference = bfp_matmul_with_threads(&qa, &qb, 1).unwrap();
+
+    std::thread::scope(|scope| {
+        for _caller in 0..2 {
+            let qa = Arc::clone(&qa);
+            let qb = Arc::clone(&qb);
+            let reference = &reference;
+            scope.spawn(move || {
+                for round in 0..8 {
+                    let got = bfp_matmul_with_threads(&qa, &qb, 4).unwrap();
+                    assert!(got == *reference, "round {round} diverged under contention");
+                }
+            });
+        }
+    });
+}
+
+#[test]
+fn small_problems_take_the_inline_path_with_identical_results() {
+    // Below the MAC floor the dispatch runs inline on the caller — same
+    // kernel body, same bits as the naive reference.
+    let mut rng = SplitMix64::new(0x5A11);
+    let (m, k, n) = (12, 16, 10);
+    let a = rand_mat(&mut rng, m * k, 1.0);
+    let b = rand_mat(&mut rng, k * n, 1.0);
+    let qa = quantize(&a, m, k, 8, TileSize::Edge(8));
+    let qb = quantize(&b, k, n, 8, TileSize::Edge(8));
+    let fast = bfp_matmul(&qa, &qb).unwrap();
+    let slow = bfp_matmul_naive(&qa, &qb).unwrap();
+    assert!(fast == slow);
+}
+
+#[test]
+fn panel_geometry_matches_nr() {
+    let mut rng = SplitMix64::new(0x42);
+    let b = rand_mat(&mut rng, 48 * 30, 1.0);
+    let qb = quantize(&b, 48, 30, 8, TileSize::Edge(24));
+    let pp = qb.packed_panels();
+    assert_eq!(pp.nr, PANEL_NR);
+    assert_eq!(pp.t, 24);
+    assert_eq!(pp.tiles_k, 2);
+    assert_eq!(pp.tiles_j, 2);
+    assert_eq!(pp.panels_per_tile, 24usize.div_ceil(PANEL_NR));
+}
