@@ -1,9 +1,11 @@
 # Tooling entry points. `make check` is the PR gate: format, release
 # build, full test suite. `make perf` regenerates BENCH_bfp_ops.json at
 # the repo root (see PERF.md); `make bench-quick` is the 3-rep smoke run
-# of the same ladder (also writes the JSON).
+# of the same ladder (also writes the JSON); `make perf-record` is the
+# quick run intended for committing the refreshed baseline so PRs leave
+# a perf trajectory.
 
-.PHONY: check fmt build test perf bench-quick
+.PHONY: check fmt build test perf bench-quick perf-record
 
 check: fmt build test
 
@@ -21,3 +23,6 @@ perf:
 
 bench-quick:
 	cargo bench --bench bfp_ops -- --quick --json
+
+perf-record: bench-quick
+	@echo "BENCH_bfp_ops.json refreshed — commit it to update the perf baseline"

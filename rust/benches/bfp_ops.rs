@@ -7,19 +7,24 @@
 //! (cache-blocked, single thread — the pre-packing seed kernel shape),
 //! `row-major packed-parallel` (width-packed storage + row-band
 //! threading), `packed-panel` warm/cold (the k-tile-major B relayout,
-//! cached vs repacked per call — the default path), and `fused`
+//! cached vs repacked per call — the default path, running the active
+//! SIMD kernel family), `packed-panel warm, simd off` (the same panel
+//! path forced onto the scalar kernels — the SIMD margin), and `fused`
 //! (convert+matmul in one pass). A dispatch section compares the
 //! persistent pool against per-call scoped spawns at 128^3, and a skinny
 //! m=8 section measures the resident-weight case (small activation batch
-//! against big cached weights) where panel reuse pays every step. Run
-//! with `--json` to write `BENCH_bfp_ops.json` at the repo root.
+//! against big cached weights) where panel reuse pays every step, with
+//! its own simd-off partner rung. The active family prints in the
+//! header (`HBFP_SIMD` to override). Run with `--json` to write
+//! `BENCH_bfp_ops.json` at the repo root.
 
 mod common;
 
 use common::{bench, header, BenchOpts, JsonSink};
 use hbfp::bfp::{
     bfp_matmul_naive, bfp_matmul_rowmajor_with_threads, bfp_matmul_with_backend,
-    bfp_matmul_with_threads, fp32_matmul, quantize_matmul, BfpTensor, Rounding, TileSize,
+    bfp_matmul_with_simd, bfp_matmul_with_threads, fp32_matmul, kernels, quantize_matmul,
+    BfpTensor, Isa, Rounding, TileSize,
 };
 use hbfp::util::pool::ParBackend;
 use hbfp::util::rng::{SplitMix64, Xorshift32};
@@ -34,6 +39,12 @@ fn main() {
     let opts = BenchOpts::from_env();
     let mut sink = JsonSink::new("bfp_ops");
     let nt = worker_threads();
+    let isa = kernels::active();
+    println!(
+        "SIMD kernel family: {} (panel width {}; HBFP_SIMD=off|sse|avx2|neon|auto to override)",
+        isa.name(),
+        isa.panel_nr()
+    );
 
     header(&format!("BFP quantization (FP->BFP converter), {nt} threads"));
     for &(n, m, tile) in &[
@@ -142,6 +153,14 @@ fn main() {
         );
         sink.push(&r, flops);
         if bits == 8 && tile == 24 {
+            // scalar-kernel partner of the warm rung: same panel path,
+            // panels re-packed at the scalar width (8) — the margin over
+            // this row is the SIMD win at 256^3
+            let r = bench(&opts, "bfp_matmul m=8 t=24 (packed-panel warm, simd off)", flops, || {
+                std::hint::black_box(bfp_matmul_with_simd(&qa, &qb, nt, Isa::Scalar).unwrap());
+            });
+            sink.push(&r, flops);
+            qb.packed_panels(); // restore the active family's panels
             let r = bench(&opts, "bfp_matmul m=8 t=24 (packed-panel, cold-pack)", flops, || {
                 qb.clear_panel_cache();
                 std::hint::black_box(bfp_matmul_with_threads(&qa, &qb, nt).unwrap());
@@ -205,6 +224,12 @@ fn main() {
             std::hint::black_box(bfp_matmul_with_threads(&qa, &qb, nt).unwrap());
         });
         sink.push(&r, flops);
+        // scalar-kernel partner at the resident-weight shape
+        let r = bench(&opts, "bfp_matmul 8x256x256 (packed-panel warm, simd off)", flops, || {
+            std::hint::black_box(bfp_matmul_with_simd(&qa, &qb, nt, Isa::Scalar).unwrap());
+        });
+        sink.push(&r, flops);
+        qb.packed_panels(); // restore the active family's panels
         let r = bench(&opts, "bfp_matmul 8x256x256 (packed-panel, cold-pack)", flops, || {
             qb.clear_panel_cache();
             std::hint::black_box(bfp_matmul_with_threads(&qa, &qb, nt).unwrap());

@@ -112,7 +112,9 @@ impl Accelerator {
             BfpTensor::from_f32(b, k, n, mantissa_bits, tile, rounding)?
         };
         if k > 0 && n > 0 {
-            qb.packed_panels(); // pack now; every GEMM reuses the layout
+            // pack now, at the active SIMD family's panel width
+            // (kernels::active_panel_nr); every GEMM reuses the layout
+            qb.packed_panels();
         }
         Ok(ResidentWeights { qb, mantissa_bits })
     }
@@ -285,6 +287,27 @@ mod tests {
     fn gemm_resident_requires_loaded_weights() {
         let mut acc = accel();
         assert!(acc.gemm_resident(&[1.0; 8], 1).is_err());
+    }
+
+    #[test]
+    fn resident_weights_pack_at_the_active_simd_width() {
+        // load_weights pre-packs the panel layout; it must be the layout
+        // the active kernel family streams, or the first gemm_resident
+        // would silently repack (paying the relayout per step).
+        let mut rng = SplitMix64::new(12);
+        let mut acc = accel();
+        let e = acc.edge;
+        let (k, n) = (2 * e, e);
+        let w: Vec<f32> = (0..k * n).map(|_| rng.normal()).collect();
+        acc.load_weights(&w, k, n, 8).unwrap();
+        let rw = acc.resident.as_ref().unwrap();
+        assert!(rw.qb.has_packed_panels(), "load_weights must pre-pack");
+        let pp = rw.qb.packed_panels();
+        assert_eq!(
+            pp.nr,
+            crate::bfp::kernels::active_panel_nr(),
+            "resident panels must match the active kernel family's width"
+        );
     }
 
     #[test]

@@ -1,0 +1,764 @@
+//! Runtime-dispatched SIMD kernel family for the packed-panel BFP
+//! datapath.
+//!
+//! The paper's premise is that BFP dot products reduce to dense
+//! fixed-point MACs; the packed `i8`/`i16` mantissa storage and the
+//! k-tile-major B panels exist so a vector unit can stream them. This
+//! module provides that vector unit in software: one kernel family per
+//! ISA, selected once per process and dispatched at runtime.
+//!
+//! ## Kernels
+//!
+//! | kernel | contract |
+//! |---|---|
+//! | [`mac_panel`] | `acc[c] += Σ_dk arow[dk] * panel[dk*nr+c]` — the panel microkernel's inner loops (widening `i8×i8→i32`, `i16×i16→i32/i64`) |
+//! | [`row_amax`] | max-magnitude reduction (shared-exponent selection) |
+//! | [`quantize_row_rne`] | nearest-even mantissa scaling into packed storage |
+//! | [`quantize_dequant_row_rne`] | in-place FP→BFP→FP row round-trip |
+//!
+//! ## ISAs and selection
+//!
+//! | [`Isa`] | panel width | availability |
+//! |---|---|---|
+//! | `Scalar` | 8 | always (the reference; `HBFP_SIMD=off`) |
+//! | `Sse41`  | 16 | `x86_64` with SSE4.1 (CPUID-probed) |
+//! | `Avx2`   | 32 | `x86_64` with AVX2 (CPUID-probed) |
+//! | `Neon`   | 16 | `aarch64` (baseline) |
+//!
+//! `HBFP_SIMD=off|sse|avx2|neon|auto` overrides the default (`auto` =
+//! widest available), read once at first use like `HBFP_THREADS`. A
+//! request the CPU cannot honor degrades to the next-widest available
+//! ISA. Every dispatcher also clamps its `Isa` argument to the detected
+//! capabilities, so forcing an ISA (tests, the bench ladder) is always
+//! memory-safe.
+//!
+//! ## Bit-identity contract
+//!
+//! Every vector path is bit-identical to the [`scalar`] reference for
+//! finite and ±inf inputs. NaN is outside the quantizer contract —
+//! scalar `max`/`clamp` and vector `maxps`/min-max differ on NaN, so
+//! debug builds assert NaN-free converter input at the block-exponent
+//! entry (`quant::block_exponent*`), and `frexp_exp` keeps its
+//! finiteness assert:
+//!
+//! - integer MACs are exact and associative, and each vector lane is one
+//!   output column (no cross-lane sums), so the per-element partials are
+//!   the same integers in any lane width;
+//! - the i32-accumulator overflow bound (`acc_fits_i32`) bounds every
+//!   vector partial exactly as it bounds the scalar ones, so the same
+//!   accumulator-width selection applies unchanged;
+//! - mantissa scaling multiplies by the exact power-of-two reciprocal
+//!   (IEEE-correctly-rounded, equal to the scalar division), rounds with
+//!   the hardware round-ties-even, and clamps with min/max;
+//! - the max reduction is associative/commutative over finite floats.
+//!
+//! **Stochastic rounding is deliberately not vectorized**: each tile's
+//! Xorshift32 substream is consumed in element order, one draw per
+//! element, so the draw sequence (and therefore every trained bit) is
+//! identical whatever ISA is active. The stochastic row loops stay
+//! scalar in `tensor.rs`/`matmul.rs`; only the RNE rows and the
+//! exponent reduction vectorize.
+//!
+//! Differential tests live in this module (kernel level, every detected
+//! ISA vs scalar) and in `tests/simd_kernels.rs` (whole-matmul level via
+//! `bfp_matmul_with_simd`); CI runs the full suite under both
+//! `HBFP_SIMD=off` and `HBFP_SIMD=auto`.
+
+use std::sync::OnceLock;
+
+use super::panels::{MAX_PANEL_NR, PANEL_NR};
+use super::quant::{grid, TileRounding};
+use super::tensor::MantissaElem;
+
+pub mod scalar;
+
+#[cfg(target_arch = "aarch64")]
+mod neon;
+#[cfg(target_arch = "x86_64")]
+mod x86;
+
+/// Integer accumulator for the tile MAC loops: `i32` when the overflow
+/// bound allows (see `matmul::acc_fits_i32`), `i64` otherwise. Both sum
+/// identical integer values.
+pub trait Accum: Copy + Default + Send + 'static {
+    fn mac<EA: MantissaElem, EB: MantissaElem>(&mut self, qa: EA, qb: EB);
+    fn to_f32(self) -> f32;
+    fn to_i64(self) -> i64;
+
+    /// Downcast for the SIMD dispatcher (Some only on `i32`).
+    fn as_i32s(acc: &mut [Self]) -> Option<&mut [i32]> {
+        let _ = acc;
+        None
+    }
+
+    /// Downcast for the SIMD dispatcher (Some only on `i64`).
+    fn as_i64s(acc: &mut [Self]) -> Option<&mut [i64]> {
+        let _ = acc;
+        None
+    }
+}
+
+impl Accum for i32 {
+    #[inline(always)]
+    fn mac<EA: MantissaElem, EB: MantissaElem>(&mut self, qa: EA, qb: EB) {
+        *self += qa.to_i32() * qb.to_i32();
+    }
+
+    #[inline(always)]
+    fn to_f32(self) -> f32 {
+        self as f32
+    }
+
+    #[inline(always)]
+    fn to_i64(self) -> i64 {
+        self as i64
+    }
+
+    fn as_i32s(acc: &mut [i32]) -> Option<&mut [i32]> {
+        Some(acc)
+    }
+}
+
+impl Accum for i64 {
+    #[inline(always)]
+    fn mac<EA: MantissaElem, EB: MantissaElem>(&mut self, qa: EA, qb: EB) {
+        *self += qa.to_i32() as i64 * qb.to_i32() as i64;
+    }
+
+    #[inline(always)]
+    fn to_f32(self) -> f32 {
+        self as f32
+    }
+
+    #[inline(always)]
+    fn to_i64(self) -> i64 {
+        self
+    }
+
+    fn as_i64s(acc: &mut [i64]) -> Option<&mut [i64]> {
+        Some(acc)
+    }
+}
+
+/// One kernel family. `Scalar` is the portable reference; the vector
+/// variants are feature-gated per target and probed at runtime.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Isa {
+    Scalar,
+    Sse41,
+    Avx2,
+    Neon,
+}
+
+impl Isa {
+    /// Stable display name (used by the bench header and PERF.md table).
+    pub fn name(self) -> &'static str {
+        match self {
+            Isa::Scalar => "scalar",
+            Isa::Sse41 => "sse4.1",
+            Isa::Avx2 => "avx2",
+            Isa::Neon => "neon",
+        }
+    }
+
+    /// Panel register width for this family: how many output columns one
+    /// microkernel accumulator block holds, i.e. the `nr` the B-operand
+    /// panels are packed at ([`crate::bfp::panels::pack_panels`]).
+    pub fn panel_nr(self) -> usize {
+        match self {
+            Isa::Scalar => PANEL_NR,
+            Isa::Sse41 => 16,
+            Isa::Avx2 => 32,
+            Isa::Neon => 16,
+        }
+    }
+
+    /// Multiplier for the kernels' inline-vs-dispatch work floors
+    /// (`pool::par_threads_simd`): wider families finish small problems
+    /// faster, so the threshold below which dispatch overhead dominates
+    /// scales with the family's throughput class. A heuristic — it only
+    /// moves the speed knee, never the results.
+    pub fn par_floor_scale(self) -> usize {
+        match self {
+            Isa::Scalar => 1,
+            Isa::Sse41 => 2,
+            Isa::Avx2 => 4,
+            Isa::Neon => 2,
+        }
+    }
+
+    /// This ISA if the running CPU supports it, else the widest
+    /// available family of at most this panel width (so an `Avx2`
+    /// request degrades to SSE4.1 or NEON, and a `Neon` request on
+    /// x86 degrades to the same-width SSE4.1 — never silently to
+    /// scalar while a vector unit exists). Makes any `Isa` value safe
+    /// to pass to the dispatchers.
+    pub fn clamped(self) -> Isa {
+        if executable(self) {
+            self
+        } else {
+            widest_within(CpuCaps::detect(), self.panel_nr())
+        }
+    }
+}
+
+/// Whether the running CPU can execute this family's kernels.
+fn executable(isa: Isa) -> bool {
+    let caps = CpuCaps::detect();
+    match isa {
+        Isa::Scalar => true,
+        Isa::Sse41 => caps.sse41,
+        Isa::Avx2 => caps.avx2,
+        Isa::Neon => caps.neon,
+    }
+}
+
+/// Widest available family whose panel width does not exceed `max_nr`
+/// (explicit preferences act as width caps, so e.g. `HBFP_SIMD=sse`
+/// selects NEON on aarch64 — the same 16-wide class).
+fn widest_within(caps: CpuCaps, max_nr: usize) -> Isa {
+    if caps.avx2 && max_nr >= Isa::Avx2.panel_nr() {
+        Isa::Avx2
+    } else if caps.sse41 && max_nr >= Isa::Sse41.panel_nr() {
+        Isa::Sse41
+    } else if caps.neon && max_nr >= Isa::Neon.panel_nr() {
+        Isa::Neon
+    } else {
+        Isa::Scalar
+    }
+}
+
+/// Runtime CPU capabilities relevant to the kernel families. A plain
+/// value so [`select`] is a pure, exhaustively testable function.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CpuCaps {
+    pub sse41: bool,
+    pub avx2: bool,
+    pub neon: bool,
+}
+
+fn probe_sse41() -> bool {
+    #[cfg(target_arch = "x86_64")]
+    return std::arch::is_x86_feature_detected!("sse4.1");
+    #[cfg(not(target_arch = "x86_64"))]
+    return false;
+}
+
+fn probe_avx2() -> bool {
+    #[cfg(target_arch = "x86_64")]
+    return std::arch::is_x86_feature_detected!("avx2");
+    #[cfg(not(target_arch = "x86_64"))]
+    return false;
+}
+
+fn probe_neon() -> bool {
+    cfg!(target_arch = "aarch64")
+}
+
+impl CpuCaps {
+    /// Probe the running CPU (cached after the first call).
+    pub fn detect() -> CpuCaps {
+        static CAPS: OnceLock<CpuCaps> = OnceLock::new();
+        *CAPS.get_or_init(|| CpuCaps {
+            sse41: probe_sse41(),
+            avx2: probe_avx2(),
+            neon: probe_neon(),
+        })
+    }
+
+    /// No vector units at all (the `select` fallback row).
+    pub fn none() -> CpuCaps {
+        CpuCaps { sse41: false, avx2: false, neon: false }
+    }
+}
+
+/// Parsed `HBFP_SIMD` preference.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SimdPref {
+    Off,
+    Sse,
+    Avx2,
+    Neon,
+    Auto,
+}
+
+impl SimdPref {
+    /// Parse an `HBFP_SIMD` value; `None` for unrecognized input (the
+    /// caller warns and falls back to auto).
+    pub fn parse(s: &str) -> Option<SimdPref> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "off" | "scalar" | "none" => Some(SimdPref::Off),
+            "sse" | "sse4" | "sse4.1" => Some(SimdPref::Sse),
+            "avx2" | "avx" => Some(SimdPref::Avx2),
+            "neon" => Some(SimdPref::Neon),
+            "auto" | "" => Some(SimdPref::Auto),
+            _ => None,
+        }
+    }
+}
+
+/// Pick the kernel family for a preference and a capability set: `Off`
+/// forces the scalar reference, `Auto` (or no preference) takes the
+/// widest available unit, and an explicit request acts as a panel-width
+/// cap that degrades to the widest supported family within it rather
+/// than failing — `sse`/`neon` mean "a 16-wide unit", `avx2` means "up
+/// to 32-wide", whatever the architecture actually provides.
+pub fn select(pref: Option<SimdPref>, caps: CpuCaps) -> Isa {
+    match pref {
+        None | Some(SimdPref::Auto) | Some(SimdPref::Avx2) => widest_within(caps, MAX_PANEL_NR),
+        Some(SimdPref::Off) => Isa::Scalar,
+        Some(SimdPref::Sse) | Some(SimdPref::Neon) => widest_within(caps, 16),
+    }
+}
+
+/// The process-wide kernel family: `HBFP_SIMD` (read once, at first use)
+/// applied to the detected CPU capabilities.
+pub fn active() -> Isa {
+    static ACTIVE: OnceLock<Isa> = OnceLock::new();
+    *ACTIVE.get_or_init(|| {
+        let pref = match std::env::var("HBFP_SIMD") {
+            Ok(v) => match SimdPref::parse(&v) {
+                Some(p) => Some(p),
+                None => {
+                    eprintln!(
+                        "HBFP_SIMD={v:?} not recognized (off|sse|avx2|neon|auto); using auto"
+                    );
+                    None
+                }
+            },
+            Err(_) => None,
+        };
+        select(pref, CpuCaps::detect())
+    })
+}
+
+/// Panel width of the active family — what `BfpTensor::packed_panels`
+/// packs at.
+pub fn active_panel_nr() -> usize {
+    active().panel_nr()
+}
+
+/// Inline-floor multiplier for a converter pass: the stochastic inner
+/// loop is deliberately scalar (ISA-independent RNG draws), so only
+/// nearest-even scales the threshold with the family's width.
+pub(crate) fn converter_floor_scale(isa: Isa, mode: TileRounding) -> usize {
+    match mode {
+        TileRounding::NearestEven => isa.par_floor_scale(),
+        TileRounding::StochasticBase(_) => 1,
+    }
+}
+
+/// Every family the running CPU can execute (always includes `Scalar`).
+/// The differential tests iterate this.
+pub fn detected() -> Vec<Isa> {
+    let caps = CpuCaps::detect();
+    let mut v = vec![Isa::Scalar];
+    if caps.sse41 {
+        v.push(Isa::Sse41);
+    }
+    if caps.avx2 {
+        v.push(Isa::Avx2);
+    }
+    if caps.neon {
+        v.push(Isa::Neon);
+    }
+    v
+}
+
+/// Panel MAC: `acc[c] += Σ_dk arow[dk] * panel[dk*nr + c]` for
+/// `c in 0..nr`, under the chosen family (clamped to the CPU's
+/// capabilities, so any `Isa` value is safe). Falls back to the scalar
+/// reference for element/accumulator combinations without a vector
+/// kernel (mixed-width operand pairs, `i8` with an `i64` accumulator) —
+/// results are bit-identical either way.
+#[inline]
+pub fn mac_panel<EA: MantissaElem, EB: MantissaElem, A: Accum>(
+    isa: Isa,
+    arow: &[EA],
+    panel: &[EB],
+    nr: usize,
+    acc: &mut [A],
+) {
+    mac_panel_preclamped(isa.clamped(), arow, panel, nr, acc)
+}
+
+/// [`mac_panel`] for an `isa` already known executable on this CPU
+/// (`active()` or a `clamped()` result) — the per-row hot path skips
+/// the re-clamp. Debug builds assert the contract.
+#[inline]
+pub(crate) fn mac_panel_preclamped<EA: MantissaElem, EB: MantissaElem, A: Accum>(
+    isa: Isa,
+    arow: &[EA],
+    panel: &[EB],
+    nr: usize,
+    acc: &mut [A],
+) {
+    debug_assert!(executable(isa), "pass active() or a clamped() ISA");
+    debug_assert!(acc.len() == nr);
+    debug_assert!(panel.len() >= arow.len() * nr);
+    match isa {
+        #[cfg(target_arch = "x86_64")]
+        Isa::Sse41 => {
+            if x86::mac_panel_sse41(arow, panel, nr, &mut *acc) {
+                return;
+            }
+        }
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2 => {
+            if x86::mac_panel_avx2(arow, panel, nr, &mut *acc) {
+                return;
+            }
+        }
+        #[cfg(target_arch = "aarch64")]
+        Isa::Neon => {
+            if neon::mac_panel_neon(arow, panel, nr, &mut *acc) {
+                return;
+            }
+        }
+        _ => {}
+    }
+    scalar::mac_panel(arow, panel, nr, acc);
+}
+
+/// Max |x| over a row (0.0 when empty) under the chosen family
+/// (clamped, so any `Isa` value is safe).
+#[inline]
+pub fn row_amax(isa: Isa, xs: &[f32]) -> f32 {
+    row_amax_preclamped(isa.clamped(), xs)
+}
+
+/// [`row_amax`] for an already-executable `isa` — the per-tile-row hot
+/// path of the exponent selection.
+#[inline]
+pub(crate) fn row_amax_preclamped(isa: Isa, xs: &[f32]) -> f32 {
+    debug_assert!(executable(isa), "pass active() or a clamped() ISA");
+    match isa {
+        #[cfg(target_arch = "x86_64")]
+        Isa::Sse41 => x86::row_amax_sse41(xs),
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2 => x86::row_amax_avx2(xs),
+        #[cfg(target_arch = "aarch64")]
+        Isa::Neon => neon::row_amax_neon(xs),
+        _ => scalar::row_amax(xs),
+    }
+}
+
+/// Nearest-even quantization of one row onto the grid of `(e, bits)`
+/// into packed mantissa storage, under the chosen family (clamped, so
+/// any `Isa` value is safe). (Stochastic rounding never routes here —
+/// it stays scalar so the RNG draw order is ISA-independent.)
+#[inline]
+pub fn quantize_row_rne<E: MantissaElem>(
+    isa: Isa,
+    src: &[f32],
+    dst: &mut [E],
+    e: i32,
+    mantissa_bits: u32,
+) {
+    quantize_row_rne_preclamped(isa.clamped(), src, dst, e, mantissa_bits)
+}
+
+/// [`quantize_row_rne`] for an already-executable `isa` — the per-row
+/// hot path of the converters.
+#[inline]
+pub(crate) fn quantize_row_rne_preclamped<E: MantissaElem>(
+    isa: Isa,
+    src: &[f32],
+    dst: &mut [E],
+    e: i32,
+    mantissa_bits: u32,
+) {
+    debug_assert!(executable(isa), "pass active() or a clamped() ISA");
+    debug_assert_eq!(src.len(), dst.len());
+    match isa {
+        #[cfg(target_arch = "x86_64")]
+        Isa::Sse41 => {
+            if x86::quantize_row_rne_sse41(src, &mut *dst, e, mantissa_bits) {
+                return;
+            }
+        }
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2 => {
+            if x86::quantize_row_rne_avx2(src, &mut *dst, e, mantissa_bits) {
+                return;
+            }
+        }
+        #[cfg(target_arch = "aarch64")]
+        Isa::Neon => {
+            if neon::quantize_row_rne_neon(src, &mut *dst, e, mantissa_bits) {
+                return;
+            }
+        }
+        _ => {}
+    }
+    scalar::quantize_row_rne(src, dst, e, mantissa_bits);
+}
+
+/// In-place nearest-even quantize + dequantize of one row (the trainer's
+/// host-side input converter), under the chosen family (clamped, so any
+/// `Isa` value is safe).
+#[inline]
+pub fn quantize_dequant_row_rne(isa: Isa, row: &mut [f32], e: i32, mantissa_bits: u32) {
+    quantize_dequant_row_rne_preclamped(isa.clamped(), row, e, mantissa_bits)
+}
+
+/// [`quantize_dequant_row_rne`] for an already-executable `isa`.
+#[inline]
+pub(crate) fn quantize_dequant_row_rne_preclamped(
+    isa: Isa,
+    row: &mut [f32],
+    e: i32,
+    mantissa_bits: u32,
+) {
+    debug_assert!(executable(isa), "pass active() or a clamped() ISA");
+    match isa {
+        #[cfg(target_arch = "x86_64")]
+        Isa::Sse41 => x86::quantize_dequant_row_rne_sse41(row, e, mantissa_bits),
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2 => x86::quantize_dequant_row_rne_avx2(row, e, mantissa_bits),
+        #[cfg(target_arch = "aarch64")]
+        Isa::Neon => neon::quantize_dequant_row_rne_neon(row, e, mantissa_bits),
+        _ => scalar::quantize_dequant_row_rne(row, e, mantissa_bits),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::Gen;
+
+    const ALL_ISAS: [Isa; 4] = [Isa::Scalar, Isa::Sse41, Isa::Avx2, Isa::Neon];
+
+    #[test]
+    fn panel_widths_fit_the_layout_cap() {
+        for isa in ALL_ISAS {
+            assert!(isa.panel_nr() <= MAX_PANEL_NR, "{:?}", isa);
+            assert!(isa.panel_nr() % PANEL_NR == 0, "{:?}", isa);
+            assert!(isa.par_floor_scale() >= 1);
+        }
+    }
+
+    #[test]
+    fn pref_parsing() {
+        assert_eq!(SimdPref::parse("off"), Some(SimdPref::Off));
+        assert_eq!(SimdPref::parse("OFF"), Some(SimdPref::Off));
+        assert_eq!(SimdPref::parse("scalar"), Some(SimdPref::Off));
+        assert_eq!(SimdPref::parse("sse"), Some(SimdPref::Sse));
+        assert_eq!(SimdPref::parse(" sse4.1 "), Some(SimdPref::Sse));
+        assert_eq!(SimdPref::parse("avx2"), Some(SimdPref::Avx2));
+        assert_eq!(SimdPref::parse("neon"), Some(SimdPref::Neon));
+        assert_eq!(SimdPref::parse("auto"), Some(SimdPref::Auto));
+        assert_eq!(SimdPref::parse("avx512"), None);
+        assert_eq!(SimdPref::parse("1"), None);
+    }
+
+    #[test]
+    fn selection_matrix() {
+        let x86 = CpuCaps { sse41: true, avx2: true, neon: false };
+        let old_x86 = CpuCaps { sse41: true, avx2: false, neon: false };
+        let arm = CpuCaps { sse41: false, avx2: false, neon: true };
+        let none = CpuCaps::none();
+
+        // auto / no preference: widest available
+        assert_eq!(select(None, x86), Isa::Avx2);
+        assert_eq!(select(Some(SimdPref::Auto), x86), Isa::Avx2);
+        assert_eq!(select(None, old_x86), Isa::Sse41);
+        assert_eq!(select(None, arm), Isa::Neon);
+        assert_eq!(select(None, none), Isa::Scalar);
+
+        // off always wins
+        for caps in [x86, old_x86, arm, none] {
+            assert_eq!(select(Some(SimdPref::Off), caps), Isa::Scalar);
+        }
+
+        // explicit requests are width caps: they degrade to the widest
+        // supported family within the cap, across architectures
+        assert_eq!(select(Some(SimdPref::Avx2), x86), Isa::Avx2);
+        assert_eq!(select(Some(SimdPref::Avx2), old_x86), Isa::Sse41);
+        assert_eq!(select(Some(SimdPref::Avx2), arm), Isa::Neon);
+        assert_eq!(select(Some(SimdPref::Avx2), none), Isa::Scalar);
+        assert_eq!(select(Some(SimdPref::Sse), x86), Isa::Sse41);
+        assert_eq!(select(Some(SimdPref::Sse), arm), Isa::Neon);
+        assert_eq!(select(Some(SimdPref::Sse), none), Isa::Scalar);
+        assert_eq!(select(Some(SimdPref::Neon), arm), Isa::Neon);
+        assert_eq!(select(Some(SimdPref::Neon), x86), Isa::Sse41);
+        assert_eq!(select(Some(SimdPref::Neon), none), Isa::Scalar);
+        // clamping follows the same rule
+        assert_eq!(Isa::Scalar.clamped(), Isa::Scalar);
+    }
+
+    #[test]
+    fn clamped_is_always_executable() {
+        // whatever Isa a caller passes, the clamped family must be in
+        // the detected set
+        let avail = detected();
+        for isa in ALL_ISAS {
+            assert!(avail.contains(&isa.clamped()), "{:?} clamps out of range", isa);
+        }
+        assert!(avail.contains(&active()));
+    }
+
+    #[test]
+    fn grid_is_exact() {
+        for (e, m) in [(-100i32, 24u32), (-100, 2), (0, 8), (127, 2), (127, 24), (5, 12)] {
+            let (inv, step, lo, hi) = grid(e, m);
+            assert_eq!(inv * step, 1.0, "e={e} m={m}");
+            assert_eq!(lo, -((1i64 << (m - 1)) as f32));
+            assert_eq!(hi, ((1i64 << (m - 1)) - 1) as f32);
+        }
+    }
+
+    /// Random mantissa in the `bits`-wide two's-complement range,
+    /// with extra mass on 0 and the extremes.
+    fn rand_mant(g: &mut Gen, bits: u32) -> i32 {
+        let lo = -(1i64 << (bits - 1));
+        let hi = (1i64 << (bits - 1)) - 1;
+        match g.int(0, 9) {
+            0 => 0,
+            1 => lo as i32,
+            2 => hi as i32,
+            _ => (lo + (g.rng.next_u64() % (hi - lo + 1) as u64) as i64) as i32,
+        }
+    }
+
+    fn mac_case<EA, EB, A>(g: &mut Gen, isa: Isa, ea_bits: u32, eb_bits: u32, label: &str)
+    where
+        EA: MantissaElem,
+        EB: MantissaElem,
+        A: Accum + PartialEq + std::fmt::Debug,
+    {
+        let nr = *g.pick(&[8usize, 16, 32]);
+        let klen = g.int(0, 60);
+        let arow: Vec<EA> = (0..klen).map(|_| EA::from_i32(rand_mant(g, ea_bits))).collect();
+        let panel: Vec<EB> =
+            (0..klen * nr + g.int(0, 2) * nr) // may carry trailing padded rows
+                .map(|_| EB::from_i32(rand_mant(g, eb_bits)))
+                .collect();
+        let mut want: Vec<A> = (0..nr).map(|_| A::default()).collect();
+        // nonzero initial accumulators: the kernels must accumulate
+        for (i, w) in want.iter_mut().enumerate() {
+            w.mac(EA::from_i32(1), EB::from_i32((i % 3) as i32));
+        }
+        let mut got = want.clone();
+        scalar::mac_panel(&arow, &panel, nr, &mut want);
+        mac_panel(isa, &arow, &panel, nr, &mut got);
+        assert!(
+            got == want,
+            "{label} isa={isa:?} nr={nr} klen={klen}: {got:?} != {want:?}"
+        );
+    }
+
+    #[test]
+    fn mac_panel_matches_scalar_on_every_detected_isa() {
+        let mut g = Gen::new(0x51D3);
+        for _ in 0..60 {
+            for &isa in &detected() {
+                // i8 x i8 -> i32: bound holds for any klen <= 60
+                mac_case::<i8, i8, i32>(&mut g, isa, 8, 8, "i8*i8->i32");
+                // i16 x i16 -> i32 at 12-bit values (bound: klen <= 511)
+                mac_case::<i16, i16, i32>(&mut g, isa, 12, 12, "i16*i16->i32");
+                // i16 x i16 -> i64 at full width
+                mac_case::<i16, i16, i64>(&mut g, isa, 16, 16, "i16*i16->i64");
+                // mixed storage classes: scalar fallback inside the dispatch
+                mac_case::<i8, i16, i32>(&mut g, isa, 8, 12, "i8*i16->i32");
+                mac_case::<i16, i8, i64>(&mut g, isa, 16, 8, "i16*i8->i64");
+                mac_case::<i32, i32, i64>(&mut g, isa, 24, 24, "i32*i32->i64");
+                // i8 with i64 accumulator: scalar fallback
+                mac_case::<i8, i8, i64>(&mut g, isa, 8, 8, "i8*i8->i64");
+            }
+        }
+    }
+
+    #[test]
+    fn mac_panel_extremes_at_the_i32_bound() {
+        // all-extremal mantissas right at the accumulator bound: 12-bit
+        // operands, 511 products is the largest i32-safe tile
+        for &isa in &detected() {
+            for nr in [8usize, 16, 32] {
+                let klen = 511;
+                let arow = vec![-(1i16 << 11); klen];
+                let panel = vec![-(1i16 << 11); klen * nr];
+                let mut want = vec![0i32; nr];
+                let mut got = vec![0i32; nr];
+                scalar::mac_panel(&arow, &panel, nr, &mut want);
+                mac_panel(isa, &arow, &panel, nr, &mut got);
+                assert_eq!(got, want, "isa={isa:?} nr={nr}");
+                assert_eq!(want[0], 511 << 22); // 511 * 2^11 * 2^11, no wrap
+            }
+        }
+    }
+
+    #[test]
+    fn row_amax_matches_scalar() {
+        let mut g = Gen::new(0xA3A3);
+        for _ in 0..120 {
+            let len = g.int(0, 67);
+            let mut xs = g.vec_f32(len, 6);
+            if len > 0 && g.bool() {
+                xs[g.int(0, len - 1)] = 0.0;
+            }
+            let want = scalar::row_amax(&xs);
+            for &isa in &detected() {
+                let got = row_amax(isa, &xs);
+                assert!(
+                    got.to_bits() == want.to_bits(),
+                    "isa={isa:?} len={len}: {got} != {want}"
+                );
+            }
+        }
+    }
+
+    fn q_row_case<E>(g: &mut Gen, isa: Isa, bits: u32)
+    where
+        E: MantissaElem + PartialEq + std::fmt::Debug,
+    {
+        let len = g.int(0, 67);
+        let e = *g.pick(&[-100i32, -20, -1, 0, 1, 10, 127]);
+        let (_, step, lo, hi) = grid(e, bits);
+        let src: Vec<f32> = (0..len)
+            .map(|_| match g.int(0, 5) {
+                // exact grid ties: the round-ties-even hot spot
+                0 => (g.int(0, 40) as f32 - 20.0 + 0.5) * step,
+                1 => (g.int(0, 40) as f32 - 20.0) * step,
+                // far outside the clamp range (finite-first product
+                // order: never NaN, at worst ±inf, which still clamps
+                // identically on every path)
+                2 => g.f32_sym(4.0) * (hi - lo) * step,
+                // tiny (possibly subnormal after scaling)
+                3 => g.f32_sym(1.0) * f32::MIN_POSITIVE,
+                _ => g.f32_sym(2.0) * step * 100.0,
+            })
+            .collect();
+        let mut want: Vec<E> = (0..len).map(|_| E::from_i32(0)).collect();
+        let mut got = want.clone();
+        scalar::quantize_row_rne(&src, &mut want, e, bits);
+        quantize_row_rne(isa, &src, &mut got, e, bits);
+        assert!(got == want, "isa={isa:?} bits={bits} e={e} len={len}");
+
+        // and the in-place round-trip
+        let mut wantf = src.clone();
+        let mut gotf = src.clone();
+        scalar::quantize_dequant_row_rne(&mut wantf, e, bits);
+        quantize_dequant_row_rne(isa, &mut gotf, e, bits);
+        let same = wantf.iter().zip(&gotf).all(|(a, b)| a.to_bits() == b.to_bits());
+        assert!(same, "roundtrip isa={isa:?} bits={bits} e={e} len={len}");
+    }
+
+    #[test]
+    fn quantize_rows_match_scalar_on_every_detected_isa() {
+        let mut g = Gen::new(0x0BF9);
+        for _ in 0..80 {
+            for &isa in &detected() {
+                for &bits in &[2u32, 4, 7, 8] {
+                    q_row_case::<i8>(&mut g, isa, bits);
+                }
+                for &bits in &[9u32, 12, 16] {
+                    q_row_case::<i16>(&mut g, isa, bits);
+                }
+                for &bits in &[17u32, 20, 24] {
+                    q_row_case::<i32>(&mut g, isa, bits);
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,227 @@
+//! aarch64 NEON kernels — the vector counterparts of `super::scalar` for
+//! ARM cores (NEON is baseline on aarch64, so there is no runtime probe;
+//! `HBFP_SIMD=off` still forces the scalar reference).
+//!
+//! Bit-identity argument mirrors `super::x86`: integer widening MACs
+//! (`vmlal`/`vaddw`) are exact; `vrndnq_f32` is round-ties-even;
+//! multiplication by the exact power-of-two reciprocal equals the scalar
+//! division; `vmaxq_f32` trees equal the scalar max fold for finite
+//! inputs.
+
+#![allow(unsafe_op_in_unsafe_fn)]
+
+use core::arch::aarch64::*;
+
+use super::{grid, scalar, Accum};
+use crate::bfp::tensor::MantissaElem;
+
+/// NEON panel MAC: `acc[c] += Σ_dk arow[dk] * panel[dk*nr + c]`.
+/// Returns false (untouched `acc`) when no vector kernel matches.
+pub fn mac_panel_neon<EA: MantissaElem, EB: MantissaElem, A: Accum>(
+    arow: &[EA],
+    panel: &[EB],
+    nr: usize,
+    acc: &mut [A],
+) -> bool {
+    debug_assert!(acc.len() == nr && panel.len() >= arow.len() * nr);
+    if nr % 8 != 0 {
+        return false;
+    }
+    if let (Some(a), Some(p)) = (EA::as_i8s(arow), EB::as_i8s(panel)) {
+        if let Some(acc32) = A::as_i32s(&mut *acc) {
+            unsafe { mac_i8_i32(a, p, nr, acc32) };
+            return true;
+        }
+        return false; // i8 x i8 with i64 acc: only at tile_k >= 2^17; scalar
+    }
+    if let (Some(a), Some(p)) = (EA::as_i16s(arow), EB::as_i16s(panel)) {
+        if let Some(acc32) = A::as_i32s(&mut *acc) {
+            unsafe { mac_i16_i32(a, p, nr, acc32) };
+            return true;
+        }
+        if let Some(acc64) = A::as_i64s(&mut *acc) {
+            unsafe { mac_i16_i64(a, p, nr, acc64) };
+            return true;
+        }
+    }
+    false
+}
+
+/// SAFETY: `nr % 8 == 0`, `acc.len() == nr`,
+/// `panel.len() >= arow.len() * nr`.
+#[target_feature(enable = "neon")]
+unsafe fn mac_i8_i32(arow: &[i8], panel: &[i8], nr: usize, acc: &mut [i32]) {
+    for c0 in (0..nr).step_by(8) {
+        let mut acc_lo = vld1q_s32(acc.as_ptr().add(c0));
+        let mut acc_hi = vld1q_s32(acc.as_ptr().add(c0 + 4));
+        for (dk, &qa) in arow.iter().enumerate() {
+            if qa == 0 {
+                continue;
+            }
+            let a4 = vdup_n_s16(qa as i16);
+            let b16 = vmovl_s8(vld1_s8(panel.as_ptr().add(dk * nr + c0)));
+            // widening i16*i16 -> i32 MAC (both operands fit i16 exactly)
+            acc_lo = vmlal_s16(acc_lo, vget_low_s16(b16), a4);
+            acc_hi = vmlal_s16(acc_hi, vget_high_s16(b16), a4);
+        }
+        vst1q_s32(acc.as_mut_ptr().add(c0), acc_lo);
+        vst1q_s32(acc.as_mut_ptr().add(c0 + 4), acc_hi);
+    }
+}
+
+/// SAFETY: as [`mac_i8_i32`].
+#[target_feature(enable = "neon")]
+unsafe fn mac_i16_i32(arow: &[i16], panel: &[i16], nr: usize, acc: &mut [i32]) {
+    for c0 in (0..nr).step_by(8) {
+        let mut acc_lo = vld1q_s32(acc.as_ptr().add(c0));
+        let mut acc_hi = vld1q_s32(acc.as_ptr().add(c0 + 4));
+        for (dk, &qa) in arow.iter().enumerate() {
+            if qa == 0 {
+                continue;
+            }
+            let a4 = vdup_n_s16(qa);
+            let b16 = vld1q_s16(panel.as_ptr().add(dk * nr + c0));
+            acc_lo = vmlal_s16(acc_lo, vget_low_s16(b16), a4);
+            acc_hi = vmlal_s16(acc_hi, vget_high_s16(b16), a4);
+        }
+        vst1q_s32(acc.as_mut_ptr().add(c0), acc_lo);
+        vst1q_s32(acc.as_mut_ptr().add(c0 + 4), acc_hi);
+    }
+}
+
+/// SAFETY: as [`mac_i8_i32`] (4-lane steps; `nr % 8 == 0` implies
+/// `nr % 4 == 0`).
+#[target_feature(enable = "neon")]
+unsafe fn mac_i16_i64(arow: &[i16], panel: &[i16], nr: usize, acc: &mut [i64]) {
+    for c0 in (0..nr).step_by(4) {
+        let mut acc_lo = vld1q_s64(acc.as_ptr().add(c0));
+        let mut acc_hi = vld1q_s64(acc.as_ptr().add(c0 + 2));
+        for (dk, &qa) in arow.iter().enumerate() {
+            if qa == 0 {
+                continue;
+            }
+            let b32 = vmovl_s16(vld1_s16(panel.as_ptr().add(dk * nr + c0)));
+            let prod = vmulq_s32(b32, vdupq_n_s32(qa as i32)); // exact: i16*i16 fits i32
+            acc_lo = vaddw_s32(acc_lo, vget_low_s32(prod));
+            acc_hi = vaddw_s32(acc_hi, vget_high_s32(prod));
+        }
+        vst1q_s64(acc.as_mut_ptr().add(c0), acc_lo);
+        vst1q_s64(acc.as_mut_ptr().add(c0 + 2), acc_hi);
+    }
+}
+
+/// NEON row max-magnitude.
+pub fn row_amax_neon(xs: &[f32]) -> f32 {
+    unsafe { amax(xs) }
+}
+
+/// SAFETY: plain NEON (baseline on aarch64).
+#[target_feature(enable = "neon")]
+unsafe fn amax(xs: &[f32]) -> f32 {
+    let mut m = vdupq_n_f32(0.0);
+    let mut i = 0;
+    while i + 4 <= xs.len() {
+        m = vmaxq_f32(m, vabsq_f32(vld1q_f32(xs.as_ptr().add(i))));
+        i += 4;
+    }
+    let mut amax = vmaxvq_f32(m);
+    for &x in &xs[i..] {
+        amax = amax.max(x.abs());
+    }
+    amax
+}
+
+/// NEON nearest-even row quantization into packed mantissas.
+pub fn quantize_row_rne_neon<E: MantissaElem>(
+    src: &[f32],
+    dst: &mut [E],
+    e: i32,
+    mantissa_bits: u32,
+) -> bool {
+    debug_assert_eq!(src.len(), dst.len());
+    let (inv, _, lo, hi) = grid(e, mantissa_bits);
+    let done = if let Some(d) = E::as_i8s_mut(&mut *dst) {
+        unsafe { q_row_i8(src, d, inv, lo, hi) }
+    } else if let Some(d) = E::as_i16s_mut(&mut *dst) {
+        unsafe { q_row_i16(src, d, inv, lo, hi) }
+    } else if let Some(d) = E::as_i32s_mut(&mut *dst) {
+        unsafe { q_row_i32(src, d, inv, lo, hi) }
+    } else {
+        return false;
+    };
+    scalar::quantize_row_rne(&src[done..], &mut dst[done..], e, mantissa_bits);
+    true
+}
+
+/// NEON in-place nearest-even quantize + dequantize of one row.
+pub fn quantize_dequant_row_rne_neon(row: &mut [f32], e: i32, mantissa_bits: u32) {
+    let (inv, step, lo, hi) = grid(e, mantissa_bits);
+    let done = unsafe { qd_row(row, inv, step, lo, hi) };
+    scalar::quantize_dequant_row_rne(&mut row[done..], e, mantissa_bits);
+}
+
+/// Scale, round-ties-even, clamp — 4 lanes; result integral in [lo, hi].
+///
+/// SAFETY: plain NEON.
+#[target_feature(enable = "neon")]
+unsafe fn q4(x: float32x4_t, inv: float32x4_t, lo: float32x4_t, hi: float32x4_t) -> float32x4_t {
+    vminq_f32(vmaxq_f32(vrndnq_f32(vmulq_f32(x, inv)), lo), hi)
+}
+
+/// SAFETY: plain NEON. Returns the vector-loop element count.
+#[target_feature(enable = "neon")]
+unsafe fn q_row_i8(src: &[f32], dst: &mut [i8], inv: f32, lo: f32, hi: f32) -> usize {
+    let (vinv, vlo, vhi) = (vdupq_n_f32(inv), vdupq_n_f32(lo), vdupq_n_f32(hi));
+    let mut i = 0;
+    while i + 8 <= src.len() {
+        let c0 = q4(vld1q_f32(src.as_ptr().add(i)), vinv, vlo, vhi);
+        let c1 = q4(vld1q_f32(src.as_ptr().add(i + 4)), vinv, vlo, vhi);
+        // cvt truncates, but the operand is integral after vrndn -> exact
+        let q16 = vcombine_s16(vqmovn_s32(vcvtq_s32_f32(c0)), vqmovn_s32(vcvtq_s32_f32(c1)));
+        vst1_s8(dst.as_mut_ptr().add(i), vqmovn_s16(q16));
+        i += 8;
+    }
+    i
+}
+
+/// SAFETY: plain NEON.
+#[target_feature(enable = "neon")]
+unsafe fn q_row_i16(src: &[f32], dst: &mut [i16], inv: f32, lo: f32, hi: f32) -> usize {
+    let (vinv, vlo, vhi) = (vdupq_n_f32(inv), vdupq_n_f32(lo), vdupq_n_f32(hi));
+    let mut i = 0;
+    while i + 8 <= src.len() {
+        let c0 = q4(vld1q_f32(src.as_ptr().add(i)), vinv, vlo, vhi);
+        let c1 = q4(vld1q_f32(src.as_ptr().add(i + 4)), vinv, vlo, vhi);
+        let q16 = vcombine_s16(vqmovn_s32(vcvtq_s32_f32(c0)), vqmovn_s32(vcvtq_s32_f32(c1)));
+        vst1q_s16(dst.as_mut_ptr().add(i), q16);
+        i += 8;
+    }
+    i
+}
+
+/// SAFETY: plain NEON.
+#[target_feature(enable = "neon")]
+unsafe fn q_row_i32(src: &[f32], dst: &mut [i32], inv: f32, lo: f32, hi: f32) -> usize {
+    let (vinv, vlo, vhi) = (vdupq_n_f32(inv), vdupq_n_f32(lo), vdupq_n_f32(hi));
+    let mut i = 0;
+    while i + 4 <= src.len() {
+        let c = q4(vld1q_f32(src.as_ptr().add(i)), vinv, vlo, vhi);
+        vst1q_s32(dst.as_mut_ptr().add(i), vcvtq_s32_f32(c));
+        i += 4;
+    }
+    i
+}
+
+/// SAFETY: plain NEON.
+#[target_feature(enable = "neon")]
+unsafe fn qd_row(row: &mut [f32], inv: f32, step: f32, lo: f32, hi: f32) -> usize {
+    let (vinv, vlo, vhi) = (vdupq_n_f32(inv), vdupq_n_f32(lo), vdupq_n_f32(hi));
+    let vstep = vdupq_n_f32(step);
+    let mut i = 0;
+    while i + 4 <= row.len() {
+        let c = q4(vld1q_f32(row.as_ptr().add(i)), vinv, vlo, vhi);
+        vst1q_f32(row.as_mut_ptr().add(i), vmulq_f32(c, vstep));
+        i += 4;
+    }
+    i
+}

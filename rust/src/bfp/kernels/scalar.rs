@@ -1,0 +1,65 @@
+//! Scalar reference kernels: the portable implementations every SIMD
+//! variant must match bit-for-bit.
+//!
+//! These bodies are the *definition* of the kernel contract — they are
+//! exactly the loops the pre-SIMD code ran, so `HBFP_SIMD=off` reproduces
+//! the historical results and the differential tests in
+//! [`super::tests`] compare every vector path against these.
+
+use super::Accum;
+use crate::bfp::quant::{exp2i, quantize_value, Rounding};
+use crate::bfp::tensor::MantissaElem;
+
+/// `acc[c] += Σ_dk arow[dk] * panel[dk*nr + c]` for `c in 0..nr`.
+///
+/// `panel` is one k-major packed panel (at least `arow.len() * nr`
+/// elements; trailing padded rows are ignored because the loop is bounded
+/// by `arow`). The `qa == 0` skip is a pure speed branch: skipped rows
+/// contribute zero to every lane.
+pub fn mac_panel<EA: MantissaElem, EB: MantissaElem, A: Accum>(
+    arow: &[EA],
+    panel: &[EB],
+    nr: usize,
+    acc: &mut [A],
+) {
+    debug_assert!(acc.len() == nr);
+    debug_assert!(panel.len() >= arow.len() * nr);
+    for (dk, &qa) in arow.iter().enumerate() {
+        if qa.to_i32() == 0 {
+            continue;
+        }
+        let prow = &panel[dk * nr..(dk + 1) * nr];
+        for (aj, &qb) in acc.iter_mut().zip(prow) {
+            aj.mac(qa, qb);
+        }
+    }
+}
+
+/// Max |x| over a row, 0.0 for an empty row — the inner reduction of
+/// the shared-exponent selection.
+pub fn row_amax(xs: &[f32]) -> f32 {
+    xs.iter().fold(0.0f32, |m, &x| m.max(x.abs()))
+}
+
+/// Round-to-nearest-even quantization of one row onto the grid
+/// `step = 2^(e - (m-1))`, storing packed mantissas. Identical per
+/// element to [`quantize_value`] with [`Rounding::NearestEven`].
+pub fn quantize_row_rne<E: MantissaElem>(src: &[f32], dst: &mut [E], e: i32, mantissa_bits: u32) {
+    debug_assert_eq!(src.len(), dst.len());
+    let mut r = Rounding::NearestEven;
+    for (d, &x) in dst.iter_mut().zip(src) {
+        *d = E::from_i32(quantize_value(x, e, mantissa_bits, &mut r));
+    }
+}
+
+/// In-place round-to-nearest-even quantize + dequantize of one row (the
+/// FP→BFP→FP converter boundary used by the trainer's input conversion).
+pub fn quantize_dequant_row_rne(row: &mut [f32], e: i32, mantissa_bits: u32) {
+    let m = mantissa_bits as i32;
+    let step = exp2i(e - (m - 1));
+    let mut r = Rounding::NearestEven;
+    for x in row.iter_mut() {
+        let q = quantize_value(*x, e, mantissa_bits, &mut r);
+        *x = q as f32 * step;
+    }
+}

@@ -1,0 +1,486 @@
+//! x86_64 SSE4.1 / AVX2 kernels for the packed-panel MAC loops and the
+//! FP→BFP converter.
+//!
+//! Every function here is bit-identical to its `super::scalar`
+//! counterpart for finite inputs (the quantizer contract — `frexp_exp`
+//! debug-asserts finiteness):
+//!
+//! - **Integer panel MACs** are exact: the per-lane sums are the same
+//!   integers the scalar loop produces (addition of exact products is
+//!   associative), and the overflow bound that licenses an `i32`
+//!   accumulator bounds every vector partial the same way it bounds the
+//!   scalar ones.
+//! - **Mantissa scaling** multiplies by the exact reciprocal of the
+//!   power-of-two step instead of dividing; IEEE-754 makes both the
+//!   correctly-rounded result of the same exact quotient, so the bits
+//!   agree. `roundps` with `_MM_FROUND_TO_NEAREST_INT` is exactly
+//!   `f32::round_ties_even`, `min/max` reproduce `clamp` for finite
+//!   operands, and `cvtps2dq` of an already-integral float is exact.
+//! - **Max-magnitude reduction** is a tree of `maxps` — max is
+//!   associative/commutative over finite floats, so the lane order does
+//!   not change the result.
+//!
+//! The leaf kernels are `unsafe fn` + `#[target_feature]`; the safe
+//! wrappers in this module downcast the generic element types and return
+//! `false` when no vector kernel applies (mixed-width operand pairs, the
+//! i8-with-i64-accumulator corner), which routes the caller back to the
+//! scalar reference. Callers (the [`super`] dispatcher) must only pass
+//! ISAs the running CPU supports.
+
+#![allow(unsafe_op_in_unsafe_fn)]
+
+use core::arch::x86_64::*;
+
+use super::{grid, scalar, Accum};
+use crate::bfp::tensor::MantissaElem;
+
+// ---------------------------------------------------------------------------
+// Panel MAC wrappers
+// ---------------------------------------------------------------------------
+
+/// SSE4.1 panel MAC: `acc[c] += Σ_dk arow[dk] * panel[dk*nr + c]`.
+/// Returns false (untouched `acc`) when no vector kernel matches the
+/// element/accumulator combination.
+///
+/// Caller contract: the running CPU supports SSE4.1.
+pub fn mac_panel_sse41<EA: MantissaElem, EB: MantissaElem, A: Accum>(
+    arow: &[EA],
+    panel: &[EB],
+    nr: usize,
+    acc: &mut [A],
+) -> bool {
+    debug_assert!(acc.len() == nr && panel.len() >= arow.len() * nr);
+    if nr % 4 != 0 {
+        return false;
+    }
+    if let (Some(a), Some(p)) = (EA::as_i8s(arow), EB::as_i8s(panel)) {
+        if let Some(acc32) = A::as_i32s(&mut *acc) {
+            unsafe { mac_i8_i32_sse41(a, p, nr, acc32) };
+            return true;
+        }
+        return false; // i8 x i8 with i64 acc: only at tile_k >= 2^17; scalar
+    }
+    if let (Some(a), Some(p)) = (EA::as_i16s(arow), EB::as_i16s(panel)) {
+        if let Some(acc32) = A::as_i32s(&mut *acc) {
+            unsafe { mac_i16_i32_sse41(a, p, nr, acc32) };
+            return true;
+        }
+        if let Some(acc64) = A::as_i64s(&mut *acc) {
+            unsafe { mac_i16_i64_sse41(a, p, nr, acc64) };
+            return true;
+        }
+    }
+    false
+}
+
+/// AVX2 panel MAC; same contract as [`mac_panel_sse41`].
+///
+/// Caller contract: the running CPU supports AVX2.
+pub fn mac_panel_avx2<EA: MantissaElem, EB: MantissaElem, A: Accum>(
+    arow: &[EA],
+    panel: &[EB],
+    nr: usize,
+    acc: &mut [A],
+) -> bool {
+    debug_assert!(acc.len() == nr && panel.len() >= arow.len() * nr);
+    if nr % 8 != 0 {
+        return false;
+    }
+    if let (Some(a), Some(p)) = (EA::as_i8s(arow), EB::as_i8s(panel)) {
+        if let Some(acc32) = A::as_i32s(&mut *acc) {
+            unsafe { mac_i8_i32_avx2(a, p, nr, acc32) };
+            return true;
+        }
+        return false;
+    }
+    if let (Some(a), Some(p)) = (EA::as_i16s(arow), EB::as_i16s(panel)) {
+        if let Some(acc32) = A::as_i32s(&mut *acc) {
+            unsafe { mac_i16_i32_avx2(a, p, nr, acc32) };
+            return true;
+        }
+        if let Some(acc64) = A::as_i64s(&mut *acc) {
+            unsafe { mac_i16_i64_avx2(a, p, nr, acc64) };
+            return true;
+        }
+    }
+    false
+}
+
+// ---------------------------------------------------------------------------
+// Panel MAC leaves. Layout reminder: `panel[dk * nr + c]`, lanes = output
+// columns, so the A element broadcasts and there is no cross-lane math.
+// ---------------------------------------------------------------------------
+
+/// SAFETY: requires SSE4.1; `nr % 4 == 0`, `acc.len() == nr`,
+/// `panel.len() >= arow.len() * nr` (debug-asserted by the wrappers).
+#[target_feature(enable = "sse4.1")]
+unsafe fn mac_i8_i32_sse41(arow: &[i8], panel: &[i8], nr: usize, acc: &mut [i32]) {
+    for c0 in (0..nr).step_by(4) {
+        let mut accv = _mm_loadu_si128(acc.as_ptr().add(c0) as *const __m128i);
+        for (dk, &qa) in arow.iter().enumerate() {
+            if qa == 0 {
+                continue;
+            }
+            let av = _mm_set1_epi32(qa as i32);
+            // 4 i8 lanes: one unaligned 4-byte read into lane 0
+            let w = (panel.as_ptr().add(dk * nr + c0) as *const i32).read_unaligned();
+            let bv = _mm_cvtepi8_epi32(_mm_cvtsi32_si128(w));
+            accv = _mm_add_epi32(accv, _mm_mullo_epi32(av, bv));
+        }
+        _mm_storeu_si128(acc.as_mut_ptr().add(c0) as *mut __m128i, accv);
+    }
+}
+
+/// SAFETY: as [`mac_i8_i32_sse41`].
+#[target_feature(enable = "sse4.1")]
+unsafe fn mac_i16_i32_sse41(arow: &[i16], panel: &[i16], nr: usize, acc: &mut [i32]) {
+    for c0 in (0..nr).step_by(4) {
+        let mut accv = _mm_loadu_si128(acc.as_ptr().add(c0) as *const __m128i);
+        for (dk, &qa) in arow.iter().enumerate() {
+            if qa == 0 {
+                continue;
+            }
+            let av = _mm_set1_epi32(qa as i32);
+            let b4 = _mm_loadl_epi64(panel.as_ptr().add(dk * nr + c0) as *const __m128i);
+            let bv = _mm_cvtepi16_epi32(b4);
+            // i16 x i16 fits i32, so mullo is the exact product
+            accv = _mm_add_epi32(accv, _mm_mullo_epi32(av, bv));
+        }
+        _mm_storeu_si128(acc.as_mut_ptr().add(c0) as *mut __m128i, accv);
+    }
+}
+
+/// SAFETY: as [`mac_i8_i32_sse41`] (2 i64 lanes per step; `nr % 4 == 0`
+/// implies `nr % 2 == 0`).
+#[target_feature(enable = "sse4.1")]
+unsafe fn mac_i16_i64_sse41(arow: &[i16], panel: &[i16], nr: usize, acc: &mut [i64]) {
+    for c0 in (0..nr).step_by(2) {
+        let mut accv = _mm_loadu_si128(acc.as_ptr().add(c0) as *const __m128i);
+        for (dk, &qa) in arow.iter().enumerate() {
+            if qa == 0 {
+                continue;
+            }
+            let av = _mm_set1_epi32(qa as i32);
+            // 2 i16 lanes: 4-byte read; upper lanes zero -> zero products
+            let w = (panel.as_ptr().add(dk * nr + c0) as *const i32).read_unaligned();
+            let bv = _mm_cvtepi16_epi32(_mm_cvtsi32_si128(w));
+            let prod = _mm_mullo_epi32(av, bv); // exact: i16*i16 fits i32
+            accv = _mm_add_epi64(accv, _mm_cvtepi32_epi64(prod));
+        }
+        _mm_storeu_si128(acc.as_mut_ptr().add(c0) as *mut __m128i, accv);
+    }
+}
+
+/// SAFETY: requires AVX2; `nr % 8 == 0`, `acc.len() == nr`,
+/// `panel.len() >= arow.len() * nr`.
+#[target_feature(enable = "avx2")]
+unsafe fn mac_i8_i32_avx2(arow: &[i8], panel: &[i8], nr: usize, acc: &mut [i32]) {
+    for c0 in (0..nr).step_by(8) {
+        let mut accv = _mm256_loadu_si256(acc.as_ptr().add(c0) as *const __m256i);
+        for (dk, &qa) in arow.iter().enumerate() {
+            if qa == 0 {
+                continue;
+            }
+            let av = _mm256_set1_epi32(qa as i32);
+            let b8 = _mm_loadl_epi64(panel.as_ptr().add(dk * nr + c0) as *const __m128i);
+            let bv = _mm256_cvtepi8_epi32(b8);
+            accv = _mm256_add_epi32(accv, _mm256_mullo_epi32(av, bv));
+        }
+        _mm256_storeu_si256(acc.as_mut_ptr().add(c0) as *mut __m256i, accv);
+    }
+}
+
+/// SAFETY: as [`mac_i8_i32_avx2`].
+#[target_feature(enable = "avx2")]
+unsafe fn mac_i16_i32_avx2(arow: &[i16], panel: &[i16], nr: usize, acc: &mut [i32]) {
+    for c0 in (0..nr).step_by(8) {
+        let mut accv = _mm256_loadu_si256(acc.as_ptr().add(c0) as *const __m256i);
+        for (dk, &qa) in arow.iter().enumerate() {
+            if qa == 0 {
+                continue;
+            }
+            let av = _mm256_set1_epi32(qa as i32);
+            let b8 = _mm_loadu_si128(panel.as_ptr().add(dk * nr + c0) as *const __m128i);
+            let bv = _mm256_cvtepi16_epi32(b8);
+            accv = _mm256_add_epi32(accv, _mm256_mullo_epi32(av, bv));
+        }
+        _mm256_storeu_si256(acc.as_mut_ptr().add(c0) as *mut __m256i, accv);
+    }
+}
+
+/// SAFETY: as [`mac_i8_i32_avx2`] (4 i64 lanes per step).
+#[target_feature(enable = "avx2")]
+unsafe fn mac_i16_i64_avx2(arow: &[i16], panel: &[i16], nr: usize, acc: &mut [i64]) {
+    for c0 in (0..nr).step_by(4) {
+        let mut accv = _mm256_loadu_si256(acc.as_ptr().add(c0) as *const __m256i);
+        for (dk, &qa) in arow.iter().enumerate() {
+            if qa == 0 {
+                continue;
+            }
+            let av = _mm_set1_epi32(qa as i32);
+            let b4 = _mm_loadl_epi64(panel.as_ptr().add(dk * nr + c0) as *const __m128i);
+            let prod = _mm_mullo_epi32(av, _mm_cvtepi16_epi32(b4));
+            accv = _mm256_add_epi64(accv, _mm256_cvtepi32_epi64(prod));
+        }
+        _mm256_storeu_si256(acc.as_mut_ptr().add(c0) as *mut __m256i, accv);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// FP→BFP converter: max-magnitude reduction + nearest-even mantissa rows
+// ---------------------------------------------------------------------------
+
+/// SSE4.1 row max-magnitude. Caller contract: CPU supports SSE4.1.
+pub fn row_amax_sse41(xs: &[f32]) -> f32 {
+    unsafe { amax_sse41(xs) }
+}
+
+/// AVX2 row max-magnitude. Caller contract: CPU supports AVX2.
+pub fn row_amax_avx2(xs: &[f32]) -> f32 {
+    unsafe { amax_avx2(xs) }
+}
+
+/// SAFETY: requires SSE4.1.
+#[target_feature(enable = "sse4.1")]
+unsafe fn amax_sse41(xs: &[f32]) -> f32 {
+    let absmask = _mm_castsi128_ps(_mm_set1_epi32(0x7fff_ffff));
+    let mut m = _mm_setzero_ps();
+    let mut i = 0;
+    while i + 4 <= xs.len() {
+        let x = _mm_and_ps(_mm_loadu_ps(xs.as_ptr().add(i)), absmask);
+        m = _mm_max_ps(m, x);
+        i += 4;
+    }
+    let m2 = _mm_max_ps(m, _mm_movehl_ps(m, m));
+    let m1 = _mm_max_ss(m2, _mm_shuffle_ps::<0b01>(m2, m2));
+    let mut amax = _mm_cvtss_f32(m1);
+    for &x in &xs[i..] {
+        amax = amax.max(x.abs());
+    }
+    amax
+}
+
+/// SAFETY: requires AVX2.
+#[target_feature(enable = "avx2")]
+unsafe fn amax_avx2(xs: &[f32]) -> f32 {
+    let absmask = _mm256_castsi256_ps(_mm256_set1_epi32(0x7fff_ffff));
+    let mut m = _mm256_setzero_ps();
+    let mut i = 0;
+    while i + 8 <= xs.len() {
+        let x = _mm256_and_ps(_mm256_loadu_ps(xs.as_ptr().add(i)), absmask);
+        m = _mm256_max_ps(m, x);
+        i += 8;
+    }
+    let m4 = _mm_max_ps(_mm256_castps256_ps128(m), _mm256_extractf128_ps::<1>(m));
+    let m2 = _mm_max_ps(m4, _mm_movehl_ps(m4, m4));
+    let m1 = _mm_max_ss(m2, _mm_shuffle_ps::<0b01>(m2, m2));
+    let mut amax = _mm_cvtss_f32(m1);
+    for &x in &xs[i..] {
+        amax = amax.max(x.abs());
+    }
+    amax
+}
+
+/// SSE4.1 nearest-even row quantization into packed mantissas. Returns
+/// false when the storage class has no vector store path (never, today —
+/// i8/i16/i32 are all covered — but the signature leaves room).
+///
+/// Caller contract: CPU supports SSE4.1.
+pub fn quantize_row_rne_sse41<E: MantissaElem>(
+    src: &[f32],
+    dst: &mut [E],
+    e: i32,
+    mantissa_bits: u32,
+) -> bool {
+    debug_assert_eq!(src.len(), dst.len());
+    let (inv, _, lo, hi) = grid(e, mantissa_bits);
+    let done = if let Some(d) = E::as_i8s_mut(&mut *dst) {
+        unsafe { q_row_i8_sse41(src, d, inv, lo, hi) }
+    } else if let Some(d) = E::as_i16s_mut(&mut *dst) {
+        unsafe { q_row_i16_sse41(src, d, inv, lo, hi) }
+    } else if let Some(d) = E::as_i32s_mut(&mut *dst) {
+        unsafe { q_row_i32_sse41(src, d, inv, lo, hi) }
+    } else {
+        return false;
+    };
+    scalar::quantize_row_rne(&src[done..], &mut dst[done..], e, mantissa_bits);
+    true
+}
+
+/// AVX2 nearest-even row quantization; same contract as the SSE variant.
+///
+/// Caller contract: CPU supports AVX2.
+pub fn quantize_row_rne_avx2<E: MantissaElem>(
+    src: &[f32],
+    dst: &mut [E],
+    e: i32,
+    mantissa_bits: u32,
+) -> bool {
+    debug_assert_eq!(src.len(), dst.len());
+    let (inv, _, lo, hi) = grid(e, mantissa_bits);
+    let done = if let Some(d) = E::as_i8s_mut(&mut *dst) {
+        unsafe { q_row_i8_avx2(src, d, inv, lo, hi) }
+    } else if let Some(d) = E::as_i16s_mut(&mut *dst) {
+        unsafe { q_row_i16_avx2(src, d, inv, lo, hi) }
+    } else if let Some(d) = E::as_i32s_mut(&mut *dst) {
+        unsafe { q_row_i32_avx2(src, d, inv, lo, hi) }
+    } else {
+        return false;
+    };
+    scalar::quantize_row_rne(&src[done..], &mut dst[done..], e, mantissa_bits);
+    true
+}
+
+/// SSE4.1 in-place nearest-even quantize + dequantize of one row.
+/// Caller contract: CPU supports SSE4.1.
+pub fn quantize_dequant_row_rne_sse41(row: &mut [f32], e: i32, mantissa_bits: u32) {
+    let (inv, step, lo, hi) = grid(e, mantissa_bits);
+    let done = unsafe { qd_row_sse41(row, inv, step, lo, hi) };
+    scalar::quantize_dequant_row_rne(&mut row[done..], e, mantissa_bits);
+}
+
+/// AVX2 in-place nearest-even quantize + dequantize of one row.
+/// Caller contract: CPU supports AVX2.
+pub fn quantize_dequant_row_rne_avx2(row: &mut [f32], e: i32, mantissa_bits: u32) {
+    let (inv, step, lo, hi) = grid(e, mantissa_bits);
+    let done = unsafe { qd_row_avx2(row, inv, step, lo, hi) };
+    scalar::quantize_dequant_row_rne(&mut row[done..], e, mantissa_bits);
+}
+
+const RNE: i32 = _MM_FROUND_TO_NEAREST_INT | _MM_FROUND_NO_EXC;
+
+/// Scale, round-to-nearest-even, clamp — 4 lanes. The float result is
+/// integral and in `[lo, hi]`.
+///
+/// SAFETY: requires SSE4.1.
+#[target_feature(enable = "sse4.1")]
+unsafe fn q4(x: __m128, inv: __m128, lo: __m128, hi: __m128) -> __m128 {
+    let r = _mm_round_ps::<RNE>(_mm_mul_ps(x, inv));
+    _mm_min_ps(_mm_max_ps(r, lo), hi)
+}
+
+/// SAFETY: requires SSE4.1. Returns the number of elements written by
+/// the vector loop (a multiple of 4; the caller finishes the tail).
+#[target_feature(enable = "sse4.1")]
+unsafe fn q_row_i8_sse41(src: &[f32], dst: &mut [i8], inv: f32, lo: f32, hi: f32) -> usize {
+    let (vinv, vlo, vhi) = (_mm_set1_ps(inv), _mm_set1_ps(lo), _mm_set1_ps(hi));
+    let mut i = 0;
+    while i + 4 <= src.len() {
+        let c = q4(_mm_loadu_ps(src.as_ptr().add(i)), vinv, vlo, vhi);
+        let q = _mm_cvtps_epi32(c); // exact: c is integral, |c| <= 2^23
+        let q8 = _mm_packs_epi16(_mm_packs_epi32(q, q), _mm_setzero_si128());
+        // packs saturation is a no-op: values already clamped to the class
+        (dst.as_mut_ptr().add(i) as *mut i32).write_unaligned(_mm_cvtsi128_si32(q8));
+        i += 4;
+    }
+    i
+}
+
+/// SAFETY: requires SSE4.1.
+#[target_feature(enable = "sse4.1")]
+unsafe fn q_row_i16_sse41(src: &[f32], dst: &mut [i16], inv: f32, lo: f32, hi: f32) -> usize {
+    let (vinv, vlo, vhi) = (_mm_set1_ps(inv), _mm_set1_ps(lo), _mm_set1_ps(hi));
+    let mut i = 0;
+    while i + 4 <= src.len() {
+        let c = q4(_mm_loadu_ps(src.as_ptr().add(i)), vinv, vlo, vhi);
+        let q16 = _mm_packs_epi32(_mm_cvtps_epi32(c), _mm_setzero_si128());
+        _mm_storel_epi64(dst.as_mut_ptr().add(i) as *mut __m128i, q16);
+        i += 4;
+    }
+    i
+}
+
+/// SAFETY: requires SSE4.1.
+#[target_feature(enable = "sse4.1")]
+unsafe fn q_row_i32_sse41(src: &[f32], dst: &mut [i32], inv: f32, lo: f32, hi: f32) -> usize {
+    let (vinv, vlo, vhi) = (_mm_set1_ps(inv), _mm_set1_ps(lo), _mm_set1_ps(hi));
+    let mut i = 0;
+    while i + 4 <= src.len() {
+        let c = q4(_mm_loadu_ps(src.as_ptr().add(i)), vinv, vlo, vhi);
+        _mm_storeu_si128(dst.as_mut_ptr().add(i) as *mut __m128i, _mm_cvtps_epi32(c));
+        i += 4;
+    }
+    i
+}
+
+/// SAFETY: requires SSE4.1.
+#[target_feature(enable = "sse4.1")]
+unsafe fn qd_row_sse41(row: &mut [f32], inv: f32, step: f32, lo: f32, hi: f32) -> usize {
+    let (vinv, vlo, vhi) = (_mm_set1_ps(inv), _mm_set1_ps(lo), _mm_set1_ps(hi));
+    let vstep = _mm_set1_ps(step);
+    let mut i = 0;
+    while i + 4 <= row.len() {
+        let c = q4(_mm_loadu_ps(row.as_ptr().add(i)), vinv, vlo, vhi);
+        _mm_storeu_ps(row.as_mut_ptr().add(i), _mm_mul_ps(c, vstep));
+        i += 4;
+    }
+    i
+}
+
+/// Scale, round-to-nearest-even, clamp — 8 lanes.
+///
+/// SAFETY: requires AVX2.
+#[target_feature(enable = "avx2")]
+unsafe fn q8(x: __m256, inv: __m256, lo: __m256, hi: __m256) -> __m256 {
+    let r = _mm256_round_ps::<RNE>(_mm256_mul_ps(x, inv));
+    _mm256_min_ps(_mm256_max_ps(r, lo), hi)
+}
+
+/// SAFETY: requires AVX2. Returns the vector-loop element count
+/// (multiple of 8).
+#[target_feature(enable = "avx2")]
+unsafe fn q_row_i8_avx2(src: &[f32], dst: &mut [i8], inv: f32, lo: f32, hi: f32) -> usize {
+    let (vinv, vlo, vhi) = (_mm256_set1_ps(inv), _mm256_set1_ps(lo), _mm256_set1_ps(hi));
+    let mut i = 0;
+    while i + 8 <= src.len() {
+        let c = q8(_mm256_loadu_ps(src.as_ptr().add(i)), vinv, vlo, vhi);
+        let q = _mm256_cvtps_epi32(c);
+        let q16 = _mm_packs_epi32(_mm256_castsi256_si128(q), _mm256_extracti128_si256::<1>(q));
+        let q8v = _mm_packs_epi16(q16, q16);
+        _mm_storel_epi64(dst.as_mut_ptr().add(i) as *mut __m128i, q8v);
+        i += 8;
+    }
+    i
+}
+
+/// SAFETY: requires AVX2.
+#[target_feature(enable = "avx2")]
+unsafe fn q_row_i16_avx2(src: &[f32], dst: &mut [i16], inv: f32, lo: f32, hi: f32) -> usize {
+    let (vinv, vlo, vhi) = (_mm256_set1_ps(inv), _mm256_set1_ps(lo), _mm256_set1_ps(hi));
+    let mut i = 0;
+    while i + 8 <= src.len() {
+        let c = q8(_mm256_loadu_ps(src.as_ptr().add(i)), vinv, vlo, vhi);
+        let q = _mm256_cvtps_epi32(c);
+        let q16 = _mm_packs_epi32(_mm256_castsi256_si128(q), _mm256_extracti128_si256::<1>(q));
+        _mm_storeu_si128(dst.as_mut_ptr().add(i) as *mut __m128i, q16);
+        i += 8;
+    }
+    i
+}
+
+/// SAFETY: requires AVX2.
+#[target_feature(enable = "avx2")]
+unsafe fn q_row_i32_avx2(src: &[f32], dst: &mut [i32], inv: f32, lo: f32, hi: f32) -> usize {
+    let (vinv, vlo, vhi) = (_mm256_set1_ps(inv), _mm256_set1_ps(lo), _mm256_set1_ps(hi));
+    let mut i = 0;
+    while i + 8 <= src.len() {
+        let c = q8(_mm256_loadu_ps(src.as_ptr().add(i)), vinv, vlo, vhi);
+        _mm256_storeu_si256(dst.as_mut_ptr().add(i) as *mut __m256i, _mm256_cvtps_epi32(c));
+        i += 8;
+    }
+    i
+}
+
+/// SAFETY: requires AVX2.
+#[target_feature(enable = "avx2")]
+unsafe fn qd_row_avx2(row: &mut [f32], inv: f32, step: f32, lo: f32, hi: f32) -> usize {
+    let (vinv, vlo, vhi) = (_mm256_set1_ps(inv), _mm256_set1_ps(lo), _mm256_set1_ps(hi));
+    let vstep = _mm256_set1_ps(step);
+    let mut i = 0;
+    while i + 8 <= row.len() {
+        let c = q8(_mm256_loadu_ps(row.as_ptr().add(i)), vinv, vlo, vhi);
+        _mm256_storeu_ps(row.as_mut_ptr().add(i), _mm256_mul_ps(c, vstep));
+        i += 8;
+    }
+    i
+}

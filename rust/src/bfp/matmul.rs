@@ -25,27 +25,36 @@
 //! same order on exactly one lane, so results are bit-identical for any
 //! thread count and either dispatch backend.
 //!
-//! ## Packed-panel default path
+//! ## Packed-panel default path, SIMD kernel family
 //!
 //! The default kernels stream the B operand from its [`PackedPanels`]
 //! layout (reordered once per tensor, cached on the `BfpTensor`): per
-//! k-tile, mantissas sit k-major in [`PANEL_NR`]-wide panels, so the
-//! microkernel keeps one `[acc; PANEL_NR]` register block per output row
-//! and reads B strictly contiguously. The pre-panel row-major walk is
-//! retained as [`bfp_matmul_rowmajor`] (bench rung + differential-test
-//! partner), and [`bfp_matmul_with_backend`] exposes the scoped-spawn
-//! dispatch baseline for the pooled-vs-scoped rung. All paths are
-//! bit-for-bit equal to [`bfp_matmul_naive`].
+//! k-tile, mantissas sit k-major in panels as wide as the active SIMD
+//! family's register block ([`Isa::panel_nr`]: 8 scalar, 16 SSE4.1/NEON,
+//! 32 AVX2), so the microkernel keeps one `[acc; nr]` block per output
+//! row and reads B strictly contiguously. The inner MAC loop dispatches
+//! to the runtime-selected kernel family (`bfp::kernels`, `HBFP_SIMD`
+//! override); [`bfp_matmul_with_simd`] forces a family explicitly (the
+//! bench ladder's `simd off` rungs and the cross-ISA differential
+//! tests). The pre-panel row-major walk is retained as
+//! [`bfp_matmul_rowmajor`] (bench rung + differential-test partner,
+//! always scalar), and [`bfp_matmul_with_backend`] exposes the
+//! scoped-spawn dispatch baseline for the pooled-vs-scoped rung. All
+//! paths — every ISA included — are bit-for-bit equal to
+//! [`bfp_matmul_naive`].
 
 use anyhow::{anyhow, Result};
 
-use super::panels::{matmul_tile_edge, PackedPanels, PANEL_NR};
+use super::kernels::{self, Accum, Isa};
+use super::panels::{matmul_tile_edge, PackedPanels, MAX_PANEL_NR};
 use super::quant::{self, exp2i, Rounding, TileRounding};
 use super::tensor::{BfpTensor, MantissaElem, Mantissas, TileSize};
 use crate::util::pool::{self, ParBackend};
 use crate::util::worker_threads;
 
-/// Below this many MACs (m*k*n) the matmuls stay single-threaded.
+/// Below this many MACs (m*k*n) the matmuls stay single-threaded (scaled
+/// by the active kernel family's throughput class — see
+/// [`pool::par_threads_simd`]).
 const PAR_MIN_MACS: usize = 1 << 17;
 
 /// Largest possible |sum| of `tile_k` mantissa products at widths
@@ -61,48 +70,6 @@ pub fn max_tile_partial(tile_k: usize, ma: u32, mb: u32) -> u128 {
 /// intermediate overflow is possible either.
 pub fn acc_fits_i32(tile_k: usize, ma: u32, mb: u32) -> bool {
     max_tile_partial(tile_k.max(1), ma, mb) <= i32::MAX as u128
-}
-
-/// Integer accumulator for the tile MAC loops: `i32` when the overflow
-/// bound allows, `i64` otherwise. Both sum identical integer values.
-trait Accum: Copy + Default + Send + 'static {
-    fn mac<EA: MantissaElem, EB: MantissaElem>(&mut self, qa: EA, qb: EB);
-    fn to_f32(self) -> f32;
-    fn to_i64(self) -> i64;
-}
-
-impl Accum for i32 {
-    #[inline(always)]
-    fn mac<EA: MantissaElem, EB: MantissaElem>(&mut self, qa: EA, qb: EB) {
-        *self += qa.to_i32() * qb.to_i32();
-    }
-
-    #[inline(always)]
-    fn to_f32(self) -> f32 {
-        self as f32
-    }
-
-    #[inline(always)]
-    fn to_i64(self) -> i64 {
-        self as i64
-    }
-}
-
-impl Accum for i64 {
-    #[inline(always)]
-    fn mac<EA: MantissaElem, EB: MantissaElem>(&mut self, qa: EA, qb: EB) {
-        *self += qa.to_i32() as i64 * qb.to_i32() as i64;
-    }
-
-    #[inline(always)]
-    fn to_f32(self) -> f32 {
-        self as f32
-    }
-
-    #[inline(always)]
-    fn to_i64(self) -> i64 {
-        self
-    }
 }
 
 fn check_shapes(a: &BfpTensor, b: &BfpTensor) -> Result<()> {
@@ -144,6 +111,34 @@ pub fn bfp_matmul_with_backend(
     max_threads: usize,
     backend: ParBackend,
 ) -> Result<Vec<f32>> {
+    bfp_matmul_full(a, b, max_threads, backend, kernels::active())
+}
+
+/// [`bfp_matmul`] with an explicitly forced SIMD kernel family: packs
+/// (or re-packs) B's panels at that family's width and runs its MAC
+/// kernels. Bit-identical to every other family — this exists for the
+/// bench ladder's `simd off` rungs and the cross-ISA differential tests.
+/// The request is clamped to what the CPU supports
+/// ([`Isa::clamped`]), so any `Isa` value is safe.
+pub fn bfp_matmul_with_simd(
+    a: &BfpTensor,
+    b: &BfpTensor,
+    max_threads: usize,
+    isa: Isa,
+) -> Result<Vec<f32>> {
+    bfp_matmul_full(a, b, max_threads, ParBackend::Pooled, isa.clamped())
+}
+
+/// Shared matmul body. `isa` must already be executable on this CPU
+/// (`kernels::active()` or an `Isa::clamped()` result) — the microkernel
+/// uses the preclamped dispatch.
+fn bfp_matmul_full(
+    a: &BfpTensor,
+    b: &BfpTensor,
+    max_threads: usize,
+    backend: ParBackend,
+    isa: Isa,
+) -> Result<Vec<f32>> {
     check_shapes(a, b)?;
     let (m, k, n) = (a.rows, a.cols, b.cols);
     let mut out = vec![0.0f32; m * n];
@@ -152,15 +147,18 @@ pub fn bfp_matmul_with_backend(
     }
     let t = matmul_tile_edge(a.tile, k);
     let bands = m.div_ceil(t);
-    let threads = pool::par_threads(m * k * n, PAR_MIN_MACS, max_threads, bands);
-    let pp = b.packed_panels();
+    let threads =
+        pool::par_threads_simd(m * k * n, PAR_MIN_MACS, isa.par_floor_scale(), max_threads, bands);
+    let pp = b.packed_panels_nr(isa.panel_nr());
     match &a.mantissas {
-        Mantissas::I8(av) => packed_dispatch_b::<i8>(av, a, b, &pp, &mut out, t, threads, backend),
+        Mantissas::I8(av) => {
+            packed_dispatch_b::<i8>(av, a, b, &pp, &mut out, t, threads, backend, isa)
+        }
         Mantissas::I16(av) => {
-            packed_dispatch_b::<i16>(av, a, b, &pp, &mut out, t, threads, backend)
+            packed_dispatch_b::<i16>(av, a, b, &pp, &mut out, t, threads, backend, isa)
         }
         Mantissas::I32(av) => {
-            packed_dispatch_b::<i32>(av, a, b, &pp, &mut out, t, threads, backend)
+            packed_dispatch_b::<i32>(av, a, b, &pp, &mut out, t, threads, backend, isa)
         }
     }
     Ok(out)
@@ -176,11 +174,12 @@ fn packed_dispatch_b<EA: MantissaElem>(
     t: usize,
     threads: usize,
     backend: ParBackend,
+    isa: Isa,
 ) {
     match &pp.data {
-        Mantissas::I8(pv) => packed_bands(av, pv, a, b, pp, out, t, threads, backend),
-        Mantissas::I16(pv) => packed_bands(av, pv, a, b, pp, out, t, threads, backend),
-        Mantissas::I32(pv) => packed_bands(av, pv, a, b, pp, out, t, threads, backend),
+        Mantissas::I8(pv) => packed_bands(av, pv, a, b, pp, out, t, threads, backend, isa),
+        Mantissas::I16(pv) => packed_bands(av, pv, a, b, pp, out, t, threads, backend, isa),
+        Mantissas::I32(pv) => packed_bands(av, pv, a, b, pp, out, t, threads, backend, isa),
     }
 }
 
@@ -195,6 +194,7 @@ fn packed_bands<EA: MantissaElem, EB: MantissaElem>(
     t: usize,
     threads: usize,
     backend: ParBackend,
+    isa: Isa,
 ) {
     let n = b.cols;
     let jobs: Vec<(usize, &mut [f32])> = out.chunks_mut(t * n).enumerate().collect();
@@ -202,7 +202,7 @@ fn packed_bands<EA: MantissaElem, EB: MantissaElem>(
         let i0 = band * t;
         let i1 = (i0 + t).min(a.rows);
         let a_exp = |r: usize, c: usize| a.exponent_at(r, c);
-        band_matmul_packed(av, 0, &a_exp, a.mantissa_bits, pv, pp, b, band_out, i0, i1, t);
+        band_matmul_packed(av, 0, &a_exp, a.mantissa_bits, pv, pp, b, band_out, i0, i1, t, isa);
     });
 }
 
@@ -407,7 +407,8 @@ fn debug_assert_tile_bound<A: Accum>(acc: &[A], tile_k: usize, ma: u32, mb: u32)
 /// Compute output rows `i0..i1` against the packed B panels. Same
 /// contract as [`band_matmul`] (same k order, same per-tile flush order,
 /// hence bit-identical results), but B streams contiguously panel by
-/// panel and each output row keeps a `[acc; PANEL_NR]` register block.
+/// panel and each output row keeps a `[acc; nr]` register block, with
+/// the inner MAC loop dispatched to the `isa` kernel family.
 #[allow(clippy::too_many_arguments)]
 fn band_matmul_packed<EA: MantissaElem, EB: MantissaElem, FA: Fn(usize, usize) -> i32>(
     av: &[EA],
@@ -421,9 +422,12 @@ fn band_matmul_packed<EA: MantissaElem, EB: MantissaElem, FA: Fn(usize, usize) -
     i0: usize,
     i1: usize,
     t: usize,
+    isa: Isa,
 ) {
     debug_assert_eq!(pp.t, t, "panel layout built for a different tile edge");
     debug_assert_eq!(pp.data.len(), pv.len());
+    let nr = pp.nr;
+    debug_assert!(nr <= MAX_PANEL_NR);
     let k = b.rows;
     let n = b.cols;
     let ma = ma_bits as i32;
@@ -435,7 +439,7 @@ fn band_matmul_packed<EA: MantissaElem, EB: MantissaElem, FA: Fn(usize, usize) -
     let tile_k = t.min(k).max(1);
     let use_i32 = acc_fits_i32(tile_k, ma_bits, b.mantissa_bits);
     let arow0 = i0 - a_row0;
-    let panel_elems = pp.tk * PANEL_NR;
+    let panel_elems = pp.tk * nr;
     for jt in 0..pp.tiles_j {
         let j0 = jt * t;
         let j1 = (j0 + t).min(n);
@@ -449,17 +453,17 @@ fn band_matmul_packed<EA: MantissaElem, EB: MantissaElem, FA: Fn(usize, usize) -
             let mut p = 0;
             let mut c0 = j0;
             while c0 < j1 {
-                let c1 = (c0 + PANEL_NR).min(j1);
+                let c1 = (c0 + nr).min(j1);
                 let panel = &pv[tile_base + p * panel_elems..tile_base + (p + 1) * panel_elems];
                 if use_i32 {
                     panel_mac_rows::<EA, EB, i32>(
                         av, panel, arow0, ti, k, k0, k1, band_out, n, c0, c1, scale, tile_k,
-                        ma_bits, b.mantissa_bits,
+                        ma_bits, b.mantissa_bits, nr, isa,
                     );
                 } else {
                     panel_mac_rows::<EA, EB, i64>(
                         av, panel, arow0, ti, k, k0, k1, band_out, n, c0, c1, scale, tile_k,
-                        ma_bits, b.mantissa_bits,
+                        ma_bits, b.mantissa_bits, nr, isa,
                     );
                 }
                 c0 = c1;
@@ -470,11 +474,12 @@ fn band_matmul_packed<EA: MantissaElem, EB: MantissaElem, FA: Fn(usize, usize) -
 }
 
 /// Register-blocked microkernel: for each of `ti` output rows, stream one
-/// packed panel (k-major, [`PANEL_NR`] wide) through a `[acc; PANEL_NR]`
-/// block, then scale the block into the f32 band accumulator. Padding
-/// columns hold zero mantissas (every product 0), so only the `c0..c1`
-/// lanes are flushed and the integer partials equal the row-major walk's
-/// exactly.
+/// packed panel (k-major, `nr` wide) through an `nr`-lane accumulator
+/// block via the `isa` family's MAC kernel ([`kernels::mac_panel`]),
+/// then scale the block into the f32 band accumulator. Padding columns
+/// hold zero mantissas (every product 0), so only the `c0..c1` lanes are
+/// flushed and the integer partials equal the row-major walk's exactly —
+/// the flush stays scalar and in element order on every ISA.
 #[allow(clippy::too_many_arguments)]
 #[inline]
 fn panel_mac_rows<EA: MantissaElem, EB: MantissaElem, A: Accum>(
@@ -493,21 +498,19 @@ fn panel_mac_rows<EA: MantissaElem, EB: MantissaElem, A: Accum>(
     tile_k: usize,
     ma_bits: u32,
     mb_bits: u32,
+    nr: usize,
+    isa: Isa,
 ) {
     let tj = c1 - c0;
+    // one fixed-capacity block, re-zeroed per row over only the `nr`
+    // lanes actually in use (the scalar family pays for 8, not 32)
+    let mut acc = [A::default(); MAX_PANEL_NR];
     for li in 0..ti {
         let ar = arow0 + li;
         let arow = &av[ar * k + k0..ar * k + k1];
-        let mut acc = [A::default(); PANEL_NR];
-        for (dk, &qa) in arow.iter().enumerate() {
-            if qa.to_i32() == 0 {
-                continue;
-            }
-            let prow = &panel[dk * PANEL_NR..(dk + 1) * PANEL_NR];
-            for (aj, &qb) in acc.iter_mut().zip(prow) {
-                aj.mac(qa, qb);
-            }
-        }
+        let lanes = &mut acc[..nr];
+        lanes.fill(A::default());
+        kernels::mac_panel_preclamped(isa, arow, panel, nr, lanes);
         debug_assert_tile_bound(&acc[..tj], tile_k, ma_bits, mb_bits);
         let orow = &mut band_out[li * n + c0..li * n + c1];
         for (o, aj) in orow.iter_mut().zip(&acc[..tj]) {
@@ -652,12 +655,20 @@ pub fn quantize_matmul_with_threads(
     }
     let (th, _) = b.tile.edge_or(m, k);
     let bands = m.div_ceil(th).max(1);
-    let threads = pool::par_threads(m * k * n, PAR_MIN_MACS, max_threads, bands);
-    let pp = b.packed_panels();
+    let isa = kernels::active();
+    let threads =
+        pool::par_threads_simd(m * k * n, PAR_MIN_MACS, isa.par_floor_scale(), max_threads, bands);
+    let pp = b.packed_panels_nr(isa.panel_nr());
     match Mantissas::for_width(a_bits, 0) {
-        Mantissas::I8(_) => fused_dispatch_b::<i8>(a, b, &pp, &mut out, m, a_bits, mode, threads),
-        Mantissas::I16(_) => fused_dispatch_b::<i16>(a, b, &pp, &mut out, m, a_bits, mode, threads),
-        Mantissas::I32(_) => fused_dispatch_b::<i32>(a, b, &pp, &mut out, m, a_bits, mode, threads),
+        Mantissas::I8(_) => {
+            fused_dispatch_b::<i8>(a, b, &pp, &mut out, m, a_bits, mode, threads, isa)
+        }
+        Mantissas::I16(_) => {
+            fused_dispatch_b::<i16>(a, b, &pp, &mut out, m, a_bits, mode, threads, isa)
+        }
+        Mantissas::I32(_) => {
+            fused_dispatch_b::<i32>(a, b, &pp, &mut out, m, a_bits, mode, threads, isa)
+        }
     }
     Ok(out)
 }
@@ -672,11 +683,18 @@ fn fused_dispatch_b<EA: MantissaElem>(
     a_bits: u32,
     mode: TileRounding,
     threads: usize,
+    isa: Isa,
 ) {
     match &pp.data {
-        Mantissas::I8(pv) => fused_bands::<EA, i8>(a, pv, pp, b, out, m, a_bits, mode, threads),
-        Mantissas::I16(pv) => fused_bands::<EA, i16>(a, pv, pp, b, out, m, a_bits, mode, threads),
-        Mantissas::I32(pv) => fused_bands::<EA, i32>(a, pv, pp, b, out, m, a_bits, mode, threads),
+        Mantissas::I8(pv) => {
+            fused_bands::<EA, i8>(a, pv, pp, b, out, m, a_bits, mode, threads, isa)
+        }
+        Mantissas::I16(pv) => {
+            fused_bands::<EA, i16>(a, pv, pp, b, out, m, a_bits, mode, threads, isa)
+        }
+        Mantissas::I32(pv) => {
+            fused_bands::<EA, i32>(a, pv, pp, b, out, m, a_bits, mode, threads, isa)
+        }
     }
 }
 
@@ -691,6 +709,7 @@ fn fused_bands<EA: MantissaElem, EB: MantissaElem>(
     a_bits: u32,
     mode: TileRounding,
     threads: usize,
+    isa: Isa,
 ) {
     let k = b.rows;
     let n = b.cols;
@@ -703,7 +722,9 @@ fn fused_bands<EA: MantissaElem, EB: MantissaElem>(
         let i1 = (i0 + th).min(m);
         let band_rows = i1 - i0;
         // Per-band converter: quantize this band's A tiles into packed
-        // scratch (the only A-mantissa storage that ever exists).
+        // scratch (the only A-mantissa storage that ever exists). RNE
+        // rows vectorize; stochastic rows stay scalar in element order
+        // so the per-tile RNG draws are ISA-independent.
         let mut scratch: Vec<EA> = vec![EA::from_i32(0); band_rows * k];
         let mut band_exps = vec![0i32; tiles_c];
         for tc in 0..tiles_c {
@@ -711,13 +732,24 @@ fn fused_bands<EA: MantissaElem, EB: MantissaElem>(
             let c1 = (c0 + tw).min(k);
             let e = quant::block_exponent_strided(a, k, i0, i1, c0, c1);
             band_exps[tc] = e;
-            let mut owned = mode.for_tile((band * tiles_c + tc) as u64);
-            let mut rounding = owned.as_rounding();
-            for r in i0..i1 {
-                let src = &a[r * k + c0..r * k + c1];
-                let dst = &mut scratch[(r - i0) * k + c0..(r - i0) * k + c1];
-                for (d, &x) in dst.iter_mut().zip(src) {
-                    *d = EA::from_i32(quant::quantize_value(x, e, a_bits, &mut rounding));
+            match mode {
+                TileRounding::NearestEven => {
+                    for r in i0..i1 {
+                        let src = &a[r * k + c0..r * k + c1];
+                        let dst = &mut scratch[(r - i0) * k + c0..(r - i0) * k + c1];
+                        kernels::quantize_row_rne_preclamped(isa, src, dst, e, a_bits);
+                    }
+                }
+                TileRounding::StochasticBase(_) => {
+                    let mut owned = mode.for_tile((band * tiles_c + tc) as u64);
+                    let mut rounding = owned.as_rounding();
+                    for r in i0..i1 {
+                        let src = &a[r * k + c0..r * k + c1];
+                        let dst = &mut scratch[(r - i0) * k + c0..(r - i0) * k + c1];
+                        for (d, &x) in dst.iter_mut().zip(src) {
+                            *d = EA::from_i32(quant::quantize_value(x, e, a_bits, &mut rounding));
+                        }
+                    }
                 }
             }
         }
@@ -733,6 +765,7 @@ fn fused_bands<EA: MantissaElem, EB: MantissaElem>(
             i0,
             i1,
             t_mm,
+            isa,
         );
     });
 }

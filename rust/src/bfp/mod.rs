@@ -6,29 +6,35 @@
 //! - [`quant`]: shared-exponent selection, RNE + stochastic rounding
 //!   (Xorshift32, §5.3), value-level quantize/dequantize, per-tile
 //!   substream derivation for the parallel converters.
+//! - [`kernels`]: the runtime-dispatched SIMD kernel family (scalar /
+//!   SSE4.1 / AVX2 / NEON, `HBFP_SIMD` override) behind the panel MACs
+//!   and the FP→BFP converter — every family bit-identical to scalar.
 //! - [`tensor`]: tiled BFP tensor storage with width-packed mantissas
 //!   (`i8`/`i16`/`i32` by mantissa class), wide weight storage (§4.2),
 //!   and the cached packed-panel weight layout.
 //! - [`panels`]: the once-per-tensor B-operand relayout (k-tile-major,
-//!   register-width panels) the GEMM microkernel streams.
+//!   panels at the kernel family's register width) the GEMM microkernel
+//!   streams.
 //! - [`matmul`]: packed, pool-parallel integer-MAC matmul with FP32 tile
 //!   accumulation (Eq. 2), accumulator width chosen by a proven overflow
 //!   bound, a register-blocked packed-panel microkernel, plus the fused
 //!   FP→BFP-convert + matmul hot path.
 
+pub mod kernels;
 pub mod matmul;
 pub mod panels;
 pub mod quant;
 pub mod stats;
 pub mod tensor;
 
+pub use kernels::Isa;
 pub use matmul::{
     acc_fits_i32, bfp_matmul, bfp_matmul_naive, bfp_matmul_rowmajor,
-    bfp_matmul_rowmajor_with_threads, bfp_matmul_with_backend, bfp_matmul_with_threads,
-    fp32_matmul, hbfp_matmul_f32, max_tile_partial, quantize_matmul,
+    bfp_matmul_rowmajor_with_threads, bfp_matmul_with_backend, bfp_matmul_with_simd,
+    bfp_matmul_with_threads, fp32_matmul, hbfp_matmul_f32, max_tile_partial, quantize_matmul,
     quantize_matmul_with_threads,
 };
-pub use panels::{pack_panels, PackedPanels, PANEL_NR};
+pub use panels::{pack_panels, PackedPanels, MAX_PANEL_NR, PANEL_NR};
 pub use quant::{
     block_exponent, dequantize_value, exp2i, quantize_value, Rounding, TileRounding, E_MAX, E_MIN,
 };

@@ -10,28 +10,40 @@
 //! register-block-width panels, then let every training step's GEMM
 //! stream them contiguously.
 //!
-//! Layout (matching the matmul loop order `jt` outer, `kt` inner):
+//! Layout (matching the matmul loop order `jt` outer, `kt` inner), for a
+//! panel width `nr`:
 //!
 //! ```text
-//! for each j-tile jt, k-tile kt:              # one shared exponent pair
-//!   for each panel p (PANEL_NR columns wide): # one accumulator block
-//!     for dk in 0..tk:                        # contraction, contiguous
-//!       NR mantissas of row k0+dk, cols c0..c0+NR   (zero-padded)
+//! for each j-tile jt, k-tile kt:          # one shared exponent pair
+//!   for each panel p (nr columns wide):   # one accumulator block
+//!     for dk in 0..tk:                    # contraction, contiguous
+//!       nr mantissas of row k0+dk, cols c0..c0+nr   (zero-padded)
 //! ```
 //!
-//! Tiles and panels are padded to uniform size (`tk` x `panels_per_tile *
-//! PANEL_NR`) so offsets are pure arithmetic; padding is zero mantissas,
-//! which contribute nothing to any integer partial, so the packed kernel
-//! is bit-identical to the row-major walk. The width class of the source
-//! storage (`i8`/`i16`/`i32`) is preserved — packing never widens the
-//! bytes the MAC loop streams.
+//! The panel width is the **register-block width of the kernel family
+//! that streams it** ([`crate::bfp::kernels::Isa::panel_nr`]): 8 for the
+//! scalar reference ([`PANEL_NR`]), 16 for 128-bit units (SSE4.1/NEON),
+//! 32 for AVX2 — chosen at pack time and recorded in
+//! [`PackedPanels::nr`], never larger than [`MAX_PANEL_NR`]. Tiles and
+//! panels are padded to uniform size (`tk` x `panels_per_tile * nr`) so
+//! offsets are pure arithmetic; padding is zero mantissas, which
+//! contribute nothing to any integer partial, so the packed kernel is
+//! bit-identical to the row-major walk at **any** panel width. The width
+//! class of the source storage (`i8`/`i16`/`i32`) is preserved — packing
+//! never widens the bytes the MAC loop streams.
 
 use super::tensor::{BfpTensor, MantissaElem, Mantissas, TileSize};
 
-/// Panel register width: columns per microkernel accumulator block. The
-/// matmul keeps one `[acc; PANEL_NR]` block in registers per output row
-/// while streaming a panel.
+/// Scalar panel width: columns per accumulator block of the scalar
+/// reference microkernel (the pre-SIMD layout, and the `HBFP_SIMD=off`
+/// layout). Vector families pack wider — see
+/// [`crate::bfp::kernels::Isa::panel_nr`].
 pub const PANEL_NR: usize = 8;
+
+/// Upper bound on any family's panel width: the microkernel's
+/// accumulator block is a fixed `[acc; MAX_PANEL_NR]` array sliced to
+/// the actual width.
+pub const MAX_PANEL_NR: usize = 32;
 
 /// Tile edge the matmul's band/tile loops use when this tensor is the B
 /// operand (`TileSize::Whole` ⇒ one tile spanning the contraction dim).
@@ -42,14 +54,14 @@ pub fn matmul_tile_edge(tile: TileSize, k: usize) -> usize {
     }
 }
 
-/// B mantissas reordered into k-tile-major, `PANEL_NR`-wide panels.
-/// Built once per tensor (cached on [`BfpTensor`]) and reused by every
-/// matmul that streams the tensor as its resident operand.
+/// B mantissas reordered into k-tile-major, `nr`-wide panels. Built once
+/// per (tensor, panel width) — cached on [`BfpTensor`] — and reused by
+/// every matmul that streams the tensor as its resident operand.
 #[derive(Debug, Clone, PartialEq)]
 pub struct PackedPanels {
     /// Matmul tile edge the layout was built for.
     pub t: usize,
-    /// Columns per panel (always [`PANEL_NR`]).
+    /// Columns per panel (the packing family's register-block width).
     pub nr: usize,
     /// Padded k-extent of every k-tile (`min(t, k)`).
     pub tk: usize,
@@ -85,12 +97,17 @@ impl PackedPanels {
     }
 }
 
-/// Reorder `b`'s mantissas for matmul tile edge `t`. Requires a non-empty
-/// tensor (the matmuls early-return before packing empty operands).
-pub fn pack_panels(b: &BfpTensor, t: usize) -> PackedPanels {
+/// Reorder `b`'s mantissas for matmul tile edge `t` at panel width `nr`
+/// (a kernel family's register-block width, `<=` [`MAX_PANEL_NR`]).
+/// Requires a non-empty tensor (the matmuls early-return before packing
+/// empty operands).
+pub fn pack_panels(b: &BfpTensor, t: usize, nr: usize) -> PackedPanels {
     let (k, n) = (b.rows, b.cols);
     debug_assert!(k > 0 && n > 0 && t > 0, "pack_panels on degenerate operand {k}x{n} t={t}");
-    let nr = PANEL_NR;
+    debug_assert!(
+        nr > 0 && nr <= MAX_PANEL_NR,
+        "panel width {nr} outside (0, {MAX_PANEL_NR}]"
+    );
     let tk = t.min(k).max(1);
     let panels_per_tile = t.min(n).max(1).div_ceil(nr);
     let tiles_k = k.div_ceil(t).max(1);
@@ -166,24 +183,26 @@ mod tests {
 
     #[test]
     fn every_element_lands_at_its_panel_slot() {
-        for &(k, n, t) in &[(10usize, 13usize, 4usize), (24, 24, 8), (7, 30, 24), (16, 5, 8)] {
-            let b = indexed_tensor(k, n, TileSize::Edge(t));
-            let pp = pack_panels(&b, matmul_tile_edge(b.tile, k));
-            assert_eq!(pp.nr, PANEL_NR);
-            for kk in 0..k {
-                for j in 0..n {
-                    let jt = j / t;
-                    let kt = kk / t;
-                    let jin = j - jt * t; // column within the j-tile
-                    let p = jin / PANEL_NR;
-                    let c = jin % PANEL_NR;
-                    let dk = kk - kt * t;
-                    let idx = pp.tile_base(jt, kt) + p * pp.tk * PANEL_NR + dk * PANEL_NR + c;
-                    assert_eq!(
-                        pp.data.get(idx),
-                        b.mantissa_at(kk, j),
-                        "({kk},{j}) misplaced at k={k} n={n} t={t}"
-                    );
+        for &nr in &[PANEL_NR, 16, MAX_PANEL_NR] {
+            for &(k, n, t) in &[(10usize, 13usize, 4usize), (24, 24, 8), (7, 30, 24), (16, 5, 8)] {
+                let b = indexed_tensor(k, n, TileSize::Edge(t));
+                let pp = pack_panels(&b, matmul_tile_edge(b.tile, k), nr);
+                assert_eq!(pp.nr, nr);
+                for kk in 0..k {
+                    for j in 0..n {
+                        let jt = j / t;
+                        let kt = kk / t;
+                        let jin = j - jt * t; // column within the j-tile
+                        let p = jin / nr;
+                        let c = jin % nr;
+                        let dk = kk - kt * t;
+                        let idx = pp.tile_base(jt, kt) + p * pp.tk * nr + dk * nr + c;
+                        assert_eq!(
+                            pp.data.get(idx),
+                            b.mantissa_at(kk, j),
+                            "({kk},{j}) misplaced at k={k} n={n} t={t} nr={nr}"
+                        );
+                    }
                 }
             }
         }
@@ -194,16 +213,26 @@ mod tests {
         // ragged j-tile: n=13, t=8 -> second j-tile is 5 wide, its first
         // panel has 3 padded columns and its second panel is all padding
         let b = indexed_tensor(8, 13, TileSize::Edge(8));
-        let pp = pack_panels(&b, 8);
+        let pp = pack_panels(&b, 8, PANEL_NR);
         assert_eq!(pp.panels_per_tile, 1); // min(t, n) = 8 -> 1 panel per tile
         let b2 = indexed_tensor(8, 13, TileSize::Edge(16));
-        let pp2 = pack_panels(&b2, 16);
+        let pp2 = pack_panels(&b2, 16, PANEL_NR);
         assert_eq!(pp2.panels_per_tile, 2);
         // columns 13..16 of the single j-tile are padding
         let base = pp2.tile_base(0, 0) + pp2.tk * PANEL_NR; // second panel (cols 8..16)
         for dk in 0..8 {
             for c in 5..8 {
                 assert_eq!(pp2.data.get(base + dk * PANEL_NR + c), 0, "padding at ({dk},{c})");
+            }
+        }
+        // at a 32-wide vector panel the same tile is one panel with 19
+        // padded trailing columns
+        let pp3 = pack_panels(&b2, 16, 32);
+        assert_eq!(pp3.panels_per_tile, 1);
+        let base3 = pp3.tile_base(0, 0);
+        for dk in 0..8 {
+            for c in 13..32 {
+                assert_eq!(pp3.data.get(base3 + dk * 32 + c), 0, "vector padding at ({dk},{c})");
             }
         }
     }
@@ -221,19 +250,21 @@ mod tests {
                 &mut super::super::quant::Rounding::NearestEven,
             )
             .unwrap();
-            let pp = pack_panels(&b, 4);
-            assert_eq!(
-                pp.data.elem_bits(),
-                b.mantissas.elem_bits(),
-                "packing must not change the streamed width class (bits={bits})"
-            );
+            for nr in [PANEL_NR, 16] {
+                let pp = pack_panels(&b, 4, nr);
+                assert_eq!(
+                    pp.data.elem_bits(),
+                    b.mantissas.elem_bits(),
+                    "packing must not change the streamed width class (bits={bits}, nr={nr})"
+                );
+            }
         }
     }
 
     #[test]
     fn whole_tile_single_tile_geometry() {
         let b = indexed_tensor(6, 20, TileSize::Whole);
-        let pp = pack_panels(&b, matmul_tile_edge(b.tile, 6));
+        let pp = pack_panels(&b, matmul_tile_edge(b.tile, 6), PANEL_NR);
         assert_eq!((pp.tiles_k, pp.tiles_j), (1, 4)); // t = k = 6; ceil(20/6) = 4
         assert_eq!(pp.tk, 6);
     }

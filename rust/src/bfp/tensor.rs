@@ -14,6 +14,7 @@ use std::sync::{Arc, Mutex};
 
 use anyhow::{anyhow, Result};
 
+use super::kernels;
 use super::panels::{self, matmul_tile_edge, PackedPanels};
 use super::quant::{self, Rounding, TileRounding};
 use crate::util::{pool, worker_threads};
@@ -49,6 +50,35 @@ pub trait MantissaElem: Copy + Send + Sync + 'static {
 
     fn from_i32(v: i32) -> Self;
     fn to_i32(self) -> i32;
+
+    /// Concrete-type downcasts for the SIMD kernel dispatch
+    /// (`bfp::kernels`): each returns `Some` only on the matching
+    /// element type, so a generic kernel caller can route `i8`/`i16`
+    /// storage to the vector paths and everything else to scalar.
+    fn as_i8s(s: &[Self]) -> Option<&[i8]> {
+        let _ = s;
+        None
+    }
+
+    fn as_i16s(s: &[Self]) -> Option<&[i16]> {
+        let _ = s;
+        None
+    }
+
+    fn as_i8s_mut(s: &mut [Self]) -> Option<&mut [i8]> {
+        let _ = s;
+        None
+    }
+
+    fn as_i16s_mut(s: &mut [Self]) -> Option<&mut [i16]> {
+        let _ = s;
+        None
+    }
+
+    fn as_i32s_mut(s: &mut [Self]) -> Option<&mut [i32]> {
+        let _ = s;
+        None
+    }
 }
 
 impl MantissaElem for i8 {
@@ -63,6 +93,14 @@ impl MantissaElem for i8 {
     #[inline(always)]
     fn to_i32(self) -> i32 {
         self as i32
+    }
+
+    fn as_i8s(s: &[i8]) -> Option<&[i8]> {
+        Some(s)
+    }
+
+    fn as_i8s_mut(s: &mut [i8]) -> Option<&mut [i8]> {
+        Some(s)
     }
 }
 
@@ -79,6 +117,14 @@ impl MantissaElem for i16 {
     fn to_i32(self) -> i32 {
         self as i32
     }
+
+    fn as_i16s(s: &[i16]) -> Option<&[i16]> {
+        Some(s)
+    }
+
+    fn as_i16s_mut(s: &mut [i16]) -> Option<&mut [i16]> {
+        Some(s)
+    }
 }
 
 impl MantissaElem for i32 {
@@ -92,6 +138,10 @@ impl MantissaElem for i32 {
     #[inline(always)]
     fn to_i32(self) -> i32 {
         self
+    }
+
+    fn as_i32s_mut(s: &mut [i32]) -> Option<&mut [i32]> {
+        Some(s)
     }
 }
 
@@ -178,11 +228,40 @@ pub struct BfpTensor {
     tile_rows: usize,
     tile_cols: usize,
     /// Lazily-built packed B-panel layout (see [`PackedPanels`]): packed
-    /// once on first use as a matmul B operand, then reused by every
-    /// subsequent GEMM — the resident-weight amortization. Cleared by
+    /// once on first use as a matmul B operand (at the active SIMD
+    /// family's panel width), then reused by every subsequent GEMM — the
+    /// resident-weight amortization. Cleared by
     /// [`BfpTensor::clear_panel_cache`]; constructors start empty, so
     /// derived tensors (`narrow_view`) never inherit stale panels.
-    panels: Mutex<Option<Arc<PackedPanels>>>,
+    panels: Mutex<Option<PanelCache>>,
+}
+
+/// A cached panel layout plus, in debug builds, the content generation
+/// it was packed from.
+#[derive(Clone)]
+struct PanelCache {
+    panels: Arc<PackedPanels>,
+    /// Debug-build stale-cache guard. The public `mantissas`/`exponents`
+    /// fields make a true mutation counter impossible (field writes
+    /// can't be intercepted), so the "generation" is a content
+    /// fingerprint taken at pack time and re-derived on every cache hit:
+    /// a mutation without [`BfpTensor::clear_panel_cache`] panics at the
+    /// next matmul instead of silently serving stale panels. The rehash
+    /// is full-coverage on purpose (a sampled hash would miss exactly
+    /// the single-element mutations it guards against); at O(k·n) per
+    /// hit it is bounded by 1/m of the matmul's own MAC work, and
+    /// release builds skip it entirely.
+    #[cfg(debug_assertions)]
+    generation: u64,
+}
+
+impl PanelCache {
+    fn new(panels: Arc<PackedPanels>, _tensor: &BfpTensor) -> PanelCache {
+        #[cfg(debug_assertions)]
+        return PanelCache { panels, generation: _tensor.content_generation() };
+        #[cfg(not(debug_assertions))]
+        return PanelCache { panels };
+    }
 }
 
 impl Clone for BfpTensor {
@@ -270,7 +349,13 @@ impl BfpTensor {
         let mut exponents = vec![quant::E_MIN; g.tiles_r * g.tiles_c];
         if rows * cols > 0 {
             let mode = TileRounding::capture(rounding);
-            let threads = pool::par_threads(rows * cols, PAR_MIN_ELEMS, max_threads, g.tiles_r);
+            let threads = pool::par_threads_simd(
+                rows * cols,
+                PAR_MIN_ELEMS,
+                kernels::converter_floor_scale(kernels::active(), mode),
+                max_threads,
+                g.tiles_r,
+            );
             match &mut mantissas {
                 Mantissas::I8(v) => {
                     quantize_bands::<i8>(data, v, &mut exponents, &g, mantissa_bits, mode, threads)
@@ -349,23 +434,69 @@ impl BfpTensor {
         })
     }
 
-    /// Packed B-panel layout for this tensor as a matmul B operand
-    /// (see [`PackedPanels`]): built on first call, cached, and shared
-    /// by every subsequent GEMM — the software analogue of weights held
-    /// resident next to the MAC array. Callers that mutate `mantissas`
-    /// or `exponents` through the public fields must call
-    /// [`BfpTensor::clear_panel_cache`] afterwards.
+    /// Packed B-panel layout for this tensor as a matmul B operand at
+    /// the active SIMD family's panel width (see [`PackedPanels`]):
+    /// built on first call, cached, and shared by every subsequent GEMM
+    /// — the software analogue of weights held resident next to the MAC
+    /// array. Callers that mutate `mantissas` or `exponents` through the
+    /// public fields must call [`BfpTensor::clear_panel_cache`]
+    /// afterwards (debug builds panic at the next use otherwise).
     pub fn packed_panels(&self) -> Arc<PackedPanels> {
+        self.packed_panels_nr(kernels::active_panel_nr())
+    }
+
+    /// [`BfpTensor::packed_panels`] at an explicit panel width — the
+    /// forced-ISA matmul path (`bfp_matmul_with_simd`) and the bench
+    /// ladder's scalar rungs. The cache holds one layout: asking for a
+    /// different width repacks and replaces it.
+    pub fn packed_panels_nr(&self, nr: usize) -> Arc<PackedPanels> {
         let t = matmul_tile_edge(self.tile, self.rows);
         let mut guard = self.panels.lock().unwrap();
-        if let Some(p) = guard.as_ref() {
-            if p.t == t {
-                return Arc::clone(p);
+        if let Some(cache) = guard.as_ref() {
+            if cache.panels.t == t && cache.panels.nr == nr {
+                #[cfg(debug_assertions)]
+                assert!(
+                    cache.generation == self.content_generation(),
+                    "stale panel cache: BfpTensor::mantissas/exponents were mutated through \
+                     the public fields without clear_panel_cache()"
+                );
+                return Arc::clone(&cache.panels);
             }
         }
-        let p = Arc::new(panels::pack_panels(self, t));
-        *guard = Some(Arc::clone(&p));
+        let p = Arc::new(panels::pack_panels(self, t, nr));
+        *guard = Some(PanelCache::new(Arc::clone(&p), self));
         p
+    }
+
+    /// Debug-build content fingerprint (FNV-1a over mantissa bytes and
+    /// exponents) backing the stale-panel-cache guard.
+    #[cfg(debug_assertions)]
+    fn content_generation(&self) -> u64 {
+        fn eat(h: u64, b: u64) -> u64 {
+            (h ^ b).wrapping_mul(0x100_0000_01b3)
+        }
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        match &self.mantissas {
+            Mantissas::I8(v) => {
+                for &x in v {
+                    h = eat(h, x as u8 as u64);
+                }
+            }
+            Mantissas::I16(v) => {
+                for &x in v {
+                    h = eat(h, x as u16 as u64);
+                }
+            }
+            Mantissas::I32(v) => {
+                for &x in v {
+                    h = eat(h, x as u32 as u64);
+                }
+            }
+        }
+        for &e in &self.exponents {
+            h = eat(h, e as u32 as u64);
+        }
+        h
     }
 
     /// Drop the cached panel layout (next matmul repacks). Needed only
@@ -472,15 +603,23 @@ impl BfpTensor {
         self.mantissas.len() * self.mantissa_bits as usize + self.exponents.len() * 8
     }
 
-    /// Actual heap bytes of the software representation (packed mantissa
-    /// vector + i32 exponents).
+    /// Actual heap bytes of the software representation: packed mantissa
+    /// vector + i32 exponents + the cached packed-panel copy when one is
+    /// resident (a second, padded mantissa buffer — without it, memory
+    /// reports undercount resident weights by the panel copy).
     pub fn heap_bytes(&self) -> usize {
-        self.mantissas.heap_bytes() + self.exponents.len() * std::mem::size_of::<i32>()
+        let panel_bytes = self.panels.lock().unwrap().as_ref().map_or(0, |c| c.panels.heap_bytes());
+        self.mantissas.heap_bytes()
+            + self.exponents.len() * std::mem::size_of::<i32>()
+            + panel_bytes
     }
 }
 
 /// Quantize all tiles, band-parallel: band = one tile row (`th` data
 /// rows), whose mantissa and exponent slices are disjoint across bands.
+/// Nearest-even rows route through the SIMD kernel family; stochastic
+/// rounding stays scalar in element order so each tile's RNG substream
+/// is consumed identically whatever ISA is active.
 fn quantize_bands<E: MantissaElem>(
     data: &[f32],
     out: &mut [E],
@@ -491,6 +630,7 @@ fn quantize_bands<E: MantissaElem>(
     threads: usize,
 ) {
     debug_assert!(mantissa_bits <= E::MAX_BITS);
+    let isa = kernels::active();
     let band_elems = g.th * g.cols;
     let jobs: Vec<(usize, (&mut [E], &mut [i32]))> = out
         .chunks_mut(band_elems)
@@ -505,13 +645,29 @@ fn quantize_bands<E: MantissaElem>(
             let c1 = (c0 + g.tw).min(g.cols);
             let e = quant::block_exponent_strided(data, g.cols, r0, r1, c0, c1);
             band_exp[tc] = e;
-            let mut owned = mode.for_tile((band * g.tiles_c + tc) as u64);
-            let mut rounding = owned.as_rounding();
-            for r in r0..r1 {
-                let src = &data[r * g.cols + c0..r * g.cols + c1];
-                let dst = &mut band_out[(r - r0) * g.cols + c0..(r - r0) * g.cols + c1];
-                for (d, &x) in dst.iter_mut().zip(src) {
-                    *d = E::from_i32(quant::quantize_value(x, e, mantissa_bits, &mut rounding));
+            match mode {
+                TileRounding::NearestEven => {
+                    for r in r0..r1 {
+                        let src = &data[r * g.cols + c0..r * g.cols + c1];
+                        let dst = &mut band_out[(r - r0) * g.cols + c0..(r - r0) * g.cols + c1];
+                        kernels::quantize_row_rne_preclamped(isa, src, dst, e, mantissa_bits);
+                    }
+                }
+                TileRounding::StochasticBase(_) => {
+                    let mut owned = mode.for_tile((band * g.tiles_c + tc) as u64);
+                    let mut rounding = owned.as_rounding();
+                    for r in r0..r1 {
+                        let src = &data[r * g.cols + c0..r * g.cols + c1];
+                        let dst = &mut band_out[(r - r0) * g.cols + c0..(r - r0) * g.cols + c1];
+                        for (d, &x) in dst.iter_mut().zip(src) {
+                            *d = E::from_i32(quant::quantize_value(
+                                x,
+                                e,
+                                mantissa_bits,
+                                &mut rounding,
+                            ));
+                        }
+                    }
                 }
             }
         }
@@ -539,7 +695,14 @@ pub fn quantize_inplace_2d(
         return Ok(());
     }
     let mode = TileRounding::capture(rounding);
-    let threads = pool::par_threads(rows * cols, PAR_MIN_ELEMS, worker_threads(), g.tiles_r);
+    let isa = kernels::active();
+    let threads = pool::par_threads_simd(
+        rows * cols,
+        PAR_MIN_ELEMS,
+        kernels::converter_floor_scale(isa, mode),
+        worker_threads(),
+        g.tiles_r,
+    );
     let jobs: Vec<(usize, &mut [f32])> = data.chunks_mut(g.th * g.cols).enumerate().collect();
     pool::dispatch_jobs(jobs, threads, |band, chunk| {
         let r0 = band * g.th;
@@ -548,12 +711,22 @@ pub fn quantize_inplace_2d(
             let c0 = tc * g.tw;
             let c1 = (c0 + g.tw).min(g.cols);
             let e = quant::block_exponent_strided(chunk, g.cols, 0, r1 - r0, c0, c1);
-            let mut owned = mode.for_tile((band * g.tiles_c + tc) as u64);
-            let mut r = owned.as_rounding();
-            for lr in 0..r1 - r0 {
-                for x in &mut chunk[lr * g.cols + c0..lr * g.cols + c1] {
-                    let q = quant::quantize_value(*x, e, mantissa_bits, &mut r);
-                    *x = quant::dequantize_value(q, e, mantissa_bits);
+            match mode {
+                TileRounding::NearestEven => {
+                    for lr in 0..r1 - r0 {
+                        let row = &mut chunk[lr * g.cols + c0..lr * g.cols + c1];
+                        kernels::quantize_dequant_row_rne_preclamped(isa, row, e, mantissa_bits);
+                    }
+                }
+                TileRounding::StochasticBase(_) => {
+                    let mut owned = mode.for_tile((band * g.tiles_c + tc) as u64);
+                    let mut r = owned.as_rounding();
+                    for lr in 0..r1 - r0 {
+                        for x in &mut chunk[lr * g.cols + c0..lr * g.cols + c1] {
+                            let q = quant::quantize_value(*x, e, mantissa_bits, &mut r);
+                            *x = quant::dequantize_value(q, e, mantissa_bits);
+                        }
+                    }
                 }
             }
         }
@@ -816,6 +989,51 @@ mod tests {
         quantize_inplace_2d(&mut got, rows, cols, 8, TileSize::Edge(16), &mut Rounding::NearestEven)
             .unwrap();
         assert_eq!(got, want, "in-place converter must match the tensor path");
+    }
+
+    #[test]
+    fn heap_bytes_includes_panel_cache() {
+        let data: Vec<f32> = (0..48 * 40).map(|i| (i as f32 - 960.0) / 100.0).collect();
+        let t =
+            BfpTensor::from_f32(&data, 48, 40, 8, TileSize::Edge(16), &mut Rounding::NearestEven)
+                .unwrap();
+        let bare = t.heap_bytes();
+        let pp = t.packed_panels();
+        assert_eq!(
+            t.heap_bytes(),
+            bare + pp.heap_bytes(),
+            "resident panel copy must be accounted"
+        );
+        t.clear_panel_cache();
+        assert_eq!(t.heap_bytes(), bare);
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "stale panel cache")]
+    fn mutation_without_clear_panics_in_debug() {
+        let data = vec![0.5f32; 64];
+        let t = BfpTensor::from_f32(&data, 8, 8, 8, TileSize::Edge(4), &mut Rounding::NearestEven)
+            .unwrap();
+        let _ = t.packed_panels();
+        // direct public-field mutation, no clear_panel_cache()
+        let mut t = t;
+        t.mantissas.set(3, 7);
+        let _ = t.packed_panels(); // must panic instead of serving stale panels
+    }
+
+    #[test]
+    fn mutation_with_clear_repacks() {
+        let data = vec![0.5f32; 64];
+        let mut t =
+            BfpTensor::from_f32(&data, 8, 8, 8, TileSize::Edge(4), &mut Rounding::NearestEven)
+                .unwrap();
+        let _ = t.packed_panels();
+        t.mantissas.set(3, 7);
+        t.clear_panel_cache();
+        assert!(!t.has_packed_panels());
+        let pp = t.packed_panels(); // repacks from the mutated mantissas
+        assert_eq!(pp.data.get(3), 7, "repacked panels must reflect the mutation");
     }
 
     #[test]

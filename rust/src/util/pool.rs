@@ -284,6 +284,21 @@ pub fn par_threads(work: usize, par_floor: usize, max_threads: usize, bands: usi
     }
 }
 
+/// [`par_threads`] with the floor scaled by the active SIMD kernel
+/// family's throughput class (`bfp::kernels::Isa::par_floor_scale`): a
+/// wider vector unit finishes small problems faster, so the point where
+/// dispatch overhead stops paying moves up proportionally. Purely a
+/// speed knob — the lane count never changes results.
+pub fn par_threads_simd(
+    work: usize,
+    par_floor: usize,
+    floor_scale: usize,
+    max_threads: usize,
+    bands: usize,
+) -> usize {
+    par_threads(work, par_floor.saturating_mul(floor_scale.max(1)), max_threads, bands)
+}
+
 /// Which dispatch backend a kernel should use. The default everywhere is
 /// [`ParBackend::Pooled`]; [`ParBackend::Scoped`] keeps the per-call
 /// `std::thread::scope` baseline reachable for the bench ladder and the
@@ -436,6 +451,17 @@ mod tests {
         assert_eq!(par_threads(1000, 1000, 8, 16), 8, "at floor -> parallel");
         assert_eq!(par_threads(5000, 1000, 8, 3), 3, "capped by bands");
         assert_eq!(par_threads(5000, 1000, 0, 0), 1, "degenerate caps clamp to 1");
+    }
+
+    #[test]
+    fn par_threads_simd_scales_the_floor() {
+        // scale 1 == the plain threshold
+        assert_eq!(par_threads_simd(1000, 1000, 1, 8, 16), 8);
+        // a 4-wide family quadruples the inline region
+        assert_eq!(par_threads_simd(1000, 1000, 4, 8, 16), 1, "below scaled floor");
+        assert_eq!(par_threads_simd(4000, 1000, 4, 8, 16), 8, "at scaled floor");
+        // degenerate scale clamps to 1 rather than zeroing the floor
+        assert_eq!(par_threads_simd(1000, 1000, 0, 8, 16), 8);
     }
 
     #[test]

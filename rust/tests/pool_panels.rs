@@ -10,8 +10,7 @@ use std::sync::Arc;
 
 use hbfp::bfp::{
     bfp_matmul, bfp_matmul_naive, bfp_matmul_rowmajor_with_threads, bfp_matmul_with_backend,
-    bfp_matmul_with_threads, quantize_matmul, BfpTensor, Mantissas, Rounding, TileSize,
-    PANEL_NR,
+    bfp_matmul_with_threads, kernels, quantize_matmul, BfpTensor, Mantissas, Rounding, TileSize,
 };
 use hbfp::util::pool::ParBackend;
 use hbfp::util::rng::{SplitMix64, Xorshift32};
@@ -173,14 +172,17 @@ fn small_problems_take_the_inline_path_with_identical_results() {
 }
 
 #[test]
-fn panel_geometry_matches_nr() {
+fn panel_geometry_matches_active_family() {
     let mut rng = SplitMix64::new(0x42);
     let b = rand_mat(&mut rng, 48 * 30, 1.0);
     let qb = quantize(&b, 48, 30, 8, TileSize::Edge(24));
     let pp = qb.packed_panels();
-    assert_eq!(pp.nr, PANEL_NR);
+    // the default cache packs at the active SIMD family's register width
+    let nr = kernels::active_panel_nr();
+    assert_eq!(pp.nr, nr);
+    assert_eq!(nr, kernels::active().panel_nr());
     assert_eq!(pp.t, 24);
     assert_eq!(pp.tiles_k, 2);
     assert_eq!(pp.tiles_j, 2);
-    assert_eq!(pp.panels_per_tile, 24usize.div_ceil(PANEL_NR));
+    assert_eq!(pp.panels_per_tile, 24usize.div_ceil(nr));
 }

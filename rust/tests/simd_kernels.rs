@@ -1,0 +1,164 @@
+//! Whole-matmul contract tests for the SIMD kernel family: every
+//! detected ISA — forced via `bfp_matmul_with_simd`, which re-packs the
+//! B panels at that family's register width — must be bit-identical to
+//! the always-i64 naive reference and to the forced-scalar path, across
+//! storage classes, mixed operand widths, both accumulator widths, and
+//! ragged shapes that exercise vector-panel padding. Stochastic
+//! rounding must consume its per-tile RNG substreams in exact element
+//! order whatever family is active. (Kernel-level differentials live in
+//! `bfp::kernels::tests`; CI additionally runs the whole suite under
+//! `HBFP_SIMD=off` and `HBFP_SIMD=auto`.)
+
+use hbfp::bfp::{
+    bfp_matmul, bfp_matmul_naive, bfp_matmul_with_simd, kernels, quantize_value, BfpTensor, Isa,
+    Rounding, TileSize,
+};
+use hbfp::util::rng::{SplitMix64, Xorshift32};
+
+fn rand_mat(rng: &mut SplitMix64, len: usize, scale: f32) -> Vec<f32> {
+    (0..len).map(|_| rng.normal() * scale).collect()
+}
+
+fn quantize(data: &[f32], rows: usize, cols: usize, bits: u32, tile: TileSize) -> BfpTensor {
+    BfpTensor::from_f32(data, rows, cols, bits, tile, &mut Rounding::NearestEven).unwrap()
+}
+
+#[test]
+fn every_detected_isa_matches_naive_bitwise() {
+    let mut rng = SplitMix64::new(0x51AD);
+    // ragged shapes: nothing divides the 16/32-wide vector panels, edge
+    // tiles in every dimension, single rows/cols, k spanning tiles
+    for &(m, k, n) in &[
+        (17usize, 23usize, 19usize),
+        (48, 48, 48),
+        (5, 64, 30),
+        (1, 1, 1),
+        (3, 129, 33),
+        (40, 100, 3),
+    ] {
+        let a = rand_mat(&mut rng, m * k, 2.0);
+        let b = rand_mat(&mut rng, k * n, 0.5);
+        for &tile in &[TileSize::Whole, TileSize::Edge(4), TileSize::Edge(24)] {
+            // (8,8): i8 kernels; (12,12): i16 with i32 acc; (16,16) at
+            // t=24: i16 with i64 acc; mixed pairs: scalar fallback
+            for &(ma, mb) in &[(8u32, 8u32), (12, 12), (16, 16), (8, 16), (20, 20), (4, 24)] {
+                let qa = quantize(&a, m, k, ma, tile);
+                let qb = quantize(&b, k, n, mb, tile);
+                let naive = bfp_matmul_naive(&qa, &qb).unwrap();
+                for &isa in &kernels::detected() {
+                    let got = bfp_matmul_with_simd(&qa, &qb, 4, isa).unwrap();
+                    assert!(
+                        got == naive,
+                        "isa={isa:?} diverged at ma={ma} mb={mb} tile={tile:?} ({m}x{k}x{n})"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn unsupported_isa_requests_clamp_safely() {
+    // Every Isa variant — including ones this CPU cannot run — must
+    // execute via clamping and still produce the reference bits.
+    let mut rng = SplitMix64::new(0xC1A);
+    let (m, k, n) = (12, 40, 28);
+    let a = rand_mat(&mut rng, m * k, 1.0);
+    let b = rand_mat(&mut rng, k * n, 1.0);
+    let qa = quantize(&a, m, k, 8, TileSize::Edge(16));
+    let qb = quantize(&b, k, n, 8, TileSize::Edge(16));
+    let naive = bfp_matmul_naive(&qa, &qb).unwrap();
+    for isa in [Isa::Scalar, Isa::Sse41, Isa::Avx2, Isa::Neon] {
+        let got = bfp_matmul_with_simd(&qa, &qb, 2, isa).unwrap();
+        assert!(got == naive, "clamped {isa:?} diverged");
+    }
+}
+
+#[test]
+fn forced_widths_repack_the_shared_cache_coherently() {
+    // Alternating panel widths on one tensor (scalar rung then the
+    // active family, as the bench ladder does) must repack the cache,
+    // never serve a stale width, and agree bit-for-bit throughout.
+    let mut rng = SplitMix64::new(0xCAFE);
+    let (m, k, n) = (32, 48, 40);
+    let a = rand_mat(&mut rng, m * k, 1.0);
+    let b = rand_mat(&mut rng, k * n, 1.0);
+    let qa = quantize(&a, m, k, 8, TileSize::Edge(24));
+    let qb = quantize(&b, k, n, 8, TileSize::Edge(24));
+    let naive = bfp_matmul_naive(&qa, &qb).unwrap();
+    for round in 0..3 {
+        let scalar = bfp_matmul_with_simd(&qa, &qb, 4, Isa::Scalar).unwrap();
+        assert_eq!(qb.packed_panels_nr(Isa::Scalar.panel_nr()).nr, Isa::Scalar.panel_nr());
+        let active = bfp_matmul(&qa, &qb).unwrap();
+        assert_eq!(qb.packed_panels().nr, kernels::active_panel_nr());
+        assert!(scalar == naive && active == naive, "round {round} diverged");
+    }
+}
+
+#[test]
+fn stochastic_draw_sequence_is_isa_independent() {
+    // The stochastic converter path is scalar by design: one RNG draw
+    // per element, in element order within each tile. Replay the
+    // per-tile substreams by hand and require the tensor to match draw
+    // for draw — if any SIMD path consumed or reordered draws, this
+    // (and the HBFP_SIMD=off CI leg) would diverge.
+    let (rows, cols, bits, te) = (40usize, 36usize, 8u32, 16usize);
+    let mut rng = SplitMix64::new(0xD12A);
+    let data = rand_mat(&mut rng, rows * cols, 1.5);
+    let seed = 0x5EED_u32;
+
+    let mut caller_rng = Xorshift32::new(seed);
+    let t = BfpTensor::from_f32(
+        &data,
+        rows,
+        cols,
+        bits,
+        TileSize::Edge(te),
+        &mut Rounding::Stochastic(&mut caller_rng),
+    )
+    .unwrap();
+
+    // capture consumes exactly one u32 from the caller's RNG
+    let mut replay_rng = Xorshift32::new(seed);
+    let base = replay_rng.next_u32();
+    assert_eq!(caller_rng.next_u32(), replay_rng.next_u32(), "capture must draw exactly once");
+
+    let tiles_c = cols.div_ceil(te);
+    for tr in 0..rows.div_ceil(te) {
+        let (r0, r1) = (tr * te, ((tr + 1) * te).min(rows));
+        for tc in 0..tiles_c {
+            let (c0, c1) = (tc * te, ((tc + 1) * te).min(cols));
+            let mut sub = Xorshift32::substream(base, (tr * tiles_c + tc) as u64);
+            for r in r0..r1 {
+                for c in c0..c1 {
+                    let e = t.exponent_at(r, c);
+                    let want = quantize_value(
+                        data[r * cols + c],
+                        e,
+                        bits,
+                        &mut Rounding::Stochastic(&mut sub),
+                    );
+                    assert_eq!(
+                        t.mantissa_at(r, c),
+                        want,
+                        "draw order broke at ({r},{c}) tile ({tr},{tc})"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn active_family_is_detected_and_selection_is_sane() {
+    // the process-wide family must be executable on this CPU
+    assert!(kernels::detected().contains(&kernels::active()));
+    // HBFP_SIMD semantics (pure selection logic; the env var itself is
+    // exercised by the CI matrix legs)
+    use hbfp::bfp::kernels::{select, CpuCaps, SimdPref};
+    let here = CpuCaps::detect();
+    assert_eq!(select(Some(SimdPref::Off), here), Isa::Scalar);
+    let auto = select(Some(SimdPref::Auto), here);
+    assert_eq!(auto, select(None, here));
+    assert!(kernels::detected().contains(&auto));
+}
