@@ -5,7 +5,7 @@
 # quick run intended for committing the refreshed baseline so PRs leave
 # a perf trajectory.
 
-.PHONY: check fmt build test perf bench-quick perf-record
+.PHONY: check fmt build test lint examples perf bench-quick perf-record
 
 check: fmt build test
 
@@ -17,6 +17,15 @@ build:
 
 test:
 	cargo test -q
+
+# Lint gate (a CI leg): tests, benches, and examples included, warnings
+# denied — uses of the deprecated matmul/quantize zoo outside the
+# shim-equivalence test fail here, so the retired API can't re-spread.
+lint:
+	cargo clippy --all-targets -- -D warnings
+
+examples:
+	cargo build --release --examples
 
 perf:
 	cargo bench --bench bfp_ops -- --json

@@ -35,10 +35,16 @@ fn main() -> Result<()> {
     let mut rng = SplitMix64::new(0);
     let mut tot_cycles = 0u64;
     let mut tot_macs = 0u64;
+    // The training-step shape: per layer, weights are quantized +
+    // panel-packed once (`load_weights`, which also caches the layer's
+    // MatmulPlan) and activations stream against them into one reused
+    // output buffer — no per-step policy work or output allocation.
+    let mut out = Vec::new();
     for &(name, m, k, n) in layers {
         let a: Vec<f32> = (0..m * k).map(|_| rng.normal()).collect();
         let b: Vec<f32> = (0..k * n).map(|_| rng.normal()).collect();
-        let (_, stats) = acc.gemm(&a, &b, m, k, n, 8)?;
+        acc.load_weights(&b, k, n, 8)?;
+        let stats = acc.gemm_resident_into(&a, m, &mut out)?;
         tot_cycles += stats.cycles;
         tot_macs += stats.macs_used;
         println!(

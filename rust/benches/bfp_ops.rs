@@ -2,33 +2,34 @@
 //! converter) and the packed integer-MAC matmul vs the FP32 baseline.
 //! These are the §Perf targets for the rust BFP substrate (see PERF.md).
 //!
+//! Everything runs through the context/plan API: one [`BfpContext`] per
+//! policy variant (row-major layout, forced-scalar ISA, scoped-spawn
+//! backend, single-thread) replaces the retired `_with_*` function zoo.
 //! The matmul section prints the full before/after ladder on the same
 //! operands: `naive` (j-innermost, the original kernel), `row-major 1T`
-//! (cache-blocked, single thread — the pre-packing seed kernel shape),
-//! `row-major packed-parallel` (width-packed storage + row-band
-//! threading), `packed-panel` warm/cold (the k-tile-major B relayout,
-//! cached vs repacked per call — the default path, running the active
-//! SIMD kernel family), `packed-panel warm, simd off` (the same panel
-//! path forced onto the scalar kernels — the SIMD margin), and `fused`
-//! (convert+matmul in one pass). A dispatch section compares the
-//! persistent pool against per-call scoped spawns at 128^3, and a skinny
-//! m=8 section measures the resident-weight case (small activation batch
-//! against big cached weights) where panel reuse pays every step, with
-//! its own simd-off partner rung. The active family prints in the
-//! header (`HBFP_SIMD` to override). Run with `--json` to write
-//! `BENCH_bfp_ops.json` at the repo root.
+//! (cache-blocked, single thread), `row-major packed-parallel`,
+//! `packed-panel` warm/cold (the k-tile-major B relayout, cached vs
+//! repacked per call — the default path, running the active SIMD kernel
+//! family), `packed-panel warm, simd off` (the same panel path forced
+//! onto the scalar kernels — the SIMD margin), and `fused` (convert +
+//! matmul in one pass). A dispatch section compares the persistent pool
+//! against per-call scoped spawns at 128^3, and a skinny m=8 section
+//! measures the resident-weight case where panel reuse pays every step —
+//! including the new **plan-reuse** rungs: one prebuilt `MatmulPlan` +
+//! caller buffer (`execute_into`, the training-step shape) paired
+//! against the warm rung, which is the per-call `ctx.matmul` path
+//! (policy re-resolved and output allocated every call).
+//! The active family prints in the header (`HBFP_SIMD` to override).
+//! Run with `--json` to write `BENCH_bfp_ops.json` at the repo root.
 
 mod common;
 
 use common::{bench, header, BenchOpts, JsonSink};
 use hbfp::bfp::{
-    bfp_matmul_naive, bfp_matmul_rowmajor_with_threads, bfp_matmul_with_backend,
-    bfp_matmul_with_simd, bfp_matmul_with_threads, fp32_matmul, kernels, quantize_matmul,
-    BfpTensor, Isa, Rounding, TileSize,
+    bfp_matmul_naive, fp32_matmul, BfpContext, Isa, MatmulKernel, Rounding, TileSize,
 };
 use hbfp::util::pool::ParBackend;
 use hbfp::util::rng::{SplitMix64, Xorshift32};
-use hbfp::util::worker_threads;
 
 fn randv(n: usize, seed: u64) -> Vec<f32> {
     let mut rng = SplitMix64::new(seed);
@@ -38,8 +39,9 @@ fn randv(n: usize, seed: u64) -> Vec<f32> {
 fn main() {
     let opts = BenchOpts::from_env();
     let mut sink = JsonSink::new("bfp_ops");
-    let nt = worker_threads();
-    let isa = kernels::active();
+    let ctx = BfpContext::from_env(); // HBFP_THREADS / HBFP_SIMD resolved once
+    let nt = ctx.threads();
+    let isa = ctx.isa();
     println!(
         "SIMD kernel family: {} (panel width {}; HBFP_SIMD=off|sse|avx2|neon|auto to override)",
         isa.name(),
@@ -55,20 +57,13 @@ fn main() {
     ] {
         let rows = (n as f64).sqrt() as usize;
         let data = randv(rows * rows, 1);
+        let qctx = ctx.clone().with_tile(TileSize::Edge(tile));
         let r = bench(
             &opts,
             &format!("quantize {rows}x{rows} m={m} t={tile}"),
             (rows * rows) as f64,
             || {
-                let t = BfpTensor::from_f32(
-                    &data,
-                    rows,
-                    rows,
-                    m,
-                    TileSize::Edge(tile),
-                    &mut Rounding::NearestEven,
-                )
-                .unwrap();
+                let t = qctx.quantize(&data, rows, rows, m, &mut Rounding::NearestEven).unwrap();
                 std::hint::black_box(&t);
             },
         );
@@ -77,17 +72,9 @@ fn main() {
     // single-thread reference for the parallel-speedup row
     {
         let data = randv(1024 * 1024, 1);
+        let ctx1 = ctx.clone().with_threads(1).with_tile(TileSize::Edge(24));
         let r = bench(&opts, "quantize 1024x1024 m=8 t=24 (1 thread)", (1024 * 1024) as f64, || {
-            let t = BfpTensor::from_f32_with_threads(
-                &data,
-                1024,
-                1024,
-                8,
-                TileSize::Edge(24),
-                &mut Rounding::NearestEven,
-                1,
-            )
-            .unwrap();
+            let t = ctx1.quantize(&data, 1024, 1024, 8, &mut Rounding::NearestEven).unwrap();
             std::hint::black_box(&t);
         });
         sink.push(&r, (1024 * 1024) as f64);
@@ -96,16 +83,9 @@ fn main() {
     header("BFP quantization, stochastic rounding (hardware converter)");
     let data = randv(256 * 256, 2);
     let mut rng = Xorshift32::new(7);
+    let sctx = ctx.clone().with_tile(TileSize::Edge(24));
     let r = bench(&opts, "quantize 256x256 m=8 t=24 stochastic", (256 * 256) as f64, || {
-        let t = BfpTensor::from_f32(
-            &data,
-            256,
-            256,
-            8,
-            TileSize::Edge(24),
-            &mut Rounding::Stochastic(&mut rng),
-        )
-        .unwrap();
+        let t = sctx.quantize(&data, 256, 256, 8, &mut Rounding::Stochastic(&mut rng)).unwrap();
         std::hint::black_box(&t);
     });
     sink.push(&r, (256 * 256) as f64);
@@ -120,25 +100,24 @@ fn main() {
     });
     sink.push(&r, flops);
     for &(bits, tile) in &[(8u32, 24usize), (8, 64), (12, 24), (16, 24)] {
-        let qa =
-            BfpTensor::from_f32(&a, m, k, bits, TileSize::Edge(tile), &mut Rounding::NearestEven)
-                .unwrap();
-        let qb =
-            BfpTensor::from_f32(&b, k, n, bits, TileSize::Edge(tile), &mut Rounding::NearestEven)
-                .unwrap();
+        let tctx = ctx.clone().with_tile(TileSize::Edge(tile));
+        let qa = tctx.quantize(&a, m, k, bits, &mut Rounding::NearestEven).unwrap();
+        let qb = tctx.quantize(&b, k, n, bits, &mut Rounding::NearestEven).unwrap();
         if bits == 8 && tile == 24 {
             // §Perf before/after ladder at the paper's hbfp8 config
             let r = bench(&opts, "bfp_matmul m=8 t=24 (naive, before)", flops, || {
                 std::hint::black_box(bfp_matmul_naive(&qa, &qb).unwrap());
             });
             sink.push(&r, flops);
+            let rm1 = tctx.clone().with_kernel(MatmulKernel::RowMajor).with_threads(1);
             let r = bench(&opts, "bfp_matmul m=8 t=24 (row-major, 1 thread)", flops, || {
-                std::hint::black_box(bfp_matmul_rowmajor_with_threads(&qa, &qb, 1).unwrap());
+                std::hint::black_box(rm1.matmul(&qa, &qb).unwrap());
             });
             sink.push(&r, flops);
+            let rm = tctx.clone().with_kernel(MatmulKernel::RowMajor);
             let r =
                 bench(&opts, "bfp_matmul m=8 t=24 (row-major packed-parallel)", flops, || {
-                    std::hint::black_box(bfp_matmul_rowmajor_with_threads(&qa, &qb, nt).unwrap());
+                    std::hint::black_box(rm.matmul(&qa, &qb).unwrap());
                 });
             sink.push(&r, flops);
         }
@@ -148,7 +127,7 @@ fn main() {
             &format!("bfp_matmul m={bits} t={tile} (packed-panel, warm)"),
             flops,
             || {
-                std::hint::black_box(bfp_matmul_with_threads(&qa, &qb, nt).unwrap());
+                std::hint::black_box(tctx.matmul(&qa, &qb).unwrap());
             },
         );
         sink.push(&r, flops);
@@ -156,20 +135,21 @@ fn main() {
             // scalar-kernel partner of the warm rung: same panel path,
             // panels re-packed at the scalar width (8) — the margin over
             // this row is the SIMD win at 256^3
+            let scalar = tctx.clone().with_isa(Isa::Scalar);
             let r = bench(&opts, "bfp_matmul m=8 t=24 (packed-panel warm, simd off)", flops, || {
-                std::hint::black_box(bfp_matmul_with_simd(&qa, &qb, nt, Isa::Scalar).unwrap());
+                std::hint::black_box(scalar.matmul(&qa, &qb).unwrap());
             });
             sink.push(&r, flops);
             qb.packed_panels(); // restore the active family's panels
             let r = bench(&opts, "bfp_matmul m=8 t=24 (packed-panel, cold-pack)", flops, || {
                 qb.clear_panel_cache();
-                std::hint::black_box(bfp_matmul_with_threads(&qa, &qb, nt).unwrap());
+                std::hint::black_box(tctx.matmul(&qa, &qb).unwrap());
             });
             sink.push(&r, flops);
             qb.packed_panels();
             let r = bench(&opts, "quantize_matmul m=8 t=24 (fused A-convert)", flops, || {
                 std::hint::black_box(
-                    quantize_matmul(&a, m, 8, &mut Rounding::NearestEven, &qb).unwrap(),
+                    tctx.quantize_matmul(&a, m, 8, &mut Rounding::NearestEven, &qb).unwrap(),
                 );
             });
             sink.push(&r, flops);
@@ -182,71 +162,80 @@ fn main() {
         let a = randv(m * k, 6);
         let b = randv(k * n, 7);
         let flops = (2 * m * k * n) as f64;
-        let qa =
-            BfpTensor::from_f32(&a, m, k, 8, TileSize::Edge(24), &mut Rounding::NearestEven)
-                .unwrap();
-        let qb =
-            BfpTensor::from_f32(&b, k, n, 8, TileSize::Edge(24), &mut Rounding::NearestEven)
-                .unwrap();
+        let tctx = ctx.clone().with_tile(TileSize::Edge(24));
+        let qa = tctx.quantize(&a, m, k, 8, &mut Rounding::NearestEven).unwrap();
+        let qb = tctx.quantize(&b, k, n, 8, &mut Rounding::NearestEven).unwrap();
         qb.packed_panels(); // both rungs warm: isolate dispatch cost
+        let scoped = tctx.clone().with_backend(ParBackend::Scoped);
         let r = bench(&opts, "bfp_matmul 128^3 m=8 t=24 (scoped-spawn)", flops, || {
-            std::hint::black_box(
-                bfp_matmul_with_backend(&qa, &qb, nt, ParBackend::Scoped).unwrap(),
-            );
+            std::hint::black_box(scoped.matmul(&qa, &qb).unwrap());
         });
         sink.push(&r, flops);
         let r = bench(&opts, "bfp_matmul 128^3 m=8 t=24 (pooled)", flops, || {
-            std::hint::black_box(
-                bfp_matmul_with_backend(&qa, &qb, nt, ParBackend::Pooled).unwrap(),
-            );
+            std::hint::black_box(tctx.matmul(&qa, &qb).unwrap());
         });
         sink.push(&r, flops);
     }
 
-    header("resident weights: skinny activation GEMM (8x256x256), panel reuse per step");
+    header("resident weights: skinny activation GEMM (8x256x256), panel + plan reuse per step");
     {
         let (m, k, n) = (8usize, 256usize, 256usize);
         let a = randv(m * k, 8);
         let b = randv(k * n, 9);
         let flops = (2 * m * k * n) as f64;
-        let qa =
-            BfpTensor::from_f32(&a, m, k, 8, TileSize::Edge(24), &mut Rounding::NearestEven)
-                .unwrap();
-        let qb =
-            BfpTensor::from_f32(&b, k, n, 8, TileSize::Edge(24), &mut Rounding::NearestEven)
-                .unwrap();
+        let tctx = ctx.clone().with_tile(TileSize::Edge(24));
+        let qa = tctx.quantize(&a, m, k, 8, &mut Rounding::NearestEven).unwrap();
+        let qb = tctx.quantize(&b, k, n, 8, &mut Rounding::NearestEven).unwrap();
+        let rm = tctx.clone().with_kernel(MatmulKernel::RowMajor);
         let r = bench(&opts, "bfp_matmul 8x256x256 (row-major)", flops, || {
-            std::hint::black_box(bfp_matmul_rowmajor_with_threads(&qa, &qb, nt).unwrap());
+            std::hint::black_box(rm.matmul(&qa, &qb).unwrap());
         });
         sink.push(&r, flops);
         qb.packed_panels();
         let r = bench(&opts, "bfp_matmul 8x256x256 (packed-panel, warm)", flops, || {
-            std::hint::black_box(bfp_matmul_with_threads(&qa, &qb, nt).unwrap());
+            std::hint::black_box(tctx.matmul(&qa, &qb).unwrap());
         });
         sink.push(&r, flops);
         // scalar-kernel partner at the resident-weight shape
+        let scalar = tctx.clone().with_isa(Isa::Scalar);
         let r = bench(&opts, "bfp_matmul 8x256x256 (packed-panel warm, simd off)", flops, || {
-            std::hint::black_box(bfp_matmul_with_simd(&qa, &qb, nt, Isa::Scalar).unwrap());
+            std::hint::black_box(scalar.matmul(&qa, &qb).unwrap());
         });
         sink.push(&r, flops);
         qb.packed_panels(); // restore the active family's panels
         let r = bench(&opts, "bfp_matmul 8x256x256 (packed-panel, cold-pack)", flops, || {
             qb.clear_panel_cache();
-            std::hint::black_box(bfp_matmul_with_threads(&qa, &qb, nt).unwrap());
+            std::hint::black_box(tctx.matmul(&qa, &qb).unwrap());
         });
+        sink.push(&r, flops);
+        qb.packed_panels();
+
+        // The plan API's win, isolated: a prebuilt plan + caller buffer
+        // (the per-layer training-step shape) vs the warm rung above,
+        // which re-resolves policy and allocates output on every
+        // ctx.matmul call. Same kernel, same bits.
+        let plan = tctx.plan_matmul(m, k, n, (8, 8)).unwrap();
+        let mut out = vec![0.0f32; plan.out_len()];
+        let r = bench(&opts, "bfp_matmul 8x256x256 (plan-reuse, execute_into)", flops, || {
+            plan.execute_into(&qa, &qb, &mut out).unwrap();
+            std::hint::black_box(&out);
+        });
+        sink.push(&r, flops);
+        let r = bench(
+            &opts,
+            "quantize_matmul 8x256x256 (plan-reuse fused, into)",
+            flops,
+            || {
+                plan.quantize_execute_into(&a, &mut Rounding::NearestEven, &qb, &mut out).unwrap();
+                std::hint::black_box(&out);
+            },
+        );
         sink.push(&r, flops);
     }
 
     header("wide weight storage: narrow_view (16 -> 8 bits, repacking)");
-    let w = BfpTensor::from_f32(
-        &randv(512 * 512, 5),
-        512,
-        512,
-        16,
-        TileSize::Edge(24),
-        &mut Rounding::NearestEven,
-    )
-    .unwrap();
+    let wctx = ctx.clone().with_tile(TileSize::Edge(24));
+    let w = wctx.quantize(&randv(512 * 512, 5), 512, 512, 16, &mut Rounding::NearestEven).unwrap();
     let r = bench(&opts, "narrow_view 512x512 16->8", (512 * 512) as f64, || {
         std::hint::black_box(w.narrow_view(8, &mut Rounding::NearestEven).unwrap());
     });

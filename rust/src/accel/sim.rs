@@ -7,10 +7,17 @@
 //! systolic schedule. Produces both the *numbers* (bit-accurate against
 //! `crate::bfp`) and the *performance* (cycles, utilization, effective
 //! throughput), so the repro harness can report TOp/s per format.
+//!
+//! Numeric execution goes through one [`BfpContext`] resolved at
+//! construction (tile = the array edge) and, for resident weights, a
+//! cached [`MatmulPlan`] per loaded layer: every training-step GEMM
+//! re-executes the plan with zero per-call policy work, and
+//! [`Accelerator::gemm_resident_into`] streams into a caller-held output
+//! buffer so the step loop allocates nothing per step.
 
 use anyhow::{anyhow, Result};
 
-use crate::bfp::{BfpTensor, Rounding, TileSize};
+use crate::bfp::{BfpContext, BfpTensor, MatmulPlan, Rounding, TileSize};
 use crate::util::rng::Xorshift32;
 
 use super::area::{size_design, AccelConfig};
@@ -36,16 +43,20 @@ pub struct GemmStats {
 
 /// Weights quantized once and held next to the array (packed-panel
 /// layout cached on the tensor) — the paper's resident operand, reused
-/// by every training-step GEMM without reconversion or relayout.
+/// by every training-step GEMM without reconversion or relayout. Also
+/// carries the layer's [`MatmulPlan`], rebuilt only when the activation
+/// batch height changes.
 struct ResidentWeights {
     qb: BfpTensor,
     mantissa_bits: u32,
+    plan: Option<MatmulPlan>,
 }
 
 /// The simulated accelerator.
 pub struct Accelerator {
     pub cfg: AccelConfig,
     pub edge: usize,
+    ctx: BfpContext,
     rng: Xorshift32,
     resident: Option<ResidentWeights>,
 }
@@ -53,7 +64,16 @@ pub struct Accelerator {
 impl Accelerator {
     pub fn new(cfg: AccelConfig) -> Accelerator {
         let report = size_design(&cfg);
-        Accelerator { cfg, edge: report.array_edge, rng: Xorshift32::new(0xACCE1), resident: None }
+        let edge = report.array_edge;
+        Accelerator {
+            cfg,
+            edge,
+            // exponent tiles == systolic tiles; everything else (threads,
+            // SIMD family, backend) resolves from the environment once
+            ctx: BfpContext::from_env().with_tile(TileSize::Edge(edge)),
+            rng: Xorshift32::new(0xACCE1),
+            resident: None,
+        }
     }
 
     /// Execute C = A (MxK) · B (KxN) through the modeled datapath.
@@ -61,11 +81,11 @@ impl Accelerator {
     /// Numeric path: B (the resident operand) is quantized per
     /// (edge x edge) tile with stochastic rounding into packed BFP; A
     /// streams through the fused converter + integer-MAC path
-    /// (`quantize_matmul`), exactly like activations crossing the array
-    /// boundary in Figure 2 — no intermediate quantized-A tensor is ever
-    /// materialized. Schedule: output-stationary; each (edge x edge)
-    /// output tile streams K values through the array with a fill+drain
-    /// of 2*edge cycles.
+    /// ([`MatmulPlan::quantize_execute_into`]), exactly like activations
+    /// crossing the array boundary in Figure 2 — no intermediate
+    /// quantized-A tensor is ever materialized. Schedule:
+    /// output-stationary; each (edge x edge) output tile streams K values
+    /// through the array with a fill+drain of 2*edge cycles.
     pub fn gemm(
         &mut self,
         a: &[f32],
@@ -79,8 +99,11 @@ impl Accelerator {
         // weights loaded via `load_weights`); its converter cycles count
         // toward this GEMM
         let rw = self.quantize_weights(b, k, n, mantissa_bits)?;
+        let plan = self.ctx.plan_matmul(m, k, n, (mantissa_bits, mantissa_bits))?;
+        let mut out = Vec::new();
         let Accelerator { cfg, edge, rng, .. } = self;
-        gemm_against(cfg, *edge, rng, &rw, a, m, true)
+        let stats = gemm_against(cfg, *edge, rng, &rw, &plan, a, m, true, &mut out)?;
+        Ok((out, stats))
     }
 
     /// Quantize + panel-pack `b` once as the array's resident operand.
@@ -106,28 +129,56 @@ impl Accelerator {
         n: usize,
         mantissa_bits: u32,
     ) -> Result<ResidentWeights> {
-        let tile = TileSize::Edge(self.edge);
         let qb = {
-            let rounding = &mut Rounding::Stochastic(&mut self.rng);
-            BfpTensor::from_f32(b, k, n, mantissa_bits, tile, rounding)?
+            let mut rounding = Rounding::Stochastic(&mut self.rng);
+            self.ctx.quantize(b, k, n, mantissa_bits, &mut rounding)?
         };
         if k > 0 && n > 0 {
-            // pack now, at the active SIMD family's panel width
-            // (kernels::active_panel_nr); every GEMM reuses the layout
-            qb.packed_panels();
+            // pack now, at the context's kernel-family panel width;
+            // every GEMM reuses the layout
+            qb.packed_panels_nr(self.ctx.isa().panel_nr());
         }
-        Ok(ResidentWeights { qb, mantissa_bits })
+        Ok(ResidentWeights { qb, mantissa_bits, plan: None })
     }
 
     /// GEMM of streamed activations against the resident weights (must be
     /// loaded first). Only the A-side converter runs; weights were
-    /// converted and packed at load time.
+    /// converted and packed at load time. Allocates a fresh output — the
+    /// step loop should prefer [`Accelerator::gemm_resident_into`].
     pub fn gemm_resident(&mut self, a: &[f32], m: usize) -> Result<(Vec<f32>, GemmStats)> {
-        let Accelerator { cfg, edge, rng, resident } = self;
+        let mut out = Vec::new();
+        let stats = self.gemm_resident_into(a, m, &mut out)?;
+        Ok((out, stats))
+    }
+
+    /// [`Accelerator::gemm_resident`] into a caller-held buffer: resized
+    /// to `m * n` on first use, then reused allocation-free across steps.
+    /// The layer's [`MatmulPlan`] is cached alongside the weights and
+    /// rebuilt only when `m` changes.
+    pub fn gemm_resident_into(
+        &mut self,
+        a: &[f32],
+        m: usize,
+        out: &mut Vec<f32>,
+    ) -> Result<GemmStats> {
+        let Accelerator { cfg, edge, ctx, rng, resident } = self;
         let rw = resident
-            .as_ref()
+            .as_mut()
             .ok_or_else(|| anyhow!("no resident weights: call load_weights first"))?;
-        gemm_against(cfg, *edge, rng, rw, a, m, false)
+        let plan = match rw.plan {
+            Some(p) if p.m() == m => p,
+            _ => {
+                let p = ctx.plan_matmul(
+                    m,
+                    rw.qb.rows,
+                    rw.qb.cols,
+                    (rw.mantissa_bits, rw.mantissa_bits),
+                )?;
+                rw.plan = Some(p);
+                p
+            }
+        };
+        gemm_against(cfg, *edge, rng, rw, &plan, a, m, false, out)
     }
 
     /// Activation-unit pass (ReLU in narrow FP): counted at one element per
@@ -144,26 +195,25 @@ impl Accelerator {
 }
 
 /// Numeric path + cycle accounting of one GEMM against quantized,
-/// panel-packed weights. `count_weight_conv` adds the weight-side
-/// converter traffic (one-shot GEMMs convert weights in-call; resident
-/// weights were converted at load).
+/// panel-packed weights, executed through the layer's plan into the
+/// caller's buffer. `count_weight_conv` adds the weight-side converter
+/// traffic (one-shot GEMMs convert weights in-call; resident weights
+/// were converted at load).
+#[allow(clippy::too_many_arguments)]
 fn gemm_against(
     cfg: &AccelConfig,
     edge: usize,
     rng: &mut Xorshift32,
     rw: &ResidentWeights,
+    plan: &MatmulPlan,
     a: &[f32],
     m: usize,
     count_weight_conv: bool,
-) -> Result<(Vec<f32>, GemmStats)> {
+    out: &mut Vec<f32>,
+) -> Result<GemmStats> {
     let (k, n) = (rw.qb.rows, rw.qb.cols);
-    let out = crate::bfp::quantize_matmul(
-        a,
-        m,
-        rw.mantissa_bits,
-        &mut Rounding::Stochastic(rng),
-        &rw.qb,
-    )?;
+    out.resize(plan.out_len(), 0.0);
+    plan.quantize_execute_into(a, &mut Rounding::Stochastic(rng), &rw.qb, out)?;
 
     let e = edge as u64;
     let tiles_m = m.div_ceil(edge) as u64;
@@ -179,20 +229,17 @@ fn gemm_against(
     let conv_cycles = conv_inputs / (2 * e).max(1);
     let secs = cycles as f64 / cfg.clock_hz;
     let effective_ops = 2.0 * macs_used as f64 / secs;
-    Ok((
-        out,
-        GemmStats {
-            m,
-            k,
-            n,
-            array_edge: edge,
-            cycles,
-            macs_used,
-            utilization,
-            effective_ops,
-            conv_cycles,
-        },
-    ))
+    Ok(GemmStats {
+        m,
+        k,
+        n,
+        array_edge: edge,
+        cycles,
+        macs_used,
+        utilization,
+        effective_ops,
+        conv_cycles,
+    })
 }
 
 #[cfg(test)]
@@ -284,6 +331,37 @@ mod tests {
     }
 
     #[test]
+    fn gemm_resident_into_reuses_the_buffer_and_plan() {
+        // The step-loop shape: one caller-held output buffer across
+        // steps, the layer plan cached on the resident weights, results
+        // identical to the allocating wrapper with the same RNG stream.
+        let mut rng = SplitMix64::new(0x1C);
+        let e = accel().edge;
+        let (m, k, n) = (e, 2 * e, e);
+        let b: Vec<f32> = (0..k * n).map(|_| rng.normal()).collect();
+        let a1: Vec<f32> = (0..m * k).map(|_| rng.normal()).collect();
+        let a2: Vec<f32> = (0..m * k).map(|_| rng.normal()).collect();
+
+        let mut want = accel();
+        want.load_weights(&b, k, n, 8).unwrap();
+        let (w1, _) = want.gemm_resident(&a1, m).unwrap();
+        let (w2, _) = want.gemm_resident(&a2, m).unwrap();
+
+        let mut acc = accel();
+        acc.load_weights(&b, k, n, 8).unwrap();
+        let mut out = Vec::new();
+        let s1 = acc.gemm_resident_into(&a1, m, &mut out).unwrap();
+        assert_eq!(out, w1);
+        assert_eq!((s1.m, s1.k, s1.n), (m, k, n));
+        let cap = out.capacity();
+        acc.gemm_resident_into(&a2, m, &mut out).unwrap();
+        assert_eq!(out, w2);
+        assert_eq!(out.capacity(), cap, "steady-state steps must not reallocate");
+        let plan = acc.resident.as_ref().unwrap().plan.expect("plan cached");
+        assert_eq!((plan.m(), plan.k(), plan.n()), (m, k, n));
+    }
+
+    #[test]
     fn gemm_resident_requires_loaded_weights() {
         let mut acc = accel();
         assert!(acc.gemm_resident(&[1.0; 8], 1).is_err());
@@ -292,7 +370,7 @@ mod tests {
     #[test]
     fn resident_weights_pack_at_the_active_simd_width() {
         // load_weights pre-packs the panel layout; it must be the layout
-        // the active kernel family streams, or the first gemm_resident
+        // the context's kernel family streams, or the first gemm_resident
         // would silently repack (paying the relayout per step).
         let mut rng = SplitMix64::new(12);
         let mut acc = accel();

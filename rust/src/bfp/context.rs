@@ -1,0 +1,848 @@
+//! `BfpContext` + `MatmulPlan`: the execution-context API of the BFP
+//! datapath.
+//!
+//! Three optimization passes (packed mantissas → worker pool + packed
+//! panels → SIMD kernel families) each bolted a knob onto the call
+//! surface until the paper's single conceptual operation — a BFP
+//! dot-product engine with FP32 accumulation (§4, Eq. 2) — was reachable
+//! through nine near-duplicate free functions plus `HBFP_THREADS` /
+//! `HBFP_SIMD` env vars read at scattered points. This module replaces
+//! that zoo with a two-level API:
+//!
+//! - [`BfpContext`] owns **all execution policy**: worker-thread budget,
+//!   dispatch backend (pooled vs scoped spawns), SIMD kernel family,
+//!   matmul kernel layout, exponent-tile size, accumulator policy, and a
+//!   default rounding policy — resolved **once** from the environment
+//!   ([`BfpContext::from_env`]) and adjusted with builder methods. A
+//!   context is a plain value: clone it, tweak a knob, hand it to a
+//!   subsystem.
+//! - [`MatmulPlan`] ([`BfpContext::plan_matmul`]) pre-resolves every
+//!   per-shape decision — matmul tile edge, panel register width,
+//!   accumulator class ([`acc_fits_i32`]), inline-vs-pool lane counts
+//!   for both the plain and the fused (convert + matmul) paths — so the
+//!   hot loop does **zero per-call policy work**. Plans are `Copy`,
+//!   cheap to build, validated against their operands, and reusable for
+//!   any number of executions (the resident-weight training-step shape
+//!   holds one plan per layer).
+//!
+//! Execution entry points:
+//!
+//! | call | use |
+//! |---|---|
+//! | [`MatmulPlan::execute`] | C = A·B over BFP tensors, fresh output |
+//! | [`MatmulPlan::execute_into`] | same, into a caller buffer (allocation-free on the warm packed single-lane path) |
+//! | [`MatmulPlan::quantize_execute`] | fused FP→BFP A-convert + matmul (activations streaming against resident weights) |
+//! | [`MatmulPlan::quantize_execute_into`] | fused, into a caller buffer |
+//! | [`BfpContext::matmul`] / [`BfpContext::quantize_matmul`] | one-shot conveniences that build the plan from the operands |
+//! | [`BfpContext::quantize`] / [`BfpContext::quantize_inplace`] | the FP→BFP converter under the context's thread budget and tile |
+//! | [`BfpContext::matmul_f32`] | quantize both f32 operands and multiply (demo/eval paths) |
+//!
+//! Every knob moves **speed, never bits**: all kernel layouts, ISA
+//! families, backends, thread counts, and accumulator policies produce
+//! results bit-identical to [`super::matmul::bfp_matmul_naive`],
+//! enforced by `tests/context_api.rs`. The legacy free functions survive only as
+//! `#[deprecated]` one-line shims over a default context (importable
+//! from their defining modules; no longer re-exported at `bfp::`).
+
+use anyhow::{anyhow, Result};
+
+use super::kernels::Isa;
+use super::matmul::{self, acc_fits_i32};
+use super::panels::matmul_tile_edge;
+use super::quant::{OwnedRounding, Rounding, TileRounding};
+use super::tensor::{self, BfpTensor, TileSize};
+use crate::util::pool::{self, ParBackend};
+use crate::util::rng::Xorshift32;
+use crate::util::worker_threads;
+
+/// Which matmul kernel layout a context dispatches.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MatmulKernel {
+    /// The packed-panel register-blocked microkernel streaming the
+    /// B operand's cached k-tile-major layout — the default hot path.
+    Packed,
+    /// The pre-panel row-major walk (always scalar inner loops). Kept
+    /// reachable as the bench ladder's layout partner and a
+    /// differential-test reference; bit-identical to `Packed`. Applies
+    /// to plain execution only — the fused convert+matmul paths
+    /// ([`MatmulPlan::quantize_execute`]) always stream packed panels,
+    /// whatever this knob says.
+    RowMajor,
+}
+
+/// Integer-accumulator policy for the tile MAC loops.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AccPolicy {
+    /// `i32` when the proven overflow bound ([`acc_fits_i32`]) allows,
+    /// `i64` otherwise — the default, and what the hardware maps.
+    Auto,
+    /// Always accumulate in `i64`. Same integer partials, same bits —
+    /// a diagnostic knob for isolating accumulator-width effects in
+    /// benches and tests.
+    ForceI64,
+}
+
+/// Default rounding for context conveniences that quantize on the
+/// caller's behalf without an explicit [`Rounding`]
+/// ([`BfpContext::matmul_f32`]). Paths that thread caller-owned RNG
+/// state (the accelerator sim's persistent converter stream) keep
+/// passing `&mut Rounding` explicitly.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RoundingPolicy {
+    NearestEven,
+    /// Stochastic rounding from a fresh Xorshift32 seeded with this
+    /// value at each convenience call (deterministic per call).
+    StochasticSeed(u32),
+}
+
+impl RoundingPolicy {
+    fn owned(self) -> OwnedRounding {
+        match self {
+            RoundingPolicy::NearestEven => OwnedRounding::NearestEven,
+            RoundingPolicy::StochasticSeed(s) => OwnedRounding::Stochastic(Xorshift32::new(s)),
+        }
+    }
+}
+
+/// All execution policy for the BFP datapath, resolved once.
+///
+/// [`BfpContext::from_env`] (or `Default`) reads `HBFP_THREADS` and
+/// `HBFP_SIMD` exactly as the legacy entry points did; builder methods
+/// override individual knobs. The context carries the *policy*; the
+/// per-shape resolution lives in [`MatmulPlan`].
+///
+/// The ISA knob steers the matmul microkernel and the panel width; the
+/// converters always run the process-wide family (every family is
+/// bit-identical, so this is invisible in the results).
+#[derive(Debug, Clone)]
+pub struct BfpContext {
+    threads: usize,
+    backend: ParBackend,
+    isa: Isa,
+    kernel: MatmulKernel,
+    tile: TileSize,
+    acc: AccPolicy,
+    rounding: RoundingPolicy,
+}
+
+impl Default for BfpContext {
+    fn default() -> BfpContext {
+        BfpContext::from_env()
+    }
+}
+
+impl BfpContext {
+    /// Policy resolved from the environment: `HBFP_THREADS` (or all
+    /// cores), the `HBFP_SIMD`-selected kernel family, pooled dispatch,
+    /// the packed-panel kernel, the paper's t=24 exponent tiles,
+    /// automatic accumulator selection, nearest-even rounding.
+    pub fn from_env() -> BfpContext {
+        BfpContext {
+            threads: worker_threads(),
+            backend: ParBackend::Pooled,
+            isa: super::kernels::active(),
+            kernel: MatmulKernel::Packed,
+            tile: TileSize::Edge(24),
+            acc: AccPolicy::Auto,
+            rounding: RoundingPolicy::NearestEven,
+        }
+    }
+
+    /// Cap the worker-lane budget (clamped to at least 1). Results are
+    /// bit-identical for any thread count.
+    pub fn with_threads(mut self, threads: usize) -> Self {
+        self.threads = threads.max(1);
+        self
+    }
+
+    /// Choose the dispatch backend (persistent pool vs per-call scoped
+    /// spawns). Bit-identical either way; `Scoped` exists for the bench
+    /// ladder's spawn-amortization rung.
+    pub fn with_backend(mut self, backend: ParBackend) -> Self {
+        self.backend = backend;
+        self
+    }
+
+    /// Force a SIMD kernel family. Clamped to what the CPU supports
+    /// ([`Isa::clamped`]), so any value is safe; bit-identical across
+    /// families.
+    pub fn with_isa(mut self, isa: Isa) -> Self {
+        self.isa = isa.clamped();
+        self
+    }
+
+    /// Choose the matmul kernel layout (packed panels vs row-major).
+    pub fn with_kernel(mut self, kernel: MatmulKernel) -> Self {
+        self.kernel = kernel;
+        self
+    }
+
+    /// Exponent-tile size used by [`BfpContext::plan_matmul`],
+    /// [`BfpContext::quantize`], and [`BfpContext::quantize_inplace`].
+    pub fn with_tile(mut self, tile: TileSize) -> Self {
+        self.tile = tile;
+        self
+    }
+
+    /// Accumulator policy override (see [`AccPolicy`]).
+    pub fn with_acc(mut self, acc: AccPolicy) -> Self {
+        self.acc = acc;
+        self
+    }
+
+    /// Default rounding policy for the quantizing conveniences.
+    pub fn with_rounding(mut self, rounding: RoundingPolicy) -> Self {
+        self.rounding = rounding;
+        self
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    pub fn backend(&self) -> ParBackend {
+        self.backend
+    }
+
+    pub fn isa(&self) -> Isa {
+        self.isa
+    }
+
+    pub fn kernel(&self) -> MatmulKernel {
+        self.kernel
+    }
+
+    pub fn tile(&self) -> TileSize {
+        self.tile
+    }
+
+    pub fn acc(&self) -> AccPolicy {
+        self.acc
+    }
+
+    pub fn rounding_policy(&self) -> RoundingPolicy {
+        self.rounding
+    }
+
+    /// Pre-resolve a C = A·B execution for A: m x k and B: k x n at
+    /// mantissa widths `(a_bits, b_bits)`, under this context's policy
+    /// and tile size. The plan fixes the matmul tile edge, panel width,
+    /// accumulator class, and lane counts once; executing it does no
+    /// further policy work.
+    pub fn plan_matmul(
+        &self,
+        m: usize,
+        k: usize,
+        n: usize,
+        widths: (u32, u32),
+    ) -> Result<MatmulPlan> {
+        MatmulPlan::new(self, self.tile, m, k, n, widths.0, widths.1)
+    }
+
+    /// One-shot C = A·B: builds the plan from the operands (their tile
+    /// configuration and widths — the context's tile default is not
+    /// consulted, unlike [`BfpContext::plan_matmul`], which plans for
+    /// `ctx.tile` and rejects operands quantized on a different grid).
+    /// For repeated GEMMs of one shape, build the plan once with
+    /// [`BfpContext::plan_matmul`].
+    pub fn matmul(&self, a: &BfpTensor, b: &BfpTensor) -> Result<Vec<f32>> {
+        self.plan_for_operands(a, b)?.execute(a, b)
+    }
+
+    /// [`BfpContext::matmul`] into a caller-provided buffer of exactly
+    /// `a.rows * b.cols` elements.
+    pub fn matmul_into(&self, a: &BfpTensor, b: &BfpTensor, out: &mut [f32]) -> Result<()> {
+        self.plan_for_operands(a, b)?.execute_into(a, b, out)
+    }
+
+    /// One-shot fused FP→BFP convert + matmul: quantizes row-band tiles
+    /// of `a` on the fly (per-band scratch, never a materialized A
+    /// tensor) and MACs them against the resident `b`. The plan is
+    /// built from **`b`'s tile configuration** (the context's tile
+    /// default is not consulted — A must convert on B's tile grid), and
+    /// the result is bit-identical to quantizing `a` at `b.tile` and
+    /// multiplying, stochastic rounding included (same per-tile
+    /// substreams).
+    pub fn quantize_matmul(
+        &self,
+        a: &[f32],
+        a_rows: usize,
+        a_bits: u32,
+        rounding: &mut Rounding,
+        b: &BfpTensor,
+    ) -> Result<Vec<f32>> {
+        let plan = MatmulPlan::new(self, b.tile, a_rows, b.rows, b.cols, a_bits, b.mantissa_bits)?;
+        plan.quantize_execute(a, rounding, b)
+    }
+
+    /// Quantize an f32 matrix into packed BFP storage under this
+    /// context's tile size and thread budget. Bit-identical for any
+    /// thread count (stochastic rounding uses per-tile substreams).
+    pub fn quantize(
+        &self,
+        data: &[f32],
+        rows: usize,
+        cols: usize,
+        mantissa_bits: u32,
+        rounding: &mut Rounding,
+    ) -> Result<BfpTensor> {
+        BfpTensor::from_f32_impl(data, rows, cols, mantissa_bits, self.tile, rounding, self.threads)
+    }
+
+    /// In-place FP→BFP→FP round-trip of a row-major matrix (the
+    /// host-side input-converter boundary) under this context's tile
+    /// size and thread budget.
+    pub fn quantize_inplace(
+        &self,
+        data: &mut [f32],
+        rows: usize,
+        cols: usize,
+        mantissa_bits: u32,
+        rounding: &mut Rounding,
+    ) -> Result<()> {
+        tensor::quantize_inplace_2d_impl(
+            data,
+            rows,
+            cols,
+            mantissa_bits,
+            self.tile,
+            rounding,
+            self.threads,
+        )
+    }
+
+    /// Convenience: quantize both f32 operands (B once as resident
+    /// weights, A through the fused converter) and multiply in BFP,
+    /// rounding per the context's [`RoundingPolicy`].
+    pub fn matmul_f32(
+        &self,
+        a: &[f32],
+        b: &[f32],
+        m: usize,
+        k: usize,
+        n: usize,
+        mantissa_bits: u32,
+    ) -> Result<Vec<f32>> {
+        let mut owned = self.rounding.owned();
+        let qb = {
+            let mut r = owned.as_rounding();
+            self.quantize(b, k, n, mantissa_bits, &mut r)?
+        };
+        let mut r = owned.as_rounding();
+        self.quantize_matmul(a, m, mantissa_bits, &mut r, &qb)
+    }
+
+    fn plan_for_operands(&self, a: &BfpTensor, b: &BfpTensor) -> Result<MatmulPlan> {
+        matmul::check_shapes(a, b)?;
+        MatmulPlan::new(self, a.tile, a.rows, a.cols, b.cols, a.mantissa_bits, b.mantissa_bits)
+    }
+}
+
+/// A pre-resolved C = A·B execution: one (m, k, n, widths, tile) shape
+/// under one context's policy, with the tile edge, panel width,
+/// accumulator class, and lane counts fixed at plan time.
+///
+/// Build with [`BfpContext::plan_matmul`]; execute any number of times.
+/// Operands are validated against the planned shape/widths/tile on every
+/// call (cheap field comparisons), so a plan can never silently run a
+/// mismatched GEMM.
+#[derive(Debug, Clone, Copy)]
+pub struct MatmulPlan {
+    m: usize,
+    k: usize,
+    n: usize,
+    a_bits: u32,
+    b_bits: u32,
+    tile: TileSize,
+    kernel: MatmulKernel,
+    backend: ParBackend,
+    isa: Isa,
+    /// Matmul tile edge (`matmul_tile_edge(tile, k)`).
+    t: usize,
+    /// Panel register width the B operand packs at (the ISA family's).
+    nr: usize,
+    /// Accumulator class: `i32` iff the overflow bound holds (and the
+    /// context did not force `i64`).
+    use_i32: bool,
+    /// Lane count for [`MatmulPlan::execute`] (inline when 1).
+    threads: usize,
+    /// Converter tile dims for the fused A path (`tile.edge_or(m, k)`).
+    th: usize,
+    tw: usize,
+    /// Lane count for the fused path (its bands follow `th`, not `t`).
+    threads_fused: usize,
+}
+
+impl MatmulPlan {
+    fn new(
+        ctx: &BfpContext,
+        tile: TileSize,
+        m: usize,
+        k: usize,
+        n: usize,
+        a_bits: u32,
+        b_bits: u32,
+    ) -> Result<MatmulPlan> {
+        tensor::check_width(a_bits)?;
+        tensor::check_width(b_bits)?;
+        if let TileSize::Edge(0) = tile {
+            return Err(anyhow!("tile edge must be nonzero"));
+        }
+        let t = matmul_tile_edge(tile, k);
+        let nr = ctx.isa.panel_nr();
+        let tile_k = t.min(k).max(1);
+        let use_i32 = match ctx.acc {
+            AccPolicy::Auto => acc_fits_i32(tile_k, a_bits, b_bits),
+            AccPolicy::ForceI64 => false,
+        };
+        let work = m * k * n;
+        let bands = m.div_ceil(t).max(1);
+        let threads = match ctx.kernel {
+            MatmulKernel::Packed => pool::par_threads_simd(
+                work,
+                matmul::PAR_MIN_MACS,
+                ctx.isa.par_floor_scale(),
+                ctx.threads,
+                bands,
+            ),
+            MatmulKernel::RowMajor => {
+                pool::par_threads(work, matmul::PAR_MIN_MACS, ctx.threads, bands)
+            }
+        };
+        let (th, tw) = tile.edge_or(m, k);
+        let fused_bands = m.div_ceil(th).max(1);
+        let threads_fused = pool::par_threads_simd(
+            work,
+            matmul::PAR_MIN_MACS,
+            ctx.isa.par_floor_scale(),
+            ctx.threads,
+            fused_bands,
+        );
+        Ok(MatmulPlan {
+            m,
+            k,
+            n,
+            a_bits,
+            b_bits,
+            tile,
+            kernel: ctx.kernel,
+            backend: ctx.backend,
+            isa: ctx.isa,
+            t,
+            nr,
+            use_i32,
+            threads,
+            th,
+            tw,
+            threads_fused,
+        })
+    }
+
+    pub fn m(&self) -> usize {
+        self.m
+    }
+
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Output length (`m * n`) an [`MatmulPlan::execute_into`] buffer
+    /// must have.
+    pub fn out_len(&self) -> usize {
+        self.m * self.n
+    }
+
+    /// Planned panel register width (the ISA family's).
+    pub fn panel_nr(&self) -> usize {
+        self.nr
+    }
+
+    /// Whether the plan accumulates k-tile partials in `i32` (the
+    /// proven-bound fast class) rather than `i64`.
+    pub fn uses_i32_acc(&self) -> bool {
+        self.use_i32
+    }
+
+    /// Planned lane count for [`MatmulPlan::execute`].
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// C = A·B into a fresh row-major f32 vector.
+    pub fn execute(&self, a: &BfpTensor, b: &BfpTensor) -> Result<Vec<f32>> {
+        let mut out = vec![0.0f32; self.m * self.n];
+        self.execute_into(a, b, &mut out)?;
+        Ok(out)
+    }
+
+    /// C = A·B into a caller buffer of exactly [`MatmulPlan::out_len`]
+    /// elements (zeroed and filled here). On the default packed-panel
+    /// kernel with a warm panel cache, the single-lane path performs no
+    /// heap allocation; multi-lane dispatch allocates only the per-band
+    /// job list. (A cold panel cache packs the B layout once, and the
+    /// row-major kernel keeps per-band accumulator scratch — those paths
+    /// allocate regardless.) A length mismatch panics in debug builds
+    /// and returns an error in release.
+    pub fn execute_into(&self, a: &BfpTensor, b: &BfpTensor, out: &mut [f32]) -> Result<()> {
+        self.check_a(a)?;
+        self.check_b(b)?;
+        self.check_out(out.len())?;
+        out.fill(0.0);
+        if self.m == 0 || self.k == 0 || self.n == 0 {
+            return Ok(());
+        }
+        match self.kernel {
+            MatmulKernel::Packed => matmul::packed_matmul_into(
+                a,
+                b,
+                out,
+                self.t,
+                self.nr,
+                self.threads,
+                self.backend,
+                self.isa,
+                self.use_i32,
+            ),
+            MatmulKernel::RowMajor => matmul::rowmajor_matmul_into(
+                a,
+                b,
+                out,
+                self.t,
+                self.threads,
+                self.backend,
+                self.use_i32,
+            ),
+        }
+        Ok(())
+    }
+
+    /// Fused FP→BFP convert + matmul into a fresh vector: `a` (row-major
+    /// f32, `m x k`) streams through the converter band by band and MACs
+    /// against the resident `b`. Bit-identical to quantizing `a` first
+    /// and calling [`MatmulPlan::execute`], stochastic rounding included.
+    /// The fused path always runs the packed-panel kernel (packing `b`'s
+    /// panels on first use) — a `MatmulKernel::RowMajor` context affects
+    /// only plain execution.
+    pub fn quantize_execute(
+        &self,
+        a: &[f32],
+        rounding: &mut Rounding,
+        b: &BfpTensor,
+    ) -> Result<Vec<f32>> {
+        let mut out = vec![0.0f32; self.m * self.n];
+        self.quantize_execute_into(a, rounding, b, &mut out)?;
+        Ok(out)
+    }
+
+    /// [`MatmulPlan::quantize_execute`] into a caller buffer of exactly
+    /// [`MatmulPlan::out_len`] elements. The per-band converter scratch
+    /// is inherent to the fused path; the output itself is not
+    /// reallocated. Length mismatch: debug panic, release error.
+    pub fn quantize_execute_into(
+        &self,
+        a: &[f32],
+        rounding: &mut Rounding,
+        b: &BfpTensor,
+        out: &mut [f32],
+    ) -> Result<()> {
+        if a.len() != self.m * self.k {
+            return Err(anyhow!("a len {} != {}x{}", a.len(), self.m, self.k));
+        }
+        self.check_b(b)?;
+        self.check_out(out.len())?;
+        out.fill(0.0);
+        if self.m * self.k == 0 {
+            return Ok(());
+        }
+        // Capture before the n == 0 early return: the caller's RNG
+        // advances exactly once per fused call, matching the legacy
+        // entry point draw for draw.
+        let mode = TileRounding::capture(rounding);
+        if self.n == 0 {
+            return Ok(());
+        }
+        matmul::fused_matmul_into(
+            a,
+            b,
+            out,
+            self.m,
+            self.a_bits,
+            mode,
+            self.t,
+            self.nr,
+            self.th,
+            self.tw,
+            self.threads_fused,
+            self.backend,
+            self.isa,
+            self.use_i32,
+        );
+        Ok(())
+    }
+
+    fn check_a(&self, a: &BfpTensor) -> Result<()> {
+        if a.rows != self.m || a.cols != self.k {
+            return Err(anyhow!(
+                "A is {}x{}, plan expects {}x{}",
+                a.rows,
+                a.cols,
+                self.m,
+                self.k
+            ));
+        }
+        if a.mantissa_bits != self.a_bits {
+            return Err(anyhow!(
+                "A mantissa width {} != planned {}",
+                a.mantissa_bits,
+                self.a_bits
+            ));
+        }
+        if a.tile != self.tile {
+            return Err(anyhow!("A tile {:?} != planned {:?}", a.tile, self.tile));
+        }
+        Ok(())
+    }
+
+    fn check_b(&self, b: &BfpTensor) -> Result<()> {
+        if b.rows != self.k || b.cols != self.n {
+            return Err(anyhow!(
+                "B is {}x{}, plan expects {}x{}",
+                b.rows,
+                b.cols,
+                self.k,
+                self.n
+            ));
+        }
+        if b.mantissa_bits != self.b_bits {
+            return Err(anyhow!(
+                "B mantissa width {} != planned {}",
+                b.mantissa_bits,
+                self.b_bits
+            ));
+        }
+        if b.tile != self.tile {
+            return Err(anyhow!("B tile {:?} != planned {:?}", b.tile, self.tile));
+        }
+        Ok(())
+    }
+
+    fn check_out(&self, len: usize) -> Result<()> {
+        if len != self.m * self.n {
+            let msg = format!(
+                "plan output buffer holds {len} elements, needs {} ({}x{})",
+                self.m * self.n,
+                self.m,
+                self.n
+            );
+            // Loud in development, recoverable in production: a sized
+            // output buffer is the caller's contract, but a release
+            // binary must not take down a serving process over it.
+            if cfg!(debug_assertions) {
+                panic!("{msg}");
+            }
+            return Err(anyhow!(msg));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::SplitMix64;
+
+    fn rand_mat(rng: &mut SplitMix64, len: usize, scale: f32) -> Vec<f32> {
+        (0..len).map(|_| rng.normal() * scale).collect()
+    }
+
+    fn quantize(ctx: &BfpContext, data: &[f32], rows: usize, cols: usize, bits: u32) -> BfpTensor {
+        ctx.quantize(data, rows, cols, bits, &mut Rounding::NearestEven).unwrap()
+    }
+
+    #[test]
+    fn env_context_defaults() {
+        let ctx = BfpContext::from_env();
+        assert!(ctx.threads() >= 1);
+        assert_eq!(ctx.backend(), ParBackend::Pooled);
+        assert_eq!(ctx.kernel(), MatmulKernel::Packed);
+        assert_eq!(ctx.acc(), AccPolicy::Auto);
+        assert_eq!(ctx.rounding_policy(), RoundingPolicy::NearestEven);
+        assert_eq!(ctx.isa(), crate::bfp::kernels::active());
+    }
+
+    #[test]
+    fn builder_clamps() {
+        let ctx = BfpContext::from_env().with_threads(0);
+        assert_eq!(ctx.threads(), 1);
+        // any Isa value is safe: the builder clamps to the CPU
+        for isa in [Isa::Scalar, Isa::Sse41, Isa::Avx2, Isa::Neon] {
+            let c = BfpContext::from_env().with_isa(isa);
+            assert!(crate::bfp::kernels::detected().contains(&c.isa()));
+        }
+    }
+
+    #[test]
+    fn plan_precomputes_policy() {
+        let ctx = BfpContext::from_env().with_tile(TileSize::Edge(24));
+        let plan = ctx.plan_matmul(8, 256, 256, (8, 8)).unwrap();
+        assert_eq!((plan.m(), plan.k(), plan.n()), (8, 256, 256));
+        assert_eq!(plan.out_len(), 8 * 256);
+        assert_eq!(plan.panel_nr(), ctx.isa().panel_nr());
+        // tile_k = 24: 24 * 2^14 fits i32
+        assert!(plan.uses_i32_acc());
+        // at 16x16-bit widths a 2-deep tile already overflows i32
+        let wide = ctx.plan_matmul(8, 256, 256, (16, 16)).unwrap();
+        assert!(!wide.uses_i32_acc());
+        // the override forces the wide class even when i32 would fit
+        let forced = ctx
+            .clone()
+            .with_acc(AccPolicy::ForceI64)
+            .plan_matmul(8, 256, 256, (8, 8))
+            .unwrap();
+        assert!(!forced.uses_i32_acc());
+    }
+
+    #[test]
+    fn plan_rejects_bad_config() {
+        let ctx = BfpContext::from_env();
+        assert!(ctx.plan_matmul(4, 4, 4, (1, 8)).is_err(), "width below range");
+        assert!(ctx.plan_matmul(4, 4, 4, (8, 25)).is_err(), "width above range");
+        let z = BfpContext::from_env().with_tile(TileSize::Edge(0));
+        assert!(z.plan_matmul(4, 4, 4, (8, 8)).is_err(), "zero tile edge");
+    }
+
+    #[test]
+    fn plan_validates_operands() {
+        let ctx = BfpContext::from_env().with_tile(TileSize::Edge(8));
+        let mut rng = SplitMix64::new(1);
+        let a = rand_mat(&mut rng, 6 * 10, 1.0);
+        let b = rand_mat(&mut rng, 10 * 4, 1.0);
+        let qa = quantize(&ctx, &a, 6, 10, 8);
+        let qb = quantize(&ctx, &b, 10, 4, 8);
+        let plan = ctx.plan_matmul(6, 10, 4, (8, 8)).unwrap();
+        assert!(plan.execute(&qa, &qb).is_ok());
+        // wrong shapes / widths / tiles are rejected, never misread
+        assert!(plan.execute(&qb, &qa).is_err(), "swapped operands");
+        let q12 = quantize(&ctx, &a, 6, 10, 12);
+        assert!(plan.execute(&q12, &qb).is_err(), "width mismatch");
+        let wt = BfpContext::from_env().with_tile(TileSize::Whole);
+        let qa_whole = quantize(&wt, &a, 6, 10, 8);
+        assert!(plan.execute(&qa_whole, &qb).is_err(), "tile mismatch");
+    }
+
+    // The full policy-knob cross-product (kernel x backend x acc x
+    // threads, bit-equal to the naive reference) lives in
+    // tests/context_api.rs::policy_knobs_never_change_bits — one copy.
+
+    #[test]
+    fn execute_into_reuses_buffer() {
+        let mut rng = SplitMix64::new(7);
+        let ctx = BfpContext::from_env().with_tile(TileSize::Edge(8));
+        let (m, k, n) = (9, 12, 7);
+        let a = rand_mat(&mut rng, m * k, 1.0);
+        let b = rand_mat(&mut rng, k * n, 1.0);
+        let qa = quantize(&ctx, &a, m, k, 8);
+        let qb = quantize(&ctx, &b, k, n, 8);
+        let plan = ctx.plan_matmul(m, k, n, (8, 8)).unwrap();
+        let want = plan.execute(&qa, &qb).unwrap();
+        let mut out = vec![f32::NAN; m * n]; // stale contents must be overwritten
+        plan.execute_into(&qa, &qb, &mut out).unwrap();
+        assert!(out == want);
+        plan.execute_into(&qa, &qb, &mut out).unwrap();
+        assert!(out == want, "reused buffer must reproduce the result");
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "plan output buffer")]
+    fn execute_into_length_mismatch_panics_in_debug() {
+        let ctx = BfpContext::from_env().with_tile(TileSize::Edge(4));
+        let qa = quantize(&ctx, &[1.0; 16], 4, 4, 8);
+        let qb = quantize(&ctx, &[1.0; 16], 4, 4, 8);
+        let plan = ctx.plan_matmul(4, 4, 4, (8, 8)).unwrap();
+        let mut out = vec![0.0f32; 15];
+        let _ = plan.execute_into(&qa, &qb, &mut out);
+    }
+
+    #[test]
+    #[cfg(not(debug_assertions))]
+    fn execute_into_length_mismatch_errors_in_release() {
+        let ctx = BfpContext::from_env().with_tile(TileSize::Edge(4));
+        let qa = quantize(&ctx, &[1.0; 16], 4, 4, 8);
+        let qb = quantize(&ctx, &[1.0; 16], 4, 4, 8);
+        let plan = ctx.plan_matmul(4, 4, 4, (8, 8)).unwrap();
+        let mut out = vec![0.0f32; 15];
+        assert!(plan.execute_into(&qa, &qb, &mut out).is_err());
+        let mut out = vec![0.0f32; 17];
+        assert!(plan.quantize_execute_into(&[1.0; 16], &mut Rounding::NearestEven, &qb, &mut out)
+            .is_err());
+    }
+
+    #[test]
+    fn fused_equals_materialized_through_the_plan() {
+        let mut rng = SplitMix64::new(0xFAB);
+        let ctx = BfpContext::from_env().with_tile(TileSize::Edge(8));
+        let (m, k, n) = (14, 22, 18);
+        let a = rand_mat(&mut rng, m * k, 1.0);
+        let b = rand_mat(&mut rng, k * n, 1.0);
+        let qb = quantize(&ctx, &b, k, n, 8);
+        let plan = ctx.plan_matmul(m, k, n, (8, 8)).unwrap();
+
+        // nearest-even
+        let qa = quantize(&ctx, &a, m, k, 8);
+        let want = plan.execute(&qa, &qb).unwrap();
+        let got = plan.quantize_execute(&a, &mut Rounding::NearestEven, &qb).unwrap();
+        assert!(got == want);
+
+        // stochastic: same seed, same per-tile substreams
+        let mut r1 = Xorshift32::new(0xA5);
+        let mut r2 = Xorshift32::new(0xA5);
+        let qa_s = ctx.quantize(&a, m, k, 8, &mut Rounding::Stochastic(&mut r1)).unwrap();
+        let want_s = plan.execute(&qa_s, &qb).unwrap();
+        let got_s = plan.quantize_execute(&a, &mut Rounding::Stochastic(&mut r2), &qb).unwrap();
+        assert!(got_s == want_s);
+    }
+
+    #[test]
+    fn zero_dim_plans_execute_cleanly() {
+        let ctx = BfpContext::from_env().with_tile(TileSize::Whole);
+        let qa = quantize(&ctx, &[], 0, 3, 8);
+        let qb = quantize(&ctx, &[1.0; 6], 3, 2, 8);
+        let plan = ctx.plan_matmul(0, 3, 2, (8, 8)).unwrap();
+        assert_eq!(plan.execute(&qa, &qb).unwrap().len(), 0);
+        // fused with n == 0 still advances the caller RNG exactly once
+        let qe = quantize(&ctx, &[], 3, 0, 8);
+        let plan0 = ctx.plan_matmul(2, 3, 0, (8, 8)).unwrap();
+        let mut r = Xorshift32::new(9);
+        let mut replay = Xorshift32::new(9);
+        let out = plan0
+            .quantize_execute(&[1.0; 6], &mut Rounding::Stochastic(&mut r), &qe)
+            .unwrap();
+        assert!(out.is_empty());
+        let _ = replay.next_u32(); // the capture draw
+        assert_eq!(r.next_u32(), replay.next_u32());
+    }
+
+    #[test]
+    fn matmul_f32_policy_rounding() {
+        let mut rng = SplitMix64::new(0x33);
+        let (m, k, n) = (10, 12, 8);
+        let a = rand_mat(&mut rng, m * k, 1.0);
+        let b = rand_mat(&mut rng, k * n, 1.0);
+        let ctx = BfpContext::from_env().with_tile(TileSize::Edge(8));
+        let rne = ctx.matmul_f32(&a, &b, m, k, n, 8).unwrap();
+        // explicit composition must match the convenience
+        let qb = quantize(&ctx, &b, k, n, 8);
+        let want = ctx.quantize_matmul(&a, m, 8, &mut Rounding::NearestEven, &qb).unwrap();
+        assert!(rne == want);
+        // a stochastic policy is deterministic per call
+        let sctx = ctx.clone().with_rounding(RoundingPolicy::StochasticSeed(42));
+        let s1 = sctx.matmul_f32(&a, &b, m, k, n, 8).unwrap();
+        let s2 = sctx.matmul_f32(&a, &b, m, k, n, 8).unwrap();
+        assert!(s1 == s2);
+    }
+}

@@ -61,7 +61,7 @@
 //!
 //! Differential tests live in this module (kernel level, every detected
 //! ISA vs scalar) and in `tests/simd_kernels.rs` (whole-matmul level via
-//! `bfp_matmul_with_simd`); CI runs the full suite under both
+//! `BfpContext::with_isa`); CI runs the full suite under both
 //! `HBFP_SIMD=off` and `HBFP_SIMD=auto`.
 
 use std::sync::OnceLock;

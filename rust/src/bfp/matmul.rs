@@ -7,55 +7,69 @@
 //! plus the §4.2 tiling rule: "tile multiplications are performed in fixed
 //! point, and their results are accumulated in floating point arithmetic".
 //!
+//! ## Entry points
+//!
+//! The public execution API lives in [`super::context`]: a
+//! [`super::context::BfpContext`] resolves all execution policy once and
+//! a [`super::context::MatmulPlan`] pre-resolves the per-shape decisions.
+//! This module keeps:
+//!
+//! - the kernel bodies ([`packed_matmul_into`], [`rowmajor_matmul_into`],
+//!   [`fused_matmul_into`] — crate-internal, driven by plans),
+//! - the always-i64 j-innermost reference [`bfp_matmul_naive`] and the
+//!   FP32 baseline [`fp32_matmul`],
+//! - the accumulator overflow bound ([`acc_fits_i32`],
+//!   [`max_tile_partial`]),
+//! - the legacy free-function zoo as `#[deprecated]` one-line shims over
+//!   a default context (no longer re-exported at `bfp::`; import from
+//!   this module if a transition really needs them).
+//!
 //! ## Packed, parallel kernels
 //!
 //! The kernels are generic over the packed storage ([`MantissaElem`]:
 //! `i8`/`i16`/`i32`), so hbfp8 streams 1-byte mantissas and the inner
 //! loops autovectorize as widening integer MACs. The accumulator width is
-//! chosen per tile shape by a proven bound (see [`acc_fits_i32`]): a
-//! k-tile partial of `tile_k` products each at most `2^(ma-1) * 2^(mb-1)`
-//! in magnitude sums to at most `tile_k * 2^(ma+mb-2)`; when that fits
-//! `i32` the kernel accumulates in `i32` (the dense fixed-point logic the
-//! paper maps onto), otherwise it falls back to `i64`. Both paths produce
+//! chosen per plan by a proven bound (see [`acc_fits_i32`]): a k-tile
+//! partial of `tile_k` products each at most `2^(ma-1) * 2^(mb-1)` in
+//! magnitude sums to at most `tile_k * 2^(ma+mb-2)`; when that fits `i32`
+//! the kernel accumulates in `i32` (the dense fixed-point logic the paper
+//! maps onto), otherwise it falls back to `i64`. Both paths produce
 //! identical partials, so results are bit-for-bit equal to the
 //! [`bfp_matmul_naive`] reference.
 //!
 //! Output row-bands are distributed over the persistent worker pool
 //! (`util::pool`); every output element accumulates its k-tiles in the
 //! same order on exactly one lane, so results are bit-identical for any
-//! thread count and either dispatch backend.
+//! thread count and either dispatch backend. Single-lane executions run
+//! inline on the caller with no job-list allocation at all.
 //!
 //! ## Packed-panel default path, SIMD kernel family
 //!
 //! The default kernels stream the B operand from its [`PackedPanels`]
 //! layout (reordered once per tensor, cached on the `BfpTensor`): per
-//! k-tile, mantissas sit k-major in panels as wide as the active SIMD
+//! k-tile, mantissas sit k-major in panels as wide as the plan's SIMD
 //! family's register block ([`Isa::panel_nr`]: 8 scalar, 16 SSE4.1/NEON,
 //! 32 AVX2), so the microkernel keeps one `[acc; nr]` block per output
-//! row and reads B strictly contiguously. The inner MAC loop dispatches
-//! to the runtime-selected kernel family (`bfp::kernels`, `HBFP_SIMD`
-//! override); [`bfp_matmul_with_simd`] forces a family explicitly (the
-//! bench ladder's `simd off` rungs and the cross-ISA differential
-//! tests). The pre-panel row-major walk is retained as
-//! [`bfp_matmul_rowmajor`] (bench rung + differential-test partner,
-//! always scalar), and [`bfp_matmul_with_backend`] exposes the
-//! scoped-spawn dispatch baseline for the pooled-vs-scoped rung. All
-//! paths — every ISA included — are bit-for-bit equal to
-//! [`bfp_matmul_naive`].
+//! row and reads B strictly contiguously. The pre-panel row-major walk is
+//! retained behind `MatmulKernel::RowMajor` (bench rung +
+//! differential-test partner, always scalar inner loops). All paths —
+//! every ISA, layout, backend, and accumulator policy — are bit-for-bit
+//! equal to [`bfp_matmul_naive`].
 
 use anyhow::{anyhow, Result};
 
+use super::context::{BfpContext, MatmulKernel};
 use super::kernels::{self, Accum, Isa};
-use super::panels::{matmul_tile_edge, PackedPanels, MAX_PANEL_NR};
-use super::quant::{self, exp2i, Rounding, TileRounding};
+use super::panels::{PackedPanels, MAX_PANEL_NR};
+use super::quant::{exp2i, Rounding, TileRounding};
 use super::tensor::{BfpTensor, MantissaElem, Mantissas, TileSize};
 use crate::util::pool::{self, ParBackend};
-use crate::util::worker_threads;
 
 /// Below this many MACs (m*k*n) the matmuls stay single-threaded (scaled
 /// by the active kernel family's throughput class — see
-/// [`pool::par_threads_simd`]).
-const PAR_MIN_MACS: usize = 1 << 17;
+/// [`pool::par_threads_simd`]). Plan creation reads this; the hot loops
+/// never re-derive it.
+pub(crate) const PAR_MIN_MACS: usize = 1 << 17;
 
 /// Largest possible |sum| of `tile_k` mantissa products at widths
 /// `(ma, mb)`: every product is at most `2^(ma-1) * 2^(mb-1)` in
@@ -72,7 +86,10 @@ pub fn acc_fits_i32(tile_k: usize, ma: u32, mb: u32) -> bool {
     max_tile_partial(tile_k.max(1), ma, mb) <= i32::MAX as u128
 }
 
-fn check_shapes(a: &BfpTensor, b: &BfpTensor) -> Result<()> {
+/// Operand compatibility for C = A·B: matching contraction dims and tile
+/// configurations. Shared by [`bfp_matmul_naive`] and the context API's
+/// plan construction.
+pub(crate) fn check_shapes(a: &BfpTensor, b: &BfpTensor) -> Result<()> {
     if a.cols != b.rows {
         return Err(anyhow!("contraction mismatch: {}x{} · {}x{}", a.rows, a.cols, b.rows, b.cols));
     }
@@ -82,86 +99,52 @@ fn check_shapes(a: &BfpTensor, b: &BfpTensor) -> Result<()> {
     Ok(())
 }
 
-/// C = A · B over BFP tensors; returns row-major f32 (the BFP→FP unit
-/// output). Requires matching tile configurations so tile boundaries
-/// align on the contraction dimension. Streams B from its cached packed
-/// panels, parallel over output row-bands on the persistent pool with
-/// the default worker-thread budget.
-pub fn bfp_matmul(a: &BfpTensor, b: &BfpTensor) -> Result<Vec<f32>> {
-    bfp_matmul_with_threads(a, b, worker_threads())
-}
-
-/// [`bfp_matmul`] with an explicit thread cap. Bit-identical results for
-/// any `max_threads`.
-pub fn bfp_matmul_with_threads(
-    a: &BfpTensor,
-    b: &BfpTensor,
-    max_threads: usize,
-) -> Result<Vec<f32>> {
-    bfp_matmul_with_backend(a, b, max_threads, ParBackend::Pooled)
-}
-
-/// [`bfp_matmul`] with an explicit dispatch backend (pooled vs per-call
-/// scoped spawns) — the packed-panel kernel either way, bit-identical
-/// across backends; `Scoped` exists for the bench ladder's
-/// spawn-amortization rung.
-pub fn bfp_matmul_with_backend(
-    a: &BfpTensor,
-    b: &BfpTensor,
-    max_threads: usize,
-    backend: ParBackend,
-) -> Result<Vec<f32>> {
-    bfp_matmul_full(a, b, max_threads, backend, kernels::active())
-}
-
-/// [`bfp_matmul`] with an explicitly forced SIMD kernel family: packs
-/// (or re-packs) B's panels at that family's width and runs its MAC
-/// kernels. Bit-identical to every other family — this exists for the
-/// bench ladder's `simd off` rungs and the cross-ISA differential tests.
-/// The request is clamped to what the CPU supports
-/// ([`Isa::clamped`]), so any `Isa` value is safe.
-pub fn bfp_matmul_with_simd(
-    a: &BfpTensor,
-    b: &BfpTensor,
-    max_threads: usize,
-    isa: Isa,
-) -> Result<Vec<f32>> {
-    bfp_matmul_full(a, b, max_threads, ParBackend::Pooled, isa.clamped())
-}
-
-/// Shared matmul body. `isa` must already be executable on this CPU
-/// (`kernels::active()` or an `Isa::clamped()` result) — the microkernel
-/// uses the preclamped dispatch.
-fn bfp_matmul_full(
-    a: &BfpTensor,
-    b: &BfpTensor,
-    max_threads: usize,
-    backend: ParBackend,
-    isa: Isa,
-) -> Result<Vec<f32>> {
-    check_shapes(a, b)?;
-    let (m, k, n) = (a.rows, a.cols, b.cols);
-    let mut out = vec![0.0f32; m * n];
-    if m == 0 || k == 0 || n == 0 {
-        return Ok(out);
+/// Run one band-parallel section: `f(band, band_out)` over `out` split
+/// into `band_elems`-sized row bands. The single-lane path iterates
+/// inline with **no allocation**; multi-lane dispatch builds the job
+/// list once and hands it to the chosen backend.
+fn run_bands<F>(out: &mut [f32], band_elems: usize, threads: usize, backend: ParBackend, f: F)
+where
+    F: Fn(usize, &mut [f32]) + Sync,
+{
+    if threads <= 1 {
+        for (band, chunk) in out.chunks_mut(band_elems).enumerate() {
+            f(band, chunk);
+        }
+        return;
     }
-    let t = matmul_tile_edge(a.tile, k);
-    let bands = m.div_ceil(t);
-    let threads =
-        pool::par_threads_simd(m * k * n, PAR_MIN_MACS, isa.par_floor_scale(), max_threads, bands);
-    let pp = b.packed_panels_nr(isa.panel_nr());
+    let jobs: Vec<(usize, &mut [f32])> = out.chunks_mut(band_elems).enumerate().collect();
+    pool::run_backend(backend, jobs, threads, f);
+}
+
+/// Packed-panel matmul body. Preconditions (the plan's job): shapes
+/// validated, `out` zeroed with `len == a.rows * b.cols`, no zero dims,
+/// `isa` executable on this CPU, and `use_i32` implied by the overflow
+/// bound (debug-asserted downstream).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn packed_matmul_into(
+    a: &BfpTensor,
+    b: &BfpTensor,
+    out: &mut [f32],
+    t: usize,
+    nr: usize,
+    threads: usize,
+    backend: ParBackend,
+    isa: Isa,
+    use_i32: bool,
+) {
+    let pp = b.packed_panels_nr(nr);
     match &a.mantissas {
         Mantissas::I8(av) => {
-            packed_dispatch_b::<i8>(av, a, b, &pp, &mut out, t, threads, backend, isa)
+            packed_dispatch_b::<i8>(av, a, b, &pp, out, t, threads, backend, isa, use_i32)
         }
         Mantissas::I16(av) => {
-            packed_dispatch_b::<i16>(av, a, b, &pp, &mut out, t, threads, backend, isa)
+            packed_dispatch_b::<i16>(av, a, b, &pp, out, t, threads, backend, isa, use_i32)
         }
         Mantissas::I32(av) => {
-            packed_dispatch_b::<i32>(av, a, b, &pp, &mut out, t, threads, backend, isa)
+            packed_dispatch_b::<i32>(av, a, b, &pp, out, t, threads, backend, isa, use_i32)
         }
     }
-    Ok(out)
 }
 
 #[allow(clippy::too_many_arguments)]
@@ -175,11 +158,18 @@ fn packed_dispatch_b<EA: MantissaElem>(
     threads: usize,
     backend: ParBackend,
     isa: Isa,
+    use_i32: bool,
 ) {
     match &pp.data {
-        Mantissas::I8(pv) => packed_bands(av, pv, a, b, pp, out, t, threads, backend, isa),
-        Mantissas::I16(pv) => packed_bands(av, pv, a, b, pp, out, t, threads, backend, isa),
-        Mantissas::I32(pv) => packed_bands(av, pv, a, b, pp, out, t, threads, backend, isa),
+        Mantissas::I8(pv) => {
+            packed_bands(av, pv, a, b, pp, out, t, threads, backend, isa, use_i32)
+        }
+        Mantissas::I16(pv) => {
+            packed_bands(av, pv, a, b, pp, out, t, threads, backend, isa, use_i32)
+        }
+        Mantissas::I32(pv) => {
+            packed_bands(av, pv, a, b, pp, out, t, threads, backend, isa, use_i32)
+        }
     }
 }
 
@@ -195,47 +185,54 @@ fn packed_bands<EA: MantissaElem, EB: MantissaElem>(
     threads: usize,
     backend: ParBackend,
     isa: Isa,
+    use_i32: bool,
 ) {
     let n = b.cols;
-    let jobs: Vec<(usize, &mut [f32])> = out.chunks_mut(t * n).enumerate().collect();
-    pool::run_backend(backend, jobs, threads, |band, band_out| {
+    run_bands(out, t * n, threads, backend, |band, band_out| {
         let i0 = band * t;
         let i1 = (i0 + t).min(a.rows);
         let a_exp = |r: usize, c: usize| a.exponent_at(r, c);
-        band_matmul_packed(av, 0, &a_exp, a.mantissa_bits, pv, pp, b, band_out, i0, i1, t, isa);
+        band_matmul_packed(
+            av,
+            0,
+            &a_exp,
+            a.mantissa_bits,
+            pv,
+            pp,
+            b,
+            band_out,
+            i0,
+            i1,
+            t,
+            isa,
+            use_i32,
+        );
     });
 }
 
-/// The pre-panel row-major B walk, kept as the packed-panel rung's bench
-/// partner and differential-test reference. Pooled dispatch, default
-/// thread budget.
-pub fn bfp_matmul_rowmajor(a: &BfpTensor, b: &BfpTensor) -> Result<Vec<f32>> {
-    bfp_matmul_rowmajor_with_threads(a, b, worker_threads())
-}
-
-/// [`bfp_matmul_rowmajor`] with an explicit thread cap.
-pub fn bfp_matmul_rowmajor_with_threads(
+/// Row-major matmul body (the pre-panel walk). Same preconditions as
+/// [`packed_matmul_into`]; always scalar inner loops.
+pub(crate) fn rowmajor_matmul_into(
     a: &BfpTensor,
     b: &BfpTensor,
-    max_threads: usize,
-) -> Result<Vec<f32>> {
-    check_shapes(a, b)?;
-    let (m, k, n) = (a.rows, a.cols, b.cols);
-    let mut out = vec![0.0f32; m * n];
-    if m == 0 || k == 0 || n == 0 {
-        return Ok(out);
-    }
-    let t = matmul_tile_edge(a.tile, k);
-    let bands = m.div_ceil(t);
-    let threads = pool::par_threads(m * k * n, PAR_MIN_MACS, max_threads, bands);
+    out: &mut [f32],
+    t: usize,
+    threads: usize,
+    backend: ParBackend,
+    use_i32: bool,
+) {
     match &a.mantissas {
-        Mantissas::I8(av) => rowmajor_dispatch_b::<i8>(av, a, b, &mut out, t, threads),
-        Mantissas::I16(av) => rowmajor_dispatch_b::<i16>(av, a, b, &mut out, t, threads),
-        Mantissas::I32(av) => rowmajor_dispatch_b::<i32>(av, a, b, &mut out, t, threads),
+        Mantissas::I8(av) => rowmajor_dispatch_b::<i8>(av, a, b, out, t, threads, backend, use_i32),
+        Mantissas::I16(av) => {
+            rowmajor_dispatch_b::<i16>(av, a, b, out, t, threads, backend, use_i32)
+        }
+        Mantissas::I32(av) => {
+            rowmajor_dispatch_b::<i32>(av, a, b, out, t, threads, backend, use_i32)
+        }
     }
-    Ok(out)
 }
 
+#[allow(clippy::too_many_arguments)]
 fn rowmajor_dispatch_b<EA: MantissaElem>(
     av: &[EA],
     a: &BfpTensor,
@@ -243,14 +240,17 @@ fn rowmajor_dispatch_b<EA: MantissaElem>(
     out: &mut [f32],
     t: usize,
     threads: usize,
+    backend: ParBackend,
+    use_i32: bool,
 ) {
     match &b.mantissas {
-        Mantissas::I8(bv) => rowmajor_bands(av, bv, a, b, out, t, threads),
-        Mantissas::I16(bv) => rowmajor_bands(av, bv, a, b, out, t, threads),
-        Mantissas::I32(bv) => rowmajor_bands(av, bv, a, b, out, t, threads),
+        Mantissas::I8(bv) => rowmajor_bands(av, bv, a, b, out, t, threads, backend, use_i32),
+        Mantissas::I16(bv) => rowmajor_bands(av, bv, a, b, out, t, threads, backend, use_i32),
+        Mantissas::I32(bv) => rowmajor_bands(av, bv, a, b, out, t, threads, backend, use_i32),
     }
 }
 
+#[allow(clippy::too_many_arguments)]
 fn rowmajor_bands<EA: MantissaElem, EB: MantissaElem>(
     av: &[EA],
     bv: &[EB],
@@ -259,21 +259,24 @@ fn rowmajor_bands<EA: MantissaElem, EB: MantissaElem>(
     out: &mut [f32],
     t: usize,
     threads: usize,
+    backend: ParBackend,
+    use_i32: bool,
 ) {
     let n = b.cols;
-    let jobs: Vec<(usize, &mut [f32])> = out.chunks_mut(t * n).enumerate().collect();
-    pool::dispatch_jobs(jobs, threads, |band, band_out| {
+    run_bands(out, t * n, threads, backend, |band, band_out| {
         let i0 = band * t;
         let i1 = (i0 + t).min(a.rows);
         let a_exp = |r: usize, c: usize| a.exponent_at(r, c);
-        band_matmul(av, 0, &a_exp, a.mantissa_bits, bv, b, band_out, i0, i1, t);
+        band_matmul(av, 0, &a_exp, a.mantissa_bits, bv, b, band_out, i0, i1, t, use_i32);
     });
 }
 
 /// Compute output rows `i0..i1` into `band_out` (local row 0 = global row
 /// `i0`, row stride `n`). `av` holds A's mantissas starting at global row
 /// `a_row0` (0 for a full tensor, `i0` for a fused per-band scratch);
-/// `a_exp(r, c)` is A's shared exponent at a global coordinate.
+/// `a_exp(r, c)` is A's shared exponent at a global coordinate. The
+/// accumulator class is the caller's pre-resolved decision (`use_i32`
+/// must satisfy the overflow bound — debug-asserted).
 #[allow(clippy::too_many_arguments)]
 fn band_matmul<EA: MantissaElem, EB: MantissaElem, FA: Fn(usize, usize) -> i32>(
     av: &[EA],
@@ -286,6 +289,7 @@ fn band_matmul<EA: MantissaElem, EB: MantissaElem, FA: Fn(usize, usize) -> i32>(
     i0: usize,
     i1: usize,
     t: usize,
+    use_i32: bool,
 ) {
     let k = b.rows;
     let n = b.cols;
@@ -297,7 +301,10 @@ fn band_matmul<EA: MantissaElem, EB: MantissaElem, FA: Fn(usize, usize) -> i32>(
     }
     let tj_cap = t.min(n);
     let tile_k = t.min(k).max(1);
-    let use_i32 = acc_fits_i32(tile_k, ma_bits, b.mantissa_bits);
+    debug_assert!(
+        !use_i32 || acc_fits_i32(tile_k, ma_bits, b.mantissa_bits),
+        "i32 accumulation requested outside the proven bound"
+    );
     let mut acc32 = vec![0i32; if use_i32 { ti * tj_cap } else { 0 }];
     let mut acc64 = vec![0i64; if use_i32 { 0 } else { ti * tj_cap }];
     let arow0 = i0 - a_row0;
@@ -423,6 +430,7 @@ fn band_matmul_packed<EA: MantissaElem, EB: MantissaElem, FA: Fn(usize, usize) -
     i1: usize,
     t: usize,
     isa: Isa,
+    use_i32: bool,
 ) {
     debug_assert_eq!(pp.t, t, "panel layout built for a different tile edge");
     debug_assert_eq!(pp.data.len(), pv.len());
@@ -437,7 +445,10 @@ fn band_matmul_packed<EA: MantissaElem, EB: MantissaElem, FA: Fn(usize, usize) -
         return;
     }
     let tile_k = t.min(k).max(1);
-    let use_i32 = acc_fits_i32(tile_k, ma_bits, b.mantissa_bits);
+    debug_assert!(
+        !use_i32 || acc_fits_i32(tile_k, ma_bits, b.mantissa_bits),
+        "i32 accumulation requested outside the proven bound"
+    );
     let arow0 = i0 - a_row0;
     let panel_elems = pp.tk * nr;
     for jt in 0..pp.tiles_j {
@@ -520,9 +531,9 @@ fn panel_mac_rows<EA: MantissaElem, EB: MantissaElem, A: Accum>(
 }
 
 /// The pre-optimization j-innermost kernel, kept for the §Perf
-/// before/after bench and as a differential-testing partner (must agree
-/// with `bfp_matmul` bit-for-bit — both sum the same integer partials,
-/// always in `i64` here).
+/// before/after bench and as the differential-testing reference (every
+/// context/plan configuration must agree with it bit-for-bit — all paths
+/// sum the same integer partials, always in `i64` here).
 pub fn bfp_matmul_naive(a: &BfpTensor, b: &BfpTensor) -> Result<Vec<f32>> {
     check_shapes(a, b)?;
     let (m, k, n) = (a.rows, a.cols, b.cols);
@@ -530,7 +541,7 @@ pub fn bfp_matmul_naive(a: &BfpTensor, b: &BfpTensor) -> Result<Vec<f32>> {
     if m == 0 || k == 0 || n == 0 {
         return Ok(out);
     }
-    let t = matmul_tile_edge(a.tile, k);
+    let t = super::panels::matmul_tile_edge(a.tile, k);
     match &a.mantissas {
         Mantissas::I8(av) => naive_dispatch_b::<i8>(av, a, b, &mut out, t),
         Mantissas::I16(av) => naive_dispatch_b::<i16>(av, a, b, &mut out, t),
@@ -614,67 +625,49 @@ pub fn fp32_matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f3
     out
 }
 
-/// Fused FP→BFP convert + matmul: quantizes row-band tiles of `a` on the
-/// fly (per-band scratch, never a full materialized tensor) and MACs them
-/// against the already-quantized, resident `b` — the paper's datapath,
-/// where activations stream through the converter into the array while
-/// weights sit in BFP. Bit-for-bit identical to
-/// `BfpTensor::from_f32(a, ..., b.tile, ...)` followed by [`bfp_matmul`],
-/// including stochastic rounding (same per-tile substreams).
-pub fn quantize_matmul(
+/// Fused FP→BFP convert + matmul body: quantizes row-band tiles of `a`
+/// on the fly (per-band scratch, never a full materialized tensor) and
+/// MACs them against the already-quantized, resident `b` — the paper's
+/// datapath, where activations stream through the converter into the
+/// array while weights sit in BFP. Preconditions (the plan's job):
+/// `a.len() == m * b.rows`, `out` zeroed at `m * b.cols`, `m`, `k`, `n`
+/// all nonzero, rounding mode already captured. Bit-for-bit identical to
+/// materializing A and running [`packed_matmul_into`], including
+/// stochastic rounding (same per-tile substreams). `th`/`tw` are the
+/// converter tile dims (`tile.edge_or(m, k)`), `t` the matmul tile edge.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn fused_matmul_into(
     a: &[f32],
-    a_rows: usize,
-    a_bits: u32,
-    rounding: &mut Rounding,
     b: &BfpTensor,
-) -> Result<Vec<f32>> {
-    quantize_matmul_with_threads(a, a_rows, a_bits, rounding, b, worker_threads())
-}
-
-/// [`quantize_matmul`] with an explicit thread cap.
-pub fn quantize_matmul_with_threads(
-    a: &[f32],
-    a_rows: usize,
+    out: &mut [f32],
+    m: usize,
     a_bits: u32,
-    rounding: &mut Rounding,
-    b: &BfpTensor,
-    max_threads: usize,
-) -> Result<Vec<f32>> {
-    let (m, k, n) = (a_rows, b.rows, b.cols);
-    if a.len() != m * k {
-        return Err(anyhow!("a len {} != {m}x{k}", a.len()));
-    }
-    super::tensor::check_width(a_bits)?;
-    let mut out = vec![0.0f32; m * n];
-    if m * k == 0 {
-        return Ok(out);
-    }
-    let mode = TileRounding::capture(rounding);
-    if n == 0 {
-        return Ok(out);
-    }
-    let (th, _) = b.tile.edge_or(m, k);
-    let bands = m.div_ceil(th).max(1);
-    let isa = kernels::active();
-    let threads =
-        pool::par_threads_simd(m * k * n, PAR_MIN_MACS, isa.par_floor_scale(), max_threads, bands);
-    let pp = b.packed_panels_nr(isa.panel_nr());
+    mode: TileRounding,
+    t: usize,
+    nr: usize,
+    th: usize,
+    tw: usize,
+    threads: usize,
+    backend: ParBackend,
+    isa: Isa,
+    use_i32: bool,
+) {
+    let pp = b.packed_panels_nr(nr);
     match Mantissas::for_width(a_bits, 0) {
-        Mantissas::I8(_) => {
-            fused_dispatch_b::<i8>(a, b, &pp, &mut out, m, a_bits, mode, threads, isa)
-        }
-        Mantissas::I16(_) => {
-            fused_dispatch_b::<i16>(a, b, &pp, &mut out, m, a_bits, mode, threads, isa)
-        }
-        Mantissas::I32(_) => {
-            fused_dispatch_b::<i32>(a, b, &pp, &mut out, m, a_bits, mode, threads, isa)
-        }
+        Mantissas::I8(_) => fused_bands::<i8>(
+            a, b, &pp, out, m, a_bits, mode, t, th, tw, threads, backend, isa, use_i32,
+        ),
+        Mantissas::I16(_) => fused_bands::<i16>(
+            a, b, &pp, out, m, a_bits, mode, t, th, tw, threads, backend, isa, use_i32,
+        ),
+        Mantissas::I32(_) => fused_bands::<i32>(
+            a, b, &pp, out, m, a_bits, mode, t, th, tw, threads, backend, isa, use_i32,
+        ),
     }
-    Ok(out)
 }
 
 #[allow(clippy::too_many_arguments)]
-fn fused_dispatch_b<EA: MantissaElem>(
+fn fused_bands<EA: MantissaElem>(
     a: &[f32],
     b: &BfpTensor,
     pp: &PackedPanels,
@@ -682,24 +675,29 @@ fn fused_dispatch_b<EA: MantissaElem>(
     m: usize,
     a_bits: u32,
     mode: TileRounding,
+    t: usize,
+    th: usize,
+    tw: usize,
     threads: usize,
+    backend: ParBackend,
     isa: Isa,
+    use_i32: bool,
 ) {
     match &pp.data {
-        Mantissas::I8(pv) => {
-            fused_bands::<EA, i8>(a, pv, pp, b, out, m, a_bits, mode, threads, isa)
-        }
-        Mantissas::I16(pv) => {
-            fused_bands::<EA, i16>(a, pv, pp, b, out, m, a_bits, mode, threads, isa)
-        }
-        Mantissas::I32(pv) => {
-            fused_bands::<EA, i32>(a, pv, pp, b, out, m, a_bits, mode, threads, isa)
-        }
+        Mantissas::I8(pv) => fused_bands_b::<EA, i8>(
+            a, pv, pp, b, out, m, a_bits, mode, t, th, tw, threads, backend, isa, use_i32,
+        ),
+        Mantissas::I16(pv) => fused_bands_b::<EA, i16>(
+            a, pv, pp, b, out, m, a_bits, mode, t, th, tw, threads, backend, isa, use_i32,
+        ),
+        Mantissas::I32(pv) => fused_bands_b::<EA, i32>(
+            a, pv, pp, b, out, m, a_bits, mode, t, th, tw, threads, backend, isa, use_i32,
+        ),
     }
 }
 
 #[allow(clippy::too_many_arguments)]
-fn fused_bands<EA: MantissaElem, EB: MantissaElem>(
+fn fused_bands_b<EA: MantissaElem, EB: MantissaElem>(
     a: &[f32],
     pv: &[EB],
     pp: &PackedPanels,
@@ -708,16 +706,18 @@ fn fused_bands<EA: MantissaElem, EB: MantissaElem>(
     m: usize,
     a_bits: u32,
     mode: TileRounding,
+    t: usize,
+    th: usize,
+    tw: usize,
     threads: usize,
+    backend: ParBackend,
     isa: Isa,
+    use_i32: bool,
 ) {
     let k = b.rows;
     let n = b.cols;
-    let (th, tw) = b.tile.edge_or(m, k);
     let tiles_c = k.div_ceil(tw).max(1);
-    let t_mm = matmul_tile_edge(b.tile, k);
-    let jobs: Vec<(usize, &mut [f32])> = out.chunks_mut(th * n).enumerate().collect();
-    pool::dispatch_jobs(jobs, threads, |band, band_out| {
+    run_bands(out, th * n, threads, backend, |band, band_out| {
         let i0 = band * th;
         let i1 = (i0 + th).min(m);
         let band_rows = i1 - i0;
@@ -727,17 +727,18 @@ fn fused_bands<EA: MantissaElem, EB: MantissaElem>(
         // so the per-tile RNG draws are ISA-independent.
         let mut scratch: Vec<EA> = vec![EA::from_i32(0); band_rows * k];
         let mut band_exps = vec![0i32; tiles_c];
+        let conv_isa = kernels::active();
         for tc in 0..tiles_c {
             let c0 = tc * tw;
             let c1 = (c0 + tw).min(k);
-            let e = quant::block_exponent_strided(a, k, i0, i1, c0, c1);
+            let e = super::quant::block_exponent_strided(a, k, i0, i1, c0, c1);
             band_exps[tc] = e;
             match mode {
                 TileRounding::NearestEven => {
                     for r in i0..i1 {
                         let src = &a[r * k + c0..r * k + c1];
                         let dst = &mut scratch[(r - i0) * k + c0..(r - i0) * k + c1];
-                        kernels::quantize_row_rne_preclamped(isa, src, dst, e, a_bits);
+                        kernels::quantize_row_rne_preclamped(conv_isa, src, dst, e, a_bits);
                     }
                 }
                 TileRounding::StochasticBase(_) => {
@@ -747,7 +748,12 @@ fn fused_bands<EA: MantissaElem, EB: MantissaElem>(
                         let src = &a[r * k + c0..r * k + c1];
                         let dst = &mut scratch[(r - i0) * k + c0..(r - i0) * k + c1];
                         for (d, &x) in dst.iter_mut().zip(src) {
-                            *d = EA::from_i32(quant::quantize_value(x, e, a_bits, &mut rounding));
+                            *d = EA::from_i32(super::quant::quantize_value(
+                                x,
+                                e,
+                                a_bits,
+                                &mut rounding,
+                            ));
                         }
                     }
                 }
@@ -764,14 +770,108 @@ fn fused_bands<EA: MantissaElem, EB: MantissaElem>(
             band_out,
             i0,
             i1,
-            t_mm,
+            t,
             isa,
+            use_i32,
         );
     });
 }
 
-/// Convenience: quantize f32 operands and multiply in BFP. Uses the fused
-/// path for the A operand (B is quantized once, as resident weights).
+// ---------------------------------------------------------------------------
+// Deprecated legacy surface: one-line shims over a default context.
+//
+// These are kept only so downstream code migrates on its own schedule;
+// nothing in this repository calls them outside the shim-equivalence
+// test. They are no longer re-exported at `bfp::` — import from this
+// module explicitly if a transition really needs them.
+// ---------------------------------------------------------------------------
+
+/// C = A · B over BFP tensors with the environment's default policy.
+#[deprecated(note = "use BfpContext::from_env().matmul(a, b), or plan_matmul for reuse")]
+pub fn bfp_matmul(a: &BfpTensor, b: &BfpTensor) -> Result<Vec<f32>> {
+    BfpContext::from_env().matmul(a, b)
+}
+
+/// [`bfp_matmul`] with an explicit thread cap.
+#[deprecated(note = "use BfpContext::from_env().with_threads(n).matmul(a, b)")]
+pub fn bfp_matmul_with_threads(
+    a: &BfpTensor,
+    b: &BfpTensor,
+    max_threads: usize,
+) -> Result<Vec<f32>> {
+    BfpContext::from_env().with_threads(max_threads).matmul(a, b)
+}
+
+/// [`bfp_matmul`] with an explicit dispatch backend.
+#[deprecated(note = "use BfpContext::from_env().with_backend(backend).matmul(a, b)")]
+pub fn bfp_matmul_with_backend(
+    a: &BfpTensor,
+    b: &BfpTensor,
+    max_threads: usize,
+    backend: ParBackend,
+) -> Result<Vec<f32>> {
+    BfpContext::from_env().with_threads(max_threads).with_backend(backend).matmul(a, b)
+}
+
+/// [`bfp_matmul`] with an explicitly forced SIMD kernel family.
+#[deprecated(note = "use BfpContext::from_env().with_isa(isa).matmul(a, b)")]
+pub fn bfp_matmul_with_simd(
+    a: &BfpTensor,
+    b: &BfpTensor,
+    max_threads: usize,
+    isa: Isa,
+) -> Result<Vec<f32>> {
+    BfpContext::from_env().with_threads(max_threads).with_isa(isa).matmul(a, b)
+}
+
+/// The pre-panel row-major B walk.
+#[deprecated(note = "use BfpContext::from_env().with_kernel(MatmulKernel::RowMajor).matmul(a, b)")]
+pub fn bfp_matmul_rowmajor(a: &BfpTensor, b: &BfpTensor) -> Result<Vec<f32>> {
+    BfpContext::from_env().with_kernel(MatmulKernel::RowMajor).matmul(a, b)
+}
+
+/// [`bfp_matmul_rowmajor`] with an explicit thread cap.
+#[deprecated(
+    note = "use BfpContext::from_env().with_kernel(MatmulKernel::RowMajor).with_threads(n)"
+)]
+pub fn bfp_matmul_rowmajor_with_threads(
+    a: &BfpTensor,
+    b: &BfpTensor,
+    max_threads: usize,
+) -> Result<Vec<f32>> {
+    BfpContext::from_env()
+        .with_kernel(MatmulKernel::RowMajor)
+        .with_threads(max_threads)
+        .matmul(a, b)
+}
+
+/// Fused FP→BFP convert + matmul with the environment's default policy.
+#[deprecated(note = "use BfpContext::quantize_matmul, or MatmulPlan::quantize_execute for reuse")]
+pub fn quantize_matmul(
+    a: &[f32],
+    a_rows: usize,
+    a_bits: u32,
+    rounding: &mut Rounding,
+    b: &BfpTensor,
+) -> Result<Vec<f32>> {
+    BfpContext::from_env().quantize_matmul(a, a_rows, a_bits, rounding, b)
+}
+
+/// [`quantize_matmul`] with an explicit thread cap.
+#[deprecated(note = "use BfpContext::from_env().with_threads(n).quantize_matmul(...)")]
+pub fn quantize_matmul_with_threads(
+    a: &[f32],
+    a_rows: usize,
+    a_bits: u32,
+    rounding: &mut Rounding,
+    b: &BfpTensor,
+    max_threads: usize,
+) -> Result<Vec<f32>> {
+    BfpContext::from_env().with_threads(max_threads).quantize_matmul(a, a_rows, a_bits, rounding, b)
+}
+
+/// Convenience: quantize f32 operands and multiply in BFP.
+#[deprecated(note = "use BfpContext::from_env().with_tile(tile).matmul_f32(...)")]
 pub fn hbfp_matmul_f32(
     a: &[f32],
     b: &[f32],
@@ -781,8 +881,7 @@ pub fn hbfp_matmul_f32(
     mantissa_bits: u32,
     tile: TileSize,
 ) -> Result<Vec<f32>> {
-    let qb = BfpTensor::from_f32(b, k, n, mantissa_bits, tile, &mut Rounding::NearestEven)?;
-    quantize_matmul(a, m, mantissa_bits, &mut Rounding::NearestEven, &qb)
+    BfpContext::from_env().with_tile(tile).matmul_f32(a, b, m, k, n, mantissa_bits)
 }
 
 #[cfg(test)]
@@ -792,8 +891,16 @@ mod tests {
     use crate::util::prop::{check, Gen};
     use crate::util::rng::{SplitMix64, Xorshift32};
 
+    fn ctx() -> BfpContext {
+        BfpContext::from_env()
+    }
+
     fn rand_mat(rng: &mut SplitMix64, len: usize, scale: f32) -> Vec<f32> {
         (0..len).map(|_| rng.normal() * scale).collect()
+    }
+
+    fn from_f32(data: &[f32], rows: usize, cols: usize, m: u32, tile: TileSize) -> BfpTensor {
+        BfpTensor::from_f32(data, rows, cols, m, tile, &mut Rounding::NearestEven).unwrap()
     }
 
     #[test]
@@ -806,9 +913,9 @@ mod tests {
             let b = g.vec_f32(k * n, 2);
             let tile = *g.pick(&[TileSize::Whole, TileSize::Edge(8)]);
             let mb = *g.pick(&[4u32, 8]);
-            let qa = BfpTensor::from_f32(&a, m, k, mb, tile, &mut Rounding::NearestEven).unwrap();
-            let qb = BfpTensor::from_f32(&b, k, n, mb, tile, &mut Rounding::NearestEven).unwrap();
-            let got = bfp_matmul(&qa, &qb).unwrap();
+            let qa = from_f32(&a, m, k, mb, tile);
+            let qb = from_f32(&b, k, n, mb, tile);
+            let got = ctx().matmul(&qa, &qb).unwrap();
             let da = qa.to_f32();
             let db = qb.to_f32();
             // f64 product of dequantized values (exact for these widths)
@@ -835,9 +942,10 @@ mod tests {
         let b = rand_mat(&mut rng, k * n, 1.0);
         let exact = fp32_matmul(&a, &b, m, k, n);
         let amax = exact.iter().fold(0.0f32, |s, &x| s.max(x.abs()));
+        let c = ctx().with_tile(TileSize::Edge(16));
         let mut last = f32::INFINITY;
         for &bits in &[4u32, 8, 12, 16] {
-            let got = hbfp_matmul_f32(&a, &b, m, k, n, bits, TileSize::Edge(16)).unwrap();
+            let got = c.matmul_f32(&a, &b, m, k, n, bits).unwrap();
             let err = got
                 .iter()
                 .zip(&exact)
@@ -865,33 +973,29 @@ mod tests {
         let err = |got: &[f32]| {
             got.iter().zip(&exact).map(|(x, y)| (x - y).abs()).sum::<f32>() / exact.len() as f32
         };
-        let tiled = hbfp_matmul_f32(&a, &b, m, k, n, 8, TileSize::Edge(16)).unwrap();
-        let whole = hbfp_matmul_f32(&a, &b, m, k, n, 8, TileSize::Whole).unwrap();
+        let tiled =
+            ctx().with_tile(TileSize::Edge(16)).matmul_f32(&a, &b, m, k, n, 8).unwrap();
+        let whole = ctx().with_tile(TileSize::Whole).matmul_f32(&a, &b, m, k, n, 8).unwrap();
         assert!(err(&tiled) < err(&whole), "{} !< {}", err(&tiled), err(&whole));
     }
 
     #[test]
     fn mismatched_shapes_rejected() {
-        let a = BfpTensor::from_f32(&[1.0; 6], 2, 3, 8, TileSize::Whole, &mut Rounding::NearestEven)
-            .unwrap();
-        let b = BfpTensor::from_f32(&[1.0; 8], 2, 4, 8, TileSize::Whole, &mut Rounding::NearestEven)
-            .unwrap();
-        assert!(bfp_matmul(&a, &b).is_err());
+        let a = from_f32(&[1.0; 6], 2, 3, 8, TileSize::Whole);
+        let b = from_f32(&[1.0; 8], 2, 4, 8, TileSize::Whole);
+        assert!(ctx().matmul(&a, &b).is_err());
     }
 
     #[test]
     fn mismatched_tiles_rejected() {
-        let a = BfpTensor::from_f32(&[1.0; 4], 2, 2, 8, TileSize::Whole, &mut Rounding::NearestEven)
-            .unwrap();
-        let b =
-            BfpTensor::from_f32(&[1.0; 4], 2, 2, 8, TileSize::Edge(2), &mut Rounding::NearestEven)
-                .unwrap();
-        assert!(bfp_matmul(&a, &b).is_err());
+        let a = from_f32(&[1.0; 4], 2, 2, 8, TileSize::Whole);
+        let b = from_f32(&[1.0; 4], 2, 2, 8, TileSize::Edge(2));
+        assert!(ctx().matmul(&a, &b).is_err());
     }
 
     #[test]
     fn blocked_equals_naive_bitwise() {
-        // Both kernels sum identical integer partials in identical k
+        // The context path sums identical integer partials in identical k
         // order, so results must be bit-for-bit equal — across storage
         // classes (i8/i16/i32) and mixed-width operand pairs.
         check("blocked == naive", 60, |g: &mut Gen| {
@@ -901,9 +1005,9 @@ mod tests {
             let tile = *g.pick(&[TileSize::Whole, TileSize::Edge(8), TileSize::Edge(24)]);
             let ma = *g.pick(&[4u32, 8, 12, 16, 20, 24]);
             let mb = *g.pick(&[4u32, 8, 12, 16, 20, 24]);
-            let qa = BfpTensor::from_f32(&a, m, k, ma, tile, &mut Rounding::NearestEven).unwrap();
-            let qb = BfpTensor::from_f32(&b, k, n, mb, tile, &mut Rounding::NearestEven).unwrap();
-            let fast = bfp_matmul(&qa, &qb).unwrap();
+            let qa = from_f32(&a, m, k, ma, tile);
+            let qb = from_f32(&b, k, n, mb, tile);
+            let fast = ctx().matmul(&qa, &qb).unwrap();
             let slow = bfp_matmul_naive(&qa, &qb).unwrap();
             prop_assert!(fast == slow, "blocked and naive kernels disagree (ma={ma}, mb={mb})");
             Ok(())
@@ -916,12 +1020,10 @@ mod tests {
         let (m, k, n) = (96, 80, 72); // above the parallel floor
         let a = rand_mat(&mut rng, m * k, 1.0);
         let b = rand_mat(&mut rng, k * n, 1.0);
-        let qa = BfpTensor::from_f32(&a, m, k, 8, TileSize::Edge(16), &mut Rounding::NearestEven)
-            .unwrap();
-        let qb = BfpTensor::from_f32(&b, k, n, 8, TileSize::Edge(16), &mut Rounding::NearestEven)
-            .unwrap();
-        let one = bfp_matmul_with_threads(&qa, &qb, 1).unwrap();
-        let many = bfp_matmul_with_threads(&qa, &qb, 8).unwrap();
+        let qa = from_f32(&a, m, k, 8, TileSize::Edge(16));
+        let qb = from_f32(&b, k, n, 8, TileSize::Edge(16));
+        let one = ctx().with_threads(1).matmul(&qa, &qb).unwrap();
+        let many = ctx().with_threads(8).matmul(&qa, &qb).unwrap();
         assert!(one == many, "thread count must not change results");
     }
 
@@ -933,12 +1035,12 @@ mod tests {
             let b = g.vec_f32(k * n, 3);
             let tile = *g.pick(&[TileSize::Whole, TileSize::Edge(8), TileSize::Edge(24)]);
             let bits = *g.pick(&[4u32, 8, 12]);
-            let qb = BfpTensor::from_f32(&b, k, n, bits, tile, &mut Rounding::NearestEven).unwrap();
+            let qb = from_f32(&b, k, n, bits, tile);
 
             // nearest-even
-            let qa = BfpTensor::from_f32(&a, m, k, bits, tile, &mut Rounding::NearestEven).unwrap();
-            let want = bfp_matmul(&qa, &qb).unwrap();
-            let got = quantize_matmul(&a, m, bits, &mut Rounding::NearestEven, &qb).unwrap();
+            let qa = from_f32(&a, m, k, bits, tile);
+            let want = ctx().matmul(&qa, &qb).unwrap();
+            let got = ctx().quantize_matmul(&a, m, bits, &mut Rounding::NearestEven, &qb).unwrap();
             prop_assert!(got == want, "fused != materialized (rne, bits={bits})");
 
             // stochastic: same seed => same per-tile substreams
@@ -948,9 +1050,10 @@ mod tests {
             let qa_s =
                 BfpTensor::from_f32(&a, m, k, bits, tile, &mut Rounding::Stochastic(&mut r1))
                     .unwrap();
-            let want_s = bfp_matmul(&qa_s, &qb).unwrap();
-            let got_s =
-                quantize_matmul(&a, m, bits, &mut Rounding::Stochastic(&mut r2), &qb).unwrap();
+            let want_s = ctx().matmul(&qa_s, &qb).unwrap();
+            let got_s = ctx()
+                .quantize_matmul(&a, m, bits, &mut Rounding::Stochastic(&mut r2), &qb)
+                .unwrap();
             prop_assert!(got_s == want_s, "fused != materialized (stochastic, bits={bits})");
             Ok(())
         });
@@ -958,10 +1061,9 @@ mod tests {
 
     #[test]
     fn fused_rejects_bad_len() {
-        let qb = BfpTensor::from_f32(&[1.0; 4], 2, 2, 8, TileSize::Whole, &mut Rounding::NearestEven)
-            .unwrap();
-        assert!(quantize_matmul(&[1.0; 5], 2, 8, &mut Rounding::NearestEven, &qb).is_err());
-        assert!(quantize_matmul(&[1.0; 4], 2, 1, &mut Rounding::NearestEven, &qb).is_err());
+        let qb = from_f32(&[1.0; 4], 2, 2, 8, TileSize::Whole);
+        assert!(ctx().quantize_matmul(&[1.0; 5], 2, 8, &mut Rounding::NearestEven, &qb).is_err());
+        assert!(ctx().quantize_matmul(&[1.0; 4], 2, 1, &mut Rounding::NearestEven, &qb).is_err());
     }
 
     #[test]
@@ -982,7 +1084,10 @@ mod tests {
 
     #[test]
     fn zero_matrices() {
-        let z = hbfp_matmul_f32(&[0.0; 16], &[0.0; 16], 4, 4, 4, 8, TileSize::Edge(2)).unwrap();
+        let z = ctx()
+            .with_tile(TileSize::Edge(2))
+            .matmul_f32(&[0.0; 16], &[0.0; 16], 4, 4, 4, 8)
+            .unwrap();
         assert!(z.iter().all(|&x| x == 0.0));
     }
 
@@ -996,9 +1101,8 @@ mod tests {
         }
         let mut rng = SplitMix64::new(11);
         let b = rand_mat(&mut rng, n * n, 1.0);
-        let qb =
-            BfpTensor::from_f32(&b, n, n, 8, TileSize::Edge(4), &mut Rounding::NearestEven).unwrap();
-        let got = hbfp_matmul_f32(&a, &b, n, n, n, 8, TileSize::Edge(4)).unwrap();
+        let qb = from_f32(&b, n, n, 8, TileSize::Edge(4));
+        let got = ctx().with_tile(TileSize::Edge(4)).matmul_f32(&a, &b, n, n, n, 8).unwrap();
         for (g, q) in got.iter().zip(qb.to_f32().iter()) {
             assert_eq!(*g, 2.0 * q);
         }

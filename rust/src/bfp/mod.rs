@@ -3,6 +3,49 @@
 //! benchmark harnesses, and as the cross-language contract with the
 //! python oracle (fixtures in `tests/bfp_cross.rs`).
 //!
+//! ## The context/plan execution model
+//!
+//! All execution goes through two types ([`context`]):
+//!
+//! - [`BfpContext`] — every piece of execution policy (worker-thread
+//!   budget, dispatch backend, SIMD kernel family, matmul kernel layout,
+//!   exponent-tile size, accumulator policy, default rounding) resolved
+//!   **once** from the environment (`HBFP_THREADS`, `HBFP_SIMD`) plus
+//!   builder overrides. Subsystems hold one context instead of picking a
+//!   `_with_*` variant per call.
+//! - [`MatmulPlan`] — [`BfpContext::plan_matmul`] pre-resolves the
+//!   per-shape decisions (tile edge, panel width, accumulator class,
+//!   lane counts) so the hot loop does zero per-call policy work.
+//!   `execute` / `execute_into` run C = A·B over BFP tensors;
+//!   `quantize_execute{,_into}` fuse the A-side FP→BFP conversion into
+//!   the band loop (activations streaming against resident weights).
+//!
+//! ```no_run
+//! use hbfp::bfp::{BfpContext, Rounding, TileSize};
+//!
+//! let ctx = BfpContext::from_env().with_tile(TileSize::Edge(24));
+//! let w = ctx.quantize(&vec![0.5; 256 * 256], 256, 256, 8,
+//!                      &mut Rounding::NearestEven)?;
+//! // per layer, once:
+//! let plan = ctx.plan_matmul(8, 256, 256, (8, 8))?;
+//! // per step, zero policy work, reusable output buffer:
+//! let mut out = vec![0.0; plan.out_len()];
+//! plan.quantize_execute_into(&vec![0.1; 8 * 256], &mut Rounding::NearestEven,
+//!                            &w, &mut out)?;
+//! # Ok::<(), anyhow::Error>(())
+//! ```
+//!
+//! Every policy knob moves speed, never bits: each configuration is
+//! bit-identical to [`bfp_matmul_naive`] (enforced by
+//! `tests/context_api.rs`). The pre-context free functions
+//! (`bfp_matmul`, `quantize_matmul`, the `_with_threads/_with_simd/...`
+//! variants) survive only as `#[deprecated]` shims in [`matmul`] /
+//! [`tensor`], importable from their defining modules; see PERF.md for
+//! the old-call → new-call migration table.
+//!
+//! ## Layers
+//!
+//! - [`context`]: the execution-context API described above.
 //! - [`quant`]: shared-exponent selection, RNE + stochastic rounding
 //!   (Xorshift32, §5.3), value-level quantize/dequantize, per-tile
 //!   substream derivation for the parallel converters.
@@ -15,11 +58,11 @@
 //! - [`panels`]: the once-per-tensor B-operand relayout (k-tile-major,
 //!   panels at the kernel family's register width) the GEMM microkernel
 //!   streams.
-//! - [`matmul`]: packed, pool-parallel integer-MAC matmul with FP32 tile
-//!   accumulation (Eq. 2), accumulator width chosen by a proven overflow
-//!   bound, a register-blocked packed-panel microkernel, plus the fused
-//!   FP→BFP-convert + matmul hot path.
+//! - [`matmul`]: the packed, pool-parallel integer-MAC kernel bodies with
+//!   FP32 tile accumulation (Eq. 2) the plans drive, the accumulator
+//!   overflow bound, and the naive/FP32 references.
 
+pub mod context;
 pub mod kernels;
 pub mod matmul;
 pub mod panels;
@@ -27,13 +70,9 @@ pub mod quant;
 pub mod stats;
 pub mod tensor;
 
+pub use context::{AccPolicy, BfpContext, MatmulKernel, MatmulPlan, RoundingPolicy};
 pub use kernels::Isa;
-pub use matmul::{
-    acc_fits_i32, bfp_matmul, bfp_matmul_naive, bfp_matmul_rowmajor,
-    bfp_matmul_rowmajor_with_threads, bfp_matmul_with_backend, bfp_matmul_with_simd,
-    bfp_matmul_with_threads, fp32_matmul, hbfp_matmul_f32, max_tile_partial, quantize_matmul,
-    quantize_matmul_with_threads,
-};
+pub use matmul::{acc_fits_i32, bfp_matmul_naive, fp32_matmul, max_tile_partial};
 pub use panels::{pack_panels, PackedPanels, MAX_PANEL_NR, PANEL_NR};
 pub use quant::{
     block_exponent, dequantize_value, exp2i, quantize_value, Rounding, TileRounding, E_MAX, E_MIN,

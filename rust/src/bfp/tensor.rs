@@ -316,7 +316,9 @@ pub(crate) fn check_width(mantissa_bits: u32) -> Result<()> {
 
 impl BfpTensor {
     /// Quantize an f32 tensor into packed BFP storage, using the default
-    /// worker-thread budget.
+    /// worker-thread budget. For an explicit thread cap, tile default, or
+    /// other policy, quantize through a
+    /// [`crate::bfp::BfpContext`] (`ctx.quantize(...)`).
     pub fn from_f32(
         data: &[f32],
         rows: usize,
@@ -326,12 +328,28 @@ impl BfpTensor {
         rounding: &mut Rounding,
     ) -> Result<BfpTensor> {
         let threads = worker_threads();
-        Self::from_f32_with_threads(data, rows, cols, mantissa_bits, tile, rounding, threads)
+        Self::from_f32_impl(data, rows, cols, mantissa_bits, tile, rounding, threads)
     }
 
-    /// Quantize with an explicit thread cap. Results are bit-identical for
-    /// any `max_threads` (stochastic rounding uses per-tile substreams).
+    /// Quantize with an explicit thread cap.
+    #[deprecated(note = "use BfpContext::from_env().with_threads(n).quantize(...)")]
     pub fn from_f32_with_threads(
+        data: &[f32],
+        rows: usize,
+        cols: usize,
+        mantissa_bits: u32,
+        tile: TileSize,
+        rounding: &mut Rounding,
+        max_threads: usize,
+    ) -> Result<BfpTensor> {
+        Self::from_f32_impl(data, rows, cols, mantissa_bits, tile, rounding, max_threads)
+    }
+
+    /// Shared converter body: quantize under an explicit thread cap.
+    /// Results are bit-identical for any `max_threads` (stochastic
+    /// rounding uses per-tile substreams). Public callers go through
+    /// [`BfpTensor::from_f32`] or a `BfpContext`.
+    pub(crate) fn from_f32_impl(
         data: &[f32],
         rows: usize,
         cols: usize,
@@ -446,7 +464,7 @@ impl BfpTensor {
     }
 
     /// [`BfpTensor::packed_panels`] at an explicit panel width — the
-    /// forced-ISA matmul path (`bfp_matmul_with_simd`) and the bench
+    /// forced-ISA matmul path (`BfpContext::with_isa`) and the bench
     /// ladder's scalar rungs. The cache holds one layout: asking for a
     /// different width repacks and replaces it.
     pub fn packed_panels_nr(&self, nr: usize) -> Arc<PackedPanels> {
@@ -677,7 +695,9 @@ fn quantize_bands<E: MantissaElem>(
 /// In-place BFP round-trip (quantize + dequantize) of a row-major matrix —
 /// the host-side FP→BFP→FP converter boundary, used by the trainer to
 /// model input conversion without materializing mantissa storage.
-/// Band-parallel with per-tile substreams (thread-count invariant).
+/// Band-parallel with per-tile substreams (thread-count invariant). Uses
+/// the default worker-thread budget; for an explicit cap or tile default
+/// go through [`crate::bfp::BfpContext::quantize_inplace`].
 pub fn quantize_inplace_2d(
     data: &mut [f32],
     rows: usize,
@@ -685,6 +705,20 @@ pub fn quantize_inplace_2d(
     mantissa_bits: u32,
     tile: TileSize,
     rounding: &mut Rounding,
+) -> Result<()> {
+    quantize_inplace_2d_impl(data, rows, cols, mantissa_bits, tile, rounding, worker_threads())
+}
+
+/// [`quantize_inplace_2d`] under an explicit thread cap (the
+/// `BfpContext` body).
+pub(crate) fn quantize_inplace_2d_impl(
+    data: &mut [f32],
+    rows: usize,
+    cols: usize,
+    mantissa_bits: u32,
+    tile: TileSize,
+    rounding: &mut Rounding,
+    max_threads: usize,
 ) -> Result<()> {
     if data.len() != rows * cols {
         return Err(anyhow!("data len {} != {rows}x{cols}", data.len()));
@@ -700,7 +734,7 @@ pub fn quantize_inplace_2d(
         rows * cols,
         PAR_MIN_ELEMS,
         kernels::converter_floor_scale(isa, mode),
-        worker_threads(),
+        max_threads,
         g.tiles_r,
     );
     let jobs: Vec<(usize, &mut [f32])> = data.chunks_mut(g.th * g.cols).enumerate().collect();
@@ -925,55 +959,22 @@ mod tests {
     fn quantization_thread_count_invariant() {
         // Both rounding modes must give bit-identical tensors for 1 vs N
         // threads. Use a tensor big enough to clear the parallel floor.
+        use crate::bfp::context::BfpContext;
         let rows = 160;
         let cols = 120;
         let mut g = Gen::new(0xBF9);
         let data = g.vec_f32(rows * cols, 4);
+        let ctx1 = BfpContext::from_env().with_tile(TileSize::Edge(24)).with_threads(1);
+        let ctx8 = BfpContext::from_env().with_tile(TileSize::Edge(24)).with_threads(8);
         for m in [8u32, 12] {
-            let a = BfpTensor::from_f32_with_threads(
-                &data,
-                rows,
-                cols,
-                m,
-                TileSize::Edge(24),
-                &mut Rounding::NearestEven,
-                1,
-            )
-            .unwrap();
-            let b = BfpTensor::from_f32_with_threads(
-                &data,
-                rows,
-                cols,
-                m,
-                TileSize::Edge(24),
-                &mut Rounding::NearestEven,
-                8,
-            )
-            .unwrap();
+            let a = ctx1.quantize(&data, rows, cols, m, &mut Rounding::NearestEven).unwrap();
+            let b = ctx8.quantize(&data, rows, cols, m, &mut Rounding::NearestEven).unwrap();
             assert!(a.mantissas == b.mantissas && a.exponents == b.exponents, "rne m={m}");
 
             let mut r1 = Xorshift32::new(77);
             let mut r8 = Xorshift32::new(77);
-            let sa = BfpTensor::from_f32_with_threads(
-                &data,
-                rows,
-                cols,
-                m,
-                TileSize::Edge(24),
-                &mut Rounding::Stochastic(&mut r1),
-                1,
-            )
-            .unwrap();
-            let sb = BfpTensor::from_f32_with_threads(
-                &data,
-                rows,
-                cols,
-                m,
-                TileSize::Edge(24),
-                &mut Rounding::Stochastic(&mut r8),
-                8,
-            )
-            .unwrap();
+            let sa = ctx1.quantize(&data, rows, cols, m, &mut Rounding::Stochastic(&mut r1)).unwrap();
+            let sb = ctx8.quantize(&data, rows, cols, m, &mut Rounding::Stochastic(&mut r8)).unwrap();
             assert!(sa.mantissas == sb.mantissas && sa.exponents == sb.exponents, "sr m={m}");
         }
     }

@@ -15,7 +15,7 @@ use anyhow::{Context, Result};
 use super::checkpoint::Checkpoint;
 use super::config::RunConfig;
 use super::metrics::{EvalRecord, History, StepRecord};
-use crate::bfp::{quantize_inplace_2d, Rounding, TileSize};
+use crate::bfp::{BfpContext, Rounding, TileSize};
 use crate::data::{prefetch::Prefetcher, DatasetCache};
 use crate::runtime::{fetch_f32, fetch_scalar_f32, Engine, HostTensor, Manifest, Role};
 use crate::util::rng::{SplitMix64, Xorshift32};
@@ -99,10 +99,13 @@ impl Trainer {
         // configured once for the whole run: the hardware quantizes
         // activations at the array boundary; with `input_bfp` set we
         // model that on the batch before upload, using the band-parallel
-        // in-place round-trip (no mantissa tensor is materialized).
+        // in-place round-trip (no mantissa tensor is materialized). The
+        // BfpContext resolves thread budget + tile once, outside the
+        // step loop.
         let mut input_conv = cfg.input_bfp.map(|(bits, tile_edge)| {
             let seed = SplitMix64::new(cfg.seed ^ 0xB0F0_C04E_7E27_ED01).next_u32();
-            (bits, tile_edge, Xorshift32::new(seed))
+            let ctx = BfpContext::from_env().with_tile(TileSize::Edge(tile_edge));
+            (bits, ctx, Xorshift32::new(seed))
         });
 
         let mut history = History::default();
@@ -111,8 +114,8 @@ impl Trainer {
             let lr = cfg.lr.at(step);
             let t0 = Instant::now();
             let (mut x, y) = prefetch.next();
-            if let Some((bits, tile_edge, rng)) = &mut input_conv {
-                quantize_input(&mut x, *bits, *tile_edge, rng)?;
+            if let Some((bits, ctx, rng)) = &mut input_conv {
+                quantize_input(&mut x, *bits, ctx, rng)?;
             }
             let xb = x.to_literal()?;
             let yb = y.to_literal()?;
@@ -235,10 +238,11 @@ impl Trainer {
 /// Quantize a batch tensor through a BFP round-trip, flattened to
 /// `[batch, features]` so tiles never span examples (each converter lane
 /// sees one example at a time). Integer tensors (labels) pass through.
+/// The context (tile size + thread budget) is resolved once per run.
 fn quantize_input(
     x: &mut HostTensor,
     mantissa_bits: u32,
-    tile_edge: usize,
+    ctx: &BfpContext,
     rng: &mut Xorshift32,
 ) -> Result<()> {
     if let HostTensor::F32(v, shape) = x {
@@ -250,14 +254,7 @@ fn quantize_input(
             ));
         }
         let cols = v.len() / rows;
-        quantize_inplace_2d(
-            v,
-            rows,
-            cols,
-            mantissa_bits,
-            TileSize::Edge(tile_edge),
-            &mut Rounding::Stochastic(rng),
-        )?;
+        ctx.quantize_inplace(v, rows, cols, mantissa_bits, &mut Rounding::Stochastic(rng))?;
     }
     Ok(())
 }
@@ -266,6 +263,10 @@ fn quantize_input(
 mod tests {
     use super::*;
     use crate::bfp::quant_report;
+
+    fn conv_ctx(tile_edge: usize) -> BfpContext {
+        BfpContext::from_env().with_tile(TileSize::Edge(tile_edge))
+    }
 
     #[test]
     fn quantize_input_roundtrips_f32_batches() {
@@ -276,7 +277,7 @@ mod tests {
             (0..rows * cols).map(|i| ((i * 37 % 101) as f32) / 7.0 - 7.0).collect();
         let mut x = HostTensor::F32(data.clone(), vec![rows, cols]);
         let mut rng = Xorshift32::new(5);
-        quantize_input(&mut x, 8, 16, &mut rng).unwrap();
+        quantize_input(&mut x, 8, &conv_ctx(16), &mut rng).unwrap();
         let HostTensor::F32(q, _) = &x else { panic!("dtype changed") };
         assert_ne!(q, &data, "8-bit round-trip must move off-grid values");
         // sanity: 8-bit distortion on this data is small but nonzero
@@ -286,7 +287,7 @@ mod tests {
         // determinism: same seed, same result
         let mut x2 = HostTensor::F32(data.clone(), vec![rows, cols]);
         let mut rng2 = Xorshift32::new(5);
-        quantize_input(&mut x2, 8, 16, &mut rng2).unwrap();
+        quantize_input(&mut x2, 8, &conv_ctx(16), &mut rng2).unwrap();
         assert_eq!(x, x2);
     }
 
@@ -295,7 +296,7 @@ mod tests {
         let mut y = HostTensor::I32(vec![1, 2, 3], vec![3]);
         let orig = y.clone();
         let mut rng = Xorshift32::new(1);
-        quantize_input(&mut y, 8, 16, &mut rng).unwrap();
+        quantize_input(&mut y, 8, &conv_ctx(16), &mut rng).unwrap();
         assert_eq!(y, orig);
     }
 }

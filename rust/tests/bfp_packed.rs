@@ -1,16 +1,20 @@
 //! Packed-kernel contract tests: the width-packed, multi-threaded,
-//! accumulator-width-selecting BFP matmul must be bit-for-bit equal to the
-//! retained `bfp_matmul_naive` reference (j-innermost, always-i64) across
-//! storage classes, tile sizes, mixed operand widths, adversarial
-//! worst-case mantissas at the i32-overflow boundary, and any thread
-//! count — and the fused convert+matmul must equal materialize-then-
-//! multiply exactly, stochastic rounding included.
+//! accumulator-width-selecting BFP matmul (driven through the
+//! context/plan API) must be bit-for-bit equal to the retained
+//! `bfp_matmul_naive` reference (j-innermost, always-i64) across storage
+//! classes, tile sizes, mixed operand widths, adversarial worst-case
+//! mantissas at the i32-overflow boundary, and any thread count — and
+//! the fused convert+matmul must equal materialize-then-multiply
+//! exactly, stochastic rounding included.
 
 use hbfp::bfp::{
-    acc_fits_i32, bfp_matmul, bfp_matmul_naive, bfp_matmul_with_threads, quantize_matmul,
-    quantize_matmul_with_threads, BfpTensor, Mantissas, Rounding, TileSize,
+    acc_fits_i32, bfp_matmul_naive, BfpContext, BfpTensor, Mantissas, Rounding, TileSize,
 };
 use hbfp::util::rng::{SplitMix64, Xorshift32};
+
+fn ctx() -> BfpContext {
+    BfpContext::from_env()
+}
 
 fn rand_mat(rng: &mut SplitMix64, len: usize, scale: f32) -> Vec<f32> {
     (0..len).map(|_| rng.normal() * scale).collect()
@@ -46,7 +50,7 @@ fn packed_matches_naive_across_widths_and_tiles() {
                     BfpTensor::from_f32(&a, m, k, ma, tile, &mut Rounding::NearestEven).unwrap();
                 let qb =
                     BfpTensor::from_f32(&b, k, n, mb, tile, &mut Rounding::NearestEven).unwrap();
-                let fast = bfp_matmul(&qa, &qb).unwrap();
+                let fast = ctx().matmul(&qa, &qb).unwrap();
                 let slow = bfp_matmul_naive(&qa, &qb).unwrap();
                 assert!(
                     fast == slow,
@@ -74,8 +78,8 @@ fn wide_storage_of_narrow_mantissas_is_equivalent() {
     let a32 = BfpTensor::from_parts(m, k, 8, tile, Mantissas::I32(qa), ea).unwrap();
     let b32 = BfpTensor::from_parts(k, n, 8, tile, Mantissas::I32(qb), eb).unwrap();
     assert!(matches!(a8.mantissas, Mantissas::I8(_)));
-    let packed = bfp_matmul(&a8, &b8).unwrap();
-    let wide = bfp_matmul(&a32, &b32).unwrap();
+    let packed = ctx().matmul(&a8, &b8).unwrap();
+    let wide = ctx().matmul(&a32, &b32).unwrap();
     let naive = bfp_matmul_naive(&a8, &b8).unwrap();
     assert!(packed == wide && packed == naive, "storage class changed the numerics");
 }
@@ -105,7 +109,7 @@ fn extreme_pair(
 #[test]
 fn overflow_boundary_worst_case_exact() {
     // Combos straddling the i32 accumulator boundary. For each, the
-    // blocked kernel (which picks i32 or i64 by the bound) must equal the
+    // planned kernel (which picks i32 or i64 by the bound) must equal the
     // always-i64 naive kernel on all-extremal mantissas — if the bound
     // were wrong by even one product, the i32 path would wrap and diverge.
     for &(ma, mb, t, k) in &[
@@ -119,7 +123,13 @@ fn overflow_boundary_worst_case_exact() {
         let (m, n) = (9usize, 11usize);
         let tile = TileSize::Edge(t);
         let (a, b) = extreme_pair(m, k, n, ma, mb, tile);
-        let fast = bfp_matmul(&a, &b).unwrap();
+        let plan = ctx().with_tile(tile).plan_matmul(m, k, n, (ma, mb)).unwrap();
+        assert_eq!(
+            plan.uses_i32_acc(),
+            acc_fits_i32(t.min(k), ma, mb),
+            "plan must pre-resolve the accumulator class from the bound"
+        );
+        let fast = plan.execute(&a, &b).unwrap();
         let slow = bfp_matmul_naive(&a, &b).unwrap();
         assert!(
             fast == slow,
@@ -156,7 +166,7 @@ fn overflow_boundary_property_random_extremes() {
         let qb = rand_mantissas(&mut rng, k * n, mb);
         let a = BfpTensor::from_parts(m, k, ma, tile, pack(ma, &qa), ea).unwrap();
         let b = BfpTensor::from_parts(k, n, mb, tile, pack(mb, &qb), eb).unwrap();
-        let fast = bfp_matmul(&a, &b).unwrap();
+        let fast = ctx().matmul(&a, &b).unwrap();
         let slow = bfp_matmul_naive(&a, &b).unwrap();
         assert!(fast == slow, "case {case}: ma={ma} mb={mb} t={t} ({m}x{k}x{n})");
     }
@@ -169,29 +179,13 @@ fn stochastic_quantization_thread_invariant() {
     let mut rng = SplitMix64::new(0x5EED);
     let (rows, cols) = (200, 160); // above the parallel floor
     let data = rand_mat(&mut rng, rows * cols, 1.5);
+    let ctx1 = ctx().with_tile(TileSize::Edge(24)).with_threads(1);
+    let ctx8 = ctx().with_tile(TileSize::Edge(24)).with_threads(8);
     for m in [8u32, 12] {
         let mut r1 = Xorshift32::new(0xC0FE);
         let mut r2 = Xorshift32::new(0xC0FE);
-        let t1 = BfpTensor::from_f32_with_threads(
-            &data,
-            rows,
-            cols,
-            m,
-            TileSize::Edge(24),
-            &mut Rounding::Stochastic(&mut r1),
-            1,
-        )
-        .unwrap();
-        let t8 = BfpTensor::from_f32_with_threads(
-            &data,
-            rows,
-            cols,
-            m,
-            TileSize::Edge(24),
-            &mut Rounding::Stochastic(&mut r2),
-            8,
-        )
-        .unwrap();
+        let t1 = ctx1.quantize(&data, rows, cols, m, &mut Rounding::Stochastic(&mut r1)).unwrap();
+        let t8 = ctx8.quantize(&data, rows, cols, m, &mut Rounding::Stochastic(&mut r2)).unwrap();
         assert!(t1.mantissas == t8.mantissas && t1.exponents == t8.exponents, "m={m}");
         // and the caller RNGs advanced identically (exactly one draw)
         assert_eq!(r1.next_u32(), r2.next_u32());
@@ -208,16 +202,20 @@ fn matmul_and_fused_thread_invariant() {
         BfpTensor::from_f32(&b, k, n, 8, TileSize::Edge(24), &mut Rounding::NearestEven).unwrap();
     let qa =
         BfpTensor::from_f32(&a, m, k, 8, TileSize::Edge(24), &mut Rounding::NearestEven).unwrap();
-    let mm1 = bfp_matmul_with_threads(&qa, &qb, 1).unwrap();
-    let mm8 = bfp_matmul_with_threads(&qa, &qb, 8).unwrap();
+    let mm1 = ctx().with_threads(1).matmul(&qa, &qb).unwrap();
+    let mm8 = ctx().with_threads(8).matmul(&qa, &qb).unwrap();
     assert!(mm1 == mm8, "blocked matmul must be thread-count invariant");
 
     let mut r1 = Xorshift32::new(3);
     let mut r8 = Xorshift32::new(3);
-    let f1 =
-        quantize_matmul_with_threads(&a, m, 8, &mut Rounding::Stochastic(&mut r1), &qb, 1).unwrap();
-    let f8 =
-        quantize_matmul_with_threads(&a, m, 8, &mut Rounding::Stochastic(&mut r8), &qb, 8).unwrap();
+    let f1 = ctx()
+        .with_threads(1)
+        .quantize_matmul(&a, m, 8, &mut Rounding::Stochastic(&mut r1), &qb)
+        .unwrap();
+    let f8 = ctx()
+        .with_threads(8)
+        .quantize_matmul(&a, m, 8, &mut Rounding::Stochastic(&mut r8), &qb)
+        .unwrap();
     assert!(f1 == f8, "fused path must be thread-count invariant");
 }
 
@@ -235,8 +233,8 @@ fn fused_equals_materialized_at_parallel_sizes() {
         let mut rb = Xorshift32::new(0x11);
         let qa =
             BfpTensor::from_f32(&a, m, k, 8, tile, &mut Rounding::Stochastic(&mut ra)).unwrap();
-        let want = bfp_matmul(&qa, &qb).unwrap();
-        let got = quantize_matmul(&a, m, 8, &mut Rounding::Stochastic(&mut rb), &qb).unwrap();
+        let want = ctx().matmul(&qa, &qb).unwrap();
+        let got = ctx().quantize_matmul(&a, m, 8, &mut Rounding::Stochastic(&mut rb), &qb).unwrap();
         assert!(got == want, "fused != materialized at tile {tile:?}");
     }
 }

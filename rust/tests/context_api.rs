@@ -1,0 +1,308 @@
+//! Contract tests for the `BfpContext` + `MatmulPlan` execution API: every
+//! policy configuration must be bit-identical to the always-i64
+//! j-innermost `bfp_matmul_naive` reference — across rounding modes,
+//! thread counts, every detected SIMD family, both kernel layouts, both
+//! dispatch backends, and ragged shapes that exercise panel padding. A
+//! plan reused across calls must be deterministic, `execute_into` must
+//! honor the caller's buffer, and the `#[deprecated]` shims over the old
+//! free-function zoo must stay bit-equal to their context counterparts
+//! (this file's final module is the one place in the repo allowed to
+//! call them).
+
+use hbfp::bfp::{
+    bfp_matmul_naive, kernels, AccPolicy, BfpContext, BfpTensor, MatmulKernel, Rounding, TileSize,
+};
+use hbfp::util::pool::ParBackend;
+use hbfp::util::rng::{SplitMix64, Xorshift32};
+
+fn rand_mat(rng: &mut SplitMix64, len: usize, scale: f32) -> Vec<f32> {
+    (0..len).map(|_| rng.normal() * scale).collect()
+}
+
+/// Ragged shapes: nothing divides the 16/32-wide vector panels, edge
+/// tiles in every dimension, single rows/cols, k spanning tiles.
+const SHAPES: &[(usize, usize, usize)] =
+    &[(17, 23, 19), (48, 48, 48), (5, 64, 30), (1, 1, 1), (3, 129, 33), (40, 100, 3)];
+
+#[test]
+fn plan_execute_matches_naive_across_rounding_threads_and_isas() {
+    // The acceptance matrix: {RNE, stochastic} x {1, 4 threads} x every
+    // detected ISA x ragged shapes, plan execution vs the naive
+    // reference, bit for bit.
+    let mut rng = SplitMix64::new(0x51AD);
+    for &(m, k, n) in SHAPES {
+        let a = rand_mat(&mut rng, m * k, 2.0);
+        let b = rand_mat(&mut rng, k * n, 0.5);
+        for &tile in &[TileSize::Whole, TileSize::Edge(4), TileSize::Edge(24)] {
+            for &(ma, mb) in &[(8u32, 8u32), (12, 12), (16, 16), (8, 16), (20, 20)] {
+                for stochastic in [false, true] {
+                    let base = BfpContext::from_env().with_tile(tile);
+                    let (qa, qb) = if stochastic {
+                        let mut ra = Xorshift32::new(0xAA);
+                        let mut rb = Xorshift32::new(0xBB);
+                        (
+                            base.quantize(&a, m, k, ma, &mut Rounding::Stochastic(&mut ra))
+                                .unwrap(),
+                            base.quantize(&b, k, n, mb, &mut Rounding::Stochastic(&mut rb))
+                                .unwrap(),
+                        )
+                    } else {
+                        (
+                            base.quantize(&a, m, k, ma, &mut Rounding::NearestEven).unwrap(),
+                            base.quantize(&b, k, n, mb, &mut Rounding::NearestEven).unwrap(),
+                        )
+                    };
+                    let naive = bfp_matmul_naive(&qa, &qb).unwrap();
+                    for &isa in &kernels::detected() {
+                        for threads in [1usize, 4] {
+                            let ctx = base.clone().with_isa(isa).with_threads(threads);
+                            let plan = ctx.plan_matmul(m, k, n, (ma, mb)).unwrap();
+                            let got = plan.execute(&qa, &qb).unwrap();
+                            assert!(
+                                got == naive,
+                                "plan diverged: isa={isa:?} threads={threads} ma={ma} mb={mb} \
+                                 tile={tile:?} stochastic={stochastic} ({m}x{k}x{n})"
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn fused_plan_matches_materialized_across_isas_and_threads() {
+    // quantize_execute must equal quantize-then-execute draw for draw —
+    // the stochastic per-tile substreams are part of the contract.
+    let mut rng = SplitMix64::new(0xFEED);
+    for &(m, k, n) in &[(17usize, 23usize, 19usize), (5, 64, 30), (40, 100, 3)] {
+        let a = rand_mat(&mut rng, m * k, 1.0);
+        let b = rand_mat(&mut rng, k * n, 1.0);
+        for &tile in &[TileSize::Whole, TileSize::Edge(24)] {
+            let base = BfpContext::from_env().with_tile(tile);
+            let qb = base.quantize(&b, k, n, 8, &mut Rounding::NearestEven).unwrap();
+            for &isa in &kernels::detected() {
+                for threads in [1usize, 4] {
+                    let ctx = base.clone().with_isa(isa).with_threads(threads);
+                    let plan = ctx.plan_matmul(m, k, n, (8, 8)).unwrap();
+                    let mut r1 = Xorshift32::new(0x51);
+                    let mut r2 = Xorshift32::new(0x51);
+                    let qa = ctx.quantize(&a, m, k, 8, &mut Rounding::Stochastic(&mut r1)).unwrap();
+                    let want = plan.execute(&qa, &qb).unwrap();
+                    let got =
+                        plan.quantize_execute(&a, &mut Rounding::Stochastic(&mut r2), &qb).unwrap();
+                    assert!(
+                        got == want,
+                        "fused != materialized: isa={isa:?} threads={threads} tile={tile:?} \
+                         ({m}x{k}x{n})"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn plan_reuse_across_calls_is_deterministic() {
+    // One plan, many executions, interleaved execute / execute_into /
+    // quantize_execute_into: every call must reproduce the same bits
+    // (the resident-weight training-step contract).
+    let mut rng = SplitMix64::new(0x9E15E);
+    let (m, k, n) = (24, 56, 40);
+    let a = rand_mat(&mut rng, m * k, 1.5);
+    let b = rand_mat(&mut rng, k * n, 0.8);
+    let ctx = BfpContext::from_env().with_tile(TileSize::Edge(24));
+    let qa = ctx.quantize(&a, m, k, 8, &mut Rounding::NearestEven).unwrap();
+    let qb = ctx.quantize(&b, k, n, 8, &mut Rounding::NearestEven).unwrap();
+    let plan = ctx.plan_matmul(m, k, n, (8, 8)).unwrap();
+    let reference = plan.execute(&qa, &qb).unwrap();
+    let fused_ref = plan.quantize_execute(&a, &mut Rounding::NearestEven, &qb).unwrap();
+    let mut out = vec![0.0f32; plan.out_len()];
+    for round in 0..8 {
+        plan.execute_into(&qa, &qb, &mut out).unwrap();
+        assert!(out == reference, "execute_into round {round} diverged");
+        assert!(plan.execute(&qa, &qb).unwrap() == reference, "execute round {round} diverged");
+        plan.quantize_execute_into(&a, &mut Rounding::NearestEven, &qb, &mut out).unwrap();
+        assert!(out == fused_ref, "fused round {round} diverged");
+    }
+    // the one-shot buffered convenience rides the same machinery
+    ctx.matmul_into(&qa, &qb, &mut out).unwrap();
+    assert!(out == reference, "ctx.matmul_into diverged from the plan path");
+}
+
+#[test]
+fn policy_knobs_never_change_bits() {
+    // Kernel layout, dispatch backend, and the accumulator override are
+    // speed knobs only.
+    let mut rng = SplitMix64::new(0x0DD5);
+    let (m, k, n) = (33, 47, 29);
+    let a = rand_mat(&mut rng, m * k, 1.0);
+    let b = rand_mat(&mut rng, k * n, 1.0);
+    let base = BfpContext::from_env().with_tile(TileSize::Edge(8));
+    for &(ma, mb) in &[(8u32, 8u32), (12, 12), (16, 8)] {
+        let qa = base.quantize(&a, m, k, ma, &mut Rounding::NearestEven).unwrap();
+        let qb = base.quantize(&b, k, n, mb, &mut Rounding::NearestEven).unwrap();
+        let naive = bfp_matmul_naive(&qa, &qb).unwrap();
+        for kernel in [MatmulKernel::Packed, MatmulKernel::RowMajor] {
+            for backend in [ParBackend::Pooled, ParBackend::Scoped] {
+                for acc in [AccPolicy::Auto, AccPolicy::ForceI64] {
+                    let ctx = base
+                        .clone()
+                        .with_kernel(kernel)
+                        .with_backend(backend)
+                        .with_acc(acc)
+                        .with_threads(4);
+                    let got = ctx.matmul(&qa, &qb).unwrap();
+                    assert!(
+                        got == naive,
+                        "{kernel:?}/{backend:?}/{acc:?} diverged at ma={ma} mb={mb}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+// (Clamping of unsupported Isa requests — including the whole-matmul
+// differential — is covered once, in tests/simd_kernels.rs; the builder
+// clamp itself is unit-tested in bfp::context.)
+
+#[test]
+fn context_quantize_matches_from_f32() {
+    // ctx.quantize is the context-mediated converter: same tile, same
+    // bits as the plain constructor, for both rounding modes.
+    let mut rng = SplitMix64::new(0x0BF);
+    let (rows, cols) = (40, 36);
+    let data = rand_mat(&mut rng, rows * cols, 1.5);
+    let ctx = BfpContext::from_env().with_tile(TileSize::Edge(16));
+    let a = ctx.quantize(&data, rows, cols, 8, &mut Rounding::NearestEven).unwrap();
+    let b =
+        BfpTensor::from_f32(&data, rows, cols, 8, TileSize::Edge(16), &mut Rounding::NearestEven)
+            .unwrap();
+    assert!(a.mantissas == b.mantissas && a.exponents == b.exponents);
+
+    let mut r1 = Xorshift32::new(0x7E57);
+    let mut r2 = Xorshift32::new(0x7E57);
+    let sa = ctx.quantize(&data, rows, cols, 8, &mut Rounding::Stochastic(&mut r1)).unwrap();
+    let sb = BfpTensor::from_f32(
+        &data,
+        rows,
+        cols,
+        8,
+        TileSize::Edge(16),
+        &mut Rounding::Stochastic(&mut r2),
+    )
+    .unwrap();
+    assert!(sa.mantissas == sb.mantissas && sa.exponents == sb.exponents);
+    // and the caller RNGs advanced identically (exactly one draw)
+    assert_eq!(r1.next_u32(), r2.next_u32());
+}
+
+/// The deprecation-shim equivalence pass: the retired free functions
+/// must remain exact aliases of their context counterparts until they
+/// are deleted. This module is the single place in the repository that
+/// may call them.
+#[allow(deprecated)]
+mod shim_equivalence {
+    use super::*;
+    use hbfp::bfp::matmul::{
+        bfp_matmul, bfp_matmul_rowmajor, bfp_matmul_rowmajor_with_threads,
+        bfp_matmul_with_backend, bfp_matmul_with_simd, bfp_matmul_with_threads, hbfp_matmul_f32,
+        quantize_matmul, quantize_matmul_with_threads,
+    };
+
+    #[test]
+    fn all_nine_shims_match_their_context_counterparts() {
+        let mut rng = SplitMix64::new(0x5111);
+        let (m, k, n) = (19, 37, 23);
+        let a = rand_mat(&mut rng, m * k, 1.0);
+        let b = rand_mat(&mut rng, k * n, 1.0);
+        let tile = TileSize::Edge(8);
+        let ctx = BfpContext::from_env().with_tile(tile);
+        let qa = ctx.quantize(&a, m, k, 8, &mut Rounding::NearestEven).unwrap();
+        let qb = ctx.quantize(&b, k, n, 8, &mut Rounding::NearestEven).unwrap();
+
+        // 1. bfp_matmul
+        assert!(bfp_matmul(&qa, &qb).unwrap() == ctx.matmul(&qa, &qb).unwrap());
+        // 2. bfp_matmul_with_threads
+        assert!(
+            bfp_matmul_with_threads(&qa, &qb, 2).unwrap()
+                == ctx.clone().with_threads(2).matmul(&qa, &qb).unwrap()
+        );
+        // 3. bfp_matmul_with_backend
+        assert!(
+            bfp_matmul_with_backend(&qa, &qb, 2, ParBackend::Scoped).unwrap()
+                == ctx
+                    .clone()
+                    .with_threads(2)
+                    .with_backend(ParBackend::Scoped)
+                    .matmul(&qa, &qb)
+                    .unwrap()
+        );
+        // 4. bfp_matmul_with_simd
+        for &isa in &kernels::detected() {
+            assert!(
+                bfp_matmul_with_simd(&qa, &qb, 2, isa).unwrap()
+                    == ctx.clone().with_threads(2).with_isa(isa).matmul(&qa, &qb).unwrap()
+            );
+        }
+        // 5. bfp_matmul_rowmajor
+        let rm = ctx.clone().with_kernel(MatmulKernel::RowMajor);
+        assert!(bfp_matmul_rowmajor(&qa, &qb).unwrap() == rm.matmul(&qa, &qb).unwrap());
+        // 6. bfp_matmul_rowmajor_with_threads
+        assert!(
+            bfp_matmul_rowmajor_with_threads(&qa, &qb, 3).unwrap()
+                == rm.clone().with_threads(3).matmul(&qa, &qb).unwrap()
+        );
+        // 7. quantize_matmul (stochastic: shims must preserve draw order)
+        let mut r1 = Xorshift32::new(0x99);
+        let mut r2 = Xorshift32::new(0x99);
+        assert!(
+            quantize_matmul(&a, m, 8, &mut Rounding::Stochastic(&mut r1), &qb).unwrap()
+                == ctx
+                    .quantize_matmul(&a, m, 8, &mut Rounding::Stochastic(&mut r2), &qb)
+                    .unwrap()
+        );
+        assert_eq!(r1.next_u32(), r2.next_u32(), "shims must consume identical draws");
+        // 8. quantize_matmul_with_threads
+        let mut r1 = Xorshift32::new(0x77);
+        let mut r2 = Xorshift32::new(0x77);
+        assert!(
+            quantize_matmul_with_threads(&a, m, 8, &mut Rounding::Stochastic(&mut r1), &qb, 2)
+                .unwrap()
+                == ctx
+                    .clone()
+                    .with_threads(2)
+                    .quantize_matmul(&a, m, 8, &mut Rounding::Stochastic(&mut r2), &qb)
+                    .unwrap()
+        );
+        // 9. hbfp_matmul_f32
+        assert!(
+            hbfp_matmul_f32(&a, &b, m, k, n, 8, tile).unwrap()
+                == ctx.matmul_f32(&a, &b, m, k, n, 8).unwrap()
+        );
+    }
+
+    #[test]
+    fn from_f32_with_threads_shim_matches_context_quantize() {
+        let mut rng = SplitMix64::new(0x10CA1);
+        let (rows, cols) = (30, 22);
+        let data = rand_mat(&mut rng, rows * cols, 1.0);
+        let ctx = BfpContext::from_env().with_tile(TileSize::Edge(8)).with_threads(2);
+        let mut r1 = Xorshift32::new(0xF00);
+        let mut r2 = Xorshift32::new(0xF00);
+        let shim = BfpTensor::from_f32_with_threads(
+            &data,
+            rows,
+            cols,
+            8,
+            TileSize::Edge(8),
+            &mut Rounding::Stochastic(&mut r1),
+            2,
+        )
+        .unwrap();
+        let ctxed = ctx.quantize(&data, rows, cols, 8, &mut Rounding::Stochastic(&mut r2)).unwrap();
+        assert!(shim.mantissas == ctxed.mantissas && shim.exponents == ctxed.exponents);
+    }
+}

@@ -1,19 +1,22 @@
 //! Contract tests for the persistent worker pool and the packed-panel
-//! GEMM path: pooled dispatch must be bit-identical to per-call scoped
-//! spawns, the panel microkernel must be bit-identical to the row-major
-//! walk (and the naive reference) across all three storage classes,
-//! panel caches must never leak across a `narrow_view` repack, and
-//! concurrent matmuls from multiple caller threads must stay
-//! deterministic.
+//! GEMM path, driven through the context API: pooled dispatch must be
+//! bit-identical to per-call scoped spawns, the panel microkernel must
+//! be bit-identical to the row-major walk (and the naive reference)
+//! across all three storage classes, panel caches must never leak across
+//! a `narrow_view` repack, and concurrent matmuls from multiple caller
+//! threads must stay deterministic.
 
 use std::sync::Arc;
 
 use hbfp::bfp::{
-    bfp_matmul, bfp_matmul_naive, bfp_matmul_rowmajor_with_threads, bfp_matmul_with_backend,
-    bfp_matmul_with_threads, kernels, quantize_matmul, BfpTensor, Mantissas, Rounding, TileSize,
+    bfp_matmul_naive, kernels, BfpContext, BfpTensor, MatmulKernel, Mantissas, Rounding, TileSize,
 };
 use hbfp::util::pool::ParBackend;
 use hbfp::util::rng::{SplitMix64, Xorshift32};
+
+fn ctx() -> BfpContext {
+    BfpContext::from_env()
+}
 
 fn rand_mat(rng: &mut SplitMix64, len: usize, scale: f32) -> Vec<f32> {
     (0..len).map(|_| rng.normal() * scale).collect()
@@ -31,11 +34,13 @@ fn pooled_equals_scoped_bitwise() {
     let (m, k, n) = (96, 112, 88);
     let a = rand_mat(&mut rng, m * k, 1.5);
     let b = rand_mat(&mut rng, k * n, 0.8);
+    let pooled_ctx = ctx().with_threads(4).with_backend(ParBackend::Pooled);
+    let scoped_ctx = ctx().with_threads(4).with_backend(ParBackend::Scoped);
     for &(ma, mb) in &[(8u32, 8u32), (12, 12), (8, 16), (20, 20)] {
         let qa = quantize(&a, m, k, ma, TileSize::Edge(24));
         let qb = quantize(&b, k, n, mb, TileSize::Edge(24));
-        let pooled = bfp_matmul_with_backend(&qa, &qb, 4, ParBackend::Pooled).unwrap();
-        let scoped = bfp_matmul_with_backend(&qa, &qb, 4, ParBackend::Scoped).unwrap();
+        let pooled = pooled_ctx.matmul(&qa, &qb).unwrap();
+        let scoped = scoped_ctx.matmul(&qa, &qb).unwrap();
         let naive = bfp_matmul_naive(&qa, &qb).unwrap();
         assert!(pooled == scoped, "backends diverged at ma={ma} mb={mb}");
         assert!(pooled == naive, "panel kernel != naive at ma={ma} mb={mb}");
@@ -47,6 +52,7 @@ fn packed_panel_equals_rowmajor_across_width_classes() {
     // i8 (m<=8), i16 (m<=16), i32 (m>16) storage classes, mixed pairs,
     // ragged shapes that exercise panel padding, and TileSize::Whole.
     let mut rng = SplitMix64::new(0xABCD);
+    let rowmajor_ctx = ctx().with_kernel(MatmulKernel::RowMajor).with_threads(4);
     for &(m, k, n) in &[(17usize, 23usize, 19usize), (48, 48, 48), (5, 64, 30), (40, 100, 3)] {
         let a = rand_mat(&mut rng, m * k, 2.0);
         let b = rand_mat(&mut rng, k * n, 0.5);
@@ -54,8 +60,8 @@ fn packed_panel_equals_rowmajor_across_width_classes() {
             for &(ma, mb) in &[(8u32, 8u32), (12, 12), (20, 20), (8, 20), (20, 8), (4, 12)] {
                 let qa = quantize(&a, m, k, ma, tile);
                 let qb = quantize(&b, k, n, mb, tile);
-                let panel = bfp_matmul(&qa, &qb).unwrap();
-                let rowmajor = bfp_matmul_rowmajor_with_threads(&qa, &qb, 4).unwrap();
+                let panel = ctx().matmul(&qa, &qb).unwrap();
+                let rowmajor = rowmajor_ctx.matmul(&qa, &qb).unwrap();
                 let naive = bfp_matmul_naive(&qa, &qb).unwrap();
                 assert!(
                     panel == rowmajor && panel == naive,
@@ -78,8 +84,8 @@ fn fused_uses_panels_and_matches_materialized() {
     let qa =
         BfpTensor::from_f32(&a, m, k, 8, TileSize::Edge(24), &mut Rounding::Stochastic(&mut r1))
             .unwrap();
-    let want = bfp_matmul(&qa, &qb).unwrap();
-    let got = quantize_matmul(&a, m, 8, &mut Rounding::Stochastic(&mut r2), &qb).unwrap();
+    let want = ctx().matmul(&qa, &qb).unwrap();
+    let got = ctx().quantize_matmul(&a, m, 8, &mut Rounding::Stochastic(&mut r2), &qb).unwrap();
     assert!(got == want, "fused packed-panel path != materialized");
     assert!(qb.has_packed_panels(), "fused path must build the panel cache");
 }
@@ -94,7 +100,7 @@ fn panel_cache_invalidated_by_narrow_view_repack() {
 
     // populate the wide tensor's cache (i16 panels)
     let qa16 = quantize(&a, m, k, 16, TileSize::Edge(8));
-    let _ = bfp_matmul(&qa16, &wide).unwrap();
+    let _ = ctx().matmul(&qa16, &wide).unwrap();
     assert!(wide.has_packed_panels());
     let wide_pp = wide.packed_panels();
     assert_eq!(wide_pp.data.elem_bits(), 16);
@@ -103,7 +109,7 @@ fn panel_cache_invalidated_by_narrow_view_repack() {
     let narrow = wide.narrow_view(8, &mut Rounding::NearestEven).unwrap();
     assert!(!narrow.has_packed_panels(), "narrow_view must not inherit panels");
     let qa8 = quantize(&a, m, k, 8, TileSize::Edge(8));
-    let fast = bfp_matmul(&qa8, &narrow).unwrap();
+    let fast = ctx().matmul(&qa8, &narrow).unwrap();
     let slow = bfp_matmul_naive(&qa8, &narrow).unwrap();
     assert!(fast == slow, "narrow tensor's rebuilt panels diverged from naive");
     let narrow_pp = narrow.packed_panels();
@@ -113,7 +119,7 @@ fn panel_cache_invalidated_by_narrow_view_repack() {
     // clearing forces a repack that still agrees
     narrow.clear_panel_cache();
     assert!(!narrow.has_packed_panels());
-    let again = bfp_matmul(&qa8, &narrow).unwrap();
+    let again = ctx().matmul(&qa8, &narrow).unwrap();
     assert!(again == slow);
 }
 
@@ -131,7 +137,8 @@ fn clone_shares_valid_panels() {
 #[test]
 fn concurrent_matmuls_from_two_callers_are_deterministic() {
     // Two caller threads hammer the shared global pool with interleaved
-    // matmuls; every result must equal the single-threaded reference.
+    // plan executions; every result must equal the single-threaded
+    // reference.
     let mut rng = SplitMix64::new(0x70FF);
     let (m, k, n) = (96, 80, 72); // above the parallel floor
     let a = rand_mat(&mut rng, m * k, 1.0);
@@ -139,16 +146,22 @@ fn concurrent_matmuls_from_two_callers_are_deterministic() {
     let qa = Arc::new(quantize(&a, m, k, 8, TileSize::Edge(16)));
     let qb = Arc::new(quantize(&b, k, n, 8, TileSize::Edge(16)));
     qb.packed_panels();
-    let reference = bfp_matmul_with_threads(&qa, &qb, 1).unwrap();
+    let reference = ctx().with_threads(1).matmul(&qa, &qb).unwrap();
+    let plan = ctx()
+        .with_threads(4)
+        .with_tile(TileSize::Edge(16))
+        .plan_matmul(m, k, n, (8, 8))
+        .unwrap();
 
     std::thread::scope(|scope| {
         for _caller in 0..2 {
             let qa = Arc::clone(&qa);
             let qb = Arc::clone(&qb);
             let reference = &reference;
+            let plan = &plan;
             scope.spawn(move || {
                 for round in 0..8 {
-                    let got = bfp_matmul_with_threads(&qa, &qb, 4).unwrap();
+                    let got = plan.execute(&qa, &qb).unwrap();
                     assert!(got == *reference, "round {round} diverged under contention");
                 }
             });
@@ -158,15 +171,18 @@ fn concurrent_matmuls_from_two_callers_are_deterministic() {
 
 #[test]
 fn small_problems_take_the_inline_path_with_identical_results() {
-    // Below the MAC floor the dispatch runs inline on the caller — same
-    // kernel body, same bits as the naive reference.
+    // Below the MAC floor the plan resolves to a single lane and runs
+    // inline on the caller — same kernel body, same bits as the naive
+    // reference.
     let mut rng = SplitMix64::new(0x5A11);
     let (m, k, n) = (12, 16, 10);
     let a = rand_mat(&mut rng, m * k, 1.0);
     let b = rand_mat(&mut rng, k * n, 1.0);
     let qa = quantize(&a, m, k, 8, TileSize::Edge(8));
     let qb = quantize(&b, k, n, 8, TileSize::Edge(8));
-    let fast = bfp_matmul(&qa, &qb).unwrap();
+    let plan = ctx().with_tile(TileSize::Edge(8)).plan_matmul(m, k, n, (8, 8)).unwrap();
+    assert_eq!(plan.threads(), 1, "below the floor the plan must resolve to inline");
+    let fast = plan.execute(&qa, &qb).unwrap();
     let slow = bfp_matmul_naive(&qa, &qb).unwrap();
     assert!(fast == slow);
 }
@@ -185,4 +201,7 @@ fn panel_geometry_matches_active_family() {
     assert_eq!(pp.tiles_k, 2);
     assert_eq!(pp.tiles_j, 2);
     assert_eq!(pp.panels_per_tile, 24usize.div_ceil(nr));
+    // and a default-context plan pre-resolves the same width
+    let plan = ctx().plan_matmul(48, 48, 30, (8, 8)).unwrap();
+    assert_eq!(plan.panel_nr(), nr);
 }

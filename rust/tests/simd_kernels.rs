@@ -1,5 +1,5 @@
 //! Whole-matmul contract tests for the SIMD kernel family: every
-//! detected ISA — forced via `bfp_matmul_with_simd`, which re-packs the
+//! detected ISA — forced via `BfpContext::with_isa`, which re-packs the
 //! B panels at that family's register width — must be bit-identical to
 //! the always-i64 naive reference and to the forced-scalar path, across
 //! storage classes, mixed operand widths, both accumulator widths, and
@@ -10,10 +10,13 @@
 //! `HBFP_SIMD=off` and `HBFP_SIMD=auto`.)
 
 use hbfp::bfp::{
-    bfp_matmul, bfp_matmul_naive, bfp_matmul_with_simd, kernels, quantize_value, BfpTensor, Isa,
-    Rounding, TileSize,
+    bfp_matmul_naive, kernels, quantize_value, BfpContext, BfpTensor, Isa, Rounding, TileSize,
 };
 use hbfp::util::rng::{SplitMix64, Xorshift32};
+
+fn ctx() -> BfpContext {
+    BfpContext::from_env()
+}
 
 fn rand_mat(rng: &mut SplitMix64, len: usize, scale: f32) -> Vec<f32> {
     (0..len).map(|_| rng.normal() * scale).collect()
@@ -46,7 +49,7 @@ fn every_detected_isa_matches_naive_bitwise() {
                 let qb = quantize(&b, k, n, mb, tile);
                 let naive = bfp_matmul_naive(&qa, &qb).unwrap();
                 for &isa in &kernels::detected() {
-                    let got = bfp_matmul_with_simd(&qa, &qb, 4, isa).unwrap();
+                    let got = ctx().with_threads(4).with_isa(isa).matmul(&qa, &qb).unwrap();
                     assert!(
                         got == naive,
                         "isa={isa:?} diverged at ma={ma} mb={mb} tile={tile:?} ({m}x{k}x{n})"
@@ -69,7 +72,7 @@ fn unsupported_isa_requests_clamp_safely() {
     let qb = quantize(&b, k, n, 8, TileSize::Edge(16));
     let naive = bfp_matmul_naive(&qa, &qb).unwrap();
     for isa in [Isa::Scalar, Isa::Sse41, Isa::Avx2, Isa::Neon] {
-        let got = bfp_matmul_with_simd(&qa, &qb, 2, isa).unwrap();
+        let got = ctx().with_threads(2).with_isa(isa).matmul(&qa, &qb).unwrap();
         assert!(got == naive, "clamped {isa:?} diverged");
     }
 }
@@ -86,10 +89,11 @@ fn forced_widths_repack_the_shared_cache_coherently() {
     let qa = quantize(&a, m, k, 8, TileSize::Edge(24));
     let qb = quantize(&b, k, n, 8, TileSize::Edge(24));
     let naive = bfp_matmul_naive(&qa, &qb).unwrap();
+    let scalar_ctx = ctx().with_threads(4).with_isa(Isa::Scalar);
     for round in 0..3 {
-        let scalar = bfp_matmul_with_simd(&qa, &qb, 4, Isa::Scalar).unwrap();
+        let scalar = scalar_ctx.matmul(&qa, &qb).unwrap();
         assert_eq!(qb.packed_panels_nr(Isa::Scalar.panel_nr()).nr, Isa::Scalar.panel_nr());
-        let active = bfp_matmul(&qa, &qb).unwrap();
+        let active = ctx().matmul(&qa, &qb).unwrap();
         assert_eq!(qb.packed_panels().nr, kernels::active_panel_nr());
         assert!(scalar == naive && active == naive, "round {round} diverged");
     }
@@ -151,8 +155,10 @@ fn stochastic_draw_sequence_is_isa_independent() {
 
 #[test]
 fn active_family_is_detected_and_selection_is_sane() {
-    // the process-wide family must be executable on this CPU
+    // the process-wide family must be executable on this CPU, and the
+    // default context must resolve to it
     assert!(kernels::detected().contains(&kernels::active()));
+    assert_eq!(ctx().isa(), kernels::active());
     // HBFP_SIMD semantics (pure selection logic; the env var itself is
     // exercised by the CI matrix legs)
     use hbfp::bfp::kernels::{select, CpuCaps, SimdPref};
