@@ -1,0 +1,95 @@
+//! Fault-tolerance walkthrough: watch the resilient training loop
+//! detect an injected mid-run NaN and a truncated checkpoint, roll back,
+//! widen the mantissa class, and finish with a clean metrics history.
+//!
+//!     cargo run --release --example fault_demo
+//!
+//! Knobs (all optional):
+//!
+//!     HBFP_FAULT=nan-activation:1.0:3   inject via the env harness instead
+//!     HBFP_THREADS=4                    worker budget for the BFP datapath
+//!
+//! The same scenario runs as the acceptance test in
+//! `tests/fault_tolerance.rs::nan_plus_truncated_checkpoint_recovers_and_finishes`.
+
+use anyhow::Result;
+use hbfp::coordinator::checkpoint::{Checkpoint, CheckpointStore};
+use hbfp::coordinator::config::LrSchedule;
+use hbfp::coordinator::resilient::{run_resilient, FaultTolerantModel, SoftmaxDemo};
+use hbfp::coordinator::RunConfig;
+use hbfp::util::fault::{self, FaultInjector, FaultSite, FaultSpec};
+
+fn main() -> Result<()> {
+    let dir = std::env::temp_dir().join(format!("hbfp_fault_demo_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let combo = "demo-centroids-hbfp8";
+    let mut cfg = RunConfig::new(combo, 10)
+        .with_seed(42)
+        .with_lr(LrSchedule::Constant { lr: 0.5 })
+        .with_checkpoint_every(5)
+        .with_max_recoveries(4);
+    cfg.checkpoint_dir = Some(dir.clone());
+
+    // Phase 1: a clean 10-step run leaves `latest` (step 10) and `prev`
+    // (step 5) crash-safe checkpoints behind.
+    println!("phase 1: clean run, rotating checkpoints every 5 steps");
+    let guard = fault::install(FaultInjector::none());
+    let mut model = SoftmaxDemo::new(cfg.seed, 8);
+    let h1 = run_resilient(&mut model, &cfg)?;
+    println!(
+        "  {} steps, final loss {:.4}, width {} bits",
+        h1.steps.len(),
+        h1.steps.last().map(|s| s.loss).unwrap_or(f32::NAN),
+        model.width()
+    );
+    drop(guard);
+
+    // Simulate a crash mid-write: truncate the latest checkpoint.
+    let store = CheckpointStore::new(dir.clone(), combo);
+    let latest = store.latest_path();
+    let bytes = std::fs::read(&latest)?;
+    std::fs::write(&latest, &bytes[..bytes.len() - 7])?;
+    println!(
+        "phase 2: truncated {} ({} -> {} bytes); load now fails: {}",
+        latest.display(),
+        bytes.len(),
+        bytes.len() - 7,
+        Checkpoint::load(&latest).err().map(|e| e.to_string()).unwrap_or_default()
+    );
+
+    // Phase 2: resume for 10 more steps with a NaN activation injected at
+    // the narrow (8-bit) width class. Expect: resume from `prev` (the
+    // corrupt `latest` is skipped), NaN on the first step, rollback +
+    // widen to 16 bits, then a clean finish.
+    let guard = if fault::active().armed() {
+        None // honour an HBFP_FAULT the caller set
+    } else {
+        Some(fault::install(FaultInjector::from_specs(&[FaultSpec {
+            site: FaultSite::NanActivation,
+            rate: 1.0,
+            seed: 3,
+        }])))
+    };
+    cfg.steps = 20;
+    let mut model = SoftmaxDemo::new(cfg.seed, 8);
+    let h2 = run_resilient(&mut model, &cfg)?;
+    drop(guard);
+
+    println!(
+        "  resumed at step {}, finished at step {}, width {} bits, diverged: {}",
+        h2.steps.first().map(|s| s.step).unwrap_or(0),
+        h2.steps.last().map(|s| s.step).unwrap_or(0),
+        model.width(),
+        h2.diverged()
+    );
+    println!("  guard stats: {} scans, {} fp32 fallbacks", model.stats.scans(), model.stats.fp32_fallbacks());
+    println!("  recovery events:");
+    for r in &h2.recoveries {
+        println!("    step {:>3}  {:<18} {:<15} {}", r.step, r.kind.name(), r.action.name(), r.detail);
+    }
+
+    let csv = dir.join("history.csv");
+    h2.write_csv(&csv)?;
+    println!("  history (recovery rows included) written to {}", csv.display());
+    Ok(())
+}

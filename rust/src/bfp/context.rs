@@ -50,10 +50,132 @@ use super::kernels::Isa;
 use super::matmul::{self, acc_fits_i32};
 use super::panels::matmul_tile_edge;
 use super::quant::{OwnedRounding, Rounding, TileRounding};
-use super::tensor::{self, BfpTensor, TileSize};
+use super::stats::{self, GuardStats};
+use super::tensor::{self, next_wider_class, BfpTensor, TileSize};
 use crate::util::pool::{self, ParBackend};
 use crate::util::rng::Xorshift32;
 use crate::util::worker_threads;
+
+// ---------------------------------------------------------------- guards
+
+/// How a guard scans f32 inputs for NaN/Inf before quantization.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum InputScan {
+    /// No scanning — the caller promises finite inputs. The quantizer's
+    /// debug-build assert still backstops this in debug builds (and in
+    /// the `release-dbg` CI profile).
+    Off,
+    /// Inspect every n-th element (clamped to at least 1). A fraction of
+    /// a full pass, and still catches the blanket non-finite patterns a
+    /// diverged run produces.
+    Sampled(usize),
+    /// Inspect every element — the default: one cheap `is_finite` pass
+    /// against a GEMM's worth of MACs.
+    Full,
+}
+
+/// What a guard does when it detects numeric trouble.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GuardAction {
+    /// Fail the call with a typed [`NumericGuardError`] naming the op
+    /// and the offending index — the caller decides what dies.
+    Abort,
+    /// Degrade the offending GEMM to FP32 (IEEE semantics: a NaN flows
+    /// to the loss, where the watchdog sees it) instead of letting a
+    /// non-finite value corrupt shared-exponent tiles. Quantize-side
+    /// hazards (saturation/clamp) are report-only under this action.
+    Fp32Fallback,
+    /// Like [`GuardAction::Fp32Fallback`] for GEMMs, and additionally
+    /// auto-widen the mantissa width class on quantize-side hazards
+    /// ([`BfpContext::quantize_guarded`] climbs `next_wider_class`), with
+    /// `widen_hint` set so training loops can widen their own width knob.
+    Widen,
+}
+
+/// Numeric-guard policy carried by [`BfpContext`] and baked into every
+/// [`MatmulPlan`]. The default detects loudly (full scan, abort) but
+/// never flags healthy saturation/clamp levels (thresholds at 1.0).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct GuardPolicy {
+    pub scan: InputScan,
+    pub action: GuardAction,
+    /// Flag a quantized tensor when more than this fraction of tiles sit
+    /// at the `E_MAX` exponent rail (1.0 = never).
+    pub max_saturated_tile_frac: f64,
+    /// Flag when more than this fraction of mantissas sit on the clamp
+    /// rails `±(2^(m-1)-1)` (1.0 = never). Widening the mantissa class
+    /// thins the rails (finer grid, fewer half-ulp round-ups).
+    pub max_clamp_frac: f64,
+}
+
+impl Default for GuardPolicy {
+    fn default() -> GuardPolicy {
+        GuardPolicy {
+            scan: InputScan::Full,
+            action: GuardAction::Abort,
+            max_saturated_tile_frac: 1.0,
+            max_clamp_frac: 1.0,
+        }
+    }
+}
+
+/// What a guard detected.
+#[derive(Debug, Clone, Copy)]
+pub enum GuardEvent {
+    /// NaN/Inf in data headed for the quantizer.
+    NonFiniteInput { index: usize, value: f32 },
+    /// Fraction of tiles at the shared-exponent `E_MAX` rail.
+    ExponentSaturation { frac: f64 },
+    /// Fraction of mantissas at the clamp rails.
+    MantissaClampRate { frac: f64 },
+}
+
+impl std::fmt::Display for GuardEvent {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            GuardEvent::NonFiniteInput { index, value } => {
+                write!(f, "non-finite input {value} at flat index {index}")
+            }
+            GuardEvent::ExponentSaturation { frac } => {
+                write!(f, "{:.1}% of tiles at the E_MAX exponent rail", frac * 100.0)
+            }
+            GuardEvent::MantissaClampRate { frac } => {
+                write!(f, "{:.1}% of mantissas at the clamp rails", frac * 100.0)
+            }
+        }
+    }
+}
+
+/// Typed error for [`GuardAction::Abort`]: names the operation and the
+/// detection, so a trainer can report "layer X, step N" by adding its
+/// own context on top.
+#[derive(Debug, Clone)]
+pub struct NumericGuardError {
+    /// The guarded operation, e.g. `quantize_execute(32x256 · 256x64)`.
+    pub op: String,
+    pub event: GuardEvent,
+}
+
+impl std::fmt::Display for NumericGuardError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "numeric guard tripped in {}: {}", self.op, self.event)
+    }
+}
+
+impl std::error::Error for NumericGuardError {}
+
+/// What a non-aborting guarded call did.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct GuardOutcome {
+    /// A hazard was detected (false = clean run).
+    pub tripped: bool,
+    /// The GEMM ran in FP32 instead of BFP.
+    pub fell_back_fp32: bool,
+    /// The caller should widen its mantissa width class (and, for
+    /// [`BfpContext::quantize_guarded`] under [`GuardAction::Widen`],
+    /// the returned tensor already is wider than requested).
+    pub widen_hint: bool,
+}
 
 /// Which matmul kernel layout a context dispatches.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -123,6 +245,7 @@ pub struct BfpContext {
     tile: TileSize,
     acc: AccPolicy,
     rounding: RoundingPolicy,
+    guard: GuardPolicy,
 }
 
 impl Default for BfpContext {
@@ -145,6 +268,7 @@ impl BfpContext {
             tile: TileSize::Edge(24),
             acc: AccPolicy::Auto,
             rounding: RoundingPolicy::NearestEven,
+            guard: GuardPolicy::default(),
         }
     }
 
@@ -196,6 +320,15 @@ impl BfpContext {
         self
     }
 
+    /// Numeric-guard policy for the guarded entry points
+    /// ([`MatmulPlan::quantize_execute_guarded`],
+    /// [`BfpContext::quantize_guarded`]). The unguarded entry points are
+    /// unaffected — guards are opt-in per call site, policy per context.
+    pub fn with_guard(mut self, guard: GuardPolicy) -> Self {
+        self.guard = guard;
+        self
+    }
+
     pub fn threads(&self) -> usize {
         self.threads
     }
@@ -222,6 +355,10 @@ impl BfpContext {
 
     pub fn rounding_policy(&self) -> RoundingPolicy {
         self.rounding
+    }
+
+    pub fn guard(&self) -> GuardPolicy {
+        self.guard
     }
 
     /// Pre-resolve a C = A·B execution for A: m x k and B: k x n at
@@ -311,6 +448,108 @@ impl BfpContext {
         )
     }
 
+    /// [`BfpContext::quantize`] behind this context's [`GuardPolicy`]:
+    /// scan for non-finite input per policy, quantize, then check the
+    /// exponent-saturation and mantissa-clamp fractions against the
+    /// policy thresholds.
+    ///
+    /// Non-finite input **always** errors here regardless of
+    /// [`GuardAction`] — there is no BFP representation of NaN/Inf, and
+    /// the FP32-fallback escape hatch only exists on the GEMM path
+    /// ([`MatmulPlan::quantize_execute_guarded`]).
+    ///
+    /// Saturation/clamp hazards follow the action: `Abort` fails with a
+    /// typed [`NumericGuardError`]; `Fp32Fallback` reports (counters +
+    /// `tripped`) and returns the tensor as-is; `Widen` climbs
+    /// [`next_wider_class`] until the fractions fall inside the
+    /// thresholds or the widest class (24 bits) is reached, setting
+    /// `widen_hint` so the caller can persist the wider width.
+    pub fn quantize_guarded(
+        &self,
+        data: &[f32],
+        rows: usize,
+        cols: usize,
+        mantissa_bits: u32,
+        rounding: &mut Rounding,
+        stats: Option<&GuardStats>,
+    ) -> Result<(BfpTensor, GuardOutcome)> {
+        let stride = match self.guard.scan {
+            InputScan::Off => None,
+            InputScan::Sampled(s) => Some(s.max(1)),
+            InputScan::Full => Some(1),
+        };
+        let mut outcome = GuardOutcome::default();
+        if let Some(stride) = stride {
+            if let Some(st) = stats {
+                st.record_scan();
+            }
+            if let Some(err) = stats::scan_nonfinite(data, stride).error(data) {
+                if let Some(st) = stats {
+                    st.record_nonfinite();
+                }
+                return Err(anyhow::Error::new(NumericGuardError {
+                    op: format!("quantize({rows}x{cols}, {mantissa_bits}b)"),
+                    event: GuardEvent::NonFiniteInput {
+                        index: err.index,
+                        value: err.value,
+                    },
+                }));
+            }
+        }
+        let mut bits = mantissa_bits;
+        loop {
+            let t = BfpTensor::from_f32_impl(data, rows, cols, bits, self.tile, rounding, self.threads)?;
+            let sat = stats::saturated_tile_frac(&t);
+            let clamp = stats::clamp_rail_frac(&t);
+            let event = if sat > self.guard.max_saturated_tile_frac {
+                Some(GuardEvent::ExponentSaturation { frac: sat })
+            } else if clamp > self.guard.max_clamp_frac {
+                Some(GuardEvent::MantissaClampRate { frac: clamp })
+            } else {
+                None
+            };
+            let Some(event) = event else {
+                return Ok((t, outcome));
+            };
+            outcome.tripped = true;
+            match event {
+                GuardEvent::ExponentSaturation { .. } => {
+                    if let Some(st) = stats {
+                        st.record_saturation();
+                    }
+                }
+                GuardEvent::MantissaClampRate { .. } => {
+                    if let Some(st) = stats {
+                        st.record_clamp();
+                    }
+                }
+                GuardEvent::NonFiniteInput { .. } => unreachable!(),
+            }
+            match self.guard.action {
+                GuardAction::Abort => {
+                    return Err(anyhow::Error::new(NumericGuardError {
+                        op: format!("quantize({rows}x{cols}, {bits}b)"),
+                        event,
+                    }))
+                }
+                GuardAction::Fp32Fallback => return Ok((t, outcome)),
+                GuardAction::Widen => match next_wider_class(bits) {
+                    // Note: widening thins the clamp rails but cannot
+                    // relieve exponent saturation; a saturated tensor at
+                    // 24 bits exits through the None arm below.
+                    Some(w) => {
+                        bits = w;
+                        outcome.widen_hint = true;
+                        if let Some(st) = stats {
+                            st.record_widening();
+                        }
+                    }
+                    None => return Ok((t, outcome)),
+                },
+            }
+        }
+    }
+
     /// Convenience: quantize both f32 operands (B once as resident
     /// weights, A through the fused converter) and multiply in BFP,
     /// rounding per the context's [`RoundingPolicy`].
@@ -371,6 +610,8 @@ pub struct MatmulPlan {
     tw: usize,
     /// Lane count for the fused path (its bands follow `th`, not `t`).
     threads_fused: usize,
+    /// Guard policy inherited from the planning context.
+    guard: GuardPolicy,
 }
 
 impl MatmulPlan {
@@ -435,6 +676,7 @@ impl MatmulPlan {
             th,
             tw,
             threads_fused,
+            guard: ctx.guard,
         })
     }
 
@@ -582,6 +824,81 @@ impl MatmulPlan {
             self.use_i32,
         );
         Ok(())
+    }
+
+    /// [`MatmulPlan::quantize_execute_into`] behind this plan's
+    /// [`GuardPolicy`]: scan the f32 `a` operand per policy, and on a
+    /// non-finite detection either abort with a typed
+    /// [`NumericGuardError`] or degrade this one GEMM to FP32 (keeping
+    /// IEEE semantics so the NaN reaches the loss instead of corrupting
+    /// shared-exponent tiles). A clean scan runs the normal fused path
+    /// bit-identically to the unguarded call.
+    ///
+    /// The caller's RNG advances exactly once per call on every path
+    /// (including the FP32 fallback), so a recovered run replays the
+    /// same rounding stream as a clean one.
+    ///
+    /// `stats` (optional) receives scan/detection/degradation counters.
+    pub fn quantize_execute_guarded(
+        &self,
+        a: &[f32],
+        rounding: &mut Rounding,
+        b: &BfpTensor,
+        out: &mut [f32],
+        stats: Option<&GuardStats>,
+    ) -> Result<GuardOutcome> {
+        let stride = match self.guard.scan {
+            InputScan::Off => None,
+            InputScan::Sampled(s) => Some(s.max(1)),
+            InputScan::Full => Some(1),
+        };
+        let mut outcome = GuardOutcome::default();
+        if let Some(stride) = stride {
+            if let Some(st) = stats {
+                st.record_scan();
+            }
+            if let Some(err) = stats::scan_nonfinite(a, stride).error(a) {
+                if let Some(st) = stats {
+                    st.record_nonfinite();
+                }
+                outcome.tripped = true;
+                let op = format!(
+                    "quantize_execute({}x{} · {}x{})",
+                    self.m, self.k, self.k, self.n
+                );
+                match self.guard.action {
+                    GuardAction::Abort => {
+                        return Err(anyhow::Error::new(NumericGuardError {
+                            op,
+                            event: GuardEvent::NonFiniteInput {
+                                index: err.index,
+                                value: err.value,
+                            },
+                        }))
+                    }
+                    GuardAction::Fp32Fallback | GuardAction::Widen => {
+                        if a.len() != self.m * self.k {
+                            return Err(anyhow!("a len {} != {}x{}", a.len(), self.m, self.k));
+                        }
+                        self.check_b(b)?;
+                        self.check_out(out.len())?;
+                        // RNG draw parity with the fused path.
+                        let _ = TileRounding::capture(rounding);
+                        let bf = b.to_f32();
+                        let full = matmul::fp32_matmul(a, &bf, self.m, self.k, self.n);
+                        out.copy_from_slice(&full);
+                        outcome.fell_back_fp32 = true;
+                        outcome.widen_hint = self.guard.action == GuardAction::Widen;
+                        if let Some(st) = stats {
+                            st.record_fp32_fallback();
+                        }
+                        return Ok(outcome);
+                    }
+                }
+            }
+        }
+        self.quantize_execute_into(a, rounding, b, out)?;
+        Ok(outcome)
     }
 
     fn check_a(&self, a: &BfpTensor) -> Result<()> {
@@ -844,5 +1161,184 @@ mod tests {
         let s1 = sctx.matmul_f32(&a, &b, m, k, n, 8).unwrap();
         let s2 = sctx.matmul_f32(&a, &b, m, k, n, 8).unwrap();
         assert!(s1 == s2);
+    }
+
+    #[test]
+    fn guarded_clean_run_is_bit_identical_and_untripped() {
+        let mut rng = SplitMix64::new(0x60A);
+        let ctx = BfpContext::from_env().with_tile(TileSize::Edge(8));
+        let (m, k, n) = (7, 16, 9);
+        let a = rand_mat(&mut rng, m * k, 1.0);
+        let b = rand_mat(&mut rng, k * n, 1.0);
+        let qb = quantize(&ctx, &b, k, n, 8);
+        let plan = ctx.plan_matmul(m, k, n, (8, 8)).unwrap();
+        let want = plan.quantize_execute(&a, &mut Rounding::NearestEven, &qb).unwrap();
+        let stats = GuardStats::new();
+        let mut out = vec![0.0f32; m * n];
+        let outcome = plan
+            .quantize_execute_guarded(&a, &mut Rounding::NearestEven, &qb, &mut out, Some(&stats))
+            .unwrap();
+        assert_eq!(outcome, GuardOutcome::default());
+        assert!(out == want, "guard must not change bits on a clean run");
+        assert_eq!(stats.scans(), 1);
+        assert_eq!(stats.nonfinite_inputs(), 0);
+        // stochastic path: guarded call consumes the same RNG stream
+        let mut r1 = Xorshift32::new(0xBEE);
+        let mut r2 = Xorshift32::new(0xBEE);
+        let want_s = plan.quantize_execute(&a, &mut Rounding::Stochastic(&mut r1), &qb).unwrap();
+        let outcome_s = plan
+            .quantize_execute_guarded(&a, &mut Rounding::Stochastic(&mut r2), &qb, &mut out, None)
+            .unwrap();
+        assert!(!outcome_s.tripped);
+        assert!(out == want_s);
+        assert_eq!(r1.next_u32(), r2.next_u32(), "RNG streams must stay in lockstep");
+    }
+
+    #[test]
+    fn guarded_nan_aborts_with_typed_error() {
+        let ctx = BfpContext::from_env().with_tile(TileSize::Edge(4));
+        let (m, k, n) = (4, 8, 4);
+        let mut a = vec![1.0f32; m * k];
+        a[13] = f32::NAN;
+        let qb = quantize(&ctx, &vec![1.0f32; k * n], k, n, 8);
+        let plan = ctx.plan_matmul(m, k, n, (8, 8)).unwrap();
+        let mut out = vec![0.0f32; m * n];
+        let err = plan
+            .quantize_execute_guarded(&a, &mut Rounding::NearestEven, &qb, &mut out, None)
+            .unwrap_err();
+        let guard = err.downcast_ref::<NumericGuardError>().expect("typed guard error");
+        match guard.event {
+            GuardEvent::NonFiniteInput { index, .. } => assert_eq!(index, 13),
+            ref other => panic!("wrong event: {other}"),
+        }
+        // InputScan::Off skips detection; the NaN reaches the output
+        // (via the quantizer, which tolerates it only in release builds —
+        // keep this leg debug-safe by scanning but never matching).
+        let off = ctx.clone().with_guard(GuardPolicy {
+            scan: InputScan::Sampled(1000),
+            ..GuardPolicy::default()
+        });
+        // index 13 is not a multiple of 1000, so the sampled scan misses
+        // it and the sampled policy demonstrates its blind spot — but a
+        // stride that lands on it still catches it.
+        let plan_off = off.plan_matmul(m, k, n, (8, 8)).unwrap();
+        assert_eq!(plan_off.guard.scan, InputScan::Sampled(1000));
+        let on = ctx.clone().with_guard(GuardPolicy {
+            scan: InputScan::Sampled(13),
+            ..GuardPolicy::default()
+        });
+        let plan_on = on.plan_matmul(m, k, n, (8, 8)).unwrap();
+        assert!(plan_on
+            .quantize_execute_guarded(&a, &mut Rounding::NearestEven, &qb, &mut out, None)
+            .is_err());
+    }
+
+    #[test]
+    fn guarded_nan_fp32_fallback_matches_ieee_and_keeps_rng_parity() {
+        let mut rng = SplitMix64::new(0xF01);
+        let ctx = BfpContext::from_env().with_tile(TileSize::Edge(8)).with_guard(GuardPolicy {
+            action: GuardAction::Fp32Fallback,
+            ..GuardPolicy::default()
+        });
+        let (m, k, n) = (5, 12, 6);
+        let mut a = rand_mat(&mut rng, m * k, 1.0);
+        a[20] = f32::INFINITY;
+        let b = rand_mat(&mut rng, k * n, 1.0);
+        let qb = quantize(&ctx, &b, k, n, 8);
+        let plan = ctx.plan_matmul(m, k, n, (8, 8)).unwrap();
+        let stats = GuardStats::new();
+        let mut out = vec![0.0f32; m * n];
+        let mut r = Xorshift32::new(0x51);
+        let outcome = plan
+            .quantize_execute_guarded(&a, &mut Rounding::Stochastic(&mut r), &qb, &mut out, Some(&stats))
+            .unwrap();
+        assert!(outcome.tripped && outcome.fell_back_fp32);
+        assert!(!outcome.widen_hint, "Fp32Fallback does not ask for widening");
+        assert_eq!(stats.fp32_fallbacks(), 1);
+        let want = matmul::fp32_matmul(&a, &qb.to_f32(), m, k, n);
+        assert!(out == want, "fallback must be the IEEE product of a and dequantized b");
+        // the fallback consumed exactly the capture draw, like the fused path
+        let mut replay = Xorshift32::new(0x51);
+        let _ = replay.next_u32();
+        assert_eq!(r.next_u32(), replay.next_u32());
+        // Widen action also falls back, and additionally hints
+        let wctx = ctx.clone().with_guard(GuardPolicy {
+            action: GuardAction::Widen,
+            ..GuardPolicy::default()
+        });
+        let wplan = wctx.plan_matmul(m, k, n, (8, 8)).unwrap();
+        let w = wplan
+            .quantize_execute_guarded(&a, &mut Rounding::NearestEven, &qb, &mut out, None)
+            .unwrap();
+        assert!(w.tripped && w.fell_back_fp32 && w.widen_hint);
+    }
+
+    #[test]
+    fn quantize_guarded_rejects_nonfinite_under_every_action() {
+        let mut data = vec![1.0f32; 16];
+        data[5] = f32::NEG_INFINITY;
+        for action in [GuardAction::Abort, GuardAction::Fp32Fallback, GuardAction::Widen] {
+            let ctx = BfpContext::from_env().with_tile(TileSize::Edge(4)).with_guard(GuardPolicy {
+                action,
+                ..GuardPolicy::default()
+            });
+            let err = ctx
+                .quantize_guarded(&data, 4, 4, 8, &mut Rounding::NearestEven, None)
+                .unwrap_err();
+            assert!(err.downcast_ref::<NumericGuardError>().is_some(), "{action:?}");
+        }
+    }
+
+    #[test]
+    fn quantize_guarded_widen_ladder_terminates_at_widest_class() {
+        // a threshold below zero trips on any clamp fraction, so the
+        // ladder must climb 8 -> 16 -> 24 and then stop at the widest
+        // class instead of looping.
+        let ctx = BfpContext::from_env().with_tile(TileSize::Edge(4)).with_guard(GuardPolicy {
+            action: GuardAction::Widen,
+            max_clamp_frac: -1.0,
+            ..GuardPolicy::default()
+        });
+        let data = vec![1.0f32; 16];
+        let stats = GuardStats::new();
+        let (t, outcome) = ctx
+            .quantize_guarded(&data, 4, 4, 8, &mut Rounding::NearestEven, Some(&stats))
+            .unwrap();
+        assert_eq!(t.mantissa_bits, 24);
+        assert!(outcome.tripped && outcome.widen_hint);
+        assert_eq!(stats.widenings(), 2, "8 -> 16 -> 24");
+        // saturation on f32::MAX data: Abort names the event...
+        let sat = BfpContext::from_env().with_tile(TileSize::Edge(4)).with_guard(GuardPolicy {
+            max_saturated_tile_frac: 0.5,
+            ..GuardPolicy::default()
+        });
+        let big = vec![f32::MAX; 16];
+        let err = sat
+            .quantize_guarded(&big, 4, 4, 8, &mut Rounding::NearestEven, None)
+            .unwrap_err();
+        let g = err.downcast_ref::<NumericGuardError>().unwrap();
+        assert!(matches!(g.event, GuardEvent::ExponentSaturation { .. }));
+        // ...Fp32Fallback reports without widening...
+        let rep = sat.clone().with_guard(GuardPolicy {
+            action: GuardAction::Fp32Fallback,
+            max_saturated_tile_frac: 0.5,
+            ..GuardPolicy::default()
+        });
+        let (t8, o) = rep
+            .quantize_guarded(&big, 4, 4, 8, &mut Rounding::NearestEven, None)
+            .unwrap();
+        assert_eq!(t8.mantissa_bits, 8);
+        assert!(o.tripped && !o.widen_hint);
+        // ...and Widen cannot fix saturation but still terminates.
+        let wsat = sat.clone().with_guard(GuardPolicy {
+            action: GuardAction::Widen,
+            max_saturated_tile_frac: 0.5,
+            ..GuardPolicy::default()
+        });
+        let (t24, o24) = wsat
+            .quantize_guarded(&big, 4, 4, 8, &mut Rounding::NearestEven, None)
+            .unwrap();
+        assert_eq!(t24.mantissa_bits, 24);
+        assert!(o24.tripped && o24.widen_hint);
     }
 }

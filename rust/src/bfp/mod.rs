@@ -70,12 +70,20 @@ pub mod quant;
 pub mod stats;
 pub mod tensor;
 
-pub use context::{AccPolicy, BfpContext, MatmulKernel, MatmulPlan, RoundingPolicy};
+pub use context::{
+    AccPolicy, BfpContext, GuardAction, GuardEvent, GuardOutcome, GuardPolicy, InputScan,
+    MatmulKernel, MatmulPlan, NumericGuardError, RoundingPolicy,
+};
 pub use kernels::Isa;
 pub use matmul::{acc_fits_i32, bfp_matmul_naive, fp32_matmul, max_tile_partial};
 pub use panels::{pack_panels, PackedPanels, MAX_PANEL_NR, PANEL_NR};
 pub use quant::{
     block_exponent, dequantize_value, exp2i, quantize_value, Rounding, TileRounding, E_MAX, E_MIN,
 };
-pub use stats::{quant_report, tile_spans, ExponentStats, QuantReport};
-pub use tensor::{quantize_inplace_2d, BfpTensor, MantissaElem, Mantissas, TileSize};
+pub use stats::{
+    clamp_rail_frac, quant_report, saturated_tile_frac, scan_nonfinite, tile_spans, ExponentStats,
+    GuardStats, NonFiniteError, QuantReport, ScanReport,
+};
+pub use tensor::{
+    next_wider_class, quantize_inplace_2d, BfpTensor, MantissaElem, Mantissas, TileSize,
+};

@@ -8,9 +8,182 @@
 //! SNR, and the fraction of values flushed to zero — the evidence behind
 //! `examples/quantization_study.rs`.
 
-use super::quant::{block_exponent, frexp_exp};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use super::quant::{block_exponent, frexp_exp, E_MAX};
 use super::tensor::{BfpTensor, TileSize};
 use super::Rounding;
+
+// ---------------------------------------------------------------- guards
+//
+// The numeric-guard layer (`GuardPolicy` on `BfpContext` / `MatmulPlan`)
+// surfaces its detections through the helpers below: non-finite input
+// scans, shared-exponent saturation, and mantissa clamp-rail rates — the
+// three ways HBFP training goes numerically wrong before the loss ever
+// shows it.
+
+/// A non-finite value in data that is about to be quantized. The shared
+/// tile exponent makes this worse than in FP32: one NaN/Inf corrupts the
+/// exponent for its whole tile, so the quantizer contract rejects
+/// non-finite input outright (see `bfp/quant.rs`).
+#[derive(Debug, Clone, Copy)]
+pub struct NonFiniteError {
+    /// Index of the first non-finite element found.
+    pub index: usize,
+    /// The offending value (NaN or ±Inf).
+    pub value: f32,
+}
+
+impl std::fmt::Display for NonFiniteError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "non-finite value {} at flat index {}", self.value, self.index)
+    }
+}
+
+impl std::error::Error for NonFiniteError {}
+
+/// Result of a non-finite scan over f32 data.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ScanReport {
+    /// Elements actually inspected (`len.div_ceil(stride)`).
+    pub checked: usize,
+    /// Non-finite elements among those inspected.
+    pub nonfinite: usize,
+    /// Flat index of the first non-finite element found, if any.
+    pub first: Option<usize>,
+}
+
+impl ScanReport {
+    pub fn clean(&self) -> bool {
+        self.nonfinite == 0
+    }
+
+    /// The scan's finding as a typed error (None when clean).
+    pub fn error(&self, data: &[f32]) -> Option<NonFiniteError> {
+        self.first.map(|index| NonFiniteError { index, value: data[index] })
+    }
+}
+
+/// Scan for NaN/Inf, inspecting every `stride`-th element (stride 1 =
+/// every element; clamped to at least 1). A strided scan costs a fraction
+/// of a full pass and still catches the blanket non-finite patterns a
+/// diverging run produces (one NaN in a GEMM output infects the whole
+/// row within a step).
+pub fn scan_nonfinite(data: &[f32], stride: usize) -> ScanReport {
+    let stride = stride.max(1);
+    let mut report = ScanReport::default();
+    let mut i = 0;
+    while i < data.len() {
+        report.checked += 1;
+        if !data[i].is_finite() {
+            report.nonfinite += 1;
+            if report.first.is_none() {
+                report.first = Some(i);
+            }
+        }
+        i += stride;
+    }
+    report
+}
+
+/// Fraction of tiles whose shared exponent sits at the `E_MAX` rail —
+/// the quantizer's saturation indicator (values too large for the
+/// exponent range; the next overflow wraps into garbage on hardware).
+pub fn saturated_tile_frac(t: &BfpTensor) -> f64 {
+    if t.exponents.is_empty() {
+        return 0.0;
+    }
+    let sat = t.exponents.iter().filter(|&&e| e >= E_MAX).count();
+    sat as f64 / t.exponents.len() as f64
+}
+
+/// Fraction of mantissas at the two's-complement clamp rails
+/// (`±(2^(bits-1) - 1)`). A high rail rate means the mantissa grid is too
+/// coarse for the tile's value spread — the width class should widen.
+pub fn clamp_rail_frac(t: &BfpTensor) -> f64 {
+    let n = t.rows * t.cols;
+    if n == 0 {
+        return 0.0;
+    }
+    let hi = (1i32 << (t.mantissa_bits - 1)) - 1;
+    let lo = -hi;
+    let mut railed = 0usize;
+    for i in 0..n {
+        let q = t.mantissas.get(i);
+        if q >= hi || q <= lo {
+            railed += 1;
+        }
+    }
+    railed as f64 / n as f64
+}
+
+/// Shared counters for the guard layer: how often guards scanned, what
+/// they caught, and which degradations they triggered. Atomic so one
+/// stats block can be shared across threads and recorded from inside
+/// pool-dispatched work.
+#[derive(Debug, Default)]
+pub struct GuardStats {
+    scans: AtomicU64,
+    nonfinite_inputs: AtomicU64,
+    saturated_tensors: AtomicU64,
+    clamp_flagged: AtomicU64,
+    fp32_fallbacks: AtomicU64,
+    widenings: AtomicU64,
+}
+
+impl GuardStats {
+    pub fn new() -> GuardStats {
+        GuardStats::default()
+    }
+
+    pub fn record_scan(&self) {
+        self.scans.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_nonfinite(&self) {
+        self.nonfinite_inputs.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_saturation(&self) {
+        self.saturated_tensors.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_clamp(&self) {
+        self.clamp_flagged.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_fp32_fallback(&self) {
+        self.fp32_fallbacks.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_widening(&self) {
+        self.widenings.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn scans(&self) -> u64 {
+        self.scans.load(Ordering::Relaxed)
+    }
+
+    pub fn nonfinite_inputs(&self) -> u64 {
+        self.nonfinite_inputs.load(Ordering::Relaxed)
+    }
+
+    pub fn saturated_tensors(&self) -> u64 {
+        self.saturated_tensors.load(Ordering::Relaxed)
+    }
+
+    pub fn clamp_flagged(&self) -> u64 {
+        self.clamp_flagged.load(Ordering::Relaxed)
+    }
+
+    pub fn fp32_fallbacks(&self) -> u64 {
+        self.fp32_fallbacks.load(Ordering::Relaxed)
+    }
+
+    pub fn widenings(&self) -> u64 {
+        self.widenings.load(Ordering::Relaxed)
+    }
+}
 
 /// Distribution statistics of one tensor's element exponents.
 #[derive(Debug, Clone)]
@@ -200,6 +373,59 @@ mod tests {
         let max_whole = *spans_whole.iter().max().unwrap();
         assert!(max_whole > max16, "{max_whole} !> {max16}");
         assert!(max_whole >= 12, "mixed scales should span >= 12 binades");
+    }
+
+    #[test]
+    fn scan_finds_nonfinite_at_any_stride() {
+        let mut v = vec![1.0f32; 100];
+        v[37] = f32::NAN;
+        let full = scan_nonfinite(&v, 1);
+        assert_eq!(full.checked, 100);
+        assert_eq!(full.nonfinite, 1);
+        assert_eq!(full.first, Some(37));
+        let e = full.error(&v).unwrap();
+        assert_eq!(e.index, 37);
+        assert!(e.value.is_nan());
+        // clean data scans clean at every stride
+        let clean = vec![2.5f32; 64];
+        for stride in [1, 3, 16] {
+            assert!(scan_nonfinite(&clean, stride).clean());
+        }
+        // stride 0 is clamped to 1, not an infinite loop
+        assert_eq!(scan_nonfinite(&v, 0).checked, 100);
+        // a blanket-NaN tensor is caught even by a sparse sample
+        let all_bad = vec![f32::INFINITY; 64];
+        assert!(!scan_nonfinite(&all_bad, 16).clean());
+    }
+
+    #[test]
+    fn saturation_and_clamp_fracs() {
+        // moderate data: nothing saturates, few rails
+        let data = mixed_scale_matrix(16, 16);
+        let t = BfpTensor::from_f32(&data, 16, 16, 8, TileSize::Edge(8), &mut Rounding::NearestEven)
+            .unwrap();
+        assert_eq!(saturated_tile_frac(&t), 0.0);
+        assert!(clamp_rail_frac(&t) < 0.2, "rails {}", clamp_rail_frac(&t));
+        // huge values pin the shared exponent at the E_MAX rail
+        let big = vec![f32::MAX; 64];
+        let tb =
+            BfpTensor::from_f32(&big, 8, 8, 8, TileSize::Whole, &mut Rounding::NearestEven).unwrap();
+        assert_eq!(saturated_tile_frac(&tb), 1.0);
+    }
+
+    #[test]
+    fn guard_stats_count() {
+        let g = GuardStats::new();
+        g.record_scan();
+        g.record_scan();
+        g.record_nonfinite();
+        g.record_fp32_fallback();
+        g.record_widening();
+        assert_eq!(g.scans(), 2);
+        assert_eq!(g.nonfinite_inputs(), 1);
+        assert_eq!(g.fp32_fallbacks(), 1);
+        assert_eq!(g.widenings(), 1);
+        assert_eq!(g.saturated_tensors(), 0);
     }
 
     #[test]

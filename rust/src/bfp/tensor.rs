@@ -314,11 +314,34 @@ pub(crate) fn check_width(mantissa_bits: u32) -> Result<()> {
     Ok(())
 }
 
+/// The next wider mantissa *storage class* above `bits`: i8 (8), i16
+/// (16), i32 (24). `None` at the top of the ladder. This is the step the
+/// guard layer's graceful-degradation ladder climbs: when a width class
+/// shows saturation or clamp-rail pressure (or the watchdog rolls a
+/// diverged run back), training continues one class wider instead of
+/// dying — the accuracy/density trade at the heart of the HBFP design.
+pub fn next_wider_class(bits: u32) -> Option<u32> {
+    match bits {
+        0..=7 => Some(8),
+        8..=15 => Some(16),
+        16..=23 => Some(24),
+        _ => None,
+    }
+}
+
 impl BfpTensor {
     /// Quantize an f32 tensor into packed BFP storage, using the default
     /// worker-thread budget. For an explicit thread cap, tile default, or
     /// other policy, quantize through a
     /// [`crate::bfp::BfpContext`] (`ctx.quantize(...)`).
+    ///
+    /// **NaN/Inf contract**: non-finite input is rejected with a typed
+    /// [`super::stats::NonFiniteError`] (full scan, before any tile is
+    /// touched). A NaN or Inf would otherwise corrupt the *shared*
+    /// exponent for its whole tile — every co-tiled value, not just the
+    /// bad one — and the damage would differ by SIMD kernel family (see
+    /// `bfp/quant.rs`). Callers that can tolerate scanning less than
+    /// every element route through a `BfpContext` guard policy instead.
     pub fn from_f32(
         data: &[f32],
         rows: usize,
@@ -327,6 +350,9 @@ impl BfpTensor {
         tile: TileSize,
         rounding: &mut Rounding,
     ) -> Result<BfpTensor> {
+        if let Some(e) = super::stats::scan_nonfinite(data, 1).error(data) {
+            return Err(anyhow::Error::new(e).context("BfpTensor::from_f32"));
+        }
         let threads = worker_threads();
         Self::from_f32_impl(data, rows, cols, mantissa_bits, tile, rounding, threads)
     }

@@ -1,23 +1,96 @@
-//! Checkpointing: serialize the flat device state (param + momentum + BN
-//! leaves) to a single binary file with a JSON header, restore it into a
-//! fresh run. Format:
+//! Crash-safe checkpointing: serialize the flat device state (param +
+//! momentum + BN leaves) to a single binary file with a JSON header,
+//! restore it into a fresh run. Format v2:
 //!
 //! ```text
-//! [u32 magic "HBFC"] [u32 header_len] [header JSON bytes] [raw f32/i32 data...]
+//! [u32 magic "HBFC"] [u32 version = 2] [u32 header_len]
+//! [header JSON bytes] [raw f32/i32 data...] [u32 crc32]
 //! ```
 //!
 //! The header pins combo, step, and per-leaf (name, dtype, shape) so a
 //! checkpoint cannot be silently restored into a mismatched artifact.
+//! The trailing CRC-32 (IEEE, over every byte before the trailer) makes
+//! torn writes and bit rot detectable: [`Checkpoint::load`] verifies it
+//! before trusting anything past the magic.
+//!
+//! Durability: [`Checkpoint::save`] writes a temp file in the target
+//! directory, `fsync`s it, then atomically renames it over the
+//! destination (and fsyncs the directory), so a crash mid-save never
+//! leaves a half-written file under the checkpoint's name.
+//! [`CheckpointStore`] keeps a `latest`/`prev` pair and restores from the
+//! newest file that validates, so even a corrupted latest (e.g. the
+//! `ckpt-truncate` fault site firing between fsync and rename) rolls back
+//! one save instead of killing the run.
+//!
+//! Errors are typed ([`CkptError`]): the trainer distinguishes "corrupt
+//! file" (fall back to the previous checkpoint) from "wrong artifact"
+//! (a real configuration error that must not be skipped).
 
-use std::io::{Read, Write};
-use std::path::Path;
-
-use anyhow::{anyhow, Context, Result};
+use std::io::Write;
+use std::path::{Path, PathBuf};
 
 use crate::runtime::{DType, HostTensor, TensorSpec};
+use crate::util::crc::{crc32, Crc32};
+use crate::util::fault::{self, FaultSite};
 use crate::util::json::Json;
 
 const MAGIC: u32 = 0x4842_4643; // "HBFC"
+/// Current on-disk format version. v1 (no version field, no CRC) is
+/// rejected with [`CkptError::Version`] — its second word is a header
+/// length, which never collides with small version numbers in practice.
+pub const VERSION: u32 = 2;
+
+/// Typed checkpoint errors, so callers can tell recoverable corruption
+/// (try the previous checkpoint) from configuration errors (don't).
+#[derive(Debug)]
+pub enum CkptError {
+    /// Filesystem-level failure (open/read/write/rename/fsync).
+    Io { path: PathBuf, source: std::io::Error },
+    /// The file exists but fails validation: bad magic, truncated, CRC
+    /// mismatch, unparseable header, payload size off. Recoverable by
+    /// falling back to an older checkpoint.
+    Corrupt { path: PathBuf, why: String },
+    /// The file's format version is not [`VERSION`] (version skew).
+    Version { path: PathBuf, found: u32 },
+    /// The checkpoint is internally valid but does not match the
+    /// artifact it is being restored into (wrong combo, leaf count,
+    /// dtype, or shape). NOT recoverable by trying older files.
+    Mismatch { why: String },
+}
+
+impl std::fmt::Display for CkptError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CkptError::Io { path, source } => {
+                write!(f, "checkpoint io error at {path:?}: {source}")
+            }
+            CkptError::Corrupt { path, why } => write!(f, "corrupt checkpoint {path:?}: {why}"),
+            CkptError::Version { path, found } => write!(
+                f,
+                "checkpoint {path:?}: unsupported format version {found} (this build reads v{VERSION})"
+            ),
+            CkptError::Mismatch { why } => write!(f, "checkpoint/artifact mismatch: {why}"),
+        }
+    }
+}
+
+impl std::error::Error for CkptError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            CkptError::Io { source, .. } => Some(source),
+            _ => None,
+        }
+    }
+}
+
+impl CkptError {
+    /// True when trying an older checkpoint could still succeed (corrupt
+    /// or version-skewed file), false for mismatches and IO failures that
+    /// indicate a configuration problem rather than a bad file.
+    pub fn is_recoverable_corruption(&self) -> bool {
+        matches!(self, CkptError::Corrupt { .. } | CkptError::Version { .. })
+    }
+}
 
 pub struct Checkpoint {
     pub combo: String,
@@ -26,12 +99,12 @@ pub struct Checkpoint {
 }
 
 impl Checkpoint {
-    pub fn save(&self, path: &Path, specs: &[TensorSpec]) -> Result<()> {
+    /// Encode the full v2 file image (magic through CRC trailer).
+    fn encode(&self, specs: &[TensorSpec]) -> Result<Vec<u8>, CkptError> {
         if specs.len() != self.leaves.len() {
-            return Err(anyhow!("{} specs vs {} leaves", specs.len(), self.leaves.len()));
-        }
-        if let Some(dir) = path.parent() {
-            std::fs::create_dir_all(dir)?;
+            return Err(CkptError::Mismatch {
+                why: format!("{} specs vs {} leaves", specs.len(), self.leaves.len()),
+            });
         }
         let header = Json::obj(vec![
             ("combo", Json::str(self.combo.clone())),
@@ -54,7 +127,9 @@ impl Checkpoint {
                                 ),
                                 (
                                     "shape",
-                                    Json::Arr(s.shape.iter().map(|&d| Json::num(d as f64)).collect()),
+                                    Json::Arr(
+                                        s.shape.iter().map(|&d| Json::num(d as f64)).collect(),
+                                    ),
                                 ),
                             ])
                         })
@@ -63,56 +138,155 @@ impl Checkpoint {
             ),
         ])
         .to_string();
-        let mut f = std::fs::File::create(path).with_context(|| format!("creating {path:?}"))?;
-        f.write_all(&MAGIC.to_le_bytes())?;
-        f.write_all(&(header.len() as u32).to_le_bytes())?;
-        f.write_all(header.as_bytes())?;
+        let mut bytes = Vec::with_capacity(12 + header.len());
+        bytes.extend_from_slice(&MAGIC.to_le_bytes());
+        bytes.extend_from_slice(&VERSION.to_le_bytes());
+        bytes.extend_from_slice(&(header.len() as u32).to_le_bytes());
+        bytes.extend_from_slice(header.as_bytes());
         for leaf in &self.leaves {
             match leaf {
                 HostTensor::F32(v, _) => {
                     for x in v {
-                        f.write_all(&x.to_le_bytes())?;
+                        bytes.extend_from_slice(&x.to_le_bytes());
                     }
                 }
                 HostTensor::I32(v, _) => {
                     for x in v {
-                        f.write_all(&x.to_le_bytes())?;
+                        bytes.extend_from_slice(&x.to_le_bytes());
                     }
                 }
             }
         }
+        let crc = crc32(&bytes);
+        bytes.extend_from_slice(&crc.to_le_bytes());
+        Ok(bytes)
+    }
+
+    /// Atomically write the checkpoint: temp file in the destination
+    /// directory, `fsync`, rename over `path`, `fsync` the directory.
+    /// A crash at any point leaves either the old file or the new file,
+    /// never a torn one (the `ckpt-truncate` / `ckpt-garble` fault sites
+    /// simulate the failure this protects against).
+    pub fn save(&self, path: &Path, specs: &[TensorSpec]) -> Result<(), CkptError> {
+        let io = |p: &Path| {
+            let p = p.to_path_buf();
+            move |e: std::io::Error| CkptError::Io { path: p.clone(), source: e }
+        };
+        let mut bytes = self.encode(specs)?;
+
+        // Injected media faults, applied to the image we are about to
+        // install: a torn write (truncate) or bit rot (garble). Applied
+        // *after* encode so the installed file really is corrupt and the
+        // restore path must fall back.
+        if fault::fire(FaultSite::CkptTruncate) {
+            bytes.truncate(bytes.len() / 2);
+        }
+        if fault::fire(FaultSite::CkptGarble) {
+            let mid = bytes.len() / 2;
+            bytes[mid] ^= 0x40;
+        }
+
+        let dir = path.parent().unwrap_or_else(|| Path::new(""));
+        std::fs::create_dir_all(dir).map_err(io(dir))?;
+        let stem = path.file_name().map(|s| s.to_string_lossy().into_owned()).unwrap_or_default();
+        let tmp = dir.join(format!(".{stem}.tmp.{}", std::process::id()));
+        let write_tmp = || -> Result<(), CkptError> {
+            let mut f = std::fs::File::create(&tmp).map_err(io(&tmp))?;
+            f.write_all(&bytes).map_err(io(&tmp))?;
+            f.sync_all().map_err(io(&tmp))?;
+            std::fs::rename(&tmp, path).map_err(io(path))?;
+            Ok(())
+        };
+        if let Err(e) = write_tmp() {
+            let _ = std::fs::remove_file(&tmp);
+            return Err(e);
+        }
+        // Make the rename itself durable. Ignore failure: some
+        // filesystems refuse fsync on directories, and the data file is
+        // already synced.
+        let sync_dir = if dir.as_os_str().is_empty() { Path::new(".") } else { dir };
+        if let Ok(d) = std::fs::File::open(sync_dir) {
+            let _ = d.sync_all();
+        }
         Ok(())
     }
 
-    pub fn load(path: &Path) -> Result<Checkpoint> {
-        let mut f = std::fs::File::open(path).with_context(|| format!("opening {path:?}"))?;
-        let mut u32buf = [0u8; 4];
-        f.read_exact(&mut u32buf)?;
-        if u32::from_le_bytes(u32buf) != MAGIC {
-            return Err(anyhow!("{path:?} is not an HBFP checkpoint"));
+    /// Load and fully validate a checkpoint: magic, version, CRC, header,
+    /// and payload size are all checked before any leaf is constructed,
+    /// so a truncated or bit-flipped file yields a typed error — never a
+    /// panic, never garbage tensors.
+    pub fn load(path: &Path) -> Result<Checkpoint, CkptError> {
+        let corrupt = |why: String| CkptError::Corrupt { path: path.to_path_buf(), why };
+        let bytes = std::fs::read(path)
+            .map_err(|e| CkptError::Io { path: path.to_path_buf(), source: e })?;
+        let word = |at: usize| -> Option<u32> {
+            bytes.get(at..at + 4).map(|b| u32::from_le_bytes(b.try_into().unwrap()))
+        };
+        let magic = word(0).ok_or_else(|| corrupt("shorter than the magic".into()))?;
+        if magic != MAGIC {
+            return Err(corrupt("not an HBFP checkpoint (bad magic)".into()));
         }
-        f.read_exact(&mut u32buf)?;
-        let hlen = u32::from_le_bytes(u32buf) as usize;
-        let mut hbuf = vec![0u8; hlen];
-        f.read_exact(&mut hbuf)?;
-        let header = Json::parse(std::str::from_utf8(&hbuf)?)
-            .map_err(|e| anyhow!("checkpoint header: {e}"))?;
-        let combo = header.req("combo")?.as_str().context("combo")?.to_string();
-        let step = header.req("step")?.as_usize().context("step")?;
-        let mut leaves = Vec::new();
-        for l in header.req("leaves")?.as_arr().context("leaves")? {
+        let version = word(4).ok_or_else(|| corrupt("truncated before version".into()))?;
+        if version != VERSION {
+            return Err(CkptError::Version { path: path.to_path_buf(), found: version });
+        }
+        let hlen = word(8).ok_or_else(|| corrupt("truncated before header length".into()))? as usize;
+        let body_end = bytes.len().saturating_sub(4);
+        if 12 + hlen > body_end {
+            return Err(corrupt(format!(
+                "truncated: header claims {hlen} bytes, file has {} before the CRC trailer",
+                body_end.saturating_sub(12)
+            )));
+        }
+        let stored_crc = word(body_end).expect("body_end is in range");
+        let mut crc = Crc32::new();
+        crc.update(&bytes[..body_end]);
+        let computed = crc.finish();
+        if computed != stored_crc {
+            return Err(corrupt(format!(
+                "CRC mismatch: stored {stored_crc:#010x}, computed {computed:#010x}"
+            )));
+        }
+        let htext = std::str::from_utf8(&bytes[12..12 + hlen])
+            .map_err(|e| corrupt(format!("header is not UTF-8: {e}")))?;
+        let header = Json::parse(htext).map_err(|e| corrupt(format!("header JSON: {e}")))?;
+        let get_str = |j: &Json, k: &str| -> Result<String, CkptError> {
+            j.get(k)
+                .and_then(|v| v.as_str().map(|s| s.to_string()))
+                .ok_or_else(|| corrupt(format!("header missing string field `{k}`")))
+        };
+        let combo = get_str(&header, "combo")?;
+        let step = header
+            .get("step")
+            .and_then(|v| v.as_usize())
+            .ok_or_else(|| corrupt("header missing numeric field `step`".into()))?;
+        let leaf_hdrs = header
+            .get("leaves")
+            .and_then(|v| v.as_arr().map(|a| a.to_vec()))
+            .ok_or_else(|| corrupt("header missing array field `leaves`".into()))?;
+
+        let mut payload = &bytes[12 + hlen..body_end];
+        let mut leaves = Vec::with_capacity(leaf_hdrs.len());
+        for l in &leaf_hdrs {
             let shape: Vec<usize> = l
-                .req("shape")?
-                .as_arr()
-                .context("shape")?
+                .get("shape")
+                .and_then(|v| v.as_arr().map(|a| a.to_vec()))
+                .ok_or_else(|| corrupt("leaf missing `shape`".into()))?
                 .iter()
-                .map(|d| d.as_usize().unwrap())
-                .collect();
+                .map(|d| d.as_usize().ok_or_else(|| corrupt("non-integer shape dim".into())))
+                .collect::<Result<_, _>>()?;
             let n: usize = shape.iter().product();
-            let mut raw = vec![0u8; n * 4];
-            f.read_exact(&mut raw)?;
-            let dtype = l.req("dtype")?.as_str().context("dtype")?;
-            let leaf = match dtype {
+            if payload.len() < n * 4 {
+                return Err(corrupt(format!(
+                    "payload short: leaf wants {} bytes, {} remain",
+                    n * 4,
+                    payload.len()
+                )));
+            }
+            let (raw, rest) = payload.split_at(n * 4);
+            payload = rest;
+            let dtype = get_str(l, "dtype")?;
+            let leaf = match dtype.as_str() {
                 "f32" => HostTensor::F32(
                     raw.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect(),
                     shape,
@@ -121,29 +295,109 @@ impl Checkpoint {
                     raw.chunks_exact(4).map(|c| i32::from_le_bytes(c.try_into().unwrap())).collect(),
                     shape,
                 ),
-                _ => return Err(anyhow!("unsupported checkpoint dtype {dtype}")),
+                other => return Err(corrupt(format!("unsupported checkpoint dtype {other}"))),
             };
             leaves.push(leaf);
+        }
+        if !payload.is_empty() {
+            return Err(corrupt(format!("{} trailing payload bytes", payload.len())));
         }
         Ok(Checkpoint { combo, step, leaves })
     }
 
     /// Validate against the artifact's state specs before restoring.
-    pub fn check_against(&self, combo: &str, specs: &[TensorSpec]) -> Result<()> {
+    /// Failures are [`CkptError::Mismatch`] — a wrong-artifact error,
+    /// distinct from file corruption.
+    pub fn check_against(&self, combo: &str, specs: &[TensorSpec]) -> Result<(), CkptError> {
         if self.combo != combo {
-            return Err(anyhow!("checkpoint is for {:?}, not {combo:?}", self.combo));
+            return Err(CkptError::Mismatch {
+                why: format!("checkpoint is for {:?}, not {combo:?}", self.combo),
+            });
         }
         if self.leaves.len() != specs.len() {
-            return Err(anyhow!(
-                "checkpoint has {} leaves, artifact expects {}",
-                self.leaves.len(),
-                specs.len()
-            ));
+            return Err(CkptError::Mismatch {
+                why: format!(
+                    "checkpoint has {} leaves, artifact expects {}",
+                    self.leaves.len(),
+                    specs.len()
+                ),
+            });
         }
         for (leaf, spec) in self.leaves.iter().zip(specs) {
-            leaf.check(spec)?;
+            leaf.check(spec).map_err(|e| CkptError::Mismatch { why: format!("{e:#}") })?;
         }
         Ok(())
+    }
+}
+
+/// A `latest`/`prev` checkpoint pair under one directory: every save
+/// rotates the previous latest aside before installing the new file, and
+/// restore walks newest-to-oldest taking the first file that validates.
+/// One corrupted save therefore costs one checkpoint interval, not the
+/// run.
+pub struct CheckpointStore {
+    dir: PathBuf,
+    name: String,
+}
+
+impl CheckpointStore {
+    pub fn new(dir: impl Into<PathBuf>, name: impl Into<String>) -> CheckpointStore {
+        CheckpointStore { dir: dir.into(), name: name.into() }
+    }
+
+    /// Path of the newest checkpoint (`<dir>/<name>.ckpt`).
+    pub fn latest_path(&self) -> PathBuf {
+        self.dir.join(format!("{}.ckpt", self.name))
+    }
+
+    /// Path of the rotated previous checkpoint (`<dir>/<name>.prev.ckpt`).
+    pub fn prev_path(&self) -> PathBuf {
+        self.dir.join(format!("{}.prev.ckpt", self.name))
+    }
+
+    /// Rotate `latest` to `prev` (atomic rename), then atomically write
+    /// the new checkpoint as `latest`.
+    pub fn save(&self, ck: &Checkpoint, specs: &[TensorSpec]) -> Result<(), CkptError> {
+        let latest = self.latest_path();
+        if latest.exists() {
+            std::fs::rename(&latest, self.prev_path())
+                .map_err(|e| CkptError::Io { path: latest.clone(), source: e })?;
+        }
+        ck.save(&latest, specs)
+    }
+
+    /// Restore the newest checkpoint that validates against the artifact.
+    ///
+    /// Corrupt / version-skewed / unreadable files are logged and skipped
+    /// (falling back from `latest` to `prev`); a [`CkptError::Mismatch`]
+    /// propagates immediately because a wrong-artifact checkpoint is a
+    /// configuration error, not recoverable corruption. `Ok(None)` means
+    /// no checkpoint exists at all (a fresh run).
+    pub fn load_newest_valid(
+        &self,
+        combo: &str,
+        specs: &[TensorSpec],
+    ) -> Result<Option<(Checkpoint, PathBuf)>, CkptError> {
+        for path in [self.latest_path(), self.prev_path()] {
+            if !path.exists() {
+                continue;
+            }
+            match Checkpoint::load(&path) {
+                Ok(ck) => match ck.check_against(combo, specs) {
+                    Ok(()) => return Ok(Some((ck, path))),
+                    Err(e @ CkptError::Mismatch { .. }) => return Err(e),
+                    Err(e) => {
+                        log::warn!("skipping {path:?}: {e}");
+                        continue;
+                    }
+                },
+                Err(e) => {
+                    log::warn!("skipping {path:?}: {e}");
+                    continue;
+                }
+            }
+        }
+        Ok(None)
     }
 }
 
@@ -169,9 +423,13 @@ mod tests {
         }
     }
 
+    fn tmp(name: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("hbfp_ckpt_{name}_{}", std::process::id()))
+    }
+
     #[test]
     fn roundtrip() {
-        let p = std::env::temp_dir().join("hbfp_ckpt_test.bin");
+        let p = tmp("roundtrip.bin");
         ckpt().save(&p, &specs()).unwrap();
         let back = Checkpoint::load(&p).unwrap();
         assert_eq!(back.combo, "m-d-fp32");
@@ -181,20 +439,122 @@ mod tests {
     }
 
     #[test]
-    fn mismatch_detected() {
-        let p = std::env::temp_dir().join("hbfp_ckpt_test2.bin");
+    fn mismatch_is_typed() {
+        let p = tmp("mismatch.bin");
         ckpt().save(&p, &specs()).unwrap();
         let back = Checkpoint::load(&p).unwrap();
-        assert!(back.check_against("other", &specs()).is_err());
+        let e = back.check_against("other", &specs()).unwrap_err();
+        assert!(matches!(e, CkptError::Mismatch { .. }), "{e}");
+        assert!(!e.is_recoverable_corruption());
         let mut wrong = specs();
         wrong[0].shape = vec![3, 2];
-        assert!(back.check_against("m-d-fp32", &wrong).is_err());
+        let e = back.check_against("m-d-fp32", &wrong).unwrap_err();
+        assert!(matches!(e, CkptError::Mismatch { .. }), "{e}");
     }
 
     #[test]
     fn rejects_garbage() {
-        let p = std::env::temp_dir().join("hbfp_ckpt_garbage.bin");
+        let p = tmp("garbage.bin");
         std::fs::write(&p, b"not a checkpoint").unwrap();
-        assert!(Checkpoint::load(&p).is_err());
+        let e = Checkpoint::load(&p).unwrap_err();
+        assert!(matches!(e, CkptError::Corrupt { .. }), "{e}");
+    }
+
+    #[test]
+    fn rejects_every_truncation_length() {
+        let p = tmp("trunc_src.bin");
+        ckpt().save(&p, &specs()).unwrap();
+        let full = std::fs::read(&p).unwrap();
+        let q = tmp("trunc.bin");
+        for len in 0..full.len() {
+            std::fs::write(&q, &full[..len]).unwrap();
+            let e = Checkpoint::load(&q).unwrap_err();
+            assert!(
+                matches!(e, CkptError::Corrupt { .. } | CkptError::Io { .. }),
+                "len {len}: {e}"
+            );
+        }
+    }
+
+    #[test]
+    fn rejects_every_single_byte_corruption() {
+        let p = tmp("garble_src.bin");
+        ckpt().save(&p, &specs()).unwrap();
+        let full = std::fs::read(&p).unwrap();
+        let q = tmp("garble.bin");
+        for at in 0..full.len() {
+            let mut bad = full.clone();
+            bad[at] ^= 0x01;
+            std::fs::write(&q, &bad).unwrap();
+            assert!(Checkpoint::load(&q).is_err(), "flip at byte {at} must be rejected");
+        }
+    }
+
+    #[test]
+    fn rejects_version_skew() {
+        let p = tmp("ver.bin");
+        ckpt().save(&p, &specs()).unwrap();
+        let mut bytes = std::fs::read(&p).unwrap();
+        // Bump the version word and fix up the CRC so only the version is
+        // "wrong" — the reader must still refuse it.
+        bytes[4..8].copy_from_slice(&3u32.to_le_bytes());
+        let body_end = bytes.len() - 4;
+        let crc = crate::util::crc::crc32(&bytes[..body_end]);
+        bytes[body_end..].copy_from_slice(&crc.to_le_bytes());
+        std::fs::write(&p, &bytes).unwrap();
+        let e = Checkpoint::load(&p).unwrap_err();
+        assert!(matches!(e, CkptError::Version { found: 3, .. }), "{e}");
+        assert!(e.is_recoverable_corruption());
+    }
+
+    #[test]
+    fn save_is_atomic_and_leaves_no_temp_files() {
+        let dir = tmp("atomic_dir");
+        let _ = std::fs::remove_dir_all(&dir);
+        let p = dir.join("deep/nested/state.ckpt");
+        ckpt().save(&p, &specs()).unwrap();
+        Checkpoint::load(&p).unwrap();
+        let entries: Vec<_> = std::fs::read_dir(p.parent().unwrap())
+            .unwrap()
+            .map(|e| e.unwrap().file_name().to_string_lossy().into_owned())
+            .collect();
+        assert_eq!(entries, vec!["state.ckpt"], "no temp litter: {entries:?}");
+    }
+
+    #[test]
+    fn store_rotates_and_falls_back() {
+        let dir = tmp("store_dir");
+        let _ = std::fs::remove_dir_all(&dir);
+        let store = CheckpointStore::new(&dir, "m-d-fp32");
+        assert!(store.load_newest_valid("m-d-fp32", &specs()).unwrap().is_none());
+
+        let mut a = ckpt();
+        a.step = 10;
+        store.save(&a, &specs()).unwrap();
+        let mut b = ckpt();
+        b.step = 20;
+        store.save(&b, &specs()).unwrap();
+        assert!(store.latest_path().exists() && store.prev_path().exists());
+
+        let (ck, path) = store.load_newest_valid("m-d-fp32", &specs()).unwrap().unwrap();
+        assert_eq!(ck.step, 20);
+        assert_eq!(path, store.latest_path());
+
+        // Corrupt latest: restore must fall back to prev (step 10).
+        let mut bytes = std::fs::read(store.latest_path()).unwrap();
+        let mid = bytes.len() / 2;
+        bytes.truncate(mid);
+        std::fs::write(store.latest_path(), &bytes).unwrap();
+        let (ck, path) = store.load_newest_valid("m-d-fp32", &specs()).unwrap().unwrap();
+        assert_eq!(ck.step, 10, "fell back to prev");
+        assert_eq!(path, store.prev_path());
+
+        // Wrong combo is a mismatch, not a silent skip.
+        let e = store.load_newest_valid("other-combo", &specs()).unwrap_err();
+        assert!(matches!(e, CkptError::Mismatch { .. }), "{e}");
+
+        // Corrupt both: no checkpoint to restore.
+        std::fs::copy(store.latest_path(), store.prev_path()).unwrap();
+        assert!(store.load_newest_valid("m-d-fp32", &specs()).unwrap().is_none());
     }
 }

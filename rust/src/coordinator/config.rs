@@ -86,6 +86,15 @@ pub struct RunConfig {
     /// (`--prefetch-depth`; bounded-channel backpressure). Clamped to at
     /// least 1.
     pub prefetch_depth: usize,
+    /// Write a crash-safe checkpoint every N steps (0 = only the final
+    /// one, matching pre-fault-tolerance behaviour). Requires
+    /// `checkpoint_dir`.
+    pub checkpoint_every: usize,
+    /// Watchdog budget: how many rollback-and-recover interventions the
+    /// trainer attempts before giving up with an error. 0 disables the
+    /// watchdog (a non-finite loss then just runs to completion and is
+    /// reported by `History::diverged`).
+    pub max_recoveries: usize,
 }
 
 /// Default prefetch depth: one batch being assembled + one ready.
@@ -103,6 +112,8 @@ impl RunConfig {
             checkpoint_dir: None,
             input_bfp: None,
             prefetch_depth: DEFAULT_PREFETCH_DEPTH,
+            checkpoint_every: 0,
+            max_recoveries: 0,
         }
     }
 
@@ -131,6 +142,16 @@ impl RunConfig {
         self
     }
 
+    pub fn with_checkpoint_every(mut self, n: usize) -> Self {
+        self.checkpoint_every = n;
+        self
+    }
+
+    pub fn with_max_recoveries(mut self, n: usize) -> Self {
+        self.max_recoveries = n;
+        self
+    }
+
     /// Parse the model name back out of the combo.
     pub fn model(&self) -> &str {
         self.combo.split('-').next().unwrap_or("")
@@ -151,6 +172,8 @@ impl RunConfig {
                 },
             ),
             ("prefetch_depth", Json::num(self.prefetch_depth as f64)),
+            ("checkpoint_every", Json::num(self.checkpoint_every as f64)),
+            ("max_recoveries", Json::num(self.max_recoveries as f64)),
         ])
     }
 }
@@ -239,5 +262,15 @@ mod tests {
         let parsed =
             Json::parse(&RunConfig::new("m-d-fp32", 10).to_json().to_string()).unwrap();
         assert_eq!(parsed.get("prefetch_depth").unwrap().as_usize(), Some(2));
+    }
+
+    #[test]
+    fn fault_tolerance_knobs_default_off() {
+        let c = RunConfig::new("m-d-fp32", 10);
+        assert_eq!((c.checkpoint_every, c.max_recoveries), (0, 0));
+        let c = c.with_checkpoint_every(25).with_max_recoveries(3);
+        let parsed = Json::parse(&c.to_json().to_string()).unwrap();
+        assert_eq!(parsed.get("checkpoint_every").unwrap().as_usize(), Some(25));
+        assert_eq!(parsed.get("max_recoveries").unwrap().as_usize(), Some(3));
     }
 }

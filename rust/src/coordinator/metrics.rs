@@ -34,11 +34,76 @@ impl EvalRecord {
     }
 }
 
+/// One fault-tolerance intervention during a run: what tripped the
+/// watchdog ([`RecoveryKind`]) and what the loop did about it
+/// ([`RecoveryAction`]). Appended to [`History::recoveries`] so recovery
+/// behaviour is visible in the same CSV/JSON artifacts as the loss curve.
+#[derive(Debug, Clone)]
+pub struct RecoveryEvent {
+    /// Training step at which the hazard was detected.
+    pub step: usize,
+    pub kind: RecoveryKind,
+    pub action: RecoveryAction,
+    /// Human-readable diagnostic (offending value, error text, …).
+    pub detail: String,
+}
+
+/// What tripped the watchdog.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RecoveryKind {
+    /// NaN/Inf loss (or a numeric-guard abort surfaced as a step error).
+    NonFiniteLoss,
+    /// Finite but exploding loss (above the divergence threshold).
+    ExplodingLoss,
+    /// The step itself failed (worker panic, guard abort, checkpoint IO).
+    StepError,
+    /// A checkpoint failed validation during restore and was skipped.
+    CorruptCheckpoint,
+}
+
+impl RecoveryKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            RecoveryKind::NonFiniteLoss => "non-finite-loss",
+            RecoveryKind::ExplodingLoss => "exploding-loss",
+            RecoveryKind::StepError => "step-error",
+            RecoveryKind::CorruptCheckpoint => "corrupt-checkpoint",
+        }
+    }
+}
+
+/// What the loop did in response.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RecoveryAction {
+    /// Rolled state back to the newest valid checkpoint.
+    Rollback,
+    /// Rolled back and widened the mantissa width class.
+    RollbackWiden,
+    /// Restarted from step 0 (no valid checkpoint existed).
+    Restart,
+    /// Gave up: the recovery budget was exhausted.
+    Abort,
+}
+
+impl RecoveryAction {
+    pub fn name(self) -> &'static str {
+        match self {
+            RecoveryAction::Rollback => "rollback",
+            RecoveryAction::RollbackWiden => "rollback-widen",
+            RecoveryAction::Restart => "restart",
+            RecoveryAction::Abort => "abort",
+        }
+    }
+}
+
 /// Full history of one run.
 #[derive(Debug, Default, Clone)]
 pub struct History {
     pub steps: Vec<StepRecord>,
     pub evals: Vec<EvalRecord>,
+    /// Fault-tolerance interventions, in detection order (empty for a
+    /// clean run — and absent from the CSV/JSON output in that case).
+    pub recoveries: Vec<RecoveryEvent>,
 }
 
 impl History {
@@ -90,11 +155,16 @@ impl History {
         for e in &self.evals {
             writeln!(f, "eval,{},{},{},,", e.step, e.loss, e.error)?;
         }
+        for r in &self.recoveries {
+            // detail is free text: keep the row parseable
+            let detail = r.detail.replace([',', '\n'], ";");
+            writeln!(f, "recovery,{},,{},{},{}", r.step, r.kind.name(), r.action.name(), detail)?;
+        }
         Ok(())
     }
 
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![
+        let mut fields = vec![
             (
                 "train",
                 Json::Arr(
@@ -126,7 +196,26 @@ impl History {
                         .collect(),
                 ),
             ),
-        ])
+        ];
+        if !self.recoveries.is_empty() {
+            fields.push((
+                "recoveries",
+                Json::Arr(
+                    self.recoveries
+                        .iter()
+                        .map(|r| {
+                            Json::obj(vec![
+                                ("step", Json::num(r.step as f64)),
+                                ("kind", Json::Str(r.kind.name().to_string())),
+                                ("action", Json::Str(r.action.name().to_string())),
+                                ("detail", Json::Str(r.detail.clone())),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ));
+        }
+        Json::obj(fields)
     }
 }
 
@@ -182,5 +271,28 @@ mod tests {
         let s = std::fs::read_to_string(&p).unwrap();
         assert!(s.lines().count() == 1 + 10 + 2);
         assert!(s.starts_with("kind,step"));
+    }
+
+    #[test]
+    fn recoveries_surface_in_csv_and_json_only_when_present() {
+        assert!(hist().to_json().get("recoveries").is_none(), "clean run stays clean");
+        let mut h = hist();
+        h.recoveries.push(RecoveryEvent {
+            step: 7,
+            kind: RecoveryKind::NonFiniteLoss,
+            action: RecoveryAction::RollbackWiden,
+            detail: "loss=NaN, widened 8->16".into(),
+        });
+        let p = std::env::temp_dir().join("hbfp_metrics_recovery_test.csv");
+        h.write_csv(&p).unwrap();
+        let s = std::fs::read_to_string(&p).unwrap();
+        assert_eq!(s.lines().count(), 1 + 10 + 2 + 1);
+        let row = s.lines().last().unwrap();
+        assert!(row.starts_with("recovery,7,,non-finite-loss,rollback-widen,"));
+        assert!(row.contains("loss=NaN; widened"), "detail commas sanitized: {row}");
+        let rec = h.to_json();
+        let rec = rec.get("recoveries").unwrap().as_arr().unwrap();
+        assert_eq!(rec.len(), 1);
+        assert_eq!(rec[0].get("kind").unwrap().as_str().unwrap(), "non-finite-loss");
     }
 }

@@ -7,11 +7,15 @@ pub mod config;
 pub mod metrics;
 pub mod report;
 pub mod repro;
+pub mod resilient;
 pub mod sweep;
 pub mod trainer;
 
-pub use checkpoint::Checkpoint;
+pub use checkpoint::{Checkpoint, CheckpointStore, CkptError};
 pub use config::{default_base_lr, parse_schedule, LrSchedule, RunConfig, DEFAULT_PREFETCH_DEPTH};
-pub use metrics::{EvalRecord, History, StepRecord};
+pub use metrics::{
+    EvalRecord, History, RecoveryAction, RecoveryEvent, RecoveryKind, StepRecord,
+};
+pub use resilient::{run_resilient, FaultTolerantModel, SoftmaxDemo, EXPLOSION_THRESHOLD};
 pub use sweep::{Sweep, SweepRow};
 pub use trainer::{RunResult, Trainer};

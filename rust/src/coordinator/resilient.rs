@@ -1,0 +1,576 @@
+//! Fault-tolerant training loop: a watchdog-wrapped step driver that
+//! detects numeric hazards (non-finite or exploding loss), contained
+//! worker panics, and step errors, then recovers by rolling back to the
+//! newest valid checkpoint and widening the mantissa width class.
+//!
+//! The XLA-artifact trainer ([`super::trainer`]) carries the same
+//! watchdog for real model runs; this module provides the
+//! artifact-independent loop used by the fault-injection demo and tests:
+//! a [`FaultTolerantModel`] is anything that can snapshot/restore its
+//! state as checkpoint leaves and run one optimizer step.
+//!
+//! Recovery policy (`RunConfig::max_recoveries` interventions, then give
+//! up):
+//!
+//! 1. A hazard at step `s` rolls state back to the newest checkpoint that
+//!    passes CRC + manifest validation (`latest`, then `prev`; corrupt
+//!    files are skipped and recorded as
+//!    [`RecoveryKind::CorruptCheckpoint`] events, never trusted).
+//! 2. The mantissa width class widens one step
+//!    ([`crate::bfp::next_wider_class`]) — the paper's §5.3 observation
+//!    that divergence under narrow mantissas is a quantization-noise
+//!    problem, so the remedy is more mantissa, not more retries.
+//! 3. Replay resumes from the checkpoint's step. Batches derive from
+//!    `seed ^ step`, so the replayed schedule is identical and the whole
+//!    run is deterministic under a fixed seed (fault injection included:
+//!    the [`crate::util::fault`] schedule is a pure function of the
+//!    per-site probe counter).
+//!
+//! Every intervention lands in [`History::recoveries`] and flows to the
+//! same CSV/JSON artifacts as the loss curve.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use super::checkpoint::{Checkpoint, CheckpointStore, CkptError};
+use super::config::RunConfig;
+use super::metrics::{History, RecoveryAction, RecoveryEvent, RecoveryKind, StepRecord};
+use crate::bfp::{
+    next_wider_class, BfpContext, GuardAction, GuardPolicy, GuardStats, Rounding, TileSize,
+};
+use crate::runtime::engine::HostTensor;
+use crate::runtime::manifest::{DType, TensorSpec};
+use crate::util::fault::{self, FaultSite};
+use crate::util::rng::SplitMix64;
+
+/// Loss value beyond which the watchdog calls a finite loss "exploding"
+/// (the same threshold [`History::diverged`] reports on).
+pub const EXPLOSION_THRESHOLD: f32 = 50.0;
+
+/// A training state the resilient loop can drive: snapshot/restore as
+/// checkpoint leaves, one optimizer step at a time, with a widenable
+/// mantissa width class.
+pub trait FaultTolerantModel {
+    /// Manifest of the state leaves, in [`FaultTolerantModel::state`]
+    /// order (checkpoints validate against this).
+    fn specs(&self) -> Vec<TensorSpec>;
+    /// Snapshot the training state.
+    fn state(&self) -> Vec<HostTensor>;
+    /// Replace the training state from checkpoint leaves (spec order).
+    fn restore(&mut self, leaves: &[HostTensor]) -> Result<()>;
+    /// Run one optimizer step at `step` with learning rate `lr`;
+    /// returns `(loss, accuracy)`.
+    fn step(&mut self, step: usize, lr: f32) -> Result<(f32, f32)>;
+    /// Current mantissa width class (bits).
+    fn width(&self) -> u32;
+    /// Widen the mantissa width class one step; `false` when already at
+    /// the widest class.
+    fn widen(&mut self) -> bool;
+}
+
+/// What one wrapped step produced.
+enum StepOutcome {
+    Clean(f32, f32),
+    Hazard {
+        kind: RecoveryKind,
+        detail: String,
+        /// The step record when the step did complete (non-finite or
+        /// exploding loss) — recorded if the watchdog is disabled.
+        record: Option<(f32, f32)>,
+    },
+}
+
+fn panic_msg(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+/// Try `latest` then `prev`, skipping (and noting) anything that fails
+/// CRC/format/version validation. A combo/spec mismatch is a caller bug
+/// (wrong artifact), not corruption, and propagates.
+fn restore_newest(
+    store: &CheckpointStore,
+    combo: &str,
+    specs: &[TensorSpec],
+    notes: &mut Vec<String>,
+) -> Result<Option<Checkpoint>> {
+    for path in [store.latest_path(), store.prev_path()] {
+        if !path.exists() {
+            continue;
+        }
+        let loaded = Checkpoint::load(&path).and_then(|ck| {
+            ck.check_against(combo, specs)?;
+            Ok(ck)
+        });
+        match loaded {
+            Ok(ck) => return Ok(Some(ck)),
+            Err(e @ CkptError::Mismatch { .. }) => return Err(e.into()),
+            Err(e) => notes.push(format!("skipped {}: {e}", path.display())),
+        }
+    }
+    Ok(None)
+}
+
+/// Drive `model` for `cfg.steps` steps under the watchdog. Resumes from
+/// the newest valid checkpoint in `cfg.checkpoint_dir` when one exists,
+/// checkpoints every `cfg.checkpoint_every` steps (plus once at the end),
+/// and spends at most `cfg.max_recoveries` rollback-and-widen
+/// interventions before giving up with an error. With
+/// `max_recoveries == 0` the watchdog is off: a non-finite loss is
+/// recorded and the run continues (legacy behaviour, visible through
+/// [`History::diverged`]), while a step error still fails the run.
+pub fn run_resilient<M: FaultTolerantModel>(model: &mut M, cfg: &RunConfig) -> Result<History> {
+    let specs = model.specs();
+    let store =
+        cfg.checkpoint_dir.as_ref().map(|d| CheckpointStore::new(d.clone(), cfg.combo.clone()));
+    let initial = model.state();
+    let mut history = History::default();
+    let mut step = 0usize;
+
+    if let Some(store) = &store {
+        if let Some((ck, _)) = store.load_newest_valid(&cfg.combo, &specs)? {
+            model.restore(&ck.leaves)?;
+            step = ck.step;
+        }
+    }
+
+    let mut recoveries_used = 0usize;
+    while step < cfg.steps {
+        let lr = cfg.lr.at(step);
+        let t0 = Instant::now();
+        let outcome = match catch_unwind(AssertUnwindSafe(|| model.step(step, lr))) {
+            Err(payload) => StepOutcome::Hazard {
+                kind: RecoveryKind::StepError,
+                detail: format!("step panicked: {}", panic_msg(payload.as_ref())),
+                record: None,
+            },
+            Ok(Err(e)) => StepOutcome::Hazard {
+                kind: RecoveryKind::StepError,
+                detail: format!("step failed: {e:#}"),
+                record: None,
+            },
+            Ok(Ok((loss, acc))) if !loss.is_finite() => StepOutcome::Hazard {
+                kind: RecoveryKind::NonFiniteLoss,
+                detail: format!("loss={loss}"),
+                record: Some((loss, acc)),
+            },
+            Ok(Ok((loss, acc))) if loss > EXPLOSION_THRESHOLD => StepOutcome::Hazard {
+                kind: RecoveryKind::ExplodingLoss,
+                detail: format!("loss={loss}"),
+                record: Some((loss, acc)),
+            },
+            Ok(Ok((loss, acc))) => StepOutcome::Clean(loss, acc),
+        };
+        let secs = t0.elapsed().as_secs_f64();
+        match outcome {
+            StepOutcome::Clean(loss, acc) => {
+                history.steps.push(StepRecord { step, loss, acc, lr, step_secs: secs });
+                step += 1;
+                if let Some(store) = &store {
+                    if cfg.checkpoint_every > 0 && step % cfg.checkpoint_every == 0 {
+                        let ck =
+                            Checkpoint { combo: cfg.combo.clone(), step, leaves: model.state() };
+                        store.save(&ck, &specs)?;
+                    }
+                }
+            }
+            StepOutcome::Hazard { kind, detail, record } if cfg.max_recoveries == 0 => {
+                match record {
+                    Some((loss, acc)) => {
+                        history.steps.push(StepRecord { step, loss, acc, lr, step_secs: secs });
+                        step += 1;
+                    }
+                    None => {
+                        return Err(anyhow!(
+                            "step {step} failed with the watchdog disabled ({}): {detail}",
+                            kind.name()
+                        ))
+                    }
+                }
+            }
+            StepOutcome::Hazard { kind, detail, .. } => {
+                recoveries_used += 1;
+                if recoveries_used > cfg.max_recoveries {
+                    history.recoveries.push(RecoveryEvent {
+                        step,
+                        kind,
+                        action: RecoveryAction::Abort,
+                        detail: detail.clone(),
+                    });
+                    return Err(anyhow!(
+                        "recovery budget ({}) exhausted at step {step} ({}): {detail}",
+                        cfg.max_recoveries,
+                        kind.name()
+                    ));
+                }
+                let mut notes = Vec::new();
+                let restored = match &store {
+                    Some(store) => restore_newest(store, &cfg.combo, &specs, &mut notes)?,
+                    None => None,
+                };
+                let (action, resume) = match restored {
+                    Some(ck) => {
+                        model.restore(&ck.leaves)?;
+                        let widened = model.widen();
+                        let action = if widened {
+                            RecoveryAction::RollbackWiden
+                        } else {
+                            RecoveryAction::Rollback
+                        };
+                        (action, ck.step)
+                    }
+                    None => {
+                        model.restore(&initial)?;
+                        model.widen();
+                        (RecoveryAction::Restart, 0)
+                    }
+                };
+                for note in notes {
+                    history.recoveries.push(RecoveryEvent {
+                        step,
+                        kind: RecoveryKind::CorruptCheckpoint,
+                        action,
+                        detail: note,
+                    });
+                }
+                history.recoveries.push(RecoveryEvent {
+                    step,
+                    kind,
+                    action,
+                    detail: format!(
+                        "{detail}; resumed at step {resume} with width {}",
+                        model.width()
+                    ),
+                });
+                history.steps.retain(|r| r.step < resume);
+                step = resume;
+            }
+        }
+    }
+    // Final checkpoint — unless the cadence just wrote one at this exact
+    // step (saving again would rotate the genuinely-older `prev` away).
+    let already_saved = cfg.checkpoint_every > 0 && step % cfg.checkpoint_every == 0 && step > 0;
+    if let Some(store) = &store {
+        if !already_saved {
+            let ck = Checkpoint { combo: cfg.combo.clone(), step, leaves: model.state() };
+            store.save(&ck, &specs)?;
+        }
+    }
+    Ok(history)
+}
+
+/// The demo model behind `examples/fault_demo.rs` and the acceptance
+/// test: softmax regression on a synthetic centroid-classification task,
+/// with the forward GEMM running through the guarded BFP datapath
+/// ([`crate::bfp::MatmulPlan::quantize_execute_guarded`], FP32 fallback
+/// on non-finite input so a hazard reaches the loss instead of the tile
+/// exponents).
+///
+/// Batches are a pure function of `seed ^ step`, so a rollback replays
+/// the exact schedule. Fault hooks: the [`FaultSite::NanActivation`] and
+/// [`FaultSite::MantissaBitflip`] sites fire only at the narrowest width
+/// class (≤ 8 bits) — modelling hazards born of aggressive quantization —
+/// so the watchdog's rollback-and-widen actually clears them, the same
+/// shape as the paper's narrow-mantissa divergence remedy.
+pub struct SoftmaxDemo {
+    ctx: BfpContext,
+    w: Vec<f32>,
+    bits: u32,
+    features: usize,
+    classes: usize,
+    batch: usize,
+    seed: u64,
+    /// Guard counters for the run (scans, fallbacks, …).
+    pub stats: GuardStats,
+}
+
+impl SoftmaxDemo {
+    pub fn new(seed: u64, bits: u32) -> SoftmaxDemo {
+        let (features, classes, batch) = (16, 4, 8);
+        let mut rng = SplitMix64::new(seed);
+        let w = (0..features * classes).map(|_| rng.normal() * 0.1).collect();
+        let ctx = BfpContext::from_env().with_tile(TileSize::Edge(8)).with_guard(GuardPolicy {
+            action: GuardAction::Fp32Fallback,
+            ..GuardPolicy::default()
+        });
+        SoftmaxDemo { ctx, w, bits, features, classes, batch, seed, stats: GuardStats::new() }
+    }
+
+    /// Deterministic batch for `step`: per-class centroids plus noise.
+    fn batch_for(&self, step: usize) -> (Vec<f32>, Vec<usize>) {
+        let mut rng =
+            SplitMix64::new(self.seed ^ (step as u64).wrapping_mul(0x9e37_79b9_7f4a_7c15));
+        let mut x = vec![0.0f32; self.batch * self.features];
+        let mut y = vec![0usize; self.batch];
+        for i in 0..self.batch {
+            let label = (rng.next_u64() as usize) % self.classes;
+            y[i] = label;
+            for j in 0..self.features {
+                let centroid = if j % self.classes == label { 1.5 } else { 0.0 };
+                x[i * self.features + j] = centroid + rng.normal() * 0.3;
+            }
+        }
+        (x, y)
+    }
+}
+
+impl FaultTolerantModel for SoftmaxDemo {
+    fn specs(&self) -> Vec<TensorSpec> {
+        vec![
+            TensorSpec {
+                name: "w".to_string(),
+                shape: vec![self.features, self.classes],
+                dtype: DType::F32,
+            },
+            TensorSpec { name: "width_bits".to_string(), shape: vec![], dtype: DType::I32 },
+        ]
+    }
+
+    fn state(&self) -> Vec<HostTensor> {
+        vec![
+            HostTensor::F32(self.w.clone(), vec![self.features, self.classes]),
+            HostTensor::scalar_i32(self.bits as i32),
+        ]
+    }
+
+    fn restore(&mut self, leaves: &[HostTensor]) -> Result<()> {
+        if leaves.len() != 2 {
+            return Err(anyhow!("expected 2 leaves, got {}", leaves.len()));
+        }
+        self.w = leaves[0].as_f32()?.to_vec();
+        match &leaves[1] {
+            HostTensor::I32(v, _) if v.len() == 1 && (2..=24).contains(&v[0]) => {
+                self.bits = v[0] as u32;
+            }
+            other => return Err(anyhow!("bad width leaf {other:?}")),
+        }
+        Ok(())
+    }
+
+    fn step(&mut self, step: usize, lr: f32) -> Result<(f32, f32)> {
+        let (mut x, y) = self.batch_for(step);
+        if self.bits <= 8 && fault::fire(FaultSite::NanActivation) {
+            x[0] = f32::NAN;
+        }
+        if self.bits <= 8 && fault::fire(FaultSite::MantissaBitflip) {
+            let i = (step * 7) % self.w.len();
+            self.w[i] = f32::from_bits(self.w[i].to_bits() ^ (1 << 28));
+        }
+        let qw = self.ctx.quantize(
+            &self.w,
+            self.features,
+            self.classes,
+            self.bits,
+            &mut Rounding::NearestEven,
+        )?;
+        let plan = self.ctx.plan_matmul(
+            self.batch,
+            self.features,
+            self.classes,
+            (self.bits, self.bits),
+        )?;
+        let mut logits = vec![0.0f32; self.batch * self.classes];
+        plan.quantize_execute_guarded(
+            &x,
+            &mut Rounding::NearestEven,
+            &qw,
+            &mut logits,
+            Some(&self.stats),
+        )?;
+
+        let mut loss = 0.0f32;
+        let mut correct = 0usize;
+        let mut grad_logits = vec![0.0f32; self.batch * self.classes];
+        for i in 0..self.batch {
+            let row = &logits[i * self.classes..(i + 1) * self.classes];
+            let max = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let exps: Vec<f32> = row.iter().map(|v| (v - max).exp()).collect();
+            let sum: f32 = exps.iter().sum();
+            let mut pred = 0usize;
+            for c in 0..self.classes {
+                if row[c] > row[pred] {
+                    pred = c;
+                }
+            }
+            if pred == y[i] {
+                correct += 1;
+            }
+            loss += -(exps[y[i]] / sum).max(1e-12).ln();
+            for c in 0..self.classes {
+                let p = exps[c] / sum;
+                let target = if c == y[i] { 1.0 } else { 0.0 };
+                grad_logits[i * self.classes + c] = (p - target) / self.batch as f32;
+            }
+        }
+        loss /= self.batch as f32;
+
+        // Non-finite loss: skip the apply (the standard mixed-precision
+        // overflow-skip) so the poison stays in this step's activations
+        // and never reaches the weights — the watchdog decides what
+        // happens next.
+        if !loss.is_finite() {
+            return Ok((loss, correct as f32 / self.batch as f32));
+        }
+
+        // grad_w = x^T · grad_logits, applied in place (SGD)
+        for i in 0..self.batch {
+            for j in 0..self.features {
+                let xv = x[i * self.features + j];
+                for c in 0..self.classes {
+                    self.w[j * self.classes + c] -= lr * xv * grad_logits[i * self.classes + c];
+                }
+            }
+        }
+        Ok((loss, correct as f32 / self.batch as f32))
+    }
+
+    fn width(&self) -> u32 {
+        self.bits
+    }
+
+    fn widen(&mut self) -> bool {
+        match next_wider_class(self.bits) {
+            Some(w) => {
+                self.bits = w;
+                true
+            }
+            None => false,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::config::LrSchedule;
+    use crate::util::fault::{FaultInjector, FaultSpec};
+
+    fn demo_cfg(name: &str, steps: usize) -> (RunConfig, std::path::PathBuf) {
+        let dir = std::env::temp_dir()
+            .join(format!("hbfp_resilient_{name}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut cfg = RunConfig::new("demo-centroids-hbfp8", steps)
+            .with_seed(11)
+            .with_lr(LrSchedule::Constant { lr: 0.5 })
+            .with_checkpoint_every(5)
+            .with_max_recoveries(3);
+        cfg.checkpoint_dir = Some(dir.clone());
+        (cfg, dir)
+    }
+
+    #[test]
+    fn clean_run_learns_and_checkpoints() {
+        let _guard = crate::util::fault::install(FaultInjector::none());
+        let (cfg, dir) = demo_cfg("clean", 30);
+        let mut model = SoftmaxDemo::new(cfg.seed, 8);
+        let h = run_resilient(&mut model, &cfg).unwrap();
+        assert_eq!(h.steps.len(), 30);
+        assert!(h.recoveries.is_empty());
+        assert!(!h.diverged());
+        assert!(
+            h.tail_loss(5).unwrap() < h.steps[0].loss,
+            "loss should fall on a separable task"
+        );
+        assert!(dir.join("demo-centroids-hbfp8.ckpt").exists());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn clean_run_is_deterministic() {
+        let _guard = crate::util::fault::install(FaultInjector::none());
+        let (cfg, dir) = demo_cfg("det_a", 20);
+        let mut m1 = SoftmaxDemo::new(cfg.seed, 8);
+        let h1 = run_resilient(&mut m1, &cfg).unwrap();
+        let (cfg2, dir2) = demo_cfg("det_b", 20);
+        let mut m2 = SoftmaxDemo::new(cfg2.seed, 8);
+        let h2 = run_resilient(&mut m2, &cfg2).unwrap();
+        let l1: Vec<f32> = h1.steps.iter().map(|s| s.loss).collect();
+        let l2: Vec<f32> = h2.steps.iter().map(|s| s.loss).collect();
+        assert!(l1 == l2, "same seed must reproduce the loss curve exactly");
+        let _ = std::fs::remove_dir_all(&dir);
+        let _ = std::fs::remove_dir_all(&dir2);
+    }
+
+    #[test]
+    fn nan_hazard_rolls_back_widens_and_finishes() {
+        // rate 1.0 at width 8: the first step at the narrow class always
+        // poisons an activation. The watchdog restores (restart at step 0
+        // here — no checkpoint yet), widens to 16, and the injected site
+        // goes quiet (it only fires at <= 8 bits), so the run completes.
+        let _guard = crate::util::fault::install(FaultInjector::from_specs(&[FaultSpec {
+            site: FaultSite::NanActivation,
+            rate: 1.0,
+            seed: 1,
+        }]));
+        let (cfg, dir) = demo_cfg("nan", 25);
+        let mut model = SoftmaxDemo::new(cfg.seed, 8);
+        let h = run_resilient(&mut model, &cfg).unwrap();
+        assert_eq!(h.steps.len(), 25);
+        assert!(!h.diverged(), "recovered history must not contain the NaN step");
+        assert_eq!(h.recoveries.len(), 1);
+        let r = &h.recoveries[0];
+        assert_eq!(r.kind, RecoveryKind::NonFiniteLoss);
+        assert_eq!(r.action, RecoveryAction::Restart);
+        assert!(r.detail.contains("width 16"), "detail: {}", r.detail);
+        assert_eq!(model.width(), 16);
+        assert!(model.stats.fp32_fallbacks() >= 1, "guard must have caught the NaN GEMM");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn recovery_budget_exhaustion_aborts_with_event() {
+        // A model pinned at the widest class cannot widen away a hazard
+        // that fires at every width — exhaust the budget and fail loudly.
+        struct AlwaysNan(SoftmaxDemo);
+        impl FaultTolerantModel for AlwaysNan {
+            fn specs(&self) -> Vec<TensorSpec> {
+                self.0.specs()
+            }
+            fn state(&self) -> Vec<HostTensor> {
+                self.0.state()
+            }
+            fn restore(&mut self, leaves: &[HostTensor]) -> Result<()> {
+                self.0.restore(leaves)
+            }
+            fn step(&mut self, _step: usize, _lr: f32) -> Result<(f32, f32)> {
+                Ok((f32::NAN, 0.0))
+            }
+            fn width(&self) -> u32 {
+                self.0.width()
+            }
+            fn widen(&mut self) -> bool {
+                self.0.widen()
+            }
+        }
+        let _guard = crate::util::fault::install(FaultInjector::none());
+        let (cfg, dir) = demo_cfg("budget", 10);
+        let mut model = AlwaysNan(SoftmaxDemo::new(cfg.seed, 8));
+        let err = run_resilient(&mut model, &cfg).unwrap_err();
+        assert!(err.to_string().contains("recovery budget"), "{err}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn watchdog_disabled_records_divergence() {
+        let _guard = crate::util::fault::install(FaultInjector::from_specs(&[FaultSpec {
+            site: FaultSite::NanActivation,
+            rate: 1.0,
+            seed: 1,
+        }]));
+        let (mut cfg, dir) = demo_cfg("off", 5);
+        cfg.max_recoveries = 0;
+        let mut model = SoftmaxDemo::new(cfg.seed, 8);
+        let h = run_resilient(&mut model, &cfg).unwrap();
+        assert_eq!(h.steps.len(), 5);
+        assert!(h.diverged(), "with the watchdog off the NaN must surface in history");
+        assert!(h.recoveries.is_empty());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -12,10 +12,11 @@ use std::time::Instant;
 
 use anyhow::{Context, Result};
 
-use super::checkpoint::Checkpoint;
+use super::checkpoint::{Checkpoint, CheckpointStore};
 use super::config::RunConfig;
-use super::metrics::{EvalRecord, History, StepRecord};
-use crate::bfp::{BfpContext, Rounding, TileSize};
+use super::metrics::{EvalRecord, History, RecoveryAction, RecoveryEvent, RecoveryKind, StepRecord};
+use super::resilient::EXPLOSION_THRESHOLD;
+use crate::bfp::{next_wider_class, BfpContext, Rounding, TileSize};
 use crate::data::{prefetch::Prefetcher, DatasetCache};
 use crate::runtime::{fetch_f32, fetch_scalar_f32, Engine, HostTensor, Manifest, Role};
 use crate::util::rng::{SplitMix64, Xorshift32};
@@ -108,9 +109,56 @@ impl Trainer {
             (bits, ctx, Xorshift32::new(seed))
         });
 
+        // Fault tolerance: a rotating crash-safe checkpoint store (when
+        // periodic checkpointing or the watchdog is on) plus the initial
+        // state snapshot as the restart fallback. The prefetcher is a
+        // stream, so a rolled-back trainer replays the *schedule* (step
+        // indices, lr), not the exact batches — recovery here is about
+        // rescuing the run, not bit-exact replay (the resilient demo loop
+        // covers that).
+        let specs = &train_art.inputs[..state_len];
+        let watchdog = cfg.max_recoveries > 0;
+        let store = if watchdog || cfg.checkpoint_every > 0 {
+            cfg.checkpoint_dir
+                .as_ref()
+                .map(|d| CheckpointStore::new(d.clone(), cfg.combo.clone()))
+        } else {
+            None
+        };
+        let snapshot = |state: &[xla::Literal]| -> Result<Vec<HostTensor>> {
+            state
+                .iter()
+                .zip(specs)
+                .map(|(buf, spec)| {
+                    // all state leaves are f32 today (params/momentum/BN)
+                    let v = fetch_f32(buf)
+                        .with_context(|| format!("fetching state leaf {:?}", spec.name))?;
+                    Ok(HostTensor::F32(v, spec.shape.clone()))
+                })
+                .collect()
+        };
+        let initial = if watchdog { Some(snapshot(&state)?) } else { None };
+        let restore = |leaves: &[HostTensor]| -> Result<Vec<xla::Literal>> {
+            leaves.iter().map(|l| l.to_literal()).collect()
+        };
+
         let mut history = History::default();
+        let mut recoveries_used = 0usize;
+        let mut step = 0usize;
+
+        // Crash-safe resume: pick up from the newest checkpoint that
+        // passes CRC + manifest validation (corrupt ones are skipped with
+        // a warning inside the store, never trusted).
+        if let Some(store) = &store {
+            if let Some((ck, path)) = store.load_newest_valid(&cfg.combo, specs)? {
+                state = restore(&ck.leaves)?;
+                step = ck.step;
+                log::info!("{}: resumed from {path:?} at step {step}", cfg.combo);
+            }
+        }
+
         let t_train = Instant::now();
-        for step in 0..cfg.steps {
+        while step < cfg.steps {
             let lr = cfg.lr.at(step);
             let t0 = Instant::now();
             let (mut x, y) = prefetch.next();
@@ -134,29 +182,114 @@ impl Trainer {
             state = out;
 
             let record = step % cfg.log_every.max(1) == 0 || step + 1 == cfg.steps;
-            if record {
+            if watchdog || record {
                 let loss = fetch_scalar_f32(&loss_buf)?;
-                let acc = fetch_scalar_f32(&acc_buf)?;
-                history.steps.push(StepRecord {
-                    step,
-                    loss,
-                    acc,
-                    lr,
-                    step_secs: t0.elapsed().as_secs_f64(),
-                });
-                if !loss.is_finite() {
-                    log::warn!("{}: diverged at step {step} (loss {loss})", cfg.combo);
-                    break;
+                let hazard = if !loss.is_finite() {
+                    Some(RecoveryKind::NonFiniteLoss)
+                } else if loss > EXPLOSION_THRESHOLD {
+                    Some(RecoveryKind::ExplodingLoss)
+                } else {
+                    None
+                };
+                if watchdog {
+                    if let Some(kind) = hazard {
+                        recoveries_used += 1;
+                        let detail = format!("loss={loss}");
+                        if recoveries_used > cfg.max_recoveries {
+                            history.recoveries.push(RecoveryEvent {
+                                step,
+                                kind,
+                                action: RecoveryAction::Abort,
+                                detail: detail.clone(),
+                            });
+                            return Err(anyhow::anyhow!(
+                                "{}: recovery budget ({}) exhausted at step {step} ({}): {detail}",
+                                cfg.combo,
+                                cfg.max_recoveries,
+                                kind.name()
+                            ));
+                        }
+                        // roll back to the newest valid checkpoint, else
+                        // restart from the initial state; widen the input
+                        // converter's mantissa class either way.
+                        let restored = match &store {
+                            Some(store) => store.load_newest_valid(&cfg.combo, specs)?,
+                            None => None,
+                        };
+                        let (action, resume) = match restored {
+                            Some((ck, _)) => {
+                                state = restore(&ck.leaves)?;
+                                (RecoveryAction::Rollback, ck.step)
+                            }
+                            None => {
+                                state = restore(initial.as_ref().expect("watchdog snapshot"))?;
+                                (RecoveryAction::Restart, 0)
+                            }
+                        };
+                        let mut action = action;
+                        let mut width_note = String::new();
+                        if let Some((bits, _, _)) = &mut input_conv {
+                            if let Some(w) = next_wider_class(*bits) {
+                                width_note = format!("; input width {} -> {w}", *bits);
+                                *bits = w;
+                                if action == RecoveryAction::Rollback {
+                                    action = RecoveryAction::RollbackWiden;
+                                }
+                            }
+                        }
+                        log::warn!(
+                            "{}: {} at step {step} ({detail}); {} to step {resume}{width_note}",
+                            cfg.combo,
+                            kind.name(),
+                            action.name()
+                        );
+                        history.recoveries.push(RecoveryEvent {
+                            step,
+                            kind,
+                            action,
+                            detail: format!("{detail}{width_note}; resumed at step {resume}"),
+                        });
+                        history.steps.retain(|r| r.step < resume);
+                        history.evals.retain(|e| e.step <= resume);
+                        step = resume;
+                        continue;
+                    }
+                }
+                if record {
+                    let acc = fetch_scalar_f32(&acc_buf)?;
+                    history.steps.push(StepRecord {
+                        step,
+                        loss,
+                        acc,
+                        lr,
+                        step_secs: t0.elapsed().as_secs_f64(),
+                    });
+                    if !watchdog && !loss.is_finite() {
+                        log::warn!("{}: diverged at step {step} (loss {loss})", cfg.combo);
+                        break;
+                    }
                 }
             }
 
-            let do_eval = cfg.eval_every > 0 && (step + 1) % cfg.eval_every == 0;
-            if do_eval && step + 1 != cfg.steps {
-                let ev = self.evaluate(&eval_prog, &state, &val_batches, step + 1)?;
+            step += 1;
+            if let Some(store) = &store {
+                if cfg.checkpoint_every > 0 && step % cfg.checkpoint_every == 0 {
+                    let ck = Checkpoint {
+                        combo: cfg.combo.clone(),
+                        step,
+                        leaves: snapshot(&state)?,
+                    };
+                    store.save(&ck, specs)?;
+                }
+            }
+
+            let do_eval = cfg.eval_every > 0 && step % cfg.eval_every == 0;
+            if do_eval && step != cfg.steps {
+                let ev = self.evaluate(&eval_prog, &state, &val_batches, step)?;
                 log::info!(
                     "{} step {}: val loss {:.4} err {:.2}%",
                     cfg.combo,
-                    step + 1,
+                    step,
                     ev.loss,
                     ev.error * 100.0
                 );
@@ -168,22 +301,25 @@ impl Trainer {
         history.evals.push(final_ev);
         let train_secs = t_train.elapsed().as_secs_f64();
 
-        // Optional checkpoint of the final state.
+        // Optional checkpoint of the final state (rotated through the
+        // store when periodic checkpointing is on, so `prev` survives) —
+        // skipped when the cadence just wrote one at this exact step.
         if let Some(dir) = &cfg.checkpoint_dir {
-            let leaves = state
-                .iter()
-                .zip(&train_art.inputs[..state_len])
-                .map(|(buf, spec)| {
-                    // all state leaves are f32 today (params/momentum/BN)
-                    let v = fetch_f32(buf)
-                        .with_context(|| format!("fetching state leaf {:?}", spec.name))?;
-                    Ok(HostTensor::F32(v, spec.shape.clone()))
-                })
-                .collect::<Result<Vec<_>>>()?;
-            let ck = Checkpoint { combo: cfg.combo.clone(), step: cfg.steps, leaves };
-            let path = dir.join(format!("{}.ckpt", cfg.combo));
-            ck.save(&path, &train_art.inputs[..state_len])?;
-            log::info!("checkpoint written to {path:?}");
+            let already_saved =
+                cfg.checkpoint_every > 0 && step > 0 && step % cfg.checkpoint_every == 0;
+            if !already_saved {
+                let ck = Checkpoint {
+                    combo: cfg.combo.clone(),
+                    step: cfg.steps,
+                    leaves: snapshot(&state)?,
+                };
+                let path = dir.join(format!("{}.ckpt", cfg.combo));
+                match &store {
+                    Some(store) => store.save(&ck, specs)?,
+                    None => ck.save(&path, specs)?,
+                }
+                log::info!("checkpoint written to {path:?}");
+            }
         }
 
         log::info!(

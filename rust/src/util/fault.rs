@@ -1,0 +1,353 @@
+//! Deterministic fault-injection harness.
+//!
+//! Every recovery path in the fault-tolerance subsystem (numeric guards,
+//! crash-safe checkpoints, pool panic containment, the trainer watchdog)
+//! is exercised by *injected* faults rather than trusted: this module
+//! provides seeded injection sites that production code probes at the
+//! exact point where the real fault would strike.
+//!
+//! Activation is via the `HBFP_FAULT` env var — a comma-separated list of
+//! `<site>:<rate>:<seed>` specs, e.g.
+//!
+//! ```text
+//! HBFP_FAULT=nan-activation:0.02:7,ckpt-truncate:1.0:3
+//! ```
+//!
+//! or programmatically from tests via [`install`]. When no spec is armed
+//! (the normal case) every probe is a single relaxed atomic load — the
+//! harness costs nothing on production hot paths.
+//!
+//! Decisions are deterministic: the n-th probe of a site fires iff
+//! `Xorshift32::substream(seed ^ site, n).next_f32() < rate`, so a run
+//! with a fixed `HBFP_FAULT` string replays the same fault schedule
+//! regardless of thread count or timing. Per-site probe/hit counters are
+//! exposed so tests can assert a fault actually struck.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard, OnceLock, RwLock};
+
+use crate::util::rng::Xorshift32;
+
+/// Where a fault can strike. Each variant corresponds to one probe point
+/// in production code.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultSite {
+    /// Overwrite an activation value with NaN before quantization.
+    NanActivation,
+    /// Flip one mantissa bit in a quantized tensor.
+    MantissaBitflip,
+    /// Panic inside a pool worker's task chunk.
+    WorkerPanic,
+    /// Sleep inside a pool worker's task chunk (straggler simulation).
+    SlowWorker,
+    /// Truncate a checkpoint file mid-write (torn write).
+    CkptTruncate,
+    /// Flip bits in a checkpoint file after writing (media corruption).
+    CkptGarble,
+}
+
+/// All sites, in probe-table order.
+pub const ALL_SITES: [FaultSite; 6] = [
+    FaultSite::NanActivation,
+    FaultSite::MantissaBitflip,
+    FaultSite::WorkerPanic,
+    FaultSite::SlowWorker,
+    FaultSite::CkptTruncate,
+    FaultSite::CkptGarble,
+];
+
+impl FaultSite {
+    fn index(self) -> usize {
+        match self {
+            FaultSite::NanActivation => 0,
+            FaultSite::MantissaBitflip => 1,
+            FaultSite::WorkerPanic => 2,
+            FaultSite::SlowWorker => 3,
+            FaultSite::CkptTruncate => 4,
+            FaultSite::CkptGarble => 5,
+        }
+    }
+
+    /// The spelling used in `HBFP_FAULT` specs.
+    pub fn name(self) -> &'static str {
+        match self {
+            FaultSite::NanActivation => "nan-activation",
+            FaultSite::MantissaBitflip => "bitflip",
+            FaultSite::WorkerPanic => "worker-panic",
+            FaultSite::SlowWorker => "slow-worker",
+            FaultSite::CkptTruncate => "ckpt-truncate",
+            FaultSite::CkptGarble => "ckpt-garble",
+        }
+    }
+
+    fn from_name(name: &str) -> Option<FaultSite> {
+        ALL_SITES.iter().copied().find(|s| s.name() == name)
+    }
+}
+
+/// One armed injection site: fire with probability `rate` per probe,
+/// deterministically derived from `seed`.
+#[derive(Debug, Clone, Copy)]
+pub struct FaultSpec {
+    pub site: FaultSite,
+    pub rate: f64,
+    pub seed: u32,
+}
+
+#[derive(Debug, Default)]
+struct SiteState {
+    /// None when the site is not armed.
+    spec: Option<(f64, u32)>,
+    probes: AtomicU64,
+    hits: AtomicU64,
+}
+
+/// A set of armed fault sites with deterministic per-probe decisions.
+#[derive(Debug, Default)]
+pub struct FaultInjector {
+    sites: [SiteState; 6],
+}
+
+impl FaultInjector {
+    /// An injector with no armed sites (every probe says "no fault").
+    pub fn none() -> FaultInjector {
+        FaultInjector::default()
+    }
+
+    /// Build from explicit specs (test entry point).
+    pub fn from_specs(specs: &[FaultSpec]) -> FaultInjector {
+        let mut inj = FaultInjector::none();
+        for spec in specs {
+            inj.sites[spec.site.index()].spec = Some((spec.rate, spec.seed));
+        }
+        inj
+    }
+
+    /// Parse an `HBFP_FAULT`-style spec string:
+    /// comma-separated `<site>:<rate>:<seed>` entries.
+    pub fn parse(s: &str) -> Result<FaultInjector, String> {
+        let mut specs = Vec::new();
+        for entry in s.split(',').map(str::trim).filter(|e| !e.is_empty()) {
+            let mut parts = entry.split(':');
+            let (name, rate, seed) = match (parts.next(), parts.next(), parts.next(), parts.next())
+            {
+                (Some(n), Some(r), Some(sd), None) => (n, r, sd),
+                _ => return Err(format!("fault spec `{entry}`: want <site>:<rate>:<seed>")),
+            };
+            let site = FaultSite::from_name(name)
+                .ok_or_else(|| format!("fault spec `{entry}`: unknown site `{name}`"))?;
+            let rate: f64 = rate
+                .parse()
+                .map_err(|_| format!("fault spec `{entry}`: bad rate `{rate}`"))?;
+            if !(0.0..=1.0).contains(&rate) {
+                return Err(format!("fault spec `{entry}`: rate {rate} outside [0, 1]"));
+            }
+            let seed: u32 = seed
+                .parse()
+                .map_err(|_| format!("fault spec `{entry}`: bad seed `{seed}`"))?;
+            specs.push(FaultSpec { site, rate, seed });
+        }
+        Ok(FaultInjector::from_specs(&specs))
+    }
+
+    /// Any site armed?
+    pub fn armed(&self) -> bool {
+        self.sites.iter().any(|s| s.spec.is_some())
+    }
+
+    /// Deterministic per-probe decision. Increments the site's probe
+    /// counter; increments the hit counter too when it fires.
+    pub fn should_fire(&self, site: FaultSite) -> bool {
+        let st = &self.sites[site.index()];
+        let Some((rate, seed)) = st.spec else { return false };
+        let n = st.probes.fetch_add(1, Ordering::Relaxed);
+        // Mix the site index into the substream base so two sites sharing
+        // a seed still see independent schedules.
+        let base = seed ^ ((site.index() as u32 + 1).wrapping_mul(0x9E37_79B9));
+        let fire = rate >= 1.0 || (Xorshift32::substream(base, n).next_f32() as f64) < rate;
+        if fire {
+            st.hits.fetch_add(1, Ordering::Relaxed);
+        }
+        fire
+    }
+
+    /// How many times a site's probe has been evaluated.
+    pub fn probes(&self, site: FaultSite) -> u64 {
+        self.sites[site.index()].probes.load(Ordering::Relaxed)
+    }
+
+    /// How many times a site has actually fired.
+    pub fn hits(&self, site: FaultSite) -> u64 {
+        self.sites[site.index()].hits.load(Ordering::Relaxed)
+    }
+}
+
+/// Process-wide armed flag: a single relaxed load on the probe fast path.
+static ARMED: AtomicBool = AtomicBool::new(false);
+
+fn state() -> &'static RwLock<Arc<FaultInjector>> {
+    static STATE: OnceLock<RwLock<Arc<FaultInjector>>> = OnceLock::new();
+    STATE.get_or_init(|| {
+        let inj = injector_from_env();
+        ARMED.store(inj.armed(), Ordering::Release);
+        RwLock::new(inj)
+    })
+}
+
+fn injector_from_env() -> Arc<FaultInjector> {
+    match std::env::var("HBFP_FAULT") {
+        Ok(spec) if !spec.trim().is_empty() => match FaultInjector::parse(&spec) {
+            Ok(inj) => Arc::new(inj),
+            Err(e) => {
+                log::warn!("ignoring HBFP_FAULT: {e}");
+                Arc::new(FaultInjector::none())
+            }
+        },
+        _ => Arc::new(FaultInjector::none()),
+    }
+}
+
+/// The active injector. Cheap when nothing is armed; callers on hot paths
+/// should gate on [`enabled`] first.
+pub fn active() -> Arc<FaultInjector> {
+    Arc::clone(&state().read().unwrap_or_else(|e| e.into_inner()))
+}
+
+/// Fast probe gate: false unless some site is armed (one relaxed load).
+#[inline]
+pub fn enabled() -> bool {
+    ARMED.load(Ordering::Relaxed)
+}
+
+/// Probe a site: false (no fault) unless the harness is armed and the
+/// site's deterministic schedule says this probe fires.
+#[inline]
+pub fn fire(site: FaultSite) -> bool {
+    if !enabled() {
+        return false;
+    }
+    active().should_fire(site)
+}
+
+/// Serializes tests that install injectors (the harness is process-global).
+static INSTALL_LOCK: Mutex<()> = Mutex::new(());
+
+/// RAII guard from [`install`]: restores the env-derived injector (and
+/// holds the install lock) until dropped.
+pub struct FaultGuard {
+    _lock: MutexGuard<'static, ()>,
+}
+
+impl Drop for FaultGuard {
+    fn drop(&mut self) {
+        let env_inj = injector_from_env();
+        let mut w = state().write().unwrap_or_else(|e| e.into_inner());
+        ARMED.store(env_inj.armed(), Ordering::Release);
+        *w = env_inj;
+    }
+}
+
+/// Install an injector for the lifetime of the returned guard (test entry
+/// point). Tests that install injectors serialize on an internal lock so
+/// concurrently-running tests never see each other's faults.
+pub fn install(inj: FaultInjector) -> FaultGuard {
+    let lock = INSTALL_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let inj = Arc::new(inj);
+    let mut w = state().write().unwrap_or_else(|e| e.into_inner());
+    ARMED.store(inj.armed(), Ordering::Release);
+    *w = inj;
+    drop(w);
+    FaultGuard { _lock: lock }
+}
+
+/// Exclusive guard over the install lock **without** replacing the active
+/// injector. Tests that are fault-*sensitive* but meant to run under
+/// whatever `HBFP_FAULT` the environment configured (the CI
+/// fault-injection matrix) hold this so [`install`]-ing tests in the same
+/// binary cannot swap the injector out from under them mid-run.
+pub struct ExclusiveGuard {
+    _lock: MutexGuard<'static, ()>,
+}
+
+/// See [`ExclusiveGuard`].
+pub fn exclusive() -> ExclusiveGuard {
+    ExclusiveGuard {
+        _lock: INSTALL_LOCK.lock().unwrap_or_else(|e| e.into_inner()),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_accepts_full_grammar() {
+        let inj =
+            FaultInjector::parse("nan-activation:0.5:7, ckpt-truncate:1.0:3,bitflip:0:1").unwrap();
+        assert!(inj.armed());
+        assert!(inj.should_fire(FaultSite::CkptTruncate), "rate 1.0 always fires");
+        assert!(!inj.should_fire(FaultSite::MantissaBitflip), "rate 0 never fires");
+        assert!(!inj.should_fire(FaultSite::WorkerPanic), "unarmed site never fires");
+    }
+
+    #[test]
+    fn parse_rejects_malformed() {
+        assert!(FaultInjector::parse("nan-activation:0.5").is_err(), "missing seed");
+        assert!(FaultInjector::parse("warp-core:0.5:1").is_err(), "unknown site");
+        assert!(FaultInjector::parse("bitflip:1.5:1").is_err(), "rate out of range");
+        assert!(FaultInjector::parse("bitflip:x:1").is_err(), "non-numeric rate");
+        assert!(FaultInjector::parse("bitflip:0.5:y").is_err(), "non-numeric seed");
+        assert!(!FaultInjector::parse("").unwrap().armed(), "empty string: nothing armed");
+    }
+
+    #[test]
+    fn schedule_is_deterministic() {
+        let mk = || {
+            FaultInjector::from_specs(&[FaultSpec {
+                site: FaultSite::NanActivation,
+                rate: 0.3,
+                seed: 42,
+            }])
+        };
+        let a = mk();
+        let b = mk();
+        let seq_a: Vec<bool> = (0..64).map(|_| a.should_fire(FaultSite::NanActivation)).collect();
+        let seq_b: Vec<bool> = (0..64).map(|_| b.should_fire(FaultSite::NanActivation)).collect();
+        assert_eq!(seq_a, seq_b, "same seed must replay the same schedule");
+        assert!(seq_a.iter().any(|&f| f), "rate 0.3 over 64 probes should fire");
+        assert!(seq_a.iter().any(|&f| !f), "rate 0.3 over 64 probes should also skip");
+        assert_eq!(a.probes(FaultSite::NanActivation), 64);
+        assert_eq!(
+            a.hits(FaultSite::NanActivation),
+            seq_a.iter().filter(|&&f| f).count() as u64
+        );
+    }
+
+    #[test]
+    fn seeds_decorrelate() {
+        let fires = |seed: u32| {
+            let inj = FaultInjector::from_specs(&[FaultSpec {
+                site: FaultSite::WorkerPanic,
+                rate: 0.5,
+                seed,
+            }]);
+            (0..64).map(|_| inj.should_fire(FaultSite::WorkerPanic)).collect::<Vec<_>>()
+        };
+        assert_ne!(fires(1), fires(2));
+    }
+
+    #[test]
+    fn install_guard_swaps_and_restores() {
+        assert!(!fire(FaultSite::SlowWorker), "unarmed by default");
+        {
+            let _g = install(FaultInjector::from_specs(&[FaultSpec {
+                site: FaultSite::SlowWorker,
+                rate: 1.0,
+                seed: 1,
+            }]));
+            assert!(enabled());
+            assert!(fire(FaultSite::SlowWorker));
+        }
+        assert!(!fire(FaultSite::SlowWorker), "guard drop restores the env injector");
+    }
+}

@@ -3,6 +3,8 @@
 //! set lacks serde/clap/rand/proptest/criterion (DESIGN.md §7).
 
 pub mod cli;
+pub mod crc;
+pub mod fault;
 pub mod json;
 pub mod pool;
 pub mod prop;

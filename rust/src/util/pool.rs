@@ -33,14 +33,57 @@
 //!   with zero queue traffic — callers route small problems through this
 //!   path instead of keeping a duplicate scalar kernel body.
 //!
-//! Worker panics are caught, flagged on the dispatch latch, and re-raised
-//! on the caller (a worker never dies; the pool stays usable).
+//! Worker panics are caught and **contained**: the dispatch that
+//! submitted the task fails with a [`PoolPanic`] error carrying the
+//! panic message ([`Pool::try_run`]), or re-raises on the caller
+//! ([`Pool::run`]) — never a process abort, and never a poisoned pool.
+//! After a panicked dispatch the pool checks its worker set and respawns
+//! any thread that died, so subsequent callers are unaffected. The
+//! `worker-panic` / `slow-worker` sites of [`crate::util::fault`] inject
+//! into queued chunks here, exercising the containment path in tests.
 
 use std::collections::VecDeque;
 use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex, OnceLock};
 use std::thread::JoinHandle;
+
+use crate::util::fault::{self, FaultSite};
+
+/// A contained worker panic: the dispatch whose task panicked fails with
+/// this error. Other callers, the workers, and queued work from
+/// concurrent dispatches are unaffected.
+#[derive(Debug, Clone)]
+pub struct PoolPanic {
+    msg: String,
+}
+
+impl PoolPanic {
+    /// The panic payload of the first chunk that panicked (when it was a
+    /// string payload; a placeholder otherwise).
+    pub fn message(&self) -> &str {
+        &self.msg
+    }
+}
+
+impl std::fmt::Display for PoolPanic {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "worker task panicked during pool dispatch: {}", self.msg)
+    }
+}
+
+impl std::error::Error for PoolPanic {}
+
+/// Best-effort extraction of a panic payload's message.
+fn payload_msg(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "<non-string panic payload>".to_string()
+    }
+}
 
 /// A lifetime-erased chunk of submitted work.
 type Task = Box<dyn FnOnce() + Send + 'static>;
@@ -54,21 +97,23 @@ struct Shared {
 }
 
 /// Completion latch for one dispatch: counts outstanding chunks and
-/// remembers whether any of them panicked.
+/// remembers the first panic message, if any chunk panicked.
 struct Latch {
-    state: Mutex<(usize, bool)>,
+    state: Mutex<(usize, Option<String>)>,
     done: Condvar,
 }
 
 impl Latch {
     fn new(chunks: usize) -> Latch {
-        Latch { state: Mutex::new((chunks, false)), done: Condvar::new() }
+        Latch { state: Mutex::new((chunks, None)), done: Condvar::new() }
     }
 
-    fn complete_one(&self, panicked: bool) {
+    fn complete_one(&self, panicked: Option<String>) {
         let mut st = self.state.lock().unwrap();
         st.0 -= 1;
-        st.1 |= panicked;
+        if st.1.is_none() {
+            st.1 = panicked;
+        }
         if st.0 == 0 {
             self.done.notify_all();
         }
@@ -79,13 +124,14 @@ impl Latch {
         self.state.lock().unwrap().0 == 0
     }
 
-    /// Block until every chunk completed; returns true if any panicked.
-    fn wait(&self) -> bool {
+    /// Block until every chunk completed; returns the first panic
+    /// message if any chunk panicked.
+    fn wait(&self) -> Option<String> {
         let mut st = self.state.lock().unwrap();
         while st.0 > 0 {
             st = self.done.wait(st).unwrap();
         }
-        st.1
+        st.1.take()
     }
 }
 
@@ -95,7 +141,14 @@ impl Latch {
 pub struct Pool {
     shared: Arc<Shared>,
     workers: usize,
-    handles: Vec<JoinHandle<()>>,
+    /// Behind a mutex so [`heal`](Pool::heal) can replace dead handles
+    /// from any dispatching thread.
+    handles: Mutex<Vec<JoinHandle<()>>>,
+    /// Monotonic worker-name counter (respawned workers get fresh names).
+    next_id: AtomicUsize,
+    /// Workers respawned after dying — observability for the containment
+    /// tests (expected to stay 0: task panics are caught in the task).
+    respawns: AtomicUsize,
 }
 
 fn worker_loop(shared: Arc<Shared>) {
@@ -132,7 +185,8 @@ impl Drop for Pool {
         // No dispatch can be in flight (`run` borrows &self and blocks
         // until its chunks finish), so the queue is empty: workers wake,
         // observe shutdown, and exit promptly.
-        for h in self.handles.drain(..) {
+        let mut handles = self.handles.lock().unwrap_or_else(|e| e.into_inner());
+        for h in handles.drain(..) {
             let _ = h.join();
         }
     }
@@ -156,7 +210,13 @@ impl Pool {
                     .expect("spawning pool worker")
             })
             .collect();
-        Pool { shared, workers, handles }
+        Pool {
+            shared,
+            workers,
+            handles: Mutex::new(handles),
+            next_id: AtomicUsize::new(workers),
+            respawns: AtomicUsize::new(0),
+        }
     }
 
     /// Worker threads owned by the pool (the caller adds one more lane).
@@ -164,20 +224,78 @@ impl Pool {
         self.workers
     }
 
+    /// Workers respawned after dying. Stays 0 in normal operation — task
+    /// panics are caught inside the task, so workers don't die — but the
+    /// heal pass keeps the pool at full strength even if one somehow does.
+    pub fn respawns(&self) -> usize {
+        self.respawns.load(Ordering::Relaxed)
+    }
+
+    /// Rebuild the worker set: join and replace any thread that exited.
+    /// Called after a panicked dispatch (belt and braces — the catch in
+    /// the task normally keeps workers alive) so subsequent callers see a
+    /// full-strength pool.
+    fn heal(&self) {
+        let mut handles = self.handles.lock().unwrap_or_else(|e| e.into_inner());
+        let mut i = 0;
+        while i < handles.len() {
+            if handles[i].is_finished() && !self.shared.shutdown.load(Ordering::Acquire) {
+                let _ = handles.remove(i).join();
+                let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+                let s = Arc::clone(&self.shared);
+                if let Ok(h) = std::thread::Builder::new()
+                    .name(format!("hbfp-pool-{id}"))
+                    .spawn(move || worker_loop(s))
+                {
+                    handles.push(h);
+                    self.respawns.fetch_add(1, Ordering::Relaxed);
+                }
+            } else {
+                i += 1;
+            }
+        }
+    }
+
     /// Run `(index, payload)` jobs across up to `max_threads` lanes
     /// (pool workers + the calling thread). Chunks are contiguous job
     /// runs, so callers handing out disjoint `&mut` slices parallelize
     /// without locking; results must not depend on which lane executes a
     /// chunk (the BFP kernels guarantee this). Blocks until every job has
-    /// run; re-raises any worker panic on the caller.
+    /// run; re-raises any worker panic on the caller (the panic message
+    /// is preserved). Callers that want an error instead use
+    /// [`try_run`](Pool::try_run).
     pub fn run<T, F>(&self, jobs: Vec<(usize, T)>, max_threads: usize, f: F)
+    where
+        T: Send,
+        F: Fn(usize, T) + Sync,
+    {
+        if let Err(e) = self.try_run(jobs, max_threads, f) {
+            panic!("{e}");
+        }
+    }
+
+    /// [`run`](Pool::run) with contained panics: a task panic on any lane
+    /// fails **this** dispatch with a [`PoolPanic`] (carrying the panic
+    /// message) instead of unwinding the caller. The pool itself stays
+    /// healthy — queued work from concurrent dispatches still runs, and
+    /// the worker set is rebuilt if a thread died.
+    ///
+    /// The inline (single-lane) path executes on the caller's thread, so
+    /// a panic there unwinds the caller directly as it always did — the
+    /// containment contract is about *worker* lanes.
+    pub fn try_run<T, F>(
+        &self,
+        jobs: Vec<(usize, T)>,
+        max_threads: usize,
+        f: F,
+    ) -> Result<(), PoolPanic>
     where
         T: Send,
         F: Fn(usize, T) + Sync,
     {
         let n_jobs = jobs.len();
         if n_jobs == 0 {
-            return;
+            return Ok(());
         }
         let threads = max_threads.max(1).min(n_jobs).min(self.workers + 1);
         if threads == 1 {
@@ -185,7 +303,7 @@ impl Pool {
             for (i, job) in jobs {
                 f(i, job);
             }
-            return;
+            return Ok(());
         }
 
         // One chunk per lane (same contiguous split as `for_each_job`):
@@ -207,11 +325,21 @@ impl Pool {
                 let latch = Arc::clone(&latch);
                 let task: Box<dyn FnOnce() + Send + '_> = Box::new(move || {
                     let result = catch_unwind(AssertUnwindSafe(|| {
+                        // Fault-injection probes (no-ops unless HBFP_FAULT
+                        // arms them; see util::fault). Inside the catch so
+                        // an injected panic takes the real containment
+                        // path.
+                        if fault::fire(FaultSite::SlowWorker) {
+                            std::thread::sleep(std::time::Duration::from_millis(2));
+                        }
+                        if fault::fire(FaultSite::WorkerPanic) {
+                            panic!("injected worker panic (HBFP_FAULT worker-panic)");
+                        }
                         for (i, job) in chunk {
                             f_ref(i, job);
                         }
                     }));
-                    latch.complete_one(result.is_err());
+                    latch.complete_one(result.err().map(|p| payload_msg(&*p)));
                 });
                 // SAFETY: the erased closure borrows `f` and the job
                 // payloads, which outlive this call: `run` does not
@@ -238,8 +366,15 @@ impl Pool {
                 None => break,
             }
         }
-        if latch.wait() {
-            panic!("worker task panicked during pool dispatch");
+        match latch.wait() {
+            None => Ok(()),
+            Some(msg) => {
+                // Contained failure: rebuild the worker set (normally a
+                // no-op — the catch keeps workers alive) and report the
+                // panic to this dispatch's caller only.
+                self.heal();
+                Err(PoolPanic { msg })
+            }
         }
     }
 }
@@ -431,6 +566,43 @@ mod tests {
         for (i, &v) in out.iter().enumerate() {
             assert_eq!(v, i);
         }
+    }
+
+    #[test]
+    fn try_run_contains_panic_as_error() {
+        let pool = Pool::new(2);
+        let jobs: Vec<(usize, ())> = (0..8).map(|i| (i, ())).collect();
+        let err = pool
+            .try_run(jobs, 4, |i, _| {
+                if i == 3 {
+                    panic!("kaboom at job {i}");
+                }
+            })
+            .unwrap_err();
+        assert!(err.message().contains("kaboom"), "payload preserved: {err}");
+        assert!(err.to_string().contains("worker task panicked"), "{err}");
+        // The very next dispatch on the same pool must succeed and be
+        // bit-identical to a fresh pool's result.
+        let mut out = vec![0u32; 64];
+        let jobs: Vec<(usize, &mut [u32])> = out.chunks_mut(7).enumerate().collect();
+        pool.try_run(jobs, 4, |i, chunk| {
+            for (j, x) in chunk.iter_mut().enumerate() {
+                *x = (i * 100 + j) as u32;
+            }
+        })
+        .unwrap();
+        let fresh_pool = Pool::new(2);
+        let mut fresh = vec![0u32; 64];
+        let jobs: Vec<(usize, &mut [u32])> = fresh.chunks_mut(7).enumerate().collect();
+        fresh_pool
+            .try_run(jobs, 4, |i, chunk| {
+                for (j, x) in chunk.iter_mut().enumerate() {
+                    *x = (i * 100 + j) as u32;
+                }
+            })
+            .unwrap();
+        assert_eq!(out, fresh, "post-panic dispatch is bit-identical");
+        assert_eq!(pool.respawns(), 0, "caught panics never kill workers");
     }
 
     #[test]

@@ -1,0 +1,327 @@
+//! Fault-tolerance integration: checkpoint corruption survival, pool
+//! panic containment, guarded-GEMM degradation, and the acceptance demo
+//! (mid-run NaN + truncated checkpoint → detect → rollback → widen →
+//! finish with a valid, deterministic metrics history).
+//!
+//! Injector discipline: this binary's tests either `install` an explicit
+//! injector (which serializes them on the harness's install lock and
+//! shields them from each other and from `HBFP_FAULT`), or hold
+//! `fault::exclusive()` to run *under* the environment's injector — the
+//! CI fault-injection matrix points `HBFP_FAULT` at this test binary.
+
+use std::path::PathBuf;
+
+use hbfp::bfp::{
+    fp32_matmul, BfpContext, GuardAction, GuardPolicy, GuardStats, Rounding, TileSize,
+};
+use hbfp::coordinator::checkpoint::{Checkpoint, CheckpointStore, CkptError};
+use hbfp::coordinator::config::LrSchedule;
+use hbfp::coordinator::metrics::{RecoveryAction, RecoveryKind};
+use hbfp::coordinator::resilient::{run_resilient, FaultTolerantModel, SoftmaxDemo};
+use hbfp::coordinator::RunConfig;
+use hbfp::runtime::HostTensor;
+use hbfp::util::fault::{self, FaultInjector, FaultSite, FaultSpec};
+use hbfp::util::pool::Pool;
+
+fn tmp_dir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("hbfp_ft_{name}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn demo_cfg(dir: &std::path::Path, steps: usize) -> RunConfig {
+    let mut cfg = RunConfig::new("demo-centroids-hbfp8", steps)
+        .with_seed(42)
+        .with_lr(LrSchedule::Constant { lr: 0.5 })
+        .with_checkpoint_every(5)
+        .with_max_recoveries(4);
+    cfg.checkpoint_dir = Some(dir.to_path_buf());
+    cfg
+}
+
+/// The acceptance demo: a clean run writes rotating checkpoints; the
+/// latest is then truncated on disk (a crash mid-write); the resumed run
+/// falls back to `prev`, takes an injected NaN on its first step, rolls
+/// back, widens 8 → 16 bits, and finishes with a clean history carrying
+/// both recovery events.
+#[test]
+fn nan_plus_truncated_checkpoint_recovers_and_finishes() {
+    let scenario = |tag: &str| -> (Vec<f32>, Vec<(RecoveryKind, RecoveryAction)>, u32) {
+        let dir = tmp_dir(&format!("accept_{tag}"));
+
+        // Phase 1: 10 clean steps -> latest at step 10, prev at step 5.
+        let _clean = fault::install(FaultInjector::none());
+        let cfg1 = demo_cfg(&dir, 10);
+        let mut m1 = SoftmaxDemo::new(cfg1.seed, 8);
+        let h1 = run_resilient(&mut m1, &cfg1).unwrap();
+        assert_eq!(h1.steps.len(), 10);
+        drop(_clean);
+
+        // Crash mid-write: chop the tail off the latest checkpoint.
+        let store = CheckpointStore::new(dir.clone(), "demo-centroids-hbfp8");
+        let latest = store.latest_path();
+        let bytes = std::fs::read(&latest).unwrap();
+        std::fs::write(&latest, &bytes[..bytes.len() - 7]).unwrap();
+        assert!(matches!(
+            Checkpoint::load(&latest),
+            Err(CkptError::Corrupt { .. })
+        ));
+
+        // Phase 2: resume (skipping the corrupt latest -> prev at step 5)
+        // with a NaN activation injected at the narrow width class.
+        let _nan = fault::install(FaultInjector::from_specs(&[FaultSpec {
+            site: FaultSite::NanActivation,
+            rate: 1.0,
+            seed: 3,
+        }]));
+        let cfg2 = demo_cfg(&dir, 20);
+        let mut m2 = SoftmaxDemo::new(cfg2.seed, 8);
+        let h2 = run_resilient(&mut m2, &cfg2).unwrap();
+
+        assert_eq!(
+            h2.steps.first().map(|s| s.step),
+            Some(5),
+            "must resume from the surviving prev checkpoint"
+        );
+        assert_eq!(h2.steps.last().map(|s| s.step), Some(19));
+        assert!(!h2.diverged(), "the recovered history must be clean");
+        let kinds: Vec<_> = h2.recoveries.iter().map(|r| (r.kind, r.action)).collect();
+        assert!(
+            kinds.contains(&(RecoveryKind::CorruptCheckpoint, RecoveryAction::RollbackWiden)),
+            "the skipped corrupt latest must be recorded: {kinds:?}"
+        );
+        assert!(
+            kinds.contains(&(RecoveryKind::NonFiniteLoss, RecoveryAction::RollbackWiden)),
+            "the NaN hazard must be recorded: {kinds:?}"
+        );
+        assert!(m2.stats.fp32_fallbacks() >= 1, "guard must have degraded the NaN GEMM");
+
+        let losses = h2.steps.iter().map(|s| s.loss).collect();
+        let width = m2.width();
+        let _ = std::fs::remove_dir_all(&dir);
+        (losses, kinds, width)
+    };
+
+    let (l_a, k_a, w_a) = scenario("a");
+    let (l_b, k_b, w_b) = scenario("b");
+    assert!(l_a == l_b, "the whole recovery trajectory must be deterministic under a fixed seed");
+    assert_eq!(k_a, k_b);
+    assert_eq!((w_a, w_b), (16, 16), "one rollback widens 8 -> 16");
+}
+
+/// Corrupting BOTH checkpoints forces a restart-from-scratch recovery.
+#[test]
+fn all_checkpoints_corrupt_restarts_from_scratch() {
+    let dir = tmp_dir("restart");
+    {
+        let _clean = fault::install(FaultInjector::none());
+        let cfg = demo_cfg(&dir, 10);
+        let mut m = SoftmaxDemo::new(cfg.seed, 8);
+        run_resilient(&mut m, &cfg).unwrap();
+    }
+    let store = CheckpointStore::new(dir.clone(), "demo-centroids-hbfp8");
+    for path in [store.latest_path(), store.prev_path()] {
+        let mut bytes = std::fs::read(&path).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0x40;
+        std::fs::write(&path, &bytes).unwrap();
+    }
+    let _nan = fault::install(FaultInjector::from_specs(&[FaultSpec {
+        site: FaultSite::NanActivation,
+        rate: 1.0,
+        seed: 5,
+    }]));
+    let cfg = demo_cfg(&dir, 12);
+    let mut m = SoftmaxDemo::new(cfg.seed, 8);
+    let h = run_resilient(&mut m, &cfg).unwrap();
+    // resume found no valid checkpoint (both corrupt) -> fresh start; the
+    // NaN at step 0 then restarts again, widened.
+    assert_eq!(h.steps.first().map(|s| s.step), Some(0));
+    assert_eq!(h.steps.len(), 12);
+    assert!(!h.diverged());
+    assert!(h
+        .recoveries
+        .iter()
+        .any(|r| r.kind == RecoveryKind::NonFiniteLoss && r.action == RecoveryAction::Restart));
+    // both corrupt files were noticed during the rollback attempt
+    assert!(h.recoveries.iter().filter(|r| r.kind == RecoveryKind::CorruptCheckpoint).count() >= 2);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Injected save-time truncation (the `ckpt-truncate` site) corrupts the
+/// installed `latest`; the store's fallback still restores from `prev`.
+#[test]
+fn injected_truncation_on_save_falls_back_to_prev() {
+    let dir = tmp_dir("trunc_save");
+    let store = CheckpointStore::new(dir.clone(), "demo-centroids-hbfp8");
+    let m = SoftmaxDemo::new(7, 8);
+    let specs = m.specs();
+
+    let _clean = fault::install(FaultInjector::none());
+    let ck5 = Checkpoint { combo: "demo-centroids-hbfp8".into(), step: 5, leaves: m.state() };
+    store.save(&ck5, &specs).unwrap();
+    let ck10 = Checkpoint { combo: "demo-centroids-hbfp8".into(), step: 10, leaves: m.state() };
+    store.save(&ck10, &specs).unwrap(); // rotates ck5 -> prev
+    drop(_clean);
+
+    let _trunc = fault::install(FaultInjector::from_specs(&[FaultSpec {
+        site: FaultSite::CkptTruncate,
+        rate: 1.0,
+        seed: 1,
+    }]));
+    let ck15 = Checkpoint { combo: "demo-centroids-hbfp8".into(), step: 15, leaves: m.state() };
+    store.save(&ck15, &specs).unwrap(); // written truncated; ck10 -> prev
+    drop(_trunc);
+
+    let _clean = fault::install(FaultInjector::none());
+    assert!(Checkpoint::load(&store.latest_path()).is_err(), "latest must be the corrupt ck15");
+    let (ck, path) = store
+        .load_newest_valid("demo-centroids-hbfp8", &specs)
+        .unwrap()
+        .expect("prev must survive");
+    assert_eq!(ck.step, 10);
+    assert_eq!(path, store.prev_path());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Garbled checkpoint bytes (the `ckpt-garble` site) are caught by the
+/// CRC on load — typed corruption, never a panic or garbage tensors.
+#[test]
+fn injected_garble_is_caught_by_crc() {
+    let dir = tmp_dir("garble");
+    let m = SoftmaxDemo::new(9, 8);
+    let specs = m.specs();
+    let path = dir.join("garbled.ckpt");
+    let ck = Checkpoint { combo: "demo-centroids-hbfp8".into(), step: 3, leaves: m.state() };
+    {
+        let _garble = fault::install(FaultInjector::from_specs(&[FaultSpec {
+            site: FaultSite::CkptGarble,
+            rate: 1.0,
+            seed: 2,
+        }]));
+        ck.save(&path, &specs).unwrap();
+    }
+    match Checkpoint::load(&path) {
+        Err(e) => assert!(e.is_recoverable_corruption(), "unexpected error class: {e}"),
+        Ok(_) => panic!("garbled checkpoint must not load"),
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// A worker panic fails only the dispatching call (typed error), the pool
+/// survives, and a redispatch of the identical work is bit-identical to a
+/// never-faulted pool.
+#[test]
+fn worker_panic_contained_and_redispatch_bit_identical() {
+    let jobs = || (0..64usize).map(|i| (i, i as u64)).collect::<Vec<_>>();
+    let work = |i: usize, v: u64, out: &mut [u64]| {
+        // per-slot writes: disjoint, lane-order independent
+        out[i] = v.wrapping_mul(0x9e37_79b9).rotate_left(7);
+    };
+
+    let pool = Pool::new(3);
+    {
+        let _panic = fault::install(FaultInjector::from_specs(&[FaultSpec {
+            site: FaultSite::WorkerPanic,
+            rate: 1.0,
+            seed: 4,
+        }]));
+        let out = std::sync::Mutex::new(vec![0u64; 64]);
+        let err = pool
+            .try_run(jobs(), 4, |i, v| work(i, v, &mut out.lock().unwrap()))
+            .unwrap_err();
+        assert!(err.message().contains("injected worker panic"), "{err}");
+    }
+
+    // injector restored -> the same pool must serve the same work again
+    let _clean = fault::install(FaultInjector::none());
+    let out = std::sync::Mutex::new(vec![0u64; 64]);
+    pool.try_run(jobs(), 4, |i, v| work(i, v, &mut out.lock().unwrap())).unwrap();
+    let survived = out.into_inner().unwrap();
+
+    let fresh_pool = Pool::new(3);
+    let out = std::sync::Mutex::new(vec![0u64; 64]);
+    fresh_pool.try_run(jobs(), 4, |i, v| work(i, v, &mut out.lock().unwrap())).unwrap();
+    let fresh = out.into_inner().unwrap();
+    assert!(survived == fresh, "post-recovery dispatch must be bit-identical");
+}
+
+/// The slow-worker site only delays; results are unchanged.
+#[test]
+fn slow_worker_changes_no_bits() {
+    let _slow = fault::install(FaultInjector::from_specs(&[FaultSpec {
+        site: FaultSite::SlowWorker,
+        rate: 1.0,
+        seed: 6,
+    }]));
+    let ctx = BfpContext::from_env().with_tile(TileSize::Edge(8));
+    let (m, k, n) = (12, 24, 16);
+    let a: Vec<f32> = (0..m * k).map(|i| ((i * 31 % 97) as f32) / 13.0 - 3.5).collect();
+    let b: Vec<f32> = (0..k * n).map(|i| ((i * 17 % 89) as f32) / 11.0 - 4.0).collect();
+    let slow = ctx.matmul_f32(&a, &b, m, k, n, 8).unwrap();
+    drop(_slow);
+    let _clean = fault::install(FaultInjector::none());
+    let fast = ctx.matmul_f32(&a, &b, m, k, n, 8).unwrap();
+    assert!(slow == fast);
+}
+
+/// Guarded GEMM under an injected NaN activation: FP32 fallback result is
+/// the IEEE product, and the stats counters show the degradation.
+#[test]
+fn guarded_gemm_degrades_injected_nan_to_fp32() {
+    let _clean = fault::install(FaultInjector::none());
+    let ctx = BfpContext::from_env().with_tile(TileSize::Edge(8)).with_guard(GuardPolicy {
+        action: GuardAction::Fp32Fallback,
+        ..GuardPolicy::default()
+    });
+    let (m, k, n) = (6, 16, 8);
+    let mut a: Vec<f32> = (0..m * k).map(|i| (i as f32).sin()).collect();
+    a[37] = f32::NAN; // what the nan-activation site does to a batch
+    let b: Vec<f32> = (0..k * n).map(|i| (i as f32).cos()).collect();
+    let mut r = hbfp::util::rng::Xorshift32::new(1);
+    let qb = ctx.quantize(&b, k, n, 8, &mut Rounding::Stochastic(&mut r)).unwrap();
+    let plan = ctx.plan_matmul(m, k, n, (8, 8)).unwrap();
+    let stats = GuardStats::new();
+    let mut out = vec![0.0f32; m * n];
+    let outcome = plan
+        .quantize_execute_guarded(&a, &mut Rounding::NearestEven, &qb, &mut out, Some(&stats))
+        .unwrap();
+    assert!(outcome.tripped && outcome.fell_back_fp32);
+    assert_eq!(stats.nonfinite_inputs(), 1);
+    assert_eq!(stats.fp32_fallbacks(), 1);
+    let want = fp32_matmul(&a, &qb.to_f32(), m, k, n);
+    assert!(out == want);
+    assert!(out.iter().any(|v| v.is_nan()), "the NaN flows to the output under IEEE rules");
+}
+
+/// CI fault-matrix entry point: run the resilient demo under whatever
+/// `HBFP_FAULT` the environment configured. The contract is graceful
+/// behaviour under every site: the loop either completes with a clean
+/// history or fails with a typed error — it never panics, and any
+/// completed history is finite.
+#[test]
+fn demo_survives_environment_faults() {
+    let _env = fault::exclusive(); // run under HBFP_FAULT, serialized with install()ers
+    let dir = tmp_dir("env");
+    let cfg = demo_cfg(&dir, 15);
+    let mut model = SoftmaxDemo::new(cfg.seed, 8);
+    match run_resilient(&mut model, &cfg) {
+        Ok(h) => {
+            assert!(!h.diverged(), "a completed recovered history must be clean");
+            assert_eq!(h.steps.last().map(|s| s.step), Some(14));
+            if fault::active().armed() {
+                for r in &h.recoveries {
+                    assert!(!r.detail.is_empty());
+                }
+            } else {
+                assert!(h.recoveries.is_empty(), "no faults -> no interventions");
+            }
+        }
+        Err(e) => {
+            // budget exhaustion under heavy fault rates is a legitimate,
+            // typed outcome — but only when faults are actually armed.
+            assert!(fault::active().armed(), "clean environment must not fail: {e:#}");
+        }
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
