@@ -6,6 +6,10 @@
 //!
 //! Trains the MLP on the synthetic CIFAR-10-like task twice — FP32 baseline
 //! and hbfp8_16 via the Pallas kernel — and prints both loss curves.
+//!
+//! For the inference side of the stack — resident quantized weights,
+//! micro-batching, admission control, and graceful precision degradation
+//! under overload — see `cargo run --release --example serve_demo`.
 
 use std::sync::Arc;
 

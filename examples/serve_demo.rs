@@ -1,0 +1,164 @@
+//! Serving walkthrough: drive the resilient inference front-end through
+//! an overload burst and watch the ladder work — backpressure, deadline
+//! expiry, graceful precision degradation (16 -> 8 bits), and contained
+//! worker faults — then dump the full metrics JSON.
+//!
+//!     cargo run --release --example serve_demo
+//!
+//! Knobs (all optional):
+//!
+//!     HBFP_FAULT=worker-panic:0.3:11,slow-request:0.25:11
+//!                         run under the env harness instead of the
+//!                         demo's default mixed injector
+//!     HBFP_THREADS=4      worker budget (1 = inline, no pool faults)
+//!     HBFP_SIMD=off       pin the scalar kernel family
+//!
+//! The same scenario runs deterministically (manual clock, fixed seeds,
+//! replayed twice) as `tests/serve.rs::overload_soak_is_deterministic_...`.
+
+use std::sync::Arc;
+
+use anyhow::Result;
+use hbfp::bfp::{BfpContext, TileSize};
+use hbfp::serve::{InferenceServer, ManualClock, Outcome, ServeConfig, Submission};
+use hbfp::util::fault::{self, FaultInjector, FaultSite, FaultSpec};
+
+fn main() -> Result<()> {
+    let cfg = ServeConfig {
+        queue_capacity: 32,
+        elevated_depth: 8,
+        degrade_depth: 12,
+        shed_depth: 24,
+        max_batch_rows: 16,
+        full_bits: 16,
+        degraded_bits: 8,
+        default_deadline_ticks: 50_000,
+        est_ticks_per_row: 200,
+        synthetic_ticks_per_row: 100,
+        slow_request_penalty_ticks: 500,
+        max_gemm_retries: 2,
+    };
+    let ctx = BfpContext::from_env().with_tile(TileSize::Edge(4));
+    let clock = Arc::new(ManualClock::new());
+    let mut srv = InferenceServer::new(cfg, ctx, clock.clone());
+
+    let (k, n) = (256, 256);
+    let weights: Vec<f32> = (0..k * n).map(|i| ((i as f32) * 0.173).sin() * 0.5).collect();
+    // Residency building is not inside the serve loop's containment, so
+    // it always runs shielded from fault injection.
+    let model = {
+        let _quiet = fault::install(FaultInjector::none());
+        srv.register_model("demo-256x256", &weights, k, n)?
+    };
+    println!(
+        "resident model: {} ({}x{}), {} bytes across 16- and 8-bit copies",
+        srv.model(model).unwrap().name(),
+        k,
+        n,
+        srv.model(model).unwrap().heap_bytes()
+    );
+
+    // Honor an env-armed injector; otherwise install the demo's default
+    // mixed fault load (same spec as the CI overload-soak leg).
+    let _guard = if fault::active().armed() {
+        println!("faults: honoring HBFP_FAULT from the environment");
+        None
+    } else {
+        println!("faults: worker-panic:0.35 slow-worker:0.5 nan-activation:0.05 slow-request:0.25");
+        Some(fault::install(FaultInjector::from_specs(&[
+            FaultSpec { site: FaultSite::WorkerPanic, rate: 0.35, seed: 11 },
+            FaultSpec { site: FaultSite::SlowWorker, rate: 0.5, seed: 11 },
+            FaultSpec { site: FaultSite::NanActivation, rate: 0.05, seed: 11 },
+            FaultSpec { site: FaultSite::SlowRequest, rate: 0.25, seed: 11 },
+        ])))
+    };
+
+    // Overload burst: 105 single-row requests at roughly twice what the
+    // shed watermark admits, mixed deadlines, a poisoned payload every
+    // 13th. Pump every 6 submissions.
+    println!("\nburst: 105 requests, pump every 6 (max 16 rows per batch)");
+    let mut submitted = 0u64;
+    for i in 0..105u64 {
+        let mut x: Vec<f32> = (0..k).map(|j| ((j as f32) * 0.31 + i as f32 * 0.77).cos()).collect();
+        if i % 13 == 12 {
+            x[2] = f32::NAN;
+        }
+        let deadline = match i % 7 {
+            0 => Some(300),
+            3 => Some(6_000),
+            _ => None,
+        };
+        match srv.submit(model, x, deadline)? {
+            Submission::Admitted { .. } => {}
+            Submission::Rejected(why) => {
+                if submitted % 10 == 0 {
+                    println!("  request {i}: rejected ({why}) at depth {}", srv.queue_depth());
+                }
+            }
+        }
+        submitted += 1;
+        if i % 6 == 5 {
+            let rep = srv.pump()?;
+            if let Some(b) = rep.batch {
+                if b.degraded || b.split_fallback {
+                    println!(
+                        "  batch: {} rows @ {} bits{}{}",
+                        b.ids.len(),
+                        b.bits,
+                        if b.degraded { " [degraded]" } else { "" },
+                        if b.split_fallback { " [split-fallback]" } else { "" },
+                    );
+                }
+            }
+        }
+    }
+    srv.run_until_idle()?;
+
+    // Settle the coda case: a request that dies waiting in the queue.
+    srv.submit(model, vec![0.25; k], Some(300))?;
+    clock.advance(400);
+    srv.run_until_idle()?;
+
+    let mut served = 0usize;
+    let mut degraded = 0usize;
+    let mut expired = 0usize;
+    let mut failed = 0usize;
+    for c in srv.drain_completions() {
+        match c.outcome {
+            Outcome::Served(r) => {
+                served += 1;
+                if r.degraded {
+                    degraded += 1;
+                }
+            }
+            Outcome::Expired(_) => expired += 1,
+            Outcome::Failed(_) => failed += 1,
+        }
+    }
+    let m = srv.metrics();
+    println!(
+        "\noutcomes: {served} served ({degraded} degraded), {expired} expired, {failed} failed"
+    );
+    println!(
+        "rejected: {} (queue-full {}, overloaded {}, shedding {})",
+        m.rejected_total(),
+        m.rejected_queue_full,
+        m.rejected_overloaded,
+        m.rejected_shedding
+    );
+    println!(
+        "faults: {} panics contained, {} retries, {} split fallbacks, {} slow requests",
+        m.panics_contained, m.gemm_retries, m.split_fallbacks, m.slow_requests
+    );
+    println!(
+        "latency ticks: p50 {} p95 {} p99 {} max {} over {} served",
+        m.latency.p50(),
+        m.latency.p95(),
+        m.latency.p99(),
+        m.latency.max(),
+        m.latency.count()
+    );
+
+    println!("\nmetrics json:\n{}", srv.metrics_json());
+    Ok(())
+}

@@ -17,7 +17,7 @@
 
 use anyhow::{anyhow, Result};
 
-use crate::bfp::{BfpContext, BfpTensor, MatmulPlan, Rounding, TileSize};
+use crate::bfp::{BfpContext, BfpTensor, MatmulPlan, PlanCache, Rounding, TileSize};
 use crate::util::rng::Xorshift32;
 
 use super::area::{size_design, AccelConfig};
@@ -44,12 +44,13 @@ pub struct GemmStats {
 /// Weights quantized once and held next to the array (packed-panel
 /// layout cached on the tensor) — the paper's resident operand, reused
 /// by every training-step GEMM without reconversion or relayout. Also
-/// carries the layer's [`MatmulPlan`], rebuilt only when the activation
-/// batch height changes.
+/// carries a small shape-keyed [`PlanCache`], so alternating activation
+/// batch heights (train batch vs eval batch vs ragged tail) each plan
+/// once instead of thrashing a single cached plan.
 struct ResidentWeights {
     qb: BfpTensor,
     mantissa_bits: u32,
-    plan: Option<MatmulPlan>,
+    plans: PlanCache,
 }
 
 /// The simulated accelerator.
@@ -138,7 +139,7 @@ impl Accelerator {
             // every GEMM reuses the layout
             qb.packed_panels_nr(self.ctx.isa().panel_nr());
         }
-        Ok(ResidentWeights { qb, mantissa_bits, plan: None })
+        Ok(ResidentWeights { qb, mantissa_bits, plans: PlanCache::new(4) })
     }
 
     /// GEMM of streamed activations against the resident weights (must be
@@ -153,8 +154,8 @@ impl Accelerator {
 
     /// [`Accelerator::gemm_resident`] into a caller-held buffer: resized
     /// to `m * n` on first use, then reused allocation-free across steps.
-    /// The layer's [`MatmulPlan`] is cached alongside the weights and
-    /// rebuilt only when `m` changes.
+    /// The layer's [`MatmulPlan`]s are cached alongside the weights,
+    /// keyed by activation batch height.
     pub fn gemm_resident_into(
         &mut self,
         a: &[f32],
@@ -165,19 +166,13 @@ impl Accelerator {
         let rw = resident
             .as_mut()
             .ok_or_else(|| anyhow!("no resident weights: call load_weights first"))?;
-        let plan = match rw.plan {
-            Some(p) if p.m() == m => p,
-            _ => {
-                let p = ctx.plan_matmul(
-                    m,
-                    rw.qb.rows,
-                    rw.qb.cols,
-                    (rw.mantissa_bits, rw.mantissa_bits),
-                )?;
-                rw.plan = Some(p);
-                p
-            }
-        };
+        let plan = rw.plans.get_or_plan(
+            ctx,
+            m,
+            rw.qb.rows,
+            rw.qb.cols,
+            (rw.mantissa_bits, rw.mantissa_bits),
+        )?;
         gemm_against(cfg, *edge, rng, rw, &plan, a, m, false, out)
     }
 
@@ -357,8 +352,11 @@ mod tests {
         acc.gemm_resident_into(&a2, m, &mut out).unwrap();
         assert_eq!(out, w2);
         assert_eq!(out.capacity(), cap, "steady-state steps must not reallocate");
-        let plan = acc.resident.as_ref().unwrap().plan.expect("plan cached");
-        assert_eq!((plan.m(), plan.k(), plan.n()), (m, k, n));
+        let plans = &acc.resident.as_ref().unwrap().plans;
+        assert_eq!(plans.len(), 1, "one batch height, one cached plan");
+        assert_eq!(plans.hits(), 1, "the second step reused it");
+        let key = plans.keys()[0];
+        assert_eq!((key.m, key.k, key.n), (m, k, n));
     }
 
     #[test]

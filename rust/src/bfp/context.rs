@@ -967,6 +967,112 @@ impl MatmulPlan {
     }
 }
 
+// ------------------------------------------------------------ plan cache
+
+/// The shape/width tuple a [`PlanCache`] entry is keyed on. The cache
+/// belongs to exactly one context (plans bake in the owning context's
+/// tile, ISA, and thread policy), so the context's knobs are *not* part
+/// of the key.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PlanKey {
+    pub m: usize,
+    pub k: usize,
+    pub n: usize,
+    pub a_bits: u32,
+    pub b_bits: u32,
+}
+
+/// A bounded, shape-keyed cache of [`MatmulPlan`]s with deterministic
+/// LRU eviction — the serving front-end's answer to micro-batches whose
+/// row count varies with queue depth: each distinct (m, k, n, widths)
+/// plans once, then executes with zero policy work.
+///
+/// Determinism contract: entries are held most-recently-used-first in a
+/// plain vector; a hit moves its entry to the front, an insert beyond
+/// capacity evicts the back. For a fixed request sequence the hit /
+/// miss / eviction counters — and the surviving key set — are exact
+/// functions of that sequence, which the overload-soak determinism test
+/// compares across runs.
+#[derive(Debug)]
+pub struct PlanCache {
+    capacity: usize,
+    /// MRU-first.
+    entries: Vec<(PlanKey, MatmulPlan)>,
+    hits: u64,
+    misses: u64,
+    evictions: u64,
+}
+
+impl PlanCache {
+    /// A cache holding at most `capacity` plans (clamped to ≥ 1).
+    pub fn new(capacity: usize) -> PlanCache {
+        PlanCache {
+            capacity: capacity.max(1),
+            entries: Vec::new(),
+            hits: 0,
+            misses: 0,
+            evictions: 0,
+        }
+    }
+
+    /// The plan for (m x k) · (k x n) at `widths`, planning through
+    /// `ctx` on a miss. Always use the same context for one cache: the
+    /// key does not cover the context's policy knobs.
+    pub fn get_or_plan(
+        &mut self,
+        ctx: &BfpContext,
+        m: usize,
+        k: usize,
+        n: usize,
+        widths: (u32, u32),
+    ) -> Result<MatmulPlan> {
+        let key = PlanKey { m, k, n, a_bits: widths.0, b_bits: widths.1 };
+        if let Some(pos) = self.entries.iter().position(|(k2, _)| *k2 == key) {
+            self.hits += 1;
+            let entry = self.entries.remove(pos);
+            self.entries.insert(0, entry);
+            return Ok(self.entries[0].1);
+        }
+        self.misses += 1;
+        let plan = ctx.plan_matmul(m, k, n, widths)?;
+        self.entries.insert(0, (key, plan));
+        if self.entries.len() > self.capacity {
+            self.entries.pop();
+            self.evictions += 1;
+        }
+        Ok(plan)
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn hits(&self) -> u64 {
+        self.hits
+    }
+
+    pub fn misses(&self) -> u64 {
+        self.misses
+    }
+
+    pub fn evictions(&self) -> u64 {
+        self.evictions
+    }
+
+    /// Resident keys, most-recently-used first (test observability).
+    pub fn keys(&self) -> Vec<PlanKey> {
+        self.entries.iter().map(|(k, _)| *k).collect()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1340,5 +1446,53 @@ mod tests {
             .unwrap();
         assert_eq!(t24.mantissa_bits, 24);
         assert!(o24.tripped && o24.widen_hint);
+    }
+
+    #[test]
+    fn plan_cache_hits_misses_and_lru_eviction() {
+        let ctx = BfpContext::from_env().with_tile(TileSize::Edge(8));
+        let mut cache = PlanCache::new(2);
+        let shapes = [(1usize, 16usize, 8usize), (4, 16, 8), (8, 16, 8)];
+        // miss, miss, hit, hit — nothing evicted yet
+        cache.get_or_plan(&ctx, shapes[0].0, shapes[0].1, shapes[0].2, (8, 8)).unwrap();
+        cache.get_or_plan(&ctx, shapes[1].0, shapes[1].1, shapes[1].2, (8, 8)).unwrap();
+        cache.get_or_plan(&ctx, shapes[0].0, shapes[0].1, shapes[0].2, (8, 8)).unwrap();
+        cache.get_or_plan(&ctx, shapes[0].0, shapes[0].1, shapes[0].2, (8, 8)).unwrap();
+        assert_eq!((cache.hits(), cache.misses(), cache.evictions()), (2, 2, 0));
+        // third shape evicts the least-recently-used (m=4)
+        cache.get_or_plan(&ctx, shapes[2].0, shapes[2].1, shapes[2].2, (8, 8)).unwrap();
+        assert_eq!(cache.evictions(), 1);
+        assert_eq!(cache.len(), 2);
+        let ms: Vec<usize> = cache.keys().iter().map(|k| k.m).collect();
+        assert_eq!(ms, vec![8, 1], "MRU first; m=4 evicted");
+        // the evicted shape misses again; widths are part of the key
+        cache.get_or_plan(&ctx, shapes[1].0, shapes[1].1, shapes[1].2, (8, 8)).unwrap();
+        assert_eq!(cache.misses(), 4);
+        cache.get_or_plan(&ctx, shapes[1].0, shapes[1].1, shapes[1].2, (8, 16)).unwrap();
+        assert_eq!(cache.misses(), 5, "different widths = different plan");
+        // cached plans execute like fresh ones
+        let plan = cache.get_or_plan(&ctx, 2, 16, 8, (8, 8)).unwrap();
+        let mut rng = SplitMix64::new(3);
+        let a = quantize(&ctx, &rand_mat(&mut rng, 2 * 16, 1.0), 2, 16, 8);
+        let b = quantize(&ctx, &rand_mat(&mut rng, 16 * 8, 1.0), 16, 8, 8);
+        assert_eq!(plan.execute(&a, &b).unwrap(), ctx.matmul(&a, &b).unwrap());
+    }
+
+    #[test]
+    fn plan_cache_replay_is_deterministic() {
+        // same request sequence -> same counters and same resident keys
+        let ctx = BfpContext::from_env().with_tile(TileSize::Edge(8));
+        let run = || {
+            let mut cache = PlanCache::new(3);
+            // deterministic pseudo-random m sequence over a few rungs
+            let mut x = 9u64;
+            for _ in 0..64 {
+                x = x.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+                let m = 1 + (x >> 33) as usize % 8;
+                cache.get_or_plan(&ctx, m, 32, 16, (8, 8)).unwrap();
+            }
+            (cache.hits(), cache.misses(), cache.evictions(), cache.keys())
+        };
+        assert_eq!(run(), run());
     }
 }

@@ -72,7 +72,7 @@ pub mod tensor;
 
 pub use context::{
     AccPolicy, BfpContext, GuardAction, GuardEvent, GuardOutcome, GuardPolicy, InputScan,
-    MatmulKernel, MatmulPlan, NumericGuardError, RoundingPolicy,
+    MatmulKernel, MatmulPlan, NumericGuardError, PlanCache, PlanKey, RoundingPolicy,
 };
 pub use kernels::Isa;
 pub use matmul::{acc_fits_i32, bfp_matmul_naive, fp32_matmul, max_tile_partial};
@@ -82,7 +82,7 @@ pub use quant::{
 };
 pub use stats::{
     clamp_rail_frac, quant_report, saturated_tile_frac, scan_nonfinite, tile_spans, ExponentStats,
-    GuardStats, NonFiniteError, QuantReport, ScanReport,
+    GuardStats, GuardStatsSnapshot, NonFiniteError, QuantReport, ScanReport,
 };
 pub use tensor::{
     next_wider_class, quantize_inplace_2d, BfpTensor, MantissaElem, Mantissas, TileSize,

@@ -183,6 +183,43 @@ impl GuardStats {
     pub fn widenings(&self) -> u64 {
         self.widenings.load(Ordering::Relaxed)
     }
+
+    /// A plain-value copy of the counters, for embedding in metrics
+    /// artifacts (see `coordinator::metrics`) and comparing runs.
+    pub fn snapshot(&self) -> GuardStatsSnapshot {
+        GuardStatsSnapshot {
+            scans: self.scans(),
+            nonfinite_inputs: self.nonfinite_inputs(),
+            saturated_tensors: self.saturated_tensors(),
+            clamp_flagged: self.clamp_flagged(),
+            fp32_fallbacks: self.fp32_fallbacks(),
+            widenings: self.widenings(),
+        }
+    }
+}
+
+/// Point-in-time copy of [`GuardStats`] — `Copy + Eq` so metrics
+/// artifacts can carry it and determinism tests can compare whole runs.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct GuardStatsSnapshot {
+    pub scans: u64,
+    pub nonfinite_inputs: u64,
+    pub saturated_tensors: u64,
+    pub clamp_flagged: u64,
+    pub fp32_fallbacks: u64,
+    pub widenings: u64,
+}
+
+impl GuardStatsSnapshot {
+    /// Did any guard observe anything at all?
+    pub fn any_activity(&self) -> bool {
+        self.scans != 0
+            || self.nonfinite_inputs != 0
+            || self.saturated_tensors != 0
+            || self.clamp_flagged != 0
+            || self.fp32_fallbacks != 0
+            || self.widenings != 0
+    }
 }
 
 /// Distribution statistics of one tensor's element exponents.
@@ -426,6 +463,20 @@ mod tests {
         assert_eq!(g.fp32_fallbacks(), 1);
         assert_eq!(g.widenings(), 1);
         assert_eq!(g.saturated_tensors(), 0);
+        let snap = g.snapshot();
+        assert_eq!(
+            snap,
+            GuardStatsSnapshot {
+                scans: 2,
+                nonfinite_inputs: 1,
+                saturated_tensors: 0,
+                clamp_flagged: 0,
+                fp32_fallbacks: 1,
+                widenings: 1,
+            }
+        );
+        assert!(snap.any_activity());
+        assert!(!GuardStatsSnapshot::default().any_activity());
     }
 
     #[test]

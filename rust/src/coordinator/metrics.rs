@@ -7,6 +7,7 @@ use std::path::Path;
 use anyhow::{Context, Result};
 // (Path used in write_csv signature)
 
+use crate::bfp::stats::GuardStatsSnapshot;
 use crate::util::json::Json;
 
 #[derive(Debug, Clone, Copy)]
@@ -96,6 +97,237 @@ impl RecoveryAction {
     }
 }
 
+/// Streaming latency histogram: fixed log2 buckets, one `u64` counter
+/// each — recording a sample is a handful of integer ops with **no
+/// per-sample allocation**, so the serving hot path can record every
+/// request. Bucket `i` holds values whose bit length is `i` (bucket 0:
+/// the value 0; bucket 63 additionally absorbs everything ≥ 2^62), which
+/// keeps relative resolution constant (~1 bucket per doubling) across
+/// the microsecond-to-minute range percentile extraction cares about.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LatencyHistogram {
+    buckets: [u64; 64],
+    count: u64,
+    sum: u64,
+    max: u64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> LatencyHistogram {
+        LatencyHistogram { buckets: [0; 64], count: 0, sum: 0, max: 0 }
+    }
+}
+
+impl LatencyHistogram {
+    pub fn new() -> LatencyHistogram {
+        LatencyHistogram::default()
+    }
+
+    /// Record one sample (any unit; callers pick one and stick to it).
+    pub fn record(&mut self, value: u64) {
+        let idx = (u64::BITS - value.leading_zeros()) as usize;
+        self.buckets[idx.min(63)] += 1;
+        self.count += 1;
+        self.sum = self.sum.saturating_add(value);
+        self.max = self.max.max(value);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn max(&self) -> u64 {
+        self.max
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+
+    /// Upper bound of the bucket holding the `p`-quantile sample
+    /// (`p` in [0, 1]), clamped to the observed maximum — an upper
+    /// bound on the true percentile that is exact to within one
+    /// doubling, which is what a deadline assertion needs.
+    pub fn percentile(&self, p: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let rank = ((p.clamp(0.0, 1.0) * self.count as f64).ceil() as u64).clamp(1, self.count);
+        let mut seen = 0u64;
+        for (i, &b) in self.buckets.iter().enumerate() {
+            seen += b;
+            if seen >= rank {
+                let upper = match i {
+                    0 => 0,
+                    63 => u64::MAX,
+                    _ => (1u64 << i) - 1,
+                };
+                return upper.min(self.max);
+            }
+        }
+        self.max
+    }
+
+    pub fn p50(&self) -> u64 {
+        self.percentile(0.50)
+    }
+
+    pub fn p95(&self) -> u64 {
+        self.percentile(0.95)
+    }
+
+    pub fn p99(&self) -> u64 {
+        self.percentile(0.99)
+    }
+
+    /// Summary + the nonzero buckets (as `[bit_length, count]` pairs, so
+    /// two runs' histograms compare equal iff every sample landed in the
+    /// same bucket).
+    pub fn to_json(&self) -> Json {
+        let buckets = self
+            .buckets
+            .iter()
+            .enumerate()
+            .filter(|(_, &b)| b != 0)
+            .map(|(i, &b)| Json::Arr(vec![Json::num(i as f64), Json::num(b as f64)]))
+            .collect();
+        Json::obj(vec![
+            ("count", Json::num(self.count as f64)),
+            ("mean", Json::num(self.mean())),
+            ("max", Json::num(self.max as f64)),
+            ("p50", Json::num(self.p50() as f64)),
+            ("p95", Json::num(self.p95() as f64)),
+            ("p99", Json::num(self.p99() as f64)),
+            ("buckets", Json::Arr(buckets)),
+        ])
+    }
+}
+
+/// Counters of the serving front-end (`crate::serve`), aggregated per
+/// server. Everything is a plain integer or a [`LatencyHistogram`], so a
+/// whole-run metrics comparison (the overload-soak determinism check) is
+/// a single `==` / JSON string equality.
+#[derive(Debug, Default, Clone, PartialEq, Eq)]
+pub struct ServeMetrics {
+    /// Requests accepted into the queue.
+    pub admitted: u64,
+    /// Rejections by cause (the typed `Rejected` ladder).
+    pub rejected_queue_full: u64,
+    pub rejected_overloaded: u64,
+    pub rejected_shedding: u64,
+    /// Deadline expiries: caught before the GEMM vs after it.
+    pub expired_at_dequeue: u64,
+    pub expired_at_completion: u64,
+    /// Requests answered (including degraded ones).
+    pub completed: u64,
+    /// Completed responses served at the degraded width class.
+    pub degraded_served: u64,
+    /// Requests failed individually (poisoned input, unrecoverable GEMM).
+    pub failed: u64,
+    /// Micro-batches executed / rows across them.
+    pub batches: u64,
+    pub batched_rows: u64,
+    /// `slow-request` fault-site hits observed.
+    pub slow_requests: u64,
+    /// Contained `PoolPanic`s (each failed one attempt, never the loop).
+    pub panics_contained: u64,
+    /// Whole-batch GEMM retries after a contained panic.
+    pub gemm_retries: u64,
+    /// Batches that fell back to per-row execution.
+    pub split_fallbacks: u64,
+    /// High-water mark of the request queue.
+    pub max_queue_depth: u64,
+    /// End-to-end latency of completed requests (submit → response).
+    pub latency: LatencyHistogram,
+}
+
+impl ServeMetrics {
+    /// Track the queue-depth high-water mark.
+    pub fn note_depth(&mut self, depth: usize) {
+        self.max_queue_depth = self.max_queue_depth.max(depth as u64);
+    }
+
+    /// All rejections regardless of cause.
+    pub fn rejected_total(&self) -> u64 {
+        self.rejected_queue_full + self.rejected_overloaded + self.rejected_shedding
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("admitted", Json::num(self.admitted as f64)),
+            ("rejected_queue_full", Json::num(self.rejected_queue_full as f64)),
+            ("rejected_overloaded", Json::num(self.rejected_overloaded as f64)),
+            ("rejected_shedding", Json::num(self.rejected_shedding as f64)),
+            ("expired_at_dequeue", Json::num(self.expired_at_dequeue as f64)),
+            ("expired_at_completion", Json::num(self.expired_at_completion as f64)),
+            ("completed", Json::num(self.completed as f64)),
+            ("degraded_served", Json::num(self.degraded_served as f64)),
+            ("failed", Json::num(self.failed as f64)),
+            ("batches", Json::num(self.batches as f64)),
+            ("batched_rows", Json::num(self.batched_rows as f64)),
+            ("slow_requests", Json::num(self.slow_requests as f64)),
+            ("panics_contained", Json::num(self.panics_contained as f64)),
+            ("gemm_retries", Json::num(self.gemm_retries as f64)),
+            ("split_fallbacks", Json::num(self.split_fallbacks as f64)),
+            ("max_queue_depth", Json::num(self.max_queue_depth as f64)),
+            ("latency", self.latency.to_json()),
+        ])
+    }
+
+    /// `name,value` rows (latency summarized as percentiles), mirroring
+    /// the JSON artifact for spreadsheet consumers.
+    pub fn write_csv(&self, path: &Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut f = std::fs::File::create(path).with_context(|| format!("creating {path:?}"))?;
+        writeln!(f, "counter,value")?;
+        for (name, v) in [
+            ("admitted", self.admitted),
+            ("rejected_queue_full", self.rejected_queue_full),
+            ("rejected_overloaded", self.rejected_overloaded),
+            ("rejected_shedding", self.rejected_shedding),
+            ("expired_at_dequeue", self.expired_at_dequeue),
+            ("expired_at_completion", self.expired_at_completion),
+            ("completed", self.completed),
+            ("degraded_served", self.degraded_served),
+            ("failed", self.failed),
+            ("batches", self.batches),
+            ("batched_rows", self.batched_rows),
+            ("slow_requests", self.slow_requests),
+            ("panics_contained", self.panics_contained),
+            ("gemm_retries", self.gemm_retries),
+            ("split_fallbacks", self.split_fallbacks),
+            ("max_queue_depth", self.max_queue_depth),
+            ("latency_count", self.latency.count()),
+            ("latency_p50", self.latency.p50()),
+            ("latency_p95", self.latency.p95()),
+            ("latency_p99", self.latency.p99()),
+            ("latency_max", self.latency.max()),
+        ] {
+            writeln!(f, "{name},{v}")?;
+        }
+        Ok(())
+    }
+}
+
+/// JSON view of the guard-layer counters (kept here so `bfp::stats`
+/// stays free of the artifact format).
+pub fn guard_stats_json(g: &GuardStatsSnapshot) -> Json {
+    Json::obj(vec![
+        ("scans", Json::num(g.scans as f64)),
+        ("nonfinite_inputs", Json::num(g.nonfinite_inputs as f64)),
+        ("saturated_tensors", Json::num(g.saturated_tensors as f64)),
+        ("clamp_flagged", Json::num(g.clamp_flagged as f64)),
+        ("fp32_fallbacks", Json::num(g.fp32_fallbacks as f64)),
+        ("widenings", Json::num(g.widenings as f64)),
+    ])
+}
+
 /// Full history of one run.
 #[derive(Debug, Default, Clone)]
 pub struct History {
@@ -104,6 +336,9 @@ pub struct History {
     /// Fault-tolerance interventions, in detection order (empty for a
     /// clean run — and absent from the CSV/JSON output in that case).
     pub recoveries: Vec<RecoveryEvent>,
+    /// Guard-layer counters at end of run (`None` when the model keeps
+    /// no guard stats; absent from CSV/JSON in that case).
+    pub guard: Option<GuardStatsSnapshot>,
 }
 
 impl History {
@@ -160,6 +395,18 @@ impl History {
             let detail = r.detail.replace([',', '\n'], ";");
             writeln!(f, "recovery,{},,{},{},{}", r.step, r.kind.name(), r.action.name(), detail)?;
         }
+        if let Some(g) = &self.guard {
+            writeln!(
+                f,
+                "guard,,,,,scans={};nonfinite={};saturated={};clamp={};fp32={};widen={}",
+                g.scans,
+                g.nonfinite_inputs,
+                g.saturated_tensors,
+                g.clamp_flagged,
+                g.fp32_fallbacks,
+                g.widenings
+            )?;
+        }
         Ok(())
     }
 
@@ -215,6 +462,9 @@ impl History {
                 ),
             ));
         }
+        if let Some(g) = &self.guard {
+            fields.push(("guard_stats", guard_stats_json(g)));
+        }
         Json::obj(fields)
     }
 }
@@ -238,6 +488,7 @@ mod tests {
                 EvalRecord { step: 5, loss: 1.0, error: 0.4 },
                 EvalRecord { step: 10, loss: 0.8, error: 0.3 },
             ],
+            ..History::default()
         }
     }
 
@@ -294,5 +545,76 @@ mod tests {
         let rec = rec.get("recoveries").unwrap().as_arr().unwrap();
         assert_eq!(rec.len(), 1);
         assert_eq!(rec[0].get("kind").unwrap().as_str().unwrap(), "non-finite-loss");
+    }
+
+    #[test]
+    fn guard_stats_surface_in_csv_and_json_only_when_present() {
+        assert!(hist().to_json().get("guard_stats").is_none());
+        let mut h = hist();
+        h.guard = Some(GuardStatsSnapshot { scans: 12, fp32_fallbacks: 3, ..Default::default() });
+        let j = h.to_json();
+        let g = j.get("guard_stats").unwrap();
+        assert_eq!(g.get("scans").unwrap().as_i64().unwrap(), 12);
+        assert_eq!(g.get("fp32_fallbacks").unwrap().as_i64().unwrap(), 3);
+        let p = std::env::temp_dir().join("hbfp_metrics_guard_test.csv");
+        h.write_csv(&p).unwrap();
+        let s = std::fs::read_to_string(&p).unwrap();
+        let row = s.lines().last().unwrap();
+        assert!(row.starts_with("guard,"), "{row}");
+        assert!(row.contains("scans=12") && row.contains("fp32=3"), "{row}");
+    }
+
+    #[test]
+    fn latency_histogram_percentiles() {
+        let mut h = LatencyHistogram::new();
+        assert_eq!(h.percentile(0.99), 0, "empty histogram");
+        // 99 fast samples and one slow outlier: p50 stays in the fast
+        // bucket, p99+ reaches the outlier's bucket (clamped to max)
+        for _ in 0..99 {
+            h.record(100);
+        }
+        h.record(10_000);
+        assert_eq!(h.count(), 100);
+        assert_eq!(h.max(), 10_000);
+        assert!(h.p50() >= 100 && h.p50() < 200, "p50 {} in the 100s bucket", h.p50());
+        assert!(h.p95() < 200, "p95 {} still fast", h.p95());
+        assert_eq!(h.p99(), 10_000, "p99 clamps to the observed max");
+        assert!((h.mean() - 199.0).abs() < 1.0, "mean {}", h.mean());
+        // exact-zero samples live in bucket 0
+        let mut z = LatencyHistogram::new();
+        z.record(0);
+        assert_eq!(z.p99(), 0);
+        let j = h.to_json();
+        assert_eq!(j.get("count").unwrap().as_i64().unwrap(), 100);
+        assert_eq!(j.get("buckets").unwrap().as_arr().unwrap().len(), 2, "two nonzero buckets");
+    }
+
+    #[test]
+    fn serve_metrics_json_and_csv() {
+        let mut m = ServeMetrics {
+            admitted: 10,
+            rejected_queue_full: 2,
+            rejected_shedding: 1,
+            completed: 9,
+            degraded_served: 4,
+            ..Default::default()
+        };
+        m.note_depth(7);
+        m.note_depth(3);
+        m.latency.record(50);
+        assert_eq!(m.rejected_total(), 3);
+        assert_eq!(m.max_queue_depth, 7);
+        let j = m.to_json();
+        assert_eq!(j.get("admitted").unwrap().as_i64().unwrap(), 10);
+        assert_eq!(j.get("degraded_served").unwrap().as_i64().unwrap(), 4);
+        assert_eq!(j.get("latency").unwrap().get("count").unwrap().as_i64().unwrap(), 1);
+        let p = std::env::temp_dir().join("hbfp_serve_metrics_test.csv");
+        m.write_csv(&p).unwrap();
+        let s = std::fs::read_to_string(&p).unwrap();
+        assert!(s.starts_with("counter,value"));
+        assert!(s.contains("admitted,10") && s.contains("latency_count,1"), "{s}");
+        // equality is the whole-run determinism check
+        assert_eq!(m, m.clone());
+        assert_ne!(m, ServeMetrics::default());
     }
 }

@@ -38,7 +38,8 @@ use super::checkpoint::{Checkpoint, CheckpointStore, CkptError};
 use super::config::RunConfig;
 use super::metrics::{History, RecoveryAction, RecoveryEvent, RecoveryKind, StepRecord};
 use crate::bfp::{
-    next_wider_class, BfpContext, GuardAction, GuardPolicy, GuardStats, Rounding, TileSize,
+    next_wider_class, BfpContext, GuardAction, GuardPolicy, GuardStats, GuardStatsSnapshot,
+    Rounding, TileSize,
 };
 use crate::runtime::engine::HostTensor;
 use crate::runtime::manifest::{DType, TensorSpec};
@@ -68,6 +69,12 @@ pub trait FaultTolerantModel {
     /// Widen the mantissa width class one step; `false` when already at
     /// the widest class.
     fn widen(&mut self) -> bool;
+    /// Guard-layer counters accumulated by the model's datapath,
+    /// surfaced into [`History::guard`] after the run (`None` = the
+    /// model keeps no guard stats).
+    fn guard_stats(&self) -> Option<GuardStatsSnapshot> {
+        None
+    }
 }
 
 /// What one wrapped step produced.
@@ -263,6 +270,7 @@ pub fn run_resilient<M: FaultTolerantModel>(model: &mut M, cfg: &RunConfig) -> R
             store.save(&ck, &specs)?;
         }
     }
+    history.guard = model.guard_stats();
     Ok(history)
 }
 
@@ -444,6 +452,10 @@ impl FaultTolerantModel for SoftmaxDemo {
             None => false,
         }
     }
+
+    fn guard_stats(&self) -> Option<GuardStatsSnapshot> {
+        Some(self.stats.snapshot())
+    }
 }
 
 #[cfg(test)]
@@ -474,6 +486,9 @@ mod tests {
         assert_eq!(h.steps.len(), 30);
         assert!(h.recoveries.is_empty());
         assert!(!h.diverged());
+        let guard_snap = h.guard.expect("SoftmaxDemo surfaces guard stats into the history");
+        assert_eq!(guard_snap.scans, 30, "one guarded GEMM scan per step");
+        assert!(h.to_json().get("guard_stats").is_some(), "guard counters reach the artifact");
         assert!(
             h.tail_loss(5).unwrap() < h.steps[0].loss,
             "loss should fall on a separable task"

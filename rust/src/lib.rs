@@ -30,4 +30,5 @@ pub mod coordinator;
 pub mod data;
 pub mod hw;
 pub mod runtime;
+pub mod serve;
 pub mod util;

@@ -1,0 +1,157 @@
+//! Admission control: the decision made *before* a request costs anything.
+//!
+//! The policy is a watermark ladder over queue depth. Below
+//! `elevated_depth` the server is nominal; past it, callers are told to
+//! back off ([`Pressure::Elevated`]); past `degrade_depth` new work is
+//! admitted but will be served at the narrow mantissa width
+//! ([`Pressure::Degraded`] — the last rung before refusal, §4.2 narrow
+//! read path); past `shed_depth` requests are refused outright, and at
+//! `capacity` the queue itself is full. A request whose deadline cannot
+//! plausibly be met given the backlog is refused as
+//! [`Rejected::Overloaded`] instead of being admitted to expire later.
+
+use std::fmt;
+
+/// Typed refusal: why a request was not admitted. Returned to the caller
+/// as backpressure — every variant means "not queued, try later or never".
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Rejected {
+    /// The bounded queue is at hard capacity.
+    QueueFull,
+    /// Backlog estimate says the deadline would expire before service.
+    Overloaded,
+    /// Load-shed watermark reached; request refused to protect the rest.
+    Shedding,
+}
+
+impl Rejected {
+    pub fn name(self) -> &'static str {
+        match self {
+            Rejected::QueueFull => "queue-full",
+            Rejected::Overloaded => "overloaded",
+            Rejected::Shedding => "shedding",
+        }
+    }
+}
+
+impl fmt::Display for Rejected {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Service pressure reported back to an *admitted* caller, so clients can
+/// throttle before the server has to refuse them.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Pressure {
+    Nominal,
+    /// Above the soft watermark: caller should slow down.
+    Elevated,
+    /// Above the degrade watermark: request will be served at the
+    /// narrow mantissa width and flagged as degraded.
+    Degraded,
+}
+
+impl Pressure {
+    pub fn name(self) -> &'static str {
+        match self {
+            Pressure::Nominal => "nominal",
+            Pressure::Elevated => "elevated",
+            Pressure::Degraded => "degraded",
+        }
+    }
+}
+
+/// The watermark ladder, resolved once from the server config.
+/// Invariant (enforced by config normalization):
+/// `elevated_depth <= degrade_depth <= shed_depth <= capacity`.
+#[derive(Debug, Clone, Copy)]
+pub struct AdmissionPolicy {
+    pub capacity: usize,
+    pub elevated_depth: usize,
+    pub degrade_depth: usize,
+    pub shed_depth: usize,
+    /// Backlog service-time model for the Overloaded check; 0 disables
+    /// deadline feasibility screening.
+    pub est_ticks_per_row: u64,
+}
+
+impl AdmissionPolicy {
+    /// Decide a request's fate given current queue depth, the current
+    /// clock, and the request's absolute deadline (`u64::MAX` = none).
+    pub fn decide(&self, depth: usize, now: u64, deadline: u64) -> Result<Pressure, Rejected> {
+        if depth >= self.capacity {
+            return Err(Rejected::QueueFull);
+        }
+        if depth >= self.shed_depth {
+            return Err(Rejected::Shedding);
+        }
+        if self.est_ticks_per_row > 0 && deadline != u64::MAX {
+            // Everything ahead of us plus ourselves, one row each.
+            let backlog = (depth as u64 + 1).saturating_mul(self.est_ticks_per_row);
+            if now.saturating_add(backlog) > deadline {
+                return Err(Rejected::Overloaded);
+            }
+        }
+        Ok(if depth >= self.degrade_depth {
+            Pressure::Degraded
+        } else if depth >= self.elevated_depth {
+            Pressure::Elevated
+        } else {
+            Pressure::Nominal
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn policy() -> AdmissionPolicy {
+        AdmissionPolicy {
+            capacity: 8,
+            elevated_depth: 2,
+            degrade_depth: 4,
+            shed_depth: 6,
+            est_ticks_per_row: 100,
+        }
+    }
+
+    #[test]
+    fn ladder_escalates_with_depth() {
+        let p = policy();
+        assert_eq!(p.decide(0, 0, u64::MAX), Ok(Pressure::Nominal));
+        assert_eq!(p.decide(1, 0, u64::MAX), Ok(Pressure::Nominal));
+        assert_eq!(p.decide(2, 0, u64::MAX), Ok(Pressure::Elevated));
+        assert_eq!(p.decide(4, 0, u64::MAX), Ok(Pressure::Degraded));
+        assert_eq!(p.decide(5, 0, u64::MAX), Ok(Pressure::Degraded));
+        assert_eq!(p.decide(6, 0, u64::MAX), Err(Rejected::Shedding));
+        assert_eq!(p.decide(8, 0, u64::MAX), Err(Rejected::QueueFull));
+        assert_eq!(p.decide(9, 0, u64::MAX), Err(Rejected::QueueFull));
+    }
+
+    #[test]
+    fn infeasible_deadline_is_refused_as_overloaded() {
+        let p = policy();
+        // depth 3 -> estimate (3+1)*100 = 400 ticks of backlog.
+        assert_eq!(p.decide(3, 1_000, 1_399), Err(Rejected::Overloaded));
+        assert_eq!(p.decide(3, 1_000, 1_400), Ok(Pressure::Elevated));
+        // no deadline -> no feasibility screen
+        assert_eq!(p.decide(3, 1_000, u64::MAX), Ok(Pressure::Elevated));
+    }
+
+    #[test]
+    fn zero_estimate_disables_feasibility_screen() {
+        let mut p = policy();
+        p.est_ticks_per_row = 0;
+        assert_eq!(p.decide(3, 1_000, 1_001), Ok(Pressure::Elevated));
+    }
+
+    #[test]
+    fn rejection_names_are_stable() {
+        assert_eq!(Rejected::QueueFull.name(), "queue-full");
+        assert_eq!(Rejected::Overloaded.to_string(), "overloaded");
+        assert_eq!(Rejected::Shedding.name(), "shedding");
+        assert_eq!(Pressure::Degraded.name(), "degraded");
+    }
+}

@@ -1,0 +1,62 @@
+//! Micro-batching: coalesce single-row requests into skinny GEMMs.
+//!
+//! Inference requests arrive one activation row at a time, but the packed
+//! datapath amortizes its panel relayout and pool dispatch over rows — an
+//! 8×256×256 skinny GEMM is far cheaper than eight 1×256×256 calls. The
+//! batcher takes the head-of-line request's model and greedily coalesces
+//! up to `max_rows` FIFO requests for that same model into one
+//! [`MicroBatch`]; a single shape-keyed plan (from the
+//! [`crate::bfp::PlanCache`]) then serves every batch of that shape.
+
+use super::queue::{BoundedQueue, QueuedRequest};
+
+/// A group of same-model requests that will execute as one GEMM with
+/// `requests.len()` rows.
+#[derive(Debug)]
+pub struct MicroBatch {
+    pub model: usize,
+    pub requests: Vec<QueuedRequest>,
+}
+
+impl MicroBatch {
+    pub fn rows(&self) -> usize {
+        self.requests.len()
+    }
+}
+
+/// Form the next batch: head-of-line model, up to `max_rows` rows.
+/// Returns `None` when the queue is empty.
+pub fn next_batch(queue: &mut BoundedQueue, max_rows: usize) -> Option<MicroBatch> {
+    let model = queue.front_model()?;
+    let requests = queue.take_for_model(model, max_rows.max(1));
+    Some(MicroBatch { model, requests })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64, model: usize) -> QueuedRequest {
+        QueuedRequest { id, model, input: vec![0.0; 4], deadline: u64::MAX, submitted_at: 0 }
+    }
+
+    #[test]
+    fn batches_follow_head_of_line_model() {
+        let mut q = BoundedQueue::new(16);
+        for (id, model) in [(1, 0), (2, 0), (3, 1), (4, 0), (5, 1)] {
+            q.push(req(id, model)).unwrap();
+        }
+        let b = next_batch(&mut q, 8).unwrap();
+        assert_eq!(b.model, 0);
+        assert_eq!(b.rows(), 3);
+        assert_eq!(b.requests.iter().map(|r| r.id).collect::<Vec<_>>(), vec![1, 2, 4]);
+
+        let b = next_batch(&mut q, 1).unwrap();
+        assert_eq!(b.model, 1);
+        assert_eq!(b.requests[0].id, 3);
+
+        let b = next_batch(&mut q, 8).unwrap();
+        assert_eq!(b.requests[0].id, 5);
+        assert!(next_batch(&mut q, 8).is_none());
+    }
+}

@@ -1,0 +1,98 @@
+//! Serving-time clock abstraction.
+//!
+//! The server never reads wall time directly: every timestamp — admission,
+//! deadline arithmetic, latency accounting, fault-injected stalls — goes
+//! through a [`ServeClock`]. Production uses [`SystemClock`] (microseconds
+//! since server start); the overload soak tests use [`ManualClock`] so the
+//! exact same request trace produces the exact same expiry/shed decisions
+//! on every run, independent of host load.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::{Duration, Instant};
+
+/// A monotonic tick source the serving front-end schedules against.
+///
+/// Ticks are an abstract unit; [`SystemClock`] makes them microseconds,
+/// [`ManualClock`] makes them whatever the test advances by.
+pub trait ServeClock: Send + Sync {
+    /// Current tick count. Monotonically non-decreasing.
+    fn now(&self) -> u64;
+
+    /// Spend `ticks` of time. Real clocks sleep; manual clocks jump.
+    /// Used by the `slow-request` fault site and the synthetic per-row
+    /// service-time model.
+    fn advance(&self, ticks: u64);
+}
+
+/// Wall-clock ticks: microseconds elapsed since the clock was created.
+#[derive(Debug)]
+pub struct SystemClock {
+    start: Instant,
+}
+
+impl SystemClock {
+    pub fn new() -> SystemClock {
+        SystemClock { start: Instant::now() }
+    }
+}
+
+impl Default for SystemClock {
+    fn default() -> SystemClock {
+        SystemClock::new()
+    }
+}
+
+impl ServeClock for SystemClock {
+    fn now(&self) -> u64 {
+        self.start.elapsed().as_micros() as u64
+    }
+
+    fn advance(&self, ticks: u64) {
+        std::thread::sleep(Duration::from_micros(ticks));
+    }
+}
+
+/// Deterministic test clock: time moves only when something advances it.
+#[derive(Debug, Default)]
+pub struct ManualClock {
+    ticks: AtomicU64,
+}
+
+impl ManualClock {
+    pub fn new() -> ManualClock {
+        ManualClock::default()
+    }
+}
+
+impl ServeClock for ManualClock {
+    fn now(&self) -> u64 {
+        self.ticks.load(Ordering::SeqCst)
+    }
+
+    fn advance(&self, ticks: u64) {
+        self.ticks.fetch_add(ticks, Ordering::SeqCst);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manual_clock_advances_exactly() {
+        let c = ManualClock::new();
+        assert_eq!(c.now(), 0);
+        c.advance(7);
+        c.advance(0);
+        assert_eq!(c.now(), 7);
+    }
+
+    #[test]
+    fn system_clock_is_monotonic_and_advances() {
+        let c = SystemClock::new();
+        let a = c.now();
+        c.advance(1_000); // 1ms sleep
+        let b = c.now();
+        assert!(b >= a + 500, "1ms sleep moved the clock {a} -> {b}");
+    }
+}

@@ -1,0 +1,43 @@
+//! Resilient inference front-end over the BFP datapath.
+//!
+//! A synchronous-core serving layer: callers [`InferenceServer::submit`]
+//! single activation rows against models whose weights live resident in
+//! quantized + packed form ([`session`]); a drive loop calls
+//! [`InferenceServer::pump`], which coalesces requests into skinny
+//! micro-batch GEMMs ([`batcher`]) executed through the shape-keyed
+//! [`crate::bfp::PlanCache`] on the worker pool.
+//!
+//! The robustness contract:
+//!
+//! - **Admission control & backpressure** ([`admission`]): a bounded
+//!   queue ([`queue`]) behind a watermark ladder — callers get a typed
+//!   [`Rejected`] reason or a [`Pressure`] signal, never an unbounded
+//!   buffer.
+//! - **Deadlines**: enforced at dequeue (dead work never costs a GEMM)
+//!   and at completion (late answers are reported expired, not served).
+//! - **Graceful precision degradation**: the ladder's last rung before
+//!   refusal serves at the narrow mantissa width (§4.2 narrow read path,
+//!   pre-built at model load), and every degraded response says so.
+//! - **Fault isolation**: a poisoned input or a contained worker panic
+//!   fails only its own request; batch-mates are redispatched or split
+//!   into per-row GEMMs.
+//!
+//! Time is abstracted behind [`ServeClock`] ([`clock`]) so the overload
+//! soak tests replay deterministically on a [`ManualClock`].
+
+pub mod admission;
+pub mod batcher;
+pub mod clock;
+pub mod queue;
+pub mod server;
+pub mod session;
+
+pub use admission::{AdmissionPolicy, Pressure, Rejected};
+pub use batcher::{next_batch, MicroBatch};
+pub use clock::{ManualClock, ServeClock, SystemClock};
+pub use queue::{BoundedQueue, QueuedRequest};
+pub use server::{
+    BatchReport, Completion, ExpiredAt, InferenceServer, Outcome, PumpReport, Response,
+    ServeConfig, Submission,
+};
+pub use session::ResidentModel;

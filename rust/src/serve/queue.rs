@@ -1,0 +1,153 @@
+//! The bounded FIFO request queue behind admission control.
+//!
+//! Capacity is a hard bound — `push` on a full queue hands the request
+//! back instead of growing, which is what makes the backpressure in
+//! [`super::admission`] honest. Deadline expiry is enforced here at
+//! dequeue time: [`BoundedQueue::drain_expired`] removes work that is
+//! already dead so it never costs a GEMM.
+
+use std::collections::VecDeque;
+
+/// One admitted inference request waiting for a batch slot.
+#[derive(Debug, Clone)]
+pub struct QueuedRequest {
+    pub id: u64,
+    /// Index of the resident model this request targets.
+    pub model: usize,
+    /// Row-major activation row, length = model's `k`.
+    pub input: Vec<f32>,
+    /// Absolute deadline in clock ticks; `u64::MAX` means none.
+    pub deadline: u64,
+    pub submitted_at: u64,
+}
+
+impl QueuedRequest {
+    pub fn expired(&self, now: u64) -> bool {
+        now > self.deadline
+    }
+}
+
+/// Fixed-capacity FIFO of admitted requests.
+#[derive(Debug)]
+pub struct BoundedQueue {
+    items: VecDeque<QueuedRequest>,
+    capacity: usize,
+}
+
+impl BoundedQueue {
+    pub fn new(capacity: usize) -> BoundedQueue {
+        let capacity = capacity.max(1);
+        BoundedQueue { items: VecDeque::with_capacity(capacity), capacity }
+    }
+
+    pub fn depth(&self) -> usize {
+        self.items.len()
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.items.is_empty()
+    }
+
+    pub fn is_full(&self) -> bool {
+        self.items.len() >= self.capacity
+    }
+
+    /// Enqueue, or hand the request back if the queue is at capacity.
+    pub fn push(&mut self, r: QueuedRequest) -> Result<(), QueuedRequest> {
+        if self.is_full() {
+            return Err(r);
+        }
+        self.items.push_back(r);
+        Ok(())
+    }
+
+    /// Model id at the head of the line, if any.
+    pub fn front_model(&self) -> Option<usize> {
+        self.items.front().map(|r| r.model)
+    }
+
+    /// Remove and return every request whose deadline has already passed,
+    /// wherever it sits in the queue, preserving FIFO order among both
+    /// the removed and the survivors.
+    pub fn drain_expired(&mut self, now: u64) -> Vec<QueuedRequest> {
+        let mut expired = Vec::new();
+        let mut keep = VecDeque::with_capacity(self.items.len());
+        for r in self.items.drain(..) {
+            if r.expired(now) {
+                expired.push(r);
+            } else {
+                keep.push_back(r);
+            }
+        }
+        self.items = keep;
+        expired
+    }
+
+    /// Dequeue up to `max_rows` requests for `model`, preserving FIFO
+    /// order; requests for other models keep their relative order.
+    pub fn take_for_model(&mut self, model: usize, max_rows: usize) -> Vec<QueuedRequest> {
+        let mut taken = Vec::new();
+        let mut keep = VecDeque::with_capacity(self.items.len());
+        for r in self.items.drain(..) {
+            if r.model == model && taken.len() < max_rows {
+                taken.push(r);
+            } else {
+                keep.push_back(r);
+            }
+        }
+        self.items = keep;
+        taken
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64, model: usize, deadline: u64) -> QueuedRequest {
+        QueuedRequest { id, model, input: vec![0.0; 4], deadline, submitted_at: 0 }
+    }
+
+    #[test]
+    fn push_bounces_at_capacity() {
+        let mut q = BoundedQueue::new(2);
+        assert!(q.push(req(1, 0, u64::MAX)).is_ok());
+        assert!(q.push(req(2, 0, u64::MAX)).is_ok());
+        assert!(q.is_full());
+        let bounced = q.push(req(3, 0, u64::MAX)).unwrap_err();
+        assert_eq!(bounced.id, 3);
+        assert_eq!(q.depth(), 2);
+    }
+
+    #[test]
+    fn drain_expired_keeps_fifo_order() {
+        let mut q = BoundedQueue::new(8);
+        for (id, dl) in [(1, 10), (2, 5), (3, u64::MAX), (4, 5), (5, 20)] {
+            q.push(req(id, 0, dl)).unwrap();
+        }
+        let dead: Vec<u64> = q.drain_expired(7).iter().map(|r| r.id).collect();
+        assert_eq!(dead, vec![2, 4]);
+        assert_eq!(q.depth(), 3);
+        assert_eq!(q.front_model(), Some(0));
+        let rest: Vec<u64> = q.take_for_model(0, 8).iter().map(|r| r.id).collect();
+        assert_eq!(rest, vec![1, 3, 5]);
+    }
+
+    #[test]
+    fn take_for_model_coalesces_fifo_and_skips_other_models() {
+        let mut q = BoundedQueue::new(8);
+        for (id, model) in [(1, 0), (2, 1), (3, 0), (4, 0), (5, 1)] {
+            q.push(req(id, model, u64::MAX)).unwrap();
+        }
+        let batch: Vec<u64> = q.take_for_model(0, 2).iter().map(|r| r.id).collect();
+        assert_eq!(batch, vec![1, 3]); // capped at 2 rows, id 4 stays
+        let left: Vec<u64> = q.take_for_model(1, 8).iter().map(|r| r.id).collect();
+        assert_eq!(left, vec![2, 5]);
+        assert_eq!(q.depth(), 1);
+        assert_eq!(q.front_model(), Some(0));
+    }
+}

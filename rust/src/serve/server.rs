@@ -1,0 +1,786 @@
+//! The synchronous-core inference server.
+//!
+//! `submit` runs admission control and enqueues; `pump` forms one
+//! micro-batch, enforces deadlines at dequeue and again at completion,
+//! executes the skinny GEMM against resident packed weights through the
+//! shape-keyed plan cache, and contains every per-request hazard:
+//!
+//! - a non-finite activation row (including the `nan-activation` fault
+//!   site) fails *that request only* — the row is scanned and dropped
+//!   before batch assembly;
+//! - a contained worker panic ([`crate::util::pool::PoolPanic`], e.g. the
+//!   `worker-panic` fault site) triggers whole-batch redispatch up to
+//!   `max_gemm_retries`, then a per-row split fallback so one poisoned
+//!   dispatch cannot take down its batch-mates;
+//! - the `slow-request` fault site stalls a single request's assembly,
+//!   exercising the completion-time deadline check.
+//!
+//! Everything the server does is observable in [`ServeMetrics`]
+//! (latency histogram, queue depth high-water, shed/reject/degrade/retry
+//! counters) plus the numeric [`GuardStats`], both surfaced by
+//! [`InferenceServer::metrics_json`].
+
+use std::sync::Arc;
+
+use anyhow::{anyhow, Result};
+
+use crate::bfp::stats::scan_nonfinite;
+use crate::bfp::{BfpContext, GuardStats, GuardStatsSnapshot, PlanCache, Rounding};
+use crate::coordinator::metrics::{guard_stats_json, ServeMetrics};
+use crate::util::fault::{self, FaultSite};
+use crate::util::json::Json;
+use crate::util::pool::catch_pool_panic;
+
+use super::admission::{AdmissionPolicy, Pressure, Rejected};
+use super::batcher;
+use super::clock::ServeClock;
+use super::queue::{BoundedQueue, QueuedRequest};
+use super::session::ResidentModel;
+
+/// Serving knobs. Depth watermarks are normalized at server construction
+/// to `elevated <= degrade <= shed <= capacity`.
+#[derive(Debug, Clone, Copy)]
+pub struct ServeConfig {
+    /// Hard bound on queued requests.
+    pub queue_capacity: usize,
+    /// Depth at which admitted callers are told [`Pressure::Elevated`].
+    pub elevated_depth: usize,
+    /// Depth at which service drops to the degraded width.
+    pub degrade_depth: usize,
+    /// Depth at which new requests are refused ([`Rejected::Shedding`]).
+    pub shed_depth: usize,
+    /// Micro-batch row cap (the skinny-GEMM m).
+    pub max_batch_rows: usize,
+    /// Mantissa width for nominal service.
+    pub full_bits: u32,
+    /// Mantissa width for degraded service (last rung before refusal).
+    pub degraded_bits: u32,
+    /// Relative deadline applied when `submit` gets `None`
+    /// (`u64::MAX` = no deadline).
+    pub default_deadline_ticks: u64,
+    /// Per-row service-time estimate for the admission feasibility
+    /// screen; 0 disables [`Rejected::Overloaded`].
+    pub est_ticks_per_row: u64,
+    /// Ticks charged per served row on the serve clock (deterministic
+    /// service-time model for manual-clock tests; 0 = off).
+    pub synthetic_ticks_per_row: u64,
+    /// Stall charged when the `slow-request` fault site fires.
+    pub slow_request_penalty_ticks: u64,
+    /// Whole-batch redispatches after a contained panic before the
+    /// per-row split fallback kicks in.
+    pub max_gemm_retries: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> ServeConfig {
+        ServeConfig {
+            queue_capacity: 64,
+            elevated_depth: 16,
+            degrade_depth: 32,
+            shed_depth: 48,
+            max_batch_rows: 8,
+            full_bits: 16,
+            degraded_bits: 8,
+            default_deadline_ticks: u64::MAX,
+            est_ticks_per_row: 0,
+            synthetic_ticks_per_row: 0,
+            slow_request_penalty_ticks: 2_000,
+            max_gemm_retries: 2,
+        }
+    }
+}
+
+impl ServeConfig {
+    fn normalized(mut self) -> ServeConfig {
+        self.queue_capacity = self.queue_capacity.max(1);
+        self.max_batch_rows = self.max_batch_rows.max(1);
+        self.shed_depth = self.shed_depth.min(self.queue_capacity);
+        self.degrade_depth = self.degrade_depth.min(self.shed_depth);
+        self.elevated_depth = self.elevated_depth.min(self.degrade_depth);
+        self
+    }
+}
+
+/// Outcome of `submit`: either queued (with the pressure signal the
+/// caller should throttle on) or refused with a typed reason.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Submission {
+    Admitted { id: u64, pressure: Pressure },
+    Rejected(Rejected),
+}
+
+impl Submission {
+    pub fn is_admitted(&self) -> bool {
+        matches!(self, Submission::Admitted { .. })
+    }
+
+    pub fn id(&self) -> Option<u64> {
+        match self {
+            Submission::Admitted { id, .. } => Some(*id),
+            Submission::Rejected(_) => None,
+        }
+    }
+}
+
+/// Where a request's deadline was found to have passed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExpiredAt {
+    /// Dead before service: dropped at dequeue, no GEMM spent.
+    Dequeue,
+    /// Served, but the result arrived after the deadline.
+    Completion,
+}
+
+/// A successful inference result.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Response {
+    pub output: Vec<f32>,
+    /// Mantissa width actually served.
+    pub served_bits: u32,
+    /// True when the load-shed ladder narrowed this request's precision.
+    pub degraded: bool,
+    pub latency_ticks: u64,
+}
+
+/// Terminal state of one admitted request.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Outcome {
+    Served(Response),
+    Expired(ExpiredAt),
+    /// This request failed (bad input or unrecoverable dispatch); its
+    /// batch-mates were unaffected.
+    Failed(String),
+}
+
+/// Request id + terminal outcome, delivered via `drain_completions`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Completion {
+    pub id: u64,
+    pub model: usize,
+    pub outcome: Outcome,
+}
+
+/// What one `pump` call did to the batch it formed.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BatchReport {
+    pub model: usize,
+    /// Ids of the rows that reached GEMM assembly, in batch-row order.
+    pub ids: Vec<u64>,
+    /// Width this batch was served at.
+    pub bits: u32,
+    pub degraded: bool,
+    /// Whole-batch redispatches after contained panics.
+    pub retries: usize,
+    /// True when the batch fell back to per-row GEMMs (outputs are then
+    /// quantized per row, not per batch).
+    pub split_fallback: bool,
+}
+
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct PumpReport {
+    pub batch: Option<BatchReport>,
+    pub expired_at_dequeue: usize,
+    /// Rows that terminated as [`Outcome::Failed`] this pump.
+    pub failed_rows: usize,
+}
+
+/// The serving front-end. Single-threaded control loop over the
+/// pool-parallel BFP datapath: callers `submit`, something drives `pump`,
+/// results come back through `drain_completions`.
+pub struct InferenceServer {
+    cfg: ServeConfig,
+    ctx: BfpContext,
+    clock: Arc<dyn ServeClock>,
+    policy: AdmissionPolicy,
+    models: Vec<ResidentModel>,
+    queue: BoundedQueue,
+    plans: PlanCache,
+    metrics: ServeMetrics,
+    guard: GuardStats,
+    next_id: u64,
+    completions: Vec<Completion>,
+    scratch_a: Vec<f32>,
+    scratch_out: Vec<f32>,
+}
+
+impl InferenceServer {
+    pub fn new(cfg: ServeConfig, ctx: BfpContext, clock: Arc<dyn ServeClock>) -> InferenceServer {
+        let cfg = cfg.normalized();
+        let policy = AdmissionPolicy {
+            capacity: cfg.queue_capacity,
+            elevated_depth: cfg.elevated_depth,
+            degrade_depth: cfg.degrade_depth,
+            shed_depth: cfg.shed_depth,
+            est_ticks_per_row: cfg.est_ticks_per_row,
+        };
+        InferenceServer {
+            policy,
+            queue: BoundedQueue::new(cfg.queue_capacity),
+            plans: PlanCache::new(16),
+            metrics: ServeMetrics::default(),
+            guard: GuardStats::default(),
+            next_id: 0,
+            completions: Vec::new(),
+            scratch_a: Vec::new(),
+            scratch_out: Vec::new(),
+            models: Vec::new(),
+            cfg,
+            ctx,
+            clock,
+        }
+    }
+
+    /// Quantize + pack `weights` (row-major `k x n`) resident at both
+    /// serving widths; returns the model handle used by `submit`.
+    pub fn register_model(
+        &mut self,
+        name: &str,
+        weights: &[f32],
+        k: usize,
+        n: usize,
+    ) -> Result<usize> {
+        let model = ResidentModel::load(
+            &self.ctx,
+            name,
+            weights,
+            k,
+            n,
+            self.cfg.full_bits,
+            self.cfg.degraded_bits,
+        )?;
+        self.models.push(model);
+        Ok(self.models.len() - 1)
+    }
+
+    pub fn model(&self, idx: usize) -> Option<&ResidentModel> {
+        self.models.get(idx)
+    }
+
+    pub fn context(&self) -> &BfpContext {
+        &self.ctx
+    }
+
+    pub fn config(&self) -> &ServeConfig {
+        &self.cfg
+    }
+
+    pub fn queue_depth(&self) -> usize {
+        self.queue.depth()
+    }
+
+    pub fn metrics(&self) -> &ServeMetrics {
+        &self.metrics
+    }
+
+    pub fn guard_snapshot(&self) -> GuardStatsSnapshot {
+        self.guard.snapshot()
+    }
+
+    pub fn plan_cache(&self) -> &PlanCache {
+        &self.plans
+    }
+
+    /// Admission control + enqueue. `deadline_in` is relative ticks from
+    /// now (falls back to the config default). An `Err` is a caller bug
+    /// (unknown model, wrong input length); refusal under load is the
+    /// `Ok(Submission::Rejected(_))` backpressure path.
+    pub fn submit(
+        &mut self,
+        model: usize,
+        input: Vec<f32>,
+        deadline_in: Option<u64>,
+    ) -> Result<Submission> {
+        let k = self
+            .models
+            .get(model)
+            .ok_or_else(|| anyhow!("no model #{model} registered"))?
+            .k();
+        if input.len() != k {
+            return Err(anyhow!(
+                "model #{model} takes {k} input features, got {}",
+                input.len()
+            ));
+        }
+        let now = self.clock.now();
+        let rel = deadline_in.unwrap_or(self.cfg.default_deadline_ticks);
+        let deadline = now.saturating_add(rel);
+        match self.policy.decide(self.queue.depth(), now, deadline) {
+            Err(rej) => {
+                match rej {
+                    Rejected::QueueFull => self.metrics.rejected_queue_full += 1,
+                    Rejected::Overloaded => self.metrics.rejected_overloaded += 1,
+                    Rejected::Shedding => self.metrics.rejected_shedding += 1,
+                }
+                Ok(Submission::Rejected(rej))
+            }
+            Ok(pressure) => {
+                let id = self.next_id;
+                self.next_id += 1;
+                let req = QueuedRequest { id, model, input, deadline, submitted_at: now };
+                self.queue
+                    .push(req)
+                    .map_err(|_| anyhow!("admission passed a full queue (policy bug)"))?;
+                self.metrics.admitted += 1;
+                self.metrics.note_depth(self.queue.depth());
+                Ok(Submission::Admitted { id, pressure })
+            }
+        }
+    }
+
+    /// Terminal outcomes accumulated since the last drain, in completion
+    /// order.
+    pub fn drain_completions(&mut self) -> Vec<Completion> {
+        std::mem::take(&mut self.completions)
+    }
+
+    /// Pump until the queue is empty, collecting per-batch reports.
+    pub fn run_until_idle(&mut self) -> Result<Vec<PumpReport>> {
+        let mut reports = Vec::new();
+        while !self.queue.is_empty() {
+            reports.push(self.pump()?);
+        }
+        Ok(reports)
+    }
+
+    /// One scheduler turn: expire dead work at dequeue, form one
+    /// micro-batch, execute it, and settle every member's outcome.
+    pub fn pump(&mut self) -> Result<PumpReport> {
+        let now = self.clock.now();
+        // Deadline enforcement point 1: already-dead requests are dropped
+        // before they cost a GEMM.
+        let dead = self.queue.drain_expired(now);
+        let expired_at_dequeue = dead.len();
+        for r in dead {
+            self.metrics.expired_at_dequeue += 1;
+            self.completions.push(Completion {
+                id: r.id,
+                model: r.model,
+                outcome: Outcome::Expired(ExpiredAt::Dequeue),
+            });
+        }
+
+        // Degrade decision reads post-expiry depth: the ladder's last
+        // rung before refusal is serving at the narrow width.
+        let depth = self.queue.depth();
+        let degraded =
+            depth >= self.cfg.degrade_depth && self.cfg.degraded_bits < self.cfg.full_bits;
+
+        let Some(batch) = batcher::next_batch(&mut self.queue, self.cfg.max_batch_rows) else {
+            return Ok(PumpReport { batch: None, expired_at_dequeue, failed_rows: 0 });
+        };
+        let model_idx = batch.model;
+        let bits = if degraded {
+            self.models[model_idx].degraded_bits()
+        } else {
+            self.models[model_idx].full_bits()
+        };
+
+        // Per-row hazard handling: fault probes, then a non-finite scan,
+        // so one poisoned request fails alone instead of sinking the
+        // batch at quantization time.
+        let mut rows: Vec<QueuedRequest> = Vec::with_capacity(batch.requests.len());
+        let mut failed_rows = 0usize;
+        for mut r in batch.requests {
+            if fault::fire(FaultSite::SlowRequest) {
+                self.metrics.slow_requests += 1;
+                self.clock.advance(self.cfg.slow_request_penalty_ticks);
+            }
+            if fault::fire(FaultSite::NanActivation) {
+                if let Some(x) = r.input.first_mut() {
+                    *x = f32::NAN;
+                }
+            }
+            self.guard.record_scan();
+            if let Some(err) = scan_nonfinite(&r.input, 1).error(&r.input) {
+                self.guard.record_nonfinite();
+                self.metrics.failed += 1;
+                failed_rows += 1;
+                self.completions.push(Completion {
+                    id: r.id,
+                    model: r.model,
+                    outcome: Outcome::Failed(format!("rejected input: {err}")),
+                });
+                continue;
+            }
+            rows.push(r);
+        }
+
+        let (k, n) = (self.models[model_idx].k(), self.models[model_idx].n());
+        let m = rows.len();
+        let report = BatchReport {
+            model: model_idx,
+            ids: rows.iter().map(|r| r.id).collect(),
+            bits,
+            degraded,
+            retries: 0,
+            split_fallback: false,
+        };
+        if m == 0 {
+            self.metrics.batches += 1;
+            return Ok(PumpReport { batch: Some(report), expired_at_dequeue, failed_rows });
+        }
+
+        self.scratch_a.resize(m * k, 0.0);
+        for (i, r) in rows.iter().enumerate() {
+            self.scratch_a[i * k..(i + 1) * k].copy_from_slice(&r.input);
+        }
+        self.scratch_out.resize(m * n, 0.0);
+
+        let plan = self.plans.get_or_plan(&self.ctx, m, k, n, (bits, bits))?;
+        let weights = self.models[model_idx].weights_at(bits);
+        let a = &self.scratch_a[..m * k];
+        let out = &mut self.scratch_out[..m * n];
+
+        // Attempt 1..=retries: the whole batch in one pool-parallel GEMM,
+        // each contained panic redispatched bit-identically.
+        let mut retries = 0usize;
+        let mut whole_failed = None;
+        loop {
+            let attempt = catch_pool_panic(|| {
+                plan.quantize_execute_into(a, &mut Rounding::NearestEven, weights, &mut *out)
+            });
+            match attempt {
+                Ok(inner) => {
+                    inner?;
+                    break;
+                }
+                Err(p) => {
+                    self.metrics.panics_contained += 1;
+                    if retries >= self.cfg.max_gemm_retries {
+                        whole_failed = Some(p);
+                        break;
+                    }
+                    retries += 1;
+                    self.metrics.gemm_retries += 1;
+                }
+            }
+        }
+
+        // Split fallback: per-row GEMMs isolate the damage to single
+        // requests. (A 1-row dispatch runs inline — below the pool's
+        // parallel floor — so injected worker faults cannot reach it.)
+        let mut row_failed: Vec<Option<String>> = vec![None; m];
+        let split_fallback = whole_failed.is_some();
+        if let Some(panic) = whole_failed {
+            self.metrics.split_fallbacks += 1;
+            let row_plan = self.plans.get_or_plan(&self.ctx, 1, k, n, (bits, bits))?;
+            for i in 0..m {
+                let row_a = &a[i * k..(i + 1) * k];
+                let row_out = &mut out[i * n..(i + 1) * n];
+                let mut last = panic.message().to_string();
+                let mut ok = false;
+                for _ in 0..=self.cfg.max_gemm_retries {
+                    let attempt = catch_pool_panic(|| {
+                        row_plan.quantize_execute_into(
+                            row_a,
+                            &mut Rounding::NearestEven,
+                            weights,
+                            &mut *row_out,
+                        )
+                    });
+                    match attempt {
+                        Ok(inner) => {
+                            inner?;
+                            ok = true;
+                            break;
+                        }
+                        Err(p) => {
+                            self.metrics.panics_contained += 1;
+                            last = p.message().to_string();
+                        }
+                    }
+                }
+                if !ok {
+                    row_failed[i] = Some(last);
+                }
+            }
+        }
+
+        // Deterministic service-time model (manual-clock soaks) — the
+        // batch costs ticks proportional to its rows.
+        if self.cfg.synthetic_ticks_per_row > 0 {
+            self.clock.advance(self.cfg.synthetic_ticks_per_row * m as u64);
+        }
+
+        // Deadline enforcement point 2: a result that arrives after its
+        // deadline is reported expired, not served.
+        let done = self.clock.now();
+        for (i, r) in rows.iter().enumerate() {
+            if let Some(msg) = row_failed[i].take() {
+                self.metrics.failed += 1;
+                failed_rows += 1;
+                self.completions.push(Completion {
+                    id: r.id,
+                    model: r.model,
+                    outcome: Outcome::Failed(format!("gemm dispatch failed: {msg}")),
+                });
+                continue;
+            }
+            if r.expired(done) {
+                self.metrics.expired_at_completion += 1;
+                self.completions.push(Completion {
+                    id: r.id,
+                    model: r.model,
+                    outcome: Outcome::Expired(ExpiredAt::Completion),
+                });
+                continue;
+            }
+            let latency = done.saturating_sub(r.submitted_at);
+            self.metrics.latency.record(latency);
+            self.metrics.completed += 1;
+            if degraded {
+                self.metrics.degraded_served += 1;
+            }
+            self.completions.push(Completion {
+                id: r.id,
+                model: r.model,
+                outcome: Outcome::Served(Response {
+                    output: self.scratch_out[i * n..(i + 1) * n].to_vec(),
+                    served_bits: bits,
+                    degraded,
+                    latency_ticks: latency,
+                }),
+            });
+        }
+
+        self.metrics.batches += 1;
+        self.metrics.batched_rows += m as u64;
+        let report = BatchReport { retries, split_fallback, ..report };
+        Ok(PumpReport { batch: Some(report), expired_at_dequeue, failed_rows })
+    }
+
+    /// Full observability dump: serving counters + latency percentiles,
+    /// numeric guard totals, and plan-cache effectiveness.
+    pub fn metrics_json(&self) -> Json {
+        Json::obj(vec![
+            ("serve", self.metrics.to_json()),
+            ("guard_stats", guard_stats_json(&self.guard.snapshot())),
+            (
+                "plan_cache",
+                Json::obj(vec![
+                    ("len", Json::num(self.plans.len() as f64)),
+                    ("hits", Json::num(self.plans.hits() as f64)),
+                    ("misses", Json::num(self.plans.misses() as f64)),
+                    ("evictions", Json::num(self.plans.evictions() as f64)),
+                ]),
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bfp::{bfp_matmul_naive, TileSize};
+    use crate::serve::clock::ManualClock;
+
+    fn ramp(len: usize, phase: f32) -> Vec<f32> {
+        (0..len).map(|i| ((i as f32) * 0.11 + phase).sin()).collect()
+    }
+
+    fn server(cfg: ServeConfig) -> (InferenceServer, Arc<ManualClock>) {
+        let clock = Arc::new(ManualClock::new());
+        let ctx = BfpContext::from_env().with_threads(1).with_tile(TileSize::Edge(4));
+        (InferenceServer::new(cfg, ctx, clock.clone()), clock)
+    }
+
+    #[test]
+    fn served_batch_is_bit_identical_to_naive() {
+        let (mut srv, _clock) = server(ServeConfig::default());
+        let k = 8;
+        let n = 8;
+        let w = ramp(k * n, 0.3);
+        let model = srv.register_model("toy", &w, k, n).unwrap();
+
+        let inputs: Vec<Vec<f32>> = (0..3).map(|i| ramp(k, i as f32)).collect();
+        for input in &inputs {
+            let sub = srv.submit(model, input.clone(), None).unwrap();
+            assert!(sub.is_admitted());
+        }
+        let report = srv.pump().unwrap();
+        let batch = report.batch.unwrap();
+        assert_eq!(batch.ids.len(), 3);
+        assert!(!batch.degraded);
+        assert_eq!(batch.bits, 16);
+
+        // naive reference over the same batch grouping and width
+        let ctx = srv.context();
+        let mut flat = Vec::new();
+        for input in &inputs {
+            flat.extend_from_slice(input);
+        }
+        let qa = ctx.quantize(&flat, 3, k, 16, &mut Rounding::NearestEven).unwrap();
+        let want = bfp_matmul_naive(&qa, srv.model(model).unwrap().weights_at(16)).unwrap();
+
+        let done = srv.drain_completions();
+        assert_eq!(done.len(), 3);
+        for (i, c) in done.iter().enumerate() {
+            match &c.outcome {
+                Outcome::Served(resp) => {
+                    assert_eq!(resp.served_bits, 16);
+                    assert!(!resp.degraded);
+                    assert_eq!(resp.output, want[i * n..(i + 1) * n].to_vec());
+                }
+                other => panic!("request {i} not served: {other:?}"),
+            }
+        }
+        assert_eq!(srv.metrics().completed, 3);
+        assert_eq!(srv.metrics().batches, 1);
+        assert_eq!(srv.metrics().batched_rows, 3);
+        assert_eq!(srv.plan_cache().misses(), 1);
+    }
+
+    #[test]
+    fn ladder_degrades_then_sheds_then_fills() {
+        let cfg = ServeConfig {
+            queue_capacity: 8,
+            elevated_depth: 2,
+            degrade_depth: 3,
+            shed_depth: 6,
+            max_batch_rows: 4,
+            ..ServeConfig::default()
+        };
+        let (mut srv, _clock) = server(cfg);
+        let k = 4;
+        let model = srv.register_model("toy", &ramp(k * 4, 0.0), k, 4).unwrap();
+
+        let mut pressures = Vec::new();
+        let mut rejections = Vec::new();
+        for i in 0..8 {
+            match srv.submit(model, ramp(k, i as f32), None).unwrap() {
+                Submission::Admitted { pressure, .. } => pressures.push(pressure),
+                Submission::Rejected(r) => rejections.push(r),
+            }
+        }
+        assert_eq!(
+            pressures,
+            vec![
+                Pressure::Nominal,
+                Pressure::Nominal,
+                Pressure::Elevated,
+                Pressure::Degraded,
+                Pressure::Degraded,
+                Pressure::Degraded,
+            ]
+        );
+        assert_eq!(rejections, vec![Rejected::Shedding, Rejected::Shedding]);
+        assert_eq!(srv.metrics().rejected_shedding, 2);
+        assert_eq!(srv.metrics().max_queue_depth, 6);
+
+        // depth 6 >= degrade_depth -> first batch served narrow + flagged
+        let report = srv.pump().unwrap();
+        let batch = report.batch.unwrap();
+        assert!(batch.degraded);
+        assert_eq!(batch.bits, 8);
+        let served: Vec<_> = srv
+            .drain_completions()
+            .into_iter()
+            .filter_map(|c| match c.outcome {
+                Outcome::Served(r) => Some(r),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(served.len(), 4);
+        assert!(served.iter().all(|r| r.degraded && r.served_bits == 8));
+        assert_eq!(srv.metrics().degraded_served, 4);
+
+        // backlog drained below the watermark -> service recovers
+        let report = srv.pump().unwrap();
+        assert!(!report.batch.unwrap().degraded);
+    }
+
+    #[test]
+    fn overloaded_deadline_is_refused_at_admission() {
+        let cfg = ServeConfig { est_ticks_per_row: 100, ..ServeConfig::default() };
+        let (mut srv, _clock) = server(cfg);
+        let model = srv.register_model("toy", &ramp(16, 0.0), 4, 4).unwrap();
+        srv.submit(model, ramp(4, 0.0), None).unwrap();
+        // backlog estimate (1+1)*100 = 200 > 150
+        let sub = srv.submit(model, ramp(4, 1.0), Some(150)).unwrap();
+        assert_eq!(sub, Submission::Rejected(Rejected::Overloaded));
+        assert_eq!(srv.metrics().rejected_overloaded, 1);
+        // a feasible deadline on the same queue is admitted
+        assert!(srv.submit(model, ramp(4, 2.0), Some(250)).unwrap().is_admitted());
+    }
+
+    #[test]
+    fn deadlines_expire_at_dequeue_and_completion() {
+        let cfg = ServeConfig { synthetic_ticks_per_row: 100, ..ServeConfig::default() };
+        let (mut srv, clock) = server(cfg);
+        let model = srv.register_model("toy", &ramp(16, 0.0), 4, 4).unwrap();
+
+        // expires in the queue: deadline 50, clock jumps to 60
+        let a = srv.submit(model, ramp(4, 0.0), Some(50)).unwrap().id().unwrap();
+        // expires at completion: deadline 150, batch costs 2*100 ticks
+        let b = srv.submit(model, ramp(4, 1.0), Some(150)).unwrap().id().unwrap();
+        // survives: no deadline
+        let c = srv.submit(model, ramp(4, 2.0), None).unwrap().id().unwrap();
+        clock.advance(60);
+        let report = srv.pump().unwrap();
+        assert_eq!(report.expired_at_dequeue, 1);
+        assert_eq!(report.batch.as_ref().unwrap().ids, vec![b, c]);
+
+        let done = srv.drain_completions();
+        let outcome = |id: u64| done.iter().find(|x| x.id == id).unwrap().outcome.clone();
+        assert_eq!(outcome(a), Outcome::Expired(ExpiredAt::Dequeue));
+        assert_eq!(outcome(b), Outcome::Expired(ExpiredAt::Completion));
+        assert!(matches!(outcome(c), Outcome::Served(_)));
+        assert_eq!(srv.metrics().expired_at_dequeue, 1);
+        assert_eq!(srv.metrics().expired_at_completion, 1);
+        assert_eq!(srv.metrics().latency.count(), 1);
+        assert_eq!(srv.metrics().latency.max(), 260); // 60 wait + 200 service
+    }
+
+    #[test]
+    fn nonfinite_input_fails_only_its_own_request() {
+        let (mut srv, _clock) = server(ServeConfig::default());
+        let k = 4;
+        let n = 4;
+        let model = srv.register_model("toy", &ramp(k * n, 0.0), k, n).unwrap();
+        let good = ramp(k, 1.0);
+        srv.submit(model, good.clone(), None).unwrap();
+        let mut bad = ramp(k, 2.0);
+        bad[2] = f32::INFINITY;
+        let bad_id = srv.submit(model, bad, None).unwrap().id().unwrap();
+        srv.submit(model, good.clone(), None).unwrap();
+
+        let report = srv.pump().unwrap();
+        assert_eq!(report.failed_rows, 1);
+        assert_eq!(report.batch.as_ref().unwrap().ids.len(), 2);
+
+        let done = srv.drain_completions();
+        assert_eq!(done.len(), 3);
+        let failed: Vec<u64> = done
+            .iter()
+            .filter(|x| matches!(x.outcome, Outcome::Failed(_)))
+            .map(|x| x.id)
+            .collect();
+        assert_eq!(failed, vec![bad_id]);
+        assert_eq!(srv.metrics().failed, 1);
+        assert_eq!(srv.metrics().completed, 2);
+        let snap = srv.guard_snapshot();
+        assert_eq!(snap.scans, 3);
+        assert_eq!(snap.nonfinite_inputs, 1);
+    }
+
+    #[test]
+    fn submit_rejects_caller_bugs_as_errors() {
+        let (mut srv, _clock) = server(ServeConfig::default());
+        assert!(srv.submit(0, vec![1.0], None).is_err());
+        let model = srv.register_model("toy", &ramp(16, 0.0), 4, 4).unwrap();
+        assert!(srv.submit(model, vec![1.0; 3], None).is_err());
+    }
+
+    #[test]
+    fn metrics_json_has_all_three_sections() {
+        let (mut srv, _clock) = server(ServeConfig::default());
+        let model = srv.register_model("toy", &ramp(16, 0.0), 4, 4).unwrap();
+        srv.submit(model, ramp(4, 0.0), None).unwrap();
+        srv.run_until_idle().unwrap();
+        let j = srv.metrics_json();
+        assert!(j.get("serve").is_some());
+        assert!(j.get("guard_stats").is_some());
+        let pc = j.get("plan_cache").unwrap();
+        assert_eq!(pc.get("misses").and_then(|v| v.as_i64()), Some(1));
+    }
+}

@@ -1,0 +1,170 @@
+//! Resident models: weights quantized, packed, and pinned once at load.
+//!
+//! This generalizes the accelerator model's resident-weight path
+//! ([`crate::accel::sim`]) for serving: the B operand is quantized to the
+//! full serving width at load time, its packed-panel layout is warmed
+//! eagerly, and — because the load-shed ladder's last rung is precision
+//! degradation — a narrow copy at the degraded width is *also* built at
+//! load time via the §4.2 narrow read path
+//! ([`crate::bfp::BfpTensor::narrow_view`]). Degrading under overload is
+//! then a pointer swap, not a re-quantization.
+
+use anyhow::{anyhow, Result};
+
+use crate::bfp::{BfpContext, BfpTensor, Rounding};
+
+/// One served model: a `k x n` weight matrix resident at the full width
+/// plus (when the widths differ) a pre-narrowed degraded copy.
+#[derive(Debug)]
+pub struct ResidentModel {
+    name: String,
+    k: usize,
+    n: usize,
+    full_bits: u32,
+    degraded_bits: u32,
+    full: BfpTensor,
+    /// `None` when `degraded_bits == full_bits` (no separate copy).
+    degraded: Option<BfpTensor>,
+}
+
+impl ResidentModel {
+    /// Quantize `weights` (row-major `k x n`) at the context's tile size,
+    /// build the degraded narrow copy, and warm both packed-panel caches.
+    pub fn load(
+        ctx: &BfpContext,
+        name: &str,
+        weights: &[f32],
+        k: usize,
+        n: usize,
+        full_bits: u32,
+        degraded_bits: u32,
+    ) -> Result<ResidentModel> {
+        if k == 0 || n == 0 {
+            return Err(anyhow!("model {name}: degenerate shape {k}x{n}"));
+        }
+        if weights.len() != k * n {
+            return Err(anyhow!(
+                "model {name}: weights len {} != {k}x{n}",
+                weights.len()
+            ));
+        }
+        if degraded_bits > full_bits {
+            return Err(anyhow!(
+                "model {name}: degraded width {degraded_bits} exceeds full width {full_bits}"
+            ));
+        }
+        // Weights are quantized RNE: serving must be reproducible across
+        // restarts, so no stochastic state is allowed into residency.
+        let full = ctx.quantize(weights, k, n, full_bits, &mut Rounding::NearestEven)?;
+        let nr = ctx.isa().panel_nr();
+        full.packed_panels_nr(nr);
+        let degraded = if degraded_bits < full_bits {
+            let narrow = full.narrow_view(degraded_bits, &mut Rounding::NearestEven)?;
+            narrow.packed_panels_nr(nr);
+            Some(narrow)
+        } else {
+            None
+        };
+        Ok(ResidentModel {
+            name: name.to_string(),
+            k,
+            n,
+            full_bits,
+            degraded_bits,
+            full,
+            degraded,
+        })
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    pub fn full_bits(&self) -> u32 {
+        self.full_bits
+    }
+
+    pub fn degraded_bits(&self) -> u32 {
+        self.degraded_bits
+    }
+
+    /// The resident tensor serving width `bits`. Any width other than the
+    /// configured degraded width gets the full-width tensor.
+    pub fn weights_at(&self, bits: u32) -> &BfpTensor {
+        match &self.degraded {
+            Some(d) if bits == self.degraded_bits => d,
+            _ => &self.full,
+        }
+    }
+
+    /// Resident bytes across both width copies (mantissas + exponents +
+    /// cached panels).
+    pub fn heap_bytes(&self) -> usize {
+        self.full.heap_bytes() + self.degraded.as_ref().map_or(0, |d| d.heap_bytes())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bfp::{bfp_matmul_naive, TileSize};
+
+    fn ctx() -> BfpContext {
+        BfpContext::from_env().with_threads(1).with_tile(TileSize::Edge(4))
+    }
+
+    fn ramp(len: usize) -> Vec<f32> {
+        (0..len).map(|i| (i as f32 * 0.37).sin()).collect()
+    }
+
+    #[test]
+    fn load_builds_both_width_copies() {
+        let ctx = ctx();
+        let w = ramp(8 * 6);
+        let m = ResidentModel::load(&ctx, "toy", &w, 8, 6, 16, 8).unwrap();
+        assert_eq!((m.k(), m.n()), (8, 6));
+        assert_eq!(m.weights_at(16).mantissa_bits, 16);
+        assert_eq!(m.weights_at(8).mantissa_bits, 8);
+        // unknown width falls back to the full copy
+        assert_eq!(m.weights_at(12).mantissa_bits, 16);
+        assert!(m.heap_bytes() > 0);
+    }
+
+    #[test]
+    fn equal_widths_skip_the_degraded_copy() {
+        let ctx = ctx();
+        let w = ramp(4 * 4);
+        let m = ResidentModel::load(&ctx, "flat", &w, 4, 4, 8, 8).unwrap();
+        assert!(std::ptr::eq(m.weights_at(8), m.weights_at(16)));
+    }
+
+    #[test]
+    fn degraded_copy_matches_naive_at_narrow_width() {
+        let ctx = ctx();
+        let w = ramp(8 * 8);
+        let m = ResidentModel::load(&ctx, "toy", &w, 8, 8, 16, 8).unwrap();
+        let a = ctx
+            .quantize(&ramp(2 * 8), 2, 8, 8, &mut Rounding::NearestEven)
+            .unwrap();
+        let plan = ctx.plan_matmul(2, 8, 8, (8, 8)).unwrap();
+        let got = plan.execute(&a, m.weights_at(8)).unwrap();
+        let want = bfp_matmul_naive(&a, m.weights_at(8)).unwrap();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn load_rejects_bad_shapes_and_widths() {
+        let ctx = ctx();
+        assert!(ResidentModel::load(&ctx, "m", &[0.0; 12], 3, 5, 16, 8).is_err());
+        assert!(ResidentModel::load(&ctx, "m", &[0.0; 15], 3, 5, 8, 16).is_err());
+        assert!(ResidentModel::load(&ctx, "m", &[], 0, 5, 16, 8).is_err());
+    }
+}

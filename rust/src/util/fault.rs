@@ -44,16 +44,20 @@ pub enum FaultSite {
     CkptTruncate,
     /// Flip bits in a checkpoint file after writing (media corruption).
     CkptGarble,
+    /// Stall one inference request in the serving front-end (a slow or
+    /// stuck client whose work must not hold up the batch behind it).
+    SlowRequest,
 }
 
 /// All sites, in probe-table order.
-pub const ALL_SITES: [FaultSite; 6] = [
+pub const ALL_SITES: [FaultSite; 7] = [
     FaultSite::NanActivation,
     FaultSite::MantissaBitflip,
     FaultSite::WorkerPanic,
     FaultSite::SlowWorker,
     FaultSite::CkptTruncate,
     FaultSite::CkptGarble,
+    FaultSite::SlowRequest,
 ];
 
 impl FaultSite {
@@ -65,6 +69,7 @@ impl FaultSite {
             FaultSite::SlowWorker => 3,
             FaultSite::CkptTruncate => 4,
             FaultSite::CkptGarble => 5,
+            FaultSite::SlowRequest => 6,
         }
     }
 
@@ -77,6 +82,7 @@ impl FaultSite {
             FaultSite::SlowWorker => "slow-worker",
             FaultSite::CkptTruncate => "ckpt-truncate",
             FaultSite::CkptGarble => "ckpt-garble",
+            FaultSite::SlowRequest => "slow-request",
         }
     }
 
@@ -105,7 +111,7 @@ struct SiteState {
 /// A set of armed fault sites with deterministic per-probe decisions.
 #[derive(Debug, Default)]
 pub struct FaultInjector {
-    sites: [SiteState; 6],
+    sites: [SiteState; 7],
 }
 
 impl FaultInjector {
@@ -334,6 +340,15 @@ mod tests {
             (0..64).map(|_| inj.should_fire(FaultSite::WorkerPanic)).collect::<Vec<_>>()
         };
         assert_ne!(fires(1), fires(2));
+    }
+
+    #[test]
+    fn slow_request_site_parses_and_fires() {
+        let inj = FaultInjector::parse("slow-request:1.0:2").unwrap();
+        assert!(inj.armed());
+        assert!(inj.should_fire(FaultSite::SlowRequest), "rate 1.0 always fires");
+        assert_eq!(inj.probes(FaultSite::SlowRequest), 1);
+        assert_eq!(inj.hits(FaultSite::SlowRequest), 1);
     }
 
     #[test]

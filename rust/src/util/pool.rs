@@ -85,6 +85,16 @@ fn payload_msg(payload: &(dyn std::any::Any + Send)) -> String {
     }
 }
 
+/// Run `f` and convert any panic that crosses it into a typed
+/// [`PoolPanic`]. [`Pool::try_run`] already contains *worker*-lane
+/// panics; this closes the remaining gap for callers that must never
+/// unwind — the inline (single-lane) dispatch path and [`Pool::run`]'s
+/// re-raise both execute on the caller's thread, so a serve loop wraps
+/// each GEMM in this to fail one request batch instead of the server.
+pub fn catch_pool_panic<R>(f: impl FnOnce() -> R) -> Result<R, PoolPanic> {
+    catch_unwind(AssertUnwindSafe(f)).map_err(|p| PoolPanic { msg: payload_msg(&*p) })
+}
+
 /// A lifetime-erased chunk of submitted work.
 type Task = Box<dyn FnOnce() + Send + 'static>;
 
@@ -603,6 +613,26 @@ mod tests {
             .unwrap();
         assert_eq!(out, fresh, "post-panic dispatch is bit-identical");
         assert_eq!(pool.respawns(), 0, "caught panics never kill workers");
+    }
+
+    #[test]
+    fn catch_pool_panic_wraps_caller_side_panics() {
+        assert_eq!(catch_pool_panic(|| 7).unwrap(), 7);
+        let err = catch_pool_panic(|| -> u32 { panic!("inline boom") }).unwrap_err();
+        assert!(err.message().contains("inline boom"), "{err}");
+        // composes with `run`'s re-raise: the worker panic message that
+        // unwinds the caller arrives intact in the typed error
+        let pool = Pool::new(2);
+        let jobs: Vec<(usize, ())> = (0..8).map(|i| (i, ())).collect();
+        let err = catch_pool_panic(|| {
+            pool.run(jobs, 4, |i, _| {
+                if i == 3 {
+                    panic!("boom");
+                }
+            })
+        })
+        .unwrap_err();
+        assert!(err.message().contains("worker task panicked"), "{err}");
     }
 
     #[test]

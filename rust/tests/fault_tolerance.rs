@@ -246,6 +246,53 @@ fn worker_panic_contained_and_redispatch_bit_identical() {
     assert!(survived == fresh, "post-recovery dispatch must be bit-identical");
 }
 
+/// N consecutive injected panics against the same pool: every dispatch
+/// fails with a contained error, the worker set stays serviceable
+/// throughout, and the first clean redispatch is bit-identical to a
+/// fresh pool's answer.
+#[test]
+fn pool_try_run_heals_after_repeated_panics() {
+    let jobs = || (0..48usize).map(|i| (i, i as u64)).collect::<Vec<_>>();
+    let work = |i: usize, v: u64, out: &mut [u64]| {
+        out[i] = v.wrapping_mul(0x517c_c1b7).rotate_left(11);
+    };
+
+    let pool = Pool::new(3);
+    let baseline = {
+        let _clean = fault::install(FaultInjector::none());
+        let out = std::sync::Mutex::new(vec![0u64; 48]);
+        pool.try_run(jobs(), 4, |i, v| work(i, v, &mut out.lock().unwrap())).unwrap();
+        out.into_inner().unwrap()
+    };
+
+    {
+        let _panic = fault::install(FaultInjector::from_specs(&[FaultSpec {
+            site: FaultSite::WorkerPanic,
+            rate: 1.0,
+            seed: 9,
+        }]));
+        for round in 0..5 {
+            let out = std::sync::Mutex::new(vec![0u64; 48]);
+            let err = pool
+                .try_run(jobs(), 4, |i, v| work(i, v, &mut out.lock().unwrap()))
+                .unwrap_err();
+            assert!(
+                err.message().contains("injected worker panic"),
+                "round {round}: unexpected panic payload {err}"
+            );
+        }
+    }
+
+    // after five faulted dispatches, the same pool answers bit-identically
+    let _clean = fault::install(FaultInjector::none());
+    let out = std::sync::Mutex::new(vec![0u64; 48]);
+    pool.try_run(jobs(), 4, |i, v| work(i, v, &mut out.lock().unwrap())).unwrap();
+    assert!(
+        out.into_inner().unwrap() == baseline,
+        "healed pool must redispatch bit-identically"
+    );
+}
+
 /// The slow-worker site only delays; results are unchanged.
 #[test]
 fn slow_worker_changes_no_bits() {

@@ -1,0 +1,513 @@
+//! Serving front-end integration: the deterministic overload soak
+//! (admission ladder, deadlines, degradation, contained faults — replayed
+//! twice and compared bit-for-bit), targeted deadline-expiry tests for the
+//! `slow-worker` and `slow-request` fault sites, contained worker-panic
+//! retry/split-fallback, and the environment-fault soak the CI
+//! fault-injection matrix drives.
+//!
+//! Injector discipline (same as `fault_tolerance.rs`): every test either
+//! `install`s an explicit injector — which serializes it on the harness's
+//! install lock and shields it from `HBFP_FAULT` and from its neighbors —
+//! or holds `fault::exclusive()` to run *under* the environment's
+//! injector.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use hbfp::bfp::{bfp_matmul_naive, BfpContext, Isa, Rounding, TileSize};
+use hbfp::serve::{
+    BatchReport, Completion, ExpiredAt, InferenceServer, ManualClock, Outcome, PumpReport,
+    Rejected, Response, ServeConfig, Submission, SystemClock,
+};
+use hbfp::util::fault::{self, FaultInjector, FaultSite, FaultSpec};
+
+fn weights(k: usize, n: usize) -> Vec<f32> {
+    (0..k * n).map(|i| ((i as f32) * 0.173).sin() * 0.5).collect()
+}
+
+fn input(k: usize, salt: u64) -> Vec<f32> {
+    (0..k).map(|i| ((i as f32) * 0.31 + salt as f32 * 0.77).cos()).collect()
+}
+
+/// Replay every served response against the naive BFP reference at the
+/// width and batch grouping the server reported for it. Whole batches are
+/// quantized as one `m x k` operand; split-fallback batches quantize each
+/// row independently (that is what the server executed).
+fn verify_served_against_naive(
+    srv: &InferenceServer,
+    inputs: &HashMap<u64, Vec<f32>>,
+    batches: &[BatchReport],
+    served: &HashMap<u64, Response>,
+) {
+    let ctx = srv.context();
+    let mut checked = 0usize;
+    for b in batches {
+        let model = srv.model(b.model).unwrap();
+        let (k, n) = (model.k(), model.n());
+        let wb = model.weights_at(b.bits);
+        if b.ids.is_empty() {
+            continue;
+        }
+        if b.split_fallback {
+            for id in &b.ids {
+                let Some(resp) = served.get(id) else { continue };
+                let qa = ctx
+                    .quantize(&inputs[id], 1, k, b.bits, &mut Rounding::NearestEven)
+                    .unwrap();
+                let want = bfp_matmul_naive(&qa, wb).unwrap();
+                assert_eq!(resp.output, want, "split row {id} diverged from naive");
+                assert_eq!(resp.served_bits, b.bits);
+                checked += 1;
+            }
+        } else {
+            let m = b.ids.len();
+            let mut flat = Vec::with_capacity(m * k);
+            for id in &b.ids {
+                flat.extend_from_slice(&inputs[id]);
+            }
+            let qa = ctx.quantize(&flat, m, k, b.bits, &mut Rounding::NearestEven).unwrap();
+            let want = bfp_matmul_naive(&qa, wb).unwrap();
+            for (i, id) in b.ids.iter().enumerate() {
+                let Some(resp) = served.get(id) else { continue };
+                assert_eq!(
+                    resp.output,
+                    want[i * n..(i + 1) * n].to_vec(),
+                    "batched row {id} diverged from naive"
+                );
+                assert_eq!(resp.served_bits, b.bits);
+                assert_eq!(resp.degraded, b.degraded);
+                checked += 1;
+            }
+        }
+    }
+    assert!(checked > 0, "verification must cover at least one served response");
+}
+
+fn served_map(completions: &[Completion]) -> HashMap<u64, Response> {
+    completions
+        .iter()
+        .filter_map(|c| match &c.outcome {
+            Outcome::Served(r) => Some((c.id, r.clone())),
+            _ => None,
+        })
+        .collect()
+}
+
+fn collect_batches(reports: &[PumpReport]) -> Vec<BatchReport> {
+    reports.iter().filter_map(|r| r.batch.clone()).collect()
+}
+
+// ---------------------------------------------------------------------
+// The deterministic overload soak (the acceptance scenario)
+// ---------------------------------------------------------------------
+
+/// Mirrors the CI overload-soak leg's HBFP_FAULT spec. Installed
+/// explicitly so the test is the same everywhere.
+fn soak_specs() -> Vec<FaultSpec> {
+    vec![
+        FaultSpec { site: FaultSite::WorkerPanic, rate: 0.35, seed: 11 },
+        FaultSpec { site: FaultSite::SlowWorker, rate: 0.5, seed: 11 },
+        FaultSpec { site: FaultSite::NanActivation, rate: 0.05, seed: 11 },
+        FaultSpec { site: FaultSite::SlowRequest, rate: 0.25, seed: 11 },
+    ]
+}
+
+fn soak_cfg() -> ServeConfig {
+    ServeConfig {
+        queue_capacity: 32,
+        elevated_depth: 8,
+        degrade_depth: 12,
+        shed_depth: 24,
+        max_batch_rows: 16,
+        full_bits: 16,
+        degraded_bits: 8,
+        default_deadline_ticks: 50_000,
+        est_ticks_per_row: 200,
+        synthetic_ticks_per_row: 100,
+        slow_request_penalty_ticks: 500,
+        max_gemm_retries: 2,
+    }
+}
+
+struct SoakRun {
+    srv: InferenceServer,
+    metrics_json: String,
+    completions: Vec<Completion>,
+    batches: Vec<BatchReport>,
+    inputs: HashMap<u64, Vec<f32>>,
+    submitted: u64,
+}
+
+fn soak_request(
+    srv: &mut InferenceServer,
+    model: usize,
+    i: u64,
+    inputs: &mut HashMap<u64, Vec<f32>>,
+) {
+    let mut x = input(256, i);
+    if i % 13 == 12 {
+        // a poisoned client payload rides along every 13th request
+        x[2] = f32::NAN;
+    }
+    // every 7th request carries a tight deadline (Overloaded fodder once
+    // a backlog exists), every 7k+3rd a mid deadline, the rest default
+    let deadline = match i % 7 {
+        0 => Some(300),
+        3 => Some(6_000),
+        _ => None,
+    };
+    if let Submission::Admitted { id, .. } = srv.submit(model, x.clone(), deadline).unwrap() {
+        inputs.insert(id, x);
+    }
+}
+
+fn run_soak_once() -> SoakRun {
+    // Fixed tile/ISA/threads so the lane layout — and therefore the fault
+    // probe schedule — does not depend on the host's vector unit.
+    let ctx = BfpContext::from_env()
+        .with_threads(4)
+        .with_isa(Isa::Scalar)
+        .with_tile(TileSize::Edge(4));
+    let clock = Arc::new(ManualClock::new());
+    let mut srv = InferenceServer::new(soak_cfg(), ctx, clock.clone());
+    // Model load runs shielded: the soak injects faults into serving, not
+    // into residency building (whose pool dispatches are uncontained).
+    let quiet = fault::install(FaultInjector::none());
+    let model = srv.register_model("soak-256", &weights(256, 256), 256, 256).unwrap();
+    drop(quiet);
+
+    // A fresh injector per run resets the probe counters, which is what
+    // makes the replay exact.
+    let _g = fault::install(FaultInjector::from_specs(&soak_specs()));
+
+    let mut inputs = HashMap::new();
+    let mut submitted = 0u64;
+    let mut reports = Vec::new();
+
+    // Phase A: a 33-request burst with no pump — climbs the whole ladder
+    // (nominal -> elevated -> degraded -> shedding) at twice the
+    // admission capacity the shed watermark allows.
+    for i in 0..33u64 {
+        soak_request(&mut srv, model, i, &mut inputs);
+        submitted += 1;
+    }
+
+    // Phase B: sustained 2x overload — 6 new requests per pump while each
+    // pump retires at most 16 rows from a 24-deep backlog.
+    for wave in 0..12u64 {
+        for j in 0..6u64 {
+            soak_request(&mut srv, model, 33 + wave * 6 + j, &mut inputs);
+            submitted += 1;
+        }
+        reports.push(srv.pump().unwrap());
+    }
+
+    // Phase C: drain.
+    reports.extend(srv.run_until_idle().unwrap());
+
+    // Coda: one feasible-at-admission request that dies in the queue —
+    // the deterministic dequeue-expiry case.
+    let sub = srv.submit(model, input(256, 9_999), Some(300)).unwrap();
+    assert!(sub.is_admitted(), "empty queue must admit a 300-tick deadline");
+    if let Submission::Admitted { id, .. } = sub {
+        inputs.insert(id, input(256, 9_999));
+    }
+    submitted += 1;
+    clock.advance(400);
+    reports.extend(srv.run_until_idle().unwrap());
+
+    let completions = srv.drain_completions();
+    let metrics_json = srv.metrics_json().to_string();
+    let batches = collect_batches(&reports);
+    SoakRun { srv, metrics_json, completions, batches, inputs, submitted }
+}
+
+#[test]
+fn overload_soak_is_deterministic_and_serves_bit_identical() {
+    let r1 = run_soak_once();
+    let r2 = run_soak_once();
+
+    // Replay: identical metrics (counters, histogram, plan cache) and
+    // identical per-request outcomes including every output bit.
+    assert_eq!(r1.metrics_json, r2.metrics_json, "soak metrics must replay identically");
+    assert_eq!(r1.completions, r2.completions, "soak outcomes must replay identically");
+
+    let m = r1.srv.metrics();
+
+    // Conservation: every submission is accounted for exactly once.
+    assert_eq!(r1.submitted, m.admitted + m.rejected_total());
+    assert_eq!(m.admitted as usize, r1.inputs.len());
+    assert_eq!(
+        m.admitted,
+        m.completed + m.expired_at_dequeue + m.expired_at_completion + m.failed,
+        "admitted requests must all terminate: {m:?}"
+    );
+    assert_eq!(r1.completions.len() as u64, m.admitted);
+    assert_eq!(r1.srv.queue_depth(), 0);
+
+    // The ladder actually engaged under 2x load.
+    assert!(m.rejected_shedding > 0, "shed watermark never hit: {m:?}");
+    assert!(m.rejected_overloaded > 0, "deadline feasibility screen never hit: {m:?}");
+    assert!(m.degraded_served > 0, "precision degradation never engaged: {m:?}");
+    assert!(m.expired_at_dequeue > 0, "no dequeue expiry: {m:?}");
+    assert!(m.expired_at_completion > 0, "no completion expiry: {m:?}");
+    assert!(m.failed > 0, "poisoned payloads must fail individually: {m:?}");
+
+    // Deadline SLO: the histogram only holds served requests, and no
+    // request was admitted with more than the 50k-tick default.
+    assert_eq!(m.latency.count(), m.completed);
+    assert!(m.latency.p99() <= 50_000, "p99 {} above deadline ceiling", m.latency.p99());
+    assert!(m.latency.p50() <= m.latency.p99());
+
+    // With multiple pool lanes the worker-panic site must have been
+    // contained (never escaped: the run finished and drained).
+    if hbfp::util::worker_threads() >= 2 {
+        assert!(m.panics_contained > 0, "worker-panic armed but never contained: {m:?}");
+    }
+
+    // Every served response is bit-identical to the naive reference at
+    // its served width and batch grouping.
+    let served = served_map(&r1.completions);
+    assert_eq!(served.len() as u64, m.completed);
+    verify_served_against_naive(&r1.srv, &r1.inputs, &r1.batches, &served);
+
+    // Degraded responses are flagged and narrow.
+    let degraded: Vec<&Response> = served.values().filter(|r| r.degraded).collect();
+    assert_eq!(degraded.len() as u64, m.degraded_served);
+    assert!(degraded.iter().all(|r| r.served_bits == 8));
+}
+
+// ---------------------------------------------------------------------
+// Environment-fault soak (the CI fault-injection matrix target)
+// ---------------------------------------------------------------------
+
+/// Runs *under* `HBFP_FAULT` (whatever the environment armed, if
+/// anything) and checks the robustness invariants only: the queue drains,
+/// nothing escapes, accounting conserves, and everything served is still
+/// bit-identical to naive. Single-lane context so an env worker-panic
+/// cannot unwind model registration, which runs outside the serve loop's
+/// containment.
+#[test]
+fn soak_survives_environment_faults() {
+    let _env = fault::exclusive();
+    let ctx = BfpContext::from_env().with_threads(1).with_tile(TileSize::Edge(4));
+    let cfg = ServeConfig {
+        queue_capacity: 16,
+        elevated_depth: 4,
+        degrade_depth: 6,
+        shed_depth: 12,
+        max_batch_rows: 8,
+        est_ticks_per_row: 150,
+        synthetic_ticks_per_row: 100,
+        slow_request_penalty_ticks: 500,
+        default_deadline_ticks: 40_000,
+        ..ServeConfig::default()
+    };
+    let mut srv = InferenceServer::new(cfg, ctx, Arc::new(ManualClock::new()));
+    let model = srv.register_model("env-64", &weights(64, 64), 64, 64).unwrap();
+
+    let mut inputs = HashMap::new();
+    let mut submitted = 0u64;
+    let mut reports = Vec::new();
+    for i in 0..60u64 {
+        let x = input(64, i);
+        let deadline = if i % 9 == 4 { Some(1_200) } else { None };
+        if let Submission::Admitted { id, .. } = srv.submit(model, x.clone(), deadline).unwrap()
+        {
+            inputs.insert(id, x);
+        }
+        submitted += 1;
+        if i % 4 == 3 {
+            reports.push(srv.pump().unwrap());
+        }
+    }
+    reports.extend(srv.run_until_idle().unwrap());
+
+    let completions = srv.drain_completions();
+    let m = srv.metrics();
+    assert_eq!(srv.queue_depth(), 0, "queue must drain under env faults");
+    assert_eq!(submitted, m.admitted + m.rejected_total());
+    assert_eq!(
+        m.admitted,
+        m.completed + m.expired_at_dequeue + m.expired_at_completion + m.failed
+    );
+    assert_eq!(completions.len() as u64, m.admitted);
+    assert!(m.completed > 0, "env faults must not starve service: {m:?}");
+
+    let served = served_map(&completions);
+    verify_served_against_naive(&srv, &inputs, &collect_batches(&reports), &served);
+}
+
+// ---------------------------------------------------------------------
+// Targeted deadline-expiry tests per fault site
+// ---------------------------------------------------------------------
+
+/// `slow-worker` (2ms stall per pool lane) pushes a real-clock batch past
+/// a 1ms deadline: the GEMM completes, but every row is reported expired
+/// at completion rather than served.
+#[test]
+fn slow_worker_pushes_completion_past_deadline() {
+    if hbfp::util::worker_threads() < 2 {
+        return; // single-lane dispatch runs inline and never probes the site
+    }
+    let _g = fault::install(FaultInjector::from_specs(&[FaultSpec {
+        site: FaultSite::SlowWorker,
+        rate: 1.0,
+        seed: 1,
+    }]));
+    let ctx = BfpContext::from_env()
+        .with_threads(4)
+        .with_isa(Isa::Scalar)
+        .with_tile(TileSize::Edge(4));
+    let cfg = ServeConfig { max_batch_rows: 16, est_ticks_per_row: 0, ..ServeConfig::default() };
+    let mut srv = InferenceServer::new(cfg, ctx, Arc::new(SystemClock::new()));
+    let model = srv.register_model("slow-256", &weights(256, 256), 256, 256).unwrap();
+
+    for i in 0..16u64 {
+        // 1500us deadline; every armed lane sleeps 2000us, so completion
+        // lands past every deadline no matter how fast the GEMM is
+        let sub = srv.submit(model, input(256, i), Some(1_500)).unwrap();
+        assert!(sub.is_admitted());
+    }
+    srv.pump().unwrap();
+    let m = srv.metrics();
+    assert_eq!(m.expired_at_completion, 16, "{m:?}");
+    assert_eq!(m.completed, 0);
+    assert_eq!(m.latency.count(), 0);
+    assert!(srv
+        .drain_completions()
+        .iter()
+        .all(|c| c.outcome == Outcome::Expired(ExpiredAt::Completion)));
+}
+
+/// `slow-request` stalls individual requests during batch assembly on the
+/// manual clock: deterministic completion-expiry, then dequeue-expiry for
+/// work that dies while waiting.
+#[test]
+fn slow_request_stalls_expire_requests_deterministically() {
+    let _g = fault::install(FaultInjector::from_specs(&[FaultSpec {
+        site: FaultSite::SlowRequest,
+        rate: 1.0,
+        seed: 1,
+    }]));
+    let ctx = BfpContext::from_env().with_threads(1).with_tile(TileSize::Edge(4));
+    let clock = Arc::new(ManualClock::new());
+    let cfg = ServeConfig {
+        slow_request_penalty_ticks: 2_000,
+        synthetic_ticks_per_row: 0,
+        est_ticks_per_row: 0,
+        ..ServeConfig::default()
+    };
+    let mut srv = InferenceServer::new(cfg, ctx, clock.clone());
+    let model = srv.register_model("stall-8", &weights(8, 8), 8, 8).unwrap();
+
+    // Three rows, 3000-tick deadlines: stalls advance the clock to 2000,
+    // 4000, 6000 during assembly, so the whole batch completes at 6000
+    // and all three expire at completion.
+    for i in 0..3u64 {
+        srv.submit(model, input(8, i), Some(3_000)).unwrap();
+    }
+    let report = srv.pump().unwrap();
+    assert_eq!(report.batch.unwrap().ids.len(), 3);
+    let m = srv.metrics();
+    assert_eq!(m.slow_requests, 3, "{m:?}");
+    assert_eq!(m.expired_at_completion, 3);
+    assert_eq!(clock.now(), 6_000);
+
+    // Dequeue-expiry: deadlines pass while the requests wait; they are
+    // dropped before assembly, so no further stalls are charged.
+    for i in 0..2u64 {
+        srv.submit(model, input(8, 10 + i), Some(1_000)).unwrap();
+    }
+    clock.advance(1_500);
+    let report = srv.pump().unwrap();
+    assert_eq!(report.expired_at_dequeue, 2);
+    assert!(report.batch.is_none());
+    let m = srv.metrics();
+    assert_eq!(m.slow_requests, 3, "expired-at-dequeue rows must not probe the stall site");
+    assert_eq!(m.expired_at_dequeue, 2);
+}
+
+/// Certain worker panics (rate 1.0): the whole-batch dispatch fails all
+/// retries, the per-row split fallback serves every request inline, and
+/// each response matches the naive reference for its own 1-row grouping.
+#[test]
+fn injected_worker_panics_split_but_still_serve() {
+    if hbfp::util::worker_threads() < 2 {
+        return; // no pool lanes -> the site cannot fire at all
+    }
+    let ctx = BfpContext::from_env()
+        .with_threads(4)
+        .with_isa(Isa::Scalar)
+        .with_tile(TileSize::Edge(4));
+    let clock = Arc::new(ManualClock::new());
+    let mut srv =
+        InferenceServer::new(ServeConfig { max_gemm_retries: 2, ..ServeConfig::default() },
+            ctx, clock);
+    let quiet = fault::install(FaultInjector::none());
+    let model = srv.register_model("panic-256", &weights(256, 256), 256, 256).unwrap();
+    drop(quiet);
+
+    let _g = fault::install(FaultInjector::from_specs(&[FaultSpec {
+        site: FaultSite::WorkerPanic,
+        rate: 1.0,
+        seed: 4,
+    }]));
+
+    let mut inputs = HashMap::new();
+    for i in 0..8u64 {
+        if let Submission::Admitted { id, .. } =
+            srv.submit(model, input(256, i), None).unwrap()
+        {
+            inputs.insert(id, input(256, i));
+        }
+    }
+    let report = srv.pump().unwrap();
+    let batch = report.batch.unwrap();
+    assert!(batch.split_fallback, "rate-1.0 panics must force the split fallback");
+    assert_eq!(batch.retries, 2);
+
+    let completions = srv.drain_completions();
+    let m = srv.metrics();
+    assert_eq!(m.completed, 8, "split fallback must serve every row: {m:?}");
+    assert_eq!(m.split_fallbacks, 1);
+    assert_eq!(m.gemm_retries, 2);
+    assert_eq!(m.panics_contained, 3, "initial attempt + 2 retries all contained");
+    assert_eq!(m.failed, 0);
+
+    let served = served_map(&completions);
+    verify_served_against_naive(&srv, &inputs, &[batch], &served);
+}
+
+// ---------------------------------------------------------------------
+// Backpressure plumbing
+// ---------------------------------------------------------------------
+
+/// With shedding disabled (watermark at capacity) the hard queue bound is
+/// the backstop, and it reports `QueueFull`, not `Shedding`.
+#[test]
+fn queue_full_backstop_when_shedding_disabled() {
+    let _clean = fault::install(FaultInjector::none());
+    let ctx = BfpContext::from_env().with_threads(1).with_tile(TileSize::Edge(4));
+    let cfg = ServeConfig {
+        queue_capacity: 4,
+        elevated_depth: 4,
+        degrade_depth: 4,
+        shed_depth: 4,
+        ..ServeConfig::default()
+    };
+    let mut srv = InferenceServer::new(cfg, ctx, Arc::new(ManualClock::new()));
+    let model = srv.register_model("tiny", &weights(8, 8), 8, 8).unwrap();
+    for i in 0..4u64 {
+        assert!(srv.submit(model, input(8, i), None).unwrap().is_admitted());
+    }
+    assert_eq!(
+        srv.submit(model, input(8, 99), None).unwrap(),
+        Submission::Rejected(Rejected::QueueFull)
+    );
+    assert_eq!(srv.metrics().rejected_queue_full, 1);
+
+    // draining one batch reopens admission
+    srv.run_until_idle().unwrap();
+    assert!(srv.submit(model, input(8, 100), None).unwrap().is_admitted());
+}
