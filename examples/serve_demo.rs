@@ -1,26 +1,32 @@
-//! Serving walkthrough: drive the resilient inference front-end through
-//! an overload burst and watch the ladder work — backpressure, deadline
-//! expiry, graceful precision degradation (16 -> 8 bits), and contained
-//! worker faults — then dump the full metrics JSON.
+//! Serving walkthrough: drive the resilient multi-tenant front-end
+//! through an overload burst and watch the machinery work — fair-share
+//! scheduling between a flooding tenant and a well-behaved one,
+//! backpressure, deadline expiry, graceful precision degradation
+//! (16 -> 8 bits), contained worker faults, a mid-burst hot weight
+//! reload (one clean swap, one garbled rollback), and a graceful drain
+//! to `Stopped` — then dump the full metrics JSON.
 //!
 //!     cargo run --release --example serve_demo
 //!
 //! Knobs (all optional):
 //!
-//!     HBFP_FAULT=worker-panic:0.3:11,slow-request:0.25:11
+//!     HBFP_FAULT=worker-panic:0.3:11,reload-garble:1.0:7
 //!                         run under the env harness instead of the
 //!                         demo's default mixed injector
 //!     HBFP_THREADS=4      worker budget (1 = inline, no pool faults)
 //!     HBFP_SIMD=off       pin the scalar kernel family
 //!
-//! The same scenario runs deterministically (manual clock, fixed seeds,
-//! replayed twice) as `tests/serve.rs::overload_soak_is_deterministic_...`.
+//! The same scenarios run deterministically (manual clock, fixed seeds,
+//! replayed twice) in `tests/serve.rs`: the single-tenant overload soak,
+//! the two-tenant flood soak, and the lifecycle (reload + drain) tests.
 
 use std::sync::Arc;
 
 use anyhow::Result;
 use hbfp::bfp::{BfpContext, TileSize};
-use hbfp::serve::{InferenceServer, ManualClock, Outcome, ServeConfig, Submission};
+use hbfp::serve::{
+    BreakerConfig, InferenceServer, ManualClock, Outcome, ServeConfig, Submission,
+};
 use hbfp::util::fault::{self, FaultInjector, FaultSite, FaultSpec};
 
 fn main() -> Result<()> {
@@ -30,6 +36,9 @@ fn main() -> Result<()> {
         degrade_depth: 12,
         shed_depth: 24,
         max_batch_rows: 16,
+        // a quarter-batch quantum: the scheduler interleaves tenants
+        // several times per backlog instead of serving head-of-line
+        drr_quantum_rows: 4,
         full_bits: 16,
         degraded_bits: 8,
         default_deadline_ticks: 50_000,
@@ -37,6 +46,7 @@ fn main() -> Result<()> {
         synthetic_ticks_per_row: 100,
         slow_request_penalty_ticks: 500,
         max_gemm_retries: 2,
+        breaker: BreakerConfig::default(),
     };
     let ctx = BfpContext::from_env().with_tile(TileSize::Edge(4));
     let clock = Arc::new(ManualClock::new());
@@ -44,19 +54,27 @@ fn main() -> Result<()> {
 
     let (k, n) = (256, 256);
     let weights: Vec<f32> = (0..k * n).map(|i| ((i as f32) * 0.173).sin() * 0.5).collect();
+    let weights_v2: Vec<f32> = weights.iter().map(|w| w * 0.8 - 0.05).collect();
     // Residency building is not inside the serve loop's containment, so
     // it always runs shielded from fault injection.
-    let model = {
+    let (flood, steady) = {
         let _quiet = fault::install(FaultInjector::none());
-        srv.register_model("demo-256x256", &weights, k, n)?
+        (
+            srv.register_model_with_share("tenant-a", &weights, k, n, 2)?,
+            srv.register_model_with_share("tenant-b", &weights, k, n, 1)?,
+        )
     };
-    println!(
-        "resident model: {} ({}x{}), {} bytes across 16- and 8-bit copies",
-        srv.model(model).unwrap().name(),
-        k,
-        n,
-        srv.model(model).unwrap().heap_bytes()
-    );
+    for idx in [flood, steady] {
+        let m = srv.model(idx).unwrap();
+        println!(
+            "resident model: {} ({}x{}), share {}, {} bytes across 16- and 8-bit copies",
+            m.name(),
+            k,
+            n,
+            srv.metrics().models[idx].share,
+            m.heap_bytes()
+        );
+    }
 
     // Honor an env-armed injector; otherwise install the demo's default
     // mixed fault load (same spec as the CI overload-soak leg).
@@ -64,60 +82,107 @@ fn main() -> Result<()> {
         println!("faults: honoring HBFP_FAULT from the environment");
         None
     } else {
-        println!("faults: worker-panic:0.35 slow-worker:0.5 nan-activation:0.05 slow-request:0.25");
+        println!(
+            "faults: worker-panic:0.35 slow-worker:0.5 nan-activation:0.05 \
+             slow-request:0.25 tenant-flood:0.4"
+        );
         Some(fault::install(FaultInjector::from_specs(&[
             FaultSpec { site: FaultSite::WorkerPanic, rate: 0.35, seed: 11 },
             FaultSpec { site: FaultSite::SlowWorker, rate: 0.5, seed: 11 },
             FaultSpec { site: FaultSite::NanActivation, rate: 0.05, seed: 11 },
             FaultSpec { site: FaultSite::SlowRequest, rate: 0.25, seed: 11 },
+            FaultSpec { site: FaultSite::TenantFlood, rate: 0.4, seed: 11 },
         ])))
     };
 
-    // Overload burst: 105 single-row requests at roughly twice what the
-    // shed watermark admits, mixed deadlines, a poisoned payload every
-    // 13th. Pump every 6 submissions.
-    println!("\nburst: 105 requests, pump every 6 (max 16 rows per batch)");
+    // Overload burst: tenant A floods at ~5x tenant B's rate (plus any
+    // deterministic `tenant-flood` spikes the injector fires), B carries
+    // real deadlines, a poisoned payload rides along every 13th request.
+    println!("\nburst: 18 waves, A floods 5-8x B, pump once per wave");
     let mut submitted = 0u64;
-    for i in 0..105u64 {
-        let mut x: Vec<f32> = (0..k).map(|j| ((j as f32) * 0.31 + i as f32 * 0.77).cos()).collect();
-        if i % 13 == 12 {
-            x[2] = f32::NAN;
-        }
-        let deadline = match i % 7 {
-            0 => Some(300),
-            3 => Some(6_000),
-            _ => None,
-        };
-        match srv.submit(model, x, deadline)? {
-            Submission::Admitted { .. } => {}
-            Submission::Rejected(why) => {
-                if submitted % 10 == 0 {
-                    println!("  request {i}: rejected ({why}) at depth {}", srv.queue_depth());
-                }
+    for wave in 0..18u64 {
+        let spike = if fault::fire(FaultSite::TenantFlood) { 3 } else { 0 };
+        for j in 0..5 + spike {
+            let i = wave * 10 + j;
+            let mut x: Vec<f32> =
+                (0..k).map(|c| ((c as f32) * 0.31 + i as f32 * 0.77).cos()).collect();
+            if i % 13 == 12 {
+                x[2] = f32::NAN;
             }
-        }
-        submitted += 1;
-        if i % 6 == 5 {
-            let rep = srv.pump()?;
-            if let Some(b) = rep.batch {
-                if b.degraded || b.split_fallback {
+            if let Submission::Rejected(why) = srv.submit(flood, x, None)? {
+                if wave % 4 == 0 && j == 0 {
                     println!(
-                        "  batch: {} rows @ {} bits{}{}",
-                        b.ids.len(),
-                        b.bits,
-                        if b.degraded { " [degraded]" } else { "" },
-                        if b.split_fallback { " [split-fallback]" } else { "" },
+                        "  wave {wave}: tenant-a rejected ({why}) at depth {}",
+                        srv.model_queue_depth(flood)
                     );
                 }
             }
+            submitted += 1;
+        }
+        let xb: Vec<f32> =
+            (0..k).map(|c| ((c as f32) * 0.19 + wave as f32 * 1.3).sin()).collect();
+        srv.submit(steady, xb, Some(6_000))?;
+        submitted += 1;
+
+        // Mid-burst lifecycle events: a garbled reload that must roll
+        // back (wave 6), then a clean reload that swaps to generation 1
+        // without touching in-flight work (wave 9).
+        if wave == 6 {
+            let garble = fault::install(FaultInjector::from_specs(&[FaultSpec {
+                site: FaultSite::ReloadGarble,
+                rate: 1.0,
+                seed: 7,
+            }]));
+            match srv.reload_model(flood, &weights_v2) {
+                Err(e) => println!("  wave 6: garbled reload rolled back: {e}"),
+                Ok(_) => println!("  wave 6: reload unexpectedly validated"),
+            }
+            drop(garble);
+            println!(
+                "  wave 6: tenant-a still serving generation {}",
+                srv.model(flood).unwrap().generation()
+            );
+        }
+        if wave == 9 {
+            match srv.reload_model(flood, &weights_v2) {
+                Ok(r) => println!(
+                    "  wave 9: hot reload swapped generation {} -> {} (validated at {:?})",
+                    r.old_generation, r.new_generation, r.validated_widths
+                ),
+                Err(e) => println!("  wave 9: reload failed under env faults: {e}"),
+            }
+        }
+
+        let rep = srv.pump()?;
+        if let Some(b) = rep.batch {
+            if b.degraded || b.split_fallback {
+                println!(
+                    "  batch: model {} x{} rows @ {} bits gen {}{}{}",
+                    b.model,
+                    b.ids.len(),
+                    b.bits,
+                    b.generation,
+                    if b.degraded { " [degraded]" } else { "" },
+                    if b.split_fallback { " [split-fallback]" } else { "" },
+                );
+            }
         }
     }
-    srv.run_until_idle()?;
 
-    // Settle the coda case: a request that dies waiting in the queue.
-    srv.submit(model, vec![0.25; k], Some(300))?;
-    clock.advance(400);
-    srv.run_until_idle()?;
+    // Graceful shutdown: stop admission, pump out what fits inside the
+    // drain window, force-expire the rest, land on Stopped.
+    let deadline = srv.begin_drain(2_000)?;
+    println!("\ndraining: deadline at tick {deadline}, ready={}", srv.is_ready());
+    if let Submission::Rejected(why) = srv.submit(steady, vec![0.25; k], None)? {
+        println!("  new work refused while draining: {why}");
+    }
+    submitted += 1;
+    let drain = srv.run_until_stopped()?;
+    println!(
+        "  drained in {} pumps: {} served, {} expired, {} force-expired, {} failed, conserved={}",
+        drain.pumps, drain.served, drain.expired, drain.force_expired, drain.failed,
+        drain.conserved
+    );
 
     let mut served = 0usize;
     let mut degraded = 0usize;
@@ -137,19 +202,45 @@ fn main() -> Result<()> {
     }
     let m = srv.metrics();
     println!(
-        "\noutcomes: {served} served ({degraded} degraded), {expired} expired, {failed} failed"
+        "\noutcomes: {served} served ({degraded} degraded), {expired} expired, {failed} failed \
+         of {submitted} submitted"
     );
     println!(
-        "rejected: {} (queue-full {}, overloaded {}, shedding {})",
+        "rejected: {} (queue-full {}, overloaded {}, shedding {}, quarantined {}, draining {})",
         m.rejected_total(),
         m.rejected_queue_full,
         m.rejected_overloaded,
-        m.rejected_shedding
+        m.rejected_shedding,
+        m.rejected_quarantined,
+        m.rejected_draining
     );
     println!(
-        "faults: {} panics contained, {} retries, {} split fallbacks, {} slow requests",
-        m.panics_contained, m.gemm_retries, m.split_fallbacks, m.slow_requests
+        "faults: {} panics contained, {} retries, {} split fallbacks, {} slow requests; \
+         breaker trips {} / recoveries {}; reloads {} / rollbacks {}",
+        m.panics_contained,
+        m.gemm_retries,
+        m.split_fallbacks,
+        m.slow_requests,
+        m.breaker_trips,
+        m.breaker_recoveries,
+        m.reloads,
+        m.reload_rollbacks
     );
+    for t in &m.models {
+        println!(
+            "tenant {}: share {}, admitted {}, served {} ({} degraded), expired {}, failed {}, \
+             quarantined {}, p99 {}",
+            t.name,
+            t.share,
+            t.admitted,
+            t.served,
+            t.degraded,
+            t.expired,
+            t.failed,
+            t.quarantined,
+            t.latency.p99()
+        );
+    }
     println!(
         "latency ticks: p50 {} p95 {} p99 {} max {} over {} served",
         m.latency.p50(),

@@ -233,6 +233,69 @@ fn main() {
         sink.push(&r, flops);
     }
 
+    header(&format!("serving path: fair-share scheduler overhead, 1 vs 4 tenants, {nt} threads"));
+    {
+        use hbfp::serve::{InferenceServer, ManualClock, ServeConfig, Submission};
+        use hbfp::util::fault::{self, FaultInjector};
+        use std::sync::Arc;
+
+        // Quiet injector + zero synthetic ticks: both rungs execute the
+        // same 4x 8-row GEMMs per iteration, so the margin between them
+        // is pure scheduler bookkeeping (per-tenant queues + DRR visits
+        // vs the single-tenant head-of-line fast path).
+        let _quiet = fault::install(FaultInjector::none());
+        let (k, n) = (256usize, 256usize);
+        let wts = randv(k * n, 10);
+        let act = randv(k, 11);
+        let rows_total = 32usize;
+        let flops = (2 * rows_total * k * n) as f64;
+        let mk_cfg = || ServeConfig {
+            queue_capacity: 64,
+            elevated_depth: 64,
+            degrade_depth: 64,
+            shed_depth: 64,
+            max_batch_rows: 8,
+            drr_quantum_rows: 8,
+            est_ticks_per_row: 0,
+            synthetic_ticks_per_row: 0,
+            ..ServeConfig::default()
+        };
+
+        let sctx = ctx.clone().with_tile(TileSize::Edge(24));
+        let mut srv1 = InferenceServer::new(mk_cfg(), sctx.clone(), Arc::new(ManualClock::new()));
+        let t0 = srv1.register_model("bench-0", &wts, k, n).unwrap();
+        let r = bench(&opts, "serve 32 rows 1-tenant (DRR floor, 4x 8-row GEMMs)", flops, || {
+            for _ in 0..rows_total {
+                let sub = srv1.submit(t0, act.clone(), None).unwrap();
+                assert!(matches!(sub, Submission::Admitted { .. }));
+            }
+            srv1.run_until_idle().unwrap();
+            std::hint::black_box(srv1.drain_completions());
+        });
+        sink.push(&r, flops);
+
+        let mut srv4 = InferenceServer::new(mk_cfg(), sctx, Arc::new(ManualClock::new()));
+        let tenants: Vec<usize> = (0..4)
+            .map(|i| srv4.register_model(&format!("bench-{i}"), &wts, k, n).unwrap())
+            .collect();
+        let r = bench(
+            &opts,
+            "serve 32 rows 4-tenant (DRR interleave, 4x 8-row GEMMs)",
+            flops,
+            || {
+                for t in &tenants {
+                    for _ in 0..rows_total / 4 {
+                        let sub = srv4.submit(*t, act.clone(), None).unwrap();
+                        assert!(matches!(sub, Submission::Admitted { .. }));
+                    }
+                }
+                srv4.run_until_idle().unwrap();
+                std::hint::black_box(srv4.drain_completions());
+            },
+        );
+        sink.push(&r, flops);
+    }
+
     header("wide weight storage: narrow_view (16 -> 8 bits, repacking)");
     let wctx = ctx.clone().with_tile(TileSize::Edge(24));
     let w = wctx.quantize(&randv(512 * 512, 5), 512, 512, 16, &mut Rounding::NearestEven).unwrap();

@@ -207,6 +207,45 @@ impl LatencyHistogram {
     }
 }
 
+/// Per-tenant (per resident model) serving counters: the fairness view.
+/// The scheduler *enforces* fair share; this makes it observable — one
+/// section per model in `metrics_json()`, each with its own latency
+/// percentiles, so a flooding tenant's queueing shows up in *its* p99,
+/// not its neighbours'.
+#[derive(Debug, Default, Clone, PartialEq, Eq)]
+pub struct ModelMetrics {
+    pub name: String,
+    /// Registered DRR share weight.
+    pub share: u32,
+    pub admitted: u64,
+    pub served: u64,
+    /// Served at the narrow width (subset of `served`).
+    pub degraded: u64,
+    /// All expiry kinds (dequeue + completion + drain force-expiry).
+    pub expired: u64,
+    pub failed: u64,
+    /// Submissions refused because this model's breaker was open.
+    pub quarantined: u64,
+    /// End-to-end latency of this tenant's served requests.
+    pub latency: LatencyHistogram,
+}
+
+impl ModelMetrics {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::Str(self.name.clone())),
+            ("share", Json::num(self.share as f64)),
+            ("admitted", Json::num(self.admitted as f64)),
+            ("served", Json::num(self.served as f64)),
+            ("degraded", Json::num(self.degraded as f64)),
+            ("expired", Json::num(self.expired as f64)),
+            ("failed", Json::num(self.failed as f64)),
+            ("quarantined", Json::num(self.quarantined as f64)),
+            ("latency", self.latency.to_json()),
+        ])
+    }
+}
+
 /// Counters of the serving front-end (`crate::serve`), aggregated per
 /// server. Everything is a plain integer or a [`LatencyHistogram`], so a
 /// whole-run metrics comparison (the overload-soak determinism check) is
@@ -219,9 +258,15 @@ pub struct ServeMetrics {
     pub rejected_queue_full: u64,
     pub rejected_overloaded: u64,
     pub rejected_shedding: u64,
+    /// Submissions refused by an open per-tenant circuit breaker.
+    pub rejected_quarantined: u64,
+    /// Submissions refused because the server is draining or stopped.
+    pub rejected_draining: u64,
     /// Deadline expiries: caught before the GEMM vs after it.
     pub expired_at_dequeue: u64,
     pub expired_at_completion: u64,
+    /// Admitted work force-expired at the drain deadline.
+    pub expired_at_drain: u64,
     /// Requests answered (including degraded ones).
     pub completed: u64,
     /// Completed responses served at the degraded width class.
@@ -239,10 +284,18 @@ pub struct ServeMetrics {
     pub gemm_retries: u64,
     /// Batches that fell back to per-row execution.
     pub split_fallbacks: u64,
-    /// High-water mark of the request queue.
+    /// High-water mark of the request queue (sum across tenants).
     pub max_queue_depth: u64,
+    /// Circuit-breaker lifecycle events across all tenants.
+    pub breaker_trips: u64,
+    pub breaker_recoveries: u64,
+    /// Hot weight reloads: generations swapped vs rolled back.
+    pub reloads: u64,
+    pub reload_rollbacks: u64,
     /// End-to-end latency of completed requests (submit → response).
     pub latency: LatencyHistogram,
+    /// Per-tenant sections, indexed by model id.
+    pub models: Vec<ModelMetrics>,
 }
 
 impl ServeMetrics {
@@ -253,7 +306,11 @@ impl ServeMetrics {
 
     /// All rejections regardless of cause.
     pub fn rejected_total(&self) -> u64 {
-        self.rejected_queue_full + self.rejected_overloaded + self.rejected_shedding
+        self.rejected_queue_full
+            + self.rejected_overloaded
+            + self.rejected_shedding
+            + self.rejected_quarantined
+            + self.rejected_draining
     }
 
     pub fn to_json(&self) -> Json {
@@ -262,8 +319,11 @@ impl ServeMetrics {
             ("rejected_queue_full", Json::num(self.rejected_queue_full as f64)),
             ("rejected_overloaded", Json::num(self.rejected_overloaded as f64)),
             ("rejected_shedding", Json::num(self.rejected_shedding as f64)),
+            ("rejected_quarantined", Json::num(self.rejected_quarantined as f64)),
+            ("rejected_draining", Json::num(self.rejected_draining as f64)),
             ("expired_at_dequeue", Json::num(self.expired_at_dequeue as f64)),
             ("expired_at_completion", Json::num(self.expired_at_completion as f64)),
+            ("expired_at_drain", Json::num(self.expired_at_drain as f64)),
             ("completed", Json::num(self.completed as f64)),
             ("degraded_served", Json::num(self.degraded_served as f64)),
             ("failed", Json::num(self.failed as f64)),
@@ -274,7 +334,12 @@ impl ServeMetrics {
             ("gemm_retries", Json::num(self.gemm_retries as f64)),
             ("split_fallbacks", Json::num(self.split_fallbacks as f64)),
             ("max_queue_depth", Json::num(self.max_queue_depth as f64)),
+            ("breaker_trips", Json::num(self.breaker_trips as f64)),
+            ("breaker_recoveries", Json::num(self.breaker_recoveries as f64)),
+            ("reloads", Json::num(self.reloads as f64)),
+            ("reload_rollbacks", Json::num(self.reload_rollbacks as f64)),
             ("latency", self.latency.to_json()),
+            ("models", Json::Arr(self.models.iter().map(|m| m.to_json()).collect())),
         ])
     }
 
@@ -291,8 +356,11 @@ impl ServeMetrics {
             ("rejected_queue_full", self.rejected_queue_full),
             ("rejected_overloaded", self.rejected_overloaded),
             ("rejected_shedding", self.rejected_shedding),
+            ("rejected_quarantined", self.rejected_quarantined),
+            ("rejected_draining", self.rejected_draining),
             ("expired_at_dequeue", self.expired_at_dequeue),
             ("expired_at_completion", self.expired_at_completion),
+            ("expired_at_drain", self.expired_at_drain),
             ("completed", self.completed),
             ("degraded_served", self.degraded_served),
             ("failed", self.failed),
@@ -303,6 +371,10 @@ impl ServeMetrics {
             ("gemm_retries", self.gemm_retries),
             ("split_fallbacks", self.split_fallbacks),
             ("max_queue_depth", self.max_queue_depth),
+            ("breaker_trips", self.breaker_trips),
+            ("breaker_recoveries", self.breaker_recoveries),
+            ("reloads", self.reloads),
+            ("reload_rollbacks", self.reload_rollbacks),
             ("latency_count", self.latency.count()),
             ("latency_p50", self.latency.p50()),
             ("latency_p95", self.latency.p95()),
@@ -310,6 +382,19 @@ impl ServeMetrics {
             ("latency_max", self.latency.max()),
         ] {
             writeln!(f, "{name},{v}")?;
+        }
+        for m in &self.models {
+            for (suffix, v) in [
+                ("admitted", m.admitted),
+                ("served", m.served),
+                ("degraded", m.degraded),
+                ("expired", m.expired),
+                ("failed", m.failed),
+                ("quarantined", m.quarantined),
+                ("latency_p99", m.latency.p99()),
+            ] {
+                writeln!(f, "model.{}.{suffix},{v}", m.name)?;
+            }
         }
         Ok(())
     }
@@ -602,17 +687,33 @@ mod tests {
         m.note_depth(7);
         m.note_depth(3);
         m.latency.record(50);
-        assert_eq!(m.rejected_total(), 3);
+        m.rejected_quarantined = 2;
+        m.rejected_draining = 1;
+        m.models.push(ModelMetrics {
+            name: "tenant-a".into(),
+            share: 3,
+            admitted: 6,
+            served: 5,
+            quarantined: 2,
+            ..Default::default()
+        });
+        assert_eq!(m.rejected_total(), 6);
         assert_eq!(m.max_queue_depth, 7);
         let j = m.to_json();
         assert_eq!(j.get("admitted").unwrap().as_i64().unwrap(), 10);
         assert_eq!(j.get("degraded_served").unwrap().as_i64().unwrap(), 4);
         assert_eq!(j.get("latency").unwrap().get("count").unwrap().as_i64().unwrap(), 1);
+        let models = j.get("models").unwrap().as_arr().unwrap();
+        assert_eq!(models.len(), 1);
+        assert_eq!(models[0].get("name").unwrap().as_str().unwrap(), "tenant-a");
+        assert_eq!(models[0].get("share").unwrap().as_i64().unwrap(), 3);
+        assert_eq!(models[0].get("quarantined").unwrap().as_i64().unwrap(), 2);
         let p = std::env::temp_dir().join("hbfp_serve_metrics_test.csv");
         m.write_csv(&p).unwrap();
         let s = std::fs::read_to_string(&p).unwrap();
         assert!(s.starts_with("counter,value"));
         assert!(s.contains("admitted,10") && s.contains("latency_count,1"), "{s}");
+        assert!(s.contains("model.tenant-a.served,5"), "per-model CSV rows: {s}");
         // equality is the whole-run determinism check
         assert_eq!(m, m.clone());
         assert_ne!(m, ServeMetrics::default());

@@ -16,12 +16,19 @@ use std::fmt;
 /// as backpressure — every variant means "not queued, try later or never".
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Rejected {
-    /// The bounded queue is at hard capacity.
+    /// The tenant's bounded queue is at hard capacity.
     QueueFull,
     /// Backlog estimate says the deadline would expire before service.
     Overloaded,
     /// Load-shed watermark reached; request refused to protect the rest.
     Shedding,
+    /// The target model's circuit breaker is open (repeated failures
+    /// attributed to it); it is quarantined until its half-open probes
+    /// prove it healthy again ([`super::breaker`]).
+    Quarantined,
+    /// The server is draining (or stopped): admission is closed for good,
+    /// only already-admitted work is still being pumped.
+    Draining,
 }
 
 impl Rejected {
@@ -30,6 +37,8 @@ impl Rejected {
             Rejected::QueueFull => "queue-full",
             Rejected::Overloaded => "overloaded",
             Rejected::Shedding => "shedding",
+            Rejected::Quarantined => "quarantined",
+            Rejected::Draining => "draining",
         }
     }
 }
@@ -62,7 +71,9 @@ impl Pressure {
     }
 }
 
-/// The watermark ladder, resolved once from the server config.
+/// The watermark ladder, resolved once from the server config. Under
+/// multi-tenancy the ladder is applied to the *target tenant's* queue
+/// depth — one tenant's backlog never sheds another tenant's requests.
 /// Invariant (enforced by config normalization):
 /// `elevated_depth <= degrade_depth <= shed_depth <= capacity`.
 #[derive(Debug, Clone, Copy)]
@@ -152,6 +163,8 @@ mod tests {
         assert_eq!(Rejected::QueueFull.name(), "queue-full");
         assert_eq!(Rejected::Overloaded.to_string(), "overloaded");
         assert_eq!(Rejected::Shedding.name(), "shedding");
+        assert_eq!(Rejected::Quarantined.name(), "quarantined");
+        assert_eq!(Rejected::Draining.to_string(), "draining");
         assert_eq!(Pressure::Degraded.name(), "degraded");
     }
 }

@@ -1,0 +1,303 @@
+//! Per-tenant circuit breakers: quarantine a misbehaving resident model
+//! instead of burning pool dispatches on it.
+//!
+//! Each resident model owns one [`CircuitBreaker`], a
+//! Closed → Open → HalfProbe state machine driven entirely by the
+//! injectable [`super::clock::ServeClock`], so trips, cooldowns, and
+//! half-open probes replay bit-identically under `ManualClock`:
+//!
+//! - **Closed**: requests flow. Guard errors, contained worker panics,
+//!   and expiry bursts attributable to the model count as failures;
+//!   any served row resets the consecutive-failure counter.
+//! - **Open**: `failure_threshold` consecutive failures trip the
+//!   breaker. Admission refuses the tenant with
+//!   [`super::admission::Rejected::Quarantined`] and dispatch skips its
+//!   queue until `cooldown_ticks` have elapsed.
+//! - **HalfProbe**: after the cooldown, up to `half_open_probes`
+//!   requests are admitted as probes. `half_open_probes` consecutive
+//!   probe successes close the breaker; any probe failure re-opens it
+//!   for a fresh cooldown.
+//!
+//! The breaker deliberately does *not* distinguish why a model fails —
+//! poisoned weights, a deterministic panic in its panel, NaN-dense
+//! inputs from one client — because from the scheduler's seat they all
+//! read the same: dispatches to this tenant keep dying. What it must
+//! never do is trip on somebody else's failures, which is why every
+//! settlement call is keyed by model index in the server.
+
+/// Thresholds for one tenant's breaker. `Default` matches the serve
+/// soak configuration documented in PERF.md.
+#[derive(Debug, Clone, Copy)]
+pub struct BreakerConfig {
+    /// Consecutive failures (guard errors, contained panics, expiry
+    /// bursts) that trip Closed -> Open.
+    pub failure_threshold: u32,
+    /// Ticks to hold Open before probing (same unit as `ServeClock`).
+    pub cooldown_ticks: u64,
+    /// Probe successes required to close from HalfProbe; also the cap
+    /// on concurrently admitted probes.
+    pub half_open_probes: u32,
+    /// A single pump that expires at least this many of the tenant's
+    /// requests counts as one failure (expiry burst), even though no
+    /// individual request "failed".
+    pub expiry_burst: usize,
+}
+
+impl Default for BreakerConfig {
+    fn default() -> BreakerConfig {
+        BreakerConfig {
+            failure_threshold: 8,
+            cooldown_ticks: 10_000,
+            half_open_probes: 2,
+            expiry_burst: 4,
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BreakerState {
+    Closed,
+    /// Quarantined until the clock reaches `until`.
+    Open { until: u64 },
+    /// Cooled down; admitting up to the probe cap.
+    HalfProbe { in_flight: u32, successes: u32 },
+}
+
+impl BreakerState {
+    pub fn name(&self) -> &'static str {
+        match self {
+            BreakerState::Closed => "closed",
+            BreakerState::Open { .. } => "open",
+            BreakerState::HalfProbe { .. } => "half-open",
+        }
+    }
+}
+
+/// One resident model's breaker.
+#[derive(Debug)]
+pub struct CircuitBreaker {
+    cfg: BreakerConfig,
+    state: BreakerState,
+    consecutive_failures: u32,
+    trips: u64,
+    recoveries: u64,
+}
+
+impl CircuitBreaker {
+    pub fn new(cfg: BreakerConfig) -> CircuitBreaker {
+        CircuitBreaker {
+            cfg: BreakerConfig {
+                failure_threshold: cfg.failure_threshold.max(1),
+                cooldown_ticks: cfg.cooldown_ticks.max(1),
+                half_open_probes: cfg.half_open_probes.max(1),
+                expiry_burst: cfg.expiry_burst.max(1),
+            },
+            state: BreakerState::Closed,
+            consecutive_failures: 0,
+            trips: 0,
+            recoveries: 0,
+        }
+    }
+
+    pub fn state(&self) -> BreakerState {
+        self.state
+    }
+
+    pub fn trips(&self) -> u64 {
+        self.trips
+    }
+
+    pub fn recoveries(&self) -> u64 {
+        self.recoveries
+    }
+
+    pub fn config(&self) -> BreakerConfig {
+        self.cfg
+    }
+
+    /// Admission-side gate: may a new request for this tenant enter the
+    /// queue at `now`? Transitions Open -> HalfProbe when the cooldown
+    /// has elapsed; in HalfProbe, admits only up to the probe cap and
+    /// reserves a probe slot for each admitted request. Call this *last*
+    /// in the admission chain so rejected submissions never leak a slot.
+    pub fn admit(&mut self, now: u64) -> bool {
+        match self.state {
+            BreakerState::Closed => true,
+            BreakerState::Open { until } => {
+                if now < until {
+                    false
+                } else {
+                    self.state = BreakerState::HalfProbe { in_flight: 1, successes: 0 };
+                    true
+                }
+            }
+            BreakerState::HalfProbe { in_flight, successes } => {
+                if in_flight >= self.cfg.half_open_probes {
+                    false
+                } else {
+                    self.state = BreakerState::HalfProbe { in_flight: in_flight + 1, successes };
+                    true
+                }
+            }
+        }
+    }
+
+    /// Dispatch-side gate: should the scheduler skip this tenant's queue
+    /// at `now`? Open (and still cooling) means yes. HalfProbe work that
+    /// was admitted must be allowed to run, so it does not block.
+    pub fn blocks_dispatch(&self, now: u64) -> bool {
+        matches!(self.state, BreakerState::Open { until } if now < until)
+    }
+
+    /// A request for this tenant was served. Returns `true` when this
+    /// closes the breaker (a recovery).
+    pub fn record_success(&mut self) -> bool {
+        self.consecutive_failures = 0;
+        if let BreakerState::HalfProbe { in_flight, successes } = self.state {
+            let successes = successes + 1;
+            if successes >= self.cfg.half_open_probes {
+                self.state = BreakerState::Closed;
+                self.recoveries += 1;
+                return true;
+            }
+            self.state = BreakerState::HalfProbe { in_flight: in_flight.saturating_sub(1), successes };
+        }
+        false
+    }
+
+    /// A request for this tenant failed (guard error or contained
+    /// panic), or an expiry burst was charged. Returns `true` when this
+    /// trips the breaker Closed/HalfProbe -> Open.
+    pub fn record_failure(&mut self, now: u64) -> bool {
+        match self.state {
+            BreakerState::Open { .. } => false,
+            BreakerState::HalfProbe { .. } => {
+                // One failed probe is enough: back to quarantine.
+                self.trip(now);
+                true
+            }
+            BreakerState::Closed => {
+                self.consecutive_failures += 1;
+                if self.consecutive_failures >= self.cfg.failure_threshold {
+                    self.trip(now);
+                    true
+                } else {
+                    false
+                }
+            }
+        }
+    }
+
+    /// An admitted probe expired in queue (neither success nor model
+    /// failure): release its slot without judging the model.
+    pub fn probe_expired(&mut self) {
+        if let BreakerState::HalfProbe { in_flight, successes } = self.state {
+            self.state = BreakerState::HalfProbe { in_flight: in_flight.saturating_sub(1), successes };
+        }
+    }
+
+    /// Does a pump that expired `count` of this tenant's queued requests
+    /// constitute an expiry burst (chargeable as one failure)?
+    pub fn is_expiry_burst(&self, count: usize) -> bool {
+        count >= self.cfg.expiry_burst
+    }
+
+    fn trip(&mut self, now: u64) {
+        self.state = BreakerState::Open { until: now.saturating_add(self.cfg.cooldown_ticks) };
+        self.consecutive_failures = 0;
+        self.trips += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> BreakerConfig {
+        BreakerConfig {
+            failure_threshold: 3,
+            cooldown_ticks: 100,
+            half_open_probes: 2,
+            expiry_burst: 4,
+        }
+    }
+
+    #[test]
+    fn trips_after_consecutive_failures_only() {
+        let mut b = CircuitBreaker::new(cfg());
+        assert!(!b.record_failure(0));
+        assert!(!b.record_failure(0));
+        // a success resets the streak
+        b.record_success();
+        assert!(!b.record_failure(10));
+        assert!(!b.record_failure(10));
+        assert!(b.record_failure(10), "third consecutive failure trips");
+        assert_eq!(b.state().name(), "open");
+        assert_eq!(b.trips(), 1);
+    }
+
+    #[test]
+    fn open_refuses_admission_and_blocks_dispatch_until_cooldown() {
+        let mut b = CircuitBreaker::new(cfg());
+        for _ in 0..3 {
+            b.record_failure(50);
+        }
+        assert_eq!(b.state(), BreakerState::Open { until: 150 });
+        assert!(!b.admit(149));
+        assert!(b.blocks_dispatch(149));
+        // cooldown elapsed: first admission becomes a probe
+        assert!(b.admit(150));
+        assert_eq!(b.state(), BreakerState::HalfProbe { in_flight: 1, successes: 0 });
+        assert!(!b.blocks_dispatch(150), "admitted probes must be dispatchable");
+    }
+
+    #[test]
+    fn half_open_caps_probes_and_recovers_on_successes() {
+        let mut b = CircuitBreaker::new(cfg());
+        for _ in 0..3 {
+            b.record_failure(0);
+        }
+        assert!(b.admit(100));
+        assert!(b.admit(100));
+        assert!(!b.admit(100), "probe cap of 2 reached");
+        assert!(!b.record_success(), "first probe success is not yet recovery");
+        assert!(b.admit(100), "slot released by the settled probe");
+        assert!(b.record_success(), "second success closes the breaker");
+        assert_eq!(b.state(), BreakerState::Closed);
+        assert_eq!(b.recoveries(), 1);
+    }
+
+    #[test]
+    fn failed_probe_reopens_with_fresh_cooldown() {
+        let mut b = CircuitBreaker::new(cfg());
+        for _ in 0..3 {
+            b.record_failure(0);
+        }
+        assert!(b.admit(100));
+        assert!(b.record_failure(120), "one failed probe re-trips");
+        assert_eq!(b.state(), BreakerState::Open { until: 220 });
+        assert_eq!(b.trips(), 2);
+    }
+
+    #[test]
+    fn expired_probe_releases_slot_without_judging() {
+        let mut b = CircuitBreaker::new(cfg());
+        for _ in 0..3 {
+            b.record_failure(0);
+        }
+        assert!(b.admit(100));
+        assert!(b.admit(100));
+        assert!(!b.admit(100));
+        b.probe_expired();
+        assert_eq!(b.state(), BreakerState::HalfProbe { in_flight: 1, successes: 0 });
+        assert!(b.admit(100), "expired probe freed a slot");
+        assert_eq!(b.trips(), 1, "expiry did not re-trip");
+    }
+
+    #[test]
+    fn expiry_burst_threshold_is_config_driven() {
+        let b = CircuitBreaker::new(cfg());
+        assert!(!b.is_expiry_burst(3));
+        assert!(b.is_expiry_burst(4));
+    }
+}

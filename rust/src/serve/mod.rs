@@ -1,18 +1,22 @@
-//! Resilient inference front-end over the BFP datapath.
+//! Resilient multi-tenant inference front-end over the BFP datapath.
 //!
 //! A synchronous-core serving layer: callers [`InferenceServer::submit`]
 //! single activation rows against models whose weights live resident in
 //! quantized + packed form ([`session`]); a drive loop calls
-//! [`InferenceServer::pump`], which coalesces requests into skinny
-//! micro-batch GEMMs ([`batcher`]) executed through the shape-keyed
-//! [`crate::bfp::PlanCache`] on the worker pool.
+//! [`InferenceServer::pump`], which takes one fair-share scheduler turn
+//! ([`scheduler`]) and executes that tenant's micro-batch as a skinny
+//! GEMM through the shape-keyed [`crate::bfp::PlanCache`] on the worker
+//! pool.
 //!
 //! The robustness contract:
 //!
-//! - **Admission control & backpressure** ([`admission`]): a bounded
-//!   queue ([`queue`]) behind a watermark ladder — callers get a typed
-//!   [`Rejected`] reason or a [`Pressure`] signal, never an unbounded
-//!   buffer.
+//! - **Admission control & backpressure** ([`admission`]): per-tenant
+//!   bounded queues ([`queue`]) behind a watermark ladder — callers get
+//!   a typed [`Rejected`] reason or a [`Pressure`] signal, never an
+//!   unbounded buffer.
+//! - **Fair share** ([`scheduler`]): deficit round robin weighted by
+//!   registered share bounds how long any backlogged tenant can wait —
+//!   a flooding tenant cannot push its neighbours past their deadlines.
 //! - **Deadlines**: enforced at dequeue (dead work never costs a GEMM)
 //!   and at completion (late answers are reported expired, not served).
 //! - **Graceful precision degradation**: the ladder's last rung before
@@ -20,24 +24,35 @@
 //!   pre-built at model load), and every degraded response says so.
 //! - **Fault isolation**: a poisoned input or a contained worker panic
 //!   fails only its own request; batch-mates are redispatched or split
-//!   into per-row GEMMs.
+//!   into per-row GEMMs. Failures that keep hitting one resident model
+//!   trip its circuit breaker ([`breaker`]) and quarantine it behind
+//!   [`Rejected::Quarantined`] until half-open probes clear it.
+//! - **Lifecycle** ([`server`]): hot weight reload swaps validated
+//!   generations without dropping in-flight work, and
+//!   `Running -> Draining -> Stopped` shuts the server down with every
+//!   admitted request accounted exactly once.
 //!
 //! Time is abstracted behind [`ServeClock`] ([`clock`]) so the overload
-//! soak tests replay deterministically on a [`ManualClock`].
+//! and lifecycle soak tests replay deterministically on a
+//! [`ManualClock`].
 
 pub mod admission;
 pub mod batcher;
+pub mod breaker;
 pub mod clock;
 pub mod queue;
+pub mod scheduler;
 pub mod server;
 pub mod session;
 
 pub use admission::{AdmissionPolicy, Pressure, Rejected};
 pub use batcher::{next_batch, MicroBatch};
+pub use breaker::{BreakerConfig, BreakerState, CircuitBreaker};
 pub use clock::{ManualClock, ServeClock, SystemClock};
 pub use queue::{BoundedQueue, QueuedRequest};
+pub use scheduler::FairScheduler;
 pub use server::{
-    BatchReport, Completion, ExpiredAt, InferenceServer, Outcome, PumpReport, Response,
-    ServeConfig, Submission,
+    BatchReport, Completion, DrainReport, ExpiredAt, InferenceServer, Lifecycle, Outcome,
+    PumpReport, ReloadError, ReloadReport, Response, ServeConfig, Submission,
 };
 pub use session::ResidentModel;

@@ -5,6 +5,13 @@
 //! [`super::admission`] honest. Deadline expiry is enforced here at
 //! dequeue time: [`BoundedQueue::drain_expired`] removes work that is
 //! already dead so it never costs a GEMM.
+//!
+//! The queue tracks the earliest deadline it holds, so the idle pump
+//! path (`drain_expired` with nothing expired — by far the common case)
+//! is one comparison and **zero allocations** instead of a full
+//! drain-and-rebuild. The tracked bound is maintained exactly on push
+//! and on the expiry rebuild, and conservatively (it may go stale *low*,
+//! never high) on dequeue, so an expiry can never be missed.
 
 use std::collections::VecDeque;
 
@@ -32,12 +39,18 @@ impl QueuedRequest {
 pub struct BoundedQueue {
     items: VecDeque<QueuedRequest>,
     capacity: usize,
+    /// Lower bound on the minimum deadline held; `u64::MAX` when empty.
+    earliest_deadline: u64,
 }
 
 impl BoundedQueue {
     pub fn new(capacity: usize) -> BoundedQueue {
         let capacity = capacity.max(1);
-        BoundedQueue { items: VecDeque::with_capacity(capacity), capacity }
+        BoundedQueue {
+            items: VecDeque::with_capacity(capacity),
+            capacity,
+            earliest_deadline: u64::MAX,
+        }
     }
 
     pub fn depth(&self) -> usize {
@@ -61,6 +74,7 @@ impl BoundedQueue {
         if self.is_full() {
             return Err(r);
         }
+        self.earliest_deadline = self.earliest_deadline.min(r.deadline);
         self.items.push_back(r);
         Ok(())
     }
@@ -72,19 +86,49 @@ impl BoundedQueue {
 
     /// Remove and return every request whose deadline has already passed,
     /// wherever it sits in the queue, preserving FIFO order among both
-    /// the removed and the survivors.
+    /// the removed and the survivors. When the tracked earliest deadline
+    /// says nothing can have expired, this returns an empty vec without
+    /// touching (or allocating) anything.
     pub fn drain_expired(&mut self, now: u64) -> Vec<QueuedRequest> {
+        if now <= self.earliest_deadline {
+            // Nothing held can be expired: `expired` is `now > deadline`
+            // and every deadline is >= the tracked bound.
+            return Vec::new();
+        }
         let mut expired = Vec::new();
         let mut keep = VecDeque::with_capacity(self.items.len());
+        let mut earliest = u64::MAX;
         for r in self.items.drain(..) {
             if r.expired(now) {
                 expired.push(r);
             } else {
+                earliest = earliest.min(r.deadline);
                 keep.push_back(r);
             }
         }
         self.items = keep;
+        self.earliest_deadline = earliest;
         expired
+    }
+
+    /// Dequeue up to `max_rows` requests from the front, preserving FIFO
+    /// order (the per-model queue case: every resident is the same model).
+    pub fn take_front(&mut self, max_rows: usize) -> Vec<QueuedRequest> {
+        let take = max_rows.min(self.items.len());
+        let taken: Vec<QueuedRequest> = self.items.drain(..take).collect();
+        if self.items.is_empty() {
+            self.earliest_deadline = u64::MAX;
+        }
+        // Otherwise the tracked bound may now be stale *low* — safe: a
+        // too-low bound only costs one unnecessary scan, never a missed
+        // expiry.
+        taken
+    }
+
+    /// Remove every remaining request (drain/quarantine flush paths).
+    pub fn drain_all(&mut self) -> Vec<QueuedRequest> {
+        self.earliest_deadline = u64::MAX;
+        self.items.drain(..).collect()
     }
 
     /// Dequeue up to `max_rows` requests for `model`, preserving FIFO
@@ -100,6 +144,9 @@ impl BoundedQueue {
             }
         }
         self.items = keep;
+        if self.items.is_empty() {
+            self.earliest_deadline = u64::MAX;
+        }
         taken
     }
 }
@@ -135,6 +182,54 @@ mod tests {
         assert_eq!(q.front_model(), Some(0));
         let rest: Vec<u64> = q.take_for_model(0, 8).iter().map(|r| r.id).collect();
         assert_eq!(rest, vec![1, 3, 5]);
+    }
+
+    #[test]
+    fn drain_expired_short_circuits_when_nothing_can_be_dead() {
+        let mut q = BoundedQueue::new(8);
+        q.push(req(1, 0, 100)).unwrap();
+        q.push(req(2, 0, u64::MAX)).unwrap();
+        // now == earliest deadline: `expired` is strict, so nothing dead
+        assert!(q.drain_expired(100).is_empty());
+        assert_eq!(q.depth(), 2);
+        // past the bound: the real scan runs and finds the dead request
+        let dead: Vec<u64> = q.drain_expired(101).iter().map(|r| r.id).collect();
+        assert_eq!(dead, vec![1]);
+        // the bound was recomputed by the rebuild: now u64::MAX, so any
+        // finite clock short-circuits
+        assert!(q.drain_expired(u64::MAX - 1).is_empty());
+        assert_eq!(q.depth(), 1);
+    }
+
+    #[test]
+    fn deadline_bound_survives_dequeue_staleness() {
+        let mut q = BoundedQueue::new(8);
+        q.push(req(1, 0, 10)).unwrap();
+        q.push(req(2, 0, 500)).unwrap();
+        // taking the earliest-deadline holder leaves the bound stale low —
+        // which must still *detect* the remaining expiry, just via a scan
+        let t = q.take_front(1);
+        assert_eq!(t[0].id, 1);
+        let dead: Vec<u64> = q.drain_expired(501).iter().map(|r| r.id).collect();
+        assert_eq!(dead, vec![2]);
+        assert!(q.is_empty());
+        // empty queue resets the bound: pushes re-establish it exactly
+        q.push(req(3, 0, 42)).unwrap();
+        assert!(q.drain_expired(42).is_empty());
+        assert_eq!(q.drain_expired(43).len(), 1);
+    }
+
+    #[test]
+    fn take_front_is_fifo_and_capped() {
+        let mut q = BoundedQueue::new(8);
+        for id in 1..=5u64 {
+            q.push(req(id, 3, u64::MAX)).unwrap();
+        }
+        let a: Vec<u64> = q.take_front(2).iter().map(|r| r.id).collect();
+        assert_eq!(a, vec![1, 2]);
+        let b: Vec<u64> = q.take_front(10).iter().map(|r| r.id).collect();
+        assert_eq!(b, vec![3, 4, 5]);
+        assert!(q.take_front(1).is_empty());
     }
 
     #[test]

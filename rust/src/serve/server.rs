@@ -1,9 +1,11 @@
-//! The synchronous-core inference server.
+//! The synchronous-core multi-tenant inference server.
 //!
-//! `submit` runs admission control and enqueues; `pump` forms one
-//! micro-batch, enforces deadlines at dequeue and again at completion,
-//! executes the skinny GEMM against resident packed weights through the
-//! shape-keyed plan cache, and contains every per-request hazard:
+//! `submit` runs admission control and enqueues into the target tenant's
+//! own bounded queue; `pump` takes one deficit-round-robin scheduler turn
+//! ([`super::scheduler`]), enforces deadlines at dequeue and again at
+//! completion, executes the skinny GEMM against resident packed weights
+//! through the shape-keyed plan cache, and contains every per-request
+//! hazard:
 //!
 //! - a non-finite activation row (including the `nan-activation` fault
 //!   site) fails *that request only* — the row is scanned and dropped
@@ -13,35 +15,56 @@
 //!   `max_gemm_retries`, then a per-row split fallback so one poisoned
 //!   dispatch cannot take down its batch-mates;
 //! - the `slow-request` fault site stalls a single request's assembly,
-//!   exercising the completion-time deadline check.
+//!   exercising the completion-time deadline check;
+//! - repeated failures attributable to one resident model trip its
+//!   circuit breaker ([`super::breaker`]): its pending queue is flushed,
+//!   new submissions get [`Rejected::Quarantined`], and dispatch skips
+//!   it until deterministic half-open probes prove it healthy again.
+//!
+//! Two lifecycle operations run *off* the serving path:
+//!
+//! - [`InferenceServer::reload_model`] quantizes + panel-packs a weight
+//!   candidate, validates it (finite scan + golden-row bit-check against
+//!   [`crate::bfp::bfp_matmul_naive`] at both serving widths — which is
+//!   what catches the `reload-garble` fault site), and only then
+//!   atomically swaps the model generation; a failed validation rolls
+//!   back to the serving generation with a typed [`ReloadError`].
+//! - [`InferenceServer::begin_drain`] moves `Running -> Draining`:
+//!   admission closes with [`Rejected::Draining`], admitted work keeps
+//!   pumping, and whatever remains at the drain deadline is
+//!   force-expired; [`InferenceServer::run_until_stopped`] then lands in
+//!   `Stopped` with a conservation-checked [`DrainReport`].
 //!
 //! Everything the server does is observable in [`ServeMetrics`]
-//! (latency histogram, queue depth high-water, shed/reject/degrade/retry
-//! counters) plus the numeric [`GuardStats`], both surfaced by
+//! (global + per-tenant counters and latency percentiles, breaker and
+//! reload events) plus the numeric [`GuardStats`], all surfaced by
 //! [`InferenceServer::metrics_json`].
 
+use std::fmt;
 use std::sync::Arc;
 
 use anyhow::{anyhow, Result};
 
 use crate::bfp::stats::scan_nonfinite;
-use crate::bfp::{BfpContext, GuardStats, GuardStatsSnapshot, PlanCache, Rounding};
-use crate::coordinator::metrics::{guard_stats_json, ServeMetrics};
+use crate::bfp::{bfp_matmul_naive, BfpContext, GuardStats, GuardStatsSnapshot, PlanCache, Rounding};
+use crate::coordinator::metrics::{guard_stats_json, ModelMetrics, ServeMetrics};
 use crate::util::fault::{self, FaultSite};
 use crate::util::json::Json;
 use crate::util::pool::catch_pool_panic;
 
 use super::admission::{AdmissionPolicy, Pressure, Rejected};
-use super::batcher;
+use super::breaker::{BreakerConfig, BreakerState, CircuitBreaker};
 use super::clock::ServeClock;
-use super::queue::{BoundedQueue, QueuedRequest};
+use super::queue::QueuedRequest;
+use super::scheduler::FairScheduler;
 use super::session::ResidentModel;
 
 /// Serving knobs. Depth watermarks are normalized at server construction
-/// to `elevated <= degrade <= shed <= capacity`.
+/// to `elevated <= degrade <= shed <= capacity`; under multi-tenancy the
+/// ladder applies to each tenant's *own* queue depth.
 #[derive(Debug, Clone, Copy)]
 pub struct ServeConfig {
-    /// Hard bound on queued requests.
+    /// Hard bound on queued requests, per tenant queue.
     pub queue_capacity: usize,
     /// Depth at which admitted callers are told [`Pressure::Elevated`].
     pub elevated_depth: usize,
@@ -51,6 +74,10 @@ pub struct ServeConfig {
     pub shed_depth: usize,
     /// Micro-batch row cap (the skinny-GEMM m).
     pub max_batch_rows: usize,
+    /// DRR credit granted per unit of share on each scheduler visit.
+    /// With a single tenant and `drr_quantum_rows >= max_batch_rows`
+    /// batching is identical to plain head-of-line coalescing.
+    pub drr_quantum_rows: usize,
     /// Mantissa width for nominal service.
     pub full_bits: u32,
     /// Mantissa width for degraded service (last rung before refusal).
@@ -69,6 +96,8 @@ pub struct ServeConfig {
     /// Whole-batch redispatches after a contained panic before the
     /// per-row split fallback kicks in.
     pub max_gemm_retries: usize,
+    /// Per-tenant circuit-breaker thresholds.
+    pub breaker: BreakerConfig,
 }
 
 impl Default for ServeConfig {
@@ -79,6 +108,7 @@ impl Default for ServeConfig {
             degrade_depth: 32,
             shed_depth: 48,
             max_batch_rows: 8,
+            drr_quantum_rows: 8,
             full_bits: 16,
             degraded_bits: 8,
             default_deadline_ticks: u64::MAX,
@@ -86,6 +116,7 @@ impl Default for ServeConfig {
             synthetic_ticks_per_row: 0,
             slow_request_penalty_ticks: 2_000,
             max_gemm_retries: 2,
+            breaker: BreakerConfig::default(),
         }
     }
 }
@@ -94,10 +125,31 @@ impl ServeConfig {
     fn normalized(mut self) -> ServeConfig {
         self.queue_capacity = self.queue_capacity.max(1);
         self.max_batch_rows = self.max_batch_rows.max(1);
+        self.drr_quantum_rows = self.drr_quantum_rows.max(1);
         self.shed_depth = self.shed_depth.min(self.queue_capacity);
         self.degrade_depth = self.degrade_depth.min(self.shed_depth);
         self.elevated_depth = self.elevated_depth.min(self.degrade_depth);
         self
+    }
+}
+
+/// Server lifecycle: `Running` (admitting) → `Draining` (admission
+/// closed, pumping admitted work toward a deadline) → `Stopped` (queues
+/// empty, nothing will ever run again).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Lifecycle {
+    Running,
+    Draining { deadline: u64 },
+    Stopped,
+}
+
+impl Lifecycle {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Lifecycle::Running => "running",
+            Lifecycle::Draining { .. } => "draining",
+            Lifecycle::Stopped => "stopped",
+        }
     }
 }
 
@@ -129,6 +181,8 @@ pub enum ExpiredAt {
     Dequeue,
     /// Served, but the result arrived after the deadline.
     Completion,
+    /// Force-expired: still queued when the drain deadline landed.
+    DrainDeadline,
 }
 
 /// A successful inference result.
@@ -139,6 +193,8 @@ pub struct Response {
     pub served_bits: u32,
     /// True when the load-shed ladder narrowed this request's precision.
     pub degraded: bool,
+    /// Weight generation that produced this output (bumped by reloads).
+    pub generation: u64,
     pub latency_ticks: u64,
 }
 
@@ -147,8 +203,8 @@ pub struct Response {
 pub enum Outcome {
     Served(Response),
     Expired(ExpiredAt),
-    /// This request failed (bad input or unrecoverable dispatch); its
-    /// batch-mates were unaffected.
+    /// This request failed (bad input, unrecoverable dispatch, or its
+    /// model was quarantined); its batch-mates were unaffected.
     Failed(String),
 }
 
@@ -169,6 +225,8 @@ pub struct BatchReport {
     /// Width this batch was served at.
     pub bits: u32,
     pub degraded: bool,
+    /// Weight generation this batch executed against.
+    pub generation: u64,
     /// Whole-batch redispatches after contained panics.
     pub retries: usize,
     /// True when the batch fell back to per-row GEMMs (outputs are then
@@ -182,6 +240,80 @@ pub struct PumpReport {
     pub expired_at_dequeue: usize,
     /// Rows that terminated as [`Outcome::Failed`] this pump.
     pub failed_rows: usize,
+    /// Requests force-expired because the drain deadline landed.
+    pub force_expired: usize,
+}
+
+impl PumpReport {
+    /// Did this pump settle or serve anything at all?
+    pub fn made_progress(&self) -> bool {
+        self.batch.is_some()
+            || self.expired_at_dequeue > 0
+            || self.failed_rows > 0
+            || self.force_expired > 0
+    }
+}
+
+/// Typed failure of [`InferenceServer::reload_model`]. On any variant the
+/// previous generation keeps serving untouched — a failed reload rolls
+/// back, it never degrades the running model or trips its breaker.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ReloadError {
+    UnknownModel(usize),
+    ShapeMismatch { expected: usize, got: usize },
+    /// The candidate failed validation (non-finite weights, or the
+    /// golden-row bit-check against the naive reference diverged at one
+    /// of the serving widths).
+    Validation(String),
+}
+
+impl fmt::Display for ReloadError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ReloadError::UnknownModel(m) => write!(f, "no model #{m} registered"),
+            ReloadError::ShapeMismatch { expected, got } => {
+                write!(f, "weight shape mismatch: expected {expected} values, got {got}")
+            }
+            ReloadError::Validation(msg) => write!(f, "candidate failed validation: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for ReloadError {}
+
+/// A successful hot reload: the generation swap that happened.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ReloadReport {
+    pub model: usize,
+    pub old_generation: u64,
+    pub new_generation: u64,
+    /// Widths the golden-row bit-check validated (full, degraded).
+    pub validated_widths: (u32, u32),
+}
+
+/// Final accounting from [`InferenceServer::run_until_stopped`]: every
+/// admitted request must be accounted exactly once.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DrainReport {
+    /// Pumps executed between `begin_drain` taking effect and `Stopped`.
+    pub pumps: u64,
+    pub admitted: u64,
+    pub served: u64,
+    /// Deadline expiries (dequeue + completion).
+    pub expired: u64,
+    /// Force-expired at the drain deadline.
+    pub force_expired: u64,
+    pub failed: u64,
+    /// `admitted == served + expired + force_expired + failed` and every
+    /// queue is empty.
+    pub conserved: bool,
+}
+
+/// Breaker settlement event, applied in row order after a batch.
+enum Settle {
+    Success,
+    Failure,
+    ProbeExpired,
 }
 
 /// The serving front-end. Single-threaded control loop over the
@@ -192,8 +324,10 @@ pub struct InferenceServer {
     ctx: BfpContext,
     clock: Arc<dyn ServeClock>,
     policy: AdmissionPolicy,
+    lifecycle: Lifecycle,
     models: Vec<ResidentModel>,
-    queue: BoundedQueue,
+    breakers: Vec<CircuitBreaker>,
+    sched: FairScheduler,
     plans: PlanCache,
     metrics: ServeMetrics,
     guard: GuardStats,
@@ -215,7 +349,8 @@ impl InferenceServer {
         };
         InferenceServer {
             policy,
-            queue: BoundedQueue::new(cfg.queue_capacity),
+            lifecycle: Lifecycle::Running,
+            sched: FairScheduler::new(cfg.queue_capacity, cfg.drr_quantum_rows),
             plans: PlanCache::new(16),
             metrics: ServeMetrics::default(),
             guard: GuardStats::default(),
@@ -224,6 +359,7 @@ impl InferenceServer {
             scratch_a: Vec::new(),
             scratch_out: Vec::new(),
             models: Vec::new(),
+            breakers: Vec::new(),
             cfg,
             ctx,
             clock,
@@ -231,13 +367,28 @@ impl InferenceServer {
     }
 
     /// Quantize + pack `weights` (row-major `k x n`) resident at both
-    /// serving widths; returns the model handle used by `submit`.
+    /// serving widths with DRR share 1; returns the model handle used by
+    /// `submit`.
     pub fn register_model(
         &mut self,
         name: &str,
         weights: &[f32],
         k: usize,
         n: usize,
+    ) -> Result<usize> {
+        self.register_model_with_share(name, weights, k, n, 1)
+    }
+
+    /// `register_model` with an explicit fair-share weight: a tenant with
+    /// share `s` is granted `s * drr_quantum_rows` rows of credit per
+    /// scheduler round.
+    pub fn register_model_with_share(
+        &mut self,
+        name: &str,
+        weights: &[f32],
+        k: usize,
+        n: usize,
+        share: u32,
     ) -> Result<usize> {
         let model = ResidentModel::load(
             &self.ctx,
@@ -249,11 +400,32 @@ impl InferenceServer {
             self.cfg.degraded_bits,
         )?;
         self.models.push(model);
-        Ok(self.models.len() - 1)
+        self.breakers.push(CircuitBreaker::new(self.cfg.breaker));
+        let idx = self.sched.add_tenant(share);
+        debug_assert_eq!(idx, self.models.len() - 1);
+        self.metrics.models.push(ModelMetrics {
+            name: name.to_string(),
+            share: share.max(1),
+            ..ModelMetrics::default()
+        });
+        Ok(idx)
     }
 
     pub fn model(&self, idx: usize) -> Option<&ResidentModel> {
         self.models.get(idx)
+    }
+
+    pub fn breaker_state(&self, idx: usize) -> Option<BreakerState> {
+        self.breakers.get(idx).map(|b| b.state())
+    }
+
+    pub fn lifecycle(&self) -> Lifecycle {
+        self.lifecycle
+    }
+
+    /// Readiness: admitting new work (the health-check bit).
+    pub fn is_ready(&self) -> bool {
+        matches!(self.lifecycle, Lifecycle::Running)
     }
 
     pub fn context(&self) -> &BfpContext {
@@ -264,8 +436,14 @@ impl InferenceServer {
         &self.cfg
     }
 
+    /// Total queued rows across every tenant.
     pub fn queue_depth(&self) -> usize {
-        self.queue.depth()
+        self.sched.total_depth()
+    }
+
+    /// One tenant's queued rows.
+    pub fn model_queue_depth(&self, idx: usize) -> usize {
+        self.sched.depth(idx)
     }
 
     pub fn metrics(&self) -> &ServeMetrics {
@@ -282,8 +460,8 @@ impl InferenceServer {
 
     /// Admission control + enqueue. `deadline_in` is relative ticks from
     /// now (falls back to the config default). An `Err` is a caller bug
-    /// (unknown model, wrong input length); refusal under load is the
-    /// `Ok(Submission::Rejected(_))` backpressure path.
+    /// (unknown model, wrong input length); refusal under load or
+    /// quarantine is the `Ok(Submission::Rejected(_))` backpressure path.
     pub fn submit(
         &mut self,
         model: usize,
@@ -301,27 +479,42 @@ impl InferenceServer {
                 input.len()
             ));
         }
+        if !matches!(self.lifecycle, Lifecycle::Running) {
+            self.metrics.rejected_draining += 1;
+            return Ok(Submission::Rejected(Rejected::Draining));
+        }
         let now = self.clock.now();
         let rel = deadline_in.unwrap_or(self.cfg.default_deadline_ticks);
         let deadline = now.saturating_add(rel);
-        match self.policy.decide(self.queue.depth(), now, deadline) {
+        // The watermark ladder reads the *target tenant's* depth: one
+        // tenant's backlog never sheds another tenant's requests.
+        match self.policy.decide(self.sched.depth(model), now, deadline) {
             Err(rej) => {
                 match rej {
                     Rejected::QueueFull => self.metrics.rejected_queue_full += 1,
                     Rejected::Overloaded => self.metrics.rejected_overloaded += 1,
                     Rejected::Shedding => self.metrics.rejected_shedding += 1,
+                    Rejected::Quarantined | Rejected::Draining => unreachable!("policy ladder"),
                 }
                 Ok(Submission::Rejected(rej))
             }
             Ok(pressure) => {
+                // Breaker gate last, so a request the ladder would have
+                // refused anyway never consumes a half-open probe slot.
+                if !self.breakers[model].admit(now) {
+                    self.metrics.rejected_quarantined += 1;
+                    self.metrics.models[model].quarantined += 1;
+                    return Ok(Submission::Rejected(Rejected::Quarantined));
+                }
                 let id = self.next_id;
                 self.next_id += 1;
                 let req = QueuedRequest { id, model, input, deadline, submitted_at: now };
-                self.queue
+                self.sched
                     .push(req)
                     .map_err(|_| anyhow!("admission passed a full queue (policy bug)"))?;
                 self.metrics.admitted += 1;
-                self.metrics.note_depth(self.queue.depth());
+                self.metrics.models[model].admitted += 1;
+                self.metrics.note_depth(self.sched.total_depth());
                 Ok(Submission::Admitted { id, pressure })
             }
         }
@@ -333,42 +526,350 @@ impl InferenceServer {
         std::mem::take(&mut self.completions)
     }
 
-    /// Pump until the queue is empty, collecting per-batch reports.
+    /// Pump until every queue is empty, collecting per-batch reports.
+    /// When all remaining work belongs to quarantined (cooling) tenants,
+    /// the clock is advanced to the earliest breaker re-probe point so
+    /// the loop provably terminates.
     pub fn run_until_idle(&mut self) -> Result<Vec<PumpReport>> {
         let mut reports = Vec::new();
-        while !self.queue.is_empty() {
-            reports.push(self.pump()?);
+        while !self.sched.is_empty() {
+            let report = self.pump()?;
+            let stalled = !report.made_progress();
+            reports.push(report);
+            if stalled && !self.sched.is_empty() {
+                match self.earliest_unblock() {
+                    Some(at) => {
+                        let now = self.clock.now();
+                        self.clock.advance(at.saturating_sub(now).max(1));
+                    }
+                    None => break, // defensive: nothing dispatchable, nothing cooling
+                }
+            }
         }
         Ok(reports)
     }
 
-    /// One scheduler turn: expire dead work at dequeue, form one
-    /// micro-batch, execute it, and settle every member's outcome.
-    pub fn pump(&mut self) -> Result<PumpReport> {
-        let now = self.clock.now();
-        // Deadline enforcement point 1: already-dead requests are dropped
-        // before they cost a GEMM.
-        let dead = self.queue.drain_expired(now);
-        let expired_at_dequeue = dead.len();
-        for r in dead {
-            self.metrics.expired_at_dequeue += 1;
-            self.completions.push(Completion {
-                id: r.id,
-                model: r.model,
-                outcome: Outcome::Expired(ExpiredAt::Dequeue),
-            });
+    /// Close admission and set the drain deadline (relative ticks from
+    /// now). Idempotent while draining; an error once stopped.
+    pub fn begin_drain(&mut self, deadline_in: u64) -> Result<u64> {
+        match self.lifecycle {
+            Lifecycle::Stopped => Err(anyhow!("server already stopped")),
+            Lifecycle::Draining { deadline } => Ok(deadline),
+            Lifecycle::Running => {
+                let deadline = self.clock.now().saturating_add(deadline_in);
+                self.lifecycle = Lifecycle::Draining { deadline };
+                Ok(deadline)
+            }
+        }
+    }
+
+    /// Pump admitted work to completion or expiry, force-expire whatever
+    /// is still queued when the drain deadline lands, and stop. Requires
+    /// `begin_drain` first. Returns the conservation-checked accounting.
+    pub fn run_until_stopped(&mut self) -> Result<DrainReport> {
+        let Lifecycle::Draining { deadline } = self.lifecycle else {
+            return Err(anyhow!(
+                "run_until_stopped requires begin_drain (lifecycle is {})",
+                self.lifecycle.name()
+            ));
+        };
+        let mut pumps = 0u64;
+        while !self.sched.is_empty() {
+            let report = self.pump()?;
+            pumps += 1;
+            if !report.made_progress() && !self.sched.is_empty() {
+                // Every non-empty tenant is quarantined: march the clock
+                // to the earlier of its re-probe point and the drain
+                // deadline (where force-expiry clears the rest).
+                let now = self.clock.now();
+                let target = self.earliest_unblock().unwrap_or(deadline).min(deadline);
+                self.clock.advance(target.saturating_sub(now).max(1));
+            }
+        }
+        self.lifecycle = Lifecycle::Stopped;
+        let m = &self.metrics;
+        let served = m.completed;
+        let expired = m.expired_at_dequeue + m.expired_at_completion;
+        let force_expired = m.expired_at_drain;
+        let failed = m.failed;
+        Ok(DrainReport {
+            pumps,
+            admitted: m.admitted,
+            served,
+            expired,
+            force_expired,
+            failed,
+            conserved: m.admitted == served + expired + force_expired + failed
+                && self.sched.is_empty(),
+        })
+    }
+
+    /// Hot weight reload: build + validate a candidate **off the serving
+    /// path**, then atomically swap generations. In-flight work is
+    /// untouched (the swap happens between pumps, and already-formed
+    /// batches hold the old tensors); queued requests simply serve on the
+    /// new generation. A failed validation leaves the old generation
+    /// serving and trips nothing.
+    pub fn reload_model(
+        &mut self,
+        model: usize,
+        weights: &[f32],
+    ) -> std::result::Result<ReloadReport, ReloadError> {
+        let old = self.models.get(model).ok_or(ReloadError::UnknownModel(model))?;
+        let (k, n) = (old.k(), old.n());
+        if weights.len() != k * n {
+            return Err(ReloadError::ShapeMismatch { expected: k * n, got: weights.len() });
+        }
+        let name = old.name().to_string();
+        let old_generation = old.generation();
+
+        // The build copy is the unit the `reload-garble` fault corrupts —
+        // standing in for a torn read or bad deserialization on the
+        // reload path. The corruption is finite on purpose: it must be
+        // the golden-row bit-check that catches it, not the NaN guard.
+        let mut build = weights.to_vec();
+        if fault::fire(FaultSite::ReloadGarble) {
+            for x in build.iter_mut().step_by(7) {
+                *x = *x * -1.75 + 0.125;
+            }
         }
 
-        // Degrade decision reads post-expiry depth: the ladder's last
-        // rung before refusal is serving at the narrow width.
-        let depth = self.queue.depth();
-        let degraded =
-            depth >= self.cfg.degrade_depth && self.cfg.degraded_bits < self.cfg.full_bits;
+        // Caller-input sanity: non-finite weights are a validation
+        // failure, not a panic inside quantization.
+        self.guard.record_scan();
+        if let Some(err) = scan_nonfinite(weights, k).error(weights) {
+            self.guard.record_nonfinite();
+            self.metrics.reload_rollbacks += 1;
+            return Err(ReloadError::Validation(format!("non-finite weights: {err}")));
+        }
 
-        let Some(batch) = batcher::next_batch(&mut self.queue, self.cfg.max_batch_rows) else {
-            return Ok(PumpReport { batch: None, expired_at_dequeue, failed_rows: 0 });
+        // Candidate build and validation both dispatch on the worker
+        // pool (quantize, panel packing, the golden-row GEMM), whose
+        // single-lane and re-raise paths unwind the *caller*. A reload
+        // must never crash a serving process, so both are contained: an
+        // injected or real panic here is a validation failure that rolls
+        // back, exactly like a garbled build.
+        let built = catch_pool_panic(|| {
+            ResidentModel::load(
+                &self.ctx,
+                &name,
+                &build,
+                k,
+                n,
+                self.cfg.full_bits,
+                self.cfg.degraded_bits,
+            )
+        });
+        let candidate = match built {
+            Ok(Ok(c)) => c,
+            Ok(Err(e)) => {
+                self.metrics.reload_rollbacks += 1;
+                return Err(ReloadError::Validation(e.to_string()));
+            }
+            Err(p) => {
+                self.metrics.reload_rollbacks += 1;
+                return Err(ReloadError::Validation(format!(
+                    "panic contained during candidate build: {p}"
+                )));
+            }
+        };
+
+        match catch_pool_panic(|| self.validate_candidate(&candidate, weights, k, n)) {
+            Ok(Ok(())) => {}
+            Ok(Err(msg)) => {
+                self.metrics.reload_rollbacks += 1;
+                return Err(ReloadError::Validation(msg));
+            }
+            Err(p) => {
+                self.metrics.reload_rollbacks += 1;
+                return Err(ReloadError::Validation(format!(
+                    "panic contained during candidate validation: {p}"
+                )));
+            }
+        }
+
+        let mut candidate = candidate;
+        candidate.set_generation(old_generation + 1);
+        self.models[model] = candidate;
+        self.metrics.reloads += 1;
+        Ok(ReloadReport {
+            model,
+            old_generation,
+            new_generation: old_generation + 1,
+            validated_widths: (self.cfg.full_bits, self.cfg.degraded_bits),
+        })
+    }
+
+    /// Golden-row validation: quantize the *pristine* caller weights
+    /// through the same path the candidate took, run one probe row
+    /// through the planned datapath against the candidate and through
+    /// `bfp_matmul_naive` against the reference, and demand bitwise
+    /// equality at both serving widths. Any corruption of the candidate's
+    /// build (the `reload-garble` site) diverges the mantissas and fails
+    /// here.
+    fn validate_candidate(
+        &self,
+        candidate: &ResidentModel,
+        pristine: &[f32],
+        k: usize,
+        n: usize,
+    ) -> std::result::Result<(), String> {
+        let golden: Vec<f32> = (0..k).map(|i| ((i % 11) as f32 - 5.0) * 0.3 + 0.05).collect();
+        let reference_full = self
+            .ctx
+            .quantize(pristine, k, n, self.cfg.full_bits, &mut Rounding::NearestEven)
+            .map_err(|e| format!("reference quantization: {e}"))?;
+        let mut widths = vec![(self.cfg.full_bits, None)];
+        if self.cfg.degraded_bits < self.cfg.full_bits {
+            let narrow = reference_full
+                .narrow_view(self.cfg.degraded_bits, &mut Rounding::NearestEven)
+                .map_err(|e| format!("reference narrow view: {e}"))?;
+            widths.push((self.cfg.degraded_bits, Some(narrow)));
+        }
+        for (bits, narrow_ref) in &widths {
+            let bits = *bits;
+            let qa = self
+                .ctx
+                .quantize(&golden, 1, k, bits, &mut Rounding::NearestEven)
+                .map_err(|e| format!("golden-row quantization at {bits}b: {e}"))?;
+            let plan = self
+                .ctx
+                .plan_matmul(1, k, n, (bits, bits))
+                .map_err(|e| format!("golden-row plan at {bits}b: {e}"))?;
+            let got = plan
+                .execute(&qa, candidate.weights_at(bits))
+                .map_err(|e| format!("golden-row execute at {bits}b: {e}"))?;
+            let reference = narrow_ref.as_ref().unwrap_or(&reference_full);
+            let want = bfp_matmul_naive(&qa, reference)
+                .map_err(|e| format!("golden-row reference at {bits}b: {e}"))?;
+            let diverged = got.len() != want.len()
+                || got.iter().zip(&want).any(|(g, w)| g.to_bits() != w.to_bits());
+            if diverged {
+                return Err(format!(
+                    "golden-row bit-check diverged at {bits}b (candidate does not match \
+                     the naive reference built from the submitted weights)"
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    /// Apply one breaker settlement for `model`, handling trip/recovery
+    /// bookkeeping. A trip flushes the tenant's pending queue: its
+    /// requests fail immediately (typed, accounted) instead of rotting
+    /// until their deadlines while dispatch skips the tenant.
+    fn settle_breaker(&mut self, model: usize, event: Settle, now: u64) {
+        match event {
+            Settle::Success => {
+                if self.breakers[model].record_success() {
+                    self.metrics.breaker_recoveries += 1;
+                }
+            }
+            Settle::ProbeExpired => self.breakers[model].probe_expired(),
+            Settle::Failure => {
+                if self.breakers[model].record_failure(now) {
+                    self.metrics.breaker_trips += 1;
+                    for r in self.sched.drain_tenant(model) {
+                        self.metrics.failed += 1;
+                        self.metrics.models[model].failed += 1;
+                        self.completions.push(Completion {
+                            id: r.id,
+                            model,
+                            outcome: Outcome::Failed(
+                                "model quarantined (circuit breaker open)".into(),
+                            ),
+                        });
+                    }
+                }
+            }
+        }
+    }
+
+    /// Earliest tick at which some quarantined tenant with pending work
+    /// becomes dispatchable again; `None` when no such tenant exists.
+    fn earliest_unblock(&self) -> Option<u64> {
+        (0..self.models.len())
+            .filter(|&i| self.sched.depth(i) > 0)
+            .filter_map(|i| match self.breakers[i].state() {
+                BreakerState::Open { until } => Some(until),
+                _ => None,
+            })
+            .min()
+    }
+
+    /// One scheduler turn: expire dead work at dequeue, take one DRR
+    /// micro-batch, execute it, and settle every member's outcome (and
+    /// its tenant's breaker).
+    pub fn pump(&mut self) -> Result<PumpReport> {
+        if matches!(self.lifecycle, Lifecycle::Stopped) {
+            return Ok(PumpReport::default());
+        }
+        let now = self.clock.now();
+        // Deadline enforcement point 1: already-dead requests are dropped
+        // before they cost a GEMM. An expiry *burst* attributable to one
+        // tenant counts against its breaker.
+        let dead = self.sched.drain_expired(now);
+        let expired_at_dequeue = dead.len();
+        if !dead.is_empty() {
+            // (guarded so the idle pump path stays allocation-free)
+            let mut dead_per_model = vec![0usize; self.models.len()];
+            for r in dead {
+                dead_per_model[r.model] += 1;
+                self.metrics.expired_at_dequeue += 1;
+                self.metrics.models[r.model].expired += 1;
+                self.settle_breaker(r.model, Settle::ProbeExpired, now);
+                self.completions.push(Completion {
+                    id: r.id,
+                    model: r.model,
+                    outcome: Outcome::Expired(ExpiredAt::Dequeue),
+                });
+            }
+            for (m, &count) in dead_per_model.iter().enumerate() {
+                if count > 0 && self.breakers[m].is_expiry_burst(count) {
+                    self.settle_breaker(m, Settle::Failure, now);
+                }
+            }
+        }
+
+        // Drain deadline landed: force-expire everything still queued.
+        let mut force_expired = 0usize;
+        if let Lifecycle::Draining { deadline } = self.lifecycle {
+            if now >= deadline {
+                for r in self.sched.drain_all() {
+                    force_expired += 1;
+                    self.metrics.expired_at_drain += 1;
+                    self.metrics.models[r.model].expired += 1;
+                    self.settle_breaker(r.model, Settle::ProbeExpired, now);
+                    self.completions.push(Completion {
+                        id: r.id,
+                        model: r.model,
+                        outcome: Outcome::Expired(ExpiredAt::DrainDeadline),
+                    });
+                }
+            }
+        }
+
+        let breakers = &self.breakers;
+        let Some(batch) = self
+            .sched
+            .next_batch(self.cfg.max_batch_rows, |m| breakers[m].blocks_dispatch(now))
+        else {
+            return Ok(PumpReport {
+                batch: None,
+                expired_at_dequeue,
+                failed_rows: 0,
+                force_expired,
+            });
         };
         let model_idx = batch.model;
+        let generation = self.models[model_idx].generation();
+
+        // Degrade decision reads the *tenant's* post-expiry depth (batch
+        // rows included): the ladder's last rung before refusal is
+        // serving that tenant at the narrow width.
+        let depth = batch.rows() + self.sched.depth(model_idx);
+        let degraded =
+            depth >= self.cfg.degrade_depth && self.cfg.degraded_bits < self.cfg.full_bits;
         let bits = if degraded {
             self.models[model_idx].degraded_bits()
         } else {
@@ -380,6 +881,7 @@ impl InferenceServer {
         // batch at quantization time.
         let mut rows: Vec<QueuedRequest> = Vec::with_capacity(batch.requests.len());
         let mut failed_rows = 0usize;
+        let mut settlements: Vec<Settle> = Vec::with_capacity(batch.requests.len());
         for mut r in batch.requests {
             if fault::fire(FaultSite::SlowRequest) {
                 self.metrics.slow_requests += 1;
@@ -394,7 +896,9 @@ impl InferenceServer {
             if let Some(err) = scan_nonfinite(&r.input, 1).error(&r.input) {
                 self.guard.record_nonfinite();
                 self.metrics.failed += 1;
+                self.metrics.models[r.model].failed += 1;
                 failed_rows += 1;
+                settlements.push(Settle::Failure);
                 self.completions.push(Completion {
                     id: r.id,
                     model: r.model,
@@ -412,12 +916,21 @@ impl InferenceServer {
             ids: rows.iter().map(|r| r.id).collect(),
             bits,
             degraded,
+            generation,
             retries: 0,
             split_fallback: false,
         };
         if m == 0 {
             self.metrics.batches += 1;
-            return Ok(PumpReport { batch: Some(report), expired_at_dequeue, failed_rows });
+            for s in settlements {
+                self.settle_breaker(model_idx, s, now);
+            }
+            return Ok(PumpReport {
+                batch: Some(report),
+                expired_at_dequeue,
+                failed_rows,
+                force_expired,
+            });
         }
 
         self.scratch_a.resize(m * k, 0.0);
@@ -508,7 +1021,9 @@ impl InferenceServer {
         for (i, r) in rows.iter().enumerate() {
             if let Some(msg) = row_failed[i].take() {
                 self.metrics.failed += 1;
+                self.metrics.models[r.model].failed += 1;
                 failed_rows += 1;
+                settlements.push(Settle::Failure);
                 self.completions.push(Completion {
                     id: r.id,
                     model: r.model,
@@ -518,6 +1033,8 @@ impl InferenceServer {
             }
             if r.expired(done) {
                 self.metrics.expired_at_completion += 1;
+                self.metrics.models[r.model].expired += 1;
+                settlements.push(Settle::ProbeExpired);
                 self.completions.push(Completion {
                     id: r.id,
                     model: r.model,
@@ -528,9 +1045,13 @@ impl InferenceServer {
             let latency = done.saturating_sub(r.submitted_at);
             self.metrics.latency.record(latency);
             self.metrics.completed += 1;
+            self.metrics.models[r.model].served += 1;
+            self.metrics.models[r.model].latency.record(latency);
             if degraded {
                 self.metrics.degraded_served += 1;
+                self.metrics.models[r.model].degraded += 1;
             }
+            settlements.push(Settle::Success);
             self.completions.push(Completion {
                 id: r.id,
                 model: r.model,
@@ -538,22 +1059,64 @@ impl InferenceServer {
                     output: self.scratch_out[i * n..(i + 1) * n].to_vec(),
                     served_bits: bits,
                     degraded,
+                    generation,
                     latency_ticks: latency,
                 }),
             });
         }
 
+        // Breaker settlement in row order (streaks are order-sensitive).
+        for s in settlements {
+            self.settle_breaker(model_idx, s, done);
+        }
+
         self.metrics.batches += 1;
         self.metrics.batched_rows += m as u64;
         let report = BatchReport { retries, split_fallback, ..report };
-        Ok(PumpReport { batch: Some(report), expired_at_dequeue, failed_rows })
+        Ok(PumpReport { batch: Some(report), expired_at_dequeue, failed_rows, force_expired })
     }
 
-    /// Full observability dump: serving counters + latency percentiles,
-    /// numeric guard totals, and plan-cache effectiveness.
+    /// Full observability dump: serving counters + latency percentiles
+    /// (global and per-tenant), lifecycle/readiness, per-tenant breaker
+    /// states, numeric guard totals, and plan-cache effectiveness.
     pub fn metrics_json(&self) -> Json {
+        let drain_deadline = match self.lifecycle {
+            Lifecycle::Draining { deadline } => Json::num(deadline as f64),
+            _ => Json::Null,
+        };
+        let breakers = self
+            .breakers
+            .iter()
+            .enumerate()
+            .map(|(i, b)| {
+                Json::obj(vec![
+                    ("model", Json::num(i as f64)),
+                    ("name", Json::str(self.models[i].name())),
+                    ("state", Json::str(b.state().name())),
+                    ("trips", Json::num(b.trips() as f64)),
+                    ("recoveries", Json::num(b.recoveries() as f64)),
+                ])
+            })
+            .collect();
+        let generations = self
+            .models
+            .iter()
+            .map(|m| Json::num(m.generation() as f64))
+            .collect();
         Json::obj(vec![
             ("serve", self.metrics.to_json()),
+            (
+                "lifecycle",
+                Json::obj(vec![
+                    ("state", Json::str(self.lifecycle.name())),
+                    ("ready", Json::Bool(self.is_ready())),
+                    ("drain_deadline", drain_deadline),
+                    ("queue_depth", Json::num(self.sched.total_depth() as f64)),
+                    ("models_resident", Json::num(self.models.len() as f64)),
+                    ("generations", Json::Arr(generations)),
+                ]),
+            ),
+            ("breakers", Json::Arr(breakers)),
             ("guard_stats", guard_stats_json(&self.guard.snapshot())),
             (
                 "plan_cache",
@@ -571,8 +1134,9 @@ impl InferenceServer {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::bfp::{bfp_matmul_naive, TileSize};
+    use crate::bfp::TileSize;
     use crate::serve::clock::ManualClock;
+    use crate::util::fault::FaultInjector;
 
     fn ramp(len: usize, phase: f32) -> Vec<f32> {
         (0..len).map(|i| ((i as f32) * 0.11 + phase).sin()).collect()
@@ -602,6 +1166,7 @@ mod tests {
         assert_eq!(batch.ids.len(), 3);
         assert!(!batch.degraded);
         assert_eq!(batch.bits, 16);
+        assert_eq!(batch.generation, 0);
 
         // naive reference over the same batch grouping and width
         let ctx = srv.context();
@@ -619,6 +1184,7 @@ mod tests {
                 Outcome::Served(resp) => {
                     assert_eq!(resp.served_bits, 16);
                     assert!(!resp.degraded);
+                    assert_eq!(resp.generation, 0);
                     assert_eq!(resp.output, want[i * n..(i + 1) * n].to_vec());
                 }
                 other => panic!("request {i} not served: {other:?}"),
@@ -627,6 +1193,7 @@ mod tests {
         assert_eq!(srv.metrics().completed, 3);
         assert_eq!(srv.metrics().batches, 1);
         assert_eq!(srv.metrics().batched_rows, 3);
+        assert_eq!(srv.metrics().models[model].served, 3);
         assert_eq!(srv.plan_cache().misses(), 1);
     }
 
@@ -683,6 +1250,7 @@ mod tests {
         assert_eq!(served.len(), 4);
         assert!(served.iter().all(|r| r.degraded && r.served_bits == 8));
         assert_eq!(srv.metrics().degraded_served, 4);
+        assert_eq!(srv.metrics().models[model].degraded, 4);
 
         // backlog drained below the watermark -> service recovers
         let report = srv.pump().unwrap();
@@ -727,6 +1295,7 @@ mod tests {
         assert!(matches!(outcome(c), Outcome::Served(_)));
         assert_eq!(srv.metrics().expired_at_dequeue, 1);
         assert_eq!(srv.metrics().expired_at_completion, 1);
+        assert_eq!(srv.metrics().models[model].expired, 2);
         assert_eq!(srv.metrics().latency.count(), 1);
         assert_eq!(srv.metrics().latency.max(), 260); // 60 wait + 200 service
     }
@@ -772,7 +1341,7 @@ mod tests {
     }
 
     #[test]
-    fn metrics_json_has_all_three_sections() {
+    fn metrics_json_has_all_sections() {
         let (mut srv, _clock) = server(ServeConfig::default());
         let model = srv.register_model("toy", &ramp(16, 0.0), 4, 4).unwrap();
         srv.submit(model, ramp(4, 0.0), None).unwrap();
@@ -782,5 +1351,204 @@ mod tests {
         assert!(j.get("guard_stats").is_some());
         let pc = j.get("plan_cache").unwrap();
         assert_eq!(pc.get("misses").and_then(|v| v.as_i64()), Some(1));
+        let life = j.get("lifecycle").unwrap();
+        assert_eq!(life.get("state").unwrap().as_str(), Some("running"));
+        assert_eq!(life.get("ready").unwrap().as_bool(), Some(true));
+        let breakers = j.get("breakers").unwrap().as_arr().unwrap();
+        assert_eq!(breakers.len(), 1);
+        assert_eq!(breakers[0].get("state").unwrap().as_str(), Some("closed"));
+        let models = j.get("serve").unwrap().get("models").unwrap().as_arr().unwrap();
+        assert_eq!(models[0].get("served").unwrap().as_i64(), Some(1));
+    }
+
+    #[test]
+    fn fair_share_serves_both_tenants_round_robin() {
+        let cfg = ServeConfig { max_batch_rows: 4, drr_quantum_rows: 4, ..ServeConfig::default() };
+        let (mut srv, _clock) = server(cfg);
+        let a = srv.register_model("tenant-a", &ramp(16, 0.1), 4, 4).unwrap();
+        let b = srv.register_model("tenant-b", &ramp(16, 0.7), 4, 4).unwrap();
+        // A floods 12 rows, B submits 2
+        for i in 0..12 {
+            srv.submit(a, ramp(4, i as f32), None).unwrap();
+        }
+        for i in 0..2 {
+            srv.submit(b, ramp(4, 20.0 + i as f32), None).unwrap();
+        }
+        let reports = srv.run_until_idle().unwrap();
+        let order: Vec<usize> = reports.iter().filter_map(|r| r.batch.as_ref()).map(|x| x.model).collect();
+        // B is served on the second turn despite A's 12-row backlog
+        assert_eq!(order, vec![a, b, a, a]);
+        assert_eq!(srv.metrics().models[a].served, 12);
+        assert_eq!(srv.metrics().models[b].served, 2);
+    }
+
+    #[test]
+    fn clean_reload_swaps_generation_and_serves_bit_identical() {
+        let (mut srv, _clock) = server(ServeConfig::default());
+        let k = 8;
+        let n = 8;
+        let model = srv.register_model("toy", &ramp(k * n, 0.3), k, n).unwrap();
+        let new_w = ramp(k * n, 1.9);
+        let rep = srv.reload_model(model, &new_w).unwrap();
+        assert_eq!((rep.old_generation, rep.new_generation), (0, 1));
+        assert_eq!(srv.model(model).unwrap().generation(), 1);
+        assert_eq!(srv.metrics().reloads, 1);
+
+        // service after the swap is bit-identical to naive on the NEW weights
+        let input = ramp(k, 0.5);
+        srv.submit(model, input.clone(), None).unwrap();
+        let report = srv.pump().unwrap();
+        assert_eq!(report.batch.as_ref().unwrap().generation, 1);
+        let ctx = srv.context();
+        let qa = ctx.quantize(&input, 1, k, 16, &mut Rounding::NearestEven).unwrap();
+        let qw = ctx.quantize(&new_w, k, n, 16, &mut Rounding::NearestEven).unwrap();
+        let want = bfp_matmul_naive(&qa, &qw).unwrap();
+        let done = srv.drain_completions();
+        match &done[0].outcome {
+            Outcome::Served(r) => {
+                assert_eq!(r.generation, 1);
+                assert_eq!(r.output, want);
+            }
+            other => panic!("not served: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn garbled_reload_rolls_back_and_old_generation_keeps_serving() {
+        let (mut srv, _clock) = server(ServeConfig::default());
+        let k = 8;
+        let n = 8;
+        let w0 = ramp(k * n, 0.3);
+        let model = srv.register_model("toy", &w0, k, n).unwrap();
+
+        let _guard = fault::install(FaultInjector::parse("reload-garble:1.0:7").unwrap());
+        let err = srv.reload_model(model, &ramp(k * n, 1.9)).unwrap_err();
+        assert!(matches!(err, ReloadError::Validation(_)), "{err}");
+        drop(_guard);
+
+        assert_eq!(srv.model(model).unwrap().generation(), 0, "rollback keeps gen 0");
+        assert_eq!(srv.metrics().reload_rollbacks, 1);
+        assert_eq!(srv.metrics().reloads, 0);
+        assert_eq!(srv.metrics().breaker_trips, 0, "failed reload trips nothing");
+
+        // old weights still serve, bit-identical to naive on w0
+        let input = ramp(k, 0.5);
+        srv.submit(model, input.clone(), None).unwrap();
+        srv.pump().unwrap();
+        let ctx = srv.context();
+        let qa = ctx.quantize(&input, 1, k, 16, &mut Rounding::NearestEven).unwrap();
+        let qw = ctx.quantize(&w0, k, n, 16, &mut Rounding::NearestEven).unwrap();
+        let want = bfp_matmul_naive(&qa, &qw).unwrap();
+        match &srv.drain_completions()[0].outcome {
+            Outcome::Served(r) => {
+                assert_eq!(r.generation, 0);
+                assert_eq!(r.output, want);
+            }
+            other => panic!("not served: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn reload_rejects_shape_and_nonfinite_candidates() {
+        let (mut srv, _clock) = server(ServeConfig::default());
+        let model = srv.register_model("toy", &ramp(16, 0.0), 4, 4).unwrap();
+        assert!(matches!(
+            srv.reload_model(99, &ramp(16, 0.0)),
+            Err(ReloadError::UnknownModel(99))
+        ));
+        assert!(matches!(
+            srv.reload_model(model, &ramp(15, 0.0)),
+            Err(ReloadError::ShapeMismatch { expected: 16, got: 15 })
+        ));
+        let mut bad = ramp(16, 0.0);
+        bad[5] = f32::NAN;
+        assert!(matches!(srv.reload_model(model, &bad), Err(ReloadError::Validation(_))));
+        assert_eq!(srv.metrics().reload_rollbacks, 1, "shape bugs are not rollbacks");
+    }
+
+    #[test]
+    fn drain_refuses_new_work_and_reaches_stopped_conserved() {
+        let cfg = ServeConfig { synthetic_ticks_per_row: 10, ..ServeConfig::default() };
+        let (mut srv, _clock) = server(cfg);
+        let model = srv.register_model("toy", &ramp(16, 0.0), 4, 4).unwrap();
+        for i in 0..20 {
+            // deadline 150: at 10 ticks/row and batches of 8, rows 16..
+            // cannot finish in time and are force-expired by the drain
+            srv.submit(model, ramp(4, i as f32), Some(150)).unwrap();
+        }
+        srv.begin_drain(150).unwrap();
+        assert_eq!(
+            srv.submit(model, ramp(4, 99.0), None).unwrap(),
+            Submission::Rejected(Rejected::Draining)
+        );
+        let rep = srv.run_until_stopped().unwrap();
+        assert_eq!(srv.lifecycle(), Lifecycle::Stopped);
+        assert!(!srv.is_ready());
+        assert!(rep.conserved, "{rep:?}");
+        assert_eq!(rep.admitted, 20);
+        assert_eq!(rep.served + rep.expired + rep.force_expired + rep.failed, 20);
+        assert!(rep.force_expired > 0 || rep.expired > 0, "deadline pressure was real");
+        assert_eq!(srv.queue_depth(), 0);
+        // stopped server: pump is a no-op, admission stays closed
+        assert!(!srv.pump().unwrap().made_progress());
+        assert!(srv.begin_drain(10).is_err());
+        // every admitted request has exactly one completion
+        let done = srv.drain_completions();
+        assert_eq!(done.len(), 20);
+        let mut ids: Vec<u64> = done.iter().map(|c| c.id).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), 20, "no duplicate outcomes");
+    }
+
+    #[test]
+    fn breaker_trips_quarantines_and_recovers_via_probes() {
+        let cfg = ServeConfig {
+            // batch cap 2: the two poisoned rows ride one batch, the
+            // victim behind them is still queued when the trip lands
+            max_batch_rows: 2,
+            breaker: BreakerConfig {
+                failure_threshold: 2,
+                cooldown_ticks: 100,
+                half_open_probes: 1,
+                expiry_burst: 64,
+            },
+            ..ServeConfig::default()
+        };
+        let (mut srv, clock) = server(cfg);
+        let sick = srv.register_model("sick", &ramp(16, 0.0), 4, 4).unwrap();
+        let healthy = srv.register_model("healthy", &ramp(16, 0.5), 4, 4).unwrap();
+
+        // two poisoned inputs in a row trip the sick model's breaker
+        for i in 0..2 {
+            let mut bad = ramp(4, i as f32);
+            bad[0] = f32::NAN;
+            srv.submit(sick, bad, None).unwrap();
+        }
+        // a queued-behind victim gets flushed by the quarantine
+        srv.submit(sick, ramp(4, 9.0), None).unwrap();
+        srv.run_until_idle().unwrap();
+        assert_eq!(srv.metrics().breaker_trips, 1);
+        assert!(matches!(srv.breaker_state(sick), Some(BreakerState::Open { .. })));
+        let done = srv.drain_completions();
+        assert_eq!(done.len(), 3, "victim was flushed, not stranded");
+
+        // quarantine: sick refused, healthy unaffected
+        assert_eq!(
+            srv.submit(sick, ramp(4, 1.0), None).unwrap(),
+            Submission::Rejected(Rejected::Quarantined)
+        );
+        assert!(srv.submit(healthy, ramp(4, 2.0), None).unwrap().is_admitted());
+        srv.run_until_idle().unwrap();
+        assert_eq!(srv.metrics().models[healthy].served, 1);
+        assert_eq!(srv.metrics().models[sick].quarantined, 1);
+
+        // cooldown elapses: one clean probe closes the breaker
+        clock.advance(200);
+        assert!(srv.submit(sick, ramp(4, 3.0), None).unwrap().is_admitted());
+        srv.run_until_idle().unwrap();
+        assert_eq!(srv.breaker_state(sick), Some(BreakerState::Closed));
+        assert_eq!(srv.metrics().breaker_recoveries, 1);
+        assert!(srv.submit(sick, ramp(4, 4.0), None).unwrap().is_admitted());
     }
 }

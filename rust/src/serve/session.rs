@@ -15,6 +15,13 @@ use crate::bfp::{BfpContext, BfpTensor, Rounding};
 
 /// One served model: a `k x n` weight matrix resident at the full width
 /// plus (when the widths differ) a pre-narrowed degraded copy.
+///
+/// The `generation` counter supports hot reload
+/// ([`crate::serve::InferenceServer::reload_model`]): a freshly loaded
+/// model is generation 0; each validated reload builds a *new*
+/// `ResidentModel` off the serving path and swaps it in with the
+/// generation bumped, so every [`crate::serve::Response`] can say which
+/// weight generation produced it.
 #[derive(Debug)]
 pub struct ResidentModel {
     name: String,
@@ -22,6 +29,7 @@ pub struct ResidentModel {
     n: usize,
     full_bits: u32,
     degraded_bits: u32,
+    generation: u64,
     full: BfpTensor,
     /// `None` when `degraded_bits == full_bits` (no separate copy).
     degraded: Option<BfpTensor>,
@@ -71,6 +79,7 @@ impl ResidentModel {
             n,
             full_bits,
             degraded_bits,
+            generation: 0,
             full,
             degraded,
         })
@@ -78,6 +87,18 @@ impl ResidentModel {
 
     pub fn name(&self) -> &str {
         &self.name
+    }
+
+    /// Weight generation serving right now (0 = initial load; bumped by
+    /// each validated hot reload).
+    pub fn generation(&self) -> u64 {
+        self.generation
+    }
+
+    /// Stamp the generation on a candidate built for hot reload (the
+    /// server calls this before the atomic swap).
+    pub fn set_generation(&mut self, generation: u64) {
+        self.generation = generation;
     }
 
     pub fn k(&self) -> usize {
@@ -158,6 +179,15 @@ mod tests {
         let got = plan.execute(&a, m.weights_at(8)).unwrap();
         let want = bfp_matmul_naive(&a, m.weights_at(8)).unwrap();
         assert_eq!(got, want);
+    }
+
+    #[test]
+    fn generation_starts_at_zero_and_is_stampable() {
+        let ctx = ctx();
+        let mut m = ResidentModel::load(&ctx, "toy", &ramp(16), 4, 4, 16, 8).unwrap();
+        assert_eq!(m.generation(), 0);
+        m.set_generation(3);
+        assert_eq!(m.generation(), 3);
     }
 
     #[test]

@@ -47,10 +47,18 @@ pub enum FaultSite {
     /// Stall one inference request in the serving front-end (a slow or
     /// stuck client whose work must not hold up the batch behind it).
     SlowRequest,
+    /// Corrupt the candidate weights of a hot `reload_model` between the
+    /// caller's buffer and residency building (a bad artifact push). The
+    /// reload validator must catch it and roll back.
+    ReloadGarble,
+    /// A tenant floods the serving front-end: traffic drivers (soaks,
+    /// demos) probe this site to decide when to amplify one tenant's
+    /// submission rate, so fairness is chaos-tested deterministically.
+    TenantFlood,
 }
 
 /// All sites, in probe-table order.
-pub const ALL_SITES: [FaultSite; 7] = [
+pub const ALL_SITES: [FaultSite; 9] = [
     FaultSite::NanActivation,
     FaultSite::MantissaBitflip,
     FaultSite::WorkerPanic,
@@ -58,6 +66,8 @@ pub const ALL_SITES: [FaultSite; 7] = [
     FaultSite::CkptTruncate,
     FaultSite::CkptGarble,
     FaultSite::SlowRequest,
+    FaultSite::ReloadGarble,
+    FaultSite::TenantFlood,
 ];
 
 impl FaultSite {
@@ -70,6 +80,8 @@ impl FaultSite {
             FaultSite::CkptTruncate => 4,
             FaultSite::CkptGarble => 5,
             FaultSite::SlowRequest => 6,
+            FaultSite::ReloadGarble => 7,
+            FaultSite::TenantFlood => 8,
         }
     }
 
@@ -83,6 +95,8 @@ impl FaultSite {
             FaultSite::CkptTruncate => "ckpt-truncate",
             FaultSite::CkptGarble => "ckpt-garble",
             FaultSite::SlowRequest => "slow-request",
+            FaultSite::ReloadGarble => "reload-garble",
+            FaultSite::TenantFlood => "tenant-flood",
         }
     }
 
@@ -111,7 +125,7 @@ struct SiteState {
 /// A set of armed fault sites with deterministic per-probe decisions.
 #[derive(Debug, Default)]
 pub struct FaultInjector {
-    sites: [SiteState; 7],
+    sites: [SiteState; 9],
 }
 
 impl FaultInjector {
@@ -340,6 +354,17 @@ mod tests {
             (0..64).map(|_| inj.should_fire(FaultSite::WorkerPanic)).collect::<Vec<_>>()
         };
         assert_ne!(fires(1), fires(2));
+    }
+
+    #[test]
+    fn lifecycle_sites_parse_and_fire() {
+        let inj = FaultInjector::parse("reload-garble:1.0:3,tenant-flood:1.0:4").unwrap();
+        assert!(inj.armed());
+        assert!(inj.should_fire(FaultSite::ReloadGarble), "rate 1.0 always fires");
+        assert!(inj.should_fire(FaultSite::TenantFlood), "rate 1.0 always fires");
+        assert_eq!(inj.hits(FaultSite::ReloadGarble), 1);
+        assert_eq!(inj.hits(FaultSite::TenantFlood), 1);
+        assert_eq!(ALL_SITES.len(), 9, "every site must sit in the probe table");
     }
 
     #[test]

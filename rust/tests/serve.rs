@@ -1,9 +1,12 @@
 //! Serving front-end integration: the deterministic overload soak
 //! (admission ladder, deadlines, degradation, contained faults — replayed
-//! twice and compared bit-for-bit), targeted deadline-expiry tests for the
-//! `slow-worker` and `slow-request` fault sites, contained worker-panic
-//! retry/split-fallback, and the environment-fault soak the CI
-//! fault-injection matrix drives.
+//! twice and compared bit-for-bit), the two-tenant flood soak (fair-share
+//! scheduling under a 10x flooding neighbour), targeted deadline-expiry
+//! tests for the `slow-worker` and `slow-request` fault sites, contained
+//! worker-panic retry/split-fallback, circuit-breaker
+//! quarantine/recovery, hot-reload rollback under `reload-garble`,
+//! drain-during-burst conservation, and the environment-fault soaks the
+//! CI fault-injection and chaos-lifecycle matrices drive.
 //!
 //! Injector discipline (same as `fault_tolerance.rs`): every test either
 //! `install`s an explicit injector — which serializes it on the harness's
@@ -16,8 +19,9 @@ use std::sync::Arc;
 
 use hbfp::bfp::{bfp_matmul_naive, BfpContext, Isa, Rounding, TileSize};
 use hbfp::serve::{
-    BatchReport, Completion, ExpiredAt, InferenceServer, ManualClock, Outcome, PumpReport,
-    Rejected, Response, ServeConfig, Submission, SystemClock,
+    BatchReport, BreakerConfig, BreakerState, Completion, ExpiredAt, InferenceServer, Lifecycle,
+    ManualClock, Outcome, PumpReport, Rejected, ReloadError, Response, ServeConfig, Submission,
+    SystemClock,
 };
 use hbfp::util::fault::{self, FaultInjector, FaultSite, FaultSpec};
 
@@ -119,6 +123,9 @@ fn soak_cfg() -> ServeConfig {
         degrade_depth: 12,
         shed_depth: 24,
         max_batch_rows: 16,
+        // quantum == batch cap: single-tenant batching identical to plain
+        // head-of-line coalescing, so the PR-7 soak schedule is preserved
+        drr_quantum_rows: 16,
         full_bits: 16,
         degraded_bits: 8,
         default_deadline_ticks: 50_000,
@@ -126,6 +133,7 @@ fn soak_cfg() -> ServeConfig {
         synthetic_ticks_per_row: 100,
         slow_request_penalty_ticks: 500,
         max_gemm_retries: 2,
+        breaker: BreakerConfig::default(),
     }
 }
 
@@ -510,4 +518,563 @@ fn queue_full_backstop_when_shedding_disabled() {
     // draining one batch reopens admission
     srv.run_until_idle().unwrap();
     assert!(srv.submit(model, input(8, 100), None).unwrap().is_admitted());
+}
+
+// ---------------------------------------------------------------------
+// Two-tenant flood soak: fair share under a 10x flooding neighbour
+// ---------------------------------------------------------------------
+
+fn flood_specs() -> Vec<FaultSpec> {
+    vec![
+        FaultSpec { site: FaultSite::TenantFlood, rate: 0.5, seed: 23 },
+        FaultSpec { site: FaultSite::NanActivation, rate: 0.03, seed: 23 },
+        FaultSpec { site: FaultSite::SlowRequest, rate: 0.1, seed: 23 },
+    ]
+}
+
+fn flood_cfg() -> ServeConfig {
+    ServeConfig {
+        queue_capacity: 64,
+        elevated_depth: 8,
+        degrade_depth: 16,
+        shed_depth: 32,
+        max_batch_rows: 8,
+        // small quantum: several DRR rounds per backlog, so fairness (not
+        // batch coalescing) is what keeps tenant B's latency bounded
+        drr_quantum_rows: 4,
+        full_bits: 16,
+        degraded_bits: 8,
+        default_deadline_ticks: 200_000,
+        est_ticks_per_row: 0,
+        synthetic_ticks_per_row: 10,
+        slow_request_penalty_ticks: 200,
+        max_gemm_retries: 2,
+        // out of the way: this soak is about scheduling, not quarantine
+        breaker: BreakerConfig {
+            failure_threshold: 64,
+            cooldown_ticks: 10_000,
+            half_open_probes: 2,
+            expiry_burst: 64,
+        },
+    }
+}
+
+struct FloodRun {
+    srv: InferenceServer,
+    metrics_json: String,
+    completions: Vec<Completion>,
+    batches: Vec<BatchReport>,
+    inputs: HashMap<u64, Vec<f32>>,
+    submitted_a: u64,
+    submitted_b: u64,
+}
+
+/// Tenant A submits ~10 requests per wave (plus deterministic
+/// `tenant-flood` spikes), tenant B exactly one with a real deadline; one
+/// pump per wave. Fresh injector per run, manual clock: exact replay.
+fn run_flood_once() -> FloodRun {
+    let ctx = BfpContext::from_env()
+        .with_threads(1)
+        .with_isa(Isa::Scalar)
+        .with_tile(TileSize::Edge(4));
+    let clock = Arc::new(ManualClock::new());
+    let mut srv = InferenceServer::new(flood_cfg(), ctx, clock);
+    let quiet = fault::install(FaultInjector::none());
+    let a = srv.register_model_with_share("flood-a", &weights(32, 32), 32, 32, 1).unwrap();
+    let b = srv.register_model_with_share("tenant-b", &weights(32, 32), 32, 32, 1).unwrap();
+    drop(quiet);
+
+    let _g = fault::install(FaultInjector::from_specs(&flood_specs()));
+
+    let mut inputs = HashMap::new();
+    let (mut submitted_a, mut submitted_b) = (0u64, 0u64);
+    let mut reports = Vec::new();
+    for wave in 0..40u64 {
+        // the flood driver probes the tenant-flood site: a firing wave
+        // spikes tenant A's rate from 10x to 12x tenant B's
+        let spike = if fault::fire(FaultSite::TenantFlood) { 4 } else { 2 };
+        for j in 0..8 + spike {
+            let x = input(32, wave * 100 + j);
+            submitted_a += 1;
+            if let Submission::Admitted { id, .. } = srv.submit(a, x.clone(), None).unwrap() {
+                inputs.insert(id, x);
+            }
+        }
+        let xb = input(32, 10_000 + wave);
+        submitted_b += 1;
+        if let Submission::Admitted { id, .. } =
+            srv.submit(b, xb.clone(), Some(5_000)).unwrap()
+        {
+            inputs.insert(id, xb);
+        }
+        reports.push(srv.pump().unwrap());
+    }
+    reports.extend(srv.run_until_idle().unwrap());
+
+    let completions = srv.drain_completions();
+    let metrics_json = srv.metrics_json().to_string();
+    let batches = collect_batches(&reports);
+    FloodRun { srv, metrics_json, completions, batches, inputs, submitted_a, submitted_b }
+}
+
+#[test]
+fn two_tenant_flood_soak_keeps_victim_p99_bounded_and_replays_bit_identical() {
+    let r1 = run_flood_once();
+    let r2 = run_flood_once();
+
+    assert_eq!(r1.metrics_json, r2.metrics_json, "flood soak metrics must replay identically");
+    assert_eq!(r1.completions, r2.completions, "flood soak outcomes must replay identically");
+
+    let m = r1.srv.metrics();
+    let (ma, mb) = (&m.models[0], &m.models[1]);
+
+    // A really flooded: ~10x B's submission rate, shed ladder engaged.
+    assert!(r1.submitted_a >= 10 * r1.submitted_b);
+    assert!(m.rejected_shedding > 0, "flooding tenant never hit the shed watermark: {m:?}");
+    assert!(ma.admitted < r1.submitted_a, "some of the flood must be shed");
+    assert_eq!(mb.admitted, r1.submitted_b, "the victim tenant must never be rejected");
+
+    // Fair share: B's p99 stays under its 5000-tick deadline even though
+    // A holds a 4x-deeper backlog the whole run, and not one B request
+    // expires. A degrades under its own backlog; B never does.
+    assert_eq!(mb.expired, 0, "victim tenant lost requests to the flood: {mb:?}");
+    assert!(
+        mb.latency.p99() <= 5_000,
+        "victim p99 {} breached its deadline under the flood",
+        mb.latency.p99()
+    );
+    assert!(ma.degraded > 0, "the flooding tenant should degrade under its own backlog");
+    assert_eq!(mb.degraded, 0, "the victim tenant must not inherit A's degradation");
+
+    // Per-tenant conservation: every admitted request terminates exactly
+    // once inside its own tenant's accounting.
+    for (name, t) in [("a", ma), ("b", mb)] {
+        assert_eq!(
+            t.admitted,
+            t.served + t.expired + t.failed,
+            "tenant {name} leaked requests: {t:?}"
+        );
+    }
+    assert_eq!(m.admitted, ma.admitted + mb.admitted);
+    assert_eq!(r1.completions.len() as u64, m.admitted);
+    assert_eq!(r1.srv.queue_depth(), 0);
+
+    // Everything served is still bit-identical to the naive reference.
+    let served = served_map(&r1.completions);
+    verify_served_against_naive(&r1.srv, &r1.inputs, &r1.batches, &served);
+}
+
+// ---------------------------------------------------------------------
+// Circuit breaker: trip, quarantine, half-open recovery
+// ---------------------------------------------------------------------
+
+#[test]
+fn breaker_quarantines_poisoned_tenant_and_recovers_via_probes() {
+    let _clean = fault::install(FaultInjector::none());
+    let ctx = BfpContext::from_env().with_threads(1).with_tile(TileSize::Edge(4));
+    let clock = Arc::new(ManualClock::new());
+    let cfg = ServeConfig {
+        max_batch_rows: 4,
+        drr_quantum_rows: 4,
+        synthetic_ticks_per_row: 10,
+        est_ticks_per_row: 0,
+        breaker: BreakerConfig {
+            failure_threshold: 3,
+            cooldown_ticks: 1_000,
+            half_open_probes: 2,
+            expiry_burst: 64,
+        },
+        ..ServeConfig::default()
+    };
+    let mut srv = InferenceServer::new(cfg, ctx, clock.clone());
+    let sick = srv.register_model("sick", &weights(8, 8), 8, 8).unwrap();
+    let healthy = srv.register_model("healthy", &weights(8, 8), 8, 8).unwrap();
+
+    // Three poisoned rows and one good one ride the first batch; a fifth
+    // request stays queued behind it.
+    for i in 0..3u64 {
+        let mut x = input(8, i);
+        x[0] = f32::NAN;
+        assert!(srv.submit(sick, x, None).unwrap().is_admitted());
+    }
+    assert!(srv.submit(sick, input(8, 50), None).unwrap().is_admitted());
+    assert!(srv.submit(sick, input(8, 51), None).unwrap().is_admitted());
+    srv.pump().unwrap();
+
+    // The third consecutive failure trips the breaker mid-settlement: the
+    // queued fifth request is flushed as Failed, the good batch-mate
+    // (already executed) still serves.
+    let m = srv.metrics();
+    assert_eq!(m.breaker_trips, 1, "{m:?}");
+    assert_eq!(m.completed, 1);
+    assert_eq!(m.failed, 4, "3 poisoned rows + 1 flushed on quarantine: {m:?}");
+    assert!(matches!(srv.breaker_state(sick), Some(BreakerState::Open { .. })));
+    assert_eq!(srv.model_queue_depth(sick), 0, "quarantine must flush the tenant's queue");
+    let completions = srv.drain_completions();
+    assert_eq!(completions.len(), 5);
+    assert!(completions
+        .iter()
+        .any(|c| matches!(&c.outcome, Outcome::Failed(msg) if msg.contains("quarantined"))));
+
+    // Quarantined: new submissions are refused with the typed reason; the
+    // healthy neighbour is completely unaffected.
+    assert_eq!(
+        srv.submit(sick, input(8, 60), None).unwrap(),
+        Submission::Rejected(Rejected::Quarantined)
+    );
+    assert_eq!(srv.metrics().rejected_quarantined, 1);
+    assert_eq!(srv.metrics().models[sick].quarantined, 1);
+    assert!(srv.submit(healthy, input(8, 61), None).unwrap().is_admitted());
+    srv.pump().unwrap();
+    assert_eq!(srv.metrics().models[healthy].served, 1);
+    assert!(matches!(srv.breaker_state(healthy), Some(BreakerState::Closed)));
+
+    // After the cooldown the breaker half-opens: exactly
+    // `half_open_probes` requests are admitted, the rest still refused.
+    clock.advance(2_000);
+    assert!(srv.submit(sick, input(8, 70), None).unwrap().is_admitted());
+    assert!(matches!(srv.breaker_state(sick), Some(BreakerState::HalfProbe { .. })));
+    assert!(srv.submit(sick, input(8, 71), None).unwrap().is_admitted());
+    assert_eq!(
+        srv.submit(sick, input(8, 72), None).unwrap(),
+        Submission::Rejected(Rejected::Quarantined),
+        "probe slots are capped while half-open"
+    );
+
+    // Both probes succeed -> the breaker closes and service resumes.
+    srv.run_until_idle().unwrap();
+    let m = srv.metrics();
+    assert!(matches!(srv.breaker_state(sick), Some(BreakerState::Closed)));
+    assert_eq!(m.breaker_recoveries, 1, "{m:?}");
+    assert_eq!(m.models[sick].served, 3, "good row + 2 probes: {m:?}");
+    assert!(srv.submit(sick, input(8, 80), None).unwrap().is_admitted());
+    srv.run_until_idle().unwrap();
+    assert_eq!(srv.metrics().models[sick].served, 4);
+}
+
+// ---------------------------------------------------------------------
+// Hot reload: garbled rollback and clean mid-burst swap
+// ---------------------------------------------------------------------
+
+fn reload_cfg() -> ServeConfig {
+    ServeConfig {
+        max_batch_rows: 4,
+        drr_quantum_rows: 4,
+        synthetic_ticks_per_row: 10,
+        est_ticks_per_row: 0,
+        ..ServeConfig::default()
+    }
+}
+
+fn weights_v2(k: usize, n: usize) -> Vec<f32> {
+    weights(k, n).iter().map(|w| w * 0.8 - 0.05).collect()
+}
+
+/// Mid-burst `reload_model` under `reload-garble`: validation catches the
+/// corrupted build, the swap is rolled back, and every in-flight request
+/// — already-batched and still-queued alike — serves on the old
+/// generation. Zero responses from the garbled candidate, zero drops.
+#[test]
+fn garbled_reload_mid_burst_rolls_back_and_keeps_serving_old_generation() {
+    let quiet = fault::install(FaultInjector::none());
+    let ctx = BfpContext::from_env().with_threads(1).with_tile(TileSize::Edge(4));
+    let mut srv = InferenceServer::new(reload_cfg(), ctx, Arc::new(ManualClock::new()));
+    let model = srv.register_model("reload-16", &weights(16, 16), 16, 16).unwrap();
+
+    let mut inputs = HashMap::new();
+    for i in 0..12u64 {
+        if let Submission::Admitted { id, .. } =
+            srv.submit(model, input(16, i), None).unwrap()
+        {
+            inputs.insert(id, input(16, i));
+        }
+    }
+    let mut reports = vec![srv.pump().unwrap()];
+    drop(quiet);
+
+    // Mid-burst reload with a certain garble: typed validation failure.
+    let g = fault::install(FaultInjector::from_specs(&[FaultSpec {
+        site: FaultSite::ReloadGarble,
+        rate: 1.0,
+        seed: 7,
+    }]));
+    let err = srv.reload_model(model, &weights_v2(16, 16)).unwrap_err();
+    assert!(matches!(err, ReloadError::Validation(_)), "got {err}");
+    drop(g);
+
+    let _quiet = fault::install(FaultInjector::none());
+    reports.extend(srv.run_until_idle().unwrap());
+
+    let m = srv.metrics();
+    assert_eq!(m.reload_rollbacks, 1, "{m:?}");
+    assert_eq!(m.reloads, 0);
+    assert_eq!(srv.model(model).unwrap().generation(), 0, "rollback must keep generation 0");
+    assert_eq!(m.breaker_trips, 0, "a failed reload must not trip the breaker");
+
+    // Nothing dropped, nothing served off the garbled build.
+    let completions = srv.drain_completions();
+    assert_eq!(completions.len(), 12);
+    let served = served_map(&completions);
+    assert_eq!(served.len(), 12, "a rolled-back reload must not cost a single request");
+    assert!(served.values().all(|r| r.generation == 0));
+    let batches = collect_batches(&reports);
+    assert!(batches.iter().all(|b| b.generation == 0));
+    verify_served_against_naive(&srv, &inputs, &batches, &served);
+}
+
+struct ReloadBurstRun {
+    srv: InferenceServer,
+    burst: Vec<Completion>,
+    fresh: Vec<Completion>,
+    fresh_batches: Vec<BatchReport>,
+    inputs: HashMap<u64, Vec<f32>>,
+}
+
+/// The same burst schedule with and without a mid-burst *clean* reload:
+/// the reload swaps generations atomically between pumps and does not add
+/// a single expiry the burst would not have had anyway.
+fn reload_burst_run(reload_mid_burst: bool) -> ReloadBurstRun {
+    let _clean = fault::install(FaultInjector::none());
+    let ctx = BfpContext::from_env().with_threads(1).with_tile(TileSize::Edge(4));
+    let mut srv = InferenceServer::new(reload_cfg(), ctx, Arc::new(ManualClock::new()));
+    let model = srv.register_model("swap-16", &weights(16, 16), 16, 16).unwrap();
+
+    // 12 rows at 10 ticks each, 75-tick deadlines, 4-row batches: rows
+    // 0-3 serve at t=40, rows 4-7 complete at t=80 and expire, rows 8-11
+    // die in the queue.
+    for i in 0..12u64 {
+        assert!(srv.submit(model, input(16, i), Some(75)).unwrap().is_admitted());
+    }
+    srv.pump().unwrap();
+    if reload_mid_burst {
+        let report = srv.reload_model(model, &weights_v2(16, 16)).unwrap();
+        assert_eq!((report.old_generation, report.new_generation), (0, 1));
+        assert_eq!(report.validated_widths, (16, 8));
+    }
+    srv.run_until_idle().unwrap();
+    let burst = srv.drain_completions();
+
+    // Post-burst traffic serves on whatever generation is resident now.
+    let mut inputs = HashMap::new();
+    for i in 100..102u64 {
+        let x = input(16, i);
+        if let Submission::Admitted { id, .. } = srv.submit(model, x.clone(), None).unwrap() {
+            inputs.insert(id, x);
+        }
+    }
+    let reports = srv.run_until_idle().unwrap();
+    let fresh = srv.drain_completions();
+    let fresh_batches = collect_batches(&reports);
+    ReloadBurstRun { srv, burst, fresh, fresh_batches, inputs }
+}
+
+#[test]
+fn clean_mid_burst_reload_swaps_generation_without_extra_expiries() {
+    let control = reload_burst_run(false);
+    let reloaded = reload_burst_run(true);
+
+    // The burst outcomes are bit-identical with and without the reload:
+    // same serves, same expiries, same latencies. The swap is free.
+    assert_eq!(control.burst, reloaded.burst, "a clean reload altered in-flight outcomes");
+    let mc = control.srv.metrics();
+    let mr = reloaded.srv.metrics();
+    assert_eq!(mc.expired_at_completion, 4);
+    assert_eq!(mc.expired_at_dequeue, 4);
+    assert_eq!(
+        (mc.expired_at_completion, mc.expired_at_dequeue),
+        (mr.expired_at_completion, mr.expired_at_dequeue),
+        "a clean reload must not add expiries"
+    );
+    assert_eq!(mr.reloads, 1);
+    assert_eq!(mr.reload_rollbacks, 0);
+
+    // Pre-reload serves are generation 0 in both runs; post-reload
+    // traffic is generation 1 only in the reloaded server, and its
+    // outputs match the naive reference on the *new* resident weights
+    // (the verifier reads the server's current residency, which after
+    // the swap is the generation-1 tensors).
+    assert!(served_map(&control.burst).values().all(|r| r.generation == 0));
+    assert!(served_map(&reloaded.burst).values().all(|r| r.generation == 0));
+    assert_eq!(control.srv.model(0).unwrap().generation(), 0);
+    assert_eq!(reloaded.srv.model(0).unwrap().generation(), 1);
+    assert!(served_map(&control.fresh).values().all(|r| r.generation == 0));
+    let fresh_served = served_map(&reloaded.fresh);
+    assert_eq!(fresh_served.len(), 2);
+    assert!(fresh_served.values().all(|r| r.generation == 1));
+    assert!(reloaded.fresh_batches.iter().all(|b| b.generation == 1));
+    verify_served_against_naive(
+        &reloaded.srv,
+        &reloaded.inputs,
+        &reloaded.fresh_batches,
+        &fresh_served,
+    );
+}
+
+#[test]
+fn reload_rejects_unknown_model_shape_mismatch_and_nonfinite() {
+    let _clean = fault::install(FaultInjector::none());
+    let ctx = BfpContext::from_env().with_threads(1).with_tile(TileSize::Edge(4));
+    let mut srv = InferenceServer::new(reload_cfg(), ctx, Arc::new(ManualClock::new()));
+    let model = srv.register_model("small", &weights(8, 8), 8, 8).unwrap();
+
+    assert!(matches!(
+        srv.reload_model(7, &weights(8, 8)),
+        Err(ReloadError::UnknownModel(7))
+    ));
+    assert!(matches!(
+        srv.reload_model(model, &weights(8, 4)),
+        Err(ReloadError::ShapeMismatch { expected: 64, got: 32 })
+    ));
+    let mut bad = weights(8, 8);
+    bad[5] = f32::INFINITY;
+    assert!(matches!(srv.reload_model(model, &bad), Err(ReloadError::Validation(_))));
+    assert_eq!(srv.model(model).unwrap().generation(), 0);
+    // only the candidate runs that reached validation count as rollbacks
+    assert_eq!(srv.metrics().reload_rollbacks, 1);
+}
+
+// ---------------------------------------------------------------------
+// Graceful drain
+// ---------------------------------------------------------------------
+
+#[test]
+fn drain_during_burst_reaches_stopped_with_conservation() {
+    let _clean = fault::install(FaultInjector::none());
+    let ctx = BfpContext::from_env().with_threads(1).with_tile(TileSize::Edge(4));
+    let clock = Arc::new(ManualClock::new());
+    let cfg = ServeConfig {
+        max_batch_rows: 4,
+        drr_quantum_rows: 4,
+        synthetic_ticks_per_row: 10,
+        est_ticks_per_row: 0,
+        default_deadline_ticks: 1_000_000,
+        ..ServeConfig::default()
+    };
+    let mut srv = InferenceServer::new(cfg, ctx, clock.clone());
+    let a = srv.register_model("drain-a", &weights(8, 8), 8, 8).unwrap();
+    let b = srv.register_model("drain-b", &weights(8, 8), 8, 8).unwrap();
+
+    for i in 0..10u64 {
+        assert!(srv.submit(a, input(8, i), None).unwrap().is_admitted());
+        assert!(srv.submit(b, input(8, 100 + i), None).unwrap().is_admitted());
+    }
+    srv.pump().unwrap();
+    srv.pump().unwrap();
+    assert!(srv.is_ready());
+
+    // Drain: admission slams shut with the typed reason, admitted work
+    // keeps pumping, and whatever is still queued at the deadline is
+    // force-expired rather than abandoned.
+    let deadline = srv.begin_drain(100).unwrap();
+    assert_eq!(deadline, clock.now() + 100);
+    assert!(!srv.is_ready());
+    assert!(matches!(srv.lifecycle(), Lifecycle::Draining { .. }));
+    assert_eq!(
+        srv.submit(a, input(8, 999), None).unwrap(),
+        Submission::Rejected(Rejected::Draining)
+    );
+    assert_eq!(srv.metrics().rejected_draining, 1);
+    // begin_drain is idempotent while draining: same deadline back
+    assert_eq!(srv.begin_drain(5_000).unwrap(), deadline);
+
+    let report = srv.run_until_stopped().unwrap();
+    assert!(report.conserved, "drain accounting must conserve: {report:?}");
+    assert_eq!(report.admitted, 20);
+    assert!(report.force_expired > 0, "the deadline must have cut off queued work: {report:?}");
+    assert_eq!(report.served + report.expired + report.force_expired + report.failed, 20);
+    assert!(matches!(srv.lifecycle(), Lifecycle::Stopped));
+    assert_eq!(srv.queue_depth(), 0);
+    assert_eq!(srv.metrics().expired_at_drain, report.force_expired);
+
+    // Stopped is terminal: pumps are no-ops, drains cannot restart, and
+    // every admitted id completed exactly once.
+    assert!(!srv.pump().unwrap().made_progress());
+    assert!(srv.begin_drain(10).is_err());
+    let completions = srv.drain_completions();
+    assert_eq!(completions.len(), 20);
+    let mut ids: Vec<u64> = completions.iter().map(|c| c.id).collect();
+    ids.sort_unstable();
+    ids.dedup();
+    assert_eq!(ids.len(), 20, "every admitted request must terminate exactly once");
+    assert!(completions
+        .iter()
+        .any(|c| c.outcome == Outcome::Expired(ExpiredAt::DrainDeadline)));
+    for t in &srv.metrics().models {
+        assert_eq!(t.admitted, t.served + t.expired + t.failed, "tenant leak: {t:?}");
+    }
+}
+
+// ---------------------------------------------------------------------
+// Lifecycle soak under environment faults (chaos-lifecycle CI target)
+// ---------------------------------------------------------------------
+
+/// Runs *under* `HBFP_FAULT` — the chaos-lifecycle matrix arms
+/// `reload-garble`, `worker-panic`, and `tenant-flood` here. Two tenants,
+/// deterministic flood bursts driven by the tenant-flood site, a
+/// mid-burst hot reload that must either swap cleanly or roll back
+/// (never drop work), then a full drain to `Stopped` with conservation.
+#[test]
+fn lifecycle_soak_survives_environment_faults() {
+    let _env = fault::exclusive();
+    let ctx = BfpContext::from_env().with_threads(1).with_tile(TileSize::Edge(4));
+    let clock = Arc::new(ManualClock::new());
+    let cfg = ServeConfig {
+        queue_capacity: 16,
+        elevated_depth: 4,
+        degrade_depth: 6,
+        shed_depth: 12,
+        max_batch_rows: 4,
+        drr_quantum_rows: 4,
+        est_ticks_per_row: 0,
+        synthetic_ticks_per_row: 100,
+        default_deadline_ticks: 40_000,
+        ..ServeConfig::default()
+    };
+    let mut srv = InferenceServer::new(cfg, ctx, clock);
+    let a = srv.register_model_with_share("chaos-a", &weights(16, 16), 16, 16, 2).unwrap();
+    let b = srv.register_model_with_share("chaos-b", &weights(16, 16), 16, 16, 1).unwrap();
+
+    let mut submitted = 0u64;
+    for wave in 0..16u64 {
+        let burst = if fault::fire(FaultSite::TenantFlood) { 6 } else { 2 };
+        for j in 0..burst {
+            srv.submit(a, input(16, wave * 10 + j), None).unwrap();
+            submitted += 1;
+        }
+        srv.submit(b, input(16, 1_000 + wave), None).unwrap();
+        submitted += 1;
+        if wave % 2 == 1 {
+            srv.pump().unwrap();
+        }
+        if wave == 7 {
+            // Mid-burst reload under whatever the env armed: a clean env
+            // swaps to generation 1; an armed reload-garble rolls back to
+            // generation 0. Both leave a serving model and drop nothing.
+            match srv.reload_model(a, &weights_v2(16, 16)) {
+                Ok(r) => {
+                    assert_eq!(r.new_generation, srv.model(a).unwrap().generation());
+                    assert_eq!(srv.metrics().reloads, 1);
+                }
+                Err(ReloadError::Validation(_)) => {
+                    assert_eq!(srv.model(a).unwrap().generation(), 0);
+                    assert_eq!(srv.metrics().reload_rollbacks, 1);
+                }
+                Err(e) => panic!("unexpected reload error: {e}"),
+            }
+        }
+    }
+
+    srv.begin_drain(5_000).unwrap();
+    let report = srv.run_until_stopped().unwrap();
+    assert!(report.conserved, "lifecycle soak must conserve under env faults: {report:?}");
+    assert!(matches!(srv.lifecycle(), Lifecycle::Stopped));
+    assert_eq!(srv.queue_depth(), 0);
+
+    let m = srv.metrics();
+    assert_eq!(submitted, m.admitted + m.rejected_total());
+    let completions = srv.drain_completions();
+    assert_eq!(completions.len() as u64, m.admitted);
+    for t in &m.models {
+        assert_eq!(t.admitted, t.served + t.expired + t.failed, "tenant leak: {t:?}");
+    }
 }
