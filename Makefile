@@ -5,7 +5,7 @@
 # quick run intended for committing the refreshed baseline so PRs leave
 # a perf trajectory.
 
-.PHONY: check fmt build test lint examples perf bench-quick perf-record
+.PHONY: check fmt build test lint examples perf bench-quick perf-record train-smoke
 
 check: fmt build test
 
@@ -35,3 +35,12 @@ bench-quick:
 
 perf-record: bench-quick
 	@echo "BENCH_bfp_ops.json refreshed — commit it to update the perf baseline"
+
+# Native training smoke (the CI train-smoke job): 50 steps of the paired
+# FP32 / HBFP-m8 run at 1 and 4 workers. --max-loss gates on the final
+# loss (mean of last 10 steps; ln(10) ~ 2.30 is the random floor, so 2.2
+# requires genuine learning), and the example itself asserts the
+# plan-cache counters prove GEMMs routed through cached plans.
+train-smoke:
+	HBFP_THREADS=1 cargo run --release --example train_cifar -- --steps 50 --max-loss 2.2
+	HBFP_THREADS=4 cargo run --release --example train_cifar -- --steps 50 --max-loss 2.2

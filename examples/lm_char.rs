@@ -1,48 +1,68 @@
-//! Language-modeling example (Table 3 workload): train the LSTM char-LM on
-//! the synthetic Markov corpus under FP32 and HBFP and report validation
-//! perplexity against the corpus's true entropy floor.
+//! Language-modeling example (Table 3 workload class) on the native `nn`
+//! subsystem: train the char-LM (embedding → Elman RNN → vocab head) on
+//! the synthetic Markov corpus under FP32 and HBFP, report validation
+//! perplexity against the corpus's true entropy floor, and write curves
+//! plus metrics JSON to `results/lm_*` — no Python, no compiled
+//! artifacts.
 //!
-//!     cargo run --release --example lm_char [-- --steps 300]
-
-use std::sync::Arc;
+//!     cargo run --release --example lm_char [-- --steps 300 --seed 11]
 
 use anyhow::Result;
-use hbfp::coordinator::{LrSchedule, RunConfig, Trainer};
-use hbfp::data::TextDataset;
-use hbfp::runtime::Manifest;
+use hbfp::coordinator::{LrSchedule, RunConfig};
+use hbfp::nn::Trainer;
 use hbfp::util::cli::Args;
 
 fn main() -> Result<()> {
     let args = Args::parse(std::env::args().skip(1));
     let steps = args.opt_usize("steps", 300)?;
-    let manifest = Arc::new(Manifest::load(std::path::Path::new("artifacts"))?);
+    let seed = args.opt_u64("seed", 11)?;
+    let trainer = Trainer::new();
+    std::fs::create_dir_all("results")?;
 
-    // Report the task's perplexity floor so numbers are interpretable.
-    let ds = TextDataset::generate(32, 48, 0 ^ 0xda7a, 60_000, 12_000);
-    println!(
-        "corpus: vocab 32, order-2 Markov, entropy floor = {:.3} nats (ppl {:.2})",
-        ds.entropy_nats,
-        ds.entropy_nats.exp()
-    );
-
-    let trainer = Trainer::new(manifest)?;
     let mut results = Vec::new();
-    for combo in ["lstm-ptblike-fp32", "lstm-ptblike-hbfp8_16_t24", "lstm-ptblike-hbfp12_16_t24"] {
+    let mut floor: Option<f64> = None;
+    for combo in
+        ["charlm-ptblike-fp32", "charlm-ptblike-hbfp8_t24", "charlm-ptblike-hbfp12_t24"]
+    {
         let cfg = RunConfig::new(combo, steps)
-            .with_lr(LrSchedule::Constant { lr: 0.5 })
-            .with_eval_every((steps / 6).max(1));
+            .with_seed(seed)
+            .with_lr(LrSchedule::Constant { lr: 0.3 })
+            .with_eval_every((steps / 6).max(1))
+            .with_max_recoveries(2);
         let r = trainer.run(&cfg)?;
-        println!("\n{combo}:");
+        if floor.is_none() {
+            floor = r.entropy_floor_nats;
+            if let Some(f) = floor {
+                println!(
+                    "corpus: order-2 Markov, entropy floor = {f:.3} nats (ppl {:.2})",
+                    f.exp()
+                );
+            }
+        }
+        let csv = format!("results/lm_{combo}.csv");
+        r.history.write_csv(std::path::Path::new(&csv))?;
+        let metrics = format!("results/lm_{combo}.metrics.json");
+        std::fs::write(&metrics, format!("{}\n", r.summary_json()))?;
+        println!(
+            "\n{combo}: curve -> {csv} ({} steps, {:.1} steps/s, plan cache {} hits)",
+            r.history.steps.len(),
+            r.history.throughput().unwrap_or(0.0),
+            r.plan_hits,
+        );
         for ev in &r.history.evals {
             println!("  step {:>4}: val ppl {:.3}", ev.step, ev.loss.exp());
         }
-        results.push((combo, r.final_loss.exp()));
+        results.push((combo, r.final_eval_loss.unwrap_or(f32::NAN).exp()));
     }
 
     println!("\nTable-3-style summary (validation perplexity):");
     let base = results[0].1;
     for (combo, ppl) in &results {
-        println!("  {combo:<40} ppl {ppl:.3}  ({:+.2}% vs fp32)", (ppl / base - 1.0) * 100.0);
+        print!("  {combo:<28} ppl {ppl:.3} ({:+.2}% vs fp32)", (ppl / base - 1.0) * 100.0);
+        match floor {
+            Some(f) => println!("  floor {:.3}", f.exp()),
+            None => println!(),
+        }
     }
     Ok(())
 }

@@ -1,66 +1,88 @@
-//! End-to-end training driver (the EXPERIMENTS.md validation run): train
-//! the WRN-mini CNN on the synthetic CIFAR-100-like dataset for several
-//! hundred steps under FP32 and HBFP, logging the full loss curve and
-//! periodic validation error, and writing the series to results/e2e_*.csv.
+//! End-to-end training driver (the EXPERIMENTS.md validation run), now on
+//! the native `nn` subsystem: train the MLP on the synthetic
+//! CIFAR-10-like dataset under FP32 and HBFP-m8, with every GEMM of both
+//! forward and backward passes routed through cached BFP matmul plans
+//! (the paper's hybrid split), and write the paired loss/validation
+//! curves to `results/e2e_*.csv` plus per-run metrics JSON (plan-cache
+//! counters included) — no Python, no compiled artifacts.
 //!
-//!     cargo run --release --example train_cifar [-- --steps 400]
+//!     cargo run --release --example train_cifar [-- --steps 400 --seed 11 --max-loss 2.2]
 //!
-//! This is the paper's core experiment (Figure 3 left / Table 2) at one
-//! workload: HBFP with 8-bit dot-product mantissas + 16-bit weight storage
-//! should track the FP32 loss curve and land within ~1pp validation error.
+//! This is the paper's core claim (Figure 3 / Table 2) at one workload:
+//! the HBFP-m8 loss curve should track FP32 closely. `--max-loss` turns
+//! the run into a smoke gate: the run fails unless every combo's final
+//! loss (mean over the last 10 steps) is at or below the threshold.
 
-use std::sync::Arc;
-
-use anyhow::Result;
-use hbfp::coordinator::{LrSchedule, RunConfig, Trainer};
-use hbfp::runtime::Manifest;
+use anyhow::{anyhow, ensure, Result};
+use hbfp::coordinator::{LrSchedule, RunConfig};
+use hbfp::nn::Trainer;
 use hbfp::util::cli::Args;
 
 fn main() -> Result<()> {
     let args = Args::parse(std::env::args().skip(1));
     let steps = args.opt_usize("steps", 400)?;
-    let manifest = Arc::new(Manifest::load(std::path::Path::new("artifacts"))?);
-    let trainer = Trainer::new(manifest)?;
+    let seed = args.opt_u64("seed", 11)?;
+    let max_loss: Option<f32> = match args.opt("max-loss") {
+        Some(s) => Some(s.parse().map_err(|_| anyhow!("bad --max-loss {s:?}"))?),
+        None => None,
+    };
+    let trainer = Trainer::new();
     std::fs::create_dir_all("results")?;
 
-    println!("== end-to-end: wrn_mini on cifar100like, {steps} steps ==");
+    println!("== native e2e: mlp on cifar10like, {steps} steps, seed {seed} ==");
     let mut rows = Vec::new();
-    for combo in [
-        "wrn_mini-cifar100like-fp32",
-        "wrn_mini-cifar100like-hbfp8_16_t24",
-        "wrn_mini-cifar100like-hbfp12_16_t24",
-    ] {
+    for combo in ["mlp-cifar10like-fp32", "mlp-cifar10like-hbfp8_t24"] {
         let cfg = RunConfig::new(combo, steps)
+            .with_seed(seed)
             .with_lr(LrSchedule::default_for(steps, 0.05))
-            .with_eval_every((steps / 8).max(1));
-        let t0 = std::time::Instant::now();
+            .with_eval_every((steps / 8).max(1))
+            .with_max_recoveries(2);
         let r = trainer.run(&cfg)?;
-        let path = format!("results/e2e_{combo}.csv");
-        r.history.write_csv(std::path::Path::new(&path))?;
-        println!(
-            "\n{combo}: {} train records, curve -> {path}",
-            r.history.steps.len()
-        );
+        let csv = format!("results/e2e_{combo}.csv");
+        r.history.write_csv(std::path::Path::new(&csv))?;
+        let metrics = format!("results/e2e_{combo}.metrics.json");
+        std::fs::write(&metrics, format!("{}\n", r.summary_json()))?;
+        println!("\n{combo}: {} train records", r.history.steps.len());
+        println!("  curve -> {csv}\n  metrics -> {metrics}");
         for ev in &r.history.evals {
-            println!("  eval @ step {:>4}: loss {:.4}  err {:.2}%", ev.step, ev.loss, ev.error * 100.0);
+            println!(
+                "  eval @ step {:>4}: loss {:.4}  err {:.2}%",
+                ev.step,
+                ev.loss,
+                ev.error * 100.0
+            );
         }
         println!(
-            "  wall {:.1}s  ({:.1} steps/s, compile {:.1}s)",
-            t0.elapsed().as_secs_f64(),
+            "  wall {:.1}s ({:.1} steps/s)  plan cache {} hits / {} misses  dataset {}  width {} bits",
+            r.train_secs,
             r.history.throughput().unwrap_or(0.0),
-            r.compile_secs
+            r.plan_hits,
+            r.plan_misses,
+            if r.dataset_cache_hit { "reused" } else { "generated" },
+            r.final_width_bits,
         );
-        rows.push((combo, r.final_error, r.final_loss));
+        if combo.contains("hbfp") {
+            ensure!(
+                r.plan_hits > 0,
+                "{combo}: plan cache never hit — GEMMs are not routed through cached plans"
+            );
+        }
+        if let Some(cap) = max_loss {
+            ensure!(
+                r.final_loss.is_finite() && r.final_loss <= cap,
+                "{combo}: final loss {} above the --max-loss gate {cap}",
+                r.final_loss
+            );
+        }
+        rows.push((combo, r.final_loss, r.final_eval_error));
     }
 
-    println!("\nsummary (val error):");
+    println!("\nsummary (paired curves, final loss = mean of last 10 steps):");
     let base = rows[0].1;
-    for (combo, err, loss) in &rows {
-        println!(
-            "  {combo:<44} err {:>6.2}%  loss {loss:.4}  gap {:+.2}pp",
-            err * 100.0,
-            (err - base) * 100.0
-        );
+    for (combo, loss, err) in &rows {
+        let gap = (loss / base - 1.0) * 100.0;
+        let err_s = err.map(|e| format!("{:.2}%", e * 100.0)).unwrap_or_else(|| "-".into());
+        println!("  {combo:<28} final loss {loss:.4} ({gap:+.2}% vs fp32)  val err {err_s}");
     }
     Ok(())
 }

@@ -20,7 +20,11 @@
 //! against the warm rung, which is the per-call `ctx.matmul` path
 //! (policy re-resolved and output allocated every call).
 //! The active family prints in the header (`HBFP_SIMD` to override).
-//! Run with `--json` to write `BENCH_bfp_ops.json` at the repo root.
+//! A final section times one whole native training step (MLP fwd+bwd,
+//! all six GEMMs through cached plans, plus the optimizer update) at m8
+//! and fp32 — the end-to-end hybrid-split cost `examples/train_cifar.rs`
+//! pays per step. Run with `--json` to write `BENCH_bfp_ops.json` at the
+//! repo root.
 
 mod common;
 
@@ -28,6 +32,8 @@ use common::{bench, header, BenchOpts, JsonSink};
 use hbfp::bfp::{
     bfp_matmul_naive, fp32_matmul, BfpContext, Isa, MatmulKernel, Rounding, TileSize,
 };
+use hbfp::nn::{Mlp, Model, NnContext, Optimizer, Precision};
+use hbfp::runtime::HostTensor;
 use hbfp::util::pool::ParBackend;
 use hbfp::util::rng::{SplitMix64, Xorshift32};
 
@@ -303,6 +309,40 @@ fn main() {
         std::hint::black_box(w.narrow_view(8, &mut Rounding::NearestEven).unwrap());
     });
     sink.push(&r, (512 * 512) as f64);
+
+    // Whole-training-step throughput on the native nn path: one MLP
+    // fwd+bwd (six GEMMs: fwd/dW/dx per Linear) + optimizer update, the
+    // shape `examples/train_cifar.rs` runs per step. m8 vs fp32 is the
+    // end-to-end cost of the hybrid split (per-step weight
+    // re-quantization included; plans are warm after the first call).
+    header(&format!("nn training step: MLP fwd+bwd 32x432x[64]x10, {nt} threads"));
+    let (batch, in_dim, hidden, classes) = (32usize, 432usize, 64usize, 10usize);
+    let step_flops =
+        3.0 * 2.0 * (batch * in_dim * hidden + batch * hidden * classes) as f64;
+    let xdata = randv(batch * in_dim, 9);
+    let labels: Vec<i32> = (0..batch).map(|i| (i % classes) as i32).collect();
+    for (name, precision) in
+        [("m8", Precision::Hbfp { bits: 8 }), ("fp32", Precision::Fp32)]
+    {
+        let mut nc = NnContext::new(ctx.clone().with_tile(TileSize::Edge(24)), precision);
+        let mut mlp = Mlp::new(in_dim, &[hidden], classes, 77);
+        let opt = Optimizer::Momentum { mu: 0.9 };
+        let x = HostTensor::F32(xdata.clone(), vec![batch, in_dim]);
+        let y = HostTensor::I32(labels.clone(), vec![batch]);
+        let r = bench(
+            &opts,
+            &format!("mlp step fwd+bwd 32x432x64 ({name})"),
+            step_flops,
+            || {
+                let (loss, _) = mlp.train_batch(&mut nc, &x, &y).unwrap();
+                for p in mlp.params_mut() {
+                    opt.update(p, 1e-4);
+                }
+                std::hint::black_box(loss);
+            },
+        );
+        sink.push(&r, step_flops);
+    }
 
     sink.finish();
 }

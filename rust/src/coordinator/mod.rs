@@ -1,6 +1,14 @@
 //! L3 coordinator: experiment configuration, the training loop, metric
 //! collection, checkpointing, sweep scheduling, and the per-table/figure
 //! reproduction harnesses (`repro`).
+//!
+//! Two training drivers sit on top of the shared [`RunConfig`] /
+//! [`History`] / [`run_resilient`] machinery: [`trainer::Trainer`]
+//! executes AOT-compiled XLA artifacts, while
+//! [`crate::nn::Trainer`](crate::nn::trainer::Trainer) runs the native
+//! pure-rust forward/backward path (no artifacts, no Python). Both drive
+//! the same watchdog, checkpoint, and CSV/JSON artifact plumbing, so
+//! their curves land in identical formats.
 
 pub mod checkpoint;
 pub mod config;

@@ -36,7 +36,7 @@ use anyhow::{anyhow, Result};
 
 use super::checkpoint::{Checkpoint, CheckpointStore, CkptError};
 use super::config::RunConfig;
-use super::metrics::{History, RecoveryAction, RecoveryEvent, RecoveryKind, StepRecord};
+use super::metrics::{EvalRecord, History, RecoveryAction, RecoveryEvent, RecoveryKind, StepRecord};
 use crate::bfp::{
     next_wider_class, BfpContext, GuardAction, GuardPolicy, GuardStats, GuardStatsSnapshot,
     Rounding, TileSize,
@@ -73,6 +73,12 @@ pub trait FaultTolerantModel {
     /// surfaced into [`History::guard`] after the run (`None` = the
     /// model keeps no guard stats).
     fn guard_stats(&self) -> Option<GuardStatsSnapshot> {
+        None
+    }
+    /// Forward-only validation pass, `(mean loss, mean error)`. `None` =
+    /// the model has no validation split; the loop then skips the
+    /// `RunConfig::eval_every` cadence entirely.
+    fn eval(&mut self) -> Option<Result<(f32, f32)>> {
         None
     }
 }
@@ -133,6 +139,9 @@ fn restore_newest(
 /// `max_recoveries == 0` the watchdog is off: a non-finite loss is
 /// recorded and the run continues (legacy behaviour, visible through
 /// [`History::diverged`]), while a step error still fails the run.
+/// Models exposing an eval hook ([`FaultTolerantModel::eval`]) are
+/// evaluated every `cfg.eval_every` clean steps and once at the end;
+/// evals past a rollback point are replayed like the steps they follow.
 pub fn run_resilient<M: FaultTolerantModel>(model: &mut M, cfg: &RunConfig) -> Result<History> {
     let specs = model.specs();
     let store =
@@ -185,6 +194,12 @@ pub fn run_resilient<M: FaultTolerantModel>(model: &mut M, cfg: &RunConfig) -> R
                         let ck =
                             Checkpoint { combo: cfg.combo.clone(), step, leaves: model.state() };
                         store.save(&ck, &specs)?;
+                    }
+                }
+                if cfg.eval_every > 0 && step % cfg.eval_every == 0 {
+                    if let Some(ev) = model.eval() {
+                        let (loss, error) = ev?;
+                        history.evals.push(EvalRecord { step, loss, error });
                     }
                 }
             }
@@ -257,6 +272,9 @@ pub fn run_resilient<M: FaultTolerantModel>(model: &mut M, cfg: &RunConfig) -> R
                     ),
                 });
                 history.steps.retain(|r| r.step < resume);
+                // An eval at exactly `resume` was computed from the
+                // checkpointed state and stays valid; later ones replay.
+                history.evals.retain(|e| e.step <= resume);
                 step = resume;
             }
         }
@@ -268,6 +286,14 @@ pub fn run_resilient<M: FaultTolerantModel>(model: &mut M, cfg: &RunConfig) -> R
         if !already_saved {
             let ck = Checkpoint { combo: cfg.combo.clone(), step, leaves: model.state() };
             store.save(&ck, &specs)?;
+        }
+    }
+    // Final eval (always, per `RunConfig::eval_every` semantics) unless
+    // the cadence just evaluated at this exact step.
+    if history.evals.last().map(|e| e.step) != Some(step) {
+        if let Some(ev) = model.eval() {
+            let (loss, error) = ev?;
+            history.evals.push(EvalRecord { step, loss, error });
         }
     }
     history.guard = model.guard_stats();

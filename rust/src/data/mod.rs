@@ -10,6 +10,7 @@ pub mod images;
 pub mod prefetch;
 pub mod text;
 
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
 use anyhow::Result;
@@ -78,6 +79,11 @@ const DATASET_CACHE_CAP: usize = 4;
 #[derive(Default)]
 pub struct DatasetCache {
     entries: Mutex<Vec<(String, Arc<Dataset>)>>,
+    /// Lookups served from cache / generated fresh — observable so
+    /// sweeps and tests can assert that paired combos (FP32 vs HBFP over
+    /// the same dataset) actually shared one generated copy.
+    hits: AtomicU64,
+    generated: AtomicU64,
 }
 
 impl DatasetCache {
@@ -86,8 +92,10 @@ impl DatasetCache {
         let key = format!("{spec:?}#{seed}");
         let mut entries = self.entries.lock().unwrap();
         if let Some((_, d)) = entries.iter().find(|(k, _)| *k == key) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
             return Ok(Arc::clone(d));
         }
+        self.generated.fetch_add(1, Ordering::Relaxed);
         let d = Arc::new(Dataset::from_spec(spec, seed)?);
         entries.push((key, Arc::clone(&d)));
         if entries.len() > DATASET_CACHE_CAP {
@@ -103,6 +111,16 @@ impl DatasetCache {
 
     pub fn is_empty(&self) -> bool {
         self.len() == 0
+    }
+
+    /// Lookups served from cache since construction.
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    /// Datasets generated (cache misses) since construction.
+    pub fn generated(&self) -> u64 {
+        self.generated.load(Ordering::Relaxed)
     }
 }
 
@@ -130,6 +148,7 @@ mod tests {
         let b = cache.get_or_generate(&spec, 7).unwrap();
         assert!(Arc::ptr_eq(&a, &b), "same (spec, seed) must share one dataset");
         assert_eq!(cache.len(), 1);
+        assert_eq!((cache.hits(), cache.generated()), (1, 1));
         // different seed or spec generates a distinct entry
         let c = cache.get_or_generate(&spec, 8).unwrap();
         assert!(!Arc::ptr_eq(&a, &c));
@@ -137,6 +156,7 @@ mod tests {
             .get_or_generate(&DatasetSpec::Image { hw: 8, channels: 3, classes: 2 }, 7)
             .unwrap();
         assert_eq!(cache.len(), 3);
+        assert_eq!((cache.hits(), cache.generated()), (1, 3));
     }
 
     #[test]

@@ -12,10 +12,14 @@
 //! - **L3** (this crate): the training framework — data pipeline, trainer,
 //!   experiment harnesses — plus the paper's substrates: a software BFP
 //!   arithmetic library (`bfp`), the Figure-2 accelerator area/throughput
-//!   model (`accel`, `hw`), and the PJRT runtime (`runtime`).
+//!   model (`accel`, `hw`), the PJRT runtime (`runtime`), and a native
+//!   forward/backward training subsystem (`nn`) that runs the paper's
+//!   hybrid split end to end in pure rust — every GEMM through BFP
+//!   plans, everything else FP32 — with no Python or artifacts needed.
 //!
 //! Python never runs at training time; the `hbfp` binary is self-contained
-//! once `make artifacts` has produced the HLO modules.
+//! once `make artifacts` has produced the HLO modules, and the `nn`
+//! training path needs no artifacts at all.
 //!
 //! The workspace builds offline: `rust/vendor/xla` is an API-compatible
 //! stand-in for the PJRT binding (artifact execution reports itself
@@ -29,6 +33,7 @@ pub mod bfp;
 pub mod coordinator;
 pub mod data;
 pub mod hw;
+pub mod nn;
 pub mod runtime;
 pub mod serve;
 pub mod util;

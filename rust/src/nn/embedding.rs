@@ -1,0 +1,89 @@
+//! Token embedding table. Lookup is a gather and its backward a
+//! scatter-add — no dot products — so per the paper's hybrid split the
+//! whole layer stays FP32. (The GEMMs downstream of the embedding are
+//! where BFP engages.)
+
+use anyhow::{anyhow, Result};
+
+use super::layer::Param;
+use crate::util::rng::Xorshift32;
+
+pub struct Embedding {
+    pub table: Param,
+    pub vocab: usize,
+    pub dim: usize,
+    cached_tokens: Vec<usize>,
+}
+
+impl Embedding {
+    pub fn new(name: &str, vocab: usize, dim: usize, rng: &mut Xorshift32) -> Embedding {
+        Embedding {
+            table: Param::init_uniform(&format!("{name}.table"), vec![vocab, dim], 0.1, rng),
+            vocab,
+            dim,
+            cached_tokens: Vec::new(),
+        }
+    }
+
+    /// Gather rows: `out[i] = table[tokens[i]]`, shape `[len, dim]`.
+    pub fn forward(&mut self, tokens: &[i32]) -> Result<Vec<f32>> {
+        let mut out = Vec::with_capacity(tokens.len() * self.dim);
+        self.cached_tokens.clear();
+        for &t in tokens {
+            let t = usize::try_from(t).map_err(|_| anyhow!("negative token id {t}"))?;
+            if t >= self.vocab {
+                return Err(anyhow!("token id {t} out of vocab {}", self.vocab));
+            }
+            self.cached_tokens.push(t);
+            out.extend_from_slice(&self.table.w[t * self.dim..(t + 1) * self.dim]);
+        }
+        Ok(out)
+    }
+
+    /// Scatter-add the upstream gradient back into the table rows that
+    /// were gathered by the matching `forward`.
+    pub fn backward(&mut self, dy: &[f32]) -> Result<()> {
+        if dy.len() != self.cached_tokens.len() * self.dim {
+            return Err(anyhow!(
+                "embedding grad len {} != {}x{}",
+                dy.len(),
+                self.cached_tokens.len(),
+                self.dim
+            ));
+        }
+        for (i, &t) in self.cached_tokens.iter().enumerate() {
+            let src = &dy[i * self.dim..(i + 1) * self.dim];
+            let dst = &mut self.table.g[t * self.dim..(t + 1) * self.dim];
+            for (g, d) in dst.iter_mut().zip(src) {
+                *g += d;
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gather_and_scatter_add() {
+        let mut rng = Xorshift32::new(5);
+        let mut e = Embedding::new("emb", 4, 2, &mut rng);
+        e.table.w = vec![0.0, 1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0];
+        let out = e.forward(&[2, 0, 2]).unwrap();
+        assert_eq!(out, vec![4.0, 5.0, 0.0, 1.0, 4.0, 5.0]);
+        e.backward(&[1.0, 1.0, 0.5, 0.5, 1.0, 1.0]).unwrap();
+        // token 2 gathered twice: grads accumulate
+        assert_eq!(&e.table.g[4..6], &[2.0, 2.0]);
+        assert_eq!(&e.table.g[0..2], &[0.5, 0.5]);
+    }
+
+    #[test]
+    fn out_of_vocab_rejected() {
+        let mut rng = Xorshift32::new(6);
+        let mut e = Embedding::new("emb", 4, 2, &mut rng);
+        assert!(e.forward(&[4]).is_err());
+        assert!(e.forward(&[-1]).is_err());
+    }
+}

@@ -1,0 +1,171 @@
+//! The [`Layer`] trait (cached-activation backprop) plus the FP32
+//! pointwise activations. A layer caches whatever its backward pass
+//! needs during `forward` (inputs, activations, masks) — the standard
+//! autodiff tape, flattened into the layer objects because the graphs
+//! here are straight lines.
+
+use anyhow::Result;
+
+use super::NnContext;
+use crate::util::rng::Xorshift32;
+
+/// One trainable tensor: FP32 master weights `w`, gradient accumulator
+/// `g`, and momentum buffer `v` — all FP32 per the hybrid split (only
+/// dot products are BFP; the optimizer state never quantizes).
+#[derive(Debug, Clone)]
+pub struct Param {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub w: Vec<f32>,
+    pub g: Vec<f32>,
+    pub v: Vec<f32>,
+}
+
+impl Param {
+    pub fn new(name: &str, shape: Vec<usize>, w: Vec<f32>) -> Param {
+        debug_assert_eq!(w.len(), shape.iter().product::<usize>());
+        let n = w.len();
+        Param { name: name.to_string(), shape, w, g: vec![0.0; n], v: vec![0.0; n] }
+    }
+
+    /// Uniform init in `±limit`, drawn from a deterministic
+    /// [`Xorshift32`] substream so init is independent of construction
+    /// order elsewhere.
+    pub fn init_uniform(name: &str, shape: Vec<usize>, limit: f32, rng: &mut Xorshift32) -> Param {
+        let n = shape.iter().product::<usize>();
+        let w = (0..n).map(|_| (rng.next_f32() * 2.0 - 1.0) * limit).collect();
+        Param::new(name, shape, w)
+    }
+
+    pub fn zeros(name: &str, shape: Vec<usize>) -> Param {
+        let n = shape.iter().product::<usize>();
+        Param::new(name, shape, vec![0.0; n])
+    }
+
+    pub fn len(&self) -> usize {
+        self.w.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.w.is_empty()
+    }
+
+    pub fn zero_grad(&mut self) {
+        self.g.fill(0.0);
+    }
+}
+
+/// A differentiable module over row-major `[rows, dim]` activations.
+/// `backward` consumes the upstream gradient at this layer's output and
+/// returns the gradient at its input, accumulating parameter gradients
+/// into [`Param::g`] along the way. `backward` must follow the
+/// `forward` whose activations it replays.
+pub trait Layer {
+    fn name(&self) -> &str;
+    fn forward(&mut self, nc: &mut NnContext, x: &[f32], rows: usize) -> Result<Vec<f32>>;
+    fn backward(&mut self, nc: &mut NnContext, dy: &[f32], rows: usize) -> Result<Vec<f32>>;
+    /// Trainable tensors (read view, for checkpointing).
+    fn params(&self) -> Vec<&Param> {
+        Vec::new()
+    }
+    /// Trainable tensors (mutable, for the optimizer / checkpoint restore).
+    fn params_mut(&mut self) -> Vec<&mut Param> {
+        Vec::new()
+    }
+}
+
+/// Rectifier. NaN inputs map to 0 like any non-positive value — which is
+/// why hazard detection lives at the GEMM guard (the scan in
+/// [`NnContext::gemm_guarded`]) and not on loss NaN-ness alone: a
+/// poisoned activation does not survive a ReLU.
+pub struct Relu {
+    mask: Vec<bool>,
+}
+
+impl Relu {
+    pub fn new() -> Relu {
+        Relu { mask: Vec::new() }
+    }
+}
+
+impl Default for Relu {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Layer for Relu {
+    fn name(&self) -> &str {
+        "relu"
+    }
+
+    fn forward(&mut self, _nc: &mut NnContext, x: &[f32], _rows: usize) -> Result<Vec<f32>> {
+        self.mask.clear();
+        self.mask.extend(x.iter().map(|&v| v > 0.0));
+        Ok(x.iter().map(|&v| if v > 0.0 { v } else { 0.0 }).collect())
+    }
+
+    fn backward(&mut self, _nc: &mut NnContext, dy: &[f32], _rows: usize) -> Result<Vec<f32>> {
+        debug_assert_eq!(dy.len(), self.mask.len());
+        Ok(dy.iter().zip(&self.mask).map(|(&d, &m)| if m { d } else { 0.0 }).collect())
+    }
+}
+
+/// Hyperbolic tangent, caching the *output* (`d tanh = 1 - y²`).
+pub struct Tanh {
+    y: Vec<f32>,
+}
+
+impl Tanh {
+    pub fn new() -> Tanh {
+        Tanh { y: Vec::new() }
+    }
+}
+
+impl Default for Tanh {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Layer for Tanh {
+    fn name(&self) -> &str {
+        "tanh"
+    }
+
+    fn forward(&mut self, _nc: &mut NnContext, x: &[f32], _rows: usize) -> Result<Vec<f32>> {
+        self.y = x.iter().map(|v| v.tanh()).collect();
+        Ok(self.y.clone())
+    }
+
+    fn backward(&mut self, _nc: &mut NnContext, dy: &[f32], _rows: usize) -> Result<Vec<f32>> {
+        debug_assert_eq!(dy.len(), self.y.len());
+        Ok(dy.iter().zip(&self.y).map(|(&d, &y)| d * (1.0 - y * y)).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bfp::BfpContext;
+    use crate::nn::Precision;
+
+    #[test]
+    fn relu_masks_and_routes_gradient() {
+        let mut nc = NnContext::new(BfpContext::from_env(), Precision::Fp32);
+        let mut r = Relu::new();
+        let y = r.forward(&mut nc, &[-1.0, 0.0, 2.0], 1).unwrap();
+        assert_eq!(y, vec![0.0, 0.0, 2.0]);
+        let dx = r.backward(&mut nc, &[5.0, 5.0, 5.0], 1).unwrap();
+        assert_eq!(dx, vec![0.0, 0.0, 5.0]);
+    }
+
+    #[test]
+    fn tanh_gradient_uses_cached_output() {
+        let mut nc = NnContext::new(BfpContext::from_env(), Precision::Fp32);
+        let mut t = Tanh::new();
+        let y = t.forward(&mut nc, &[0.5], 1).unwrap();
+        let dx = t.backward(&mut nc, &[1.0], 1).unwrap();
+        assert!((dx[0] - (1.0 - y[0] * y[0])).abs() < 1e-7);
+    }
+}

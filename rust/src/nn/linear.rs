@@ -1,0 +1,152 @@
+//! Fully connected layer — the paper's workhorse. Three GEMMs per
+//! training step, every one through a BFP plan (under HBFP):
+//!
+//! - forward:  `y[B,out]  = x[B,in] · W[in,out] (+ b)`
+//! - weight-gradient: `dW[in,out] = xᵀ[in,B] · δ[B,out]`
+//! - input-gradient:  `dx[B,in]  = δ[B,out] · Wᵀ[out,in]`
+//!
+//! All three shapes land in the session's shared
+//! [`PlanCache`](crate::bfp::PlanCache), so after the first step every
+//! GEMM is a cache hit; the per-step BFP work is the weight-storage
+//! conversion (quantizing `W`/`Wᵀ` from the FP32 master) plus the fused
+//! A-side converter inside the plan execution. Bias add, like all
+//! non-dot-product math, stays FP32.
+
+use anyhow::{anyhow, Result};
+
+use super::layer::{Layer, Param};
+use super::{transpose, NnContext};
+use crate::util::rng::Xorshift32;
+
+pub struct Linear {
+    pub w: Param,
+    pub b: Param,
+    pub in_dim: usize,
+    pub out_dim: usize,
+    cached_x: Vec<f32>,
+}
+
+impl Linear {
+    /// Glorot-uniform weight init, zero bias.
+    pub fn new(name: &str, in_dim: usize, out_dim: usize, rng: &mut Xorshift32) -> Linear {
+        let limit = (6.0 / (in_dim + out_dim) as f32).sqrt();
+        Linear {
+            w: Param::init_uniform(&format!("{name}.w"), vec![in_dim, out_dim], limit, rng),
+            b: Param::zeros(&format!("{name}.b"), vec![out_dim]),
+            in_dim,
+            out_dim,
+            cached_x: Vec::new(),
+        }
+    }
+}
+
+impl Layer for Linear {
+    fn name(&self) -> &str {
+        &self.w.name
+    }
+
+    fn forward(&mut self, nc: &mut NnContext, x: &[f32], rows: usize) -> Result<Vec<f32>> {
+        if x.len() != rows * self.in_dim {
+            return Err(anyhow!(
+                "{}: input len {} != {rows}x{}",
+                self.w.name,
+                x.len(),
+                self.in_dim
+            ));
+        }
+        // Data-facing GEMM: guarded, so a poisoned batch is detected at
+        // the datapath boundary (see NnContext::gemm_guarded).
+        let mut y = nc.gemm_guarded(x, &self.w.w, rows, self.in_dim, self.out_dim)?;
+        for r in 0..rows {
+            let row = &mut y[r * self.out_dim..(r + 1) * self.out_dim];
+            for (yv, bv) in row.iter_mut().zip(&self.b.w) {
+                *yv += bv;
+            }
+        }
+        self.cached_x = x.to_vec();
+        Ok(y)
+    }
+
+    fn backward(&mut self, nc: &mut NnContext, dy: &[f32], rows: usize) -> Result<Vec<f32>> {
+        if dy.len() != rows * self.out_dim {
+            return Err(anyhow!(
+                "{}: grad len {} != {rows}x{}",
+                self.w.name,
+                dy.len(),
+                self.out_dim
+            ));
+        }
+        if self.cached_x.len() != rows * self.in_dim {
+            return Err(anyhow!("{}: backward before forward", self.w.name));
+        }
+        // dW = xᵀ · δ  (BFP GEMM, k = batch: the skinny-k shape)
+        let xt = transpose(&self.cached_x, rows, self.in_dim);
+        let dw = nc.gemm(&xt, dy, self.in_dim, rows, self.out_dim)?;
+        for (g, d) in self.w.g.iter_mut().zip(&dw) {
+            *g += d;
+        }
+        // db = column-sum of δ (FP32 reduction)
+        for r in 0..rows {
+            let row = &dy[r * self.out_dim..(r + 1) * self.out_dim];
+            for (g, d) in self.b.g.iter_mut().zip(row) {
+                *g += d;
+            }
+        }
+        // dx = δ · Wᵀ  (BFP GEMM)
+        let wt = transpose(&self.w.w, self.in_dim, self.out_dim);
+        nc.gemm(dy, &wt, rows, self.out_dim, self.in_dim)
+    }
+
+    fn params(&self) -> Vec<&Param> {
+        vec![&self.w, &self.b]
+    }
+
+    fn params_mut(&mut self) -> Vec<&mut Param> {
+        vec![&mut self.w, &mut self.b]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bfp::{BfpContext, TileSize};
+    use crate::nn::Precision;
+
+    #[test]
+    fn forward_matches_hand_computation_fp32() {
+        let mut rng = Xorshift32::new(1);
+        let mut l = Linear::new("fc", 2, 3, &mut rng);
+        l.w.w = vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]; // [2,3]
+        l.b.w = vec![0.5, -0.5, 0.0];
+        let mut nc = NnContext::new(BfpContext::from_env(), Precision::Fp32);
+        let y = l.forward(&mut nc, &[1.0, 1.0], 1).unwrap();
+        assert_eq!(y, vec![5.5, 6.5, 9.0]);
+    }
+
+    #[test]
+    fn hbfp_forward_populates_plan_cache() {
+        let mut rng = Xorshift32::new(2);
+        let mut l = Linear::new("fc", 6, 4, &mut rng);
+        let ctx = BfpContext::from_env().with_tile(TileSize::Edge(8));
+        let mut nc = NnContext::new(ctx, Precision::Hbfp { bits: 8 });
+        let x: Vec<f32> = (0..12).map(|v| v as f32 * 0.1).collect();
+        l.forward(&mut nc, &x, 2).unwrap();
+        let dy = vec![0.1f32; 8];
+        l.backward(&mut nc, &dy, 2).unwrap();
+        // fwd + dW + dx = three distinct shapes planned
+        assert_eq!(nc.plans.misses(), 3);
+        l.forward(&mut nc, &x, 2).unwrap();
+        l.backward(&mut nc, &dy, 2).unwrap();
+        assert_eq!(nc.plans.misses(), 3, "second step must be all hits");
+        assert_eq!(nc.plans.hits(), 3);
+    }
+
+    #[test]
+    fn shape_mismatches_error() {
+        let mut rng = Xorshift32::new(3);
+        let mut l = Linear::new("fc", 4, 2, &mut rng);
+        let mut nc = NnContext::new(BfpContext::from_env(), Precision::Fp32);
+        assert!(l.forward(&mut nc, &[0.0; 7], 2).is_err());
+        assert!(l.backward(&mut nc, &[0.0; 4], 2).is_err(), "backward before forward");
+    }
+}

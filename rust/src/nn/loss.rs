@@ -1,0 +1,135 @@
+//! Softmax cross-entropy over row-major logits — FP32 end to end (the
+//! paper keeps the loss, like all non-dot-product math, out of BFP).
+//! Numerically stabilized by the usual row-max shift; NaN logits
+//! propagate to the loss untouched (the watchdog's signal).
+
+use anyhow::{anyhow, Result};
+
+/// Caches the softmax probabilities and targets from `forward` so
+/// `backward` can emit `(p - onehot) / rows` without recomputation.
+#[derive(Default)]
+pub struct SoftmaxCrossEntropy {
+    probs: Vec<f32>,
+    targets: Vec<usize>,
+    rows: usize,
+    classes: usize,
+}
+
+impl SoftmaxCrossEntropy {
+    pub fn new() -> SoftmaxCrossEntropy {
+        SoftmaxCrossEntropy::default()
+    }
+
+    /// Mean cross-entropy (nats) and top-1 accuracy over `rows`
+    /// examples of `classes` logits each.
+    pub fn forward(
+        &mut self,
+        logits: &[f32],
+        targets: &[i32],
+        rows: usize,
+        classes: usize,
+    ) -> Result<(f32, f32)> {
+        if logits.len() != rows * classes || targets.len() != rows {
+            return Err(anyhow!(
+                "softmax: logits {} targets {} vs rows {rows} classes {classes}",
+                logits.len(),
+                targets.len()
+            ));
+        }
+        self.probs.clear();
+        self.probs.reserve(rows * classes);
+        self.targets.clear();
+        self.rows = rows;
+        self.classes = classes;
+        let mut loss = 0.0f32;
+        let mut correct = 0usize;
+        for r in 0..rows {
+            let y = usize::try_from(targets[r]).map_err(|_| anyhow!("negative target"))?;
+            if y >= classes {
+                return Err(anyhow!("target {y} out of {classes} classes"));
+            }
+            self.targets.push(y);
+            let row = &logits[r * classes..(r + 1) * classes];
+            let max = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let mut sum = 0.0f32;
+            let base = self.probs.len();
+            for &v in row {
+                let e = (v - max).exp();
+                self.probs.push(e);
+                sum += e;
+            }
+            for p in &mut self.probs[base..] {
+                *p /= sum;
+            }
+            let mut pred = 0usize;
+            for c in 1..classes {
+                if row[c] > row[pred] {
+                    pred = c;
+                }
+            }
+            if pred == y {
+                correct += 1;
+            }
+            // NaN probabilities propagate to the loss (the watchdog's
+            // signal); only the p == 0 underflow is clamped. Note
+            // `f32::max` would *swallow* NaN here (`NaN.max(x) == x`),
+            // so the clamp targets the -ln(0) = +inf case instead.
+            let nll = -self.probs[base + y].ln();
+            loss += if nll.is_infinite() { -(1e-12f32).ln() } else { nll };
+        }
+        Ok((loss / rows as f32, correct as f32 / rows as f32))
+    }
+
+    /// Gradient at the logits of the matching `forward`:
+    /// `(p - onehot) / rows`.
+    pub fn backward(&self) -> Vec<f32> {
+        let mut grad = self.probs.clone();
+        for (r, &y) in self.targets.iter().enumerate() {
+            grad[r * self.classes + y] -= 1.0;
+        }
+        let inv = 1.0 / self.rows as f32;
+        for g in &mut grad {
+            *g *= inv;
+        }
+        grad
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_logits_give_log_classes() {
+        let mut l = SoftmaxCrossEntropy::new();
+        let (loss, _) = l.forward(&[0.0; 8], &[1, 3], 2, 4).unwrap();
+        assert!((loss - (4.0f32).ln()).abs() < 1e-6);
+    }
+
+    #[test]
+    fn gradient_sums_to_zero_per_row() {
+        let mut l = SoftmaxCrossEntropy::new();
+        l.forward(&[1.0, 2.0, 3.0, -1.0, 0.0, 1.0], &[0, 2], 2, 3).unwrap();
+        let g = l.backward();
+        for r in 0..2 {
+            let s: f32 = g[r * 3..(r + 1) * 3].iter().sum();
+            assert!(s.abs() < 1e-6, "softmax grad rows sum to zero");
+        }
+        // target entry is negative (p - 1 < 0)
+        assert!(g[0] < 0.0 && g[5] < 0.0);
+    }
+
+    #[test]
+    fn nan_logits_poison_the_loss() {
+        let mut l = SoftmaxCrossEntropy::new();
+        let (loss, _) = l.forward(&[f32::NAN, 0.0, 0.0, 0.0], &[0], 1, 4).unwrap();
+        assert!(!loss.is_finite(), "hazards must reach the watchdog through the loss");
+    }
+
+    #[test]
+    fn bad_targets_rejected() {
+        let mut l = SoftmaxCrossEntropy::new();
+        assert!(l.forward(&[0.0; 4], &[4], 1, 4).is_err());
+        assert!(l.forward(&[0.0; 4], &[-1], 1, 4).is_err());
+    }
+}

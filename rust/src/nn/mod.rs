@@ -1,0 +1,252 @@
+//! Native training subsystem: forward+backward layers on top of
+//! [`BfpContext`]/[`MatmulPlan`](crate::bfp::MatmulPlan) with the paper's
+//! exact hybrid split (§4) — **every GEMM** (forward, weight-gradient,
+//! input-gradient) runs through a BFP plan, while activations, biases,
+//! optimizer state, and the loss stay FP32.
+//!
+//! ```text
+//!           FP32 domain                      BFP domain (MatmulPlan)
+//!   x ──────────────┐
+//!                   ├─► [quantize_execute] ──► y = x·W ─► +bias ─► act
+//!   W (FP32 master) ┘        ▲ W quantized per step (weight storage
+//!                              conversion); x streams through the
+//!                              fused A-side converter
+//!   δ, xᵀ, Wᵀ  ──────► same path for dW = xᵀ·δ and dx = δ·Wᵀ
+//! ```
+//!
+//! Layout:
+//!
+//! - [`NnContext`] (here): one [`BfpContext`] + one shared
+//!   [`PlanCache`] + the current [`Precision`] + guard counters. Every
+//!   layer GEMM goes through [`NnContext::gemm`] /
+//!   [`NnContext::gemm_guarded`], so "verifiably routed through
+//!   `MatmulPlan`" is a grep: layers never call a matmul directly.
+//! - [`layer`]: the [`Layer`] trait (cached-activation backprop),
+//!   [`Param`] (FP32 master weights + grad + momentum), `ReLU`/`Tanh`.
+//! - [`linear`]: fully connected layer — three plan-cached GEMMs per
+//!   step (fwd, dW, dx).
+//! - [`embedding`]: token-table gather (a gather, not a dot product, so
+//!   FP32 per the hybrid split).
+//! - [`rnn`]: Elman recurrent block (tanh) with truncated-BPTT-free full
+//!   backprop through the sequence — the char-LM's recurrent core.
+//! - [`loss`]: softmax cross-entropy (FP32).
+//! - [`optim`]: SGD / momentum on FP32 master weights.
+//! - [`models`]: the [`Model`] trait plus [`Mlp`] and [`CharLm`].
+//! - [`trainer`]: [`Trainer`] — combo parsing
+//!   (`"mlp-cifar10like-hbfp8_t24"`), dataset-cache reuse across
+//!   FP32-vs-HBFP pairs, and [`NnSession`], the
+//!   [`FaultTolerantModel`](crate::coordinator::FaultTolerantModel)
+//!   adapter that puts the whole loop under the `run_resilient`
+//!   watchdog (checkpoints, rollback, width widening).
+//!
+//! Determinism: batches are a pure function of `(seed, step)`, weight
+//! init uses [`Xorshift32`](crate::util::rng::Xorshift32) substreams,
+//! the BFP kernels are bit-identical for any `HBFP_THREADS`, and the
+//! FP32 reference GEMM is single-threaded — so whole loss curves are
+//! bitwise reproducible at 1 or N threads (tested in `tests/nn_train.rs`).
+
+pub mod embedding;
+pub mod layer;
+pub mod linear;
+pub mod loss;
+pub mod models;
+pub mod optim;
+pub mod rnn;
+pub mod trainer;
+
+use anyhow::{anyhow, Result};
+
+use crate::bfp::{
+    fp32_matmul, BfpContext, GuardAction, GuardPolicy, GuardStats, PlanCache, Rounding,
+};
+
+pub use embedding::Embedding;
+pub use layer::{Layer, Param, Relu, Tanh};
+pub use linear::Linear;
+pub use loss::SoftmaxCrossEntropy;
+pub use models::{CharLm, Mlp, Model};
+pub use optim::Optimizer;
+pub use rnn::Rnn;
+pub use trainer::{NnRunReport, NnSession, Trainer};
+
+/// Numeric mode of one training session. `Fp32` is the paper's baseline
+/// (every GEMM through the deterministic single-threaded FP32 kernel);
+/// `Hbfp` runs every GEMM through BFP plans at `bits`-wide mantissas.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Precision {
+    Fp32,
+    Hbfp { bits: u32 },
+}
+
+impl Precision {
+    /// Parse a combo config token: `"fp32"`, `"hbfp8"`, `"hbfp12"`, …
+    /// (a `_t{edge}` tile suffix is the caller's to strip first).
+    pub fn parse(s: &str) -> Result<Precision> {
+        if s == "fp32" {
+            return Ok(Precision::Fp32);
+        }
+        if let Some(bits) = s.strip_prefix("hbfp") {
+            let bits: u32 =
+                bits.parse().map_err(|_| anyhow!("bad precision token {s:?}"))?;
+            crate::bfp::tensor::check_width(bits)?;
+            return Ok(Precision::Hbfp { bits });
+        }
+        Err(anyhow!("unknown precision token {s:?} (want fp32 or hbfp<bits>)"))
+    }
+
+    /// Mantissa width class in bits (32 = IEEE FP32).
+    pub fn width_bits(self) -> u32 {
+        match self {
+            Precision::Fp32 => 32,
+            Precision::Hbfp { bits } => bits,
+        }
+    }
+}
+
+/// Execution state shared by every layer of one training session: the
+/// BFP policy context, one plan cache covering all layer shapes (its
+/// hit/miss counters are the routing proof surfaced into the run's
+/// metrics JSON), the current precision, and the guard counters.
+///
+/// Not `Sync` by design: one session owns one `NnContext`; parallelism
+/// lives *inside* the BFP kernels (the context's worker pool), which is
+/// what keeps curves bit-identical for any `HBFP_THREADS`.
+pub struct NnContext {
+    pub ctx: BfpContext,
+    pub plans: PlanCache,
+    pub precision: Precision,
+    /// Guard-layer counters (scans, non-finite detections, FP32
+    /// fallbacks) accumulated by [`NnContext::gemm_guarded`].
+    pub guard: GuardStats,
+    /// Sticky per-step flag: a guarded GEMM detected non-finite input
+    /// since the last [`NnContext::take_tripped`].
+    tripped: bool,
+}
+
+impl NnContext {
+    /// Wrap a context for training. The guard action is forced to
+    /// `Fp32Fallback`: a poisoned activation degrades that one GEMM to
+    /// the IEEE kernel (and trips the sticky flag) instead of aborting
+    /// mid-backprop, so the step driver decides what to do.
+    pub fn new(ctx: BfpContext, precision: Precision) -> NnContext {
+        let ctx = ctx.with_guard(GuardPolicy {
+            action: GuardAction::Fp32Fallback,
+            ..GuardPolicy::default()
+        });
+        NnContext { ctx, plans: PlanCache::new(64), precision, guard: GuardStats::new(), tripped: false }
+    }
+
+    /// C = A·B for row-major f32 A (`m x k`) and B (`k x n`) at the
+    /// session precision. HBFP: B is quantized to packed BFP (the
+    /// per-step weight-storage conversion, nearest-even), A streams
+    /// through the plan's fused converter — both on the context tile
+    /// grid, bit-identical for any thread count. FP32: the
+    /// single-threaded IEEE reference kernel.
+    pub fn gemm(&mut self, a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Result<Vec<f32>> {
+        check_operands(a, b, m, k, n)?;
+        match self.precision {
+            Precision::Fp32 => Ok(fp32_matmul(a, b, m, k, n)),
+            Precision::Hbfp { bits } => {
+                let qb = self.ctx.quantize(b, k, n, bits, &mut Rounding::NearestEven)?;
+                let plan = self.plans.get_or_plan(&self.ctx, m, k, n, (bits, bits))?;
+                plan.quantize_execute(a, &mut Rounding::NearestEven, &qb)
+            }
+        }
+    }
+
+    /// [`NnContext::gemm`] behind the numeric guard: the f32 `a` operand
+    /// (activations entering the datapath) is scanned; a non-finite hit
+    /// falls back to the FP32 kernel for this one GEMM, records guard
+    /// counters, and sets the sticky tripped flag. Used on every
+    /// data-facing forward GEMM.
+    pub fn gemm_guarded(
+        &mut self,
+        a: &[f32],
+        b: &[f32],
+        m: usize,
+        k: usize,
+        n: usize,
+    ) -> Result<Vec<f32>> {
+        check_operands(a, b, m, k, n)?;
+        match self.precision {
+            Precision::Fp32 => Ok(fp32_matmul(a, b, m, k, n)),
+            Precision::Hbfp { bits } => {
+                let qb = self.ctx.quantize(b, k, n, bits, &mut Rounding::NearestEven)?;
+                let plan = self.plans.get_or_plan(&self.ctx, m, k, n, (bits, bits))?;
+                let mut out = vec![0.0f32; plan.out_len()];
+                let outcome = plan.quantize_execute_guarded(
+                    a,
+                    &mut Rounding::NearestEven,
+                    &qb,
+                    &mut out,
+                    Some(&self.guard),
+                )?;
+                if outcome.tripped {
+                    self.tripped = true;
+                }
+                Ok(out)
+            }
+        }
+    }
+
+    /// Read-and-clear the sticky guard flag (the step driver polls this
+    /// once per step to turn a poisoned batch into a watchdog hazard).
+    pub fn take_tripped(&mut self) -> bool {
+        std::mem::take(&mut self.tripped)
+    }
+}
+
+fn check_operands(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Result<()> {
+    if a.len() != m * k {
+        return Err(anyhow!("gemm: a len {} != {m}x{k}", a.len()));
+    }
+    if b.len() != k * n {
+        return Err(anyhow!("gemm: b len {} != {k}x{n}", b.len()));
+    }
+    Ok(())
+}
+
+/// Row-major transpose (FP32 host op — exact, single-threaded, so it
+/// never perturbs determinism). The dW and dx GEMMs consume these.
+pub fn transpose(src: &[f32], rows: usize, cols: usize) -> Vec<f32> {
+    debug_assert_eq!(src.len(), rows * cols);
+    let mut out = vec![0.0f32; src.len()];
+    for r in 0..rows {
+        for c in 0..cols {
+            out[c * rows + r] = src[r * cols + c];
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn precision_parsing() {
+        assert_eq!(Precision::parse("fp32").unwrap(), Precision::Fp32);
+        assert_eq!(Precision::parse("hbfp8").unwrap(), Precision::Hbfp { bits: 8 });
+        assert_eq!(Precision::parse("hbfp12").unwrap(), Precision::Hbfp { bits: 12 });
+        assert!(Precision::parse("hbfp99").is_err(), "width class out of range");
+        assert!(Precision::parse("int8").is_err());
+        assert_eq!(Precision::Fp32.width_bits(), 32);
+        assert_eq!(Precision::Hbfp { bits: 8 }.width_bits(), 8);
+    }
+
+    #[test]
+    fn transpose_round_trips() {
+        let a: Vec<f32> = (0..6).map(|v| v as f32).collect();
+        let t = transpose(&a, 2, 3);
+        assert_eq!(t, vec![0.0, 3.0, 1.0, 4.0, 2.0, 5.0]);
+        assert_eq!(transpose(&t, 3, 2), a);
+    }
+
+    #[test]
+    fn gemm_shapes_validated() {
+        let mut nc = NnContext::new(BfpContext::from_env(), Precision::Fp32);
+        assert!(nc.gemm(&[1.0; 4], &[1.0; 4], 2, 2, 2).is_ok());
+        assert!(nc.gemm(&[1.0; 3], &[1.0; 4], 2, 2, 2).is_err());
+        assert!(nc.gemm(&[1.0; 4], &[1.0; 3], 2, 2, 2).is_err());
+    }
+}

@@ -1,0 +1,292 @@
+//! Trainable model graphs: the [`Model`] trait the session drives, plus
+//! the two workloads the paper's claim is demonstrated on — an [`Mlp`]
+//! over the synthetic image datasets (Figure 3's loss-tracking shape)
+//! and a [`CharLm`] (embedding → Elman RNN → tied-free linear head) over
+//! the synthetic Markov corpus (the Table 3 workload class).
+
+use anyhow::{anyhow, Result};
+
+use super::embedding::Embedding;
+use super::layer::{Layer, Param, Relu};
+use super::linear::Linear;
+use super::loss::SoftmaxCrossEntropy;
+use super::rnn::Rnn;
+use super::NnContext;
+use crate::runtime::HostTensor;
+use crate::util::rng::Xorshift32;
+
+fn as_i32(t: &HostTensor) -> Result<&[i32]> {
+    match t {
+        HostTensor::I32(v, _) => Ok(v),
+        other => Err(anyhow!("expected i32 tensor, got {:?}", other.shape())),
+    }
+}
+
+/// One trainable workload: forward+backward on a batch (gradients
+/// accumulate into params; the caller owns the optimizer step) and a
+/// forward-only eval. Both take batches in the `data/` pipeline's
+/// [`HostTensor`] layouts.
+pub trait Model {
+    /// Forward + backward; returns `(mean loss, accuracy)`. When the
+    /// loss is non-finite the backward pass is skipped (the standard
+    /// mixed-precision overflow-skip), leaving gradients untouched.
+    fn train_batch(
+        &mut self,
+        nc: &mut NnContext,
+        x: &HostTensor,
+        y: &HostTensor,
+    ) -> Result<(f32, f32)>;
+    /// Forward only; returns `(mean loss, error in [0,1])`.
+    fn eval_batch(
+        &mut self,
+        nc: &mut NnContext,
+        x: &HostTensor,
+        y: &HostTensor,
+    ) -> Result<(f32, f32)>;
+    fn params(&self) -> Vec<&Param>;
+    fn params_mut(&mut self) -> Vec<&mut Param>;
+}
+
+/// Multi-layer perceptron over flattened image batches
+/// (`[B, hw, hw, ch]` → `[B, in_dim]`): Linear → ReLU → … → Linear.
+pub struct Mlp {
+    layers: Vec<Box<dyn Layer>>,
+    loss: SoftmaxCrossEntropy,
+    pub in_dim: usize,
+    pub classes: usize,
+}
+
+impl Mlp {
+    pub fn new(in_dim: usize, hidden: &[usize], classes: usize, seed: u32) -> Mlp {
+        let mut rng = Xorshift32::substream(seed, 0x6e6e);
+        let mut layers: Vec<Box<dyn Layer>> = Vec::new();
+        let mut prev = in_dim;
+        for (i, &h) in hidden.iter().enumerate() {
+            layers.push(Box::new(Linear::new(&format!("fc{i}"), prev, h, &mut rng)));
+            layers.push(Box::new(Relu::new()));
+            prev = h;
+        }
+        layers.push(Box::new(Linear::new(
+            &format!("fc{}", hidden.len()),
+            prev,
+            classes,
+            &mut rng,
+        )));
+        Mlp { layers, loss: SoftmaxCrossEntropy::new(), in_dim, classes }
+    }
+
+    fn logits(&mut self, nc: &mut NnContext, x: &HostTensor) -> Result<(Vec<f32>, usize)> {
+        let xs = x.as_f32()?;
+        let rows = *x.shape().first().ok_or_else(|| anyhow!("scalar batch"))?;
+        if rows == 0 || xs.len() != rows * self.in_dim {
+            return Err(anyhow!("mlp: batch {} x {} != input {}", rows, self.in_dim, xs.len()));
+        }
+        let mut act = xs.to_vec();
+        for layer in &mut self.layers {
+            act = layer.forward(nc, &act, rows)?;
+        }
+        Ok((act, rows))
+    }
+}
+
+impl Model for Mlp {
+    fn train_batch(
+        &mut self,
+        nc: &mut NnContext,
+        x: &HostTensor,
+        y: &HostTensor,
+    ) -> Result<(f32, f32)> {
+        let (logits, rows) = self.logits(nc, x)?;
+        let (loss, acc) = self.loss.forward(&logits, as_i32(y)?, rows, self.classes)?;
+        if !loss.is_finite() {
+            return Ok((loss, acc));
+        }
+        let mut grad = self.loss.backward();
+        for layer in self.layers.iter_mut().rev() {
+            grad = layer.backward(nc, &grad, rows)?;
+        }
+        Ok((loss, acc))
+    }
+
+    fn eval_batch(
+        &mut self,
+        nc: &mut NnContext,
+        x: &HostTensor,
+        y: &HostTensor,
+    ) -> Result<(f32, f32)> {
+        let (logits, rows) = self.logits(nc, x)?;
+        let (loss, acc) = self.loss.forward(&logits, as_i32(y)?, rows, self.classes)?;
+        Ok((loss, 1.0 - acc))
+    }
+
+    fn params(&self) -> Vec<&Param> {
+        self.layers.iter().flat_map(|l| l.params()).collect()
+    }
+
+    fn params_mut(&mut self) -> Vec<&mut Param> {
+        self.layers.iter_mut().flat_map(|l| l.params_mut()).collect()
+    }
+}
+
+/// Character language model: embedding gather (FP32) → Elman RNN →
+/// linear vocab head, trained next-token over `[B, T]` token windows.
+/// Activations run timestep-major internally so each timestep's GEMM
+/// operand is contiguous.
+pub struct CharLm {
+    embed: Embedding,
+    rnn: Rnn,
+    head: Linear,
+    loss: SoftmaxCrossEntropy,
+    pub vocab: usize,
+}
+
+impl CharLm {
+    pub fn new(vocab: usize, embed_dim: usize, hidden: usize, seed: u32) -> CharLm {
+        let mut rng = Xorshift32::substream(seed, 0x1a6d);
+        CharLm {
+            embed: Embedding::new("embed", vocab, embed_dim, &mut rng),
+            rnn: Rnn::new("rnn", embed_dim, hidden, &mut rng),
+            head: Linear::new("head", hidden, vocab, &mut rng),
+            loss: SoftmaxCrossEntropy::new(),
+            vocab,
+        }
+    }
+
+    /// Reorder a `[B, T]` batch-major token tensor to timestep-major
+    /// (`out[t*B + b]`), the layout the recurrence consumes.
+    fn timestep_major(tokens: &[i32], batch: usize, t_len: usize) -> Vec<i32> {
+        let mut out = vec![0i32; tokens.len()];
+        for b in 0..batch {
+            for t in 0..t_len {
+                out[t * batch + b] = tokens[b * t_len + t];
+            }
+        }
+        out
+    }
+
+    fn logits(
+        &mut self,
+        nc: &mut NnContext,
+        x: &HostTensor,
+    ) -> Result<(Vec<f32>, usize, usize)> {
+        let xs = as_i32(x)?;
+        let shape = x.shape();
+        if shape.len() != 2 {
+            return Err(anyhow!("charlm: want [B, T] tokens, got {shape:?}"));
+        }
+        let (batch, t_len) = (shape[0], shape[1]);
+        if batch == 0 || t_len == 0 {
+            return Err(anyhow!("charlm: empty batch"));
+        }
+        let tokens_tm = Self::timestep_major(xs, batch, t_len);
+        let emb = self.embed.forward(&tokens_tm)?;
+        let h = self.rnn.forward(nc, &emb, batch, t_len)?;
+        let logits = self.head.forward(nc, &h, t_len * batch)?;
+        Ok((logits, batch, t_len))
+    }
+}
+
+impl Model for CharLm {
+    fn train_batch(
+        &mut self,
+        nc: &mut NnContext,
+        x: &HostTensor,
+        y: &HostTensor,
+    ) -> Result<(f32, f32)> {
+        let (logits, batch, t_len) = self.logits(nc, x)?;
+        let targets_tm = Self::timestep_major(as_i32(y)?, batch, t_len);
+        let (loss, acc) = self.loss.forward(&logits, &targets_tm, t_len * batch, self.vocab)?;
+        if !loss.is_finite() {
+            return Ok((loss, acc));
+        }
+        let grad = self.loss.backward();
+        let grad = self.head.backward(nc, &grad, t_len * batch)?;
+        let grad = self.rnn.backward(nc, &grad)?;
+        self.embed.backward(&grad)?;
+        Ok((loss, acc))
+    }
+
+    fn eval_batch(
+        &mut self,
+        nc: &mut NnContext,
+        x: &HostTensor,
+        y: &HostTensor,
+    ) -> Result<(f32, f32)> {
+        let (logits, batch, t_len) = self.logits(nc, x)?;
+        let targets_tm = Self::timestep_major(as_i32(y)?, batch, t_len);
+        let (loss, acc) = self.loss.forward(&logits, &targets_tm, t_len * batch, self.vocab)?;
+        Ok((loss, 1.0 - acc))
+    }
+
+    fn params(&self) -> Vec<&Param> {
+        let mut ps = vec![&self.embed.table];
+        ps.extend(self.rnn.params());
+        ps.extend(self.head.params());
+        ps
+    }
+
+    fn params_mut(&mut self) -> Vec<&mut Param> {
+        let mut ps = vec![&mut self.embed.table];
+        ps.extend(self.rnn.params_mut());
+        ps.extend(self.head.params_mut());
+        ps
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bfp::BfpContext;
+    use crate::nn::{Optimizer, Precision};
+
+    #[test]
+    fn mlp_learns_a_linearly_separable_toy() {
+        let mut nc = NnContext::new(BfpContext::from_env(), Precision::Fp32);
+        let mut m = Mlp::new(4, &[8], 2, 3);
+        let opt = Optimizer::Momentum { mu: 0.9 };
+        // class = sign of feature 0
+        let x = HostTensor::F32(
+            vec![
+                1.0, 0.1, -0.2, 0.0, //
+                -1.0, 0.2, 0.1, 0.3, //
+                0.8, -0.3, 0.2, -0.1, //
+                -0.9, 0.0, -0.1, 0.2,
+            ],
+            vec![4, 4],
+        );
+        let y = HostTensor::I32(vec![0, 1, 0, 1], vec![4]);
+        let (first, _) = m.train_batch(&mut nc, &x, &y).unwrap();
+        for p in m.params_mut() {
+            opt.update(p, 0.1);
+        }
+        let mut last = first;
+        for _ in 0..60 {
+            let (l, _) = m.train_batch(&mut nc, &x, &y).unwrap();
+            for p in m.params_mut() {
+                opt.update(p, 0.1);
+            }
+            last = l;
+        }
+        assert!(last < first * 0.3, "loss {first} -> {last} should collapse on 4 points");
+        let (_, err) = m.eval_batch(&mut nc, &x, &y).unwrap();
+        assert_eq!(err, 0.0);
+    }
+
+    #[test]
+    fn charlm_shapes_and_param_census() {
+        let mut nc = NnContext::new(BfpContext::from_env(), Precision::Fp32);
+        let mut m = CharLm::new(8, 4, 6, 3);
+        assert_eq!(m.params().len(), 1 + 3 + 2, "embed + rnn(wx,wh,b) + head(w,b)");
+        let x = HostTensor::I32(vec![1, 2, 3, 4, 5, 6], vec![2, 3]);
+        let y = HostTensor::I32(vec![2, 3, 4, 5, 6, 7], vec![2, 3]);
+        let (loss, _) = m.train_batch(&mut nc, &x, &y).unwrap();
+        assert!(loss.is_finite() && loss > 0.0);
+        assert!(m.params().iter().any(|p| p.g.iter().any(|&g| g != 0.0)), "grads flowed");
+    }
+
+    #[test]
+    fn timestep_major_reorders() {
+        let tm = CharLm::timestep_major(&[1, 2, 3, 4, 5, 6], 2, 3);
+        assert_eq!(tm, vec![1, 4, 2, 5, 3, 6]);
+    }
+}

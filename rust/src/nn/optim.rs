@@ -1,0 +1,61 @@
+//! Optimizers over FP32 master weights. Per the hybrid split the
+//! optimizer never sees BFP: gradients arrive FP32 (dequantized GEMM
+//! outputs), state (momentum) is FP32, and the updated master weights
+//! are re-quantized at the next step's GEMMs.
+
+use super::layer::Param;
+
+#[derive(Debug, Clone, Copy)]
+pub enum Optimizer {
+    Sgd,
+    /// Classical momentum: `v = mu·v + g; w -= lr·v`.
+    Momentum { mu: f32 },
+}
+
+impl Optimizer {
+    /// Apply one update to `p` and clear its gradient accumulator.
+    pub fn update(&self, p: &mut Param, lr: f32) {
+        match *self {
+            Optimizer::Sgd => {
+                for (w, g) in p.w.iter_mut().zip(&p.g) {
+                    *w -= lr * g;
+                }
+            }
+            Optimizer::Momentum { mu } => {
+                for i in 0..p.w.len() {
+                    p.v[i] = mu * p.v[i] + p.g[i];
+                    p.w[i] -= lr * p.v[i];
+                }
+            }
+        }
+        p.zero_grad();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sgd_steps_downhill_and_clears_grads() {
+        let mut p = Param::new("p", vec![2], vec![1.0, -1.0]);
+        p.g = vec![0.5, -0.5];
+        Optimizer::Sgd.update(&mut p, 0.1);
+        assert_eq!(p.w, vec![0.95, -0.95]);
+        assert_eq!(p.g, vec![0.0, 0.0]);
+    }
+
+    #[test]
+    fn momentum_accumulates_velocity() {
+        let mut p = Param::new("p", vec![1], vec![0.0]);
+        let opt = Optimizer::Momentum { mu: 0.5 };
+        p.g = vec![1.0];
+        opt.update(&mut p, 1.0);
+        assert_eq!(p.v, vec![1.0]);
+        assert_eq!(p.w, vec![-1.0]);
+        p.g = vec![1.0];
+        opt.update(&mut p, 1.0);
+        assert_eq!(p.v, vec![1.5], "v = 0.5*1 + 1");
+        assert_eq!(p.w, vec![-2.5]);
+    }
+}

@@ -1,0 +1,185 @@
+//! Elman recurrent block for the char-LM: `h_t = tanh(x_t·Wx + h_{t-1}·Wh + b)`.
+//!
+//! Activations are timestep-major (`[T*B, dim]`, t outermost) so each
+//! timestep's `[B, dim]` slab is contiguous for the GEMMs. Per step the
+//! block runs `2T` forward GEMMs and `4T` backward GEMMs (dWx, dWh,
+//! dh-carry, dx per timestep) — every one through the session's BFP
+//! plan cache, where the four distinct shapes are warm after the first
+//! timestep. Full backprop-through-time over the window (no
+//! truncation: the window *is* the truncation, as in the paper's LSTM
+//! training with fixed-length sequences); tanh, the bias, and all
+//! gradient accumulation stay FP32.
+
+use anyhow::{anyhow, Result};
+
+use super::layer::Param;
+use super::{transpose, NnContext};
+use crate::util::rng::Xorshift32;
+
+pub struct Rnn {
+    pub wx: Param,
+    pub wh: Param,
+    pub b: Param,
+    pub in_dim: usize,
+    pub hidden: usize,
+    cached_x: Vec<f32>,
+    cached_h: Vec<f32>,
+    batch: usize,
+    t_len: usize,
+}
+
+impl Rnn {
+    pub fn new(name: &str, in_dim: usize, hidden: usize, rng: &mut Xorshift32) -> Rnn {
+        let lx = (6.0 / (in_dim + hidden) as f32).sqrt();
+        let lh = (6.0 / (2 * hidden) as f32).sqrt();
+        Rnn {
+            wx: Param::init_uniform(&format!("{name}.wx"), vec![in_dim, hidden], lx, rng),
+            wh: Param::init_uniform(&format!("{name}.wh"), vec![hidden, hidden], lh, rng),
+            b: Param::zeros(&format!("{name}.b"), vec![hidden]),
+            in_dim,
+            hidden,
+            cached_x: Vec::new(),
+            cached_h: Vec::new(),
+            batch: 0,
+            t_len: 0,
+        }
+    }
+
+    /// `x`: timestep-major `[T*B, in]`; returns all hidden states
+    /// `[T*B, hidden]`, timestep-major. The initial hidden state is zero
+    /// (stateless windows, matching the dataset's independent slices).
+    pub fn forward(
+        &mut self,
+        nc: &mut NnContext,
+        x: &[f32],
+        batch: usize,
+        t_len: usize,
+    ) -> Result<Vec<f32>> {
+        if x.len() != t_len * batch * self.in_dim {
+            return Err(anyhow!(
+                "{}: input len {} != {t_len}x{batch}x{}",
+                self.wx.name,
+                x.len(),
+                self.in_dim
+            ));
+        }
+        let (bsz, hid) = (batch, self.hidden);
+        let mut all_h = Vec::with_capacity(t_len * bsz * hid);
+        let mut h_prev = vec![0.0f32; bsz * hid];
+        for t in 0..t_len {
+            let xt = &x[t * bsz * self.in_dim..(t + 1) * bsz * self.in_dim];
+            // Data-facing GEMM guarded; the recurrent GEMM consumes our
+            // own (finite) hidden state.
+            let mut pre = nc.gemm_guarded(xt, &self.wx.w, bsz, self.in_dim, hid)?;
+            let rec = nc.gemm(&h_prev, &self.wh.w, bsz, hid, hid)?;
+            for i in 0..pre.len() {
+                pre[i] = (pre[i] + rec[i] + self.b.w[i % hid]).tanh();
+            }
+            all_h.extend_from_slice(&pre);
+            h_prev = pre;
+        }
+        self.cached_x = x.to_vec();
+        self.cached_h = all_h.clone();
+        self.batch = batch;
+        self.t_len = t_len;
+        Ok(all_h)
+    }
+
+    /// BPTT: `dy` is the gradient at every hidden state (`[T*B, hidden]`,
+    /// timestep-major); returns the gradient at the inputs.
+    pub fn backward(&mut self, nc: &mut NnContext, dy: &[f32]) -> Result<Vec<f32>> {
+        let (bsz, tl, ind, hid) = (self.batch, self.t_len, self.in_dim, self.hidden);
+        if dy.len() != tl * bsz * hid || self.cached_h.len() != tl * bsz * hid {
+            return Err(anyhow!("{}: backward before forward (or bad grad len)", self.wx.name));
+        }
+        // Hoisted transposed weights: one conversion per backward pass,
+        // not per timestep.
+        let wht = transpose(&self.wh.w, hid, hid);
+        let wxt = transpose(&self.wx.w, ind, hid);
+        let zeros = vec![0.0f32; bsz * hid];
+        let mut dx = vec![0.0f32; tl * bsz * ind];
+        let mut dh_carry = vec![0.0f32; bsz * hid];
+        for t in (0..tl).rev() {
+            let h_t = &self.cached_h[t * bsz * hid..(t + 1) * bsz * hid];
+            // through tanh: dpre = (dy_t + carry) * (1 - h_t²)
+            let mut dpre = vec![0.0f32; bsz * hid];
+            for i in 0..dpre.len() {
+                let total = dy[t * bsz * hid + i] + dh_carry[i];
+                dpre[i] = total * (1.0 - h_t[i] * h_t[i]);
+            }
+            // dWx += x_tᵀ · dpre
+            let xt = &self.cached_x[t * bsz * ind..(t + 1) * bsz * ind];
+            let xtt = transpose(xt, bsz, ind);
+            let dwx = nc.gemm(&xtt, &dpre, ind, bsz, hid)?;
+            for (g, d) in self.wx.g.iter_mut().zip(&dwx) {
+                *g += d;
+            }
+            // dWh += h_{t-1}ᵀ · dpre (h_{-1} = 0)
+            let h_prev = if t == 0 {
+                &zeros[..]
+            } else {
+                &self.cached_h[(t - 1) * bsz * hid..t * bsz * hid]
+            };
+            let hpt = transpose(h_prev, bsz, hid);
+            let dwh = nc.gemm(&hpt, &dpre, hid, bsz, hid)?;
+            for (g, d) in self.wh.g.iter_mut().zip(&dwh) {
+                *g += d;
+            }
+            // db += column-sum(dpre)
+            for r in 0..bsz {
+                let row = &dpre[r * hid..(r + 1) * hid];
+                for (g, d) in self.b.g.iter_mut().zip(row) {
+                    *g += d;
+                }
+            }
+            // carry into t-1 and input gradient at t
+            dh_carry = nc.gemm(&dpre, &wht, bsz, hid, hid)?;
+            let dxt = nc.gemm(&dpre, &wxt, bsz, hid, ind)?;
+            dx[t * bsz * ind..(t + 1) * bsz * ind].copy_from_slice(&dxt);
+        }
+        Ok(dx)
+    }
+
+    pub fn params(&self) -> Vec<&Param> {
+        vec![&self.wx, &self.wh, &self.b]
+    }
+
+    pub fn params_mut(&mut self) -> Vec<&mut Param> {
+        vec![&mut self.wx, &mut self.wh, &mut self.b]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bfp::BfpContext;
+    use crate::nn::Precision;
+
+    #[test]
+    fn forward_shapes_and_tanh_range() {
+        let mut rng = Xorshift32::new(7);
+        let mut r = Rnn::new("rnn", 3, 5, &mut rng);
+        let mut nc = NnContext::new(BfpContext::from_env(), Precision::Fp32);
+        let x = vec![0.3f32; 4 * 2 * 3]; // T=4, B=2, in=3
+        let h = r.forward(&mut nc, &x, 2, 4).unwrap();
+        assert_eq!(h.len(), 4 * 2 * 5);
+        assert!(h.iter().all(|v| v.abs() <= 1.0));
+        let dx = r.backward(&mut nc, &vec![0.1f32; h.len()]).unwrap();
+        assert_eq!(dx.len(), x.len());
+    }
+
+    #[test]
+    fn recurrence_feeds_forward() {
+        // With Wh = 0 every timestep is independent; with Wh != 0 a
+        // change at t=0 must reach t=1.
+        let mut rng = Xorshift32::new(8);
+        let mut r = Rnn::new("rnn", 2, 2, &mut rng);
+        let mut nc = NnContext::new(BfpContext::from_env(), Precision::Fp32);
+        let mut x = vec![0.5f32; 2 * 1 * 2]; // T=2, B=1
+        let h1 = r.forward(&mut nc, &x, 1, 2).unwrap();
+        x[0] += 1.0; // perturb only t=0
+        let h2 = r.forward(&mut nc, &x, 1, 2).unwrap();
+        let late_delta: f32 = h1[2..].iter().zip(&h2[2..]).map(|(a, b)| (a - b).abs()).sum();
+        assert!(late_delta > 1e-6, "t=1 hidden state must depend on t=0 input");
+    }
+}

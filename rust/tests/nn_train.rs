@@ -1,0 +1,368 @@
+//! Native `nn` training-path integration:
+//!
+//! (a) finite-difference gradient checks for every layer at FP32,
+//! (b) GEMM-level bit-identity of the HBFP path against
+//!     `bfp_matmul_naive` (the spec kernel),
+//! (c) a 200-step MLP smoke: loss decreases, curves are bitwise
+//!     identical at 1 vs 4 threads, plan cache warms, datasets are
+//!     reused across the FP32-vs-HBFP combo pair,
+//! (d) the watchdog: an injected `nan-activation` fault mid-run is
+//!     detected at the GEMM guard (not the loss — ReLU and softmax can
+//!     both absorb a NaN), rolled back, widened away, and the run
+//!     finishes clean and deterministic.
+//!
+//! Injector discipline: every test that steps a model installs an
+//! explicit injector, which serializes them on the install lock and
+//! shields them from `HBFP_FAULT` (the CI fault matrix only drives the
+//! `fault_tolerance` binary).
+
+use hbfp::bfp::{bfp_matmul_naive, BfpContext, Rounding, TileSize};
+use hbfp::coordinator::metrics::{RecoveryAction, RecoveryKind};
+use hbfp::coordinator::{run_resilient, FaultTolerantModel, LrSchedule, RunConfig};
+use hbfp::nn::{
+    Embedding, Layer, Linear, NnContext, Precision, Relu, Rnn, SoftmaxCrossEntropy, Tanh, Trainer,
+};
+use hbfp::util::fault::{self, FaultInjector, FaultSite, FaultSpec};
+use hbfp::util::rng::Xorshift32;
+
+fn fp32_nc() -> NnContext {
+    NnContext::new(BfpContext::from_env().with_threads(1), Precision::Fp32)
+}
+
+fn dot(a: &[f32], b: &[f32]) -> f32 {
+    a.iter().zip(b).map(|(x, y)| x * y).sum()
+}
+
+/// `|fd - analytic|` within a relative-ish tolerance: FD with eps=1e-2
+/// on O(1) values carries ~1e-5 rounding noise and ~eps^2 truncation.
+fn assert_close(fd: f32, g: f32, what: &str) {
+    assert!(
+        (fd - g).abs() <= 1e-2 * (1.0 + g.abs()),
+        "{what}: finite-difference {fd} vs analytic {g}"
+    );
+}
+
+const EPS: f32 = 1e-2;
+
+// ---------------------------------------------------------------- (a) --
+
+#[test]
+fn fd_gradients_linear() {
+    let mut rng = Xorshift32::new(31);
+    let mut layer = Linear::new("fc", 3, 2, &mut rng);
+    let mut nc = fp32_nc();
+    let rows = 2;
+    let x = vec![0.5, -0.3, 0.8, 1.2, 0.1, -0.7];
+    let r = vec![0.7, -0.4, 0.2, 0.9];
+
+    layer.forward(&mut nc, &x, rows).unwrap();
+    let dx = layer.backward(&mut nc, &r, rows).unwrap();
+    let grad_w = layer.w.g.clone();
+    let grad_b = layer.b.g.clone();
+
+    for i in 0..grad_w.len() {
+        let orig = layer.w.w[i];
+        layer.w.w[i] = orig + EPS;
+        let yp = layer.forward(&mut nc, &x, rows).unwrap();
+        layer.w.w[i] = orig - EPS;
+        let ym = layer.forward(&mut nc, &x, rows).unwrap();
+        layer.w.w[i] = orig;
+        assert_close((dot(&yp, &r) - dot(&ym, &r)) / (2.0 * EPS), grad_w[i], "linear w");
+    }
+    for i in 0..grad_b.len() {
+        let orig = layer.b.w[i];
+        layer.b.w[i] = orig + EPS;
+        let yp = layer.forward(&mut nc, &x, rows).unwrap();
+        layer.b.w[i] = orig - EPS;
+        let ym = layer.forward(&mut nc, &x, rows).unwrap();
+        layer.b.w[i] = orig;
+        assert_close((dot(&yp, &r) - dot(&ym, &r)) / (2.0 * EPS), grad_b[i], "linear b");
+    }
+    for i in 0..x.len() {
+        let mut xp = x.clone();
+        xp[i] += EPS;
+        let yp = layer.forward(&mut nc, &xp, rows).unwrap();
+        let mut xm = x.clone();
+        xm[i] -= EPS;
+        let ym = layer.forward(&mut nc, &xm, rows).unwrap();
+        assert_close((dot(&yp, &r) - dot(&ym, &r)) / (2.0 * EPS), dx[i], "linear dx");
+    }
+}
+
+#[test]
+fn fd_gradients_activations() {
+    // Inputs chosen away from the ReLU kink (FD is invalid at 0).
+    let x = vec![0.5, -0.3, 1.2, -0.7];
+    let r = vec![0.3, 0.9, -0.5, 0.4];
+    let mut nc = fp32_nc();
+    for (name, layer) in
+        [("relu", Box::new(Relu::new()) as Box<dyn Layer>), ("tanh", Box::new(Tanh::new()))]
+    {
+        let mut layer = layer;
+        layer.forward(&mut nc, &x, 2).unwrap();
+        let dx = layer.backward(&mut nc, &r, 2).unwrap();
+        for i in 0..x.len() {
+            let mut xp = x.clone();
+            xp[i] += EPS;
+            let yp = layer.forward(&mut nc, &xp, 2).unwrap();
+            let mut xm = x.clone();
+            xm[i] -= EPS;
+            let ym = layer.forward(&mut nc, &xm, 2).unwrap();
+            assert_close((dot(&yp, &r) - dot(&ym, &r)) / (2.0 * EPS), dx[i], name);
+        }
+    }
+}
+
+#[test]
+fn fd_gradients_rnn() {
+    let mut rng = Xorshift32::new(32);
+    let mut rnn = Rnn::new("rnn", 2, 3, &mut rng);
+    let mut nc = fp32_nc();
+    let (batch, t_len) = (2, 2);
+    let x = vec![0.4, -0.2, 0.7, 0.1, -0.5, 0.3, 0.2, -0.8];
+    let r: Vec<f32> =
+        (0..t_len * batch * 3).map(|i| 0.3 + 0.1 * (i as f32) * if i % 2 == 0 { 1.0 } else { -1.0 }).collect();
+
+    rnn.forward(&mut nc, &x, batch, t_len).unwrap();
+    let dx = rnn.backward(&mut nc, &r).unwrap();
+    let (gwx, gwh, gb) = (rnn.wx.g.clone(), rnn.wh.g.clone(), rnn.b.g.clone());
+
+    let fd_param = |rnn: &mut Rnn, nc: &mut NnContext, which: usize, i: usize| -> f32 {
+        let bump = |rnn: &mut Rnn, d: f32| match which {
+            0 => rnn.wx.w[i] += d,
+            1 => rnn.wh.w[i] += d,
+            _ => rnn.b.w[i] += d,
+        };
+        bump(rnn, EPS);
+        let yp = rnn.forward(nc, &x, batch, t_len).unwrap();
+        bump(rnn, -2.0 * EPS);
+        let ym = rnn.forward(nc, &x, batch, t_len).unwrap();
+        bump(rnn, EPS);
+        (dot(&yp, &r) - dot(&ym, &r)) / (2.0 * EPS)
+    };
+    for i in 0..gwx.len() {
+        let fd = fd_param(&mut rnn, &mut nc, 0, i);
+        assert_close(fd, gwx[i], "rnn wx");
+    }
+    for i in 0..gwh.len() {
+        let fd = fd_param(&mut rnn, &mut nc, 1, i);
+        assert_close(fd, gwh[i], "rnn wh");
+    }
+    for i in 0..gb.len() {
+        let fd = fd_param(&mut rnn, &mut nc, 2, i);
+        assert_close(fd, gb[i], "rnn b");
+    }
+    for i in 0..x.len() {
+        let mut xp = x.clone();
+        xp[i] += EPS;
+        let yp = rnn.forward(&mut nc, &xp, batch, t_len).unwrap();
+        let mut xm = x.clone();
+        xm[i] -= EPS;
+        let ym = rnn.forward(&mut nc, &xm, batch, t_len).unwrap();
+        assert_close((dot(&yp, &r) - dot(&ym, &r)) / (2.0 * EPS), dx[i], "rnn dx");
+    }
+}
+
+#[test]
+fn fd_gradients_embedding() {
+    let mut rng = Xorshift32::new(33);
+    let mut emb = Embedding::new("emb", 5, 3, &mut rng);
+    let tokens = [1i32, 4, 1];
+    let r = vec![0.5, -0.2, 0.8, 0.3, 0.7, -0.6, 0.1, 0.4, 0.9];
+
+    emb.forward(&tokens).unwrap();
+    emb.backward(&r).unwrap();
+    let grad = emb.table.g.clone();
+
+    for i in 0..grad.len() {
+        let orig = emb.table.w[i];
+        emb.table.w[i] = orig + EPS;
+        let yp = emb.forward(&tokens).unwrap();
+        emb.table.w[i] = orig - EPS;
+        let ym = emb.forward(&tokens).unwrap();
+        emb.table.w[i] = orig;
+        assert_close((dot(&yp, &r) - dot(&ym, &r)) / (2.0 * EPS), grad[i], "embedding table");
+    }
+}
+
+#[test]
+fn fd_gradients_softmax_xent() {
+    let mut loss = SoftmaxCrossEntropy::new();
+    let logits = vec![1.0, -0.5, 0.3, 0.2, 0.8, -1.1];
+    let targets = [2i32, 0];
+    let (_, _) = loss.forward(&logits, &targets, 2, 3).unwrap();
+    let grad = loss.backward();
+    for i in 0..logits.len() {
+        let mut lp = logits.clone();
+        lp[i] += EPS;
+        let (fp, _) = loss.forward(&lp, &targets, 2, 3).unwrap();
+        let mut lm = logits.clone();
+        lm[i] -= EPS;
+        let (fm, _) = loss.forward(&lm, &targets, 2, 3).unwrap();
+        assert_close((fp - fm) / (2.0 * EPS), grad[i], "softmax-xent");
+    }
+}
+
+// ---------------------------------------------------------------- (b) --
+
+#[test]
+fn hbfp_gemm_bit_identical_to_naive_reference() {
+    let mut a = Vec::new();
+    let mut b = Vec::new();
+    let mut rng = Xorshift32::new(44);
+    let (m, k, n) = (5, 9, 4);
+    for _ in 0..m * k {
+        a.push(rng.next_f32() * 2.0 - 1.0);
+    }
+    for _ in 0..k * n {
+        b.push(rng.next_f32() * 2.0 - 1.0);
+    }
+    for threads in [1usize, 4] {
+        let ctx = BfpContext::from_env().with_threads(threads).with_tile(TileSize::Edge(8));
+        let qa = ctx.quantize(&a, m, k, 8, &mut Rounding::NearestEven).unwrap();
+        let qb = ctx.quantize(&b, k, n, 8, &mut Rounding::NearestEven).unwrap();
+        let reference = bfp_matmul_naive(&qa, &qb).unwrap();
+
+        let mut nc = NnContext::new(ctx, Precision::Hbfp { bits: 8 });
+        let got = nc.gemm(&a, &b, m, k, n).unwrap();
+        assert_eq!(got.len(), reference.len());
+        for (i, (g, r)) in got.iter().zip(&reference).enumerate() {
+            assert_eq!(
+                g.to_bits(),
+                r.to_bits(),
+                "nn gemm[{i}] {g} != naive {r} at {threads} threads"
+            );
+        }
+        // second call at the same shape must be a plan-cache hit
+        nc.gemm(&a, &b, m, k, n).unwrap();
+        assert_eq!((nc.plans.misses(), nc.plans.hits()), (1, 1));
+    }
+}
+
+// ---------------------------------------------------------------- (c) --
+
+#[test]
+fn mlp_smoke_learns_reuses_datasets_and_is_thread_invariant() {
+    let _guard = fault::install(FaultInjector::none());
+    let steps = 200;
+    let t1 = Trainer::with_context(BfpContext::from_env().with_threads(1));
+    let t4 = Trainer::with_context(BfpContext::from_env().with_threads(4));
+    for (i, combo) in ["mlp-tinyimg-fp32", "mlp-tinyimg-hbfp8_t8"].iter().enumerate() {
+        let cfg = RunConfig::new(combo, steps)
+            .with_seed(5)
+            .with_lr(LrSchedule::Constant { lr: 0.02 });
+        let r1 = t1.run(&cfg).unwrap();
+        assert_eq!(r1.history.steps.len(), steps, "{combo}");
+        assert!(!r1.history.diverged(), "{combo}");
+        let head: f32 =
+            r1.history.steps[..20].iter().map(|s| s.loss).sum::<f32>() / 20.0;
+        let tail = r1.history.tail_loss(20).unwrap();
+        assert!(
+            tail < head,
+            "{combo}: loss must decrease ({head} -> {tail} over {steps} steps)"
+        );
+        assert!(!r1.history.evals.is_empty(), "{combo}: final eval always runs");
+        if combo.contains("hbfp") {
+            assert!(r1.plan_misses > 0 && r1.plan_hits > 0, "{combo}: plan cache must warm");
+        } else {
+            assert_eq!(r1.plan_hits + r1.plan_misses, 0, "{combo}: fp32 never plans");
+        }
+        if i > 0 {
+            assert!(
+                r1.dataset_cache_hit,
+                "second combo over the same (dataset, seed) must reuse the generated dataset"
+            );
+            assert!(t1.dataset_cache().hits() >= 1);
+        }
+
+        let r4 = t4.run(&cfg).unwrap();
+        let c1: Vec<u32> = r1.history.steps.iter().map(|s| s.loss.to_bits()).collect();
+        let c4: Vec<u32> = r4.history.steps.iter().map(|s| s.loss.to_bits()).collect();
+        assert_eq!(c1, c4, "{combo}: loss curve must be bitwise identical at 1 vs 4 threads");
+        let e1: Vec<(usize, u32)> =
+            r1.history.evals.iter().map(|e| (e.step, e.loss.to_bits())).collect();
+        let e4: Vec<(usize, u32)> =
+            r4.history.evals.iter().map(|e| (e.step, e.loss.to_bits())).collect();
+        assert_eq!(e1, e4, "{combo}: eval records must match bitwise too");
+    }
+}
+
+// ---------------------------------------------------------------- (d) --
+
+#[test]
+fn watchdog_recovers_injected_nan_via_guard_and_stays_deterministic() {
+    // rate 1.0 while the width class is <= 8 bits: the first step always
+    // poisons an activation. ReLU would silently map that NaN to 0 and
+    // the loss would come out finite — the hazard must instead surface
+    // through the GEMM input scan as a StepError.
+    let _guard = fault::install(FaultInjector::from_specs(&[FaultSpec {
+        site: FaultSite::NanActivation,
+        rate: 1.0,
+        seed: 1,
+    }]));
+    let run = |name: &str| {
+        let dir = std::env::temp_dir().join(format!("hbfp_nn_wd_{name}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut cfg = RunConfig::new("mlp-tinyimg-hbfp8_t8", 20)
+            .with_seed(9)
+            .with_lr(LrSchedule::Constant { lr: 0.02 })
+            .with_checkpoint_every(5)
+            .with_max_recoveries(3);
+        cfg.checkpoint_dir = Some(dir.clone());
+        let trainer = Trainer::with_context(BfpContext::from_env().with_threads(1));
+        let mut session = trainer.session(&cfg).unwrap();
+        let history = run_resilient(&mut session, &cfg).unwrap();
+        let width = session.width();
+        let _ = std::fs::remove_dir_all(&dir);
+        (history, width)
+    };
+
+    let (h, width) = run("a");
+    assert_eq!(h.steps.len(), 20, "run must complete after recovery");
+    assert!(!h.diverged(), "recovered history must not contain a poisoned step");
+    assert_eq!(width, 16, "widened 8 -> 16");
+    assert_eq!(h.recoveries.len(), 1);
+    let r = &h.recoveries[0];
+    assert_eq!(
+        r.kind,
+        RecoveryKind::StepError,
+        "hazard must arrive via the guard trip, not the loss value: {}",
+        r.detail
+    );
+    assert_eq!(r.action, RecoveryAction::Restart, "no checkpoint existed before step 0");
+    assert!(r.detail.contains("guard tripped"), "detail: {}", r.detail);
+    let g = h.guard.as_ref().expect("session surfaces guard stats");
+    assert!(g.nonfinite_inputs >= 1, "scan saw the NaN");
+    assert!(g.fp32_fallbacks >= 1, "poisoned GEMM degraded to fp32 instead of aborting");
+
+    // Bitwise determinism across a full detect-rollback-widen cycle.
+    let (h2, width2) = run("b");
+    assert_eq!(width2, 16);
+    let c1: Vec<u32> = h.steps.iter().map(|s| s.loss.to_bits()).collect();
+    let c2: Vec<u32> = h2.steps.iter().map(|s| s.loss.to_bits()).collect();
+    assert_eq!(c1, c2, "recovery replay must be bitwise deterministic");
+}
+
+// -------------------------------------------------- session lifecycle --
+
+#[test]
+fn session_state_roundtrips_through_checkpoint_leaves() {
+    let _guard = fault::install(FaultInjector::none());
+    let trainer = Trainer::with_context(BfpContext::from_env().with_threads(1));
+    let cfg = RunConfig::new("mlp-tinyimg-hbfp8_t8", 4).with_seed(3);
+    let mut s1 = trainer.session(&cfg).unwrap();
+    let mut s2 = trainer.session(&cfg).unwrap();
+    // advance s1 a few steps, then clone its state into s2
+    for step in 0..3 {
+        s1.step(step, 0.02).unwrap();
+    }
+    let leaves = s1.state();
+    assert_eq!(leaves.len(), s1.specs().len());
+    s2.restore(&leaves).unwrap();
+    // both sessions now step identically (same batch schedule, same state)
+    let (l1, _) = s1.step(3, 0.02).unwrap();
+    let (l2, _) = s2.step(3, 0.02).unwrap();
+    assert_eq!(l1.to_bits(), l2.to_bits(), "restored session must replay bit-identically");
+    // a truncated leaf vector is rejected
+    assert!(s2.restore(&leaves[..leaves.len() - 1]).is_err());
+}
