@@ -5,7 +5,7 @@
 # quick run intended for committing the refreshed baseline so PRs leave
 # a perf trajectory.
 
-.PHONY: check fmt build test lint examples perf bench-quick perf-record train-smoke
+.PHONY: check fmt build test lint examples perf bench-quick perf-record train-smoke obs-smoke
 
 check: fmt build test
 
@@ -44,3 +44,24 @@ perf-record: bench-quick
 train-smoke:
 	HBFP_THREADS=1 cargo run --release --example train_cifar -- --steps 50 --max-loss 2.2
 	HBFP_THREADS=4 cargo run --release --example train_cifar -- --steps 50 --max-loss 2.2
+
+# Observability smoke (the CI obs-smoke job). Full telemetry must not
+# move a single bit of the training curve: the 50-step run repeats with
+# HBFP_OBS=off and =full and the curve CSVs must match exactly once the
+# wall-clock secs column is stripped (`cut -f1-5`). Off mode must emit
+# no "obs" section at all; full mode must carry the numeric-health
+# schema (per-layer SNR/clamp/exponent keys + stage timings). Finishes
+# with the obs_demo trace artifact and the obs integration suite
+# (thread-invariance, counter conservation).
+obs-smoke:
+	rm -rf results/obs_smoke && mkdir -p results/obs_smoke
+	HBFP_OBS=off HBFP_THREADS=4 cargo run --release --example train_cifar -- --steps 50 --max-loss 2.2
+	for f in results/e2e_*.csv; do cut -d, -f1-5 "$$f" > "results/obs_smoke/off_$$(basename $$f)"; done
+	! grep -q '"obs"' results/e2e_mlp-cifar10like-hbfp8_t24.metrics.json
+	HBFP_OBS=full HBFP_THREADS=4 cargo run --release --example train_cifar -- --steps 50 --max-loss 2.2
+	for f in results/e2e_*.csv; do cut -d, -f1-5 "$$f" | diff - "results/obs_smoke/off_$$(basename $$f)" || exit 1; done
+	for key in '"obs"' '"health"' '"stage_us"' '"stage_totals_us"' '"snr_db"' '"clamp_frac"' '"sat_frac"' '"exp_span"'; do \
+		grep -q "$$key" results/e2e_mlp-cifar10like-hbfp8_t24.metrics.json || { echo "obs-smoke: metrics JSON missing $$key"; exit 1; }; done
+	HBFP_THREADS=4 cargo run --release --example obs_demo
+	test -s results/trace.json && grep -q traceEvents results/trace.json
+	cargo test -q --test obs

@@ -1,0 +1,125 @@
+//! Observability walkthrough: run a short MLP training burst and a
+//! serving burst with `HBFP_OBS=full`, then dump everything the layer
+//! collected — the per-layer numeric-health timeline (block-exponent
+//! spread, clamp/saturation rates, quantization SNR), per-step stage
+//! timings, the unified metrics registry (guard + plan cache + dataset
+//! cache + datapath counters + pool lanes), and a chrome://tracing
+//! trace file.
+//!
+//!     cargo run --release --example obs_demo
+//!
+//! Artifacts:
+//!
+//!     results/trace.json   load in chrome://tracing or ui.perfetto.dev
+//!
+//! Knobs:
+//!
+//!     HBFP_THREADS=4      worker budget (pool lane timing shows up >1)
+//!     HBFP_SIMD=off       pin the scalar kernel family
+//!
+//! The demo forces full mode in code; the same telemetry comes out of
+//! any binary in the repo by exporting `HBFP_OBS=full` (see PERF.md
+//! § Observability for the span naming convention and overhead budget).
+
+use std::path::Path;
+use std::sync::Arc;
+
+use anyhow::Result;
+use hbfp::bfp::{export_datapath_counters, BfpContext, TileSize};
+use hbfp::coordinator::{LrSchedule, RunConfig};
+use hbfp::nn::Trainer;
+use hbfp::obs::{self, trace, ObsMode, Registry};
+use hbfp::serve::{InferenceServer, ManualClock, ServeConfig};
+use hbfp::util::fault::{self, FaultInjector};
+
+fn main() -> Result<()> {
+    // Full telemetry without requiring the env var; a clean injector so
+    // the burst is deterministic.
+    obs::set_mode(ObsMode::Full);
+    let _quiet = fault::install(FaultInjector::none());
+
+    // ---- training burst -------------------------------------------------
+    println!("== training burst: mlp-tinyimg-hbfp8_t8, 60 steps ==");
+    let trainer = Trainer::with_context(BfpContext::from_env());
+    let cfg = RunConfig::new("mlp-tinyimg-hbfp8_t8", 60)
+        .with_seed(5)
+        .with_lr(LrSchedule::Constant { lr: 0.02 });
+    let report = trainer.run(&cfg)?;
+    println!(
+        "final loss {:.4}, eval error {:?}, plan cache {}h/{}m",
+        report.final_loss, report.final_eval_error, report.plan_hits, report.plan_misses
+    );
+
+    let obs_json = report.obs.as_ref().expect("full mode collects per-layer health");
+    if let Some(health) = obs_json.get("health") {
+        println!("\nper-layer numeric health (last sample per layer):");
+        if let hbfp::util::json::Json::Obj(layers) = health {
+            for (layer, rows) in layers {
+                if let Some(last) = rows.as_arr().and_then(|r| r.last()) {
+                    println!(
+                        "  {layer}: exp span {}, clamp {:.4}, saturated tiles {:.4}, \
+                         snr {:.1} dB",
+                        last.get("exp_span").and_then(|v| v.as_i64()).unwrap_or(0),
+                        last.get("clamp_frac").and_then(|v| v.as_f64()).unwrap_or(0.0),
+                        last.get("sat_frac").and_then(|v| v.as_f64()).unwrap_or(0.0),
+                        last.get("snr_db").and_then(|v| v.as_f64()).unwrap_or(0.0),
+                    );
+                }
+            }
+        }
+    }
+    if let Some(totals) = obs_json.get("stage_totals_us") {
+        println!("stage totals (us): {totals}");
+    }
+
+    // ---- serving burst --------------------------------------------------
+    println!("\n== serving burst: one tenant, 12 waves ==");
+    let ctx = BfpContext::from_env().with_tile(TileSize::Edge(4));
+    let clock = Arc::new(ManualClock::new());
+    let mut srv = InferenceServer::new(ServeConfig::default(), ctx, clock);
+    let (k, n) = (64, 64);
+    let weights: Vec<f32> = (0..k * n).map(|i| ((i as f32) * 0.173).sin() * 0.5).collect();
+    let model = srv.register_model("tenant-a", &weights, k, n)?;
+    for wave in 0..12u64 {
+        for j in 0..3u64 {
+            let x: Vec<f32> =
+                (0..k).map(|c| ((c as f32) * 0.31 + (wave * 3 + j) as f32 * 0.77).cos()).collect();
+            srv.submit(model, x, None)?;
+        }
+        srv.pump()?;
+    }
+    srv.begin_drain(10_000)?;
+    let drain = srv.run_until_stopped()?;
+    let served = srv.metrics().completed;
+    println!("served {served} requests, drained in {} pumps", drain.pumps);
+
+    // ---- the unified registry snapshot ----------------------------------
+    let reg = Registry::new();
+    if let Some(g) = &report.history.guard {
+        g.export_metrics(&reg, "train.guard");
+    }
+    srv.metrics().export_metrics(&reg, "serve");
+    srv.plan_cache().export_metrics(&reg, "serve.plan_cache");
+    trainer.dataset_cache().export_metrics(&reg, "train.dataset_cache");
+    export_datapath_counters(&reg);
+    println!("\n== registry snapshot ==\n{}", reg.to_json());
+
+    // Pool lane busy/idle timing accumulates in the process-global
+    // registry (only populated when the pool actually spun up workers).
+    let global = obs::registry::global();
+    if !global.is_empty() {
+        println!("\n== global registry (pool lanes) ==\n{}", global.to_json());
+    }
+
+    // ---- trace export ---------------------------------------------------
+    let trace_path = Path::new("results/trace.json");
+    trace::write_chrome_trace(trace_path)?;
+    let (events, dropped) = trace::snapshot();
+    println!(
+        "\nwrote {} span events ({dropped} dropped at ring capacity) to {}",
+        events.len(),
+        trace_path.display()
+    );
+    println!("open chrome://tracing (or https://ui.perfetto.dev) and load the file");
+    Ok(())
+}

@@ -10,6 +10,12 @@
 //! For the inference side of the stack — resident quantized weights,
 //! micro-batching, admission control, and graceful precision degradation
 //! under overload — see `cargo run --release --example serve_demo`.
+//!
+//! To watch the numerics and timing as they happen, run any example with
+//! `HBFP_OBS=full` (per-layer exponent/SNR health, stage timings), or
+//! `cargo run --release --example obs_demo` for a guided tour that also
+//! writes `results/trace.json` for chrome://tracing / ui.perfetto.dev.
+//! See PERF.md § Observability.
 
 use std::sync::Arc;
 

@@ -44,17 +44,27 @@
 //! `#[deprecated]` one-line shims over a default context (importable
 //! from their defining modules; no longer re-exported at `bfp::`).
 
+use std::sync::atomic::AtomicU64;
+
 use anyhow::{anyhow, Result};
 
 use super::kernels::Isa;
 use super::matmul::{self, acc_fits_i32};
 use super::panels::matmul_tile_edge;
-use super::quant::{OwnedRounding, Rounding, TileRounding};
+use super::quant::{obs_count, OwnedRounding, Rounding, TileRounding};
 use super::stats::{self, GuardStats};
 use super::tensor::{self, next_wider_class, BfpTensor, TileSize};
 use crate::util::pool::{self, ParBackend};
 use crate::util::rng::Xorshift32;
 use crate::util::worker_threads;
+
+/// Datapath probe: whole tensors quantized through a [`BfpContext`].
+/// Counters mode and above (one relaxed load when off); exported by
+/// [`stats::export_datapath_counters`](super::stats::export_datapath_counters).
+pub static OBS_TENSORS_QUANTIZED: AtomicU64 = AtomicU64::new(0);
+
+/// Datapath probe: BFP matmul plan executions (fused and pre-quantized).
+pub static OBS_GEMMS_EXECUTED: AtomicU64 = AtomicU64::new(0);
 
 // ---------------------------------------------------------------- guards
 
@@ -423,6 +433,7 @@ impl BfpContext {
         mantissa_bits: u32,
         rounding: &mut Rounding,
     ) -> Result<BfpTensor> {
+        obs_count(&OBS_TENSORS_QUANTIZED);
         BfpTensor::from_f32_impl(data, rows, cols, mantissa_bits, self.tile, rounding, self.threads)
     }
 
@@ -730,6 +741,7 @@ impl MatmulPlan {
     /// allocate regardless.) A length mismatch panics in debug builds
     /// and returns an error in release.
     pub fn execute_into(&self, a: &BfpTensor, b: &BfpTensor, out: &mut [f32]) -> Result<()> {
+        obs_count(&OBS_GEMMS_EXECUTED);
         self.check_a(a)?;
         self.check_b(b)?;
         self.check_out(out.len())?;
@@ -791,6 +803,7 @@ impl MatmulPlan {
         b: &BfpTensor,
         out: &mut [f32],
     ) -> Result<()> {
+        obs_count(&OBS_GEMMS_EXECUTED);
         if a.len() != self.m * self.k {
             return Err(anyhow!("a len {} != {}x{}", a.len(), self.m, self.k));
         }
@@ -1065,6 +1078,23 @@ impl PlanCache {
 
     pub fn evictions(&self) -> u64 {
         self.evictions
+    }
+
+    /// Register the cache counters into `reg` under `prefix` (dot-joined
+    /// when non-empty): `len`, `hits`, `misses`, `evictions` — the same
+    /// key set the serve metrics JSON has always used.
+    pub fn export_metrics(&self, reg: &crate::obs::Registry, prefix: &str) {
+        let name = |k: &str| {
+            if prefix.is_empty() {
+                k.to_string()
+            } else {
+                format!("{prefix}.{k}")
+            }
+        };
+        reg.counter(&name("len"), self.len() as u64);
+        reg.counter(&name("hits"), self.hits);
+        reg.counter(&name("misses"), self.misses);
+        reg.counter(&name("evictions"), self.evictions);
     }
 
     /// Resident keys, most-recently-used first (test observability).

@@ -81,8 +81,9 @@ pub use quant::{
     block_exponent, dequantize_value, exp2i, quantize_value, Rounding, TileRounding, E_MAX, E_MIN,
 };
 pub use stats::{
-    clamp_rail_frac, quant_report, saturated_tile_frac, scan_nonfinite, tile_spans, ExponentStats,
-    GuardStats, GuardStatsSnapshot, NonFiniteError, QuantReport, ScanReport,
+    clamp_rail_frac, export_datapath_counters, quant_report, saturated_tile_frac, scan_nonfinite,
+    tile_spans, ExponentStats, GuardStats, GuardStatsSnapshot, NonFiniteError, QuantReport,
+    ScanReport,
 };
 pub use tensor::{
     next_wider_class, quantize_inplace_2d, BfpTensor, MantissaElem, Mantissas, TileSize,

@@ -220,6 +220,46 @@ impl GuardStatsSnapshot {
             || self.fp32_fallbacks != 0
             || self.widenings != 0
     }
+
+    /// Register the six counters into `reg` under `prefix` (dot-joined
+    /// when non-empty). `coordinator::metrics::guard_stats_json` routes
+    /// through this, so one key list serves both export surfaces.
+    pub fn export_metrics(&self, reg: &crate::obs::Registry, prefix: &str) {
+        let name = |k: &str| {
+            if prefix.is_empty() {
+                k.to_string()
+            } else {
+                format!("{prefix}.{k}")
+            }
+        };
+        reg.counter(&name("scans"), self.scans);
+        reg.counter(&name("nonfinite_inputs"), self.nonfinite_inputs);
+        reg.counter(&name("saturated_tensors"), self.saturated_tensors);
+        reg.counter(&name("clamp_flagged"), self.clamp_flagged);
+        reg.counter(&name("fp32_fallbacks"), self.fp32_fallbacks);
+        reg.counter(&name("widenings"), self.widenings);
+    }
+}
+
+/// Register the process-wide BFP datapath probe counters
+/// ([`super::quant::OBS_BLOCKS_QUANTIZED`],
+/// [`super::context::OBS_TENSORS_QUANTIZED`],
+/// [`super::context::OBS_GEMMS_EXECUTED`]) into `reg` under `bfp.*`.
+/// They count only while the obs mode is `counters` or `full`.
+pub fn export_datapath_counters(reg: &crate::obs::Registry) {
+    use std::sync::atomic::Ordering::Relaxed;
+    reg.counter(
+        "bfp.blocks_quantized",
+        super::quant::OBS_BLOCKS_QUANTIZED.load(Relaxed),
+    );
+    reg.counter(
+        "bfp.tensors_quantized",
+        super::context::OBS_TENSORS_QUANTIZED.load(Relaxed),
+    );
+    reg.counter(
+        "bfp.gemms_executed",
+        super::context::OBS_GEMMS_EXECUTED.load(Relaxed),
+    );
 }
 
 /// Distribution statistics of one tensor's element exponents.

@@ -140,6 +140,9 @@ impl LatencyHistogram {
         self.max
     }
 
+    /// Mean of all recorded samples. **Empty histogram: returns `0.0`**
+    /// (never divides by zero, never NaN) — an unused latency section
+    /// renders as zeros, not as nulls.
     pub fn mean(&self) -> f64 {
         if self.count == 0 {
             0.0
@@ -152,6 +155,16 @@ impl LatencyHistogram {
     /// (`p` in [0, 1]), clamped to the observed maximum — an upper
     /// bound on the true percentile that is exact to within one
     /// doubling, which is what a deadline assertion needs.
+    ///
+    /// Edge behavior (locked in by `latency_histogram_edge_cases`):
+    ///
+    /// - **empty histogram**: returns `0` for every `p`;
+    /// - **`p <= 0.0`**: rank clamps to 1 — the upper bound of the
+    ///   *smallest* sample's bucket (a min estimate, same doubling
+    ///   resolution);
+    /// - **`p >= 1.0`**: rank clamps to `count` and the result clamps to
+    ///   the exact observed [`max`](Self::max);
+    /// - **non-finite `p`** (NaN): treated like `p = 0`.
     pub fn percentile(&self, p: f64) -> u64 {
         if self.count == 0 {
             return 0;
@@ -182,6 +195,14 @@ impl LatencyHistogram {
 
     pub fn p99(&self) -> u64 {
         self.percentile(0.99)
+    }
+
+    /// Register this histogram into `reg` under `name` — the registry
+    /// renders it through [`LatencyHistogram::to_json`], so a
+    /// registry-routed latency section is byte-identical to a hand-rolled
+    /// one.
+    pub fn export_metrics(&self, reg: &crate::obs::Registry, name: &str) {
+        reg.histogram(name, self.clone());
     }
 
     /// Summary + the nonzero buckets (as `[bit_length, count]` pairs, so
@@ -231,18 +252,32 @@ pub struct ModelMetrics {
 }
 
 impl ModelMetrics {
+    /// Register this tenant's counters into `reg` under `prefix`
+    /// (dot-joined when non-empty). The one key list behind both
+    /// [`ModelMetrics::to_json`] and registry snapshots.
+    pub fn export_metrics(&self, reg: &crate::obs::Registry, prefix: &str) {
+        let name = |k: &str| {
+            if prefix.is_empty() {
+                k.to_string()
+            } else {
+                format!("{prefix}.{k}")
+            }
+        };
+        reg.text(&name("name"), &self.name);
+        reg.counter(&name("share"), self.share as u64);
+        reg.counter(&name("admitted"), self.admitted);
+        reg.counter(&name("served"), self.served);
+        reg.counter(&name("degraded"), self.degraded);
+        reg.counter(&name("expired"), self.expired);
+        reg.counter(&name("failed"), self.failed);
+        reg.counter(&name("quarantined"), self.quarantined);
+        reg.histogram(&name("latency"), self.latency.clone());
+    }
+
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![
-            ("name", Json::Str(self.name.clone())),
-            ("share", Json::num(self.share as f64)),
-            ("admitted", Json::num(self.admitted as f64)),
-            ("served", Json::num(self.served as f64)),
-            ("degraded", Json::num(self.degraded as f64)),
-            ("expired", Json::num(self.expired as f64)),
-            ("failed", Json::num(self.failed as f64)),
-            ("quarantined", Json::num(self.quarantined as f64)),
-            ("latency", self.latency.to_json()),
-        ])
+        let reg = crate::obs::Registry::new();
+        self.export_metrics(&reg, "");
+        reg.to_json()
     }
 }
 
@@ -313,34 +348,56 @@ impl ServeMetrics {
             + self.rejected_draining
     }
 
+    /// Register the whole serving surface into `reg` under `prefix`
+    /// (dot-joined when non-empty): every counter, the end-to-end latency
+    /// histogram, and the per-tenant sections (attached as the `models`
+    /// array so its shape matches the historical JSON exactly).
+    pub fn export_metrics(&self, reg: &crate::obs::Registry, prefix: &str) {
+        let name = |k: &str| {
+            if prefix.is_empty() {
+                k.to_string()
+            } else {
+                format!("{prefix}.{k}")
+            }
+        };
+        for (k, v) in [
+            ("admitted", self.admitted),
+            ("rejected_queue_full", self.rejected_queue_full),
+            ("rejected_overloaded", self.rejected_overloaded),
+            ("rejected_shedding", self.rejected_shedding),
+            ("rejected_quarantined", self.rejected_quarantined),
+            ("rejected_draining", self.rejected_draining),
+            ("expired_at_dequeue", self.expired_at_dequeue),
+            ("expired_at_completion", self.expired_at_completion),
+            ("expired_at_drain", self.expired_at_drain),
+            ("completed", self.completed),
+            ("degraded_served", self.degraded_served),
+            ("failed", self.failed),
+            ("batches", self.batches),
+            ("batched_rows", self.batched_rows),
+            ("slow_requests", self.slow_requests),
+            ("panics_contained", self.panics_contained),
+            ("gemm_retries", self.gemm_retries),
+            ("split_fallbacks", self.split_fallbacks),
+            ("max_queue_depth", self.max_queue_depth),
+            ("breaker_trips", self.breaker_trips),
+            ("breaker_recoveries", self.breaker_recoveries),
+            ("reloads", self.reloads),
+            ("reload_rollbacks", self.reload_rollbacks),
+        ] {
+            reg.counter(&name(k), v);
+        }
+        self.latency.export_metrics(reg, &name("latency"));
+        reg.attach(
+            &name("models"),
+            Json::Arr(self.models.iter().map(|m| m.to_json()).collect()),
+        );
+    }
+
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![
-            ("admitted", Json::num(self.admitted as f64)),
-            ("rejected_queue_full", Json::num(self.rejected_queue_full as f64)),
-            ("rejected_overloaded", Json::num(self.rejected_overloaded as f64)),
-            ("rejected_shedding", Json::num(self.rejected_shedding as f64)),
-            ("rejected_quarantined", Json::num(self.rejected_quarantined as f64)),
-            ("rejected_draining", Json::num(self.rejected_draining as f64)),
-            ("expired_at_dequeue", Json::num(self.expired_at_dequeue as f64)),
-            ("expired_at_completion", Json::num(self.expired_at_completion as f64)),
-            ("expired_at_drain", Json::num(self.expired_at_drain as f64)),
-            ("completed", Json::num(self.completed as f64)),
-            ("degraded_served", Json::num(self.degraded_served as f64)),
-            ("failed", Json::num(self.failed as f64)),
-            ("batches", Json::num(self.batches as f64)),
-            ("batched_rows", Json::num(self.batched_rows as f64)),
-            ("slow_requests", Json::num(self.slow_requests as f64)),
-            ("panics_contained", Json::num(self.panics_contained as f64)),
-            ("gemm_retries", Json::num(self.gemm_retries as f64)),
-            ("split_fallbacks", Json::num(self.split_fallbacks as f64)),
-            ("max_queue_depth", Json::num(self.max_queue_depth as f64)),
-            ("breaker_trips", Json::num(self.breaker_trips as f64)),
-            ("breaker_recoveries", Json::num(self.breaker_recoveries as f64)),
-            ("reloads", Json::num(self.reloads as f64)),
-            ("reload_rollbacks", Json::num(self.reload_rollbacks as f64)),
-            ("latency", self.latency.to_json()),
-            ("models", Json::Arr(self.models.iter().map(|m| m.to_json()).collect())),
-        ])
+        let reg = crate::obs::Registry::new();
+        self.export_metrics(&reg, "");
+        reg.to_json()
     }
 
     /// `name,value` rows (latency summarized as percentiles), mirroring
@@ -400,17 +457,14 @@ impl ServeMetrics {
     }
 }
 
-/// JSON view of the guard-layer counters (kept here so `bfp::stats`
-/// stays free of the artifact format).
+/// JSON view of the guard-layer counters, routed through the shared
+/// [`Registry`](crate::obs::Registry) (`GuardStatsSnapshot::export_metrics`
+/// owns the key list). Byte-identical to the old hand-rolled object:
+/// registry exports and `Json::obj` both sort keys via `BTreeMap`.
 pub fn guard_stats_json(g: &GuardStatsSnapshot) -> Json {
-    Json::obj(vec![
-        ("scans", Json::num(g.scans as f64)),
-        ("nonfinite_inputs", Json::num(g.nonfinite_inputs as f64)),
-        ("saturated_tensors", Json::num(g.saturated_tensors as f64)),
-        ("clamp_flagged", Json::num(g.clamp_flagged as f64)),
-        ("fp32_fallbacks", Json::num(g.fp32_fallbacks as f64)),
-        ("widenings", Json::num(g.widenings as f64)),
-    ])
+    let reg = crate::obs::Registry::new();
+    g.export_metrics(&reg, "");
+    reg.to_json()
 }
 
 /// Full history of one run.
@@ -717,5 +771,54 @@ mod tests {
         // equality is the whole-run determinism check
         assert_eq!(m, m.clone());
         assert_ne!(m, ServeMetrics::default());
+    }
+
+    #[test]
+    fn latency_histogram_edge_cases() {
+        // empty histogram: every percentile is 0, mean is 0.0 (not NaN)
+        let e = LatencyHistogram::new();
+        for p in [0.0, 0.5, 1.0, -1.0, 2.0, f64::NAN] {
+            assert_eq!(e.percentile(p), 0, "empty at p={p}");
+        }
+        assert_eq!(e.mean(), 0.0);
+        assert_eq!(e.max(), 0);
+
+        let mut h = LatencyHistogram::new();
+        h.record(3); // bucket 2 (bits=2), upper bound 3
+        h.record(100); // bucket 7, upper bound 127
+        h.record(10_000); // bucket 14, upper bound 16383 → clamped to max
+        // p <= 0 clamps rank to 1: the smallest sample's bucket bound
+        assert_eq!(h.percentile(0.0), 3);
+        assert_eq!(h.percentile(-0.5), 3);
+        // p >= 1 clamps to the exact observed max, not the bucket bound
+        assert_eq!(h.percentile(1.0), 10_000);
+        assert_eq!(h.percentile(7.0), 10_000);
+        // non-finite p behaves like p = 0 (clamp keeps NaN, cast → rank 1)
+        assert_eq!(h.percentile(f64::NAN), h.percentile(0.0));
+        // mid percentiles stay within one doubling of the true value
+        assert_eq!(h.percentile(0.5), 127);
+    }
+
+    #[test]
+    fn guard_stats_json_matches_hand_rolled_shape() {
+        let g = GuardStatsSnapshot {
+            scans: 4,
+            nonfinite_inputs: 1,
+            saturated_tensors: 2,
+            clamp_flagged: 3,
+            fp32_fallbacks: 5,
+            widenings: 6,
+        };
+        let j = guard_stats_json(&g);
+        // registry-routed export keeps the exact historical key list
+        let expected = Json::obj(vec![
+            ("scans", Json::num(4.0)),
+            ("nonfinite_inputs", Json::num(1.0)),
+            ("saturated_tensors", Json::num(2.0)),
+            ("clamp_flagged", Json::num(3.0)),
+            ("fp32_fallbacks", Json::num(5.0)),
+            ("widenings", Json::num(6.0)),
+        ]);
+        assert_eq!(j.to_string(), expected.to_string());
     }
 }

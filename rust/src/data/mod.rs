@@ -122,6 +122,22 @@ impl DatasetCache {
     pub fn generated(&self) -> u64 {
         self.generated.load(Ordering::Relaxed)
     }
+
+    /// Register the cache's counters into `reg` under `prefix`
+    /// (dot-joined when non-empty) — the registry-side view of the same
+    /// hits/generated/len surface the accessors expose.
+    pub fn export_metrics(&self, reg: &crate::obs::Registry, prefix: &str) {
+        let name = |k: &str| {
+            if prefix.is_empty() {
+                k.to_string()
+            } else {
+                format!("{prefix}.{k}")
+            }
+        };
+        reg.counter(&name("hits"), self.hits());
+        reg.counter(&name("generated"), self.generated());
+        reg.counter(&name("len"), self.len() as u64);
+    }
 }
 
 #[cfg(test)]

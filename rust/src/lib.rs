@@ -34,6 +34,7 @@ pub mod coordinator;
 pub mod data;
 pub mod hw;
 pub mod nn;
+pub mod obs;
 pub mod runtime;
 pub mod serve;
 pub mod util;

@@ -56,6 +56,8 @@ impl Layer for Linear {
         }
         // Data-facing GEMM: guarded, so a poisoned batch is detected at
         // the datapath boundary (see NnContext::gemm_guarded).
+        nc.set_layer(&self.w.name);
+        let _span = crate::obs::trace::span("nn.linear.fwd_gemm");
         let mut y = nc.gemm_guarded(x, &self.w.w, rows, self.in_dim, self.out_dim)?;
         for r in 0..rows {
             let row = &mut y[r * self.out_dim..(r + 1) * self.out_dim];
@@ -80,6 +82,8 @@ impl Layer for Linear {
             return Err(anyhow!("{}: backward before forward", self.w.name));
         }
         // dW = xᵀ · δ  (BFP GEMM, k = batch: the skinny-k shape)
+        nc.set_layer(&self.w.name);
+        let _span = crate::obs::trace::span("nn.linear.bwd_gemms");
         let xt = transpose(&self.cached_x, rows, self.in_dim);
         let dw = nc.gemm(&xt, dy, self.in_dim, rows, self.out_dim)?;
         for (g, d) in self.w.g.iter_mut().zip(&dw) {

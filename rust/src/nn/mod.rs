@@ -59,6 +59,7 @@ use anyhow::{anyhow, Result};
 use crate::bfp::{
     fp32_matmul, BfpContext, GuardAction, GuardPolicy, GuardStats, PlanCache, Rounding,
 };
+use crate::obs::{self, health, ObsRecorder};
 
 pub use embedding::Embedding;
 pub use layer::{Layer, Param, Relu, Tanh};
@@ -121,6 +122,12 @@ pub struct NnContext {
     /// Sticky per-step flag: a guarded GEMM detected non-finite input
     /// since the last [`NnContext::take_tripped`].
     tripped: bool,
+    /// Numeric-health timelines + per-step stage timings (populated only
+    /// in `HBFP_OBS=full`; empty otherwise, and the trainer omits it).
+    pub obs: ObsRecorder,
+    /// Layer name the next health probe is attributed to (set by layers
+    /// via [`NnContext::set_layer`]; maintained only in full mode).
+    layer: String,
 }
 
 impl NnContext {
@@ -133,7 +140,27 @@ impl NnContext {
             action: GuardAction::Fp32Fallback,
             ..GuardPolicy::default()
         });
-        NnContext { ctx, plans: PlanCache::new(64), precision, guard: GuardStats::new(), tripped: false }
+        NnContext {
+            ctx,
+            plans: PlanCache::new(64),
+            precision,
+            guard: GuardStats::new(),
+            tripped: false,
+            obs: ObsRecorder::new(),
+            layer: String::new(),
+        }
+    }
+
+    /// Name the layer whose GEMMs follow (health probes are aggregated
+    /// per layer under this name). One relaxed load and nothing else
+    /// below `full` mode — no allocation, no copy.
+    #[inline]
+    pub fn set_layer(&mut self, name: &str) {
+        if !obs::full() {
+            return;
+        }
+        self.layer.clear();
+        self.layer.push_str(name);
     }
 
     /// C = A·B for row-major f32 A (`m x k`) and B (`k x n`) at the
@@ -147,9 +174,14 @@ impl NnContext {
         match self.precision {
             Precision::Fp32 => Ok(fp32_matmul(a, b, m, k, n)),
             Precision::Hbfp { bits } => {
+                let t0 = self.obs.stage_start();
                 let qb = self.ctx.quantize(b, k, n, bits, &mut Rounding::NearestEven)?;
+                self.obs.stage_end("quantize", t0);
                 let plan = self.plans.get_or_plan(&self.ctx, m, k, n, (bits, bits))?;
-                plan.quantize_execute(a, &mut Rounding::NearestEven, &qb)
+                let t1 = self.obs.stage_start();
+                let out = plan.quantize_execute(a, &mut Rounding::NearestEven, &qb);
+                self.obs.stage_end("gemm", t1);
+                out
             }
         }
     }
@@ -171,8 +203,19 @@ impl NnContext {
         match self.precision {
             Precision::Fp32 => Ok(fp32_matmul(a, b, m, k, n)),
             Precision::Hbfp { bits } => {
+                let t0 = self.obs.stage_start();
                 let qb = self.ctx.quantize(b, k, n, bits, &mut Rounding::NearestEven)?;
+                self.obs.stage_end("quantize", t0);
+                if obs::full() {
+                    // Probe the weight-side quantization the forward pass
+                    // just produced: read-only vs the f32 source, so no
+                    // RNG draw and no perturbation of the datapath.
+                    let h = health::tensor_health(b, &qb);
+                    let layer = if self.layer.is_empty() { "unnamed" } else { self.layer.as_str() };
+                    self.obs.record_layer(layer, h);
+                }
                 let plan = self.plans.get_or_plan(&self.ctx, m, k, n, (bits, bits))?;
+                let t1 = self.obs.stage_start();
                 let mut out = vec![0.0f32; plan.out_len()];
                 let outcome = plan.quantize_execute_guarded(
                     a,
@@ -181,6 +224,7 @@ impl NnContext {
                     &mut out,
                     Some(&self.guard),
                 )?;
+                self.obs.stage_end("gemm", t1);
                 if outcome.tripped {
                     self.tripped = true;
                 }

@@ -96,15 +96,26 @@ impl Model for Mlp {
         x: &HostTensor,
         y: &HostTensor,
     ) -> Result<(f32, f32)> {
-        let (logits, rows) = self.logits(nc, x)?;
+        let t_fwd = nc.obs.stage_start();
+        let fwd = {
+            let _span = crate::obs::trace::span("nn.mlp.fwd");
+            self.logits(nc, x)
+        };
+        nc.obs.stage_end("fwd", t_fwd);
+        let (logits, rows) = fwd?;
         let (loss, acc) = self.loss.forward(&logits, as_i32(y)?, rows, self.classes)?;
         if !loss.is_finite() {
             return Ok((loss, acc));
         }
-        let mut grad = self.loss.backward();
-        for layer in self.layers.iter_mut().rev() {
-            grad = layer.backward(nc, &grad, rows)?;
+        let t_bwd = nc.obs.stage_start();
+        {
+            let _span = crate::obs::trace::span("nn.mlp.bwd");
+            let mut grad = self.loss.backward();
+            for layer in self.layers.iter_mut().rev() {
+                grad = layer.backward(nc, &grad, rows)?;
+            }
         }
+        nc.obs.stage_end("bwd", t_bwd);
         Ok((loss, acc))
     }
 
@@ -193,16 +204,27 @@ impl Model for CharLm {
         x: &HostTensor,
         y: &HostTensor,
     ) -> Result<(f32, f32)> {
-        let (logits, batch, t_len) = self.logits(nc, x)?;
+        let t_fwd = nc.obs.stage_start();
+        let fwd = {
+            let _span = crate::obs::trace::span("nn.charlm.fwd");
+            self.logits(nc, x)
+        };
+        nc.obs.stage_end("fwd", t_fwd);
+        let (logits, batch, t_len) = fwd?;
         let targets_tm = Self::timestep_major(as_i32(y)?, batch, t_len);
         let (loss, acc) = self.loss.forward(&logits, &targets_tm, t_len * batch, self.vocab)?;
         if !loss.is_finite() {
             return Ok((loss, acc));
         }
-        let grad = self.loss.backward();
-        let grad = self.head.backward(nc, &grad, t_len * batch)?;
-        let grad = self.rnn.backward(nc, &grad)?;
-        self.embed.backward(&grad)?;
+        let t_bwd = nc.obs.stage_start();
+        {
+            let _span = crate::obs::trace::span("nn.charlm.bwd");
+            let grad = self.loss.backward();
+            let grad = self.head.backward(nc, &grad, t_len * batch)?;
+            let grad = self.rnn.backward(nc, &grad)?;
+            self.embed.backward(&grad)?;
+        }
+        nc.obs.stage_end("bwd", t_bwd);
         Ok((loss, acc))
     }
 

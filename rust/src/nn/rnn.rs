@@ -63,6 +63,7 @@ impl Rnn {
                 self.in_dim
             ));
         }
+        let _span = crate::obs::trace::span("nn.rnn.fwd");
         let (bsz, hid) = (batch, self.hidden);
         let mut all_h = Vec::with_capacity(t_len * bsz * hid);
         let mut h_prev = vec![0.0f32; bsz * hid];
@@ -70,7 +71,9 @@ impl Rnn {
             let xt = &x[t * bsz * self.in_dim..(t + 1) * bsz * self.in_dim];
             // Data-facing GEMM guarded; the recurrent GEMM consumes our
             // own (finite) hidden state.
+            nc.set_layer(&self.wx.name);
             let mut pre = nc.gemm_guarded(xt, &self.wx.w, bsz, self.in_dim, hid)?;
+            nc.set_layer(&self.wh.name);
             let rec = nc.gemm(&h_prev, &self.wh.w, bsz, hid, hid)?;
             for i in 0..pre.len() {
                 pre[i] = (pre[i] + rec[i] + self.b.w[i % hid]).tanh();
@@ -92,6 +95,8 @@ impl Rnn {
         if dy.len() != tl * bsz * hid || self.cached_h.len() != tl * bsz * hid {
             return Err(anyhow!("{}: backward before forward (or bad grad len)", self.wx.name));
         }
+        let _span = crate::obs::trace::span("nn.rnn.bwd");
+        nc.set_layer(&self.wx.name);
         // Hoisted transposed weights: one conversion per backward pass,
         // not per timestep.
         let wht = transpose(&self.wh.w, hid, hid);

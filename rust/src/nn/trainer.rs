@@ -218,6 +218,8 @@ impl FaultTolerantModel for NnSession {
     }
 
     fn step(&mut self, step: usize, lr: f32) -> Result<(f32, f32)> {
+        self.nc.obs.begin_step(step);
+        let _span = crate::obs::trace::span("nn.step");
         let (mut x, y) = self.dataset.train_batch(self.batch, &mut self.batch_rng(step));
         // Narrow-class fault hook (same shape as the fault demo): hazards
         // born of aggressive quantization fire only at <= 8 bits, so the
@@ -242,9 +244,12 @@ impl FaultTolerantModel for NnSession {
             ));
         }
         if loss.is_finite() {
+            let t_opt = self.nc.obs.stage_start();
+            let _opt_span = crate::obs::trace::span("nn.opt");
             for p in self.model.params_mut() {
                 self.opt.update(p, lr);
             }
+            self.nc.obs.stage_end("opt", t_opt);
         } else {
             // Overflow-skip: poisoned gradients never reach the weights.
             for p in self.model.params_mut() {
@@ -308,6 +313,11 @@ pub struct NnRunReport {
     /// For text runs: the corpus generator's per-token entropy (nats) —
     /// the loss floor a perfect model converges to.
     pub entropy_floor_nats: Option<f64>,
+    /// Observability export (`HBFP_OBS=full` only): per-layer
+    /// numeric-health timelines + per-step stage timings. `None` below
+    /// full mode, and then the `"obs"` key is omitted entirely so
+    /// off-mode metrics JSON is byte-identical to pre-obs builds.
+    pub obs: Option<Json>,
 }
 
 impl NnRunReport {
@@ -350,6 +360,9 @@ impl NnRunReport {
         }
         if let Some(g) = &self.history.guard {
             fields.push(("guard_stats", guard_stats_json(g)));
+        }
+        if let Some(o) = &self.obs {
+            fields.push(("obs", o.clone()));
         }
         Json::obj(fields)
     }
@@ -427,6 +440,7 @@ impl Trainer {
             dataset_cache_hit: self.datasets.hits() > hits_before,
             final_width_bits: session.width(),
             entropy_floor_nats,
+            obs: session.nc.obs.to_json(),
             history,
         })
     }

@@ -1,0 +1,366 @@
+//! HBFP numeric-health probes: what the quantizer actually did to a
+//! tensor, aggregated per named layer over training time.
+//!
+//! The paper's central claim — HBFP-m8 tracks FP32 accuracy because dot
+//! products see wide-enough dynamic range — is debugged with exactly
+//! three signals, all computed here from tensors the datapath already
+//! produced (never by re-quantizing or drawing randomness):
+//!
+//! - **block-exponent spread** (`exp_min`/`exp_max`/`exp_span`): how much
+//!   dynamic range the shared exponents are absorbing;
+//! - **clamp-rail and saturated-tile fractions**: how often the mantissa
+//!   grid or the exponent range ran out of headroom;
+//! - **quantization SNR** vs the f32 source: the end-to-end fidelity of
+//!   the BFP representation for this tensor.
+//!
+//! [`ObsRecorder`] (owned by [`crate::nn::NnContext`]) collects one
+//! [`TensorHealth`] per named layer per step into a bounded,
+//! stride-decimated timeline, plus per-step stage timings
+//! (quantize/fwd/bwd/opt), and exports both as the `"obs"` section of the
+//! trainer's results JSON.
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+use crate::bfp::{clamp_rail_frac, saturated_tile_frac, BfpTensor};
+use crate::util::json::Json;
+
+/// Timeline length cap per layer (and for the stage-timing rows). When a
+/// timeline fills, every other sample is dropped and the sampling stride
+/// doubles, so long runs keep full temporal coverage at bounded memory.
+pub const TIMELINE_CAP: usize = 512;
+
+/// SNR ceiling for JSON export: an exact quantization has infinite SNR,
+/// which `Json` would render as `null`; 200 dB is far above anything a
+/// real mantissa width produces.
+pub const SNR_CAP_DB: f64 = 200.0;
+
+/// Numeric health of one quantized tensor vs its f32 source.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TensorHealth {
+    /// Smallest / largest shared block exponent in the tensor.
+    pub exp_min: i32,
+    pub exp_max: i32,
+    /// `exp_max - exp_min`: the dynamic range the block exponents span.
+    pub exp_span: i32,
+    /// Fraction of mantissas at the two's-complement clamp rails.
+    pub clamp_frac: f64,
+    /// Fraction of tiles whose exponent sits at the `E_MAX` rail.
+    pub sat_frac: f64,
+    /// `10·log10(Σx² / Σ(x−x̂)²)`, capped at [`SNR_CAP_DB`].
+    pub snr_db: f64,
+}
+
+impl TensorHealth {
+    fn to_json(&self, step: usize) -> Json {
+        Json::obj(vec![
+            ("step", Json::num(step as f64)),
+            ("exp_min", Json::num(self.exp_min as f64)),
+            ("exp_max", Json::num(self.exp_max as f64)),
+            ("exp_span", Json::num(self.exp_span as f64)),
+            ("clamp_frac", Json::num(self.clamp_frac)),
+            ("sat_frac", Json::num(self.sat_frac)),
+            ("snr_db", Json::num(self.snr_db)),
+        ])
+    }
+}
+
+/// Measure an already-quantized tensor against its f32 source. Pure
+/// read-only analysis: consumes no RNG, mutates nothing, and is only
+/// invoked when the obs mode is `full`.
+pub fn tensor_health(src: &[f32], q: &BfpTensor) -> TensorHealth {
+    let (mut exp_min, mut exp_max) = (i32::MAX, i32::MIN);
+    for &e in &q.exponents {
+        exp_min = exp_min.min(e);
+        exp_max = exp_max.max(e);
+    }
+    if q.exponents.is_empty() {
+        exp_min = 0;
+        exp_max = 0;
+    }
+    let deq = q.to_f32();
+    let mut sig = 0.0f64;
+    let mut noise = 0.0f64;
+    for (&x, &y) in src.iter().zip(&deq) {
+        sig += (x as f64) * (x as f64);
+        let e = (x - y) as f64;
+        noise += e * e;
+    }
+    let snr_db = if sig == 0.0 {
+        0.0
+    } else if noise > 0.0 {
+        (10.0 * (sig / noise).log10()).min(SNR_CAP_DB)
+    } else {
+        SNR_CAP_DB
+    };
+    TensorHealth {
+        exp_min,
+        exp_max,
+        exp_span: exp_max - exp_min,
+        clamp_frac: clamp_rail_frac(q),
+        sat_frac: saturated_tile_frac(q),
+        snr_db,
+    }
+}
+
+#[derive(Debug, Default)]
+struct LayerTimeline {
+    samples: Vec<(usize, TensorHealth)>,
+    /// Only steps divisible by the stride are recorded (doubles on
+    /// decimation).
+    stride: usize,
+}
+
+/// Per-context collector for layer health timelines and per-step stage
+/// timings. All mutating entry points are self-gating on the obs mode, so
+/// callers on the training path don't need their own branches; in `off`
+/// mode each call is one relaxed atomic load.
+#[derive(Debug)]
+pub struct ObsRecorder {
+    step: usize,
+    layers: BTreeMap<String, LayerTimeline>,
+    /// Stage → accumulated µs for the *current* step.
+    cur: BTreeMap<&'static str, u64>,
+    /// Flushed per-step stage rows, stride-decimated like timelines.
+    steps: Vec<(usize, BTreeMap<&'static str, u64>)>,
+    step_stride: usize,
+    /// Stage → total µs across the whole run.
+    totals: BTreeMap<&'static str, u64>,
+}
+
+impl Default for ObsRecorder {
+    fn default() -> ObsRecorder {
+        ObsRecorder {
+            step: 0,
+            layers: BTreeMap::new(),
+            cur: BTreeMap::new(),
+            steps: Vec::new(),
+            step_stride: 1,
+            totals: BTreeMap::new(),
+        }
+    }
+}
+
+impl ObsRecorder {
+    pub fn new() -> ObsRecorder {
+        ObsRecorder::default()
+    }
+
+    /// True when nothing has been recorded (the `off`/`counters` case):
+    /// the trainer omits the `"obs"` JSON key entirely, keeping off-mode
+    /// output byte-identical to pre-observability builds.
+    pub fn is_empty(&self) -> bool {
+        self.layers.is_empty() && self.cur.is_empty() && self.steps.is_empty()
+    }
+
+    /// Mark the start of a training step: flushes the previous step's
+    /// stage timings into the timeline.
+    pub fn begin_step(&mut self, step: usize) {
+        if !crate::obs::full() {
+            return;
+        }
+        self.flush_cur();
+        self.step = step;
+    }
+
+    fn flush_cur(&mut self) {
+        if self.cur.is_empty() {
+            return;
+        }
+        let row = std::mem::take(&mut self.cur);
+        if self.step % self.step_stride != 0 {
+            return;
+        }
+        self.steps.push((self.step, row));
+        if self.steps.len() >= TIMELINE_CAP {
+            let mut keep = false;
+            self.steps.retain(|_| {
+                keep = !keep;
+                keep
+            });
+            self.step_stride *= 2;
+        }
+    }
+
+    /// Record one layer's tensor health at the current step. The first
+    /// probe per (layer, step) wins — a backward pass re-quantizing the
+    /// same weights doesn't duplicate the sample.
+    pub fn record_layer(&mut self, layer: &str, health: TensorHealth) {
+        if !crate::obs::full() {
+            return;
+        }
+        let step = self.step;
+        let tl = self.layers.entry(layer.to_string()).or_insert(LayerTimeline {
+            samples: Vec::new(),
+            stride: 1,
+        });
+        if step % tl.stride != 0 {
+            return;
+        }
+        if tl.samples.last().is_some_and(|(s, _)| *s == step) {
+            return;
+        }
+        tl.samples.push((step, health));
+        if tl.samples.len() >= TIMELINE_CAP {
+            let mut keep = false;
+            tl.samples.retain(|_| {
+                keep = !keep;
+                keep
+            });
+            tl.stride *= 2;
+        }
+    }
+
+    /// Start timing a stage. `None` (and zero further cost) below `full`.
+    #[inline]
+    pub fn stage_start(&self) -> Option<Instant> {
+        if crate::obs::full() {
+            Some(Instant::now())
+        } else {
+            None
+        }
+    }
+
+    /// Close a stage opened by [`Self::stage_start`], accumulating its
+    /// elapsed µs into the current step and the run totals.
+    pub fn stage_end(&mut self, stage: &'static str, t0: Option<Instant>) {
+        let Some(t0) = t0 else { return };
+        let us = t0.elapsed().as_micros() as u64;
+        *self.cur.entry(stage).or_insert(0) += us;
+        *self.totals.entry(stage).or_insert(0) += us;
+    }
+
+    /// Export as the trainer's `"obs"` JSON section; `None` when nothing
+    /// was recorded. Shape:
+    ///
+    /// ```json
+    /// {"health": {"fc0.w": [{"step":0, "exp_min":-3, ..., "snr_db":41.2}, ...]},
+    ///  "stage_totals_us": {"bwd":1, "fwd":2, "opt":3, "quantize":4},
+    ///  "stage_us": [{"step":0, "bwd":1, ...}, ...]}
+    /// ```
+    ///
+    /// Health timelines depend only on tensor *values* (thread-count
+    /// invariant); the `stage_*` keys are wall-clock and must be stripped
+    /// before any determinism comparison.
+    pub fn to_json(&self) -> Option<Json> {
+        if self.is_empty() {
+            return None;
+        }
+        let mut health = BTreeMap::new();
+        for (name, tl) in &self.layers {
+            let rows = tl.samples.iter().map(|(s, h)| h.to_json(*s)).collect();
+            health.insert(name.clone(), Json::Arr(rows));
+        }
+        let mut stage_rows: Vec<Json> = Vec::new();
+        let emit_row = |step: usize, row: &BTreeMap<&'static str, u64>| {
+            let mut obj = BTreeMap::new();
+            obj.insert("step".to_string(), Json::num(step as f64));
+            for (k, v) in row {
+                obj.insert(k.to_string(), Json::num(*v as f64));
+            }
+            Json::Obj(obj)
+        };
+        for (step, row) in &self.steps {
+            stage_rows.push(emit_row(*step, row));
+        }
+        if !self.cur.is_empty() {
+            stage_rows.push(emit_row(self.step, &self.cur));
+        }
+        let mut totals = BTreeMap::new();
+        for (k, v) in &self.totals {
+            totals.insert(k.to_string(), Json::num(*v as f64));
+        }
+        Some(Json::obj(vec![
+            ("health", Json::Obj(health)),
+            ("stage_totals_us", Json::Obj(totals)),
+            ("stage_us", Json::Arr(stage_rows)),
+        ]))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bfp::{Rounding, TileSize};
+    use crate::obs::{install, ObsMode};
+
+    fn quantized(data: &[f32], rows: usize, cols: usize) -> BfpTensor {
+        BfpTensor::from_f32(data, rows, cols, 8, TileSize::Edge(4), &mut Rounding::NearestEven)
+            .unwrap()
+    }
+
+    #[test]
+    fn health_of_simple_tensor() {
+        let data: Vec<f32> = (0..16).map(|i| (i as f32 - 8.0) * 0.25).collect();
+        let q = quantized(&data, 4, 4);
+        let h = tensor_health(&data, &q);
+        assert!(h.exp_max >= h.exp_min);
+        assert_eq!(h.exp_span, h.exp_max - h.exp_min);
+        assert!((0.0..=1.0).contains(&h.clamp_frac));
+        assert!((0.0..=1.0).contains(&h.sat_frac));
+        assert!(h.snr_db > 0.0 && h.snr_db <= SNR_CAP_DB);
+    }
+
+    #[test]
+    fn health_of_zero_tensor_is_finite() {
+        let data = vec![0.0f32; 16];
+        let q = quantized(&data, 4, 4);
+        let h = tensor_health(&data, &q);
+        assert_eq!(h.snr_db, 0.0, "all-zero signal reports 0 dB, not NaN/inf");
+        assert_eq!(h.clamp_frac, 0.0);
+    }
+
+    #[test]
+    fn recorder_dedups_within_a_step_and_bounds_memory() {
+        let _g = install(ObsMode::Full);
+        let mut rec = ObsRecorder::new();
+        let data: Vec<f32> = (0..16).map(|i| i as f32 * 0.1).collect();
+        let q = quantized(&data, 4, 4);
+        let h = tensor_health(&data, &q);
+        for step in 0..(2 * TIMELINE_CAP) {
+            rec.begin_step(step);
+            rec.record_layer("fc0", h);
+            rec.record_layer("fc0", h); // backward re-probe: deduped
+        }
+        let j = rec.to_json().unwrap();
+        let tl = j.get("health").unwrap().get("fc0").unwrap().as_arr().unwrap();
+        assert!(tl.len() <= TIMELINE_CAP);
+        assert!(tl.len() > TIMELINE_CAP / 4, "decimation keeps coverage");
+        let steps: Vec<i64> = tl.iter().map(|r| r.get("step").unwrap().as_i64().unwrap()).collect();
+        let mut sorted = steps.clone();
+        sorted.dedup();
+        assert_eq!(steps, sorted, "one sample per step, in order");
+    }
+
+    #[test]
+    fn recorder_is_inert_below_full() {
+        let _g = install(ObsMode::Counters);
+        let mut rec = ObsRecorder::new();
+        rec.begin_step(0);
+        let data = vec![1.0f32; 16];
+        let q = quantized(&data, 4, 4);
+        rec.record_layer("fc0", tensor_health(&data, &q));
+        assert!(rec.stage_start().is_none());
+        rec.stage_end("fwd", None);
+        assert!(rec.is_empty());
+        assert!(rec.to_json().is_none());
+    }
+
+    #[test]
+    fn stage_rows_flush_per_step() {
+        let _g = install(ObsMode::Full);
+        let mut rec = ObsRecorder::new();
+        rec.begin_step(0);
+        let t0 = rec.stage_start();
+        assert!(t0.is_some());
+        rec.stage_end("fwd", t0);
+        rec.begin_step(1);
+        rec.stage_end("opt", rec.stage_start());
+        let j = rec.to_json().unwrap();
+        let rows = j.get("stage_us").unwrap().as_arr().unwrap();
+        assert_eq!(rows.len(), 2);
+        assert!(rows[0].get("fwd").is_some());
+        assert_eq!(rows[1].get("step").unwrap().as_i64(), Some(1));
+        assert!(j.get("stage_totals_us").unwrap().get("fwd").is_some());
+    }
+}

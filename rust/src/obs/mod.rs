@@ -1,0 +1,190 @@
+//! Unified observability layer: a shared metrics [`Registry`], lightweight
+//! tracing [`trace`] spans, and HBFP numeric-health [`health`] probes —
+//! one subsystem behind one sampling knob.
+//!
+//! The repo grew four disconnected counter surfaces
+//! ([`GuardStats`](crate::bfp::GuardStats), the
+//! [`PlanCache`](crate::bfp::PlanCache) hit/miss counters,
+//! [`ServeMetrics`](crate::coordinator::metrics::ServeMetrics), the
+//! [`DatasetCache`](crate::data::DatasetCache) hit/generated pair) and no
+//! timing visibility inside a training step or a serve pump. This module
+//! gives them one export path (`Registry::to_json`) and adds the numeric
+//! telemetry the paper's central claim is debugged with: per-layer
+//! block-exponent spreads, mantissa clamp/saturation rates, and
+//! quantization SNR over training time (see PERF.md § Observability).
+//!
+//! ## The sampling knob
+//!
+//! `HBFP_OBS=off|counters|full` (default `off`), read once at first probe:
+//!
+//! - **off** — every probe site is a single relaxed atomic load and
+//!   nothing else. This is the hard overhead contract on hot paths.
+//! - **counters** — cheap monotonic counters only (quantize/GEMM call
+//!   counts, pool dispatch counts). No clocks, no per-tensor analysis.
+//! - **full** — everything: tracing spans, per-lane pool busy/idle
+//!   timing, per-layer numeric-health probes with quantization SNR.
+//!
+//! **No mode perturbs results.** Probes only *read* tensors that the
+//! datapath already produced (nearest-even weight quantizations), never
+//! consume RNG draws, and never reorder parallel work — loss curves and
+//! serve outputs are bit-identical across all three modes (enforced by
+//! `tests/obs.rs` and the `obs-smoke` CI job).
+
+pub mod health;
+pub mod registry;
+pub mod trace;
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::{Mutex, MutexGuard};
+
+pub use health::{ObsRecorder, TensorHealth};
+pub use registry::Registry;
+pub use trace::{span, SpanGuard};
+
+/// Observability sampling mode (see module docs for what each enables).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ObsMode {
+    Off,
+    Counters,
+    Full,
+}
+
+impl ObsMode {
+    /// The spelling used in `HBFP_OBS`.
+    pub fn name(self) -> &'static str {
+        match self {
+            ObsMode::Off => "off",
+            ObsMode::Counters => "counters",
+            ObsMode::Full => "full",
+        }
+    }
+
+    fn parse(s: &str) -> Option<ObsMode> {
+        match s.trim() {
+            "off" => Some(ObsMode::Off),
+            "counters" => Some(ObsMode::Counters),
+            "full" => Some(ObsMode::Full),
+            _ => None,
+        }
+    }
+}
+
+/// Encoded mode: 0/1/2 = off/counters/full, `MODE_UNINIT` = not yet read
+/// from the environment. A sentinel (instead of a `OnceLock`) keeps the
+/// armed-check on hot paths at exactly one relaxed load.
+const MODE_UNINIT: u8 = 0xff;
+
+static MODE: AtomicU8 = AtomicU8::new(MODE_UNINIT);
+
+#[cold]
+fn init_mode_from_env() -> ObsMode {
+    let mode = match std::env::var("HBFP_OBS") {
+        Ok(s) if !s.trim().is_empty() => match ObsMode::parse(&s) {
+            Some(m) => m,
+            None => {
+                log::warn!("ignoring HBFP_OBS={s:?} (want off|counters|full)");
+                ObsMode::Off
+            }
+        },
+        _ => ObsMode::Off,
+    };
+    // A racing install() may have stored a real mode between our load and
+    // here; never clobber it with the env default.
+    let _ = MODE.compare_exchange(
+        MODE_UNINIT,
+        mode as u8,
+        Ordering::Relaxed,
+        Ordering::Relaxed,
+    );
+    decode(MODE.load(Ordering::Relaxed))
+}
+
+fn decode(v: u8) -> ObsMode {
+    match v {
+        1 => ObsMode::Counters,
+        2 => ObsMode::Full,
+        _ => ObsMode::Off,
+    }
+}
+
+/// The active sampling mode. One relaxed atomic load after first use —
+/// this IS the probe-site fast path, so callers gate all observability
+/// work (clocks, locks, allocation) behind it.
+#[inline]
+pub fn mode() -> ObsMode {
+    match MODE.load(Ordering::Relaxed) {
+        0 => ObsMode::Off,
+        1 => ObsMode::Counters,
+        2 => ObsMode::Full,
+        _ => init_mode_from_env(),
+    }
+}
+
+/// Counters-or-better: the gate for cheap monotonic counter probes.
+#[inline]
+pub fn counting() -> bool {
+    mode() != ObsMode::Off
+}
+
+/// Full mode: the gate for spans, timing, and numeric-health probes.
+#[inline]
+pub fn full() -> bool {
+    mode() == ObsMode::Full
+}
+
+/// Force the mode from code (binaries like `examples/obs_demo.rs` that
+/// want full telemetry without requiring the env var). Does not take the
+/// install lock — tests use [`install`] instead.
+pub fn set_mode(m: ObsMode) {
+    MODE.store(m as u8, Ordering::Relaxed);
+}
+
+/// Serializes tests that override the mode (the knob is process-global).
+static INSTALL_LOCK: Mutex<()> = Mutex::new(());
+
+/// RAII guard from [`install`]: restores the env-derived mode (and holds
+/// the install lock) until dropped.
+pub struct ObsGuard {
+    _lock: MutexGuard<'static, ()>,
+}
+
+impl Drop for ObsGuard {
+    fn drop(&mut self) {
+        MODE.store(MODE_UNINIT, Ordering::Relaxed);
+        init_mode_from_env();
+    }
+}
+
+/// Install a mode for the lifetime of the returned guard (test entry
+/// point). Tests that override the mode serialize on an internal lock so
+/// concurrently-running tests never see each other's settings.
+pub fn install(m: ObsMode) -> ObsGuard {
+    let lock = INSTALL_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    set_mode(m);
+    ObsGuard { _lock: lock }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mode_parsing() {
+        assert_eq!(ObsMode::parse("off"), Some(ObsMode::Off));
+        assert_eq!(ObsMode::parse(" counters "), Some(ObsMode::Counters));
+        assert_eq!(ObsMode::parse("full"), Some(ObsMode::Full));
+        assert_eq!(ObsMode::parse("verbose"), None);
+        assert_eq!(ObsMode::Full.name(), "full");
+    }
+
+    #[test]
+    fn install_guard_swaps_and_restores() {
+        let before = mode();
+        {
+            let _g = install(ObsMode::Full);
+            assert_eq!(mode(), ObsMode::Full);
+            assert!(full() && counting());
+        }
+        assert_eq!(mode(), before, "guard drop restores the env-derived mode");
+    }
+}

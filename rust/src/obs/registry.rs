@@ -1,0 +1,285 @@
+//! Shared metrics registry: named counters, gauges, histograms, and
+//! attached JSON sub-documents, exportable as one nested JSON tree.
+//!
+//! Names are dot-separated paths (`"plan_cache.hits"`,
+//! `"pool.lane0.busy_us"`); [`Registry::to_json`] splits on `.` and emits
+//! nested objects, so `guard.scans` and `guard.fp32_fallbacks` render as
+//! one `"guard"` section. Keys sort lexicographically (the [`Json`]
+//! object representation is a `BTreeMap`), which makes registry exports
+//! byte-stable across runs — the property every determinism soak in this
+//! repo asserts on.
+//!
+//! The pre-existing ad-hoc counter surfaces register themselves through
+//! the `export_metrics` methods on
+//! [`GuardStatsSnapshot`](crate::bfp::GuardStatsSnapshot),
+//! [`PlanCache`](crate::bfp::PlanCache),
+//! [`DatasetCache`](crate::data::DatasetCache), and
+//! [`LatencyHistogram`](crate::coordinator::metrics::LatencyHistogram)
+//! instead of hand-rolling their JSON blocks.
+
+use std::collections::BTreeMap;
+use std::sync::{Mutex, OnceLock};
+
+use crate::coordinator::metrics::LatencyHistogram;
+use crate::util::json::Json;
+
+/// One named metric.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Metric {
+    /// Monotonic count (events, items).
+    Counter(u64),
+    /// Point-in-time value (depths, fractions, means).
+    Gauge(f64),
+    /// Short label (model names, mode strings).
+    Text(String),
+    /// Streaming log2-bucket histogram (see [`LatencyHistogram`]).
+    Hist(LatencyHistogram),
+    /// A pre-built JSON sub-document (arrays, externally-shaped blocks).
+    Attached(Json),
+}
+
+impl Metric {
+    fn to_json(&self) -> Json {
+        match self {
+            Metric::Counter(v) => Json::num(*v as f64),
+            Metric::Gauge(v) => Json::num(*v),
+            Metric::Text(s) => Json::str(s.clone()),
+            Metric::Hist(h) => h.to_json(),
+            Metric::Attached(j) => j.clone(),
+        }
+    }
+}
+
+/// Thread-safe map of named metrics. Cheap to create (subsystems build
+/// one per export) and usable as a long-lived shared sink (the process
+/// [`global`] registry the pool's lane timing records into).
+#[derive(Debug, Default)]
+pub struct Registry {
+    metrics: Mutex<BTreeMap<String, Metric>>,
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    /// Set a counter to an absolute value (snapshot-style export).
+    pub fn counter(&self, name: &str, value: u64) {
+        self.insert(name, Metric::Counter(value));
+    }
+
+    /// Increment a counter by `delta` (creating it at 0 first).
+    pub fn add(&self, name: &str, delta: u64) {
+        let mut m = self.metrics.lock().unwrap_or_else(|e| e.into_inner());
+        match m.get_mut(name) {
+            Some(Metric::Counter(v)) => *v += delta,
+            _ => {
+                m.insert(name.to_string(), Metric::Counter(delta));
+            }
+        }
+    }
+
+    pub fn gauge(&self, name: &str, value: f64) {
+        self.insert(name, Metric::Gauge(value));
+    }
+
+    pub fn text(&self, name: &str, value: &str) {
+        self.insert(name, Metric::Text(value.to_string()));
+    }
+
+    /// Record one sample into the named histogram (created empty first).
+    pub fn observe(&self, name: &str, value: u64) {
+        let mut m = self.metrics.lock().unwrap_or_else(|e| e.into_inner());
+        match m.get_mut(name) {
+            Some(Metric::Hist(h)) => h.record(value),
+            _ => {
+                let mut h = LatencyHistogram::new();
+                h.record(value);
+                m.insert(name.to_string(), Metric::Hist(h));
+            }
+        }
+    }
+
+    /// Attach a pre-built JSON sub-document under `name`.
+    pub fn attach(&self, name: &str, doc: Json) {
+        self.insert(name, Metric::Attached(doc));
+    }
+
+    /// Register a whole histogram snapshot under `name` (exported through
+    /// [`LatencyHistogram::to_json`]).
+    pub fn histogram(&self, name: &str, h: LatencyHistogram) {
+        self.insert(name, Metric::Hist(h));
+    }
+
+    fn insert(&self, name: &str, metric: Metric) {
+        self.metrics
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .insert(name.to_string(), metric);
+    }
+
+    /// Current value of a counter (None when absent or not a counter).
+    pub fn get_counter(&self, name: &str) -> Option<u64> {
+        match self.metrics.lock().unwrap_or_else(|e| e.into_inner()).get(name) {
+            Some(Metric::Counter(v)) => Some(*v),
+            _ => None,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.metrics.lock().unwrap_or_else(|e| e.into_inner()).len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Drop every metric (tests; demo resets between phases).
+    pub fn clear(&self) {
+        self.metrics.lock().unwrap_or_else(|e| e.into_inner()).clear();
+    }
+
+    /// Export the registry as nested JSON: names split on `.`, each
+    /// segment a nested object key. A name that collides with a
+    /// parent path (`"a"` vs `"a.b"`) keeps the deeper entries and the
+    /// scalar is emitted under the reserved `"_value"` key.
+    pub fn to_json(&self) -> Json {
+        let m = self.metrics.lock().unwrap_or_else(|e| e.into_inner());
+        let mut root = BTreeMap::new();
+        for (name, metric) in m.iter() {
+            insert_path(&mut root, name.split('.'), metric.to_json());
+        }
+        Json::Obj(root)
+    }
+}
+
+fn insert_path<'a>(
+    node: &mut BTreeMap<String, Json>,
+    mut path: impl Iterator<Item = &'a str>,
+    value: Json,
+) {
+    let Some(seg) = path.next() else { return };
+    let mut rest = path.peekable();
+    if rest.peek().is_none() {
+        match node.get_mut(seg) {
+            // a subtree already lives here: keep it, nest the scalar
+            Some(Json::Obj(sub)) => {
+                sub.insert("_value".to_string(), value);
+            }
+            _ => {
+                node.insert(seg.to_string(), value);
+            }
+        }
+        return;
+    }
+    let entry = node
+        .entry(seg.to_string())
+        .or_insert_with(|| Json::Obj(BTreeMap::new()));
+    if !matches!(entry, Json::Obj(_)) {
+        // a scalar already lives here: demote it under "_value"
+        let old = std::mem::replace(entry, Json::Obj(BTreeMap::new()));
+        if let Json::Obj(sub) = entry {
+            sub.insert("_value".to_string(), old);
+        }
+    }
+    if let Json::Obj(sub) = entry {
+        insert_path(sub, rest, value);
+    }
+}
+
+/// The process-wide registry: the sink for probes that have no natural
+/// owner object (pool lane timing, the `bfp` datapath call counters).
+/// Snapshot it with [`Registry::to_json`]; tests `clear()` it first.
+pub fn global() -> &'static Registry {
+    static GLOBAL: OnceLock<Registry> = OnceLock::new();
+    GLOBAL.get_or_init(Registry::new)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_gauges_and_hists_round_trip() {
+        let r = Registry::new();
+        r.counter("a.hits", 3);
+        r.add("a.hits", 2);
+        r.add("a.misses", 1);
+        r.gauge("a.frac", 0.5);
+        r.text("mode", "full");
+        r.observe("lat", 100);
+        r.observe("lat", 100);
+        assert_eq!(r.get_counter("a.hits"), Some(5));
+        assert_eq!(r.get_counter("a.frac"), None, "gauge is not a counter");
+        let j = r.to_json();
+        let a = j.get("a").unwrap();
+        assert_eq!(a.get("hits").unwrap().as_i64(), Some(5));
+        assert_eq!(a.get("misses").unwrap().as_i64(), Some(1));
+        assert_eq!(a.get("frac").unwrap().as_f64(), Some(0.5));
+        assert_eq!(j.get("mode").unwrap().as_str(), Some("full"));
+        assert_eq!(j.get("lat").unwrap().get("count").unwrap().as_i64(), Some(2));
+    }
+
+    #[test]
+    fn nested_names_build_a_tree() {
+        let r = Registry::new();
+        r.counter("pool.lane0.busy_us", 10);
+        r.counter("pool.lane0.idle_us", 20);
+        r.counter("pool.lane1.busy_us", 30);
+        r.counter("pool.dispatches", 2);
+        let j = r.to_json();
+        let pool = j.get("pool").unwrap();
+        assert_eq!(pool.get("dispatches").unwrap().as_i64(), Some(2));
+        assert_eq!(
+            pool.get("lane0").unwrap().get("busy_us").unwrap().as_i64(),
+            Some(10)
+        );
+        assert_eq!(
+            pool.get("lane1").unwrap().get("busy_us").unwrap().as_i64(),
+            Some(30)
+        );
+    }
+
+    #[test]
+    fn path_collisions_keep_both_values() {
+        let r = Registry::new();
+        r.counter("a", 1);
+        r.counter("a.b", 2);
+        let j = r.to_json();
+        let a = j.get("a").unwrap();
+        assert_eq!(a.get("_value").unwrap().as_i64(), Some(1));
+        assert_eq!(a.get("b").unwrap().as_i64(), Some(2));
+        // and in the opposite insertion order
+        let r2 = Registry::new();
+        r2.counter("x.y", 2);
+        r2.counter("x", 1);
+        let j2 = r2.to_json();
+        assert_eq!(j2.get("x").unwrap().get("_value").unwrap().as_i64(), Some(1));
+        assert_eq!(j2.get("x").unwrap().get("y").unwrap().as_i64(), Some(2));
+    }
+
+    #[test]
+    fn export_is_deterministic() {
+        let mk = || {
+            let r = Registry::new();
+            r.counter("z.late", 1);
+            r.counter("a.early", 2);
+            r.gauge("m.mid", 0.25);
+            r.to_json().to_string()
+        };
+        assert_eq!(mk(), mk(), "BTreeMap ordering makes exports byte-stable");
+    }
+
+    #[test]
+    fn attach_and_clear() {
+        let r = Registry::new();
+        r.attach("models", Json::Arr(vec![Json::str("a")]));
+        assert_eq!(r.len(), 1);
+        assert_eq!(
+            r.to_json().get("models").unwrap().as_arr().unwrap()[0].as_str(),
+            Some("a")
+        );
+        r.clear();
+        assert!(r.is_empty());
+    }
+}

@@ -1,0 +1,356 @@
+//! Lightweight tracing spans over an injectable monotonic clock.
+//!
+//! [`span`] returns a RAII guard; on drop it records a complete event
+//! (name, start, duration, nesting depth) into a bounded per-thread ring
+//! buffer. When the [`crate::obs`] mode is below `full`, `span` is one
+//! relaxed atomic load and returns an inert guard — no clock read, no
+//! lock, no allocation.
+//!
+//! Span names are static dot-paths following the subsystem.object.stage
+//! convention documented in PERF.md § Observability: `nn.step`,
+//! `nn.linear.fwd_gemm`, `serve.pump.gemm`, …
+//!
+//! The clock is monotonic microseconds since process start by default; a
+//! test can swap in a manual clock ([`install_manual_clock`] +
+//! [`advance_us`]) so recorded timestamps are exact and assertable.
+//!
+//! Exports: [`events_json`] (flat JSON for tests and the registry) and
+//! [`chrome_trace_json`] / [`write_chrome_trace`] (the chrome://tracing
+//! "trace event" format — open chrome://tracing or <https://ui.perfetto.dev>
+//! and load the emitted `trace.json`).
+
+use std::cell::{Cell, RefCell};
+use std::collections::VecDeque;
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Instant;
+
+use crate::util::json::Json;
+
+/// Per-thread ring capacity: old events are dropped (and counted) once a
+/// thread has this many buffered.
+pub const RING_CAP: usize = 4096;
+
+/// One completed span.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SpanEvent {
+    pub name: &'static str,
+    /// Start timestamp, microseconds on the active clock.
+    pub start_us: u64,
+    pub dur_us: u64,
+    /// Nesting depth at entry (0 = top-level span on its thread).
+    pub depth: u32,
+    /// Stable per-thread id (ring registration order, not OS tid).
+    pub tid: u64,
+}
+
+#[derive(Debug)]
+struct Ring {
+    tid: u64,
+    events: VecDeque<SpanEvent>,
+    dropped: u64,
+}
+
+impl Ring {
+    fn push(&mut self, ev: SpanEvent) {
+        if self.events.len() == RING_CAP {
+            self.events.pop_front();
+            self.dropped += 1;
+        }
+        self.events.push_back(ev);
+    }
+}
+
+fn rings() -> &'static Mutex<Vec<Arc<Mutex<Ring>>>> {
+    static RINGS: OnceLock<Mutex<Vec<Arc<Mutex<Ring>>>>> = OnceLock::new();
+    RINGS.get_or_init(|| Mutex::new(Vec::new()))
+}
+
+thread_local! {
+    static DEPTH: Cell<u32> = const { Cell::new(0) };
+    static LOCAL_RING: RefCell<Option<Arc<Mutex<Ring>>>> = const { RefCell::new(None) };
+}
+
+fn local_ring() -> Arc<Mutex<Ring>> {
+    LOCAL_RING.with(|slot| {
+        let mut slot = slot.borrow_mut();
+        if let Some(r) = slot.as_ref() {
+            return Arc::clone(r);
+        }
+        let mut all = rings().lock().unwrap_or_else(|e| e.into_inner());
+        let ring = Arc::new(Mutex::new(Ring {
+            tid: all.len() as u64,
+            events: VecDeque::new(),
+            dropped: 0,
+        }));
+        all.push(Arc::clone(&ring));
+        *slot = Some(Arc::clone(&ring));
+        ring
+    })
+}
+
+// ---------------------------------------------------------------- clock
+
+static MANUAL_CLOCK: AtomicBool = AtomicBool::new(false);
+static MANUAL_US: AtomicU64 = AtomicU64::new(0);
+
+fn epoch() -> Instant {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    *EPOCH.get_or_init(Instant::now)
+}
+
+/// Microseconds on the active trace clock (monotonic since process start,
+/// or the manual clock's current reading while one is installed).
+pub fn now_us() -> u64 {
+    if MANUAL_CLOCK.load(Ordering::Relaxed) {
+        MANUAL_US.load(Ordering::Relaxed)
+    } else {
+        epoch().elapsed().as_micros() as u64
+    }
+}
+
+/// Advance the manual clock (no-op unless one is installed).
+pub fn advance_us(us: u64) {
+    MANUAL_US.fetch_add(us, Ordering::Relaxed);
+}
+
+/// RAII guard from [`install_manual_clock`]; dropping restores the real
+/// monotonic clock.
+pub struct ManualClockGuard(());
+
+impl Drop for ManualClockGuard {
+    fn drop(&mut self) {
+        MANUAL_CLOCK.store(false, Ordering::Relaxed);
+    }
+}
+
+/// Swap the trace clock for a manual one starting at 0 µs. Tests drive it
+/// with [`advance_us`] so span timestamps are exact. Callers serialize via
+/// [`crate::obs::install`], which every mode-overriding test already holds.
+pub fn install_manual_clock() -> ManualClockGuard {
+    MANUAL_US.store(0, Ordering::Relaxed);
+    MANUAL_CLOCK.store(true, Ordering::Relaxed);
+    ManualClockGuard(())
+}
+
+// ---------------------------------------------------------------- spans
+
+/// RAII span guard: records a [`SpanEvent`] when dropped. Inert (field
+/// `armed == false`, nothing on drop) unless full mode was active at
+/// creation.
+#[must_use = "a span measures the scope it is bound to; dropping it immediately records a zero-length span"]
+pub struct SpanGuard {
+    name: &'static str,
+    start_us: u64,
+    depth: u32,
+    armed: bool,
+}
+
+/// Open a span. One relaxed atomic load when observability is below
+/// `full`; otherwise reads the clock and bumps this thread's depth.
+#[inline]
+pub fn span(name: &'static str) -> SpanGuard {
+    if !crate::obs::full() {
+        return SpanGuard { name, start_us: 0, depth: 0, armed: false };
+    }
+    let depth = DEPTH.with(|d| {
+        let v = d.get();
+        d.set(v + 1);
+        v
+    });
+    SpanGuard { name, start_us: now_us(), depth, armed: true }
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        if !self.armed {
+            return;
+        }
+        let end = now_us();
+        DEPTH.with(|d| d.set(d.get().saturating_sub(1)));
+        let ring = local_ring();
+        let mut ring = ring.lock().unwrap_or_else(|e| e.into_inner());
+        let tid = ring.tid;
+        ring.push(SpanEvent {
+            name: self.name,
+            start_us: self.start_us,
+            dur_us: end.saturating_sub(self.start_us),
+            depth: self.depth,
+            tid,
+        });
+    }
+}
+
+/// Open a span with a static name: `let _s = span!("nn.step");`.
+#[macro_export]
+macro_rules! span {
+    ($name:expr) => {
+        $crate::obs::trace::span($name)
+    };
+}
+
+// -------------------------------------------------------------- exports
+
+/// Snapshot all buffered events, ordered by registration thread then
+/// record order (stable and deterministic for single-threaded recording).
+pub fn snapshot() -> (Vec<SpanEvent>, u64) {
+    let all = rings().lock().unwrap_or_else(|e| e.into_inner());
+    let mut events = Vec::new();
+    let mut dropped = 0;
+    for ring in all.iter() {
+        let ring = ring.lock().unwrap_or_else(|e| e.into_inner());
+        events.extend(ring.events.iter().copied());
+        dropped += ring.dropped;
+    }
+    (events, dropped)
+}
+
+/// Flat JSON export: `{"dropped": n, "events": [{name, ts_us, dur_us,
+/// depth, tid}, ...]}`.
+pub fn events_json() -> Json {
+    let (events, dropped) = snapshot();
+    let rows = events
+        .iter()
+        .map(|e| {
+            Json::obj(vec![
+                ("name", Json::str(e.name)),
+                ("ts_us", Json::num(e.start_us as f64)),
+                ("dur_us", Json::num(e.dur_us as f64)),
+                ("depth", Json::num(e.depth as f64)),
+                ("tid", Json::num(e.tid as f64)),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("dropped", Json::num(dropped as f64)),
+        ("events", Json::Arr(rows)),
+    ])
+}
+
+/// chrome://tracing "trace event format" export: complete (`"ph":"X"`)
+/// events under `{"traceEvents": [...]}`.
+pub fn chrome_trace_json() -> Json {
+    let (events, _) = snapshot();
+    let rows = events
+        .iter()
+        .map(|e| {
+            Json::obj(vec![
+                ("name", Json::str(e.name)),
+                ("ph", Json::str("X")),
+                ("ts", Json::num(e.start_us as f64)),
+                ("dur", Json::num(e.dur_us as f64)),
+                ("pid", Json::num(1.0)),
+                ("tid", Json::num(e.tid as f64)),
+            ])
+        })
+        .collect();
+    Json::obj(vec![("traceEvents", Json::Arr(rows))])
+}
+
+/// Write [`chrome_trace_json`] to `path` (open it in chrome://tracing or
+/// <https://ui.perfetto.dev>).
+pub fn write_chrome_trace(path: &Path) -> anyhow::Result<()> {
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    std::fs::write(path, format!("{}\n", chrome_trace_json()))?;
+    Ok(())
+}
+
+/// Discard all buffered events and drop counts (rings and their tid
+/// assignments persist, so tids stay stable across clears).
+pub fn clear() {
+    let all = rings().lock().unwrap_or_else(|e| e.into_inner());
+    for ring in all.iter() {
+        let mut ring = ring.lock().unwrap_or_else(|e| e.into_inner());
+        ring.events.clear();
+        ring.dropped = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::{install, ObsMode};
+
+    #[test]
+    fn spans_record_nesting_and_manual_time() {
+        let _g = install(ObsMode::Full);
+        let _c = install_manual_clock();
+        clear();
+        {
+            let _outer = span("test.outer");
+            advance_us(10);
+            {
+                let _inner = span("test.inner");
+                advance_us(5);
+            }
+            advance_us(1);
+        }
+        let (events, dropped) = snapshot();
+        assert_eq!(dropped, 0);
+        let inner = events.iter().find(|e| e.name == "test.inner").unwrap();
+        let outer = events.iter().find(|e| e.name == "test.outer").unwrap();
+        assert_eq!(inner.start_us, 10);
+        assert_eq!(inner.dur_us, 5);
+        assert_eq!(inner.depth, 1);
+        assert_eq!(outer.start_us, 0);
+        assert_eq!(outer.dur_us, 16);
+        assert_eq!(outer.depth, 0);
+        // inner closes first, so it is recorded first
+        let ipos = events.iter().position(|e| e.name == "test.inner").unwrap();
+        let opos = events.iter().position(|e| e.name == "test.outer").unwrap();
+        assert!(ipos < opos);
+        clear();
+    }
+
+    #[test]
+    fn off_mode_spans_are_inert() {
+        let _g = install(ObsMode::Counters);
+        clear();
+        {
+            let _s = span("test.should_not_record");
+        }
+        let (events, _) = snapshot();
+        assert!(events.iter().all(|e| e.name != "test.should_not_record"));
+    }
+
+    #[test]
+    fn chrome_export_shape() {
+        let _g = install(ObsMode::Full);
+        let _c = install_manual_clock();
+        clear();
+        {
+            let _s = span("test.chrome");
+            advance_us(3);
+        }
+        let j = chrome_trace_json();
+        let evs = j.get("traceEvents").unwrap().as_arr().unwrap();
+        let ev = evs.iter().find(|e| {
+            e.get("name").and_then(|n| n.as_str()) == Some("test.chrome")
+        });
+        let ev = ev.expect("span present in chrome export");
+        assert_eq!(ev.get("ph").unwrap().as_str(), Some("X"));
+        assert_eq!(ev.get("dur").unwrap().as_i64(), Some(3));
+        assert!(ev.get("pid").is_some() && ev.get("tid").is_some());
+        clear();
+    }
+
+    #[test]
+    fn ring_bounds_and_counts_drops() {
+        let _g = install(ObsMode::Full);
+        let _c = install_manual_clock();
+        clear();
+        for _ in 0..(RING_CAP + 7) {
+            let _s = span("test.flood");
+        }
+        let (events, dropped) = snapshot();
+        let flood = events.iter().filter(|e| e.name == "test.flood").count();
+        assert!(flood <= RING_CAP);
+        assert!(dropped >= 7);
+        clear();
+    }
+}

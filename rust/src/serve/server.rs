@@ -801,6 +801,7 @@ impl InferenceServer {
     /// micro-batch, execute it, and settle every member's outcome (and
     /// its tenant's breaker).
     pub fn pump(&mut self) -> Result<PumpReport> {
+        let _span = crate::obs::trace::span("serve.pump");
         if matches!(self.lifecycle, Lifecycle::Stopped) {
             return Ok(PumpReport::default());
         }
@@ -948,6 +949,7 @@ impl InferenceServer {
         // each contained panic redispatched bit-identically.
         let mut retries = 0usize;
         let mut whole_failed = None;
+        let gemm_span = crate::obs::trace::span("serve.pump.gemm");
         loop {
             let attempt = catch_pool_panic(|| {
                 plan.quantize_execute_into(a, &mut Rounding::NearestEven, weights, &mut *out)
@@ -1008,6 +1010,7 @@ impl InferenceServer {
                 }
             }
         }
+        drop(gemm_span);
 
         // Deterministic service-time model (manual-clock soaks) — the
         // batch costs ticks proportional to its rows.
@@ -1017,6 +1020,7 @@ impl InferenceServer {
 
         // Deadline enforcement point 2: a result that arrives after its
         // deadline is reported expired, not served.
+        let _settle_span = crate::obs::trace::span("serve.pump.settle");
         let done = self.clock.now();
         for (i, r) in rows.iter().enumerate() {
             if let Some(msg) = row_failed[i].take() {
@@ -1118,15 +1122,13 @@ impl InferenceServer {
             ),
             ("breakers", Json::Arr(breakers)),
             ("guard_stats", guard_stats_json(&self.guard.snapshot())),
-            (
-                "plan_cache",
-                Json::obj(vec![
-                    ("len", Json::num(self.plans.len() as f64)),
-                    ("hits", Json::num(self.plans.hits() as f64)),
-                    ("misses", Json::num(self.plans.misses() as f64)),
-                    ("evictions", Json::num(self.plans.evictions() as f64)),
-                ]),
-            ),
+            ("plan_cache", {
+                // routed through the shared registry; key set (and hence
+                // byte layout — both sides are BTreeMap-sorted) unchanged
+                let reg = crate::obs::Registry::new();
+                self.plans.export_metrics(&reg, "");
+                reg.to_json()
+            }),
         ])
     }
 }

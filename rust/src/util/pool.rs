@@ -161,8 +161,12 @@ pub struct Pool {
     respawns: AtomicUsize,
 }
 
-fn worker_loop(shared: Arc<Shared>) {
+fn worker_loop(shared: Arc<Shared>, lane: usize) {
     loop {
+        // Per-lane busy/idle timing, full obs mode only: the gate is one
+        // relaxed load, and the registry is touched once per chunk (never
+        // per job), so the hot kernel loops are unaffected.
+        let idle_t0 = if crate::obs::full() { Some(std::time::Instant::now()) } else { None };
         let task = {
             let mut q = shared.queue.lock().unwrap();
             loop {
@@ -175,8 +179,21 @@ fn worker_loop(shared: Arc<Shared>) {
                 q = shared.work_ready.wait(q).unwrap();
             }
         };
+        if let Some(t0) = idle_t0 {
+            crate::obs::registry::global()
+                .add(&format!("pool.lane{lane}.idle_us"), t0.elapsed().as_micros() as u64);
+        }
         match task {
-            Some(t) => t(),
+            Some(t) => {
+                let busy_t0 =
+                    if crate::obs::full() { Some(std::time::Instant::now()) } else { None };
+                t();
+                if let Some(t0) = busy_t0 {
+                    let reg = crate::obs::registry::global();
+                    reg.add(&format!("pool.lane{lane}.busy_us"), t0.elapsed().as_micros() as u64);
+                    reg.add(&format!("pool.lane{lane}.tasks"), 1);
+                }
+            }
             None => return,
         }
     }
@@ -216,7 +233,7 @@ impl Pool {
                 let s = Arc::clone(&shared);
                 std::thread::Builder::new()
                     .name(format!("hbfp-pool-{i}"))
-                    .spawn(move || worker_loop(s))
+                    .spawn(move || worker_loop(s, i))
                     .expect("spawning pool worker")
             })
             .collect();
@@ -255,7 +272,7 @@ impl Pool {
                 let s = Arc::clone(&self.shared);
                 if let Ok(h) = std::thread::Builder::new()
                     .name(format!("hbfp-pool-{id}"))
-                    .spawn(move || worker_loop(s))
+                    .spawn(move || worker_loop(s, id))
                 {
                     handles.push(h);
                     self.respawns.fetch_add(1, Ordering::Relaxed);
@@ -309,11 +326,19 @@ impl Pool {
         }
         let threads = max_threads.max(1).min(n_jobs).min(self.workers + 1);
         if threads == 1 {
+            if crate::obs::counting() {
+                crate::obs::registry::global().add("pool.inline_dispatches", 1);
+            }
             // Inline fast path: the one kernel body, no queue traffic.
             for (i, job) in jobs {
                 f(i, job);
             }
             return Ok(());
+        }
+        if crate::obs::counting() {
+            let reg = crate::obs::registry::global();
+            reg.add("pool.dispatches", 1);
+            reg.add("pool.jobs", n_jobs as u64);
         }
 
         // One chunk per lane (same contiguous split as `for_each_job`):

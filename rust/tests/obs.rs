@@ -1,0 +1,195 @@
+//! Observability-layer integration (the determinism satellite):
+//!
+//! (a) `HBFP_OBS=off` leaves the trainer's metrics JSON byte-identical
+//!     to a pre-obs build — no `"obs"` key, no extra fields;
+//! (b) training curves are bitwise identical with observability fully
+//!     on vs fully off (probes never touch RNG draws or GEMM bits);
+//! (c) per-layer numeric-health timelines and span sequences are
+//!     invariant across `HBFP_THREADS=1` vs `4` once wall-clock fields
+//!     are stripped (health depends only on tensor values; spans are
+//!     recorded on the control thread);
+//! (d) full-mode exports carry the schema the CI smoke greps for, and
+//!     the datapath counters are conserved (blocks >= tensors >= 0,
+//!     GEMMs grow monotonically while counting).
+//!
+//! Every test installs an obs mode, which serializes them on the
+//! install lock and shields them from an ambient `HBFP_OBS`.
+
+use hbfp::bfp::context::{OBS_GEMMS_EXECUTED, OBS_TENSORS_QUANTIZED};
+use hbfp::bfp::quant::OBS_BLOCKS_QUANTIZED;
+use hbfp::bfp::BfpContext;
+use hbfp::coordinator::{LrSchedule, RunConfig};
+use hbfp::nn::Trainer;
+use hbfp::obs::{self, trace, ObsMode};
+use hbfp::util::fault::{self, FaultInjector};
+use hbfp::util::json::Json;
+
+use std::sync::atomic::Ordering;
+
+fn cfg(steps: usize) -> RunConfig {
+    RunConfig::new("mlp-tinyimg-hbfp8_t8", steps)
+        .with_seed(5)
+        .with_lr(LrSchedule::Constant { lr: 0.02 })
+}
+
+fn run_with_threads(threads: usize, steps: usize) -> hbfp::nn::NnRunReport {
+    let trainer = Trainer::with_context(BfpContext::from_env().with_threads(threads));
+    trainer.run(&cfg(steps)).unwrap()
+}
+
+/// Strip the wall-clock stage-timing sections from an `"obs"` export,
+/// leaving only the value-dependent (and therefore run-invariant)
+/// numeric-health timelines.
+fn strip_timings(obs: &Json) -> Json {
+    match obs {
+        Json::Obj(m) => {
+            let mut m = m.clone();
+            m.remove("stage_us");
+            m.remove("stage_totals_us");
+            Json::Obj(m)
+        }
+        other => other.clone(),
+    }
+}
+
+// ---------------------------------------------------------------- (a) --
+
+#[test]
+fn off_mode_omits_the_obs_section_entirely() {
+    let _f = fault::install(FaultInjector::none());
+    {
+        let _o = obs::install(ObsMode::Off);
+        let r = run_with_threads(1, 4);
+        assert!(r.obs.is_none(), "off mode must not collect");
+        let j = r.summary_json();
+        assert!(j.get("obs").is_none(), "off-mode summary JSON must carry no obs key");
+    }
+    // counters mode collects counters but still no per-layer timeline
+    {
+        let _o = obs::install(ObsMode::Counters);
+        let r = run_with_threads(1, 4);
+        assert!(r.obs.is_none(), "counters mode records totals, not timelines");
+    }
+}
+
+// ---------------------------------------------------------------- (b) --
+
+#[test]
+fn curves_are_bit_identical_with_obs_full_vs_off() {
+    let _f = fault::install(FaultInjector::none());
+    let steps = 30;
+    let off = {
+        let _o = obs::install(ObsMode::Off);
+        run_with_threads(1, steps)
+    };
+    let full = {
+        let _o = obs::install(ObsMode::Full);
+        run_with_threads(1, steps)
+    };
+    let c_off: Vec<u32> = off.history.steps.iter().map(|s| s.loss.to_bits()).collect();
+    let c_full: Vec<u32> = full.history.steps.iter().map(|s| s.loss.to_bits()).collect();
+    assert_eq!(c_off, c_full, "probes must not perturb a single bit of the curve");
+    assert!(off.obs.is_none() && full.obs.is_some());
+}
+
+// ---------------------------------------------------------------- (c) --
+
+#[test]
+fn health_timelines_and_spans_are_thread_count_invariant() {
+    let _f = fault::install(FaultInjector::none());
+    let _o = obs::install(ObsMode::Full);
+    let steps = 20;
+
+    trace::clear();
+    let r1 = run_with_threads(1, steps);
+    let spans1: Vec<(&str, u32)> =
+        trace::snapshot().0.iter().map(|e| (e.name, e.depth)).collect();
+
+    trace::clear();
+    let r4 = run_with_threads(4, steps);
+    let spans4: Vec<(&str, u32)> =
+        trace::snapshot().0.iter().map(|e| (e.name, e.depth)).collect();
+
+    let h1 = strip_timings(r1.obs.as_ref().unwrap()).to_string();
+    let h4 = strip_timings(r4.obs.as_ref().unwrap()).to_string();
+    assert_eq!(h1, h4, "health timelines depend on tensor values, not thread count");
+
+    assert!(!spans1.is_empty(), "full mode records spans");
+    assert_eq!(spans1, spans4, "span (name, depth) sequence is thread-count invariant");
+
+    // the loss curves also stay bitwise identical (the repo-wide contract)
+    let c1: Vec<u32> = r1.history.steps.iter().map(|s| s.loss.to_bits()).collect();
+    let c4: Vec<u32> = r4.history.steps.iter().map(|s| s.loss.to_bits()).collect();
+    assert_eq!(c1, c4);
+}
+
+// ---------------------------------------------------------------- (d) --
+
+#[test]
+fn full_mode_export_carries_the_smoke_schema() {
+    let _f = fault::install(FaultInjector::none());
+    let _o = obs::install(ObsMode::Full);
+    let r = run_with_threads(1, 8);
+    let obs_json = r.obs.as_ref().expect("full mode collects");
+
+    let health = obs_json.get("health").expect("per-layer health section");
+    let layers = match health {
+        Json::Obj(m) => m,
+        other => panic!("health must be an object, got {other:?}"),
+    };
+    assert!(!layers.is_empty(), "at least one named layer probed");
+    for (layer, rows) in layers {
+        let rows = rows.as_arr().unwrap_or_else(|| panic!("{layer}: timeline is an array"));
+        assert!(!rows.is_empty(), "{layer}: timeline non-empty");
+        for row in rows {
+            for key in
+                ["step", "exp_min", "exp_max", "exp_span", "clamp_frac", "sat_frac", "snr_db"]
+            {
+                assert!(row.get(key).is_some(), "{layer}: row missing {key}");
+            }
+            let snr = row.get("snr_db").unwrap().as_f64().unwrap();
+            assert!(snr.is_finite(), "{layer}: SNR must be finite, got {snr}");
+            let clamp = row.get("clamp_frac").unwrap().as_f64().unwrap();
+            assert!((0.0..=1.0).contains(&clamp), "{layer}: clamp_frac {clamp}");
+        }
+    }
+
+    let totals = obs_json.get("stage_totals_us").expect("stage totals");
+    for stage in ["quantize", "gemm", "fwd", "bwd", "opt"] {
+        assert!(totals.get(stage).is_some(), "stage_totals_us missing {stage}");
+    }
+    let stage_rows = obs_json.get("stage_us").unwrap().as_arr().unwrap();
+    assert!(!stage_rows.is_empty(), "per-step stage rows recorded");
+
+    // summary JSON surfaces the same section under "obs"
+    let j = r.summary_json();
+    assert!(j.get("obs").and_then(|o| o.get("health")).is_some());
+}
+
+#[test]
+fn datapath_counters_are_conserved_while_counting() {
+    let _f = fault::install(FaultInjector::none());
+    let _o = obs::install(ObsMode::Counters);
+    let blocks0 = OBS_BLOCKS_QUANTIZED.load(Ordering::Relaxed);
+    let tensors0 = OBS_TENSORS_QUANTIZED.load(Ordering::Relaxed);
+    let gemms0 = OBS_GEMMS_EXECUTED.load(Ordering::Relaxed);
+
+    let r = run_with_threads(1, 6);
+    assert!(!r.history.diverged());
+
+    let blocks = OBS_BLOCKS_QUANTIZED.load(Ordering::Relaxed) - blocks0;
+    let tensors = OBS_TENSORS_QUANTIZED.load(Ordering::Relaxed) - tensors0;
+    let gemms = OBS_GEMMS_EXECUTED.load(Ordering::Relaxed) - gemms0;
+    assert!(gemms > 0, "an HBFP run executes GEMMs");
+    assert!(tensors > 0, "weights quantize through BfpContext::quantize");
+    assert!(blocks >= tensors, "every tensor quantizes at least one block");
+
+    // the registry export mirrors the same three counters
+    let reg = hbfp::obs::Registry::new();
+    hbfp::bfp::export_datapath_counters(&reg);
+    let j = reg.to_json();
+    let bfp = j.get("bfp").expect("bfp section");
+    for key in ["blocks_quantized", "tensors_quantized", "gemms_executed"] {
+        assert!(bfp.get(key).is_some(), "registry missing bfp.{key}");
+    }
+}
